@@ -1,0 +1,58 @@
+//! Quickstart (mode 1/2): single-tenant acceleration through the Cynq
+//! library — load a shell, load `vadd` by logical name, program its
+//! registers with the generic driver, run real compute via PJRT.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use fos::accel::Catalog;
+use fos::driver::Cynq;
+use fos::shell::ShellBoard;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let catalog = Catalog::load_default()?;
+    println!("catalog: {:?}", catalog.names());
+
+    // Bring up the Ultra96 shell (loads the full static bitstream).
+    let mut fpga = Cynq::open(ShellBoard::Ultra96, catalog)?;
+    println!(
+        "shell {} up: {} PR regions, {} free",
+        fpga.shell.name,
+        fpga.shell.region_count(),
+        fpga.free_regions()
+    );
+
+    // Contiguous device-visible buffers (the data manager).
+    let n = 4096;
+    let a = fpga.alloc(4 * n)?;
+    let b = fpga.alloc(4 * n)?;
+    let c = fpga.alloc(4 * n)?;
+    let xs: Vec<f32> = (0..n).map(|i| i as f32).collect();
+    let ys: Vec<f32> = (0..n).map(|i| 2.0 * i as f32).collect();
+    fpga.write_f32(a, &xs)?;
+    fpga.write_f32(b, &ys)?;
+
+    // Load by logical name; FOS picks the best implementation variant
+    // for the free regions and relocates its partial bitstream.
+    let (h, reconfig_latency) = fpga.load_accelerator("vadd", None)?;
+    println!(
+        "loaded vadd as {:?} (partial reconfiguration took {:.2} ms, modelled)",
+        fpga.variant_of(h).unwrap(),
+        reconfig_latency.as_secs_f64() * 1e3
+    );
+
+    // Generic driver: program registers by name, start, wait.
+    fpga.write_reg(h, "a_op", a)?;
+    fpga.write_reg(h, "b_op", b)?;
+    fpga.write_reg(h, "c_out", c)?;
+    let busy = fpga.run(h)?;
+    println!("vadd ran: modelled FPGA latency {:.1} us", busy.as_secs_f64() * 1e6);
+
+    let out = fpga.read_f32(c, n)?;
+    for k in 0..n {
+        assert_eq!(out[k], 3.0 * k as f32);
+    }
+    println!("verified {n} results: c[k] == 3k. quickstart OK");
+    Ok(())
+}

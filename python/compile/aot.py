@@ -1,0 +1,111 @@
+"""AOT lowering driver: every accelerator variant -> HLO text + manifest.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the published ``xla`` 0.1.6 crate) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Run via ``make artifacts`` (no-op when artifacts are newer than the
+python sources). Python never runs on the request path — the Rust daemon
+only ever reads ``artifacts/``.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model, specs
+
+MANIFEST_VERSION = 2
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(variant_name: str) -> str:
+    fn, examples = model.build(variant_name)
+    return to_hlo_text(jax.jit(fn).lower(*examples))
+
+
+def manifest_entry(accel: "specs.AccelSpec") -> dict:
+    return {
+        "name": accel.name,
+        "lang": accel.lang,
+        "suite": accel.suite,
+        "inputs": [{"shape": list(s), "dtype": "f32"} for s in accel.in_shapes],
+        "outputs": [{"shape": list(s), "dtype": "f32"} for s in accel.out_shapes],
+        "bytes_in": accel.bytes_in,
+        "bytes_out": accel.bytes_out,
+        # Listing-2/3 register map: control word at 0x00, then one 64-bit
+        # operand pointer register every 8 bytes starting at 0x10.
+        "registers": [{"name": "control", "offset": 0}]
+        + [
+            {"name": r, "offset": 16 + 8 * i}
+            for i, r in enumerate(accel.registers)
+        ],
+        "variants": [
+            {
+                "name": v.name,
+                "hlo": f"{v.name}.hlo.txt",
+                "regions": v.regions,
+                "cycles_per_item": v.cycles,
+                "clock_hz": specs.CLOCK_HZ,
+                "netlist": {
+                    "luts": v.netlist.luts,
+                    "ffs": v.netlist.ffs,
+                    "brams": v.netlist.brams,
+                    "dsps": v.netlist.dsps,
+                },
+                "kernel_params": dict(v.kernel_params),
+            }
+            for v in accel.variants
+        ],
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact dir")
+    ap.add_argument("--only", default=None, help="lower a single variant")
+    args = ap.parse_args(argv)
+    os.makedirs(args.out, exist_ok=True)
+
+    names = [args.only] if args.only else model.all_variants()
+    checksums = {}
+    for vn in names:
+        text = lower_variant(vn)
+        path = os.path.join(args.out, f"{vn}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        checksums[f"{vn}.hlo.txt"] = hashlib.sha256(
+            text.encode()
+        ).hexdigest()
+        print(f"  lowered {vn:24s} -> {path} ({len(text)} chars)")
+
+    manifest = {
+        "version": MANIFEST_VERSION,
+        "clock_hz": specs.CLOCK_HZ,
+        "accelerators": [manifest_entry(a) for a in specs.ACCELERATORS],
+        "checksums": checksums,
+    }
+    mpath = os.path.join(args.out, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {mpath}: {len(manifest['accelerators'])} accelerators, "
+          f"{len(checksums)} artifacts")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

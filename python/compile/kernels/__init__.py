@@ -1,0 +1,20 @@
+"""L1: Pallas kernels for every FOS accelerator, plus their pure-jnp
+oracles (ref.py). Each module documents its FPGA->TPU adaptation and its
+VMEM / MXU estimate (see DESIGN.md §Hardware-Adaptation and §Perf)."""
+
+from .vadd import vadd
+from .mm import mm
+from .fir import fir
+from .histogram import histogram
+from .dct import dct8x8
+from .sobel import sobel
+from .normal_est import normal_est
+from .mandelbrot import mandelbrot
+from .black_scholes import black_scholes
+from .aes import aes_arx
+from . import ref
+
+__all__ = [
+    "vadd", "mm", "fir", "histogram", "dct8x8", "sobel", "normal_est",
+    "mandelbrot", "black_scholes", "aes_arx", "ref",
+]

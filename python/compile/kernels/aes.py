@@ -1,0 +1,59 @@
+"""aes — ARX stream transform standing in for the paper's AES RTL module.
+
+The real FOS AES is hand-written RTL used in Table 3 as the *sparse*
+(33%-utilisation) compile workload. Its netlist spec (see specs.py) drives
+the PnR simulator; this kernel exists so the module is also *executable*
+through the same PJRT path as every other accelerator. The interchange
+surface stays f32 — the kernel bitcasts to u32 lanes, runs 8 ARX rounds
+(add / rotate / xor, the dataflow class of a round-based cipher), and
+bitcasts back. NOT cryptographically meaningful.
+
+TPU adaptation: byte-wise S-box lookups are gather-hostile; ARX rounds are
+pure VPU integer ops, the standard TPU-friendly cipher structure.
+
+VMEM per grid step: 2 x block u32 (v1 @1024: 8 KiB). MXU: unused.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import cdiv, pallas_call
+from .ref import AES_KEY, AES_ROUNDS
+
+
+def _kernel(x_ref, o_ref):
+    x = jax.lax.bitcast_convert_type(x_ref[...], jnp.uint32)
+
+    def rotl(v, r):
+        return (v << jnp.uint32(r)) | (v >> jnp.uint32(32 - r))
+
+    k = jnp.uint32(AES_KEY[0])
+    for kk in AES_KEY[1:]:
+        k = k ^ jnp.uint32(kk) + jnp.uint32(0)
+
+    def rnd(i, v):
+        v = v + jnp.uint32(AES_KEY[0])
+        v = rotl(v, 7) ^ jnp.uint32(AES_KEY[1])
+        v = v + jnp.uint32(AES_KEY[2])
+        v = rotl(v, 13) ^ k
+        return v
+
+    x = jax.lax.fori_loop(0, AES_ROUNDS, rnd, x)
+    o_ref[...] = jax.lax.bitcast_convert_type(x, jnp.float32)
+
+
+def aes_arx(x, *, block: int = 1024):
+    """ARX-transform the bit patterns of f32[n]; n % block == 0."""
+    n = x.shape[0]
+    if n % block:
+        raise ValueError(f"aes: n={n} not a multiple of block={block}")
+    grid = (cdiv(n, block),)
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    return pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+    )(x)

@@ -1,0 +1,46 @@
+"""black_scholes — European option pricing (Monte-Carlo paper's closed
+form [37]; the paper's dense 81%-utilisation HLS module).
+
+TPU adaptation: the FPGA module instantiates deep exp/log/erf cordic
+pipelines; the TPU equivalent evaluates the closed form on the VPU's
+transcendental units over a VMEM block of option records. Variant = block
+length (number of parallel pricing pipelines).
+
+VMEM per grid step: block x 5 in + block x 2 out (v2 @2048: 56 KiB).
+MXU: unused (transcendental-bound).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import cdiv, pallas_call
+
+
+def _kernel(p_ref, o_ref):
+    p = p_ref[...]
+    s, k, t, r, sig = (p[:, i] for i in range(5))
+    sqrt_t = jnp.sqrt(t)
+    rt2 = jnp.sqrt(jnp.float32(2.0))
+    d1 = (jnp.log(s / k) + (r + 0.5 * sig * sig) * t) / (sig * sqrt_t)
+    d2 = d1 - sig * sqrt_t
+    cdf = lambda x: 0.5 * (1.0 + jax.lax.erf(x / rt2))
+    disc = k * jnp.exp(-r * t)
+    call = s * cdf(d1) - disc * cdf(d2)
+    put = disc * cdf(-d2) - s * cdf(-d1)
+    o_ref[...] = jnp.stack([call, put], axis=1)
+
+
+def black_scholes(params, *, block: int = 1024):
+    """Price (N, 5) option records -> (N, 2) [call, put]; N % block == 0."""
+    n = params.shape[0]
+    if n % block:
+        raise ValueError(f"black_scholes: n={n} not a multiple of {block}")
+    grid = (cdiv(n, block),)
+    return pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block, 5), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block, 2), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 2), jnp.float32),
+    )(params)

@@ -1,0 +1,26 @@
+"""Shared Pallas plumbing for all FOS accelerator kernels.
+
+Every kernel in this package is lowered with ``interpret=True``: the CPU
+PJRT client (xla_extension 0.5.1) cannot execute Mosaic custom-calls, so
+interpret mode is the only path that round-trips through the Rust runtime.
+On a real TPU the same kernels lower to Mosaic; the BlockSpec choices below
+are made for that target (tiles padded to the 8x128 VPU lane layout, MXU
+tiles of 128 where a matmul is involved) and the per-variant VMEM/MXU
+estimates live in each kernel's docstring + DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+from jax.experimental import pallas as pl
+
+INTERPRET = True  # CPU PJRT cannot run Mosaic custom-calls; see module doc.
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def pallas_call(kernel, **kwargs):
+    """pl.pallas_call with the FOS-wide interpret policy applied."""
+    return pl.pallas_call(kernel, interpret=INTERPRET, **kwargs)

@@ -1,0 +1,53 @@
+"""dct — 8x8 blocked 2-D DCT (Spector DCT benchmark).
+
+TPU adaptation: the FPGA variant knobs are the number of row buffers and
+the butterfly unroll factor; on TPU the 8x8 basis contraction D.B.D^T is
+expressed as two small matmuls per block, batched over a (rows x cols)
+panel of blocks held in VMEM. The variant maps to the panel height: v1
+processes one 8-row stripe of blocks per grid step, v2 processes four
+stripes (more VMEM buffers <-> more BRAM row buffers, fewer grid steps).
+
+This is the paper's *super-linear* accelerator (Fig 19): the 2-region
+variant also raises the butterfly unroll, so its cycle model is ~3.55x
+faster at 2x resources (see specs.py).
+
+VMEM per grid step: panel + output panel + 8x8 basis (v2 @32x64: ~16 KiB).
+MXU: 8x8 matmuls — small; batched into (panel/8, 8, 8) einsum to fill lanes.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import cdiv, pallas_call
+from . import ref
+
+
+def _make_kernel(stripe: int, width: int):
+    def kernel(img_ref, d_ref, o_ref):
+        img = img_ref[...]
+        d = d_ref[...]
+        blocks = img.reshape(stripe // 8, 8, width // 8, 8).transpose(0, 2, 1, 3)
+        out = jnp.einsum("ij,bcjk,lk->bcil", d, blocks, d)
+        o_ref[...] = out.transpose(0, 2, 1, 3).reshape(stripe, width)
+
+    return kernel
+
+
+def dct8x8(img, *, stripe: int = 8):
+    """Blocked 2-D DCT of an (H, W) tile; H % stripe == 0, stripe % 8 == 0."""
+    h, w = img.shape
+    if h % stripe or stripe % 8 or w % 8:
+        raise ValueError(f"dct8x8: bad shape {img.shape} for stripe={stripe}")
+    d = ref.dct_matrix(8)
+    grid = (cdiv(h, stripe),)
+    return pallas_call(
+        _make_kernel(stripe, w),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((stripe, w), lambda i: (i, 0)),
+            pl.BlockSpec((8, 8), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((stripe, w), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, w), jnp.float32),
+    )(img, d)

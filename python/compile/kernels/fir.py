@@ -1,0 +1,54 @@
+"""fir — 1-D FIR filter (Spector FIR benchmark).
+
+TPU adaptation: the FPGA implementation is a tap-delay line with one MAC
+per tap; on TPU the delay line becomes a shifted-slice contraction: each
+grid step slices a (block + taps - 1) window of x out of VMEM and runs the
+tap loop as a statically-unrolled VPU MAC chain — the unroll factor
+(parallel MACs in the PR region) maps to the block length. Because the
+windows of adjacent grid steps overlap by (taps - 1) elements (a halo),
+the input is kept whole in VMEM and sliced per step rather than blocked
+by BlockSpec (Pallas block indices cannot express overlapping windows).
+
+VMEM: whole signal + taps + one output block (v2 @ n=4096: ~25 KiB).
+MXU: unused (taps=16 contraction runs on the VPU).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import cdiv, pallas_call
+
+
+def _make_kernel(taps_len: int, block: int):
+    def kernel(x_ref, t_ref, o_ref):
+        i = pl.program_id(0)
+        window = jax.lax.dynamic_slice(
+            x_ref[...], (i * block,), (block + taps_len - 1,)
+        )
+        taps = t_ref[...]
+        acc = jnp.zeros((block,), jnp.float32)
+        for j in range(taps_len):  # static unroll — the FPGA MAC array
+            acc = acc + taps[j] * jax.lax.dynamic_slice(window, (j,), (block,))
+        o_ref[...] = acc
+
+    return kernel
+
+
+def fir(x, taps, *, block: int = 1024):
+    """y[i] = sum_j taps[j] * x[i+j]; x: f32[n + taps - 1] pre-padded."""
+    taps_len = taps.shape[0]
+    n = x.shape[0] - taps_len + 1
+    if n % block:
+        raise ValueError(f"fir: n={n} not a multiple of block={block}")
+    grid = (cdiv(n, block),)
+    return pallas_call(
+        _make_kernel(taps_len, block),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(x.shape, lambda i: (0,)),  # whole signal (halo reads)
+            pl.BlockSpec((taps_len,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+    )(x, taps)

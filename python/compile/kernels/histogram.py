@@ -1,0 +1,49 @@
+"""histogram — 256-bin histogram (Spector HIST benchmark).
+
+TPU adaptation: the FPGA kernel uses a BRAM scatter with read-modify-write
+conflict resolution; scatter is hostile to both the VPU and the MXU, so the
+TPU formulation is the classic one-hot contraction: each grid step builds a
+(block, bins) one-hot matrix from the bin indices and reduces it with a
+(1, block) x (block, bins) matmul — turning the scatter into MXU work.
+Partial histograms accumulate into the output block across grid steps
+(same accumulate-into-output schedule as the matmul K loop).
+
+VMEM per grid step: block + block*bins one-hot (v1 @1024x256: ~1 MiB).
+MXU: (block x bins) contraction per step — the whole kernel is MXU-bound.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import cdiv, pallas_call
+
+
+def _make_kernel(bins: int, block: int):
+    def kernel(x_ref, o_ref):
+        @pl.when(pl.program_id(0) == 0)
+        def _init():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        x = x_ref[...]
+        idx = jnp.clip((x * bins).astype(jnp.int32), 0, bins - 1)
+        onehot = (idx[:, None] == jnp.arange(bins)[None, :]).astype(jnp.float32)
+        o_ref[...] += jnp.ones((1, block), jnp.float32) @ onehot
+
+    return kernel
+
+
+def histogram(x, *, bins: int = 256, block: int = 1024):
+    """f32 bin counts of x values in [0, 1). x: f32[n], n % block == 0."""
+    n = x.shape[0]
+    if n % block:
+        raise ValueError(f"histogram: n={n} not a multiple of block={block}")
+    grid = (cdiv(n, block),)
+    out = pallas_call(
+        _make_kernel(bins, block),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((1, bins), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, bins), jnp.float32),
+    )(x)
+    return out[0]

@@ -1,0 +1,60 @@
+"""mandelbrot — escape-time iteration (the paper's in-house C accelerator).
+
+TPU adaptation: the FPGA module is a deeply-pipelined iteration engine
+(one pixel in flight per stage); the TPU formulation runs the whole VMEM
+panel through a fori_loop of fused VPU multiply-adds with an in-bounds
+mask — the panel width is the vector-lane analogue of the pipeline depth.
+Variant = panel stripe height (replicated engines across PR regions).
+
+Compute-bound: ~9 flops x ITERS per pixel vs 12 B of DDR traffic — the
+opposite regime from sobel, which is what Fig 22's mixed-tenant experiment
+exercises.
+
+VMEM per grid step: 4 x stripe x w f32 panels (v2 @32x64: 32 KiB).
+MXU: unused.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import cdiv, pallas_call
+
+ITERS = 64
+
+
+def _make_kernel(iters: int):
+    def kernel(c_ref, o_ref):
+        c = c_ref[0]  # (stripe, w, 2)
+        cr, ci = c[..., 0], c[..., 1]
+
+        def body(_, st):
+            zr, zi, cnt = st
+            zr2, zi2 = zr * zr, zi * zi
+            inside = (zr2 + zi2) <= 4.0
+            nzr = jnp.where(inside, zr2 - zi2 + cr, zr)
+            nzi = jnp.where(inside, 2.0 * zr * zi + ci, zi)
+            return nzr, nzi, cnt + inside.astype(jnp.float32)
+
+        zr = jnp.zeros_like(cr)
+        zi = jnp.zeros_like(ci)
+        cnt = jnp.zeros_like(cr)
+        _, _, cnt = jax.lax.fori_loop(0, iters, body, (zr, zi, cnt))
+        o_ref[...] = cnt
+
+    return kernel
+
+
+def mandelbrot(coords, *, stripe: int = 32, iters: int = ITERS):
+    """Escape counts for an (H, W, 2) grid of complex-plane coordinates."""
+    h, w, _ = coords.shape
+    if h % stripe:
+        raise ValueError(f"mandelbrot: H={h} not a multiple of {stripe}")
+    grid = (cdiv(h, stripe),)
+    return pallas_call(
+        _make_kernel(iters),
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, stripe, w, 2), lambda i: (i, 0, 0, 0))],
+        out_specs=pl.BlockSpec((stripe, w), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, w), jnp.float32),
+    )(coords.reshape(h // stripe, stripe, w, 2))

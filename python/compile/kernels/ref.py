@@ -1,0 +1,183 @@
+"""Pure-jnp oracles for every accelerator kernel.
+
+These are the correctness ground truth for the Pallas kernels (L1): pytest
+asserts ``allclose(kernel(x), ref(x))`` for every accelerator and variant.
+They are deliberately written in the most direct jnp style — no tiling, no
+Pallas — so a reviewer can audit them against the textbook definition of
+each benchmark (Spector suite [33] + the paper's in-house accelerators).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Simple element-wise / streaming accelerators
+# ---------------------------------------------------------------------------
+
+
+def vadd(a, b):
+    """Vector addition — the paper's Listing-2 example accelerator."""
+    return a + b
+
+
+def fir(x, taps):
+    """1-D FIR filter (Spector): y[i] = sum_k taps[k] * x[i + k].
+
+    ``x`` is pre-padded by the caller: len(y) = len(x) - len(taps) + 1.
+    """
+    n = x.shape[0] - taps.shape[0] + 1
+    idx = jnp.arange(n)[:, None] + jnp.arange(taps.shape[0])[None, :]
+    return (x[idx] * taps[None, :]).sum(axis=1)
+
+
+def mm(a, b):
+    """Dense matrix multiply (Spector MM)."""
+    return a @ b
+
+
+def histogram(x, bins):
+    """``bins``-bin histogram of values in [0, 1) (Spector HIST).
+
+    Counts are returned as f32 so the whole artifact surface stays f32
+    (see DESIGN.md — single-dtype interchange keeps the PJRT bridge simple).
+    """
+    idx = jnp.clip((x * bins).astype(jnp.int32), 0, bins - 1)
+    return jnp.zeros((bins,), jnp.float32).at[idx].add(1.0)
+
+
+# ---------------------------------------------------------------------------
+# Block accelerators
+# ---------------------------------------------------------------------------
+
+
+def dct_matrix(n=8):
+    """Orthonormal DCT-II basis matrix."""
+    k = np.arange(n)[:, None]
+    i = np.arange(n)[None, :]
+    m = np.sqrt(2.0 / n) * np.cos(np.pi * (2 * i + 1) * k / (2 * n))
+    m[0, :] = 1.0 / np.sqrt(n)
+    return jnp.asarray(m, jnp.float32)
+
+
+def dct8x8(img):
+    """8x8 blocked 2-D DCT (Spector DCT) over an (H, W) image tile."""
+    h, w = img.shape
+    d = dct_matrix(8)
+    blocks = img.reshape(h // 8, 8, w // 8, 8).transpose(0, 2, 1, 3)
+    out = jnp.einsum("ij,bcjk,lk->bcil", d, blocks, d)
+    return out.transpose(0, 2, 1, 3).reshape(h, w)
+
+
+def sobel(img):
+    """3x3 Sobel gradient magnitude (zero-padded borders).
+
+    The paper's memory-bound accelerator (Xilinx SDAccel examples [39]).
+    """
+    p = jnp.pad(img, 1)
+    gx = (
+        p[:-2, :-2] - p[:-2, 2:]
+        + 2.0 * (p[1:-1, :-2] - p[1:-1, 2:])
+        + p[2:, :-2] - p[2:, 2:]
+    )
+    gy = (
+        p[:-2, :-2] - p[2:, :-2]
+        + 2.0 * (p[:-2, 1:-1] - p[2:, 1:-1])
+        + p[:-2, 2:] - p[2:, 2:]
+    )
+    return jnp.sqrt(gx * gx + gy * gy)
+
+
+def normal_est(points):
+    """Surface-normal estimation (Spector NORM) over an (H, W, 3) grid.
+
+    Normal = normalised cross product of the forward differences along the
+    two grid axes (edge rows/cols clamp to their neighbour's value).
+    """
+    du = jnp.diff(points, axis=0, append=points[-1:, :, :])
+    dv = jnp.diff(points, axis=1, append=points[:, -1:, :])
+    n = jnp.cross(du, dv)
+    norm = jnp.linalg.norm(n, axis=-1, keepdims=True)
+    return n / jnp.maximum(norm, 1e-8)
+
+
+# ---------------------------------------------------------------------------
+# Compute-bound accelerators (the paper's in-house C / OpenCL modules)
+# ---------------------------------------------------------------------------
+
+
+def mandelbrot(coords, iters=64):
+    """Mandelbrot escape-iteration count over an (H, W, 2) coordinate grid.
+
+    coords[..., 0] = Re(c), coords[..., 1] = Im(c); returns f32 counts.
+    """
+    cr, ci = coords[..., 0], coords[..., 1]
+
+    def body(_, st):
+        zr, zi, cnt = st
+        zr2, zi2 = zr * zr, zi * zi
+        inside = (zr2 + zi2) <= 4.0
+        nzr = jnp.where(inside, zr2 - zi2 + cr, zr)
+        nzi = jnp.where(inside, 2.0 * zr * zi + ci, zi)
+        return nzr, nzi, cnt + inside.astype(jnp.float32)
+
+    zr = jnp.zeros_like(cr)
+    zi = jnp.zeros_like(ci)
+    cnt = jnp.zeros_like(cr)
+    _, _, cnt = jax.lax.fori_loop(0, iters, body, (zr, zi, cnt))
+    return cnt
+
+
+def _norm_cdf(x):
+    return 0.5 * (1.0 + jax.lax.erf(x / jnp.sqrt(2.0).astype(x.dtype)))
+
+
+def black_scholes(params):
+    """European call/put pricing (Black-Scholes closed form [37]).
+
+    params: (N, 5) columns = spot S, strike K, time T, rate r, vol sigma.
+    Returns (N, 2) = [call, put].
+    """
+    s, k, t, r, sig = (params[:, i] for i in range(5))
+    sqrt_t = jnp.sqrt(t)
+    d1 = (jnp.log(s / k) + (r + 0.5 * sig * sig) * t) / (sig * sqrt_t)
+    d2 = d1 - sig * sqrt_t
+    disc = k * jnp.exp(-r * t)
+    call = s * _norm_cdf(d1) - disc * _norm_cdf(d2)
+    put = disc * _norm_cdf(-d2) - s * _norm_cdf(-d1)
+    return jnp.stack([call, put], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# AES-like ARX cipher (the Table-3 "sparse" RTL module)
+# ---------------------------------------------------------------------------
+
+AES_ROUNDS = 8
+AES_KEY = (0x9E3779B9, 0x7F4A7C15, 0x85EBCA6B, 0xC2B2AE35)
+
+
+def aes_arx(x_f32):
+    """ARX round function over the *bit pattern* of an f32 vector.
+
+    The real FOS AES module is hand-written RTL; here the interchange stays
+    f32 (bitcast in/out) and the rounds are add/rotate/xor on u32 lanes —
+    the same dataflow class, so the PnR netlist shape and the runtime path
+    are exercised identically. NOT cryptographically meaningful.
+    """
+    x = jax.lax.bitcast_convert_type(x_f32, jnp.uint32)
+
+    def rotl(v, r):
+        return (v << jnp.uint32(r)) | (v >> jnp.uint32(32 - r))
+
+    def rnd(i, v):
+        k = jnp.uint32(AES_KEY[0])
+        for kk in AES_KEY[1:]:
+            k = k ^ jnp.uint32(kk) + jnp.uint32(0)  # fold key material
+        v = v + jnp.uint32(AES_KEY[0])
+        v = rotl(v, 7) ^ jnp.uint32(AES_KEY[1])
+        v = v + jnp.uint32(AES_KEY[2])
+        v = rotl(v, 13) ^ k
+        return v
+
+    x = jax.lax.fori_loop(0, AES_ROUNDS, rnd, x)
+    return jax.lax.bitcast_convert_type(x, jnp.float32)

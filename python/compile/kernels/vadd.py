@@ -1,0 +1,37 @@
+"""vadd — the paper's Listing-2 example accelerator (c = a + b).
+
+TPU adaptation: the HLS variant's unroll factor (number of parallel adders
+in the PR region) maps to the Pallas block length — variant v1 streams
+1024-lane blocks (one 8x128 VPU tile), v2 streams 2048-lane blocks (two
+tiles per grid step, i.e. double the datapath, half the grid iterations),
+mirroring a 2-region module with twice the adder columns.
+
+VMEM per grid step: 3 blocks x block x 4 B (v1: 12 KiB, v2: 24 KiB).
+MXU: unused (pure VPU kernel).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import cdiv, pallas_call
+
+
+def _kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = a_ref[...] + b_ref[...]
+
+
+def vadd(a, b, *, block: int = 1024):
+    """Blocked vector add. ``a``/``b``: f32[n], n % block == 0."""
+    n = a.shape[0]
+    if n % block:
+        raise ValueError(f"vadd: n={n} not a multiple of block={block}")
+    grid = (cdiv(n, block),)
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    return pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+    )(a, b)

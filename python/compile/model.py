@@ -1,0 +1,82 @@
+"""L2: the JAX compute graph for every accelerator variant.
+
+Each variant is a jittable function over fixed work-item shapes (HLO is
+shape-specialised), calling the L1 Pallas kernel for the hot spot and
+doing any pre/post graph work (halo materialisation, padding) in plain
+jnp — exactly the split an HLS module has between its DMA prologue and
+its datapath. ``build(variant)`` returns ``(fn, example_args)`` ready for
+``jax.jit(fn).lower(*example_args)`` in aot.py.
+"""
+
+from typing import Callable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import specs
+from . import kernels as K
+
+
+def _examples(shapes) -> List[jax.ShapeDtypeStruct]:
+    return [jax.ShapeDtypeStruct(s, jnp.float32) for s in shapes]
+
+
+def build(variant_name: str) -> Tuple[Callable, List[jax.ShapeDtypeStruct]]:
+    """(traceable fn, example args) for one accelerator variant."""
+    accel, variant = find(variant_name)
+    p = variant.kernel_params
+    name = accel.name
+
+    if name == "vadd":
+        fn = lambda a, b: (K.vadd(a, b, block=p["block"]),)
+    elif name == "mm":
+        fn = lambda a, b: (K.mm(a, b, bm=p["bm"], bn=p["bn"], bk=p["bk"]),)
+    elif name == "fir":
+        fn = lambda x, t: (K.fir(x, t, block=p["block"]),)
+    elif name == "histogram":
+        fn = lambda x: (K.histogram(x, block=p["block"]),)
+    elif name == "dct":
+        fn = lambda img: (K.dct8x8(img, stripe=p["stripe"]),)
+    elif name == "sobel":
+        fn = lambda img: (K.sobel(img, stripe=p["stripe"]),)
+    elif name == "normal_est":
+        fn = lambda pts: (K.normal_est(pts, stripe=p["stripe"]),)
+    elif name == "mandelbrot":
+        fn = lambda c: (K.mandelbrot(c, stripe=p["stripe"]),)
+    elif name == "black_scholes":
+        fn = lambda prm: (K.black_scholes(prm, block=p["block"]),)
+    elif name == "aes":
+        fn = lambda x: (K.aes_arx(x, block=p.get("block", 1024)),)
+    else:
+        raise KeyError(f"unknown accelerator {name!r}")
+
+    return fn, _examples(accel.in_shapes)
+
+
+def reference(accel_name: str) -> Callable:
+    """The pure-jnp oracle with the same signature as build()'s fn."""
+    r = K.ref
+    return {
+        "vadd": lambda a, b: (r.vadd(a, b),),
+        "mm": lambda a, b: (r.mm(a, b),),
+        "fir": lambda x, t: (r.fir(x, t),),
+        "histogram": lambda x: (r.histogram(x, 256),),
+        "dct": lambda img: (r.dct8x8(img),),
+        "sobel": lambda img: (r.sobel(img),),
+        "normal_est": lambda pts: (r.normal_est(pts),),
+        "mandelbrot": lambda c: (r.mandelbrot(c),),
+        "black_scholes": lambda prm: (r.black_scholes(prm),),
+        "aes": lambda x: (r.aes_arx(x),),
+    }[accel_name]
+
+
+def find(variant_name: str):
+    for accel in specs.ACCELERATORS:
+        for v in accel.variants:
+            if v.name == variant_name:
+                return accel, v
+    raise KeyError(f"unknown variant {variant_name!r}")
+
+
+def all_variants() -> List[str]:
+    return [v.name for a in specs.ACCELERATORS for v in a.variants]

@@ -1,0 +1,217 @@
+"""Single source of truth for the FOS accelerator catalog.
+
+Everything the Rust L3 layer needs to know about an accelerator flows from
+here through ``artifacts/manifest.json``:
+
+- HLO artifact names + I/O shapes per *implementation variant* (the
+  paper's resource-elastic alternatives: a v2 occupies two adjacent PR
+  regions and runs faster),
+- the 100 MHz cycle model per work item (drives the virtual-time
+  scheduler figures, Figs 19-22),
+- the netlist resource spec (drives the PnR simulator, Table 3, and the
+  region allocator),
+- the Listing-2/3-style register map (drives the generic driver).
+
+Netlist sizes are calibrated against one Ultra96 PR region
+(17760 LUTs / 35520 FFs / 72 BRAM36 / 120 DSP48 — Table 1) so that the
+Table 3 utilisations come out at the paper's 33% / 63% / 81%.
+"""
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Tuple
+
+# One Ultra96 PR region (Table 1).
+REGION_LUTS = 17760
+REGION_FFS = 35520
+REGION_BRAMS = 72
+REGION_DSPS = 120
+
+CLOCK_HZ = 100_000_000  # all accelerators run at 100 MHz (paper §5.5)
+
+
+@dataclass(frozen=True)
+class Netlist:
+    """Post-synthesis resource footprint of one implementation variant."""
+
+    luts: int
+    ffs: int
+    brams: int
+    dsps: int
+
+    def util_of_regions(self, regions: int) -> float:
+        return self.luts / (REGION_LUTS * regions)
+
+
+@dataclass(frozen=True)
+class Variant:
+    """One implementation alternative of an accelerator.
+
+    ``regions`` adjacent PR slots are combined to host it; ``cycles`` is
+    the modelled 100 MHz latency for one work item (one tile / block of
+    the data-parallel decomposition, §4.4.2).
+    """
+
+    name: str
+    regions: int
+    cycles: int
+    netlist: Netlist
+    kernel_params: Dict[str, int] = field(default_factory=dict)
+
+
+@dataclass(frozen=True)
+class AccelSpec:
+    name: str
+    lang: str  # "c" | "opencl" | "rtl" — the paper's heterogeneity story
+    suite: str  # "spector" | "inhouse" | "listing2"
+    in_shapes: List[Tuple[int, ...]]
+    out_shapes: List[Tuple[int, ...]]
+    registers: List[str]  # operand registers after the 0x00 control word
+    variants: List[Variant]
+
+    @property
+    def bytes_in(self) -> int:
+        return sum(4 * _prod(s) for s in self.in_shapes)
+
+    @property
+    def bytes_out(self) -> int:
+        return sum(4 * _prod(s) for s in self.out_shapes)
+
+
+def _prod(shape) -> int:
+    n = 1
+    for d in shape:
+        n *= d
+    return n
+
+
+def _nl(frac_lut: float, regions: int = 1, dsp_frac: float = 0.3,
+        bram_frac: float = 0.3) -> Netlist:
+    """Netlist sized as a fraction of ``regions`` Ultra96 PR regions."""
+    return Netlist(
+        luts=int(REGION_LUTS * regions * frac_lut),
+        ffs=int(REGION_FFS * regions * frac_lut * 0.9),
+        brams=int(REGION_BRAMS * regions * bram_frac),
+        dsps=int(REGION_DSPS * regions * dsp_frac),
+    )
+
+
+# DCT's 2-region variant is the paper's super-linear case: 3.55x for 2x
+# resources (Fig 19) — more row buffers *and* a larger butterfly unroll.
+DCT_SUPERLINEAR = 3.55
+
+ACCELERATORS: List[AccelSpec] = [
+    AccelSpec(
+        name="vadd", lang="c", suite="listing2",
+        in_shapes=[(4096,), (4096,)], out_shapes=[(4096,)],
+        registers=["a_op", "b_op", "c_out"],
+        variants=[
+            Variant("vadd_v1", 1, 4096, _nl(0.08, 1, 0.02, 0.05),
+                    {"block": 1024}),
+            Variant("vadd_v2", 2, 2048, _nl(0.08, 2, 0.02, 0.05),
+                    {"block": 2048}),
+        ],
+    ),
+    AccelSpec(
+        name="mm", lang="opencl", suite="spector",
+        in_shapes=[(64, 64), (64, 64)], out_shapes=[(64, 64)],
+        registers=["a_op", "b_op", "c_out"],
+        variants=[
+            Variant("mm_v1", 1, 81920, _nl(0.55, 1, 0.55, 0.45),
+                    {"bm": 32, "bn": 32, "bk": 32}),
+            Variant("mm_v2", 2, 40960, _nl(0.55, 2, 0.55, 0.45),
+                    {"bm": 64, "bn": 64, "bk": 64}),
+        ],
+    ),
+    AccelSpec(
+        name="fir", lang="opencl", suite="spector",
+        in_shapes=[(4111,), (16,)], out_shapes=[(4096,)],
+        registers=["x_op", "taps_op", "y_out"],
+        variants=[
+            Variant("fir_v1", 1, 40960, _nl(0.30, 1, 0.55, 0.15),
+                    {"block": 1024}),
+            Variant("fir_v2", 2, 20480, _nl(0.30, 2, 0.55, 0.15),
+                    {"block": 2048}),
+        ],
+    ),
+    AccelSpec(
+        name="histogram", lang="opencl", suite="spector",
+        in_shapes=[(4096,)], out_shapes=[(256,)],
+        registers=["x_op", "h_out"],
+        variants=[
+            Variant("histogram_v1", 1, 40960, _nl(0.40, 1, 0.05, 0.60),
+                    {"block": 1024}),
+            Variant("histogram_v2", 2, 20480, _nl(0.40, 2, 0.05, 0.60),
+                    {"block": 2048}),
+        ],
+    ),
+    AccelSpec(
+        name="dct", lang="opencl", suite="spector",
+        in_shapes=[(64, 64)], out_shapes=[(64, 64)],
+        registers=["in_img", "out_img"],
+        variants=[
+            Variant("dct_v1", 1, 40960, _nl(0.50, 1, 0.60, 0.40),
+                    {"stripe": 8}),
+            Variant("dct_v2", 2, int(40960 / DCT_SUPERLINEAR),
+                    _nl(0.85, 2, 0.80, 0.70), {"stripe": 32}),
+        ],
+    ),
+    AccelSpec(
+        name="sobel", lang="opencl", suite="inhouse",
+        in_shapes=[(128, 128)], out_shapes=[(128, 128)],
+        registers=["in_img", "out_img"],
+        variants=[
+            Variant("sobel_v1", 1, 16384, _nl(0.35, 1, 0.10, 0.45),
+                    {"stripe": 32}),
+            Variant("sobel_v2", 2, 8192, _nl(0.35, 2, 0.10, 0.45),
+                    {"stripe": 64}),
+        ],
+    ),
+    AccelSpec(
+        name="normal_est", lang="opencl", suite="spector",
+        in_shapes=[(64, 64, 3)], out_shapes=[(64, 64, 3)],
+        registers=["in_pts", "out_norm"],
+        variants=[
+            Variant("normal_est_v1", 1, 81920, _nl(0.63, 1, 0.50, 0.50),
+                    {"stripe": 32}),
+            Variant("normal_est_v2", 2, 40960, _nl(0.63, 2, 0.50, 0.50),
+                    {"stripe": 64}),
+        ],
+    ),
+    AccelSpec(
+        name="mandelbrot", lang="c", suite="inhouse",
+        in_shapes=[(64, 64, 2)], out_shapes=[(64, 64)],
+        registers=["in_coords", "out_cnt"],
+        variants=[
+            Variant("mandelbrot_v1", 1, 262144, _nl(0.60, 1, 0.80, 0.10),
+                    {"stripe": 32}),
+            Variant("mandelbrot_v2", 2, 131072, _nl(0.60, 2, 0.80, 0.10),
+                    {"stripe": 64}),
+        ],
+    ),
+    AccelSpec(
+        name="black_scholes", lang="opencl", suite="inhouse",
+        in_shapes=[(4096, 5)], out_shapes=[(4096, 2)],
+        registers=["in_params", "out_prices"],
+        variants=[
+            Variant("black_scholes_v1", 1, 409600, _nl(0.81, 1, 0.70, 0.30),
+                    {"block": 1024}),
+            Variant("black_scholes_v2", 2, 204800, _nl(0.81, 2, 0.70, 0.30),
+                    {"block": 2048}),
+        ],
+    ),
+    AccelSpec(
+        name="aes", lang="rtl", suite="inhouse",
+        in_shapes=[(4096,)], out_shapes=[(4096,)],
+        registers=["in_data", "out_data"],
+        # RTL module: no HLS DSE, hence a single implementation (the
+        # paper's Table 3 "sparse" 33% workload).
+        variants=[
+            Variant("aes_v1", 1, 4096, _nl(0.33, 1, 0.00, 0.15)),
+        ],
+    ),
+]
+
+BY_NAME: Dict[str, AccelSpec] = {a.name: a for a in ACCELERATORS}
+
+# Table 3 compile workloads: (accelerator, paper's region utilisation).
+TABLE3_WORKLOADS = [("aes", 0.33), ("normal_est", 0.63), ("black_scholes", 0.81)]

@@ -1,0 +1,56 @@
+"""AOT pipeline checks: lowering emits parseable HLO text with the right
+entry signature, and the manifest matches the spec catalog."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, model, specs
+
+
+def test_lower_vadd_entry_signature():
+    text = aot.lower_variant("vadd_v1")
+    assert "ENTRY" in text
+    assert "f32[4096]" in text
+    # return_tuple=True: entry root is a tuple (the rust side unwraps it).
+    assert "(f32[4096]" in text
+
+
+def test_lower_is_deterministic():
+    assert aot.lower_variant("dct_v1") == aot.lower_variant("dct_v1")
+
+
+def test_manifest_entry_schema():
+    e = aot.manifest_entry(specs.BY_NAME["sobel"])
+    assert e["name"] == "sobel"
+    assert e["registers"][0] == {"name": "control", "offset": 0}
+    offsets = [r["offset"] for r in e["registers"][1:]]
+    assert offsets == [16 + 8 * i for i in range(len(offsets))]
+    for v in e["variants"]:
+        assert v["clock_hz"] == specs.CLOCK_HZ
+        assert v["hlo"].endswith(".hlo.txt")
+        assert set(v["netlist"]) == {"luts", "ffs", "brams", "dsps"}
+
+
+def test_manifest_covers_all_variants():
+    entries = [aot.manifest_entry(a) for a in specs.ACCELERATORS]
+    names = [v["name"] for e in entries for v in e["variants"]]
+    assert sorted(names) == sorted(model.all_variants())
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__),
+                                    "..", "..", "artifacts",
+                                    "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_built_manifest_is_fresh():
+    root = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    with open(os.path.join(root, "manifest.json")) as f:
+        m = json.load(f)
+    assert m["version"] == aot.MANIFEST_VERSION
+    for fname in m["checksums"]:
+        assert os.path.exists(os.path.join(root, fname)), fname
+    built = {a["name"] for a in m["accelerators"]}
+    assert built == {a.name for a in specs.ACCELERATORS}

@@ -1,0 +1,165 @@
+"""Hypothesis sweeps: shapes, block parameters and data distributions.
+
+These catch block/halo indexing bugs that fixed-shape tests miss — the
+Pallas grid arithmetic must hold for *every* legal (shape, block) pair."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels as K
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _close(got, want, atol=1e-3):
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=atol, rtol=1e-3)
+
+
+@settings(**SETTINGS)
+@given(
+    nblocks=st.integers(1, 8),
+    block=st.sampled_from([128, 256, 512]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_vadd_any_blocking(nblocks, block, seed):
+    rng = np.random.default_rng(seed)
+    n = nblocks * block
+    a = rng.standard_normal(n).astype(np.float32)
+    b = rng.standard_normal(n).astype(np.float32)
+    _close(K.vadd(a, b, block=block), ref.vadd(a, b))
+
+
+@settings(**SETTINGS)
+@given(
+    mt=st.sampled_from([1, 2, 4]),
+    nt=st.sampled_from([1, 2, 4]),
+    kt=st.sampled_from([1, 2, 4]),
+    tile=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_mm_any_tiling(mt, nt, kt, tile, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((mt * tile, kt * tile)).astype(np.float32)
+    b = rng.standard_normal((kt * tile, nt * tile)).astype(np.float32)
+    _close(K.mm(a, b, bm=tile, bn=tile, bk=tile), ref.mm(a, b), atol=1e-2)
+
+
+@settings(**SETTINGS)
+@given(
+    nblocks=st.integers(1, 6),
+    block=st.sampled_from([128, 256]),
+    taps_len=st.sampled_from([2, 8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fir_any_blocking(nblocks, block, taps_len, seed):
+    rng = np.random.default_rng(seed)
+    n = nblocks * block
+    x = rng.standard_normal(n + taps_len - 1).astype(np.float32)
+    taps = rng.standard_normal(taps_len).astype(np.float32)
+    _close(K.fir(x, taps, block=block), ref.fir(x, taps), atol=1e-2)
+
+
+@settings(**SETTINGS)
+@given(
+    nblocks=st.integers(1, 8),
+    block=st.sampled_from([256, 512]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_histogram_any_blocking(nblocks, block, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.random(nblocks * block).astype(np.float32)
+    got = np.asarray(K.histogram(x, block=block))
+    _close(got, ref.histogram(x, 256), atol=0)
+    assert got.sum() == nblocks * block  # conservation under any blocking
+
+
+@settings(**SETTINGS)
+@given(
+    hs=st.integers(1, 4),
+    ws=st.integers(1, 4),
+    stripe=st.sampled_from([8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dct_any_shape(hs, ws, stripe, seed):
+    rng = np.random.default_rng(seed)
+    img = rng.standard_normal((hs * 16, ws * 16)).astype(np.float32)
+    if (hs * 16) % stripe:
+        return
+    _close(K.dct8x8(img, stripe=stripe), ref.dct8x8(img), atol=1e-2)
+
+
+@settings(**SETTINGS)
+@given(
+    hstripes=st.integers(1, 4),
+    stripe=st.sampled_from([8, 16, 32]),
+    w=st.sampled_from([32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sobel_any_stripe(hstripes, stripe, w, seed):
+    rng = np.random.default_rng(seed)
+    img = rng.standard_normal((hstripes * stripe, w)).astype(np.float32)
+    _close(K.sobel(img, stripe=stripe), ref.sobel(img), atol=1e-2)
+
+
+@settings(**SETTINGS)
+@given(
+    hstripes=st.integers(1, 3),
+    stripe=st.sampled_from([8, 16]),
+    w=st.sampled_from([16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_normal_est_any_stripe(hstripes, stripe, w, seed):
+    rng = np.random.default_rng(seed)
+    pts = rng.standard_normal((hstripes * stripe, w, 3)).astype(np.float32)
+    _close(K.normal_est(pts, stripe=stripe), ref.normal_est(pts), atol=1e-2)
+
+
+@settings(**SETTINGS)
+@given(
+    stripe=st.sampled_from([8, 16]),
+    hstripes=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_mandelbrot_any_stripe(stripe, hstripes, seed):
+    rng = np.random.default_rng(seed)
+    c = (rng.standard_normal((hstripes * stripe, 32, 2)) * 1.5).astype(
+        np.float32
+    )
+    _close(K.mandelbrot(c, stripe=stripe), ref.mandelbrot(c), atol=0)
+
+
+@settings(**SETTINGS)
+@given(
+    nblocks=st.integers(1, 4),
+    block=st.sampled_from([128, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_black_scholes_any_blocking(nblocks, block, seed):
+    rng = np.random.default_rng(seed)
+    n = nblocks * block
+    p = np.stack(
+        [
+            rng.uniform(50, 150, n), rng.uniform(50, 150, n),
+            rng.uniform(0.1, 2.0, n), rng.uniform(0.0, 0.1, n),
+            rng.uniform(0.1, 0.6, n),
+        ],
+        axis=1,
+    ).astype(np.float32)
+    _close(K.black_scholes(p, block=block), ref.black_scholes(p), atol=5e-2)
+
+
+@settings(**SETTINGS)
+@given(
+    nblocks=st.integers(1, 4),
+    block=st.sampled_from([256, 512]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_aes_bijective_any_blocking(nblocks, block, seed):
+    rng = np.random.default_rng(seed)
+    n = nblocks * block
+    x = rng.standard_normal(n).astype(np.float32)
+    got = np.asarray(K.aes_arx(x, block=block)).view(np.uint32)
+    want = np.asarray(ref.aes_arx(x)).view(np.uint32)
+    assert (got == want).all()

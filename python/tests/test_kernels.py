@@ -1,0 +1,181 @@
+"""Kernel-vs-oracle correctness: the CORE L1 signal.
+
+Every Pallas kernel, at every catalogued variant's block parameters, must
+match the pure-jnp oracle in ref.py."""
+
+import numpy as np
+import pytest
+
+from compile import kernels as K
+from compile.kernels import ref
+
+RNG = np.random.default_rng(1234)
+
+
+def assert_close(got, want, atol=1e-4, rtol=1e-4):
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=atol, rtol=rtol)
+
+
+@pytest.mark.parametrize("block", [512, 1024, 2048])
+def test_vadd(block):
+    a = RNG.standard_normal(4096).astype(np.float32)
+    b = RNG.standard_normal(4096).astype(np.float32)
+    assert_close(K.vadd(a, b, block=block), ref.vadd(a, b))
+
+
+@pytest.mark.parametrize("tile", [16, 32, 64])
+def test_mm(tile):
+    a = RNG.standard_normal((64, 64)).astype(np.float32)
+    b = RNG.standard_normal((64, 64)).astype(np.float32)
+    assert_close(K.mm(a, b, bm=tile, bn=tile, bk=tile), ref.mm(a, b),
+                 atol=1e-3)
+
+
+def test_mm_rectangular():
+    a = RNG.standard_normal((32, 128)).astype(np.float32)
+    b = RNG.standard_normal((128, 64)).astype(np.float32)
+    assert_close(K.mm(a, b, bm=16, bn=32, bk=64), ref.mm(a, b), atol=1e-3)
+
+
+@pytest.mark.parametrize("block", [1024, 2048])
+@pytest.mark.parametrize("taps_len", [4, 16])
+def test_fir(block, taps_len):
+    taps = RNG.standard_normal(taps_len).astype(np.float32)
+    x = RNG.standard_normal(4096 + taps_len - 1).astype(np.float32)
+    assert_close(K.fir(x, taps, block=block), ref.fir(x, taps), atol=1e-3)
+
+
+@pytest.mark.parametrize("block", [1024, 2048])
+def test_histogram(block):
+    x = RNG.random(4096).astype(np.float32)
+    assert_close(K.histogram(x, block=block), ref.histogram(x, 256))
+
+
+def test_histogram_mass_conserved():
+    x = RNG.random(8192).astype(np.float32)
+    h = np.asarray(K.histogram(x, block=1024))
+    assert h.sum() == 8192.0
+    assert (h >= 0).all()
+
+
+def test_histogram_boundary_values():
+    # 0.0 lands in bin 0; values ~1.0 clamp into the last bin.
+    x = np.asarray([0.0, 0.9999999, 0.5] + [0.25] * 1021, np.float32)
+    h = np.asarray(K.histogram(x, block=1024))
+    assert h[0] >= 1 and h[255] >= 1
+
+
+@pytest.mark.parametrize("stripe", [8, 16, 32])
+def test_dct(stripe):
+    img = RNG.standard_normal((64, 64)).astype(np.float32)
+    assert_close(K.dct8x8(img, stripe=stripe), ref.dct8x8(img), atol=1e-3)
+
+
+def test_dct_energy_preserved():
+    # Orthonormal transform: Parseval's identity per 8x8 block.
+    img = RNG.standard_normal((64, 64)).astype(np.float32)
+    out = np.asarray(K.dct8x8(img, stripe=8))
+    np.testing.assert_allclose((out ** 2).sum(), (img ** 2).sum(), rtol=1e-3)
+
+
+@pytest.mark.parametrize("stripe", [32, 64])
+def test_sobel(stripe):
+    img = RNG.standard_normal((128, 128)).astype(np.float32)
+    assert_close(K.sobel(img, stripe=stripe), ref.sobel(img), atol=1e-3)
+
+
+def test_sobel_flat_image_is_zero_inside():
+    img = np.full((64, 64), 3.0, np.float32)
+    out = np.asarray(K.sobel(img, stripe=32))
+    assert np.abs(out[2:-2, 2:-2]).max() < 1e-5  # flat interior -> no edges
+    assert out[0].max() > 0  # zero-padded border produces an edge
+
+
+@pytest.mark.parametrize("stripe", [32, 64])
+def test_normal_est(stripe):
+    pts = RNG.standard_normal((64, 64, 3)).astype(np.float32)
+    assert_close(K.normal_est(pts, stripe=stripe), ref.normal_est(pts),
+                 atol=1e-3)
+
+
+def test_normal_est_unit_length():
+    pts = RNG.standard_normal((64, 64, 3)).astype(np.float32)
+    n = np.asarray(K.normal_est(pts, stripe=32))
+    lens = np.linalg.norm(n, axis=-1)
+    mask = lens > 1e-6  # degenerate (parallel-diff) points stay ~0
+    np.testing.assert_allclose(lens[mask], 1.0, atol=1e-3)
+
+
+@pytest.mark.parametrize("stripe", [32, 64])
+def test_mandelbrot(stripe):
+    g = np.meshgrid(np.linspace(-2, 1, 64), np.linspace(-1.5, 1.5, 64),
+                    indexing="ij")
+    c = np.stack(g, -1).astype(np.float32)
+    assert_close(K.mandelbrot(c, stripe=stripe), ref.mandelbrot(c))
+
+
+def test_mandelbrot_known_points():
+    # c = 0 never escapes (count == iters); c = 2 escapes after 1 round.
+    c = np.zeros((32, 64, 2), np.float32)
+    c[0, 1] = [2.0, 0.0]
+    out = np.asarray(K.mandelbrot(c, stripe=32))
+    assert out[0, 0] == 64.0
+    assert out[0, 1] <= 2.0
+
+
+@pytest.mark.parametrize("block", [1024, 2048])
+def test_black_scholes(block):
+    n = 4096
+    p = np.stack(
+        [
+            RNG.uniform(50, 150, n), RNG.uniform(50, 150, n),
+            RNG.uniform(0.1, 2.0, n), RNG.uniform(0.0, 0.1, n),
+            RNG.uniform(0.1, 0.6, n),
+        ],
+        axis=1,
+    ).astype(np.float32)
+    assert_close(K.black_scholes(p, block=block), ref.black_scholes(p),
+                 atol=1e-2)
+
+
+def test_black_scholes_put_call_parity():
+    n = 1024
+    p = np.stack(
+        [
+            RNG.uniform(80, 120, n), RNG.uniform(80, 120, n),
+            RNG.uniform(0.25, 1.0, n), RNG.uniform(0.01, 0.05, n),
+            RNG.uniform(0.15, 0.4, n),
+        ],
+        axis=1,
+    ).astype(np.float32)
+    out = np.asarray(K.black_scholes(p, block=1024))
+    s, k, t, r = p[:, 0], p[:, 1], p[:, 2], p[:, 3]
+    parity = out[:, 0] - out[:, 1]  # C - P = S - K e^{-rT}
+    np.testing.assert_allclose(parity, s - k * np.exp(-r * t),
+                               atol=5e-2, rtol=1e-3)
+
+
+def test_aes_matches_ref_bit_exact():
+    x = RNG.standard_normal(4096).astype(np.float32)
+    got = np.asarray(K.aes_arx(x, block=1024)).view(np.uint32)
+    want = np.asarray(ref.aes_arx(x)).view(np.uint32)
+    assert (got == want).all()
+
+
+def test_aes_is_a_permutation_of_bits():
+    # ARX rounds are bijective on u32 — distinct inputs stay distinct.
+    x = np.arange(1024, dtype=np.float32)
+    out = np.asarray(K.aes_arx(x, block=1024)).view(np.uint32)
+    assert len(np.unique(out)) == 1024
+
+
+def test_block_mismatch_raises():
+    a = np.zeros(1000, np.float32)
+    with pytest.raises(ValueError):
+        K.vadd(a, a, block=512)
+    with pytest.raises(ValueError):
+        K.histogram(a, block=512)
+    with pytest.raises(ValueError):
+        K.fir(np.zeros(1015, np.float32), np.zeros(16, np.float32),
+              block=512)

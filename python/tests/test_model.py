@@ -1,0 +1,92 @@
+"""L2 model-level checks: every catalogued variant builds, its variants
+agree numerically (resource-elastic replacement must be semantics-
+preserving!), and the manifest metadata is self-consistent."""
+
+import numpy as np
+import pytest
+
+from compile import model, specs
+
+
+def _inputs(accel, seed=7):
+    rng = np.random.default_rng(seed)
+    out = []
+    for shape in accel.in_shapes:
+        if accel.name == "histogram":
+            out.append(rng.random(shape).astype(np.float32))
+        elif accel.name == "black_scholes":
+            n = shape[0]
+            out.append(
+                np.stack(
+                    [
+                        rng.uniform(50, 150, n), rng.uniform(50, 150, n),
+                        rng.uniform(0.1, 2.0, n), rng.uniform(0.0, 0.1, n),
+                        rng.uniform(0.1, 0.6, n),
+                    ],
+                    axis=1,
+                ).astype(np.float32)
+            )
+        else:
+            out.append(rng.standard_normal(shape).astype(np.float32))
+    return out
+
+
+@pytest.mark.parametrize("variant", model.all_variants())
+def test_variant_builds_and_matches_ref(variant):
+    accel, _ = model.find(variant)
+    fn, examples = model.build(variant)
+    assert len(examples) == len(accel.in_shapes)
+    args = _inputs(accel)
+    (got,) = fn(*args)
+    (want,) = model.reference(accel.name)(*args)
+    assert got.shape == tuple(accel.out_shapes[0])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=5e-2, rtol=1e-3)
+
+
+@pytest.mark.parametrize("accel", specs.ACCELERATORS,
+                         ids=lambda a: a.name)
+def test_variants_agree(accel):
+    """Replacement invariant: switching implementation alternatives must
+    not change results (§4.4.2)."""
+    args = _inputs(accel)
+    outs = []
+    for v in accel.variants:
+        fn, _ = model.build(v.name)
+        outs.append(np.asarray(fn(*args)[0]))
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], atol=1e-3, rtol=1e-3)
+
+
+@pytest.mark.parametrize("accel", specs.ACCELERATORS,
+                         ids=lambda a: a.name)
+def test_spec_consistency(accel):
+    assert accel.lang in ("c", "opencl", "rtl")
+    assert accel.bytes_in == sum(4 * int(np.prod(s)) for s in accel.in_shapes)
+    names = [v.name for v in accel.variants]
+    assert len(set(names)) == len(names)
+    prev_cycles = None
+    for v in accel.variants:
+        assert v.regions >= 1
+        assert v.netlist.luts > 0
+        # A variant must fit the regions it claims (Ultra96 scale).
+        assert v.netlist.luts <= specs.REGION_LUTS * v.regions
+        assert v.netlist.brams <= specs.REGION_BRAMS * v.regions
+        assert v.netlist.dsps <= specs.REGION_DSPS * v.regions
+        if prev_cycles is not None:
+            assert v.cycles < prev_cycles  # bigger variant = faster (Pareto)
+        prev_cycles = v.cycles
+
+
+def test_dct_superlinear_cycle_model():
+    accel = specs.BY_NAME["dct"]
+    v1, v2 = accel.variants
+    assert v2.regions == 2 * v1.regions
+    speedup = v1.cycles / v2.cycles
+    assert 3.4 <= speedup <= 3.7  # the paper's 3.55x (Fig 19)
+
+
+def test_table3_workload_utilisations():
+    for name, util in specs.TABLE3_WORKLOADS:
+        v1 = specs.BY_NAME[name].variants[0]
+        assert abs(v1.netlist.util_of_regions(1) - util) < 0.02

@@ -1,0 +1,36 @@
+//! Fig 17: memory throughput vs burst size on the Ultra96's duplex AXI
+//! HP ports (HP0, HP1, HP3), individually and all together.
+
+use fos::memsim::{config_for, DdrModel, PortLoad};
+use fos::metrics::Table;
+use fos::shell::ShellBoard;
+
+fn main() {
+    let m = DdrModel::new(config_for(ShellBoard::Ultra96));
+    let mut t = Table::new(
+        "Fig 17 — Ultra96 AXI throughput vs burst size (MB/s)",
+        &["burst (B)", "read/port", "write/port", "1 port total", "3 ports total"],
+    );
+    for burst in [16u32, 32, 64, 128, 256, 512, 1024, 2048, 4096] {
+        let one = m.steady_state(&[PortLoad::duplex(burst)]);
+        let all = m.steady_state(&[PortLoad::duplex(burst); 3]);
+        t.row(&[
+            burst.to_string(),
+            format!("{:.0}", one.per_port_dir_mbps[0].0),
+            format!("{:.0}", one.per_port_dir_mbps[0].1),
+            format!("{:.0}", one.total_mbps),
+            format!("{:.0}", all.total_mbps),
+        ]);
+    }
+    t.print();
+    let one = m.steady_state(&[PortLoad::duplex(1024)]);
+    let all = m.steady_state(&[PortLoad::duplex(1024); 3]);
+    println!("paper: ~530 MB/s per direction, ~1060 MB/s per port, 3187 MB/s all ports");
+    println!(
+        "measured @1KiB: {:.0} per direction, {:.0} per port, {:.0} all ports ({:.0}% of the 4280 MB/s LPDDR4 peak; paper: 74%)",
+        one.per_port_dir_mbps[0].0,
+        one.total_mbps,
+        all.total_mbps,
+        100.0 * all.total_mbps / 4280.0
+    );
+}

@@ -1,0 +1,62 @@
+//! Fig 19: execution latency of Spector-suite accelerators on the
+//! ZCU102 as the number of PR regions available for acceleration grows
+//! 1 → 4. Near-linear scaling for most; super-linear for DCT via its
+//! 2-region implementation alternative (3.55x at 2x resources).
+
+use fos::accel::Catalog;
+use fos::metrics::Table;
+use fos::sched::{simulate, JobSpec, Policy, SimConfig, Workload};
+use fos::shell::ShellBoard;
+
+fn main() {
+    let catalog = Catalog::load_default().expect("run `make artifacts`");
+    let accels = ["mm", "fir", "histogram", "dct", "normal_est", "sobel"];
+    let tiles = 240usize; // one "input set" = 240 work items (Spector runs are long)
+
+    let mut t = Table::new(
+        "Fig 19 — Spector on ZCU102: latency (ms) vs regions [speedup vs 1]",
+        &["accelerator", "1 region", "2 regions", "3 regions", "4 regions"],
+    );
+    for accel in accels {
+        let mut cells = vec![accel.to_string()];
+        let mut base = None;
+        for regions in 1..=4usize {
+            let mut w = Workload::new();
+            // Expose as many requests as regions (paper's best case).
+            for j in JobSpec::frame(0, accel, 0, tiles, regions * 2) {
+                w.push(j);
+            }
+            let r = simulate(
+                &catalog,
+                &w,
+                &SimConfig::new(ShellBoard::Zcu102, Policy::Elastic).with_regions(regions),
+            );
+            let ms = r.makespan as f64 / 1e6;
+            let b = *base.get_or_insert(ms);
+            cells.push(format!("{ms:.2} [{:.2}x]", b / ms));
+        }
+        t.row(&cells);
+    }
+    t.print();
+
+    // Verify the DCT super-linear claim explicitly.
+    let dct_speedup_2x = {
+        let run = |regions: usize| {
+            let mut w = Workload::new();
+            for j in JobSpec::frame(0, "dct", 0, tiles, regions * 2) {
+                w.push(j);
+            }
+            simulate(
+                &catalog,
+                &w,
+                &SimConfig::new(ShellBoard::Zcu102, Policy::Elastic).with_regions(regions),
+            )
+            .makespan as f64
+        };
+        run(1) / run(2)
+    };
+    println!(
+        "DCT at 2x resources: {dct_speedup_2x:.2}x speedup (paper: 3.55x, super-linear via the bigger implementation)"
+    );
+    assert!(dct_speedup_2x > 2.0, "DCT must be super-linear");
+}

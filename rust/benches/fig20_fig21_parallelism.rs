@@ -1,0 +1,59 @@
+//! Figs 20–21: Mandelbrot, Black-Scholes and Sobel on the Ultra96 with
+//! varying numbers of acceleration requests per frame — absolute
+//! latencies (Fig 20) and latencies relative to 1 request (Fig 21).
+//! Expect near-linear gains up to 3 requests (= PR regions), stagnation
+//! beyond, and multiples of 3 doing better than non-multiples.
+
+use fos::accel::Catalog;
+use fos::metrics::Table;
+use fos::sched::{simulate, JobSpec, Policy, SimConfig, Workload};
+use fos::shell::ShellBoard;
+
+fn main() {
+    let catalog = Catalog::load_default().expect("run `make artifacts`");
+    // (accel, pinned 1-region variant, tiles per frame)
+    let apps = [
+        ("mandelbrot", "mandelbrot_v1", 12usize),
+        ("black_scholes", "black_scholes_v1", 12),
+        ("sobel", "sobel_v1", 12),
+    ];
+    let requests = [1usize, 2, 3, 4, 5, 6, 8, 9, 12];
+
+    let mut abs = Table::new(
+        "Fig 20 — execution latency (ms) vs exposed requests (Ultra96, 3 regions)",
+        &["requests", "mandelbrot", "black_scholes", "sobel"],
+    );
+    let mut rel = Table::new(
+        "Fig 21 — latency relative to 1 request",
+        &["requests", "mandelbrot", "black_scholes", "sobel"],
+    );
+    let mut bases = [0f64; 3];
+    for &reqs in &requests {
+        let mut abs_row = vec![reqs.to_string()];
+        let mut rel_row = vec![reqs.to_string()];
+        for (k, (accel, variant, tiles)) in apps.iter().enumerate() {
+            let mut w = Workload::new();
+            for j in JobSpec::frame_pinned(0, accel, variant, 0, *tiles, reqs) {
+                w.push(j);
+            }
+            let r = simulate(
+                &catalog,
+                &w,
+                &SimConfig::new(ShellBoard::Ultra96, Policy::Elastic),
+            );
+            let ms = r.makespan as f64 / 1e6;
+            if reqs == 1 {
+                bases[k] = ms;
+            }
+            abs_row.push(format!("{ms:.2}"));
+            rel_row.push(format!("{:.2}", ms / bases[k]));
+        }
+        abs.row(&abs_row);
+        rel.row(&rel_row);
+    }
+    abs.print();
+    rel.print();
+    println!("paper shape: near-linear to 3 requests, stagnation past the region count,");
+    println!("multiples of 3 avoid leftover-request bottlenecks; sobel (memory-bound)");
+    println!("gains least — its latency is DDR transfer, not compute.");
+}

@@ -1,0 +1,63 @@
+//! §Perf microbench: BitMan-analog throughput — extraction, relocation,
+//! merge and (de)serialisation rates. Target: relocation ≥ 1 GB/s of
+//! configuration data (it's on the scheduler's reconfiguration path).
+
+use fos::bitstream::{extract, merge, relocate, synth_full, Bitstream};
+use fos::fabric::{Device, DeviceKind, Floorplan};
+use std::time::Instant;
+
+fn rate(bytes: usize, iters: usize, el: std::time::Duration) -> f64 {
+    (bytes * iters) as f64 / el.as_secs_f64() / 1e9
+}
+
+fn main() {
+    let fp = Floorplan::standard(Device::new(DeviceKind::Zu3eg));
+    let full = synth_full(&fp.device, 42);
+    let iters = 50;
+
+    let t0 = Instant::now();
+    let mut partial = None;
+    for _ in 0..iters {
+        partial = Some(extract(&fp.device, &full, &fp.regions[0]).unwrap());
+    }
+    let partial = partial.unwrap();
+    let bytes = partial.config_bytes();
+    println!(
+        "extract:   {:.2} GB/s ({} KiB partial, {iters} iters, {:?})",
+        rate(bytes, iters, t0.elapsed()),
+        bytes / 1024,
+        t0.elapsed()
+    );
+
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        let moved = relocate(&fp.device, &partial, &fp.regions[0], &fp.regions[2]).unwrap();
+        std::hint::black_box(&moved);
+    }
+    let reloc_rate = rate(bytes, iters, t0.elapsed());
+    println!("relocate:  {reloc_rate:.2} GB/s");
+
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        let mut cfg = full.clone();
+        merge(&mut cfg, &partial).unwrap();
+        std::hint::black_box(&cfg);
+    }
+    println!("merge:     {:.2} GB/s (incl. full-image clone)", rate(full.config_bytes(), iters, t0.elapsed()));
+
+    let t0 = Instant::now();
+    let mut blob = Vec::new();
+    for _ in 0..iters {
+        blob = partial.to_bytes();
+    }
+    println!("serialise: {:.2} GB/s", rate(blob.len(), iters, t0.elapsed()));
+
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        let b = Bitstream::from_bytes(&blob).unwrap();
+        std::hint::black_box(&b);
+    }
+    println!("parse+crc: {:.2} GB/s", rate(blob.len(), iters, t0.elapsed()));
+
+    assert!(reloc_rate > 1.0, "relocation below the 1 GB/s target: {reloc_rate:.2}");
+}

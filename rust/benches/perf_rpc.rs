@@ -1,0 +1,67 @@
+//! §Perf microbench: daemon RPC path — ping RTT, bulk write throughput
+//! (base64-over-socket vs shared memory), and request dispatch rate.
+//! Target: RTT ≤ 1 ms (paper: 0.71 ms gRPC call).
+
+use fos::accel::Catalog;
+use fos::daemon::{Daemon, FpgaRpc, Job, SharedMem};
+use fos::metrics::LatencyStats;
+use fos::shell::ShellBoard;
+use std::time::Instant;
+
+fn main() {
+    let socket = std::env::temp_dir().join(format!("fos_perf_rpc_{}.sock", std::process::id()));
+    let catalog = Catalog::load_default().expect("run `make artifacts`");
+    let _daemon = Daemon::start(&socket, ShellBoard::Ultra96, catalog).unwrap();
+    let mut rpc = FpgaRpc::connect(&socket).unwrap();
+
+    // Ping RTT.
+    let mut pings = LatencyStats::new();
+    for _ in 0..500 {
+        pings.record(rpc.ping().unwrap());
+    }
+    println!("{}", pings.summary("ping RTT"));
+    assert!(pings.mean_us() < 1000.0, "RTT above 1 ms target");
+
+    // Bulk data: socket (base64) vs shared memory.
+    let n = 65536; // 256 KiB
+    let data: Vec<f32> = (0..n).map(|i| i as f32).collect();
+    let addr = rpc.alloc(4 * n).unwrap();
+    let t0 = Instant::now();
+    let iters = 20;
+    for _ in 0..iters {
+        rpc.write_f32(addr, &data).unwrap();
+    }
+    let sock_mbps = (4 * n * iters) as f64 / t0.elapsed().as_secs_f64() / 1e6;
+    println!("socket write (base64): {sock_mbps:.0} MB/s");
+
+    let shm_path = std::env::temp_dir().join(format!("fos_perf_shm_{}.bin", std::process::id()));
+    let mut shm = SharedMem::create(&shm_path, 4 * n).unwrap();
+    shm.write_f32(0, &data).unwrap();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        rpc.import_shm(&shm.path, 0, n, addr).unwrap();
+    }
+    let shm_mbps = (4 * n * iters) as f64 / t0.elapsed().as_secs_f64() / 1e6;
+    println!("shm import (zero-copy socket): {shm_mbps:.0} MB/s ({:.1}x faster)", shm_mbps / sock_mbps);
+
+    // Dispatch rate with real compute (vadd).
+    let a = rpc.alloc(4 * 4096).unwrap();
+    let b = rpc.alloc(4 * 4096).unwrap();
+    let c = rpc.alloc(4 * 4096).unwrap();
+    rpc.write_f32(a, &vec![1.0; 4096]).unwrap();
+    rpc.write_f32(b, &vec![2.0; 4096]).unwrap();
+    let jobs: Vec<Job> = (0..100)
+        .map(|_| Job {
+            accname: "vadd".into(),
+            params: vec![("a_op".into(), a), ("b_op".into(), b), ("c_out".into(), c)],
+        })
+        .collect();
+    let t0 = Instant::now();
+    let report = rpc.run(&jobs).unwrap();
+    let el = t0.elapsed();
+    println!(
+        "100 vadd requests (real PJRT compute): {el:?} -> {:.0} req/s, daemon-side mean {:.0} us",
+        100.0 / el.as_secs_f64(),
+        report.latencies_us.iter().sum::<f64>() / report.latencies_us.len() as f64
+    );
+}

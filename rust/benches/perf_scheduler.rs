@@ -1,0 +1,43 @@
+//! §Perf microbench: scheduler decision throughput and DES engine rate.
+//! Target: decision cost ≤ 20 µs (paper Table 4: 0.02 ms scheduler).
+
+use fos::accel::Catalog;
+use fos::sched::{simulate, JobSpec, Policy, SimConfig, Workload};
+use fos::shell::ShellBoard;
+use std::time::Instant;
+
+fn main() {
+    let catalog = Catalog::load_default().expect("run `make artifacts`");
+    // A heavy mixed workload: 8 users x 64 requests.
+    let mut w = Workload::new();
+    let accels = ["vadd", "mm", "fir", "histogram", "dct", "sobel", "mandelbrot", "black_scholes"];
+    for (u, accel) in accels.iter().enumerate() {
+        for j in JobSpec::frame(u, accel, (u as u64) * 100_000, 64, 64) {
+            w.push(j);
+        }
+    }
+    let total_requests = w.total_requests();
+
+    for policy in [Policy::Elastic, Policy::Fixed] {
+        let t0 = Instant::now();
+        let iters = 20;
+        let mut makespan = 0;
+        for _ in 0..iters {
+            let r = simulate(&catalog, &w, &SimConfig::new(ShellBoard::Zcu102, policy));
+            makespan = r.makespan;
+        }
+        let el = t0.elapsed();
+        let per_req = el.as_secs_f64() / (iters * total_requests) as f64;
+        println!(
+            "{policy:?}: {} requests simulated {iters}x in {el:?} -> {:.2} us per scheduled request (virtual makespan {:.1} ms)",
+            total_requests,
+            per_req * 1e6,
+            makespan as f64 / 1e6
+        );
+        assert!(
+            per_req * 1e6 < 20.0,
+            "scheduling cost {:.2} us exceeds the 20 us target",
+            per_req * 1e6
+        );
+    }
+}

@@ -1,0 +1,64 @@
+//! Table 1: resources available for acceleration on ZCU102 and
+//! Ultra96/UltraZed. Regenerates the paper's rows from the shell
+//! builder's floorplan accounting.
+
+use fos::metrics::Table;
+use fos::shell::{Shell, ShellBoard};
+
+fn main() {
+    // Paper values for the comparison columns.
+    let paper_zcu = [
+        ("CLB LUTs", 32640, 11.70, 46.80),
+        ("CLB Regs.", 65280, 11.90, 47.60),
+        ("BRAMs", 108, 12.10, 48.40),
+        ("DSPs", 336, 13.30, 53.20),
+    ];
+    let paper_u96: [(&str, usize, f64, f64); 1] = [("CLB LUTs", 17760, 25.17, 75.51)];
+
+    for (board, paper) in [
+        (ShellBoard::Zcu102, &paper_zcu[..]),
+        (ShellBoard::Ultra96, &paper_u96[..]),
+        (ShellBoard::UltraZed, &paper_u96[..]),
+    ] {
+        let shell = Shell::build(board);
+        let t1 = shell.table1();
+        let measured = [
+            ("CLB LUTs", t1.region.luts, t1.per_region_pct[0], t1.total_pct[0]),
+            ("CLB Regs.", t1.region.ffs, t1.per_region_pct[1], t1.total_pct[1]),
+            ("BRAMs", t1.region.brams, t1.per_region_pct[2], t1.total_pct[2]),
+            ("DSPs", t1.region.dsps, t1.per_region_pct[3], t1.total_pct[3]),
+        ];
+        let mut t = Table::new(
+            format!(
+                "Table 1 — {} ({} PR regions)",
+                shell.board.name(),
+                shell.region_count()
+            ),
+            &[
+                "resource",
+                "per region (paper)",
+                "chip % / region (paper)",
+                "chip % total (paper)",
+            ],
+        );
+        for row in measured {
+            let p = paper.iter().find(|p| p.0 == row.0);
+            let fmt = |m: String, pp: Option<String>| match pp {
+                Some(pp) => format!("{m} ({pp})"),
+                None => format!("{m} (-)"),
+            };
+            t.row(&[
+                row.0.to_string(),
+                fmt(row.1.to_string(), p.map(|p| p.1.to_string())),
+                fmt(format!("{:.2}", row.2), p.map(|p| format!("{:.2}", p.2))),
+                fmt(format!("{:.2}", row.3), p.map(|p| format!("{:.2}", p.3))),
+            ]);
+        }
+        t.print();
+        let stat = shell.floorplan.static_resources();
+        println!(
+            "static shell remainder: {} LUTs / {} FFs / {} BRAMs / {} DSPs",
+            stat.luts, stat.ffs, stat.brams, stat.dsps
+        );
+    }
+}

@@ -1,0 +1,70 @@
+//! Table 3: P&R + bitgen latency, Xilinx PR flow vs FOS decoupled flow,
+//! for the three module densities, compiling for all 3 Ultra96 regions.
+//! Also demonstrates FOS's flat scaling vs Xilinx's linear scaling in
+//! the number of regions.
+
+use fos::fabric::{Device, DeviceKind, Floorplan, Resources};
+use fos::metrics::Table;
+use fos::pnr::{compile_fos, compile_xilinx_pr, CostModel, Netlist};
+
+fn workload(name: &str, util: f64) -> Netlist {
+    Netlist::synthesize(
+        name,
+        &Resources {
+            luts: (17760.0 * util) as usize,
+            ffs: (35520.0 * util * 0.9) as usize,
+            brams: (72.0 * util * 0.4) as usize,
+            dsps: (120.0 * util * 0.3) as usize,
+        },
+    )
+}
+
+fn main() {
+    let fp = Floorplan::standard(Device::new(DeviceKind::Zu3eg));
+    let model = CostModel::default();
+    // (name, util, paper: xil P&R, xil bitgen, fos P&R, fos bitgen, speedup)
+    let rows = [
+        ("AES", 0.33, 429.40, 176.19, 284.18, 64.06, 1.74),
+        ("Normal Est.", 0.63, 747.75, 201.21, 387.41, 70.09, 2.07),
+        ("Black Scholes", 0.81, 1296.26, 231.27, 574.56, 77.11, 2.34),
+    ];
+    let mut t = Table::new(
+        "Table 3 — compile-for-3-regions latency, measured (paper), seconds",
+        &["module", "util", "Xilinx P&R", "Xilinx bitgen", "FOS P&R", "FOS bitgen", "speedup"],
+    );
+    for (name, util, px, pxb, pf, pfb, psp) in rows {
+        let nl = workload(name, util);
+        let xil = compile_xilinx_pr(&fp, &nl, &model).unwrap();
+        let fos = compile_fos(&fp, &nl, &model).unwrap();
+        let speedup = xil.total_seconds() / fos.total_seconds();
+        t.row(&[
+            name.into(),
+            format!("{:.0}%", util * 100.0),
+            format!("{:.1} ({px})", xil.pnr_seconds),
+            format!("{:.1} ({pxb})", xil.bitgen_seconds),
+            format!("{:.1} ({pf})", fos.pnr_seconds),
+            format!("{:.1} ({pfb})", fos.bitgen_seconds),
+            format!("{speedup:.2}x ({psp}x)"),
+        ]);
+    }
+    t.print();
+
+    // Scaling in region count: FOS flat, Xilinx linear.
+    let nl = workload("AES", 0.33);
+    let mut t2 = Table::new(
+        "compile latency vs number of PR regions (AES)",
+        &["regions", "Xilinx total (s)", "FOS total (s)"],
+    );
+    for n in 1..=3 {
+        let mut fpn = Floorplan::standard(Device::new(DeviceKind::Zu3eg));
+        fpn.regions.truncate(n);
+        let xil = compile_xilinx_pr(&fpn, &nl, &model).unwrap();
+        let fos = compile_fos(&fpn, &nl, &model).unwrap();
+        t2.row(&[
+            n.to_string(),
+            format!("{:.1}", xil.total_seconds()),
+            format!("{:.1}", fos.total_seconds()),
+        ]);
+    }
+    t2.print();
+}

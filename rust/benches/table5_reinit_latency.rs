@@ -1,0 +1,63 @@
+//! Table 5: re-initialisation latencies for component updates on both
+//! boards — partial/full reconfiguration modelled through the PCAP
+//! model, runtime restart measured for real.
+
+use fos::accel::Catalog;
+use fos::bitstream::{extract, synth_full};
+use fos::daemon::Daemon;
+use fos::fabric::{Device, DeviceKind, Floorplan};
+use fos::metrics::Table;
+use fos::reconfig::{FpgaManager, KERNEL_REBOOT_U96, KERNEL_REBOOT_ZCU102};
+use fos::shell::ShellBoard;
+use std::time::Instant;
+
+fn accel_and_shell_ms(kind: DeviceKind) -> (f64, f64) {
+    let fp = Floorplan::standard(Device::new(kind));
+    let full = synth_full(&fp.device, 3);
+    let partial = extract(&fp.device, &full, &fp.regions[0]).unwrap();
+    let accel = FpgaManager::latency_for(partial.config_bytes(), true);
+    let shell = FpgaManager::latency_for(full.config_bytes(), false);
+    (accel.as_secs_f64() * 1e3, shell.as_secs_f64() * 1e3)
+}
+
+fn main() {
+    let (u96_a, u96_s) = accel_and_shell_ms(DeviceKind::Zu3eg);
+    let (zcu_a, zcu_s) = accel_and_shell_ms(DeviceKind::Zu9eg);
+
+    // Runtime restart: really restart the daemon and measure.
+    let socket = std::env::temp_dir().join(format!("fos_t5_{}.sock", std::process::id()));
+    let catalog = Catalog::load_default().expect("run `make artifacts`");
+    let mut daemon = Daemon::start(&socket, ShellBoard::Ultra96, catalog.clone()).unwrap();
+    let t0 = Instant::now();
+    daemon.shutdown();
+    drop(daemon);
+    let _daemon = Daemon::start(&socket, ShellBoard::Ultra96, catalog).unwrap();
+    let runtime_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    let mut t = Table::new(
+        "Table 5 — component re-initialisation latency, measured (paper), ms",
+        &["component updated", "Ultra96", "ZCU102"],
+    );
+    t.row(&[
+        "Accelerator".into(),
+        format!("{u96_a:.2} (3.81)"),
+        format!("{zcu_a:.2} (6.77)"),
+    ]);
+    t.row(&[
+        "Shell".into(),
+        format!("{u96_s:.2} (20.74)"),
+        format!("{zcu_s:.2} (98.4)"),
+    ]);
+    t.row(&[
+        "Runtime".into(),
+        format!("{runtime_ms:.1} (15.2)"),
+        format!("{runtime_ms:.1} (15.2)"),
+    ]);
+    t.row(&[
+        "Kernel (reboot)".into(),
+        format!("{:.0} (66000)", KERNEL_REBOOT_U96.as_secs_f64() * 1e3),
+        format!("{:.0} (15760)", KERNEL_REBOOT_ZCU102.as_secs_f64() * 1e3),
+    ]);
+    t.print();
+    println!("runtime restart is a REAL daemon stop+start (incl. shell reload + PJRT bring-up).");
+}

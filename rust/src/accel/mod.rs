@@ -1,0 +1,285 @@
+//! The accelerator catalog: typed view of `artifacts/manifest.json`.
+//!
+//! The manifest is the contract between the python AOT pipeline (L2/L1)
+//! and this runtime: every accelerator's I/O shapes, Listing-2/3
+//! register map, per-variant HLO artifact, netlist footprint and 100 MHz
+//! cycle model. The catalog is the single source the registry, drivers,
+//! scheduler and PJRT executor all read.
+
+use crate::fabric::Resources;
+use crate::json::{parse, Value};
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn bytes(&self) -> usize {
+        4 * self.elements() // all artifacts are f32 (DESIGN.md)
+    }
+}
+
+/// One implementation alternative (resource-elastic variant, §4.4.2).
+#[derive(Debug, Clone)]
+pub struct Variant {
+    pub name: String,
+    pub hlo_file: String,
+    /// Adjacent PR regions this variant occupies when loaded.
+    pub regions: usize,
+    /// Modelled cycles per work item at `clock_hz`.
+    pub cycles_per_item: u64,
+    pub clock_hz: u64,
+    pub netlist: Resources,
+}
+
+impl Variant {
+    /// Modelled pure-compute time for one work item (ns).
+    pub fn compute_ns(&self) -> f64 {
+        self.cycles_per_item as f64 * 1e9 / self.clock_hz as f64
+    }
+}
+
+/// Listing-2/3 register map entry.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Register {
+    pub name: String,
+    pub offset: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Accelerator {
+    pub name: String,
+    /// Source language — the paper's heterogeneity axis (C / OpenCL / RTL).
+    pub lang: String,
+    pub suite: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub bytes_in: usize,
+    pub bytes_out: usize,
+    pub registers: Vec<Register>,
+    /// Sorted by `regions` ascending; the last is the "biggest
+    /// (Pareto-optimal, assumed fastest)" implementation (§4.4.3).
+    pub variants: Vec<Variant>,
+}
+
+impl Accelerator {
+    pub fn variant(&self, name: &str) -> Option<&Variant> {
+        self.variants.iter().find(|v| v.name == name)
+    }
+
+    /// Largest variant that fits in `regions` adjacent free slots.
+    pub fn best_variant_for(&self, regions: usize) -> Option<&Variant> {
+        self.variants.iter().rev().find(|v| v.regions <= regions)
+    }
+
+    pub fn smallest_variant(&self) -> &Variant {
+        &self.variants[0]
+    }
+}
+
+#[derive(Debug)]
+pub enum CatalogError {
+    Io(std::io::Error),
+    Json(String),
+    Schema(String),
+}
+
+impl fmt::Display for CatalogError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CatalogError::Io(e) => write!(f, "catalog io: {e}"),
+            CatalogError::Json(e) => write!(f, "catalog json: {e}"),
+            CatalogError::Schema(e) => write!(f, "catalog schema: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for CatalogError {}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Catalog {
+    pub dir: PathBuf,
+    pub clock_hz: u64,
+    pub accelerators: Vec<Accelerator>,
+}
+
+impl Catalog {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Catalog, CatalogError> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .map_err(CatalogError::Io)?;
+        Self::from_json_text(&text, dir)
+    }
+
+    /// Load from the workspace's default artifacts dir.
+    pub fn load_default() -> Result<Catalog, CatalogError> {
+        Self::load(crate::artifacts_dir())
+    }
+
+    pub fn from_json_text(text: &str, dir: PathBuf) -> Result<Catalog, CatalogError> {
+        let v = parse(text).map_err(|e| CatalogError::Json(e.to_string()))?;
+        let clock_hz = v
+            .req_u64("clock_hz")
+            .map_err(CatalogError::Schema)?;
+        let mut accelerators = Vec::new();
+        for a in v.req_array("accelerators").map_err(CatalogError::Schema)? {
+            accelerators.push(parse_accel(a, clock_hz).map_err(CatalogError::Schema)?);
+        }
+        accelerators.sort_by(|a, b| a.name.cmp(&b.name));
+        Ok(Catalog { dir, clock_hz, accelerators })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Accelerator> {
+        self.accelerators.iter().find(|a| a.name == name)
+    }
+
+    pub fn hlo_path(&self, variant: &Variant) -> PathBuf {
+        self.dir.join(&variant.hlo_file)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.accelerators.iter().map(|a| a.name.as_str()).collect()
+    }
+}
+
+fn tensor_specs(v: &Value, key: &str) -> Result<Vec<TensorSpec>, String> {
+    v.req_array(key)?
+        .iter()
+        .map(|t| {
+            Ok(TensorSpec {
+                shape: t
+                    .req_array("shape")?
+                    .iter()
+                    .map(|d| d.as_u64().ok_or("bad dim".to_string()).map(|x| x as usize))
+                    .collect::<Result<_, _>>()?,
+                dtype: t.req_str("dtype")?.to_string(),
+            })
+        })
+        .collect()
+}
+
+fn parse_accel(a: &Value, default_clock: u64) -> Result<Accelerator, String> {
+    let name = a.req_str("name")?.to_string();
+    let registers = a
+        .req_array("registers")?
+        .iter()
+        .map(|r| {
+            Ok(Register {
+                name: r.req_str("name")?.to_string(),
+                offset: r.req_u64("offset")?,
+            })
+        })
+        .collect::<Result<Vec<_>, String>>()?;
+    let mut variants = a
+        .req_array("variants")?
+        .iter()
+        .map(|v| {
+            let nl = v.get("netlist");
+            Ok(Variant {
+                name: v.req_str("name")?.to_string(),
+                hlo_file: v.req_str("hlo")?.to_string(),
+                regions: v.req_u64("regions")? as usize,
+                cycles_per_item: v.req_u64("cycles_per_item")?,
+                clock_hz: v.get("clock_hz").as_u64().unwrap_or(default_clock),
+                netlist: Resources {
+                    luts: nl.req_u64("luts")? as usize,
+                    ffs: nl.req_u64("ffs")? as usize,
+                    brams: nl.req_u64("brams")? as usize,
+                    dsps: nl.req_u64("dsps")? as usize,
+                },
+            })
+        })
+        .collect::<Result<Vec<Variant>, String>>()?;
+    if variants.is_empty() {
+        return Err(format!("accelerator {name} has no variants"));
+    }
+    variants.sort_by_key(|v| v.regions);
+    Ok(Accelerator {
+        name,
+        lang: a.req_str("lang")?.to_string(),
+        suite: a.req_str("suite")?.to_string(),
+        inputs: tensor_specs(a, "inputs")?,
+        outputs: tensor_specs(a, "outputs")?,
+        bytes_in: a.req_u64("bytes_in")? as usize,
+        bytes_out: a.req_u64("bytes_out")? as usize,
+        registers,
+        variants,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_built_manifest() {
+        let c = Catalog::load_default().expect("run `make artifacts` first");
+        assert_eq!(c.clock_hz, 100_000_000);
+        assert_eq!(c.accelerators.len(), 10);
+        let sobel = c.get("sobel").unwrap();
+        assert_eq!(sobel.lang, "opencl");
+        assert_eq!(sobel.inputs[0].shape, vec![128, 128]);
+        assert_eq!(sobel.bytes_in, 128 * 128 * 4);
+        assert_eq!(sobel.registers[0], Register { name: "control".into(), offset: 0 });
+        assert_eq!(sobel.variants.len(), 2);
+        assert!(sobel.variants[0].regions < sobel.variants[1].regions);
+        // Bigger variant is faster (Pareto assumption, §4.4.3).
+        assert!(sobel.variants[1].cycles_per_item < sobel.variants[0].cycles_per_item);
+        // HLO artifacts exist on disk.
+        for a in &c.accelerators {
+            for v in &a.variants {
+                assert!(c.hlo_path(v).exists(), "{}", v.hlo_file);
+            }
+        }
+    }
+
+    #[test]
+    fn best_variant_selection() {
+        let c = Catalog::load_default().unwrap();
+        let dct = c.get("dct").unwrap();
+        assert_eq!(dct.best_variant_for(1).unwrap().regions, 1);
+        assert_eq!(dct.best_variant_for(2).unwrap().regions, 2);
+        assert_eq!(dct.best_variant_for(3).unwrap().regions, 2);
+        assert!(dct.best_variant_for(0).is_none());
+        // AES is RTL-only: a single 1-region implementation.
+        let aes = c.get("aes").unwrap();
+        assert_eq!(aes.lang, "rtl");
+        assert_eq!(aes.variants.len(), 1);
+    }
+
+    #[test]
+    fn variant_compute_ns() {
+        let c = Catalog::load_default().unwrap();
+        let mandel = c.get("mandelbrot").unwrap();
+        // 262144 cycles @ 100 MHz = 2.62144 ms.
+        assert!((mandel.variants[0].compute_ns() - 2_621_440.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn schema_errors_are_reported() {
+        let bad = r#"{"clock_hz": 1, "accelerators": [{"name": "x"}]}"#;
+        let err = Catalog::from_json_text(bad, ".".into()).unwrap_err();
+        assert!(matches!(err, CatalogError::Schema(_)));
+        let notjson = Catalog::from_json_text("{", ".".into()).unwrap_err();
+        assert!(matches!(notjson, CatalogError::Json(_)));
+    }
+
+    #[test]
+    fn dct_superlinear_in_manifest() {
+        let c = Catalog::load_default().unwrap();
+        let dct = c.get("dct").unwrap();
+        let speedup = dct.variants[0].cycles_per_item as f64
+            / dct.variants[1].cycles_per_item as f64;
+        assert!((speedup - 3.55).abs() < 0.1, "{speedup}");
+    }
+}

@@ -1,0 +1,327 @@
+//! BitMan-analog operations: extract / relocate / blank / merge.
+
+use super::format::{Bitstream, Frame, FrameAddr};
+use crate::fabric::{Device, PrRegion, CLOCK_REGION_ROWS};
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum BitmanError {
+    /// Source/target footprints differ — relocation would misconfigure.
+    FootprintMismatch { from: String, to: String },
+    /// Region is not clock-region aligned.
+    NotAligned(String),
+    /// The full bitstream is missing frames the region should contain.
+    MissingFrames { region: String, missing: usize },
+    /// Device names disagree.
+    DeviceMismatch { a: String, b: String },
+    /// Merging a partial marked as full (or vice versa).
+    KindMismatch,
+}
+
+impl fmt::Display for BitmanError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            BitmanError::FootprintMismatch { from, to } => {
+                write!(f, "footprints of {from} and {to} differ")
+            }
+            BitmanError::NotAligned(r) => write!(f, "region {r} not clock-aligned"),
+            BitmanError::MissingFrames { region, missing } => {
+                write!(f, "{missing} frames missing for region {region}")
+            }
+            BitmanError::DeviceMismatch { a, b } => write!(f, "device {a} != {b}"),
+            BitmanError::KindMismatch => write!(f, "full/partial kind mismatch"),
+        }
+    }
+}
+
+impl std::error::Error for BitmanError {}
+
+/// Frame addresses covered by a PR region on a device.
+pub fn region_frames(device: &Device, region: &PrRegion) -> Vec<FrameAddr> {
+    let cr0 = (region.bbox.r0 / CLOCK_REGION_ROWS) as u32;
+    let cr1 = (region.bbox.r1 / CLOCK_REGION_ROWS) as u32;
+    let mut out = Vec::new();
+    for cr in cr0..cr1 {
+        for col in region.bbox.c0..region.bbox.c1 {
+            let kind = device.columns[col];
+            for minor in 0..kind.frames_per_region() as u32 {
+                out.push(FrameAddr { clock_region: cr, column: col as u32, minor });
+            }
+        }
+    }
+    out
+}
+
+/// Extract the partial bitstream for `region` out of a full-device
+/// bitstream (the FOS flow's post-Vivado step).
+pub fn extract(
+    device: &Device,
+    full: &Bitstream,
+    region: &PrRegion,
+) -> Result<Bitstream, BitmanError> {
+    if !region.is_clock_aligned() {
+        return Err(BitmanError::NotAligned(region.name.clone()));
+    }
+    if full.device != device.kind.name() {
+        return Err(BitmanError::DeviceMismatch {
+            a: full.device.clone(),
+            b: device.kind.name().to_string(),
+        });
+    }
+    let mut partial = Bitstream::new(full.device.clone(), true);
+    let mut missing = 0usize;
+    for addr in region_frames(device, region) {
+        match full.frames.get(&addr) {
+            Some(words) => partial.insert(Frame::new(addr, words.clone())),
+            None => missing += 1,
+        }
+    }
+    if missing > 0 {
+        return Err(BitmanError::MissingFrames { region: region.name.clone(), missing });
+    }
+    Ok(partial)
+}
+
+/// Relocate a partial bitstream from one region to another by rewriting
+/// the clock-region field of every frame address. Legal only when the
+/// footprints (column kinds + spans) are identical.
+pub fn relocate(
+    device: &Device,
+    partial: &Bitstream,
+    from: &PrRegion,
+    to: &PrRegion,
+) -> Result<Bitstream, BitmanError> {
+    if from.footprint(device) != to.footprint(device)
+        || from.bbox.rows() != to.bbox.rows()
+        || from.tunnel_rows != to.tunnel_rows
+    {
+        return Err(BitmanError::FootprintMismatch {
+            from: from.name.clone(),
+            to: to.name.clone(),
+        });
+    }
+    if !from.is_clock_aligned() || !to.is_clock_aligned() {
+        return Err(BitmanError::NotAligned(from.name.clone()));
+    }
+    let cr_from = (from.bbox.r0 / CLOCK_REGION_ROWS) as i64;
+    let cr_to = (to.bbox.r0 / CLOCK_REGION_ROWS) as i64;
+    let col_delta = to.bbox.c0 as i64 - from.bbox.c0 as i64;
+    let mut out = Bitstream::new(partial.device.clone(), true);
+    for (addr, words) in &partial.frames {
+        let new_addr = FrameAddr {
+            clock_region: (addr.clock_region as i64 - cr_from + cr_to) as u32,
+            column: (addr.column as i64 + col_delta) as u32,
+            minor: addr.minor,
+        };
+        out.insert(Frame::new(new_addr, words.clone()));
+    }
+    Ok(out)
+}
+
+/// Blanking bitstream: zero frames for a region (the shell descriptor's
+/// per-region `blank` file, Listing 1).
+pub fn blank(device: &Device, region: &PrRegion) -> Bitstream {
+    let mut bs = Bitstream::new(device.kind.name(), true);
+    for addr in region_frames(device, region) {
+        bs.insert(Frame::zeroed(addr));
+    }
+    bs
+}
+
+/// Merge a partial bitstream into a full configuration image (what the
+/// configuration port does on partial reconfiguration).
+pub fn merge(full: &mut Bitstream, partial: &Bitstream) -> Result<usize, BitmanError> {
+    if full.partial || !partial.partial {
+        return Err(BitmanError::KindMismatch);
+    }
+    if full.device != partial.device {
+        return Err(BitmanError::DeviceMismatch {
+            a: full.device.clone(),
+            b: partial.device.clone(),
+        });
+    }
+    for (addr, words) in &partial.frames {
+        full.frames.insert(*addr, words.clone());
+    }
+    Ok(partial.frames.len())
+}
+
+/// Deterministic pseudo-content full-device bitstream for a design id —
+/// what "Vivado writes a full static bitstream" reduces to in the
+/// simulation. Same (device, design) always produces identical frames, so
+/// extraction / relocation / merge are testable end-to-end.
+pub fn synth_full(device: &Device, design: u64) -> Bitstream {
+    use super::format::FRAME_WORDS;
+    let mut bs = Bitstream::new(device.kind.name(), false);
+    for cr in 0..device.clock_regions() as u32 {
+        for (col, kind) in device.columns.iter().enumerate() {
+            for minor in 0..kind.frames_per_region() as u32 {
+                let addr = FrameAddr { clock_region: cr, column: col as u32, minor };
+                let seed = design
+                    ^ ((cr as u64) << 40)
+                    ^ ((col as u64) << 20)
+                    ^ minor as u64;
+                let words = (0..FRAME_WORDS as u64)
+                    .map(|w| {
+                        let mut x = seed.wrapping_add(w.wrapping_mul(0x9E3779B97F4A7C15));
+                        x ^= x >> 30;
+                        x = x.wrapping_mul(0xBF58476D1CE4E5B9);
+                        (x >> 16) as u32
+                    })
+                    .collect();
+                bs.insert(Frame::new(addr, words));
+            }
+        }
+    }
+    bs
+}
+
+/// Directly synthesise the partial bitstream a design would occupy in
+/// `region` — identical frames to `extract(synth_full(..), region)` but
+/// without materialising the other ~75% of the device. This is the
+/// request-path variant (the scheduler loads modules with it); the
+/// full-device version remains for shell builds. See EXPERIMENTS.md
+/// §Perf for the measured effect on scheduling-decision latency.
+pub fn synth_partial(device: &Device, region: &PrRegion, design: u64) -> Bitstream {
+    use super::format::FRAME_WORDS;
+    let mut bs = Bitstream::new(device.kind.name(), true);
+    for addr in region_frames(device, region) {
+        let seed = design
+            ^ ((addr.clock_region as u64) << 40)
+            ^ ((addr.column as u64) << 20)
+            ^ addr.minor as u64;
+        let words = (0..FRAME_WORDS as u64)
+            .map(|w| {
+                let mut x = seed.wrapping_add(w.wrapping_mul(0x9E3779B97F4A7C15));
+                x ^= x >> 30;
+                x = x.wrapping_mul(0xBF58476D1CE4E5B9);
+                (x >> 16) as u32
+            })
+            .collect();
+        bs.insert(Frame::new(addr, words));
+    }
+    bs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::{DeviceKind, Floorplan};
+
+    #[test]
+    fn synth_partial_equals_extract_of_synth_full() {
+        let fp = Floorplan::standard(Device::new(DeviceKind::Zu3eg));
+        let full = synth_full(&fp.device, 1234);
+        for region in &fp.regions {
+            let via_full = extract(&fp.device, &full, region).unwrap();
+            let direct = synth_partial(&fp.device, region, 1234);
+            assert_eq!(direct, via_full);
+        }
+    }
+
+    fn setup() -> (Floorplan, Bitstream) {
+        let fp = Floorplan::standard(Device::new(DeviceKind::Zu3eg));
+        let full = synth_full(&fp.device, 42);
+        (fp, full)
+    }
+
+    #[test]
+    fn extract_covers_exact_frame_set() {
+        let (fp, full) = setup();
+        let p = extract(&fp.device, &full, &fp.regions[0]).unwrap();
+        assert!(p.partial);
+        assert_eq!(p.frame_count(), region_frames(&fp.device, &fp.regions[0]).len());
+        // Every extracted frame matches the source content.
+        for (addr, words) in &p.frames {
+            assert_eq!(full.frames.get(addr), Some(words));
+        }
+    }
+
+    #[test]
+    fn relocate_roundtrip_preserves_content() {
+        let (fp, full) = setup();
+        let p0 = extract(&fp.device, &full, &fp.regions[0]).unwrap();
+        let p2 = relocate(&fp.device, &p0, &fp.regions[0], &fp.regions[2]).unwrap();
+        assert_eq!(p2.frame_count(), p0.frame_count());
+        // Addresses moved by exactly 2 clock regions; content unchanged.
+        for (addr, words) in &p0.frames {
+            let moved = FrameAddr { clock_region: addr.clock_region + 2, ..*addr };
+            assert_eq!(p2.frames.get(&moved), Some(words));
+        }
+        // And relocating back is the identity.
+        let back = relocate(&fp.device, &p2, &fp.regions[2], &fp.regions[0]).unwrap();
+        assert_eq!(back, p0);
+    }
+
+    #[test]
+    fn relocate_rejects_footprint_mismatch() {
+        let (fp, full) = setup();
+        let p0 = extract(&fp.device, &full, &fp.regions[0]).unwrap();
+        let mut bad = fp.regions[1].clone();
+        bad.bbox.c1 -= 1; // narrower region
+        assert!(matches!(
+            relocate(&fp.device, &p0, &fp.regions[0], &bad),
+            Err(BitmanError::FootprintMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn merge_applies_partial() {
+        let (fp, full) = setup();
+        let other = synth_full(&fp.device, 77);
+        let p = extract(&fp.device, &other, &fp.regions[1]).unwrap();
+        let mut merged = full.clone();
+        let n = merge(&mut merged, &p).unwrap();
+        assert_eq!(n, p.frame_count());
+        // Region-1 frames now from design 77; everything else untouched.
+        for (addr, words) in &merged.frames {
+            let in_region = p.frames.contains_key(addr);
+            if in_region {
+                assert_eq!(words, p.frames.get(addr).unwrap());
+            } else {
+                assert_eq!(words, full.frames.get(addr).unwrap());
+            }
+        }
+    }
+
+    #[test]
+    fn merge_kind_checks() {
+        let (fp, full) = setup();
+        let p = extract(&fp.device, &full, &fp.regions[0]).unwrap();
+        let mut as_partial = p.clone();
+        assert!(matches!(merge(&mut as_partial, &p), Err(BitmanError::KindMismatch)));
+        let mut f = full.clone();
+        let mut fake_full = full.clone();
+        fake_full.partial = false;
+        assert!(matches!(merge(&mut f, &fake_full), Err(BitmanError::KindMismatch)));
+    }
+
+    #[test]
+    fn blank_zeroes_region() {
+        let (fp, _) = setup();
+        let b = blank(&fp.device, &fp.regions[0]);
+        assert!(b.frames.values().all(|w| w.iter().all(|&x| x == 0)));
+        assert_eq!(b.frame_count(), region_frames(&fp.device, &fp.regions[0]).len());
+    }
+
+    #[test]
+    fn combined_region_extract() {
+        // Combining two adjacent slots (§4.1): a bigger module's region.
+        let (fp, full) = setup();
+        let combined = PrRegion {
+            name: "pr0+1".into(),
+            bbox: crate::fabric::Rect {
+                c0: fp.regions[0].bbox.c0,
+                c1: fp.regions[0].bbox.c1,
+                r0: fp.regions[0].bbox.r0,
+                r1: fp.regions[1].bbox.r1,
+            },
+            tunnel_rows: fp.regions[0].tunnel_rows.clone(),
+        };
+        let p = extract(&fp.device, &full, &combined).unwrap();
+        assert_eq!(
+            p.frame_count(),
+            2 * region_frames(&fp.device, &fp.regions[0]).len()
+        );
+    }
+}

@@ -1,0 +1,24 @@
+//! Synthetic configuration bitstreams + the BitMan analog (§4.1.3).
+//!
+//! The real FOS extracts a module's configuration frames out of the
+//! *full* bitstream Vivado emits for the isolated module compile, then
+//! relocates those frames to whichever PR region the scheduler picks at
+//! run time (BitMan [31]). We model the UltraScale+ configuration
+//! mechanics that make this sound:
+//!
+//! - configuration is **frame-addressed**: a frame is the column segment
+//!   of one clock region (`(clock_region, column, minor)`), the atomic
+//!   unit of reconfiguration;
+//! - a partial bitstream is a set of frames covering a clock-aligned
+//!   bbox;
+//! - relocation rewrites the clock-region field of every frame address —
+//!   legal iff the source and target footprints are identical, which is
+//!   exactly what `fabric::Floorplan::check` guarantees.
+
+mod format;
+mod bitman;
+
+pub use bitman::{
+    blank, extract, merge, region_frames, relocate, synth_full, synth_partial, BitmanError,
+};
+pub use format::{Bitstream, Frame, FrameAddr, FormatError, FRAME_WORDS};

@@ -1,0 +1,171 @@
+//! FpgaRpc — the client side of the daemon API (Listings 4–5).
+//!
+//! ```no_run
+//! use fos::daemon::{FpgaRpc, Job};
+//! let mut rpc = FpgaRpc::connect("/tmp/fos.sock").unwrap();
+//! let a = rpc.alloc(4 * 4096).unwrap();
+//! let b = rpc.alloc(4 * 4096).unwrap();
+//! let c = rpc.alloc(4 * 4096).unwrap();
+//! rpc.write_f32(a, &vec![1.0; 4096]).unwrap();
+//! rpc.write_f32(b, &vec![2.0; 4096]).unwrap();
+//! let job = Job {
+//!     accname: "vadd".into(),
+//!     params: vec![("a_op".into(), a), ("b_op".into(), b), ("c_out".into(), c)],
+//! };
+//! rpc.run(&[job]).unwrap();
+//! let sum = rpc.read_f32(c, 4096).unwrap();
+//! ```
+
+use super::proto::{self, read_msg, write_msg, Job, ProtoError};
+use crate::json::{arr, i, obj, s, Value};
+use std::os::unix::net::UnixStream;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+/// Per-run latency report.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    /// Daemon-side wallclock per request (µs).
+    pub latencies_us: Vec<f64>,
+    /// Modelled FPGA latency per request (µs).
+    pub modelled_us: Vec<f64>,
+    /// Client-observed round-trip for the whole call.
+    pub round_trip: Duration,
+}
+
+/// The client connection.
+pub struct FpgaRpc {
+    stream: UnixStream,
+    /// User id the daemon assigned (from the first ping).
+    pub user: Option<u64>,
+    /// Time spent establishing the connection (Table 4 "Initialize").
+    pub connect_latency: Duration,
+}
+
+impl FpgaRpc {
+    pub fn connect(path: impl AsRef<Path>) -> Result<FpgaRpc, ProtoError> {
+        let t0 = Instant::now();
+        let stream = UnixStream::connect(path.as_ref())?;
+        let mut rpc = FpgaRpc { stream, user: None, connect_latency: Duration::ZERO };
+        let pong = rpc.call(obj(vec![("method", s("ping"))]))?;
+        rpc.user = pong.get("user").as_u64();
+        rpc.connect_latency = t0.elapsed();
+        Ok(rpc)
+    }
+
+    fn call(&mut self, msg: Value) -> Result<Value, ProtoError> {
+        write_msg(&mut self.stream, &msg)?;
+        let resp = read_msg(&mut self.stream)?;
+        if resp.get("status").as_str() == Some("ok") {
+            Ok(resp)
+        } else {
+            Err(ProtoError::Remote(
+                resp.get("error").as_str().unwrap_or("unknown").to_string(),
+            ))
+        }
+    }
+
+    /// Round-trip latency probe (Table 4 "gRPC call to daemon").
+    pub fn ping(&mut self) -> Result<Duration, ProtoError> {
+        let t0 = Instant::now();
+        self.call(obj(vec![("method", s("ping"))]))?;
+        Ok(t0.elapsed())
+    }
+
+    /// Allocate contiguous device-visible memory; returns the physical
+    /// address to program into accelerator registers.
+    pub fn alloc(&mut self, bytes: usize) -> Result<u64, ProtoError> {
+        let r = self.call(obj(vec![
+            ("method", s("alloc")),
+            ("bytes", i(bytes as i64)),
+        ]))?;
+        r.get("addr")
+            .as_u64()
+            .ok_or_else(|| ProtoError::Schema("alloc reply missing addr".into()))
+    }
+
+    pub fn free(&mut self, addr: u64) -> Result<(), ProtoError> {
+        self.call(obj(vec![("method", s("free")), ("addr", i(addr as i64))]))?;
+        Ok(())
+    }
+
+    pub fn write_f32(&mut self, addr: u64, data: &[f32]) -> Result<(), ProtoError> {
+        self.call(obj(vec![
+            ("method", s("write")),
+            ("addr", i(addr as i64)),
+            ("b64", s(proto::f32s_to_b64(data))),
+        ]))?;
+        Ok(())
+    }
+
+    pub fn read_f32(&mut self, addr: u64, count: usize) -> Result<Vec<f32>, ProtoError> {
+        let r = self.call(obj(vec![
+            ("method", s("read")),
+            ("addr", i(addr as i64)),
+            ("count", i(count as i64)),
+        ]))?;
+        proto::b64_to_f32s(
+            r.get("b64")
+                .as_str()
+                .ok_or_else(|| ProtoError::Schema("read reply missing b64".into()))?,
+        )
+    }
+
+    /// Zero-copy input: the daemon pulls `count` f32s from the shared-
+    /// memory file at `shm_path` + `offset` into device memory `addr`.
+    pub fn import_shm(
+        &mut self,
+        shm_path: &Path,
+        offset: usize,
+        count: usize,
+        addr: u64,
+    ) -> Result<(), ProtoError> {
+        self.call(obj(vec![
+            ("method", s("import")),
+            ("shm", s(shm_path.to_string_lossy())),
+            ("offset", i(offset as i64)),
+            ("count", i(count as i64)),
+            ("addr", i(addr as i64)),
+        ]))?;
+        Ok(())
+    }
+
+    /// Zero-copy output: device memory -> shared-memory file.
+    pub fn export_shm(
+        &mut self,
+        addr: u64,
+        count: usize,
+        shm_path: &Path,
+        offset: usize,
+    ) -> Result<(), ProtoError> {
+        self.call(obj(vec![
+            ("method", s("export")),
+            ("addr", i(addr as i64)),
+            ("count", i(count as i64)),
+            ("shm", s(shm_path.to_string_lossy())),
+            ("offset", i(offset as i64)),
+        ]))?;
+        Ok(())
+    }
+
+    /// Offload data-parallel acceleration requests (Listing 4's
+    /// `fpgaRpc.Run(job)`). Blocks until every request completed.
+    pub fn run(&mut self, jobs: &[Job]) -> Result<RunReport, ProtoError> {
+        let t0 = Instant::now();
+        let r = self.call(obj(vec![
+            ("method", s("run")),
+            ("jobs", arr(jobs.iter().map(|j| j.to_value()).collect())),
+        ]))?;
+        let nums = |key: &str| -> Vec<f64> {
+            r.get(key)
+                .as_array()
+                .map(|a| a.iter().filter_map(|x| x.as_f64()).collect())
+                .unwrap_or_default()
+        };
+        Ok(RunReport {
+            latencies_us: nums("latencies_us"),
+            modelled_us: nums("modelled_us"),
+            round_trip: t0.elapsed(),
+        })
+    }
+}

@@ -1,0 +1,23 @@
+//! The FOS multi-tenant daemon (§4.4, mode 3) and its client library.
+//!
+//! Architecture mirrors the paper's: applications talk to a daemon
+//! process over an RPC channel (gRPC in the paper; a length-prefixed
+//! JSON protocol over a Unix domain socket here — the offline vendor
+//! set has no gRPC, and the IPC structure is identical), while bulk
+//! data moves through shared memory so the socket never carries
+//! payloads (the paper's zero-copy design). The daemon owns the FPGA:
+//! a dispatcher thread round-robins acceleration requests across user
+//! connections (cooperative, run-to-completion — §4.4.3), reusing
+//! loaded accelerators when possible and reconfiguring otherwise, and
+//! drives real PJRT compute through the same Cynq stack single-tenant
+//! code uses.
+
+mod proto;
+mod server;
+mod client;
+mod shm;
+
+pub use client::FpgaRpc;
+pub use proto::{read_msg, write_msg, Job, ProtoError};
+pub use server::{Daemon, DaemonStats};
+pub use shm::SharedMem;

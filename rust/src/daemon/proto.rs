@@ -1,0 +1,244 @@
+//! Wire protocol: 4-byte little-endian length prefix + JSON document.
+//!
+//! Requests: `{"method": "...", ...}`; responses: `{"status": "ok", ...}`
+//! or `{"status": "err", "error": "..."}`. Bulk f32 data rides as
+//! base64 (own encoder — no vendored base64 crate) but the intended
+//! path for large buffers is shared memory (`import`/`export`).
+
+use crate::json::{parse, to_string, Value};
+use std::fmt;
+use std::io::{Read, Write};
+
+pub const MAX_MSG: u32 = 64 << 20;
+
+#[derive(Debug)]
+pub enum ProtoError {
+    Io(std::io::Error),
+    TooLarge(u32),
+    Json(String),
+    Remote(String),
+    Schema(String),
+}
+
+impl fmt::Display for ProtoError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ProtoError::Io(e) => write!(f, "io: {e}"),
+            ProtoError::TooLarge(n) => write!(f, "message of {n} bytes exceeds limit"),
+            ProtoError::Json(e) => write!(f, "bad json: {e}"),
+            ProtoError::Remote(e) => write!(f, "daemon error: {e}"),
+            ProtoError::Schema(e) => write!(f, "bad message: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ProtoError {}
+
+impl From<std::io::Error> for ProtoError {
+    fn from(e: std::io::Error) -> Self {
+        ProtoError::Io(e)
+    }
+}
+
+/// One acceleration job (Listing 4/5): logical accelerator name +
+/// register values (physical addresses from `alloc`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Job {
+    pub accname: String,
+    /// (register name, value) pairs.
+    pub params: Vec<(String, u64)>,
+}
+
+impl Job {
+    pub fn to_value(&self) -> Value {
+        use crate::json::{i, obj, s};
+        obj(vec![
+            ("name", s(self.accname.clone())),
+            (
+                "params",
+                Value::Object(
+                    self.params
+                        .iter()
+                        .map(|(k, v)| (k.clone(), i(*v as i64)))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_value(v: &Value) -> Result<Job, ProtoError> {
+        let accname = v
+            .req_str("name")
+            .map_err(ProtoError::Schema)?
+            .to_string();
+        let params = v
+            .get("params")
+            .as_object()
+            .ok_or_else(|| ProtoError::Schema("missing params".into()))?
+            .iter()
+            .map(|(k, val)| {
+                val.as_u64()
+                    .map(|x| (k.clone(), x))
+                    .ok_or_else(|| ProtoError::Schema(format!("param {k} not an address")))
+            })
+            .collect::<Result<_, _>>()?;
+        Ok(Job { accname, params })
+    }
+}
+
+pub fn write_msg(w: &mut impl Write, v: &Value) -> Result<(), ProtoError> {
+    let body = to_string(v);
+    let len = body.len() as u32;
+    if len > MAX_MSG {
+        return Err(ProtoError::TooLarge(len));
+    }
+    w.write_all(&len.to_le_bytes())?;
+    w.write_all(body.as_bytes())?;
+    w.flush()?;
+    Ok(())
+}
+
+pub fn read_msg(r: &mut impl Read) -> Result<Value, ProtoError> {
+    let mut lenb = [0u8; 4];
+    r.read_exact(&mut lenb)?;
+    let len = u32::from_le_bytes(lenb);
+    if len > MAX_MSG {
+        return Err(ProtoError::TooLarge(len));
+    }
+    let mut buf = vec![0u8; len as usize];
+    r.read_exact(&mut buf)?;
+    let text = std::str::from_utf8(&buf).map_err(|e| ProtoError::Json(e.to_string()))?;
+    parse(text).map_err(|e| ProtoError::Json(e.to_string()))
+}
+
+// --- base64 (standard alphabet, padded) -----------------------------------
+
+const B64: &[u8; 64] = b"ABCDEFGHIJKLMNOPQRSTUVWXYZabcdefghijklmnopqrstuvwxyz0123456789+/";
+
+pub fn b64_encode(data: &[u8]) -> String {
+    let mut out = String::with_capacity((data.len() + 2) / 3 * 4);
+    for chunk in data.chunks(3) {
+        let b = [chunk[0], *chunk.get(1).unwrap_or(&0), *chunk.get(2).unwrap_or(&0)];
+        let n = u32::from(b[0]) << 16 | u32::from(b[1]) << 8 | u32::from(b[2]);
+        out.push(B64[(n >> 18) as usize & 63] as char);
+        out.push(B64[(n >> 12) as usize & 63] as char);
+        out.push(if chunk.len() > 1 { B64[(n >> 6) as usize & 63] as char } else { '=' });
+        out.push(if chunk.len() > 2 { B64[n as usize & 63] as char } else { '=' });
+    }
+    out
+}
+
+pub fn b64_decode(text: &str) -> Result<Vec<u8>, ProtoError> {
+    let rev = |c: u8| -> Result<u32, ProtoError> {
+        B64.iter()
+            .position(|&x| x == c)
+            .map(|p| p as u32)
+            .ok_or_else(|| ProtoError::Schema(format!("bad base64 byte {c}")))
+    };
+    let bytes: Vec<u8> = text.bytes().filter(|&b| b != b'\n').collect();
+    if bytes.len() % 4 != 0 {
+        return Err(ProtoError::Schema("base64 length not a multiple of 4".into()));
+    }
+    let mut out = Vec::with_capacity(bytes.len() / 4 * 3);
+    for q in bytes.chunks(4) {
+        let pad = q.iter().filter(|&&c| c == b'=').count();
+        let n = rev(q[0])? << 18
+            | rev(q[1])? << 12
+            | (if q[2] == b'=' { 0 } else { rev(q[2])? }) << 6
+            | (if q[3] == b'=' { 0 } else { rev(q[3])? });
+        out.push((n >> 16) as u8);
+        if pad < 2 {
+            out.push((n >> 8) as u8);
+        }
+        if pad < 1 {
+            out.push(n as u8);
+        }
+    }
+    Ok(out)
+}
+
+pub fn f32s_to_b64(data: &[f32]) -> String {
+    let mut bytes = Vec::with_capacity(data.len() * 4);
+    for v in data {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    b64_encode(&bytes)
+}
+
+pub fn b64_to_f32s(text: &str) -> Result<Vec<f32>, ProtoError> {
+    let bytes = b64_decode(text)?;
+    if bytes.len() % 4 != 0 {
+        return Err(ProtoError::Schema("f32 payload not a multiple of 4".into()));
+    }
+    Ok(bytes
+        .chunks(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json::{i, obj, s};
+
+    #[test]
+    fn framing_roundtrip() {
+        let msg = obj(vec![("method", s("ping")), ("seq", i(42))]);
+        let mut buf = Vec::new();
+        write_msg(&mut buf, &msg).unwrap();
+        let back = read_msg(&mut buf.as_slice()).unwrap();
+        assert_eq!(back, msg);
+        // Two messages back to back.
+        let mut buf2 = Vec::new();
+        write_msg(&mut buf2, &msg).unwrap();
+        write_msg(&mut buf2, &obj(vec![("method", s("x"))])).unwrap();
+        let mut r = buf2.as_slice();
+        assert_eq!(read_msg(&mut r).unwrap(), msg);
+        assert_eq!(read_msg(&mut r).unwrap().req_str("method").unwrap(), "x");
+    }
+
+    #[test]
+    fn truncated_stream_errors() {
+        let msg = obj(vec![("method", s("ping"))]);
+        let mut buf = Vec::new();
+        write_msg(&mut buf, &msg).unwrap();
+        buf.truncate(buf.len() - 3);
+        assert!(matches!(read_msg(&mut buf.as_slice()), Err(ProtoError::Io(_))));
+    }
+
+    #[test]
+    fn job_listing4_shape() {
+        let job = Job {
+            accname: "Partial_accel_vadd".into(),
+            params: vec![
+                ("a_op".into(), 0x4000_0000),
+                ("b_op".into(), 0x4000_4000),
+                ("c_out".into(), 0x4000_8000),
+            ],
+        };
+        let v = job.to_value();
+        assert_eq!(v.req_str("name").unwrap(), "Partial_accel_vadd");
+        let back = Job::from_value(&v).unwrap();
+        assert_eq!(back, job);
+    }
+
+    #[test]
+    fn base64_roundtrip() {
+        for n in [0usize, 1, 2, 3, 4, 5, 100, 4096] {
+            let data: Vec<u8> = (0..n).map(|i| (i * 37 % 251) as u8).collect();
+            let enc = b64_encode(&data);
+            assert_eq!(b64_decode(&enc).unwrap(), data, "n={n}");
+        }
+        assert_eq!(b64_encode(b"Man"), "TWFu");
+        assert_eq!(b64_encode(b"Ma"), "TWE=");
+        assert_eq!(b64_encode(b"M"), "TQ==");
+        assert!(b64_decode("a!aa").is_err());
+        assert!(b64_decode("aaa").is_err());
+    }
+
+    #[test]
+    fn f32_payload_roundtrip() {
+        let data = vec![1.5f32, -2.25, 0.0, f32::MIN_POSITIVE];
+        assert_eq!(b64_to_f32s(&f32s_to_b64(&data)).unwrap(), data);
+    }
+}

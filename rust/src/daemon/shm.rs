@@ -1,0 +1,162 @@
+//! Shared-memory buffers for zero-copy client↔daemon data transfer.
+//!
+//! The paper passes job data through shared memory so the gRPC channel
+//! only carries control messages; we do the same with a file-backed
+//! `mmap(MAP_SHARED)` region (put it on /dev/shm and it never touches
+//! disk). Client and daemon map the same path; the RPC messages carry
+//! only (path, offset, length) triples.
+
+use std::ffi::CString;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// A file-backed shared mapping.
+pub struct SharedMem {
+    pub path: PathBuf,
+    ptr: *mut u8,
+    len: usize,
+    owner: bool,
+}
+
+// The mapping is plain memory; synchronisation is the user's job (the
+// FOS protocol only touches a buffer from one side at a time).
+unsafe impl Send for SharedMem {}
+
+impl SharedMem {
+    /// Create (or truncate) a shared region of `len` bytes at `path`.
+    pub fn create(path: impl AsRef<Path>, len: usize) -> io::Result<SharedMem> {
+        let file = std::fs::OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(path.as_ref())?;
+        file.set_len(len as u64)?;
+        Self::map(path.as_ref().to_path_buf(), len, true)
+    }
+
+    /// Map an existing shared region.
+    pub fn open(path: impl AsRef<Path>) -> io::Result<SharedMem> {
+        let len = std::fs::metadata(path.as_ref())?.len() as usize;
+        Self::map(path.as_ref().to_path_buf(), len, false)
+    }
+
+    fn map(path: PathBuf, len: usize, owner: bool) -> io::Result<SharedMem> {
+        let cpath = CString::new(path.as_os_str().as_encoded_bytes())
+            .map_err(|_| io::Error::new(io::ErrorKind::InvalidInput, "nul in path"))?;
+        unsafe {
+            let fd = libc::open(cpath.as_ptr(), libc::O_RDWR);
+            if fd < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            let ptr = libc::mmap(
+                std::ptr::null_mut(),
+                len.max(1),
+                libc::PROT_READ | libc::PROT_WRITE,
+                libc::MAP_SHARED,
+                fd,
+                0,
+            );
+            libc::close(fd);
+            if ptr == libc::MAP_FAILED {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(SharedMem { path, ptr: ptr as *mut u8, len, owner })
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [u8] {
+        unsafe { std::slice::from_raw_parts_mut(self.ptr, self.len) }
+    }
+
+    pub fn write_f32(&mut self, offset: usize, data: &[f32]) -> io::Result<()> {
+        let end = offset + data.len() * 4;
+        if end > self.len {
+            return Err(io::Error::new(io::ErrorKind::InvalidInput, "shm overflow"));
+        }
+        let s = self.as_mut_slice();
+        for (k, v) in data.iter().enumerate() {
+            s[offset + 4 * k..offset + 4 * k + 4].copy_from_slice(&v.to_le_bytes());
+        }
+        Ok(())
+    }
+
+    pub fn read_f32(&self, offset: usize, count: usize) -> io::Result<Vec<f32>> {
+        let end = offset + count * 4;
+        if end > self.len {
+            return Err(io::Error::new(io::ErrorKind::InvalidInput, "shm overread"));
+        }
+        let s = self.as_slice();
+        Ok((0..count)
+            .map(|k| f32::from_le_bytes(s[offset + 4 * k..offset + 4 * k + 4].try_into().unwrap()))
+            .collect())
+    }
+}
+
+impl Drop for SharedMem {
+    fn drop(&mut self) {
+        unsafe {
+            libc::munmap(self.ptr as *mut libc::c_void, self.len.max(1));
+        }
+        if self.owner {
+            let _ = std::fs::remove_file(&self.path);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = if Path::new("/dev/shm").is_dir() { "/dev/shm" } else { "/tmp" };
+        Path::new(dir).join(format!("fos_shm_test_{name}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn create_write_open_read() {
+        let path = tmp("rw");
+        let mut a = SharedMem::create(&path, 4096).unwrap();
+        a.write_f32(0, &[1.0, 2.5, -3.0]).unwrap();
+        a.write_f32(4080, &[9.0]).unwrap();
+        // Another mapping of the same file sees the data (zero copy).
+        let b = SharedMem::open(&path).unwrap();
+        assert_eq!(b.read_f32(0, 3).unwrap(), vec![1.0, 2.5, -3.0]);
+        assert_eq!(b.read_f32(4080, 1).unwrap(), vec![9.0]);
+        drop(b);
+        drop(a); // owner unlinks
+        assert!(!path.exists());
+    }
+
+    #[test]
+    fn bounds_checked() {
+        let path = tmp("bounds");
+        let mut m = SharedMem::create(&path, 16).unwrap();
+        assert!(m.write_f32(8, &[1.0, 2.0, 3.0]).is_err());
+        assert!(m.read_f32(12, 2).is_err());
+        m.write_f32(12, &[4.0]).unwrap();
+    }
+
+    #[test]
+    fn cross_mapping_mutation_visible() {
+        let path = tmp("mut");
+        let mut a = SharedMem::create(&path, 64).unwrap();
+        let mut b = SharedMem::open(&path).unwrap();
+        a.write_f32(0, &[7.0]).unwrap();
+        assert_eq!(b.read_f32(0, 1).unwrap(), vec![7.0]);
+        b.write_f32(0, &[8.0]).unwrap();
+        assert_eq!(a.read_f32(0, 1).unwrap(), vec![8.0]);
+    }
+}

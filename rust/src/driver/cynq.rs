@@ -1,0 +1,422 @@
+//! Cynq — the single-tenant acceleration library (§4.3, modes 1 & 2).
+//!
+//! The Rust face of the paper's C++ "Cynq" (its Python twin "Ponq" is
+//! the same API surface): load a shell, allocate contiguous buffers,
+//! load accelerators by *logical name*, program their registers through
+//! the generic driver, run. Under the hood it drives the whole simulated
+//! stack — registry descriptors, BitMan relocation, the FPGA manager's
+//! decoupler protocol, and real PJRT compute.
+
+use super::memory::{DataManager, MemError, PhysAddr};
+use super::regs::RegisterFile;
+use crate::accel::Catalog;
+use crate::bitstream::{relocate, synth_full, synth_partial};
+use crate::fabric::{PrRegion, Rect};
+use crate::reconfig::{FpgaManager, ReconfigError};
+use crate::runtime::Executor;
+use crate::shell::{Shell, ShellBoard};
+use std::fmt;
+use std::time::Duration;
+
+#[derive(Debug)]
+pub enum CynqError {
+    UnknownAccel(String),
+    NoFreeRegions { need: usize },
+    Mem(MemError),
+    Reconfig(ReconfigError),
+    Exec(String),
+    Driver(String),
+    BadHandle(usize),
+}
+
+impl fmt::Display for CynqError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CynqError::UnknownAccel(n) => write!(f, "no accelerator named {n:?}"),
+            CynqError::NoFreeRegions { need } => write!(f, "no {need} adjacent free PR regions"),
+            CynqError::Mem(e) => write!(f, "{e}"),
+            CynqError::Reconfig(e) => write!(f, "{e}"),
+            CynqError::Exec(e) => write!(f, "exec: {e}"),
+            CynqError::Driver(e) => write!(f, "driver: {e}"),
+            CynqError::BadHandle(h) => write!(f, "stale accelerator handle {h}"),
+        }
+    }
+}
+
+impl std::error::Error for CynqError {}
+
+impl From<MemError> for CynqError {
+    fn from(e: MemError) -> Self {
+        CynqError::Mem(e)
+    }
+}
+
+impl From<ReconfigError> for CynqError {
+    fn from(e: ReconfigError) -> Self {
+        CynqError::Reconfig(e)
+    }
+}
+
+/// Handle to a loaded accelerator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LoadedAccel(pub usize);
+
+struct Slot {
+    accel: String,
+    variant: String,
+    /// First region + how many adjacent regions the variant spans.
+    anchor: usize,
+    span: usize,
+    regs: RegisterFile,
+}
+
+/// The library context (one per FPGA).
+pub struct Cynq {
+    pub shell: Shell,
+    pub catalog: Catalog,
+    pub manager: FpgaManager,
+    pub mem: DataManager,
+    pub executor: Executor,
+    slots: Vec<Option<Slot>>,
+    /// region index -> slot index currently occupying it.
+    occupancy: Vec<Option<usize>>,
+    /// Modelled hardware time accumulated by `run` calls.
+    pub modelled_busy: Duration,
+}
+
+impl Cynq {
+    /// Open a board: build the shell, load its full bitstream, start the
+    /// PJRT executor.
+    pub fn open(board: ShellBoard, catalog: Catalog) -> Result<Cynq, CynqError> {
+        let shell = Shell::build(board);
+        let mut manager =
+            FpgaManager::new(shell.floorplan.device.clone(), shell.region_count());
+        let full = synth_full(&shell.floorplan.device, 0xF05);
+        manager.load_full(full);
+        let executor = Executor::new(catalog.clone());
+        let n = shell.region_count();
+        Ok(Cynq {
+            shell,
+            catalog,
+            manager,
+            mem: DataManager::new(64 << 20),
+            executor,
+            slots: Vec::new(),
+            occupancy: vec![None; n],
+            modelled_busy: Duration::ZERO,
+        })
+    }
+
+    pub fn alloc(&mut self, bytes: usize) -> Result<PhysAddr, CynqError> {
+        Ok(self.mem.alloc(bytes)?)
+    }
+
+    pub fn write_f32(&mut self, addr: PhysAddr, data: &[f32]) -> Result<(), CynqError> {
+        Ok(self.mem.write_f32(addr, data)?)
+    }
+
+    pub fn read_f32(&self, addr: PhysAddr, n: usize) -> Result<Vec<f32>, CynqError> {
+        Ok(self.mem.read_f32(addr, n)?)
+    }
+
+    /// Find `span` adjacent free regions; returns the anchor index.
+    fn find_free(&self, span: usize) -> Option<usize> {
+        let n = self.occupancy.len();
+        (0..n.saturating_sub(span - 1)).find(|&a| {
+            (a..a + span).all(|r| self.occupancy[r].is_none())
+                && self.shell.floorplan.combinable(a, span)
+        })
+    }
+
+    /// Load an accelerator by logical name (mode 2: PR acceleration).
+    /// Picks the biggest catalogued variant that fits the free regions —
+    /// the paper's Pareto-optimal default (§4.4.3) — unless `variant`
+    /// pins one. Returns the handle and the reconfiguration latency.
+    pub fn load_accelerator(
+        &mut self,
+        name: &str,
+        variant: Option<&str>,
+    ) -> Result<(LoadedAccel, Duration), CynqError> {
+        let accel = self
+            .catalog
+            .get(name)
+            .ok_or_else(|| CynqError::UnknownAccel(name.to_string()))?
+            .clone();
+        let v = match variant {
+            Some(vn) => accel
+                .variant(vn)
+                .ok_or_else(|| CynqError::UnknownAccel(vn.to_string()))?,
+            None => {
+                // Biggest variant that currently fits.
+                let max_free = (1..=self.occupancy.len())
+                    .rev()
+                    .find(|&k| self.find_free(k).is_some())
+                    .unwrap_or(0);
+                accel
+                    .best_variant_for(max_free)
+                    .ok_or(CynqError::NoFreeRegions { need: accel.smallest_variant().regions })?
+            }
+        }
+        .clone();
+        let anchor = self
+            .find_free(v.regions)
+            .ok_or(CynqError::NoFreeRegions { need: v.regions })?;
+
+        // Produce the relocatable partial: compiled-for-pr0 (possibly a
+        // combined slot), relocated to the anchor — the BitMan path.
+        // synth_partial generates only the module's own frames (§Perf:
+        // the original full-device synth + extract dominated the
+        // scheduling decision at ~180 us per cold load).
+        let device = &self.shell.floorplan.device;
+        let src = combined_region(&self.shell, 0, v.regions);
+        let dst = combined_region(&self.shell, anchor, v.regions);
+        let partial = synth_partial(device, &src, hash(&v.name));
+        let partial = relocate(device, &partial, &src, &dst).map_err(ReconfigError::Bitman)?;
+        let mut latency = Duration::ZERO;
+        for r in anchor..anchor + v.regions {
+            self.manager.set_decoupler(r, true)?;
+        }
+        // One PCAP write covers the combined span.
+        latency += {
+            // load_partial checks the anchor's decoupler; mark all spans.
+            self.manager.set_decoupler(anchor, true)?;
+            self.manager.load_partial(anchor, &partial)?
+        };
+        let slot = Slot {
+            accel: accel.name.clone(),
+            variant: v.name.clone(),
+            anchor,
+            span: v.regions,
+            regs: RegisterFile::new(&accel.registers),
+        };
+        let idx = self.slots.len();
+        self.slots.push(Some(slot));
+        for r in anchor..anchor + v.regions {
+            self.occupancy[r] = Some(idx);
+        }
+        Ok((LoadedAccel(idx), latency))
+    }
+
+    /// Unload (blank) an accelerator, freeing its regions.
+    pub fn unload(&mut self, h: LoadedAccel) -> Result<(), CynqError> {
+        let slot = self
+            .slots
+            .get_mut(h.0)
+            .and_then(Option::take)
+            .ok_or(CynqError::BadHandle(h.0))?;
+        for r in slot.anchor..slot.anchor + slot.span {
+            self.occupancy[r] = None;
+        }
+        Ok(())
+    }
+
+    /// Program an operand register by name (generic driver, §4.3).
+    pub fn write_reg(
+        &mut self,
+        h: LoadedAccel,
+        reg: &str,
+        value: PhysAddr,
+    ) -> Result<(), CynqError> {
+        let slot = self
+            .slots
+            .get_mut(h.0)
+            .and_then(Option::as_mut)
+            .ok_or(CynqError::BadHandle(h.0))?;
+        slot.regs.write_by_name(reg, value.0).map_err(CynqError::Driver)
+    }
+
+    /// ap_start + run to completion (blocking). The "hardware" reads its
+    /// operands from the data manager at the programmed addresses,
+    /// executes the variant's HLO on PJRT, and DMA-writes the outputs
+    /// back. Returns the *modelled* FPGA latency for the work item.
+    pub fn run(&mut self, h: LoadedAccel) -> Result<Duration, CynqError> {
+        let (accel_name, variant_name, operands) = {
+            let slot = self
+                .slots
+                .get_mut(h.0)
+                .and_then(Option::as_mut)
+                .ok_or(CynqError::BadHandle(h.0))?;
+            slot.regs.write(0, super::regs::ControlBits::AP_START as u64);
+            (slot.accel.clone(), slot.variant.clone(), slot.regs.operands())
+        };
+        let accel = self.catalog.get(&accel_name).unwrap().clone();
+        let variant = accel.variant(&variant_name).unwrap().clone();
+        if operands.len() != accel.inputs.len() + accel.outputs.len() {
+            return Err(CynqError::Driver(format!(
+                "{}: {} operand registers for {} inputs + {} outputs",
+                accel.name,
+                operands.len(),
+                accel.inputs.len(),
+                accel.outputs.len()
+            )));
+        }
+        // DMA in: gather inputs.
+        let mut inputs = Vec::new();
+        for (spec, (_, addr)) in accel.inputs.iter().zip(&operands) {
+            inputs.push(self.mem.read_f32(PhysAddr(*addr), spec.elements())?);
+        }
+        // Execute on PJRT.
+        let out = self
+            .executor
+            .execute(&variant.name, inputs)
+            .map_err(CynqError::Exec)?;
+        // DMA out: scatter outputs.
+        for ((spec, buf), (_, addr)) in accel
+            .outputs
+            .iter()
+            .zip(&out.outputs)
+            .zip(operands[accel.inputs.len()..].iter())
+        {
+            let _ = spec;
+            self.mem.write_f32(PhysAddr(*addr), buf)?;
+        }
+        if let Some(slot) = self.slots.get_mut(h.0).and_then(Option::as_mut) {
+            slot.regs.complete();
+        }
+        // Modelled FPGA latency: DMA (memsim) + compute (cycle model).
+        let mem = crate::memsim::DdrModel::new(crate::memsim::config_for(self.shell.board));
+        let busy_regions = self.occupancy.iter().flatten().count().saturating_sub(1);
+        let dma_ns = mem.transfer_ns(accel.bytes_in, busy_regions)
+            + mem.transfer_ns(accel.bytes_out, busy_regions);
+        let modelled = Duration::from_nanos((variant.compute_ns() + dma_ns) as u64);
+        self.modelled_busy += modelled;
+        Ok(modelled)
+    }
+
+    /// Which variant a handle currently runs (for tests/inspection).
+    pub fn variant_of(&self, h: LoadedAccel) -> Option<&str> {
+        self.slots
+            .get(h.0)
+            .and_then(Option::as_ref)
+            .map(|s| s.variant.as_str())
+    }
+
+    pub fn free_regions(&self) -> usize {
+        self.occupancy.iter().filter(|o| o.is_none()).count()
+    }
+}
+
+/// The (possibly combined) PR region starting at `anchor` spanning
+/// `span` slots.
+pub fn combined_region(shell: &Shell, anchor: usize, span: usize) -> PrRegion {
+    let rs = &shell.floorplan.regions;
+    PrRegion {
+        name: if span == 1 {
+            rs[anchor].name.clone()
+        } else {
+            format!("{}+{}", rs[anchor].name, span - 1)
+        },
+        bbox: Rect {
+            c0: rs[anchor].bbox.c0,
+            c1: rs[anchor].bbox.c1,
+            r0: rs[anchor].bbox.r0,
+            r1: rs[anchor + span - 1].bbox.r1,
+        },
+        tunnel_rows: rs[anchor].tunnel_rows.clone(),
+    }
+}
+
+fn hash(s: &str) -> u64 {
+    s.bytes()
+        .fold(0xcbf29ce484222325u64, |h, b| (h ^ b as u64).wrapping_mul(0x100000001b3))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::Rng;
+    use std::sync::Mutex;
+    use once_cell::sync::Lazy;
+
+    // Serialise Cynq tests: each opens a PJRT client thread; cheap, but
+    // keep memory bounded.
+    static LOCK: Lazy<Mutex<()>> = Lazy::new(|| Mutex::new(()));
+
+    fn open() -> Cynq {
+        Cynq::open(ShellBoard::Ultra96, Catalog::load_default().unwrap()).unwrap()
+    }
+
+    #[test]
+    fn quickstart_vadd_end_to_end() {
+        let _g = LOCK.lock().unwrap();
+        let mut fpga = open();
+        let mut rng = Rng::new(5);
+        let a: Vec<f32> = (0..4096).map(|_| rng.normal()).collect();
+        let b: Vec<f32> = (0..4096).map(|_| rng.normal()).collect();
+        let pa = fpga.alloc(4 * 4096).unwrap();
+        let pb = fpga.alloc(4 * 4096).unwrap();
+        let pc = fpga.alloc(4 * 4096).unwrap();
+        fpga.write_f32(pa, &a).unwrap();
+        fpga.write_f32(pb, &b).unwrap();
+        let (h, reconfig) = fpga.load_accelerator("vadd", Some("vadd_v1")).unwrap();
+        assert!(reconfig > Duration::ZERO);
+        fpga.write_reg(h, "a_op", pa).unwrap();
+        fpga.write_reg(h, "b_op", pb).unwrap();
+        fpga.write_reg(h, "c_out", pc).unwrap();
+        let modelled = fpga.run(h).unwrap();
+        assert!(modelled > Duration::ZERO);
+        let c = fpga.read_f32(pc, 4096).unwrap();
+        for k in 0..4096 {
+            assert!((c[k] - (a[k] + b[k])).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn elastic_variant_selection_uses_biggest() {
+        let _g = LOCK.lock().unwrap();
+        let mut fpga = open();
+        // 3 free regions: the 2-region dct_v2 should be chosen.
+        let (h, _) = fpga.load_accelerator("dct", None).unwrap();
+        assert_eq!(fpga.variant_of(h), Some("dct_v2"));
+        assert_eq!(fpga.free_regions(), 1);
+        // Next load only has 1 region left -> v1.
+        let (h2, _) = fpga.load_accelerator("dct", None).unwrap();
+        assert_eq!(fpga.variant_of(h2), Some("dct_v1"));
+        assert_eq!(fpga.free_regions(), 0);
+        // Third load fails.
+        assert!(matches!(
+            fpga.load_accelerator("dct", None),
+            Err(CynqError::NoFreeRegions { .. })
+        ));
+        // Unload the big one: two adjacent slots free again.
+        fpga.unload(h).unwrap();
+        assert_eq!(fpga.free_regions(), 2);
+        let (h3, _) = fpga.load_accelerator("vadd", None).unwrap();
+        assert_eq!(fpga.variant_of(h3), Some("vadd_v2"));
+    }
+
+    #[test]
+    fn unknown_names_rejected() {
+        let _g = LOCK.lock().unwrap();
+        let mut fpga = open();
+        assert!(matches!(
+            fpga.load_accelerator("warp_drive", None),
+            Err(CynqError::UnknownAccel(_))
+        ));
+        assert!(matches!(
+            fpga.load_accelerator("vadd", Some("vadd_v9")),
+            Err(CynqError::UnknownAccel(_))
+        ));
+    }
+
+    #[test]
+    fn stale_handle_rejected() {
+        let _g = LOCK.lock().unwrap();
+        let mut fpga = open();
+        let (h, _) = fpga.load_accelerator("vadd", Some("vadd_v1")).unwrap();
+        fpga.unload(h).unwrap();
+        assert!(matches!(fpga.run(h), Err(CynqError::BadHandle(_))));
+        assert!(matches!(fpga.unload(h), Err(CynqError::BadHandle(_))));
+    }
+
+    #[test]
+    fn missing_register_programming_caught() {
+        let _g = LOCK.lock().unwrap();
+        let mut fpga = open();
+        let (h, _) = fpga.load_accelerator("vadd", Some("vadd_v1")).unwrap();
+        let pa = fpga.alloc(4 * 4096).unwrap();
+        fpga.write_reg(h, "a_op", pa).unwrap();
+        // b_op / c_out default to 0 -> DMA from unmapped address errors.
+        assert!(fpga.run(h).is_err());
+    }
+}

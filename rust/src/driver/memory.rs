@@ -1,0 +1,212 @@
+//! Contiguous physical memory allocation — the CMA/udmabuf analog.
+//!
+//! Accelerators see *physical* addresses: software allocates a buffer,
+//! gets its phys addr, and programs that into the operand registers
+//! (Listings 4–5 pass `a_op_phy_addr` etc.). The data manager owns a
+//! DDR-backed arena starting at the PL-visible base and hands out
+//! aligned, contiguous ranges with a first-fit free list.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// PL-visible DDR window base (matches the Zynq address map's low-DDR
+/// aperture the HP ports target).
+pub const DDR_BASE: u64 = 0x4000_0000;
+
+/// Allocation alignment: AXI bursts must not cross 4 KiB boundaries.
+pub const ALIGN: u64 = 4096;
+
+/// A physical address inside the accelerator-visible DDR window.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct PhysAddr(pub u64);
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum MemError {
+    OutOfMemory { requested: usize, largest_free: usize },
+    BadFree(PhysAddr),
+    OutOfRange { addr: PhysAddr, len: usize },
+}
+
+impl fmt::Display for MemError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            MemError::OutOfMemory { requested, largest_free } => {
+                write!(f, "out of contiguous memory: requested {requested}, largest free {largest_free}")
+            }
+            MemError::BadFree(a) => write!(f, "free of unallocated address {a:?}"),
+            MemError::OutOfRange { addr, len } => {
+                write!(f, "access [{addr:?} +{len}] outside allocation")
+            }
+        }
+    }
+}
+
+impl std::error::Error for MemError {}
+
+/// The arena: backing store + allocation bookkeeping.
+pub struct DataManager {
+    mem: Vec<u8>,
+    /// offset -> length of live allocations.
+    allocs: BTreeMap<u64, usize>,
+}
+
+impl DataManager {
+    /// An arena of `size` bytes (the PL-visible CMA pool).
+    pub fn new(size: usize) -> DataManager {
+        DataManager { mem: vec![0; size], allocs: BTreeMap::new() }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.mem.len()
+    }
+
+    pub fn allocated_bytes(&self) -> usize {
+        self.allocs.values().sum()
+    }
+
+    /// First-fit aligned allocation.
+    pub fn alloc(&mut self, size: usize) -> Result<PhysAddr, MemError> {
+        let size_al = size.max(1);
+        let mut cursor = 0u64;
+        let mut largest_free = 0usize;
+        let mut fit: Option<u64> = None;
+        for (&off, &len) in &self.allocs {
+            let gap = (off.saturating_sub(cursor)) as usize;
+            largest_free = largest_free.max(gap);
+            if fit.is_none() && gap >= size_al {
+                fit = Some(cursor);
+            }
+            cursor = align_up(off + len as u64);
+        }
+        let tail = self.mem.len().saturating_sub(cursor as usize);
+        largest_free = largest_free.max(tail);
+        if fit.is_none() && tail >= size_al {
+            fit = Some(cursor);
+        }
+        match fit {
+            Some(off) => {
+                self.allocs.insert(off, size_al);
+                Ok(PhysAddr(DDR_BASE + off))
+            }
+            None => Err(MemError::OutOfMemory { requested: size_al, largest_free }),
+        }
+    }
+
+    pub fn free(&mut self, addr: PhysAddr) -> Result<(), MemError> {
+        let off = addr.0.checked_sub(DDR_BASE).ok_or(MemError::BadFree(addr))?;
+        self.allocs.remove(&off).ok_or(MemError::BadFree(addr))?;
+        Ok(())
+    }
+
+    fn check(&self, addr: PhysAddr, len: usize) -> Result<usize, MemError> {
+        let off = addr
+            .0
+            .checked_sub(DDR_BASE)
+            .ok_or(MemError::OutOfRange { addr, len })? as usize;
+        // The access must lie inside one live allocation (the DMA cannot
+        // scribble outside its buffer — a real CMA property worth keeping).
+        let ok = self
+            .allocs
+            .range(..=off as u64)
+            .next_back()
+            .map(|(&a, &l)| off >= a as usize && off + len <= a as usize + l)
+            .unwrap_or(false);
+        if !ok {
+            return Err(MemError::OutOfRange { addr, len });
+        }
+        Ok(off)
+    }
+
+    /// CPU/DMA write of f32 data.
+    pub fn write_f32(&mut self, addr: PhysAddr, data: &[f32]) -> Result<(), MemError> {
+        let off = self.check(addr, data.len() * 4)?;
+        for (k, v) in data.iter().enumerate() {
+            self.mem[off + 4 * k..off + 4 * k + 4].copy_from_slice(&v.to_le_bytes());
+        }
+        Ok(())
+    }
+
+    /// CPU/DMA read of f32 data.
+    pub fn read_f32(&self, addr: PhysAddr, count: usize) -> Result<Vec<f32>, MemError> {
+        let off = self.check(addr, count * 4)?;
+        Ok((0..count)
+            .map(|k| {
+                f32::from_le_bytes(self.mem[off + 4 * k..off + 4 * k + 4].try_into().unwrap())
+            })
+            .collect())
+    }
+
+    pub fn write_bytes(&mut self, addr: PhysAddr, data: &[u8]) -> Result<(), MemError> {
+        let off = self.check(addr, data.len())?;
+        self.mem[off..off + data.len()].copy_from_slice(data);
+        Ok(())
+    }
+
+    pub fn read_bytes(&self, addr: PhysAddr, len: usize) -> Result<Vec<u8>, MemError> {
+        let off = self.check(addr, len)?;
+        Ok(self.mem[off..off + len].to_vec())
+    }
+}
+
+fn align_up(x: u64) -> u64 {
+    (x + ALIGN - 1) & !(ALIGN - 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_write_read_roundtrip() {
+        let mut dm = DataManager::new(1 << 20);
+        let a = dm.alloc(4096).unwrap();
+        assert_eq!(a.0 % ALIGN, 0);
+        assert!(a.0 >= DDR_BASE);
+        let data: Vec<f32> = (0..1024).map(|i| i as f32).collect();
+        dm.write_f32(a, &data).unwrap();
+        assert_eq!(dm.read_f32(a, 1024).unwrap(), data);
+    }
+
+    #[test]
+    fn allocations_disjoint_and_aligned() {
+        let mut dm = DataManager::new(1 << 20);
+        let addrs: Vec<PhysAddr> = (0..10).map(|_| dm.alloc(1000).unwrap()).collect();
+        for w in addrs.windows(2) {
+            assert!(w[1].0 >= w[0].0 + 1000);
+            assert_eq!(w[1].0 % ALIGN, 0);
+        }
+    }
+
+    #[test]
+    fn free_then_reuse() {
+        let mut dm = DataManager::new(16 * 4096);
+        let a = dm.alloc(4096).unwrap();
+        let _b = dm.alloc(4096).unwrap();
+        dm.free(a).unwrap();
+        let c = dm.alloc(4096).unwrap();
+        assert_eq!(c, a, "first-fit should reuse the freed hole");
+        assert!(matches!(dm.free(a), Ok(())));
+        assert!(matches!(dm.free(a), Err(MemError::BadFree(_))));
+    }
+
+    #[test]
+    fn oom_reported_with_sizes() {
+        let mut dm = DataManager::new(8192);
+        let _a = dm.alloc(4096).unwrap();
+        let err = dm.alloc(8192).unwrap_err();
+        assert!(matches!(err, MemError::OutOfMemory { requested: 8192, .. }));
+    }
+
+    #[test]
+    fn out_of_bounds_access_rejected() {
+        let mut dm = DataManager::new(1 << 16);
+        let a = dm.alloc(64).unwrap();
+        assert!(dm.write_f32(a, &vec![0.0; 17]).is_err()); // 68 bytes > 64
+        assert!(dm.read_f32(PhysAddr(DDR_BASE + 60_000), 4).is_err());
+        assert!(dm.read_f32(PhysAddr(0), 1).is_err()); // below DDR base
+        // Interior access within an allocation is fine.
+        let mid = PhysAddr(a.0 + 16);
+        dm.write_f32(mid, &[1.0, 2.0]).unwrap();
+        assert_eq!(dm.read_f32(mid, 2).unwrap(), vec![1.0, 2.0]);
+    }
+}

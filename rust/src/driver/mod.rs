@@ -1,0 +1,15 @@
+//! Generic accelerator drivers + the data manager (§4.3).
+//!
+//! Because every FOS accelerator follows the standard Vivado-HLS control
+//! protocol (Listing 3) and publishes its register map in the Listing-2
+//! descriptor, ONE driver serves all of them — hardware developers never
+//! write drivers. The data manager provides contiguous "physical" memory
+//! the way the real FOS uses a CMA/udmabuf allocator.
+
+mod regs;
+mod memory;
+mod cynq;
+
+pub use cynq::{Cynq, CynqError, LoadedAccel};
+pub use memory::{DataManager, MemError, PhysAddr};
+pub use regs::{ControlBits, RegisterFile};

@@ -1,0 +1,165 @@
+//! The Listing-3 HLS control protocol and the per-accelerator register
+//! file the generic driver programs through MMIO.
+
+use crate::accel::Register;
+use std::collections::BTreeMap;
+
+/// Control word bits at offset 0x00 (Listing 3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ControlBits;
+
+impl ControlBits {
+    pub const AP_START: u32 = 1 << 0; // Read/Write/COH
+    pub const AP_DONE: u32 = 1 << 1; // Read/COR (clear on read)
+    pub const AP_IDLE: u32 = 1 << 2; // Read
+    pub const AP_READY: u32 = 1 << 3; // Read
+    pub const AUTO_RESTART: u32 = 1 << 7; // Read/Write
+}
+
+/// The MMIO register space of one loaded accelerator.
+#[derive(Debug, Clone)]
+pub struct RegisterFile {
+    /// Operand registers by offset (64-bit pointer registers).
+    values: BTreeMap<u64, u64>,
+    /// Known register map (from the Listing-2 descriptor).
+    map: Vec<Register>,
+    control: u32,
+}
+
+impl RegisterFile {
+    pub fn new(map: &[Register]) -> RegisterFile {
+        RegisterFile {
+            values: BTreeMap::new(),
+            map: map.to_vec(),
+            control: ControlBits::AP_IDLE,
+        }
+    }
+
+    pub fn offset_of(&self, name: &str) -> Option<u64> {
+        self.map.iter().find(|r| r.name == name).map(|r| r.offset)
+    }
+
+    /// Generic-driver write: by register *name* (the whole point of the
+    /// standardised map — no per-accelerator driver code).
+    pub fn write_by_name(&mut self, name: &str, value: u64) -> Result<(), String> {
+        let off = self
+            .offset_of(name)
+            .ok_or_else(|| format!("no register named {name:?}"))?;
+        self.write(off, value);
+        Ok(())
+    }
+
+    pub fn read_by_name(&self, name: &str) -> Result<u64, String> {
+        let off = self
+            .offset_of(name)
+            .ok_or_else(|| format!("no register named {name:?}"))?;
+        Ok(self.read(off))
+    }
+
+    pub fn write(&mut self, offset: u64, value: u64) {
+        if offset == 0 {
+            // Control word: software may set AP_START / AUTO_RESTART.
+            let settable = ControlBits::AP_START | ControlBits::AUTO_RESTART;
+            self.control = (self.control & !settable) | (value as u32 & settable);
+            if value as u32 & ControlBits::AP_START != 0 {
+                self.control &= !ControlBits::AP_IDLE;
+            }
+        } else {
+            self.values.insert(offset, value);
+        }
+    }
+
+    pub fn read(&self, offset: u64) -> u64 {
+        if offset == 0 {
+            self.control as u64
+        } else {
+            self.values.get(&offset).copied().unwrap_or(0)
+        }
+    }
+
+    /// Clear-on-read semantics for AP_DONE (Listing 3: "Read/COR").
+    pub fn read_control_cor(&mut self) -> u32 {
+        let c = self.control;
+        self.control &= !ControlBits::AP_DONE;
+        c
+    }
+
+    pub fn is_start(&self) -> bool {
+        self.control & ControlBits::AP_START != 0
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.control & ControlBits::AP_IDLE != 0
+    }
+
+    /// Hardware-side completion: ap_done pulses, ap_start self-clears
+    /// (COH), ap_idle reasserts.
+    pub fn complete(&mut self) {
+        self.control &= !ControlBits::AP_START;
+        self.control |= ControlBits::AP_DONE | ControlBits::AP_IDLE | ControlBits::AP_READY;
+    }
+
+    /// Operand values in register-map order (skipping control).
+    pub fn operands(&self) -> Vec<(String, u64)> {
+        self.map
+            .iter()
+            .filter(|r| r.offset != 0)
+            .map(|r| (r.name.clone(), self.read(r.offset)))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn map() -> Vec<Register> {
+        vec![
+            Register { name: "control".into(), offset: 0 },
+            Register { name: "a_op".into(), offset: 0x10 },
+            Register { name: "b_op".into(), offset: 0x18 },
+            Register { name: "c_out".into(), offset: 0x20 },
+        ]
+    }
+
+    #[test]
+    fn listing3_protocol() {
+        let mut rf = RegisterFile::new(&map());
+        assert!(rf.is_idle());
+        assert!(!rf.is_start());
+        rf.write(0, ControlBits::AP_START as u64);
+        assert!(rf.is_start());
+        assert!(!rf.is_idle());
+        rf.complete();
+        assert!(!rf.is_start()); // COH self-clear
+        let c = rf.read_control_cor();
+        assert!(c & ControlBits::AP_DONE != 0);
+        // COR: second read sees done cleared.
+        assert!(rf.read_control_cor() & ControlBits::AP_DONE == 0);
+        assert!(rf.is_idle());
+    }
+
+    #[test]
+    fn named_access_and_operands() {
+        let mut rf = RegisterFile::new(&map());
+        rf.write_by_name("a_op", 0x4000_0000).unwrap();
+        rf.write_by_name("b_op", 0x4000_4000).unwrap();
+        rf.write_by_name("c_out", 0x4000_8000).unwrap();
+        assert_eq!(rf.read_by_name("b_op").unwrap(), 0x4000_4000);
+        assert!(rf.write_by_name("nope", 1).is_err());
+        let ops = rf.operands();
+        assert_eq!(ops.len(), 3);
+        assert_eq!(ops[0], ("a_op".to_string(), 0x4000_0000));
+    }
+
+    #[test]
+    fn reserved_control_bits_ignored() {
+        let mut rf = RegisterFile::new(&map());
+        rf.write(0, 0xFFFF_FF00 | ControlBits::AUTO_RESTART as u64);
+        // Only AP_START and AUTO_RESTART are software-settable.
+        assert_eq!(
+            rf.read(0) as u32 & !(ControlBits::AP_IDLE),
+            ControlBits::AUTO_RESTART
+        );
+    }
+}

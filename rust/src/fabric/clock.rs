@@ -1,0 +1,107 @@
+//! Clock distribution model — §4.1.1's BUFCE_LEAF discipline.
+//!
+//! The shell build prohibits all but a defined subset of BUFCE_LEAF
+//! clock drivers inside PR regions, so every slot sees the same regular
+//! clock-spline pattern and modules stay relocatable (requirement 3).
+//! The static system then routes its own clocks *after* the prohibit
+//! constraints are lifted, in a second incremental pass.
+
+use super::{Device, PrRegion};
+
+/// Which BUFCE_LEAF positions (column-relative) module clocks may use.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ClockPlan {
+    /// Allowed leaf positions as column offsets inside the PR window;
+    /// one vertical clock spline per allowed leaf column.
+    pub allowed_leaf_cols: Vec<usize>,
+    /// Leaf row pitch: one leaf every `row_pitch` rows per spline.
+    pub row_pitch: usize,
+}
+
+impl ClockPlan {
+    /// The FOS default: a spline every 8 columns, a leaf every 30 rows
+    /// (two per clock region) — regular across the whole PR window.
+    pub fn fos_default(pr_cols: usize) -> ClockPlan {
+        ClockPlan {
+            allowed_leaf_cols: (0..pr_cols).step_by(8).collect(),
+            row_pitch: 30,
+        }
+    }
+
+    /// Leaves available to a module placed in `region`.
+    pub fn leaves_in_region(&self, region: &PrRegion) -> Vec<(usize, usize)> {
+        let mut out = Vec::new();
+        for &c in &self.allowed_leaf_cols {
+            let col = region.bbox.c0 + c;
+            if col >= region.bbox.c1 {
+                continue;
+            }
+            let mut row = region.bbox.r0;
+            while row < region.bbox.r1 {
+                out.push((col, row));
+                row += self.row_pitch;
+            }
+        }
+        out
+    }
+
+    /// Requirement 3: the *relative* leaf pattern must be identical in
+    /// every region.
+    pub fn pattern_identical(&self, device: &Device, regions: &[PrRegion]) -> bool {
+        let _ = device;
+        let rel = |r: &PrRegion| -> Vec<(usize, usize)> {
+            self.leaves_in_region(r)
+                .into_iter()
+                .map(|(c, row)| (c - r.bbox.c0, row - r.bbox.r0))
+                .collect()
+        };
+        match regions.split_first() {
+            None => true,
+            Some((first, rest)) => {
+                let base = rel(first);
+                rest.iter().all(|r| rel(r) == base)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Device, DeviceKind, Floorplan};
+    use super::*;
+
+    #[test]
+    fn default_plan_identical_across_regions() {
+        for kind in [DeviceKind::Zu3eg, DeviceKind::Zu9eg] {
+            let fp = Floorplan::standard(Device::new(kind));
+            let (c0, c1, _) = fp.device.pr_window();
+            let plan = ClockPlan::fos_default(c1 - c0);
+            assert!(plan.pattern_identical(&fp.device, &fp.regions));
+        }
+    }
+
+    #[test]
+    fn leaves_cover_every_clock_region_segment() {
+        let fp = Floorplan::standard(Device::new(DeviceKind::Zu3eg));
+        let plan = ClockPlan::fos_default(48);
+        let leaves = plan.leaves_in_region(&fp.regions[0]);
+        // 6 splines (48/8) x 2 leaves per region (60/30).
+        assert_eq!(leaves.len(), 12);
+        assert!(leaves.iter().all(|&(c, r)| fp.regions[0].bbox.contains(c, r)));
+    }
+
+    #[test]
+    fn irregular_plan_detected() {
+        let fp = Floorplan::standard(Device::new(DeviceKind::Zu3eg));
+        let plan = ClockPlan {
+            allowed_leaf_cols: vec![0, 7, 9], // irregular spacing still OK:
+            row_pitch: 45,                    // pattern is *relative*, so it
+        };                                    // matches across aligned slots.
+        assert!(plan.pattern_identical(&fp.device, &fp.regions));
+        // Divergence: a narrower region loses the splines at cols 32/40.
+        let plan = ClockPlan::fos_default(48);
+        let mut fp2 = fp.clone();
+        fp2.regions[1].bbox.c1 -= 16;
+        assert!(!plan.pattern_identical(&fp2.device, &fp2.regions));
+    }
+}

@@ -1,0 +1,235 @@
+//! Device catalog: the two Zynq UltraScale+ parts behind the paper's
+//! three boards.
+//!
+//! Column layouts are synthesised to reproduce the paper's Table 1
+//! PR-region resources exactly:
+//! - ZU3EG (Ultra96, UltraZed): PR window of 37 CLB + 6 BRAM + 5 DSP
+//!   columns × 60 rows = 17760 LUTs / 35520 FFs / 72 BRAM36 / 120 DSP48
+//!   per region — the paper's numbers to the digit.
+//! - ZU9EG (ZCU102): PR window of 68 CLB + 9 BRAM + 14 DSP columns × 60
+//!   rows = 32640 LUTs / 65280 FFs / 108 BRAM36 / 336 DSP48 per region.
+//!
+//! Whole-chip totals land within ~1% of the real silicon (see the
+//! Table 1 bench for paper-vs-measured chip utilisation).
+
+use super::{ColumnKind, Resources, CLOCK_REGION_ROWS};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DeviceKind {
+    /// XCZU3EG — Ultra96 and UltraZed boards.
+    Zu3eg,
+    /// XCZU9EG — ZCU102 development kit.
+    Zu9eg,
+}
+
+impl DeviceKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            DeviceKind::Zu3eg => "xczu3eg",
+            DeviceKind::Zu9eg => "xczu9eg",
+        }
+    }
+}
+
+/// A modelled FPGA: a column sequence replicated over `rows` tile rows,
+/// split into clock regions of 60 rows.
+#[derive(Debug, Clone)]
+pub struct Device {
+    pub kind: DeviceKind,
+    pub columns: Vec<ColumnKind>,
+    pub rows: usize,
+}
+
+impl Device {
+    pub fn new(kind: DeviceKind) -> Device {
+        match kind {
+            // 3 clock regions. PR window = columns 0..48, static = 48..62
+            // (12 CLB columns for the shell + 2 PS columns).
+            DeviceKind::Zu3eg => Device {
+                kind,
+                columns: interleave(37, 6, 5)
+                    .into_iter()
+                    .chain(std::iter::repeat(ColumnKind::Clb).take(12))
+                    .chain(std::iter::repeat(ColumnKind::Ps).take(2))
+                    .collect(),
+                rows: 3 * CLOCK_REGION_ROWS,
+            },
+            // 7 clock regions. The ZCU102's irregular layout (paper §5.1.1)
+            // is modelled by reserving columns 0..8 (PS + config column)
+            // and everything right of the PR window for the static shell;
+            // only clock regions 1..5 host relocatable slots.
+            DeviceKind::Zu9eg => Device {
+                kind,
+                columns: std::iter::repeat(ColumnKind::Ps)
+                    .take(4)
+                    .chain(std::iter::repeat(ColumnKind::Clb).take(4))
+                    .chain(interleave(68, 9, 14))
+                    .chain(std::iter::repeat(ColumnKind::Clb).take(10))
+                    .chain(interleave(0, 2, 1))
+                    .collect(),
+                rows: 7 * CLOCK_REGION_ROWS,
+            },
+        }
+    }
+
+    pub fn clock_regions(&self) -> usize {
+        self.rows / CLOCK_REGION_ROWS
+    }
+
+    /// The column window PR regions live in (start inclusive, end
+    /// exclusive) and the clock regions hosting relocatable slots.
+    pub fn pr_window(&self) -> (usize, usize, std::ops::Range<usize>) {
+        match self.kind {
+            DeviceKind::Zu3eg => (0, 48, 0..3),
+            DeviceKind::Zu9eg => (8, 99, 1..5),
+        }
+    }
+
+    /// Resources of one column over `rows` rows: 1 CLB (8 LUT / 16 FF)
+    /// per row, 1 BRAM36 per 5 rows, 24 DSP48 per 60-row clock region.
+    pub fn column_resources(&self, kind: ColumnKind, rows: usize) -> Resources {
+        match kind {
+            ColumnKind::Clb => Resources {
+                luts: 8 * rows,
+                ffs: 16 * rows,
+                brams: 0,
+                dsps: 0,
+            },
+            ColumnKind::Bram => Resources {
+                luts: 0,
+                ffs: 0,
+                brams: rows / 5,
+                dsps: 0,
+            },
+            ColumnKind::Dsp => Resources {
+                luts: 0,
+                ffs: 0,
+                brams: 0,
+                dsps: rows * 24 / CLOCK_REGION_ROWS,
+            },
+            ColumnKind::Ps => Resources::ZERO,
+        }
+    }
+
+    /// Total resources of a rectangular tile window.
+    pub fn window_resources(&self, col_start: usize, col_end: usize, rows: usize) -> Resources {
+        let mut total = Resources::ZERO;
+        for &kind in &self.columns[col_start..col_end] {
+            total.add(self.column_resources(kind, rows));
+        }
+        total
+    }
+
+    /// Whole-chip totals (Table 1 denominators).
+    pub fn chip_resources(&self) -> Resources {
+        self.window_resources(0, self.columns.len(), self.rows)
+    }
+}
+
+/// Evenly interleave BRAM and DSP columns among CLB columns, the way real
+/// UltraScale+ fabric scatters hard-block columns through the logic.
+fn interleave(clb: usize, bram: usize, dsp: usize) -> Vec<ColumnKind> {
+    let total = clb + bram + dsp;
+    let mut cols = vec![ColumnKind::Clb; total];
+    place_evenly(&mut cols, bram, 0.5, ColumnKind::Bram);
+    place_evenly(&mut cols, dsp, 0.25, ColumnKind::Dsp);
+    debug_assert_eq!(cols.iter().filter(|&&c| c == ColumnKind::Bram).count(), bram);
+    debug_assert_eq!(cols.iter().filter(|&&c| c == ColumnKind::Dsp).count(), dsp);
+    cols
+}
+
+/// Drop `count` columns of `kind` at evenly-spaced slots, displacing CLB
+/// columns; `offset` staggers BRAM vs DSP so they don't collide.
+fn place_evenly(slots: &mut [ColumnKind], count: usize, offset: f64, kind: ColumnKind) {
+    let total = slots.len();
+    for k in 0..count {
+        let mut idx =
+            (((k as f64 + offset) / count as f64) * total as f64) as usize;
+        idx = idx.min(total - 1);
+        // Collision with an earlier hard column: take the next free slot.
+        while idx < total && slots[idx] != ColumnKind::Clb {
+            idx += 1;
+        }
+        if idx >= total {
+            idx = slots
+                .iter()
+                .rposition(|&c| c == ColumnKind::Clb)
+                .expect("more hard columns than slots");
+        }
+        slots[idx] = kind;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zu3eg_pr_window_matches_table1() {
+        let d = Device::new(DeviceKind::Zu3eg);
+        let (c0, c1, _) = d.pr_window();
+        let r = d.window_resources(c0, c1, CLOCK_REGION_ROWS);
+        assert_eq!(r.luts, 17760);
+        assert_eq!(r.ffs, 35520);
+        assert_eq!(r.brams, 72);
+        assert_eq!(r.dsps, 120);
+    }
+
+    #[test]
+    fn zu9eg_pr_window_matches_table1() {
+        let d = Device::new(DeviceKind::Zu9eg);
+        let (c0, c1, _) = d.pr_window();
+        let r = d.window_resources(c0, c1, CLOCK_REGION_ROWS);
+        assert_eq!(r.luts, 32640);
+        assert_eq!(r.ffs, 65280);
+        assert_eq!(r.brams, 108);
+        assert_eq!(r.dsps, 336);
+    }
+
+    #[test]
+    fn chip_totals_near_real_silicon() {
+        let d3 = Device::new(DeviceKind::Zu3eg).chip_resources();
+        // Real ZU3EG: 70560 LUTs, 141120 FFs, 216 BRAM36, 360 DSP48.
+        assert_eq!(d3.luts, 70560);
+        assert_eq!(d3.ffs, 141120);
+        assert_eq!(d3.brams, 216);
+        assert_eq!(d3.dsps, 360);
+
+        let d9 = Device::new(DeviceKind::Zu9eg).chip_resources();
+        // Real ZU9EG: 274080 / 548160 / 912 / 2520. Allow ~2%.
+        assert!((d9.luts as f64 - 274080.0).abs() / 274080.0 < 0.02, "{}", d9.luts);
+        assert!((d9.dsps as f64 - 2520.0).abs() / 2520.0 < 0.02, "{}", d9.dsps);
+        assert!((d9.brams as f64 - 912.0).abs() / 912.0 < 0.05, "{}", d9.brams);
+    }
+
+    #[test]
+    fn interleave_counts_and_spread() {
+        let cols = interleave(37, 6, 5);
+        assert_eq!(cols.len(), 48);
+        // Hard-block columns are spread out, not clumped: no run of 3+.
+        for w in cols.windows(3) {
+            assert!(
+                w.iter().any(|&c| c == ColumnKind::Clb),
+                "hard blocks clumped: {w:?}"
+            );
+        }
+        // And the spread is genuinely even: every 12-column window holds
+        // at least one hard block.
+        for w in cols.windows(12) {
+            assert!(w.iter().any(|&c| c != ColumnKind::Clb));
+        }
+    }
+
+    #[test]
+    fn pr_window_inside_chip() {
+        for kind in [DeviceKind::Zu3eg, DeviceKind::Zu9eg] {
+            let d = Device::new(kind);
+            let (c0, c1, crs) = d.pr_window();
+            assert!(c1 <= d.columns.len());
+            assert!(c0 < c1);
+            assert!(crs.end <= d.clock_regions());
+            // PR window must not contain PS columns (not reconfigurable).
+            assert!(d.columns[c0..c1].iter().all(|&c| c != ColumnKind::Ps));
+        }
+    }
+}

@@ -1,0 +1,241 @@
+//! Floorplanning: static/PR partitioning and the relocation legality
+//! rules of §4.1 (requirements 1–4).
+
+use super::{ColumnKind, Device, Resources, CLOCK_REGION_ROWS};
+
+/// A rectangular tile window: columns `[c0, c1)` × rows `[r0, r1)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Rect {
+    pub c0: usize,
+    pub c1: usize,
+    pub r0: usize,
+    pub r1: usize,
+}
+
+impl Rect {
+    pub fn cols(&self) -> usize {
+        self.c1 - self.c0
+    }
+
+    pub fn rows(&self) -> usize {
+        self.r1 - self.r0
+    }
+
+    pub fn contains(&self, col: usize, row: usize) -> bool {
+        (self.c0..self.c1).contains(&col) && (self.r0..self.r1).contains(&row)
+    }
+
+    pub fn overlaps(&self, o: &Rect) -> bool {
+        self.c0 < o.c1 && o.c0 < self.c1 && self.r0 < o.r1 && o.r0 < self.r1
+    }
+}
+
+/// One partially reconfigurable slot.
+#[derive(Debug, Clone)]
+pub struct PrRegion {
+    pub name: String,
+    pub bbox: Rect,
+    /// Interface tunnel rows (relative to `bbox.r0`) on the region's
+    /// right edge — must be identical across regions (requirement 2).
+    pub tunnel_rows: Vec<usize>,
+}
+
+impl PrRegion {
+    /// The column-kind footprint: the sequence of resource columns under
+    /// the bbox. Relocation requires footprints to be *identical*
+    /// (requirement 1).
+    pub fn footprint(&self, device: &Device) -> Vec<ColumnKind> {
+        device.columns[self.bbox.c0..self.bbox.c1].to_vec()
+    }
+
+    pub fn resources(&self, device: &Device) -> Resources {
+        device.window_resources(self.bbox.c0, self.bbox.c1, self.bbox.rows())
+    }
+
+    /// Clock-region-aligned? PR bitstream frames span whole clock-region
+    /// column segments, so slots must align (requirement 3's precondition).
+    pub fn is_clock_aligned(&self) -> bool {
+        self.bbox.r0 % CLOCK_REGION_ROWS == 0 && self.bbox.r1 % CLOCK_REGION_ROWS == 0
+    }
+}
+
+/// The static/PR split of one shell build.
+#[derive(Debug, Clone)]
+pub struct Floorplan {
+    pub device: Device,
+    pub regions: Vec<PrRegion>,
+}
+
+/// A relocation-legality violation (one of §4.1's requirements).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Violation {
+    FootprintMismatch { a: String, b: String },
+    TunnelMismatch { a: String, b: String },
+    NotClockAligned { region: String },
+    Overlap { a: String, b: String },
+    OutsideDevice { region: String },
+    ContainsStatic { region: String },
+}
+
+impl Floorplan {
+    /// Standard floorplan: stack identical slots vertically through the
+    /// device's PR window, one clock region tall each.
+    pub fn standard(device: Device) -> Floorplan {
+        let (c0, c1, crs) = device.pr_window();
+        let regions = crs
+            .map(|cr| PrRegion {
+                name: format!("pr{}", cr - device.pr_window().2.start),
+                bbox: Rect {
+                    c0,
+                    c1,
+                    r0: cr * CLOCK_REGION_ROWS,
+                    r1: (cr + 1) * CLOCK_REGION_ROWS,
+                },
+                // Tunnel at rows 28..32 relative to the region base —
+                // the pre-routed PR module interface position.
+                tunnel_rows: vec![28, 29, 30, 31],
+            })
+            .collect();
+        Floorplan { device, regions }
+    }
+
+    /// Check every §4.1 relocation requirement; empty vec = legal.
+    pub fn check(&self) -> Vec<Violation> {
+        let mut out = Vec::new();
+        let dev_cols = self.device.columns.len();
+        for r in &self.regions {
+            if r.bbox.c1 > dev_cols || r.bbox.r1 > self.device.rows {
+                out.push(Violation::OutsideDevice { region: r.name.clone() });
+            }
+            if !r.is_clock_aligned() {
+                out.push(Violation::NotClockAligned { region: r.name.clone() });
+            }
+            if r.footprint(&self.device).iter().any(|&c| c == ColumnKind::Ps) {
+                out.push(Violation::ContainsStatic { region: r.name.clone() });
+            }
+        }
+        for (i, a) in self.regions.iter().enumerate() {
+            for b in &self.regions[i + 1..] {
+                if a.bbox.overlaps(&b.bbox) {
+                    out.push(Violation::Overlap { a: a.name.clone(), b: b.name.clone() });
+                }
+                if a.footprint(&self.device) != b.footprint(&self.device) {
+                    out.push(Violation::FootprintMismatch { a: a.name.clone(), b: b.name.clone() });
+                }
+                if a.tunnel_rows != b.tunnel_rows {
+                    out.push(Violation::TunnelMismatch { a: a.name.clone(), b: b.name.clone() });
+                }
+            }
+        }
+        out
+    }
+
+    /// Can `n` regions starting at `first` be combined into one slot for
+    /// a bigger module? Requires vertical adjacency (§3: "combine
+    /// multiple adjacent partial regions").
+    pub fn combinable(&self, first: usize, n: usize) -> bool {
+        if n == 0 || first + n > self.regions.len() {
+            return false;
+        }
+        self.regions[first..first + n]
+            .windows(2)
+            .all(|w| w[0].bbox.r1 == w[1].bbox.r0 && w[0].bbox.c0 == w[1].bbox.c0 && w[0].bbox.c1 == w[1].bbox.c1)
+    }
+
+    /// Resources left to the static shell (Table 1's complement).
+    pub fn static_resources(&self) -> Resources {
+        let chip = self.device.chip_resources();
+        let mut pr = Resources::ZERO;
+        for r in &self.regions {
+            pr.add(r.resources(&self.device));
+        }
+        Resources {
+            luts: chip.luts - pr.luts,
+            ffs: chip.ffs - pr.ffs,
+            brams: chip.brams - pr.brams,
+            dsps: chip.dsps - pr.dsps,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::DeviceKind;
+    use super::*;
+
+    #[test]
+    fn standard_floorplans_are_legal() {
+        for kind in [DeviceKind::Zu3eg, DeviceKind::Zu9eg] {
+            let fp = Floorplan::standard(Device::new(kind));
+            assert!(fp.check().is_empty(), "{:?}", fp.check());
+        }
+    }
+
+    #[test]
+    fn region_counts_match_paper() {
+        let u96 = Floorplan::standard(Device::new(DeviceKind::Zu3eg));
+        assert_eq!(u96.regions.len(), 3); // Ultra96/UltraZed: 3 slots
+        let zcu = Floorplan::standard(Device::new(DeviceKind::Zu9eg));
+        assert_eq!(zcu.regions.len(), 4); // ZCU102: 4 slots
+    }
+
+    #[test]
+    fn all_regions_combinable() {
+        let fp = Floorplan::standard(Device::new(DeviceKind::Zu3eg));
+        assert!(fp.combinable(0, 1));
+        assert!(fp.combinable(0, 2));
+        assert!(fp.combinable(1, 2));
+        assert!(fp.combinable(0, 3));
+        assert!(!fp.combinable(1, 3)); // falls off the end
+        assert!(!fp.combinable(0, 0));
+    }
+
+    #[test]
+    fn footprint_mismatch_detected() {
+        let mut fp = Floorplan::standard(Device::new(DeviceKind::Zu3eg));
+        fp.regions[1].bbox.c0 += 1; // shift one slot — footprint now differs
+        fp.regions[1].bbox.c1 += 1;
+        let v = fp.check();
+        assert!(v.iter().any(|x| matches!(x, Violation::FootprintMismatch { .. })), "{v:?}");
+    }
+
+    #[test]
+    fn misaligned_region_detected() {
+        let mut fp = Floorplan::standard(Device::new(DeviceKind::Zu3eg));
+        fp.regions[0].bbox.r0 += 1;
+        assert!(fp
+            .check()
+            .iter()
+            .any(|x| matches!(x, Violation::NotClockAligned { .. })));
+    }
+
+    #[test]
+    fn tunnel_mismatch_detected() {
+        let mut fp = Floorplan::standard(Device::new(DeviceKind::Zu3eg));
+        fp.regions[2].tunnel_rows = vec![0, 1, 2, 3];
+        assert!(fp
+            .check()
+            .iter()
+            .any(|x| matches!(x, Violation::TunnelMismatch { .. })));
+    }
+
+    #[test]
+    fn overlap_detected() {
+        let mut fp = Floorplan::standard(Device::new(DeviceKind::Zu3eg));
+        fp.regions[1].bbox = fp.regions[0].bbox;
+        assert!(fp
+            .check()
+            .iter()
+            .any(|x| matches!(x, Violation::Overlap { .. })));
+    }
+
+    #[test]
+    fn static_resources_complement() {
+        let fp = Floorplan::standard(Device::new(DeviceKind::Zu3eg));
+        let stat = fp.static_resources();
+        let chip = fp.device.chip_resources();
+        // Paper: ~75.5% of Ultra96 LUTs go to accelerators.
+        let pr_frac = 1.0 - stat.luts as f64 / chip.luts as f64;
+        assert!((pr_frac - 0.7551).abs() < 0.001, "{pr_frac}");
+    }
+}

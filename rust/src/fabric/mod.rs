@@ -1,0 +1,129 @@
+//! FPGA fabric model — the hardware substrate FOS runs on (§2.1.1).
+//!
+//! The paper's testbeds are Zynq UltraScale+ devices: ZU3EG behind the
+//! Ultra96/UltraZed boards and ZU9EG behind the ZCU102. We model the
+//! fabric the way the PR flow sees it: a 2-D grid of resource *columns*
+//! (CLB / BRAM / DSP) crossed by clock regions of 60 rows, each column
+//! segment carrying BUFCE_LEAF clock drivers and local routing wires.
+//! Everything the paper's relocation rules (§4.1, requirements 1–4)
+//! talk about — homogeneous resource footprints, identical interface
+//! wire positions, regular clock-spline distribution, no static routing
+//! through PR regions — is checkable on this model, and Table 1 falls
+//! out of it by counting.
+
+mod device;
+mod floorplan;
+mod clock;
+
+pub use clock::ClockPlan;
+pub use device::{Device, DeviceKind};
+pub use floorplan::{Floorplan, PrRegion, Rect};
+
+/// Height of one clock region in tile rows (UltraScale+ fabric).
+pub const CLOCK_REGION_ROWS: usize = 60;
+
+/// Resource column kinds, in the PR flow's eyes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ColumnKind {
+    /// Logic column: 1 CLB per row = 8 LUTs + 16 flip-flops.
+    Clb,
+    /// Block-RAM column: 1 BRAM36 per 5 rows (12 per clock region).
+    Bram,
+    /// DSP column: 1 DSP48 per 2.5 rows (24 per clock region).
+    Dsp,
+    /// Processing system / IO / config — not reconfigurable.
+    Ps,
+}
+
+impl ColumnKind {
+    /// Configuration frames per column per clock region (bitstream model;
+    /// ratios follow the UltraScale+ frame map shape).
+    pub fn frames_per_region(self) -> usize {
+        match self {
+            ColumnKind::Clb => 36,
+            ColumnKind::Bram => 6,
+            ColumnKind::Dsp => 28,
+            ColumnKind::Ps => 0,
+        }
+    }
+
+    pub fn luts_per_row(self) -> usize {
+        match self {
+            ColumnKind::Clb => 8,
+            _ => 0,
+        }
+    }
+
+    pub fn ffs_per_row(self) -> usize {
+        match self {
+            ColumnKind::Clb => 16,
+            _ => 0,
+        }
+    }
+}
+
+/// Aggregate resource counts — the currency of Table 1 and the region
+/// allocator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Resources {
+    pub luts: usize,
+    pub ffs: usize,
+    pub brams: usize,
+    pub dsps: usize,
+}
+
+impl Resources {
+    pub const ZERO: Resources = Resources { luts: 0, ffs: 0, brams: 0, dsps: 0 };
+
+    pub fn add(&mut self, other: Resources) {
+        self.luts += other.luts;
+        self.ffs += other.ffs;
+        self.brams += other.brams;
+        self.dsps += other.dsps;
+    }
+
+    pub fn fits_in(&self, budget: &Resources) -> bool {
+        self.luts <= budget.luts
+            && self.ffs <= budget.ffs
+            && self.brams <= budget.brams
+            && self.dsps <= budget.dsps
+    }
+
+    pub fn scaled(&self, n: usize) -> Resources {
+        Resources {
+            luts: self.luts * n,
+            ffs: self.ffs * n,
+            brams: self.brams * n,
+            dsps: self.dsps * n,
+        }
+    }
+
+    /// LUT utilisation fraction against a budget (the paper's headline
+    /// utilisation metric).
+    pub fn lut_util(&self, budget: &Resources) -> f64 {
+        self.luts as f64 / budget.luts.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resources_arithmetic() {
+        let mut r = Resources { luts: 10, ffs: 20, brams: 1, dsps: 2 };
+        r.add(Resources { luts: 5, ffs: 5, brams: 0, dsps: 1 });
+        assert_eq!(r, Resources { luts: 15, ffs: 25, brams: 1, dsps: 3 });
+        assert!(r.fits_in(&Resources { luts: 15, ffs: 25, brams: 1, dsps: 3 }));
+        assert!(!r.fits_in(&Resources { luts: 14, ffs: 25, brams: 1, dsps: 3 }));
+        assert_eq!(r.scaled(2).luts, 30);
+    }
+
+    #[test]
+    fn column_kind_tables() {
+        assert_eq!(ColumnKind::Clb.luts_per_row(), 8);
+        assert_eq!(ColumnKind::Clb.ffs_per_row(), 16);
+        assert_eq!(ColumnKind::Ps.frames_per_region(), 0);
+        assert!(ColumnKind::Clb.frames_per_region() > ColumnKind::Bram.frames_per_region());
+    }
+}

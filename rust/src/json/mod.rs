@@ -1,0 +1,210 @@
+//! Minimal, dependency-free JSON (the offline vendor set has no serde).
+//!
+//! FOS leans on JSON in three places, all paper-mandated:
+//! - the logical hardware abstraction (§4.2): shell + accelerator
+//!   descriptors (Listings 1–2),
+//! - `artifacts/manifest.json` written by the python AOT pipeline,
+//! - the daemon RPC wire format (our gRPC stand-in, §4.4.1).
+//!
+//! The implementation is a strict RFC 8259 subset: UTF-8 input, `\uXXXX`
+//! escapes (incl. surrogate pairs), i64/f64 numbers. Serialisation is
+//! deterministic (object keys keep insertion order).
+
+mod parse;
+mod ser;
+
+pub use parse::{parse, ParseError};
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A parsed JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    /// Integral number (no fraction/exponent in the source).
+    Int(i64),
+    /// Any other number.
+    Float(f64),
+    Str(String),
+    Array(Vec<Value>),
+    /// Sorted map — deterministic output, cheap lookup.
+    Object(BTreeMap<String, Value>),
+}
+
+impl Value {
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            Value::Float(f) if f.fract() == 0.0 => Some(*f as i64),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        self.as_i64().and_then(|i| u64::try_from(i).ok())
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Int(i) => Some(*i as f64),
+            Value::Float(f) => Some(*f),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    pub fn as_object(&self) -> Option<&BTreeMap<String, Value>> {
+        match self {
+            Value::Object(o) => Some(o),
+            _ => None,
+        }
+    }
+
+    /// Object field lookup; `Value::Null` for missing keys or non-objects.
+    pub fn get(&self, key: &str) -> &Value {
+        const NULL: Value = Value::Null;
+        match self {
+            Value::Object(o) => o.get(key).unwrap_or(&NULL),
+            _ => &NULL,
+        }
+    }
+
+    /// Array index lookup; `Value::Null` out of range.
+    pub fn idx(&self, i: usize) -> &Value {
+        const NULL: Value = Value::Null;
+        match self {
+            Value::Array(a) => a.get(i).unwrap_or(&NULL),
+            _ => &NULL,
+        }
+    }
+
+    pub fn is_null(&self) -> bool {
+        matches!(self, Value::Null)
+    }
+
+    /// Typed accessors that error with a path-labelled message — the
+    /// registry uses these so a malformed descriptor names its field.
+    pub fn req_str(&self, key: &str) -> Result<&str, String> {
+        self.get(key)
+            .as_str()
+            .ok_or_else(|| format!("missing/invalid string field `{key}`"))
+    }
+
+    pub fn req_u64(&self, key: &str) -> Result<u64, String> {
+        self.get(key)
+            .as_u64()
+            .ok_or_else(|| format!("missing/invalid integer field `{key}`"))
+    }
+
+    pub fn req_array(&self, key: &str) -> Result<&[Value], String> {
+        self.get(key)
+            .as_array()
+            .ok_or_else(|| format!("missing/invalid array field `{key}`"))
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&ser::to_string(self))
+    }
+}
+
+/// Builder helpers so call-sites stay terse without serde derive.
+pub fn obj(fields: Vec<(&str, Value)>) -> Value {
+    Value::Object(
+        fields
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect(),
+    )
+}
+
+pub fn arr(items: Vec<Value>) -> Value {
+    Value::Array(items)
+}
+
+pub fn s(v: impl Into<String>) -> Value {
+    Value::Str(v.into())
+}
+
+pub fn i(v: i64) -> Value {
+    Value::Int(v)
+}
+
+pub fn f(v: f64) -> Value {
+    Value::Float(v)
+}
+
+pub fn b(v: bool) -> Value {
+    Value::Bool(v)
+}
+
+pub use ser::{to_string, to_string_pretty};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accessors() {
+        let v = parse(r#"{"a": 1, "b": [true, "x"], "c": 2.5}"#).unwrap();
+        assert_eq!(v.get("a").as_i64(), Some(1));
+        assert_eq!(v.get("b").idx(0).as_bool(), Some(true));
+        assert_eq!(v.get("b").idx(1).as_str(), Some("x"));
+        assert_eq!(v.get("c").as_f64(), Some(2.5));
+        assert!(v.get("missing").is_null());
+        assert!(v.get("a").get("nested").is_null());
+        assert!(v.idx(0).is_null());
+    }
+
+    #[test]
+    fn req_accessors_error_messages() {
+        let v = parse(r#"{"name": "x"}"#).unwrap();
+        assert_eq!(v.req_str("name").unwrap(), "x");
+        let err = v.req_u64("addr").unwrap_err();
+        assert!(err.contains("addr"), "{err}");
+    }
+
+    #[test]
+    fn int_vs_float_discrimination() {
+        let v = parse("[1, 1.0, -3, 1e2]").unwrap();
+        assert_eq!(v.idx(0), &Value::Int(1));
+        assert_eq!(v.idx(1), &Value::Float(1.0));
+        assert_eq!(v.idx(2), &Value::Int(-3));
+        assert_eq!(v.idx(3), &Value::Float(100.0));
+    }
+
+    #[test]
+    fn builders_roundtrip() {
+        let v = obj(vec![
+            ("name", s("pr0")),
+            ("addr", i(0xa000_0000)),
+            ("ok", b(true)),
+            ("list", arr(vec![i(1), i(2)])),
+        ]);
+        let text = to_string(&v);
+        assert_eq!(parse(&text).unwrap(), v);
+    }
+}

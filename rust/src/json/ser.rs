@@ -1,0 +1,152 @@
+//! Deterministic JSON serialisation (compact + pretty).
+
+use super::Value;
+
+/// Compact form — the daemon wire format.
+pub fn to_string(v: &Value) -> String {
+    let mut out = String::new();
+    write_value(v, None, 0, &mut out);
+    out
+}
+
+/// Pretty form — on-disk descriptors and registry files.
+pub fn to_string_pretty(v: &Value) -> String {
+    let mut out = String::new();
+    write_value(v, Some(2), 0, &mut out);
+    out
+}
+
+fn write_value(v: &Value, indent: Option<usize>, level: usize, out: &mut String) {
+    match v {
+        Value::Null => out.push_str("null"),
+        Value::Bool(true) => out.push_str("true"),
+        Value::Bool(false) => out.push_str("false"),
+        Value::Int(i) => out.push_str(&i.to_string()),
+        Value::Float(f) => write_f64(*f, out),
+        Value::Str(s) => write_string(s, out),
+        Value::Array(items) => {
+            if items.is_empty() {
+                out.push_str("[]");
+                return;
+            }
+            out.push('[');
+            for (k, item) in items.iter().enumerate() {
+                if k > 0 {
+                    out.push(',');
+                }
+                newline(indent, level + 1, out);
+                write_value(item, indent, level + 1, out);
+            }
+            newline(indent, level, out);
+            out.push(']');
+        }
+        Value::Object(map) => {
+            if map.is_empty() {
+                out.push_str("{}");
+                return;
+            }
+            out.push('{');
+            for (k, (key, val)) in map.iter().enumerate() {
+                if k > 0 {
+                    out.push(',');
+                }
+                newline(indent, level + 1, out);
+                write_string(key, out);
+                out.push(':');
+                if indent.is_some() {
+                    out.push(' ');
+                }
+                write_value(val, indent, level + 1, out);
+            }
+            newline(indent, level, out);
+            out.push('}');
+        }
+    }
+}
+
+fn newline(indent: Option<usize>, level: usize, out: &mut String) {
+    if let Some(n) = indent {
+        out.push('\n');
+        out.extend(std::iter::repeat(' ').take(n * level));
+    }
+}
+
+fn write_f64(f: f64, out: &mut String) {
+    if f.is_nan() || f.is_infinite() {
+        // JSON has no NaN/Inf; null is the conventional degradation.
+        out.push_str("null");
+    } else if f == f.trunc() && f.abs() < 1e15 {
+        // Keep a `.0` so the value round-trips as Float, not Int.
+        out.push_str(&format!("{f:.1}"));
+    } else {
+        out.push_str(&format!("{f}"));
+    }
+}
+
+fn write_string(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            '\u{0008}' => out.push_str("\\b"),
+            '\u{000C}' => out.push_str("\\f"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32))
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{arr, b, f, i, obj, parse, s};
+    use super::*;
+
+    #[test]
+    fn roundtrip_compact_and_pretty() {
+        let v = obj(vec![
+            ("name", s("vadd")),
+            ("regions", arr(vec![s("pr0"), s("pr1")])),
+            ("luts", i(1420)),
+            ("util", f(0.33)),
+            ("rtl", b(false)),
+            ("meta", Value::Null),
+        ]);
+        for text in [to_string(&v), to_string_pretty(&v)] {
+            assert_eq!(parse(&text).unwrap(), v);
+        }
+    }
+
+    #[test]
+    fn float_keeps_dot_zero() {
+        assert_eq!(to_string(&f(2.0)), "2.0");
+        assert_eq!(parse("2.0").unwrap(), f(2.0));
+        assert_eq!(to_string(&f(0.25)), "0.25");
+    }
+
+    #[test]
+    fn control_chars_escaped() {
+        let v = s("a\u{0001}b\n");
+        let text = to_string(&v);
+        assert_eq!(text, "\"a\\u0001b\\n\"");
+        assert_eq!(parse(&text).unwrap(), v);
+    }
+
+    #[test]
+    fn nan_degrades_to_null() {
+        assert_eq!(to_string(&f(f64::NAN)), "null");
+    }
+
+    #[test]
+    fn empty_collections() {
+        assert_eq!(to_string(&arr(vec![])), "[]");
+        assert_eq!(to_string(&obj(vec![])), "{}");
+        assert_eq!(to_string_pretty(&arr(vec![])), "[]");
+    }
+}

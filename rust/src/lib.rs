@@ -1,0 +1,58 @@
+//! # FOS — a modular FPGA operating system for dynamic workloads
+//!
+//! Full-system reproduction of Vaishnav et al., *"FOS: A Modular FPGA
+//! Operating System for Dynamic Workloads"* (2020), on a simulated Zynq
+//! UltraScale+ substrate. The paper's three usage modes are all here:
+//!
+//! 1. **static acceleration, single tenant** — [`cynq`]-style direct API,
+//! 2. **dynamic (PR) acceleration, single tenant** — [`sched`] +
+//!    [`reconfig`] under one user,
+//! 3. **dynamic acceleration, multi tenant** — the [`daemon`], which
+//!    arbitrates PR slots in time *and* space with resource-elastic
+//!    scheduling (§4.4).
+//!
+//! Accelerator *compute* is real: each catalogued accelerator variant is
+//! a JAX/Pallas program AOT-lowered to HLO text at build time
+//! (`make artifacts`) and executed from Rust through the PJRT CPU client
+//! ([`runtime`]). Python never runs on the request path.
+//!
+//! The FPGA itself is simulated (no silicon in this environment — see
+//! DESIGN.md's substitution table): [`fabric`] models the device grid,
+//! [`bitstream`] the frame-addressed configuration + BitMan relocation,
+//! [`pnr`] the decoupled compilation flow, [`memsim`] the DDR/AXI
+//! bandwidth behaviour, and [`reconfig`] the FPGA-manager latencies.
+
+pub mod json;
+pub mod fabric;
+pub mod bitstream;
+pub mod pnr;
+pub mod shell;
+pub mod registry;
+pub mod driver;
+pub mod memsim;
+pub mod reconfig;
+pub mod runtime;
+pub mod accel;
+pub mod sched;
+pub mod daemon;
+pub mod metrics;
+pub mod testutil;
+
+/// Workspace-root-relative artifact directory (`make artifacts` output).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(dir) = std::env::var("FOS_ARTIFACTS") {
+        return dir.into();
+    }
+    // Walk up from the current dir to find `artifacts/manifest.json` —
+    // works from the repo root, test binaries and bench binaries alike.
+    let mut cur = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = cur.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !cur.pop() {
+            return "artifacts".into();
+        }
+    }
+}

@@ -1,0 +1,158 @@
+//! `fos` — the FOS leader binary.
+//!
+//! Subcommands (hand-rolled parsing; no clap in the offline vendor set):
+//!
+//! ```text
+//! fos daemon [--socket PATH] [--board ultra96|ultrazed|zcu102]
+//! fos run    [--socket PATH] --accel NAME [--requests N]
+//! fos info   [--board BOARD]         # shell + catalog + Table 1 summary
+//! fos registry [--board BOARD] --out FILE
+//! ```
+
+use fos::accel::Catalog;
+use fos::daemon::{Daemon, FpgaRpc, Job};
+use fos::metrics::Table;
+use fos::registry::Registry;
+use fos::shell::{Shell, ShellBoard};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let get = |flag: &str| -> Option<String> {
+        args.iter()
+            .position(|a| a == flag)
+            .and_then(|p| args.get(p + 1))
+            .cloned()
+    };
+    let board = match get("--board").as_deref().unwrap_or("ultra96") {
+        "ultra96" => ShellBoard::Ultra96,
+        "ultrazed" => ShellBoard::UltraZed,
+        "zcu102" => ShellBoard::Zcu102,
+        other => {
+            eprintln!("unknown board {other:?}");
+            std::process::exit(2);
+        }
+    };
+    let socket = get("--socket").unwrap_or_else(|| "/tmp/fos-daemon.sock".to_string());
+
+    match cmd {
+        "daemon" => {
+            let catalog =
+                Catalog::load_default().expect("artifacts missing — run `make artifacts`");
+            let n = catalog.accelerators.len();
+            let _d = Daemon::start(&socket, board, catalog).expect("daemon start");
+            println!(
+                "fos daemon: board={} socket={socket} accelerators={n}",
+                board.name()
+            );
+            println!("press ctrl-c to stop");
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(3600));
+            }
+        }
+        "run" => {
+            let accel = get("--accel").unwrap_or_else(|| "vadd".to_string());
+            let requests: usize =
+                get("--requests").and_then(|s| s.parse().ok()).unwrap_or(1);
+            let catalog = Catalog::load_default().expect("artifacts missing");
+            let info = catalog.get(&accel).cloned().unwrap_or_else(|| {
+                eprintln!("unknown accelerator {accel:?}; have: {:?}", catalog.names());
+                std::process::exit(2);
+            });
+            let mut rpc =
+                FpgaRpc::connect(&socket).expect("connect (is `fos daemon` running?)");
+            let mut rng = fos::testutil::Rng::new(1);
+            let inputs = fos::sched::gen_inputs(&info, &mut rng);
+            let mut params = Vec::new();
+            for ((spec, buf), reg) in
+                info.inputs.iter().zip(&inputs).zip(&info.registers[1..])
+            {
+                let addr = rpc.alloc(spec.bytes()).unwrap();
+                rpc.write_f32(addr, buf).unwrap();
+                params.push((reg.name.clone(), addr));
+            }
+            for (spec, reg) in info
+                .outputs
+                .iter()
+                .zip(&info.registers[1 + info.inputs.len()..])
+            {
+                let addr = rpc.alloc(spec.bytes()).unwrap();
+                params.push((reg.name.clone(), addr));
+            }
+            let jobs: Vec<Job> = (0..requests)
+                .map(|_| Job { accname: accel.clone(), params: params.clone() })
+                .collect();
+            let report = rpc.run(&jobs).unwrap();
+            println!(
+                "{requests} request(s) of {accel}: round-trip {:?}, daemon-side mean {:.1} us, modelled FPGA mean {:.1} us",
+                report.round_trip,
+                mean(&report.latencies_us),
+                mean(&report.modelled_us),
+            );
+        }
+        "info" => {
+            let shell = Shell::build(board);
+            let catalog = Catalog::load_default().ok();
+            let t1 = shell.table1();
+            let mut t = Table::new(
+                format!("{} shell ({} PR regions)", shell.name, shell.region_count()),
+                &["resource", "per region", "chip % (region)", "chip % (all)"],
+            );
+            for (k, (name, v)) in [
+                ("CLB LUTs", t1.region.luts),
+                ("CLB Regs", t1.region.ffs),
+                ("BRAMs", t1.region.brams),
+                ("DSPs", t1.region.dsps),
+            ]
+            .iter()
+            .enumerate()
+            {
+                t.row(&[
+                    name.to_string(),
+                    v.to_string(),
+                    format!("{:.2}", t1.per_region_pct[k]),
+                    format!("{:.2}", t1.total_pct[k]),
+                ]);
+            }
+            t.print();
+            if let Some(c) = catalog {
+                println!("\ncatalog: {} accelerators", c.accelerators.len());
+                for a in &c.accelerators {
+                    println!(
+                        "  {:<14} [{:<6}] {}",
+                        a.name,
+                        a.lang,
+                        a.variants
+                            .iter()
+                            .map(|v| format!("{} ({}R, {} cyc)", v.name, v.regions, v.cycles_per_item))
+                            .collect::<Vec<_>>()
+                            .join(", ")
+                    );
+                }
+            }
+        }
+        "registry" => {
+            let out = get("--out").unwrap_or_else(|| "registry.json".to_string());
+            let shell = Shell::build(board);
+            let catalog = Catalog::load_default().expect("artifacts missing");
+            let reg = Registry::populate(&shell, &catalog).expect("populate");
+            reg.save(&out).expect("save");
+            println!("wrote {out}");
+        }
+        _ => {
+            println!("usage: fos <daemon|run|info|registry> [flags]");
+            println!("  fos daemon   [--socket PATH] [--board ultra96|ultrazed|zcu102]");
+            println!("  fos run      [--socket PATH] --accel NAME [--requests N]");
+            println!("  fos info     [--board BOARD]");
+            println!("  fos registry [--board BOARD] --out FILE");
+        }
+    }
+}
+
+fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}

@@ -1,0 +1,237 @@
+//! The steady-state bandwidth model and the transfer-time API the
+//! scheduler uses for accelerator DMA accounting.
+
+/// Memory-system configuration for one board (see `config_for`).
+#[derive(Debug, Clone, Copy)]
+pub struct MemConfig {
+    /// AXI HP port data width (bits) and clock.
+    pub port_bits: u32,
+    pub port_mhz: u32,
+    /// Outstanding transactions the PS accepts per port per direction.
+    pub max_outstanding: u32,
+    /// Command-to-first-data round trip through the PS interconnect +
+    /// controller queue (ns).
+    pub round_trip_ns: f64,
+    /// DRAM core peak bandwidth (MB/s).
+    pub dram_peak_mbps: f64,
+    /// Row-pollution severity: fraction of the DRAM peak lost to row
+    /// misses when infinitely many masters interleave (0 = immune).
+    pub row_pollution: f64,
+    /// Number of HP ports the shell wires to PR regions.
+    pub ports: usize,
+}
+
+impl MemConfig {
+    /// Port wire limit per direction (MB/s).
+    pub fn wire_mbps(&self) -> f64 {
+        (self.port_bits as f64 / 8.0) * self.port_mhz as f64
+    }
+}
+
+/// Traffic offered on one port.
+#[derive(Debug, Clone, Copy)]
+pub struct PortLoad {
+    /// Burst length in bytes per AXI transaction.
+    pub burst_bytes: u32,
+    pub reads: bool,
+    pub writes: bool,
+}
+
+impl PortLoad {
+    pub fn duplex(burst_bytes: u32) -> PortLoad {
+        PortLoad { burst_bytes, reads: true, writes: true }
+    }
+
+    pub fn read_only(burst_bytes: u32) -> PortLoad {
+        PortLoad { burst_bytes, reads: true, writes: false }
+    }
+
+    fn directions(&self) -> usize {
+        usize::from(self.reads) + usize::from(self.writes)
+    }
+}
+
+/// Steady-state result.
+#[derive(Debug, Clone)]
+pub struct Throughput {
+    /// (read, write) MB/s per port, in input order.
+    pub per_port_dir_mbps: Vec<(f64, f64)>,
+    pub total_mbps: f64,
+    /// The binding constraint, for diagnostics.
+    pub bound_by: Bound,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Bound {
+    PortWire,
+    Outstanding,
+    DramController,
+}
+
+/// The model.
+#[derive(Debug, Clone)]
+pub struct DdrModel {
+    pub cfg: MemConfig,
+}
+
+impl DdrModel {
+    pub fn new(cfg: MemConfig) -> DdrModel {
+        DdrModel { cfg }
+    }
+
+    /// Per-direction demand of one stream at a burst size (MB/s):
+    /// min(wire, outstanding-limited pipeline).
+    fn stream_demand(&self, burst_bytes: u32) -> (f64, Bound) {
+        let beats = (burst_bytes as f64 / (self.cfg.port_bits as f64 / 8.0)).max(1.0);
+        let beat_ns = 1000.0 / self.cfg.port_mhz as f64;
+        let xfer_ns = self.cfg.round_trip_ns + beats * beat_ns;
+        let pipelined =
+            self.cfg.max_outstanding as f64 * burst_bytes as f64 / xfer_ns * 1000.0; // MB/s
+        let wire = self.cfg.wire_mbps();
+        if pipelined < wire {
+            (pipelined, Bound::Outstanding)
+        } else {
+            (wire, Bound::PortWire)
+        }
+    }
+
+    /// DRAM effective ceiling with `k` concurrently active *masters*
+    /// (directions): row-buffer hit rate decays as masters interleave.
+    fn dram_ceiling(&self, k: usize) -> f64 {
+        if k == 0 {
+            return self.cfg.dram_peak_mbps;
+        }
+        let interleave = (k as f64 - 1.0) / k as f64; // 0 for 1 master
+        self.cfg.dram_peak_mbps * (1.0 - self.cfg.row_pollution * interleave)
+    }
+
+    /// Steady-state throughput for a set of active port loads.
+    pub fn steady_state(&self, loads: &[PortLoad]) -> Throughput {
+        assert!(loads.len() <= self.cfg.ports, "more loads than HP ports");
+        let mut demands: Vec<(f64, f64)> = Vec::with_capacity(loads.len());
+        let mut total_demand = 0.0;
+        let mut bound = Bound::PortWire;
+        let mut masters = 0usize;
+        for l in loads {
+            let (d, b) = self.stream_demand(l.burst_bytes);
+            let r = if l.reads { d } else { 0.0 };
+            let w = if l.writes { d } else { 0.0 };
+            demands.push((r, w));
+            total_demand += r + w;
+            masters += l.directions();
+            if b == Bound::Outstanding {
+                bound = Bound::Outstanding;
+            }
+        }
+        let ceiling = self.dram_ceiling(masters);
+        let scale = if total_demand > ceiling {
+            bound = Bound::DramController;
+            ceiling / total_demand
+        } else {
+            1.0
+        };
+        let per_port: Vec<(f64, f64)> =
+            demands.iter().map(|&(r, w)| (r * scale, w * scale)).collect();
+        Throughput {
+            total_mbps: total_demand * scale,
+            per_port_dir_mbps: per_port,
+            bound_by: bound,
+        }
+    }
+
+    /// Time (ns) to move `bytes` one way on one port while `concurrent`
+    /// other masters are active — the scheduler's DMA cost function.
+    /// Accelerator DMAs use long bursts (1 KiB). Unlike the memory
+    /// evaluation kit's pure sequential streams (Figs 17–18),
+    /// accelerator access patterns are strided/tiled, so concurrent
+    /// masters conflict in the row buffers beyond the steady-state
+    /// model: the paper attributes Fig 22's degradation to exactly this
+    /// ("row-bank pollution"). We add 8% per concurrent master.
+    pub fn transfer_ns(&self, bytes: usize, concurrent: usize) -> f64 {
+        let loads: Vec<PortLoad> = std::iter::repeat(PortLoad::duplex(1024))
+            .take((concurrent + 1).min(self.cfg.ports.max(1)))
+            .collect();
+        let t = self.steady_state(&loads);
+        let pattern_pollution = 1.0 + 0.08 * concurrent.min(self.cfg.ports) as f64;
+        let mbps = (t.per_port_dir_mbps[0].0 / pattern_pollution).max(1.0);
+        bytes as f64 / (mbps * 1e6) * 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memsim::config_for;
+    use crate::shell::ShellBoard;
+
+    fn u96() -> DdrModel {
+        DdrModel::new(config_for(ShellBoard::Ultra96))
+    }
+
+    fn zcu() -> DdrModel {
+        DdrModel::new(config_for(ShellBoard::Zcu102))
+    }
+
+    #[test]
+    fn throughput_rises_with_burst_size() {
+        let m = u96();
+        let mut prev = 0.0;
+        for burst in [16u32, 64, 256, 1024] {
+            let t = m.steady_state(&[PortLoad::duplex(burst)]);
+            assert!(t.total_mbps > prev, "burst {burst}: {t:?}");
+            prev = t.total_mbps;
+        }
+    }
+
+    #[test]
+    fn read_write_split_even() {
+        let m = u96();
+        let t = m.steady_state(&[PortLoad::duplex(1024)]);
+        let (r, w) = t.per_port_dir_mbps[0];
+        assert!((r - w).abs() < 1e-9, "paper: even read/write split");
+    }
+
+    #[test]
+    fn read_only_halves_port_traffic() {
+        let m = u96();
+        let duplex = m.steady_state(&[PortLoad::duplex(1024)]);
+        let ro = m.steady_state(&[PortLoad::read_only(1024)]);
+        assert!((ro.total_mbps - duplex.total_mbps / 2.0).abs() < 1.0);
+        assert_eq!(ro.per_port_dir_mbps[0].1, 0.0);
+    }
+
+    #[test]
+    fn zcu102_port_is_wire_limited() {
+        let m = zcu();
+        let t = m.steady_state(&[PortLoad::duplex(4096)]);
+        assert_eq!(t.bound_by, Bound::PortWire);
+        assert!((t.per_port_dir_mbps[0].0 - m.cfg.wire_mbps()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn multi_port_binds_on_dram() {
+        let m = zcu();
+        let t = m.steady_state(&[PortLoad::duplex(1024); 4]);
+        assert_eq!(t.bound_by, Bound::DramController);
+        // Fair arbitration: all ports equal.
+        let first = t.per_port_dir_mbps[0].0;
+        assert!(t.per_port_dir_mbps.iter().all(|&(r, _)| (r - first).abs() < 1e-9));
+    }
+
+    #[test]
+    fn transfer_time_scales_with_contention() {
+        let m = u96();
+        let solo = m.transfer_ns(65536, 0);
+        let busy = m.transfer_ns(65536, 2);
+        assert!(busy > solo, "{busy} vs {solo}");
+        // 64 KiB at ~530 MB/s ≈ 124 us.
+        assert!((solo / 1000.0 - 124.0).abs() < 20.0, "{solo}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn too_many_loads_rejected() {
+        let m = u96();
+        let _ = m.steady_state(&[PortLoad::duplex(64); 4]);
+    }
+}

@@ -1,0 +1,172 @@
+//! Latency statistics and table printers for the evaluation harness.
+
+use std::time::Duration;
+
+/// Online latency recorder: count / mean / min / max / percentiles.
+#[derive(Debug, Clone, Default)]
+pub struct LatencyStats {
+    samples_us: Vec<f64>,
+}
+
+impl LatencyStats {
+    pub fn new() -> LatencyStats {
+        LatencyStats::default()
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        self.samples_us.push(d.as_secs_f64() * 1e6);
+    }
+
+    pub fn record_us(&mut self, us: f64) {
+        self.samples_us.push(us);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples_us.len()
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.samples_us.is_empty() {
+            return 0.0;
+        }
+        self.samples_us.iter().sum::<f64>() / self.samples_us.len() as f64
+    }
+
+    pub fn min_us(&self) -> f64 {
+        self.samples_us.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max_us(&self) -> f64 {
+        self.samples_us.iter().copied().fold(0.0, f64::max)
+    }
+
+    pub fn percentile_us(&self, p: f64) -> f64 {
+        if self.samples_us.is_empty() {
+            return 0.0;
+        }
+        let mut v = self.samples_us.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+        v[idx.min(v.len() - 1)]
+    }
+
+    pub fn summary(&self, label: &str) -> String {
+        format!(
+            "{label}: n={} mean={:.2}us p50={:.2}us p99={:.2}us min={:.2}us max={:.2}us",
+            self.count(),
+            self.mean_us(),
+            self.percentile_us(50.0),
+            self.percentile_us(99.0),
+            self.min_us(),
+            self.max_us()
+        )
+    }
+}
+
+/// Markdown-ish table printer used by every table/figure bench so the
+/// output lines up with the paper's rows.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, headers: &[&str]) -> Table {
+        Table {
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let sep: String = widths
+            .iter()
+            .map(|w| format!("+{}", "-".repeat(w + 2)))
+            .collect::<String>()
+            + "+";
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .zip(&widths)
+                .map(|(c, w)| format!("| {c:<w$} "))
+                .collect::<String>()
+                + "|"
+        };
+        let mut out = format!("\n== {} ==\n{sep}\n{}\n{sep}\n", self.title, fmt_row(&self.headers));
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format a cell as `measured (paper: X)` for paper-vs-measured rows.
+pub fn vs_paper(measured: f64, paper: f64, unit: &str) -> String {
+    format!("{measured:.2}{unit} (paper {paper:.2}{unit})")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basics() {
+        let mut s = LatencyStats::new();
+        for us in [1.0, 2.0, 3.0, 4.0, 100.0] {
+            s.record_us(us);
+        }
+        assert_eq!(s.count(), 5);
+        assert!((s.mean_us() - 22.0).abs() < 1e-9);
+        assert_eq!(s.min_us(), 1.0);
+        assert_eq!(s.max_us(), 100.0);
+        assert_eq!(s.percentile_us(50.0), 3.0);
+        assert_eq!(s.percentile_us(100.0), 100.0);
+    }
+
+    #[test]
+    fn empty_stats_safe() {
+        let s = LatencyStats::new();
+        assert_eq!(s.mean_us(), 0.0);
+        assert_eq!(s.percentile_us(99.0), 0.0);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Demo", &["a", "long header", "c"]);
+        t.row(&["1".into(), "2".into(), "3".into()]);
+        t.row(&["wide cell".into(), "x".into(), "y".into()]);
+        let r = t.render();
+        assert!(r.contains("Demo"));
+        assert!(r.contains("| wide cell "));
+        // All data lines same width.
+        let lines: Vec<&str> = r.lines().filter(|l| l.starts_with('|')).collect();
+        assert!(lines.windows(2).all(|w| w[0].len() == w[1].len()));
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(&["1".into()]);
+    }
+}

@@ -1,0 +1,29 @@
+//! Place & route simulator — the decoupled compilation flow (§4.1).
+//!
+//! Two flows are modelled, matching the paper's Table 3 comparison:
+//!
+//! - **Xilinx PR flow**: the module is implemented as an increment to a
+//!   specific shell, once *per partial region* (N regions → N P&R runs →
+//!   N bitstreams).
+//! - **FOS flow**: the module is implemented *once*, out-of-context,
+//!   against a PR wrapper template with GoAhead-style blocker macros;
+//!   the resulting full bitstream is handed to BitMan, which extracts a
+//!   relocatable partial that serves every region.
+//!
+//! The placer (simulated annealing over the fabric grid) and router
+//! (L-shaped route with congestion rip-up, honouring blockers and
+//! interface tunnels) run for real on synthesised netlists — they
+//! enforce the §4.1 isolation rules structurally. Tool *latency* is a
+//! calibrated model (see [`flow::CostModel`]) because Vivado's wallclock
+//! obviously cannot be reproduced by a simulator; the calibration
+//! constants and their provenance are documented on the type.
+
+mod netlist;
+mod place;
+mod route;
+mod flow;
+
+pub use flow::{compile_fos, compile_xilinx_pr, CompileReport, CostModel, FlowError};
+pub use netlist::{CellKind, Netlist};
+pub use place::{place, Placement, PlaceError};
+pub use route::{route, Blockers, RouteError, RouteStats};

@@ -1,0 +1,123 @@
+//! Synthetic netlists: what "out-of-context synthesis" produces here.
+//!
+//! A netlist is synthesised deterministically from a resource spec
+//! (LUTs/FFs/BRAMs/DSPs — the manifest's per-variant numbers): cells are
+//! created to match the counts, then wired with locality-biased nets the
+//! way real RTL synthesis output clusters (most nets short, a few long),
+//! plus a handful of interface nets that must reach the PR tunnel.
+
+use crate::fabric::Resources;
+use crate::testutil::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CellKind {
+    Lut,
+    Ff,
+    Bram,
+    Dsp,
+}
+
+/// A synthesised module netlist.
+#[derive(Debug, Clone)]
+pub struct Netlist {
+    pub name: String,
+    pub cells: Vec<CellKind>,
+    /// Two-point nets as (driver cell, sink cell).
+    pub nets: Vec<(u32, u32)>,
+    /// Cells that talk to the PR interface tunnel (AXI wrapper pins).
+    pub interface_cells: Vec<u32>,
+}
+
+impl Netlist {
+    /// Synthesise a netlist for a resource spec. Deterministic in
+    /// (name, spec): the same module always synthesises identically.
+    pub fn synthesize(name: &str, res: &Resources) -> Netlist {
+        let seed = name
+            .bytes()
+            .fold(0xcbf29ce484222325u64, |h, b| (h ^ b as u64).wrapping_mul(0x100000001b3));
+        let mut rng = Rng::new(seed);
+
+        let mut cells = Vec::with_capacity(res.luts + res.ffs + res.brams + res.dsps);
+        cells.extend(std::iter::repeat(CellKind::Lut).take(res.luts));
+        cells.extend(std::iter::repeat(CellKind::Ff).take(res.ffs));
+        cells.extend(std::iter::repeat(CellKind::Bram).take(res.brams));
+        cells.extend(std::iter::repeat(CellKind::Dsp).take(res.dsps));
+        let n = cells.len() as u32;
+
+        // ~1.3 nets per cell: 80% local (neighbourhood of 64 in synthesis
+        // order — synthesis output is strongly clustered), 20% global.
+        let net_count = (n as usize * 13) / 10;
+        let mut nets = Vec::with_capacity(net_count);
+        for _ in 0..net_count {
+            let a = rng.below(n as u64) as u32;
+            let b = if rng.bool(0.8) {
+                let lo = a.saturating_sub(32);
+                let hi = (a + 32).min(n - 1);
+                lo + rng.below((hi - lo + 1) as u64) as u32
+            } else {
+                rng.below(n as u64) as u32
+            };
+            if a != b {
+                nets.push((a, b));
+            }
+        }
+
+        // 64 interface nets (the 32-bit AXI-Lite + 128-bit AXI pins, §4.1.2).
+        let interface_cells = (0..64.min(n)).map(|k| rng.below(n as u64).max(k as u64 % n as u64) as u32).collect();
+
+        Netlist { name: name.to_string(), cells, nets, interface_cells }
+    }
+
+    pub fn resources(&self) -> Resources {
+        let mut r = Resources::ZERO;
+        for c in &self.cells {
+            match c {
+                CellKind::Lut => r.luts += 1,
+                CellKind::Ff => r.ffs += 1,
+                CellKind::Bram => r.brams += 1,
+                CellKind::Dsp => r.dsps += 1,
+            }
+        }
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> Resources {
+        Resources { luts: 500, ffs: 800, brams: 4, dsps: 8 }
+    }
+
+    #[test]
+    fn synthesis_matches_spec_and_is_deterministic() {
+        let a = Netlist::synthesize("aes", &spec());
+        assert_eq!(a.resources(), spec());
+        let b = Netlist::synthesize("aes", &spec());
+        assert_eq!(a.nets, b.nets);
+        let c = Netlist::synthesize("dct", &spec());
+        assert_ne!(a.nets, c.nets); // different module, different wiring
+    }
+
+    #[test]
+    fn nets_reference_valid_cells() {
+        let nl = Netlist::synthesize("x", &spec());
+        let n = nl.cells.len() as u32;
+        assert!(nl.nets.iter().all(|&(a, b)| a < n && b < n && a != b));
+        assert!(nl.interface_cells.iter().all(|&c| c < n));
+        assert!(!nl.interface_cells.is_empty());
+    }
+
+    #[test]
+    fn locality_bias_present() {
+        let nl = Netlist::synthesize("y", &Resources { luts: 4000, ffs: 4000, brams: 0, dsps: 0 });
+        let short = nl
+            .nets
+            .iter()
+            .filter(|&&(a, b)| (a as i64 - b as i64).abs() <= 32)
+            .count();
+        // ~80% of nets should be neighbourhood-local.
+        assert!(short as f64 / nl.nets.len() as f64 > 0.6);
+    }
+}

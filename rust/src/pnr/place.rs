@@ -1,0 +1,256 @@
+//! Simulated-annealing placer over the fabric grid.
+//!
+//! Sites follow the column model: a CLB tile offers 8 LUT + 16 FF sites,
+//! BRAM columns one BRAM36 site per 5 rows, DSP columns 2 DSP sites per
+//! 5 rows. Placement is constrained to a bounding box (the PR region or
+//! the combined slot) — the hard module bbox constraint of §4.1.3.
+
+use super::netlist::{CellKind, Netlist};
+use crate::fabric::{ColumnKind, Device, Rect};
+use crate::testutil::Rng;
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PlaceError {
+    /// Not enough sites of a kind inside the bbox.
+    Capacity { kind: &'static str, need: usize, have: usize },
+}
+
+impl fmt::Display for PlaceError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PlaceError::Capacity { kind, need, have } => {
+                write!(f, "placement overflow: need {need} {kind} sites, bbox has {have}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PlaceError {}
+
+/// A completed placement.
+#[derive(Debug, Clone)]
+pub struct Placement {
+    pub bbox: Rect,
+    /// Per-cell (col, row) tile position.
+    pub positions: Vec<(u16, u16)>,
+    /// Half-perimeter wirelength before and after annealing.
+    pub hpwl_initial: u64,
+    pub hpwl_final: u64,
+    pub moves_tried: u64,
+    pub moves_accepted: u64,
+}
+
+/// Enumerate sites of one kind inside a bbox.
+fn sites(device: &Device, bbox: &Rect, kind: CellKind) -> Vec<(u16, u16)> {
+    let mut out = Vec::new();
+    for col in bbox.c0..bbox.c1 {
+        let ck = device.columns[col];
+        for row in bbox.r0..bbox.r1 {
+            let per_tile = match (ck, kind) {
+                (ColumnKind::Clb, CellKind::Lut) => 8,
+                (ColumnKind::Clb, CellKind::Ff) => 16,
+                (ColumnKind::Bram, CellKind::Bram) => usize::from(row % 5 == 0),
+                (ColumnKind::Dsp, CellKind::Dsp) => usize::from(row % 5 == 0 || row % 5 == 2),
+                _ => 0,
+            };
+            for _ in 0..per_tile {
+                out.push((col as u16, row as u16));
+            }
+        }
+    }
+    out
+}
+
+fn hpwl(netlist: &Netlist, pos: &[(u16, u16)]) -> u64 {
+    netlist
+        .nets
+        .iter()
+        .map(|&(a, b)| {
+            let (ac, ar) = pos[a as usize];
+            let (bc, br) = pos[b as usize];
+            (ac.abs_diff(bc) as u64) + (ar.abs_diff(br) as u64)
+        })
+        .sum()
+}
+
+/// Place a netlist inside `bbox` on `device`.
+pub fn place(device: &Device, netlist: &Netlist, bbox: Rect) -> Result<Placement, PlaceError> {
+    // Group cell indices by kind and check capacity.
+    let kinds = [CellKind::Lut, CellKind::Ff, CellKind::Bram, CellKind::Dsp];
+    let names = ["LUT", "FF", "BRAM", "DSP"];
+    let mut positions = vec![(0u16, 0u16); netlist.cells.len()];
+    let mut site_pools: Vec<Vec<(u16, u16)>> = Vec::new();
+    let mut cell_groups: Vec<Vec<u32>> = Vec::new();
+
+    for (k, kind) in kinds.iter().enumerate() {
+        let cells: Vec<u32> = netlist
+            .cells
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| *c == kind)
+            .map(|(i, _)| i as u32)
+            .collect();
+        let pool = sites(device, &bbox, *kind);
+        if cells.len() > pool.len() {
+            return Err(PlaceError::Capacity {
+                kind: names[k],
+                need: cells.len(),
+                have: pool.len(),
+            });
+        }
+        cell_groups.push(cells);
+        site_pools.push(pool);
+    }
+
+    // Initial placement: scan order (synthesis-order locality maps to
+    // spatial locality, a decent SA starting point).
+    let mut rng = Rng::new(0xF05);
+    for (group, pool) in cell_groups.iter().zip(&site_pools) {
+        for (i, &cell) in group.iter().enumerate() {
+            positions[cell as usize] = pool[i];
+        }
+    }
+    let hpwl_initial = hpwl(netlist, &positions);
+
+    // Annealing: swap two same-kind cells, or move a cell to a spare
+    // site; accept improving moves always, worsening with e^{-d/T}.
+    let mut cur = hpwl_initial as i64;
+    let moves = (netlist.cells.len() as u64 * 8).clamp(2_000, 200_000);
+    let mut accepted = 0u64;
+    // Per-cell incident net index for delta evaluation.
+    let mut incident: Vec<Vec<u32>> = vec![Vec::new(); netlist.cells.len()];
+    for (ni, &(a, b)) in netlist.nets.iter().enumerate() {
+        incident[a as usize].push(ni as u32);
+        incident[b as usize].push(ni as u32);
+    }
+    let net_len = |net: u32, pos: &[(u16, u16)]| -> i64 {
+        let (a, b) = netlist.nets[net as usize];
+        let (ac, ar) = pos[a as usize];
+        let (bc, br) = pos[b as usize];
+        (ac.abs_diff(bc) as i64) + (ar.abs_diff(br) as i64)
+    };
+
+    for step in 0..moves {
+        let t = 8.0 * (1.0 - step as f64 / moves as f64) + 0.05;
+        // Pick a kind weighted by population, then two cells of it.
+        let g = loop {
+            let g = rng.below(4) as usize;
+            if cell_groups[g].len() >= 2 {
+                break g;
+            }
+        };
+        let ga = *rng.pick(&cell_groups[g]) as usize;
+        let gb = *rng.pick(&cell_groups[g]) as usize;
+        if ga == gb {
+            continue;
+        }
+        let before: i64 = incident[ga].iter().chain(&incident[gb]).map(|&n| net_len(n, &positions)).sum();
+        positions.swap(ga, gb);
+        let after: i64 = incident[ga].iter().chain(&incident[gb]).map(|&n| net_len(n, &positions)).sum();
+        let delta = after - before;
+        if delta <= 0 || rng.f64() < (-(delta as f64) / t).exp() {
+            cur += delta;
+            accepted += 1;
+        } else {
+            positions.swap(ga, gb); // revert
+        }
+    }
+
+    debug_assert_eq!(cur, hpwl(netlist, &positions) as i64);
+    Ok(Placement {
+        bbox,
+        positions,
+        hpwl_initial,
+        hpwl_final: cur as u64,
+        moves_tried: moves,
+        moves_accepted: accepted,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fabric::{DeviceKind, Floorplan, Resources};
+
+    fn region_bbox() -> (Device, Rect) {
+        let fp = Floorplan::standard(Device::new(DeviceKind::Zu3eg));
+        (fp.device.clone(), fp.regions[0].bbox)
+    }
+
+    #[test]
+    fn placement_fits_and_improves() {
+        let (dev, bbox) = region_bbox();
+        let nl = Netlist::synthesize(
+            "aes",
+            &Resources { luts: 5860, ffs: 10548, brams: 0, dsps: 18 },
+        );
+        let p = place(&dev, &nl, bbox).unwrap();
+        assert!(p.hpwl_final <= p.hpwl_initial, "{} > {}", p.hpwl_final, p.hpwl_initial);
+        // Every cell inside the bbox.
+        assert!(p
+            .positions
+            .iter()
+            .all(|&(c, r)| bbox.contains(c as usize, r as usize)));
+        assert!(p.moves_accepted > 0);
+    }
+
+    #[test]
+    fn capacity_overflow_rejected() {
+        let (dev, bbox) = region_bbox();
+        let nl = Netlist::synthesize(
+            "huge",
+            &Resources { luts: 20_000, ffs: 0, brams: 0, dsps: 0 },
+        );
+        assert!(matches!(
+            place(&dev, &nl, bbox),
+            Err(PlaceError::Capacity { kind: "LUT", .. })
+        ));
+    }
+
+    #[test]
+    fn bram_dsp_sites_counted_correctly() {
+        let (dev, bbox) = region_bbox();
+        // Exactly the Table-1 per-region capacity must fit.
+        let nl = Netlist::synthesize(
+            "full",
+            &Resources { luts: 17760, ffs: 35520, brams: 72, dsps: 120 },
+        );
+        assert!(place(&dev, &nl, bbox).is_ok());
+        let nl2 = Netlist::synthesize(
+            "toomanybram",
+            &Resources { luts: 0, ffs: 0, brams: 73, dsps: 0 },
+        );
+        assert!(place(&dev, &nl2, bbox).is_err());
+    }
+
+    #[test]
+    fn combined_region_doubles_capacity() {
+        let fp = Floorplan::standard(Device::new(DeviceKind::Zu3eg));
+        let combined = Rect {
+            c0: fp.regions[0].bbox.c0,
+            c1: fp.regions[0].bbox.c1,
+            r0: fp.regions[0].bbox.r0,
+            r1: fp.regions[1].bbox.r1,
+        };
+        let nl = Netlist::synthesize(
+            "big",
+            &Resources { luts: 30_000, ffs: 60_000, brams: 100, dsps: 200 },
+        );
+        assert!(place(&fp.device, &nl, fp.regions[0].bbox).is_err());
+        assert!(place(&fp.device, &nl, combined).is_ok());
+    }
+
+    #[test]
+    fn deterministic_given_same_inputs() {
+        let (dev, bbox) = region_bbox();
+        let nl = Netlist::synthesize(
+            "det",
+            &Resources { luts: 1000, ffs: 1500, brams: 8, dsps: 12 },
+        );
+        let a = place(&dev, &nl, bbox).unwrap();
+        let b = place(&dev, &nl, bbox).unwrap();
+        assert_eq!(a.positions, b.positions);
+        assert_eq!(a.hpwl_final, b.hpwl_final);
+    }
+}

@@ -1,0 +1,271 @@
+//! The JSON registry — the logical hardware abstraction (§4.2).
+//!
+//! Shells and accelerators are registered as Listing-1/Listing-2 JSON
+//! descriptors; upper layers (daemon, client libraries) resolve hardware
+//! purely by *logical function name*, never by implementation detail —
+//! that's what lets the shell or an accelerator change underneath a
+//! running software stack.
+
+use crate::accel::Catalog;
+use crate::json::{arr, i, obj, parse, s, to_string_pretty, Value};
+use crate::shell::Shell;
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::Path;
+
+#[derive(Debug)]
+pub enum RegistryError {
+    Io(std::io::Error),
+    Json(String),
+    Schema(String),
+    NotFound(String),
+    Duplicate(String),
+}
+
+impl fmt::Display for RegistryError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RegistryError::Io(e) => write!(f, "registry io: {e}"),
+            RegistryError::Json(e) => write!(f, "registry json: {e}"),
+            RegistryError::Schema(e) => write!(f, "registry schema: {e}"),
+            RegistryError::NotFound(n) => write!(f, "not registered: {n}"),
+            RegistryError::Duplicate(n) => write!(f, "already registered: {n}"),
+        }
+    }
+}
+
+impl std::error::Error for RegistryError {}
+
+/// The central JSON-backed registry.
+#[derive(Debug, Default, Clone)]
+pub struct Registry {
+    shells: BTreeMap<String, Value>,
+    accels: BTreeMap<String, Value>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Register a shell from its Listing-1 descriptor.
+    pub fn register_shell(&mut self, descriptor: Value) -> Result<(), RegistryError> {
+        let name = descriptor
+            .req_str("name")
+            .map_err(RegistryError::Schema)?
+            .to_string();
+        descriptor.req_str("bitfile").map_err(RegistryError::Schema)?;
+        descriptor.req_array("regions").map_err(RegistryError::Schema)?;
+        if self.shells.insert(name.clone(), descriptor).is_some() {
+            return Err(RegistryError::Duplicate(name));
+        }
+        Ok(())
+    }
+
+    /// Register an accelerator from its Listing-2 descriptor.
+    pub fn register_accel(&mut self, descriptor: Value) -> Result<(), RegistryError> {
+        let name = descriptor
+            .req_str("name")
+            .map_err(RegistryError::Schema)?
+            .to_string();
+        descriptor.req_array("bitfiles").map_err(RegistryError::Schema)?;
+        descriptor.req_array("registers").map_err(RegistryError::Schema)?;
+        if self.accels.insert(name.clone(), descriptor).is_some() {
+            return Err(RegistryError::Duplicate(name));
+        }
+        Ok(())
+    }
+
+    /// Replace an existing accelerator descriptor (modular update: new
+    /// implementation under the same logical name — §5.4).
+    pub fn update_accel(&mut self, descriptor: Value) -> Result<(), RegistryError> {
+        let name = descriptor
+            .req_str("name")
+            .map_err(RegistryError::Schema)?
+            .to_string();
+        if !self.accels.contains_key(&name) {
+            return Err(RegistryError::NotFound(name));
+        }
+        self.accels.insert(name, descriptor);
+        Ok(())
+    }
+
+    pub fn shell(&self, name: &str) -> Result<&Value, RegistryError> {
+        self.shells
+            .get(name)
+            .ok_or_else(|| RegistryError::NotFound(name.to_string()))
+    }
+
+    pub fn accel(&self, name: &str) -> Result<&Value, RegistryError> {
+        self.accels
+            .get(name)
+            .ok_or_else(|| RegistryError::NotFound(name.to_string()))
+    }
+
+    pub fn shell_names(&self) -> Vec<&str> {
+        self.shells.keys().map(|k| k.as_str()).collect()
+    }
+
+    pub fn accel_names(&self) -> Vec<&str> {
+        self.accels.keys().map(|k| k.as_str()).collect()
+    }
+
+    /// Build a fully-populated registry: shell descriptor from the
+    /// builder + one Listing-2 descriptor per catalogued accelerator.
+    pub fn populate(shell: &Shell, catalog: &Catalog) -> Result<Registry, RegistryError> {
+        let mut reg = Registry::new();
+        reg.register_shell(shell.descriptor())?;
+        for a in &catalog.accelerators {
+            reg.register_accel(accel_descriptor(shell, a))?;
+        }
+        Ok(reg)
+    }
+
+    /// Serialise to a single registry JSON document.
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("shells", arr(self.shells.values().cloned().collect())),
+            ("accelerators", arr(self.accels.values().cloned().collect())),
+        ])
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<(), RegistryError> {
+        std::fs::write(path, to_string_pretty(&self.to_json())).map_err(RegistryError::Io)
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Registry, RegistryError> {
+        let text = std::fs::read_to_string(path).map_err(RegistryError::Io)?;
+        let v = parse(&text).map_err(|e| RegistryError::Json(e.to_string()))?;
+        let mut reg = Registry::new();
+        for sh in v.req_array("shells").map_err(RegistryError::Schema)? {
+            reg.register_shell(sh.clone())?;
+        }
+        for a in v.req_array("accelerators").map_err(RegistryError::Schema)? {
+            reg.register_accel(a.clone())?;
+        }
+        Ok(reg)
+    }
+}
+
+/// Generate the Listing-2 descriptor for an accelerator on a shell —
+/// what Vivado-HLS metadata generates automatically in the real flow.
+pub fn accel_descriptor(shell: &Shell, a: &crate::accel::Accelerator) -> Value {
+    let all_regions: Vec<Value> = shell
+        .floorplan
+        .regions
+        .iter()
+        .map(|r| s(r.name.clone()))
+        .collect();
+    obj(vec![
+        ("name", s(a.name.clone())),
+        ("lang", s(a.lang.clone())),
+        (
+            "bitfiles",
+            arr(a
+                .variants
+                .iter()
+                .map(|v| {
+                    obj(vec![
+                        ("name", s(format!("{}.bin", v.name))),
+                        ("shell", s(shell.board.name())),
+                        // Relocatable: every region is a legal host.
+                        ("region", arr(all_regions.clone())),
+                        ("regions_needed", i(v.regions as i64)),
+                    ])
+                })
+                .collect()),
+        ),
+        (
+            "registers",
+            arr(a
+                .registers
+                .iter()
+                .map(|r| {
+                    obj(vec![
+                        ("name", s(r.name.clone())),
+                        ("offset", s(format!("{:#x}", r.offset))),
+                    ])
+                })
+                .collect()),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::shell::ShellBoard;
+
+    fn setup() -> (Shell, Catalog) {
+        (
+            Shell::build(ShellBoard::Ultra96),
+            Catalog::load_default().unwrap(),
+        )
+    }
+
+    #[test]
+    fn populate_and_lookup() {
+        let (shell, catalog) = setup();
+        let reg = Registry::populate(&shell, &catalog).unwrap();
+        assert_eq!(reg.shell_names(), vec!["Ultra96_100MHz_2"]);
+        assert_eq!(reg.accel_names().len(), 10);
+        let vadd = reg.accel("vadd").unwrap();
+        // Listing-2 shape: bitfiles with shell + region list, registers
+        // with hex offsets.
+        let bf = vadd.req_array("bitfiles").unwrap();
+        assert_eq!(bf[0].req_str("shell").unwrap(), "Ultra96");
+        assert_eq!(bf[0].req_array("region").unwrap().len(), 3);
+        let regs = vadd.req_array("registers").unwrap();
+        assert_eq!(regs[0].req_str("name").unwrap(), "control");
+        assert_eq!(regs[1].req_str("offset").unwrap(), "0x10");
+        assert!(reg.accel("nonexistent").is_err());
+    }
+
+    #[test]
+    fn duplicate_rejected_update_allowed() {
+        let (shell, catalog) = setup();
+        let mut reg = Registry::populate(&shell, &catalog).unwrap();
+        let vadd = catalog.get("vadd").unwrap();
+        let desc = accel_descriptor(&shell, vadd);
+        assert!(matches!(
+            reg.register_accel(desc.clone()),
+            Err(RegistryError::Duplicate(_))
+        ));
+        // update_accel is the modular-update path (§5.4).
+        reg.update_accel(desc).unwrap();
+        let mut unknown = accel_descriptor(&shell, vadd);
+        if let Value::Object(o) = &mut unknown {
+            o.insert("name".into(), s("brand_new"));
+        }
+        assert!(matches!(
+            reg.update_accel(unknown),
+            Err(RegistryError::NotFound(_))
+        ));
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let (shell, catalog) = setup();
+        let reg = Registry::populate(&shell, &catalog).unwrap();
+        let dir = std::env::temp_dir().join("fos_registry_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("registry.json");
+        reg.save(&path).unwrap();
+        let back = Registry::load(&path).unwrap();
+        assert_eq!(back.to_json(), reg.to_json());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn schema_validation() {
+        let mut reg = Registry::new();
+        assert!(matches!(
+            reg.register_shell(parse(r#"{"name": "x"}"#).unwrap()),
+            Err(RegistryError::Schema(_))
+        ));
+        assert!(matches!(
+            reg.register_accel(parse(r#"{"bitfiles": []}"#).unwrap()),
+            Err(RegistryError::Schema(_))
+        ));
+    }
+}

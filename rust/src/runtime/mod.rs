@@ -1,0 +1,319 @@
+//! PJRT runtime: loads the AOT HLO artifacts and executes accelerator
+//! compute — the bridge between the Rust request path and the
+//! python-authored (but never python-executed) L2/L1 layers.
+//!
+//! Interchange is HLO *text* (`artifacts/*.hlo.txt`): jax ≥ 0.5 emits
+//! HloModuleProto with 64-bit instruction ids that xla_extension 0.5.1
+//! rejects, while the text parser reassigns ids (see gen_hlo notes in
+//! /opt/xla-example). Each variant compiles once on first use and is
+//! cached for the lifetime of the executor.
+//!
+//! The PJRT client is owned by a dedicated worker thread (the xla
+//! wrapper types are not Sync, and a single compile/execute stream
+//! matches the single configuration port of the simulated fabric);
+//! [`Executor`] handles are cheap to clone and thread-safe.
+
+use crate::accel::Catalog;
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// An execution request's reply.
+type Reply<T> = mpsc::Sender<T>;
+
+enum Req {
+    Execute {
+        variant: String,
+        inputs: Vec<Vec<f32>>,
+        reply: Reply<Result<ExecOutput, String>>,
+    },
+    Preload {
+        variant: String,
+        reply: Reply<Result<Duration, String>>,
+    },
+    Stats {
+        reply: Reply<ExecStats>,
+    },
+    Stop,
+}
+
+/// One execution's outputs + timing.
+#[derive(Debug, Clone)]
+pub struct ExecOutput {
+    pub outputs: Vec<Vec<f32>>,
+    pub exec_wallclock: Duration,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct ExecStats {
+    pub executions: u64,
+    pub compiles: u64,
+    pub compile_time: Duration,
+    pub exec_time: Duration,
+}
+
+/// Thread-safe handle to the PJRT worker.
+#[derive(Clone)]
+pub struct Executor {
+    tx: mpsc::Sender<Req>,
+}
+
+impl Executor {
+    /// Spawn the worker around a catalog.
+    pub fn new(catalog: Catalog) -> Executor {
+        let (tx, rx) = mpsc::channel::<Req>();
+        std::thread::Builder::new()
+            .name("fos-pjrt".into())
+            .spawn(move || worker(catalog, rx))
+            .expect("spawn pjrt worker");
+        Executor { tx }
+    }
+
+    /// Execute one work item on an accelerator variant. `inputs` are
+    /// flattened f32 buffers matching the catalogued shapes.
+    pub fn execute(
+        &self,
+        variant: &str,
+        inputs: Vec<Vec<f32>>,
+    ) -> Result<ExecOutput, String> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Req::Execute { variant: variant.to_string(), inputs, reply })
+            .map_err(|_| "executor stopped".to_string())?;
+        rx.recv().map_err(|_| "executor died".to_string())?
+    }
+
+    /// Compile a variant ahead of time; returns compile latency.
+    pub fn preload(&self, variant: &str) -> Result<Duration, String> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Req::Preload { variant: variant.to_string(), reply })
+            .map_err(|_| "executor stopped".to_string())?;
+        rx.recv().map_err(|_| "executor died".to_string())?
+    }
+
+    pub fn stats(&self) -> ExecStats {
+        let (reply, rx) = mpsc::channel();
+        if self.tx.send(Req::Stats { reply }).is_err() {
+            return ExecStats::default();
+        }
+        rx.recv().unwrap_or_default()
+    }
+
+    pub fn stop(&self) {
+        let _ = self.tx.send(Req::Stop);
+    }
+}
+
+struct Compiled {
+    exe: xla::PjRtLoadedExecutable,
+    in_shapes: Vec<Vec<i64>>,
+    out_elems: Vec<usize>,
+}
+
+fn worker(catalog: Catalog, rx: mpsc::Receiver<Req>) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            // Fail every request with the construction error.
+            let msg = format!("pjrt cpu client: {e}");
+            while let Ok(req) = rx.recv() {
+                match req {
+                    Req::Execute { reply, .. } => {
+                        let _ = reply.send(Err(msg.clone()));
+                    }
+                    Req::Preload { reply, .. } => {
+                        let _ = reply.send(Err(msg.clone()));
+                    }
+                    Req::Stats { reply } => {
+                        let _ = reply.send(ExecStats::default());
+                    }
+                    Req::Stop => break,
+                }
+            }
+            return;
+        }
+    };
+    let mut cache: HashMap<String, Compiled> = HashMap::new();
+    let mut stats = ExecStats::default();
+
+    while let Ok(req) = rx.recv() {
+        match req {
+            Req::Stop => break,
+            Req::Stats { reply } => {
+                let _ = reply.send(stats.clone());
+            }
+            Req::Preload { variant, reply } => {
+                let t0 = Instant::now();
+                let r = ensure(&client, &catalog, &mut cache, &variant, &mut stats)
+                    .map(|_| t0.elapsed());
+                let _ = reply.send(r);
+            }
+            Req::Execute { variant, inputs, reply } => {
+                let r = (|| {
+                    ensure(&client, &catalog, &mut cache, &variant, &mut stats)?;
+                    let c = cache.get(&variant).unwrap();
+                    if inputs.len() != c.in_shapes.len() {
+                        return Err(format!(
+                            "{variant}: expected {} inputs, got {}",
+                            c.in_shapes.len(),
+                            inputs.len()
+                        ));
+                    }
+                    let mut literals = Vec::with_capacity(inputs.len());
+                    for (buf, shape) in inputs.iter().zip(&c.in_shapes) {
+                        let want: i64 = shape.iter().product();
+                        if buf.len() as i64 != want {
+                            return Err(format!(
+                                "{variant}: input length {} != shape {:?}",
+                                buf.len(),
+                                shape
+                            ));
+                        }
+                        let lit = xla::Literal::vec1(buf)
+                            .reshape(shape)
+                            .map_err(|e| format!("reshape: {e}"))?;
+                        literals.push(lit);
+                    }
+                    let t0 = Instant::now();
+                    let result = c
+                        .exe
+                        .execute::<xla::Literal>(&literals)
+                        .map_err(|e| format!("execute: {e}"))?;
+                    let root = result[0][0]
+                        .to_literal_sync()
+                        .map_err(|e| format!("to_literal: {e}"))?;
+                    // aot.py lowers with return_tuple=True; all catalogued
+                    // accelerators return a 1-tuple.
+                    let out = root.to_tuple1().map_err(|e| format!("tuple: {e}"))?;
+                    let values = out.to_vec::<f32>().map_err(|e| format!("to_vec: {e}"))?;
+                    let exec_wallclock = t0.elapsed();
+                    stats.executions += 1;
+                    stats.exec_time += exec_wallclock;
+                    if values.len() != c.out_elems[0] {
+                        return Err(format!(
+                            "{variant}: output length {} != expected {}",
+                            values.len(),
+                            c.out_elems[0]
+                        ));
+                    }
+                    Ok(ExecOutput { outputs: vec![values], exec_wallclock })
+                })();
+                let _ = reply.send(r);
+            }
+        }
+    }
+}
+
+fn ensure(
+    client: &xla::PjRtClient,
+    catalog: &Catalog,
+    cache: &mut HashMap<String, Compiled>,
+    variant: &str,
+    stats: &mut ExecStats,
+) -> Result<(), String> {
+    if cache.contains_key(variant) {
+        return Ok(());
+    }
+    let (accel, v) = catalog
+        .accelerators
+        .iter()
+        .find_map(|a| a.variant(variant).map(|v| (a, v)))
+        .ok_or_else(|| format!("unknown variant {variant:?}"))?;
+    let path = catalog.hlo_path(v);
+    let t0 = Instant::now();
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().ok_or("non-utf8 path")?,
+    )
+    .map_err(|e| format!("parse {}: {e}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    let exe = client.compile(&comp).map_err(|e| format!("compile {variant}: {e}"))?;
+    stats.compiles += 1;
+    stats.compile_time += t0.elapsed();
+    cache.insert(
+        variant.to_string(),
+        Compiled {
+            exe,
+            in_shapes: accel
+                .inputs
+                .iter()
+                .map(|t| t.shape.iter().map(|&d| d as i64).collect())
+                .collect(),
+            out_elems: accel.outputs.iter().map(|t| t.elements()).collect(),
+        },
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::Rng;
+    use once_cell::sync::Lazy;
+
+    // One executor for the whole test binary — PJRT client construction
+    // is expensive and the worker serialises execution anyway.
+    static EXEC: Lazy<Executor> =
+        Lazy::new(|| Executor::new(Catalog::load_default().unwrap()));
+
+    #[test]
+    fn vadd_computes_real_numbers() {
+        let mut rng = Rng::new(1);
+        let a: Vec<f32> = (0..4096).map(|_| rng.normal()).collect();
+        let b: Vec<f32> = (0..4096).map(|_| rng.normal()).collect();
+        let out = EXEC.execute("vadd_v1", vec![a.clone(), b.clone()]).unwrap();
+        assert_eq!(out.outputs[0].len(), 4096);
+        for k in 0..4096 {
+            assert!((out.outputs[0][k] - (a[k] + b[k])).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn variants_agree_numerically() {
+        // Resource-elastic replacement must preserve semantics (§4.4.2).
+        let mut rng = Rng::new(2);
+        let img: Vec<f32> = (0..128 * 128).map(|_| rng.normal()).collect();
+        let v1 = EXEC.execute("sobel_v1", vec![img.clone()]).unwrap();
+        let v2 = EXEC.execute("sobel_v2", vec![img]).unwrap();
+        for (a, b) in v1.outputs[0].iter().zip(&v2.outputs[0]) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn mm_matches_cpu_reference() {
+        let mut rng = Rng::new(3);
+        let a: Vec<f32> = (0..64 * 64).map(|_| rng.normal()).collect();
+        let b: Vec<f32> = (0..64 * 64).map(|_| rng.normal()).collect();
+        let out = EXEC.execute("mm_v1", vec![a.clone(), b.clone()]).unwrap();
+        for i in [0usize, 7, 63] {
+            for j in [0usize, 31, 63] {
+                let want: f32 = (0..64).map(|k| a[i * 64 + k] * b[k * 64 + j]).sum();
+                let got = out.outputs[0][i * 64 + j];
+                assert!((got - want).abs() < 1e-2, "({i},{j}): {got} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn shape_validation() {
+        assert!(EXEC.execute("vadd_v1", vec![vec![0.0; 10]]).is_err());
+        assert!(EXEC
+            .execute("vadd_v1", vec![vec![0.0; 10], vec![0.0; 4096]])
+            .is_err());
+        assert!(EXEC.execute("no_such_variant", vec![]).is_err());
+    }
+
+    #[test]
+    fn preload_then_execute_is_fast_path() {
+        let lat = EXEC.preload("dct_v1").unwrap();
+        let _ = lat; // first compile latency (can be ~ms..s)
+        let stats_before = EXEC.stats();
+        let img: Vec<f32> = vec![1.0; 64 * 64];
+        EXEC.execute("dct_v1", vec![img]).unwrap();
+        let stats_after = EXEC.stats();
+        // No recompile on the execute.
+        assert_eq!(stats_after.compiles, stats_before.compiles);
+        assert_eq!(stats_after.executions, stats_before.executions + 1);
+    }
+}

@@ -1,0 +1,39 @@
+//! The resource-elastic scheduler (§4.4) — FOS's headline contribution.
+//!
+//! Users submit *jobs*; a job is a bag of independent, run-to-completion
+//! **acceleration requests** (the data-parallel decomposition the
+//! application chose, §4.4.2 — e.g. an image chopped into stripes).
+//! The scheduler arbitrates the shell's PR regions between users:
+//!
+//! - **round-robin across users** at request granularity (cooperative
+//!   scheduling: a request runs to completion, then the accelerator is
+//!   relinquished, §4.4.3);
+//! - **replication**: one user's independent requests fan out over all
+//!   free regions;
+//! - **replacement**: when adjacent regions are free and the accelerator
+//!   has a bigger Pareto-optimal implementation, the scheduler switches
+//!   to it (module replacement — the DCT super-linear win of Fig 19);
+//! - **reuse**: a region already configured with the right accelerator
+//!   is used without reconfiguration (cross-application sharing);
+//! - **time-multiplexing** when requests outnumber regions.
+//!
+//! The engine is a virtual-time discrete-event simulation: latencies
+//! come from the manifest cycle models (compute), the memsim DDR model
+//! (DMA), and the reconfig PCAP model (partial loads). Real PJRT
+//! compute can be attached ([`SimConfig::executor`]) so results are
+//! genuinely produced — virtual time stays independent of host speed.
+
+mod sim;
+mod workload;
+
+pub use sim::{gen_inputs, simulate, Policy, RegionTrace, SimConfig, SimResult, TraceEvent};
+pub use workload::{JobSpec, Workload};
+
+use std::time::Duration;
+
+/// Virtual nanoseconds.
+pub type SimTime = u64;
+
+pub fn to_duration(t: SimTime) -> Duration {
+    Duration::from_nanos(t)
+}

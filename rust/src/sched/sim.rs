@@ -1,0 +1,691 @@
+//! The virtual-time discrete-event engine implementing both policies:
+//! FOS resource-elastic scheduling and the fixed-module baseline
+//! (Fig 15's comparison).
+
+use super::workload::Workload;
+use super::SimTime;
+use crate::accel::Catalog;
+use crate::memsim::{config_for, DdrModel};
+use crate::reconfig::FpgaManager;
+use crate::runtime::Executor;
+use crate::shell::{Shell, ShellBoard};
+use crate::testutil::Rng;
+use std::collections::{BinaryHeap, VecDeque};
+use std::cmp::Reverse;
+
+/// Scheduling policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// FOS: replication + replacement + reuse + time-mux (§4.4.3).
+    Elastic,
+    /// Baseline: one fixed 1-region module per user, run-to-completion.
+    Fixed,
+}
+
+/// Simulation configuration.
+pub struct SimConfig {
+    pub board: ShellBoard,
+    pub policy: Policy,
+    /// Attach the PJRT executor to really compute every tile (slower;
+    /// virtual time is unaffected). `None` = latency-model only.
+    pub executor: Option<Executor>,
+    /// Restrict the number of usable PR regions (Fig 19 sweeps the
+    /// resources available for acceleration). `None` = all.
+    pub region_limit: Option<usize>,
+}
+
+impl SimConfig {
+    pub fn new(board: ShellBoard, policy: Policy) -> SimConfig {
+        SimConfig { board, policy, executor: None, region_limit: None }
+    }
+
+    pub fn with_regions(mut self, n: usize) -> SimConfig {
+        self.region_limit = Some(n);
+        self
+    }
+}
+
+/// One allocation in the schedule trace (Fig 15's boxes).
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    pub start: SimTime,
+    pub end: SimTime,
+    pub region: usize,
+    pub span: usize,
+    pub user: usize,
+    pub accel: String,
+    pub variant: String,
+    pub tiles: usize,
+    pub reconfigured: bool,
+}
+
+/// Per-region busy time (utilisation reporting).
+#[derive(Debug, Clone, Default)]
+pub struct RegionTrace {
+    pub busy_ns: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    pub makespan: SimTime,
+    /// Completion time of each job in workload order.
+    pub job_completion: Vec<SimTime>,
+    /// Completion of each user's *last* job.
+    pub user_completion: Vec<SimTime>,
+    pub reconfigs: u64,
+    pub reuses: u64,
+    pub trace: Vec<TraceEvent>,
+    pub regions: Vec<RegionTrace>,
+    /// FNV checksum over all real outputs (0 when executor is None) —
+    /// lets tests assert that elastic vs fixed compute identical data.
+    pub output_checksum: u64,
+    pub tiles_executed: u64,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct Loaded {
+    accel: String,
+    variant: String,
+    span: usize,
+}
+
+#[derive(Debug, Clone)]
+struct Region {
+    loaded: Option<Loaded>,
+    /// Anchor region index if this slot is the tail of a combined span.
+    tail_of: Option<usize>,
+    busy: bool,
+}
+
+#[derive(Debug, Clone)]
+struct PendingReq {
+    job: usize,
+    tiles: usize,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+enum Event {
+    Arrival(usize),
+    /// Completion at anchor region.
+    Complete { anchor: usize, job: usize },
+}
+
+/// Run a workload under a policy on a board.
+pub fn simulate(catalog: &Catalog, workload: &Workload, cfg: &SimConfig) -> SimResult {
+    let mut shell = Shell::build(cfg.board);
+    if let Some(limit) = cfg.region_limit {
+        shell.floorplan.regions.truncate(limit.max(1));
+    }
+    let ddr = DdrModel::new(config_for(cfg.board));
+    let n_regions = shell.region_count();
+    let n_users = workload.users();
+
+    // Precompute per-span partial-bitstream reconfig latency.
+    let region_bytes = partial_bytes(&shell);
+    let reconfig_ns =
+        |span: usize| -> u64 { FpgaManager::latency_for(region_bytes * span, true).as_nanos() as u64 };
+
+    let mut regions: Vec<Region> =
+        (0..n_regions).map(|_| Region { loaded: None, tail_of: None, busy: false }).collect();
+    let mut queues: Vec<VecDeque<PendingReq>> = vec![VecDeque::new(); n_users];
+    let mut fixed_home: Vec<Option<usize>> = vec![None; n_users]; // Fixed policy
+    let mut jobs_left: Vec<usize> = workload.jobs.iter().map(|j| j.requests).collect();
+    let mut result = SimResult {
+        makespan: 0,
+        job_completion: vec![0; workload.jobs.len()],
+        user_completion: vec![0; n_users],
+        reconfigs: 0,
+        reuses: 0,
+        trace: Vec::new(),
+        regions: vec![RegionTrace::default(); n_regions],
+        output_checksum: 0xcbf29ce484222325,
+        tiles_executed: 0,
+    };
+
+    let mut heap: BinaryHeap<Reverse<(SimTime, u64, Event)>> = BinaryHeap::new();
+    let mut seq = 0u64;
+    for (j, job) in workload.jobs.iter().enumerate() {
+        heap.push(Reverse((job.arrival, seq, Event::Arrival(j))));
+        seq += 1;
+    }
+    let mut rr = 0usize;
+    let mut rng = Rng::new(0xD15);
+
+    while let Some(Reverse((now, s0, ev))) = heap.pop() {
+        // Drain every event at this timestamp before dispatching, so
+        // simultaneous arrivals see each other (RR fairness at t=0).
+        let mut batch = vec![ev];
+        let _ = s0;
+        while let Some(Reverse((t, _, _))) = heap.peek() {
+            if *t != now {
+                break;
+            }
+            let Reverse((_, _, e)) = heap.pop().unwrap();
+            batch.push(e);
+        }
+        for ev in batch {
+            match ev {
+                Event::Arrival(j) => {
+                    let job = &workload.jobs[j];
+                    for _ in 0..job.requests {
+                        queues[job.user]
+                            .push_back(PendingReq { job: j, tiles: job.tiles_per_request });
+                    }
+                }
+                Event::Complete { anchor, job } => {
+                    regions[anchor].busy = false;
+                    jobs_left[job] -= 1;
+                    if jobs_left[job] == 0 {
+                        result.job_completion[job] = now;
+                        let u = workload.jobs[job].user;
+                        result.user_completion[u] = result.user_completion[u].max(now);
+                    }
+                    result.makespan = result.makespan.max(now);
+                }
+            }
+        }
+
+        // Dispatch as many requests as will place (cooperative
+        // run-to-completion), round-robin across users with pending work.
+        // A user whose request cannot (or should not) be placed is
+        // skipped this round without blocking the others.
+        let mut skip: Vec<usize> = Vec::new();
+        loop {
+            let Some(user) = next_user(&queues, &mut rr, &skip) else { break };
+            let req = queues[user].front().cloned().unwrap();
+            let accel = catalog
+                .get(&workload.jobs[req.job].accel)
+                .unwrap_or_else(|| panic!("unknown accel {}", workload.jobs[req.job].accel));
+
+            let pin = workload.jobs[req.job].pin_variant.as_deref();
+            // Uncontended per-tile DMA estimate for cost-aware choices.
+            let dma_est_ns = ddr.transfer_ns(accel.bytes_in, 0) + ddr.transfer_ns(accel.bytes_out, 0);
+            let backlog_tiles: usize = queues[user].iter().map(|r| r.tiles).sum();
+            let placement = match cfg.policy {
+                Policy::Elastic => place_elastic(
+                    &regions,
+                    &shell,
+                    accel,
+                    &queues,
+                    pin,
+                    backlog_tiles,
+                    dma_est_ns,
+                    &reconfig_ns,
+                ),
+                Policy::Fixed => place_fixed(&regions, accel, user, &mut fixed_home),
+            };
+            let Some((anchor, variant_name, reconfigure)) = placement else {
+                skip.push(user);
+                continue;
+            };
+
+            // Reconfiguration-avoidance (§4.4.3: "the scheduler avoids
+            // partial reconfiguration and reuses an accelerator if it is
+            // already available on-chip"): if an instance of this
+            // accelerator is loaded but busy, pay a reconfiguration only
+            // when the user's backlog amortises it — otherwise wait for
+            // the busy instance to free up.
+            if reconfigure && cfg.policy == Policy::Elastic {
+                let instance_busy = regions.iter().any(|r| {
+                    r.busy && r.loaded.as_ref().map(|l| l.accel == accel.name).unwrap_or(false)
+                });
+                if instance_busy {
+                    let v = accel.variant(&variant_name).unwrap();
+                    let service_ns =
+                        (backlog_tiles as f64 * (v.compute_ns() + dma_est_ns)) as u64;
+                    if reconfig_ns(v.regions) > service_ns {
+                        skip.push(user);
+                        continue;
+                    }
+                }
+            }
+            queues[user].pop_front();
+
+            let variant = accel.variant(&variant_name).unwrap();
+            let span = variant.regions;
+
+            // Mark busy + (re)load.
+            if reconfigure {
+                // Clear any previous span association of these slots.
+                clear_span(&mut regions, anchor, span);
+                regions[anchor].loaded =
+                    Some(Loaded { accel: accel.name.clone(), variant: variant_name.clone(), span });
+                for r in anchor + 1..anchor + span {
+                    regions[r].loaded = None;
+                    regions[r].tail_of = Some(anchor);
+                }
+                result.reconfigs += 1;
+            } else {
+                result.reuses += 1;
+            }
+            regions[anchor].busy = true;
+
+            // Latency: reconfig + per-tile (DMA + compute).
+            let busy_others = regions.iter().filter(|r| r.busy).count().saturating_sub(1);
+            let dma_ns = ddr.transfer_ns(accel.bytes_in, busy_others)
+                + ddr.transfer_ns(accel.bytes_out, busy_others);
+            let per_tile = dma_ns + variant.compute_ns();
+            let mut lat = (per_tile * req.tiles as f64) as u64;
+            if reconfigure {
+                lat += reconfig_ns(span);
+            }
+
+            // Real compute, if attached.
+            if let Some(exec) = &cfg.executor {
+                for _ in 0..req.tiles {
+                    let inputs = gen_inputs(accel, &mut rng);
+                    let out = exec
+                        .execute(&variant_name, inputs)
+                        .expect("real compute failed");
+                    for buf in &out.outputs {
+                        for v in buf {
+                            let bits = v.to_bits() as u64;
+                            result.output_checksum =
+                                (result.output_checksum ^ bits).wrapping_mul(0x100000001b3);
+                        }
+                    }
+                    result.tiles_executed += 1;
+                }
+            }
+
+            let end = now + lat;
+            result.trace.push(TraceEvent {
+                start: now,
+                end,
+                region: anchor,
+                span,
+                user,
+                accel: accel.name.clone(),
+                variant: variant_name.clone(),
+                tiles: req.tiles,
+                reconfigured: reconfigure,
+            });
+            for t in result.regions[anchor..anchor + span].iter_mut() {
+                t.busy_ns += lat;
+            }
+            heap.push(Reverse((end, seq, Event::Complete { anchor, job: req.job })));
+            seq += 1;
+        }
+    }
+
+    result
+}
+
+/// Bytes of a single-region partial bitstream on this shell.
+fn partial_bytes(shell: &Shell) -> usize {
+    use crate::bitstream::region_frames;
+    let dev = &shell.floorplan.device;
+    region_frames(dev, &shell.floorplan.regions[0]).len() * crate::bitstream::FRAME_WORDS * 4
+}
+
+fn next_user(queues: &[VecDeque<PendingReq>], rr: &mut usize, skip: &[usize]) -> Option<usize> {
+    let n = queues.len();
+    for k in 0..n {
+        let u = (*rr + k) % n;
+        if !queues[u].is_empty() && !skip.contains(&u) {
+            *rr = (u + 1) % n;
+            return Some(u);
+        }
+    }
+    None
+}
+
+/// Elastic placement: reuse > replace-with-biggest-fitting > none.
+/// Returns (anchor, variant, needs_reconfig).
+#[allow(clippy::too_many_arguments)]
+fn place_elastic(
+    regions: &[Region],
+    shell: &Shell,
+    accel: &crate::accel::Accelerator,
+    queues: &[VecDeque<PendingReq>],
+    pin: Option<&str>,
+    backlog_tiles: usize,
+    dma_est_ns: f64,
+    reconfig_ns: &dyn Fn(usize) -> u64,
+) -> Option<(usize, String, bool)> {
+    // 1. Reuse an idle region already configured with this accelerator
+    //    (prefer the biggest loaded variant — it's fastest). Pinned jobs
+    //    reuse only their pinned variant.
+    let mut best_reuse: Option<(usize, usize)> = None; // (anchor, span)
+    for (i, r) in regions.iter().enumerate() {
+        if r.busy || r.tail_of.is_some() {
+            continue;
+        }
+        if let Some(l) = &r.loaded {
+            if l.accel == accel.name
+                && pin.map(|p| p == l.variant).unwrap_or(true)
+                && span_idle(regions, i, l.span)
+                && best_reuse.map(|(_, s)| l.span > s).unwrap_or(true)
+            {
+                best_reuse = Some((i, l.span));
+            }
+        }
+    }
+    if let Some((anchor, _)) = best_reuse {
+        let v = regions[anchor].loaded.as_ref().unwrap().variant.clone();
+        return Some((anchor, v, false));
+    }
+
+    // 2. Reconfigure free capacity. Multi-region variants only when a
+    //    single tenant is active (the paper grows a lone user's share;
+    //    under contention every user gets 1-region modules). Among the
+    //    variants that fit, pick the one minimising
+    //    reconfig + backlog x per-tile — bigger is NOT always better
+    //    when the job cannot amortise the larger partial bitstream.
+    if let Some(p) = pin {
+        let v = accel.variant(p)?;
+        let anchor = find_free_span(regions, shell, v.regions)?;
+        return Some((anchor, v.name.clone(), true));
+    }
+    let active_users = queues.iter().filter(|q| !q.is_empty()).count();
+    let span_cap = if active_users <= 1 { regions.len() } else { 1 };
+    let free_now = regions
+        .iter()
+        .filter(|r| !r.busy && r.tail_of.is_none())
+        .count()
+        .max(1);
+    let mut best: Option<(u64, usize, String)> = None;
+    for v in &accel.variants {
+        if v.regions > span_cap {
+            continue;
+        }
+        if let Some(anchor) = find_free_span(regions, shell, v.regions) {
+            // Throughput-aware score: assume the backlog will spread
+            // over as many replicas of this variant as fit in the
+            // currently free capacity (replication), each paying its
+            // own reconfiguration.
+            let replicas = (free_now / v.regions).max(1) as f64;
+            let drain = backlog_tiles as f64 * (v.compute_ns() + dma_est_ns) / replicas;
+            let score = reconfig_ns(v.regions) + drain as u64;
+            if best.as_ref().map(|(s, _, _)| score < *s).unwrap_or(true) {
+                best = Some((score, anchor, v.name.clone()));
+            }
+        }
+    }
+    best.map(|(_, anchor, name)| (anchor, name, true))
+}
+
+/// Fixed placement: user keeps one region for the whole run.
+fn place_fixed(
+    regions: &[Region],
+    accel: &crate::accel::Accelerator,
+    user: usize,
+    home: &mut [Option<usize>],
+) -> Option<(usize, String, bool)> {
+    let v = accel.smallest_variant();
+    if let Some(r) = home[user] {
+        if regions[r].busy {
+            return None; // our module is busy; wait (run-to-completion)
+        }
+        let needs = regions[r]
+            .loaded
+            .as_ref()
+            .map(|l| l.accel != accel.name || l.variant != v.name)
+            .unwrap_or(true);
+        return Some((r, v.name.clone(), needs));
+    }
+    // Claim the first region nobody owns.
+    let owned: Vec<usize> = home.iter().flatten().copied().collect();
+    let r = (0..regions.len()).find(|r| !owned.contains(r) && !regions[*r].busy)?;
+    home[user] = Some(r);
+    Some((r, v.name.clone(), true))
+}
+
+fn span_idle(regions: &[Region], anchor: usize, span: usize) -> bool {
+    if anchor + span > regions.len() {
+        return false;
+    }
+    !regions[anchor..anchor + span].iter().any(|r| r.busy)
+        && regions[anchor + 1..anchor + span]
+            .iter()
+            .all(|r| r.tail_of == Some(anchor))
+}
+
+/// First anchor of `span` adjacent, idle, non-tail regions.
+fn find_free_span(regions: &[Region], shell: &Shell, span: usize) -> Option<usize> {
+    (0..regions.len().saturating_sub(span - 1)).find(|&a| {
+        shell.floorplan.combinable(a, span)
+            && (a..a + span).all(|r| {
+                !regions[r].busy
+                    // A tail slot may be cannibalised only with its anchor.
+                    && regions[r].tail_of.map(|t| t >= a).unwrap_or(true)
+            })
+    })
+}
+
+/// Detach any span structure overlapping [anchor, anchor+span).
+fn clear_span(regions: &mut [Region], anchor: usize, span: usize) {
+    // If a slot we take was the tail of an earlier anchor, that loaded
+    // module is destroyed.
+    for r in anchor..anchor + span {
+        if let Some(t) = regions[r].tail_of {
+            regions[t].loaded = None;
+        }
+        regions[r].tail_of = None;
+        regions[r].loaded = None;
+    }
+    // If a later region was a tail of one of ours, detach it too.
+    for r in anchor + span..regions.len() {
+        if regions[r].tail_of.map(|t| t < anchor + span).unwrap_or(false) {
+            regions[r].tail_of = None;
+            regions[r].loaded = None;
+        }
+    }
+}
+
+/// Deterministic input generation for real-compute mode.
+pub fn gen_inputs(accel: &crate::accel::Accelerator, rng: &mut Rng) -> Vec<Vec<f32>> {
+    accel
+        .inputs
+        .iter()
+        .map(|spec| {
+            let n = spec.elements();
+            match accel.name.as_str() {
+                "histogram" => (0..n).map(|_| rng.f32()).collect(),
+                "black_scholes" => {
+                    // (N, 5) S/K/T/r/sigma columns, all positive.
+                    let rows = n / 5;
+                    let mut buf = vec![0f32; n];
+                    for r in 0..rows {
+                        buf[r * 5] = 50.0 + 100.0 * rng.f32();
+                        buf[r * 5 + 1] = 50.0 + 100.0 * rng.f32();
+                        buf[r * 5 + 2] = 0.1 + 1.9 * rng.f32();
+                        buf[r * 5 + 3] = 0.1 * rng.f32();
+                        buf[r * 5 + 4] = 0.1 + 0.5 * rng.f32();
+                    }
+                    buf
+                }
+                _ => (0..n).map(|_| rng.normal()).collect(),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::workload::JobSpec;
+
+    fn catalog() -> Catalog {
+        Catalog::load_default().unwrap()
+    }
+
+    fn single_user(accel: &str, requests: usize, tiles: usize) -> Workload {
+        let mut w = Workload::new();
+        for j in JobSpec::frame(0, accel, 0, requests * tiles, requests) {
+            w.push(j);
+        }
+        w
+    }
+
+    #[test]
+    fn replication_speeds_up_single_user() {
+        // Fig 20's core effect: more requests -> more parallelism, until
+        // the region count (3 on Ultra96) is reached. Pinned to the
+        // 1-region variant, as in the paper's sweep.
+        let c = catalog();
+        let lat = |reqs: usize| {
+            let mut w = Workload::new();
+            for j in JobSpec::frame_pinned(0, "mandelbrot", "mandelbrot_v1", 0, 12, reqs) {
+                w.push(j);
+            }
+            simulate(&c, &w, &SimConfig::new(ShellBoard::Ultra96, Policy::Elastic)).makespan
+        };
+        let l1 = lat(1);
+        let l3 = lat(3);
+        let l6 = lat(6);
+        // "Almost linear" (paper §5.5.1): reconfiguration overhead keeps
+        // it under a perfect 3x.
+        assert!(
+            (l1 as f64 / l3 as f64) > 2.3,
+            "3 requests should be ~3x faster: {l1} vs {l3}"
+        );
+        // Past the region count, stagnation (Fig 21): 6 requests buy
+        // little over 3.
+        assert!((l3 as f64 / l6 as f64) > 0.85, "{l3} vs {l6}");
+    }
+
+    #[test]
+    fn multiples_of_region_count_win() {
+        // 12 tiles on 3 regions: 4 requests (uneven rounds) slower than
+        // 6 requests (2 clean rounds of 3)? Paper: multiples of the
+        // region count avoid leftover-bottlenecks. With equal total work
+        // 3 requests beats 4 requests.
+        let c = catalog();
+        let w3 = {
+            let mut w = Workload::new();
+            for j in JobSpec::frame(0, "mandelbrot", 0, 12, 3) {
+                w.push(j);
+            }
+            w
+        };
+        let w4 = {
+            let mut w = Workload::new();
+            for j in JobSpec::frame(0, "mandelbrot", 0, 12, 4) {
+                w.push(j);
+            }
+            w
+        };
+        let cfg = SimConfig::new(ShellBoard::Ultra96, Policy::Elastic);
+        let m3 = simulate(&c, &w3, &cfg).makespan;
+        let m4 = simulate(&c, &w4, &cfg).makespan;
+        assert!(m3 <= m4, "3 reqs {m3} should beat 4 reqs {m4} on 3 regions");
+    }
+
+    #[test]
+    fn elastic_beats_fixed() {
+        // Fig 15: same four single-job users, elastic vs fixed.
+        let c = catalog();
+        let mut w = Workload::new();
+        for (u, arrival) in [(0usize, 0u64), (1, 2_000_000), (2, 4_000_000), (3, 30_000_000)] {
+            for j in JobSpec::frame(u, "dct", arrival, 24, 8) {
+                w.push(j);
+            }
+        }
+        let el = simulate(&c, &w, &SimConfig::new(ShellBoard::Zcu102, Policy::Elastic));
+        let fx = simulate(&c, &w, &SimConfig::new(ShellBoard::Zcu102, Policy::Fixed));
+        assert!(
+            el.makespan < fx.makespan,
+            "elastic {} >= fixed {}",
+            el.makespan,
+            fx.makespan
+        );
+        // The elastic run must actually have replicated/reused.
+        assert!(el.reuses > 0);
+    }
+
+    #[test]
+    fn reuse_avoids_reconfiguration() {
+        let c = catalog();
+        // Two users running the SAME accelerator share it in time.
+        let mut w = Workload::new();
+        for j in JobSpec::frame(0, "sobel", 0, 6, 6) {
+            w.push(j);
+        }
+        for j in JobSpec::frame(1, "sobel", 0, 6, 6) {
+            w.push(j);
+        }
+        let r = simulate(&c, &w, &SimConfig::new(ShellBoard::Ultra96, Policy::Elastic));
+        // 12 requests, 3 regions: at most a handful of reconfigs, many reuses.
+        assert!(r.reconfigs <= 3, "reconfigs {}", r.reconfigs);
+        assert_eq!(r.reconfigs + r.reuses, 12);
+    }
+
+    #[test]
+    fn dct_uses_bigger_variant_when_alone() {
+        let c = catalog();
+        // Long job (paper-scale): the 2-region variant's extra partial-
+        // bitstream cost amortises and replacement kicks in.
+        let w = single_user("dct", 2, 200);
+        let r = simulate(&c, &w, &SimConfig::new(ShellBoard::Zcu102, Policy::Elastic));
+        assert!(
+            r.trace.iter().any(|t| t.variant == "dct_v2"),
+            "expected dct_v2 in trace: {:?}",
+            r.trace.iter().map(|t| t.variant.clone()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn multi_user_gets_single_region_modules() {
+        let c = catalog();
+        let mut w = Workload::new();
+        for j in JobSpec::frame(0, "dct", 0, 8, 4) {
+            w.push(j);
+        }
+        for j in JobSpec::frame(1, "mandelbrot", 0, 8, 4) {
+            w.push(j);
+        }
+        let r = simulate(&c, &w, &SimConfig::new(ShellBoard::Ultra96, Policy::Elastic));
+        // While both users are active, spans must be 1... the tail of the
+        // run (one user drained) may still grow. Check early trace only.
+        let early: Vec<_> = r.trace.iter().filter(|t| t.start == 0).collect();
+        assert!(!early.is_empty());
+        assert!(early.iter().all(|t| t.span == 1), "{early:?}");
+        // Round-robin fairness: both users dispatched at t=0.
+        let users: std::collections::HashSet<usize> = early.iter().map(|t| t.user).collect();
+        assert_eq!(users.len(), 2);
+    }
+
+    #[test]
+    fn trace_is_consistent() {
+        let c = catalog();
+        let w = single_user("fir", 6, 2);
+        let r = simulate(&c, &w, &SimConfig::new(ShellBoard::Ultra96, Policy::Elastic));
+        assert_eq!(r.trace.len(), 6);
+        for t in &r.trace {
+            assert!(t.end > t.start);
+            assert!(t.region + t.span <= 3);
+        }
+        // No two events overlap on the same region.
+        for (i, a) in r.trace.iter().enumerate() {
+            for b in &r.trace[i + 1..] {
+                let disjoint_regions =
+                    a.region + a.span <= b.region || b.region + b.span <= a.region;
+                let disjoint_time = a.end <= b.start || b.end <= a.start;
+                assert!(disjoint_regions || disjoint_time, "{a:?} vs {b:?}");
+            }
+        }
+        assert_eq!(r.makespan, r.trace.iter().map(|t| t.end).max().unwrap());
+    }
+
+    #[test]
+    fn fixed_policy_isolates_users_to_one_region() {
+        let c = catalog();
+        let mut w = Workload::new();
+        for u in 0..2 {
+            for j in JobSpec::frame(u, "sobel", 0, 4, 4) {
+                w.push(j);
+            }
+        }
+        let r = simulate(&c, &w, &SimConfig::new(ShellBoard::Ultra96, Policy::Fixed));
+        let mut per_user: std::collections::HashMap<usize, std::collections::HashSet<usize>> =
+            Default::default();
+        for t in &r.trace {
+            assert_eq!(t.span, 1);
+            per_user.entry(t.user).or_default().insert(t.region);
+        }
+        for (u, regions) in per_user {
+            assert_eq!(regions.len(), 1, "user {u} used {regions:?}");
+        }
+    }
+}

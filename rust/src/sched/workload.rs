@@ -1,0 +1,134 @@
+//! Workload descriptions for the scheduler: who submits what, when.
+
+use super::SimTime;
+
+/// One job: a user's data-parallel acceleration call (Listing 4/5's
+/// `jobs` vector).
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub user: usize,
+    pub accel: String,
+    /// Arrival time (virtual ns).
+    pub arrival: SimTime,
+    /// How many independent acceleration requests the application
+    /// exposed (its chosen degree of parallelism, §4.4.2).
+    pub requests: usize,
+    /// Work items (tiles) per request: total work = requests x tiles.
+    pub tiles_per_request: usize,
+    /// Pin a specific implementation variant (None = let the scheduler
+    /// pick — the resource-elastic default). The Fig 20/21/22 workloads
+    /// pin the 1-region variants, matching the paper's setup where the
+    /// parallelism sweep replicates a fixed module.
+    pub pin_variant: Option<String>,
+}
+
+impl JobSpec {
+    /// A frame of `total_tiles` chopped into `requests` equal requests
+    /// (the paper's image-chopping example; remainder spread over the
+    /// first requests).
+    pub fn frame(
+        user: usize,
+        accel: &str,
+        arrival: SimTime,
+        total_tiles: usize,
+        requests: usize,
+    ) -> Vec<JobSpec> {
+        // Uneven chop: the first (total % requests) requests get one
+        // extra tile. Represent as up to two JobSpecs for compactness.
+        let base = total_tiles / requests;
+        let extra = total_tiles % requests;
+        let mut out = Vec::new();
+        if extra > 0 {
+            out.push(JobSpec {
+                user,
+                accel: accel.to_string(),
+                arrival,
+                requests: extra,
+                tiles_per_request: base + 1,
+                pin_variant: None,
+            });
+        }
+        if requests - extra > 0 && base > 0 {
+            out.push(JobSpec {
+                user,
+                accel: accel.to_string(),
+                arrival,
+                requests: requests - extra,
+                tiles_per_request: base,
+                pin_variant: None,
+            });
+        }
+        out
+    }
+
+    /// Same as [`JobSpec::frame`] but pinned to one variant.
+    pub fn frame_pinned(
+        user: usize,
+        accel: &str,
+        variant: &str,
+        arrival: SimTime,
+        total_tiles: usize,
+        requests: usize,
+    ) -> Vec<JobSpec> {
+        let mut jobs = Self::frame(user, accel, arrival, total_tiles, requests);
+        for j in &mut jobs {
+            j.pin_variant = Some(variant.to_string());
+        }
+        jobs
+    }
+}
+
+/// A full scenario.
+#[derive(Debug, Clone, Default)]
+pub struct Workload {
+    pub jobs: Vec<JobSpec>,
+}
+
+impl Workload {
+    pub fn new() -> Workload {
+        Workload::default()
+    }
+
+    pub fn push(&mut self, job: JobSpec) -> &mut Self {
+        self.jobs.push(job);
+        self
+    }
+
+    pub fn users(&self) -> usize {
+        self.jobs.iter().map(|j| j.user + 1).max().unwrap_or(0)
+    }
+
+    pub fn total_requests(&self) -> usize {
+        self.jobs.iter().map(|j| j.requests).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_chopping_conserves_tiles() {
+        for (total, reqs) in [(12, 1), (12, 3), (12, 5), (7, 3), (4, 8)] {
+            let jobs = JobSpec::frame(0, "sobel", 0, total, reqs);
+            let tiles: usize =
+                jobs.iter().map(|j| j.requests * j.tiles_per_request).sum();
+            assert_eq!(tiles, total, "total={total} reqs={reqs}");
+            let n: usize = jobs.iter().map(|j| j.requests).sum();
+            assert_eq!(n, reqs.min(total).max(reqs.min(total)), "reqs clamp");
+        }
+    }
+
+    #[test]
+    fn workload_stats() {
+        let mut w = Workload::new();
+        for j in JobSpec::frame(0, "sobel", 0, 12, 3) {
+            w.push(j);
+        }
+        for j in JobSpec::frame(1, "mandelbrot", 100, 12, 4) {
+            w.push(j);
+        }
+        assert_eq!(w.users(), 2);
+        assert_eq!(w.total_requests(), 7);
+    }
+}

@@ -1,0 +1,210 @@
+//! Shell builder: the ZUCL-2.0-style static systems for the three
+//! boards, with the Listing-1 JSON descriptor as their logical face.
+
+use crate::fabric::{ClockPlan, Device, DeviceKind, Floorplan, Resources};
+use crate::json::{arr, obj, s, Value};
+
+/// The three boards the paper evaluates on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ShellBoard {
+    Ultra96,
+    UltraZed,
+    Zcu102,
+}
+
+impl ShellBoard {
+    pub fn name(self) -> &'static str {
+        match self {
+            ShellBoard::Ultra96 => "Ultra96",
+            ShellBoard::UltraZed => "UltraZed",
+            ShellBoard::Zcu102 => "ZCU102",
+        }
+    }
+
+    pub fn device_kind(self) -> DeviceKind {
+        match self {
+            ShellBoard::Ultra96 | ShellBoard::UltraZed => DeviceKind::Zu3eg,
+            ShellBoard::Zcu102 => DeviceKind::Zu9eg,
+        }
+    }
+
+    /// High-performance AXI ports wired to PR regions (§5.3): the
+    /// Ultra96 shell exposes HP0, HP1, HP3; the ZCU102 shell HP0–HP3.
+    pub fn axi_ports(self) -> &'static [&'static str] {
+        match self {
+            ShellBoard::Ultra96 | ShellBoard::UltraZed => &["HP0", "HP1", "HP3"],
+            ShellBoard::Zcu102 => &["HP0", "HP1", "HP2", "HP3"],
+        }
+    }
+
+    pub fn all() -> [ShellBoard; 3] {
+        [ShellBoard::Ultra96, ShellBoard::UltraZed, ShellBoard::Zcu102]
+    }
+}
+
+/// A built shell: floorplan + clocking + the address map the drivers use.
+#[derive(Debug, Clone)]
+pub struct Shell {
+    pub board: ShellBoard,
+    pub name: String,
+    pub clock_mhz: u32,
+    pub floorplan: Floorplan,
+    pub clock_plan: ClockPlan,
+    /// Per-region accelerator base addresses (Listing 1 `addr`).
+    pub region_addrs: Vec<u64>,
+    /// Per-region PR decoupler bridge addresses (Listing 1 `bridge`).
+    pub bridge_addrs: Vec<u64>,
+}
+
+impl Shell {
+    /// Build the standard 100 MHz shell for a board.
+    pub fn build(board: ShellBoard) -> Shell {
+        let device = Device::new(board.device_kind());
+        let floorplan = Floorplan::standard(device);
+        debug_assert!(floorplan.check().is_empty());
+        let (c0, c1, _) = floorplan.device.pr_window();
+        let clock_plan = ClockPlan::fos_default(c1 - c0);
+        let n = floorplan.regions.len();
+        Shell {
+            name: format!("{}_100MHz_2", board.name()),
+            board,
+            clock_mhz: 100,
+            floorplan,
+            clock_plan,
+            region_addrs: (0..n).map(|k| 0xa000_0000 + 0x1000 * k as u64).collect(),
+            bridge_addrs: (0..n).map(|k| 0xa001_0000 + 0x10000 * k as u64).collect(),
+        }
+    }
+
+    pub fn region_count(&self) -> usize {
+        self.floorplan.regions.len()
+    }
+
+    /// Resources of one PR region (all identical by construction).
+    pub fn region_resources(&self) -> Resources {
+        self.floorplan.regions[0].resources(&self.floorplan.device)
+    }
+
+    /// Table 1's rows: per-region and total accelerator utilisation
+    /// fractions against the chip.
+    pub fn table1(&self) -> Table1 {
+        let chip = self.floorplan.device.chip_resources();
+        let region = self.region_resources();
+        let n = self.region_count();
+        let frac = |a: usize, b: usize| a as f64 / b as f64;
+        Table1 {
+            region,
+            per_region_pct: [
+                100.0 * frac(region.luts, chip.luts),
+                100.0 * frac(region.ffs, chip.ffs),
+                100.0 * frac(region.brams, chip.brams),
+                100.0 * frac(region.dsps, chip.dsps),
+            ],
+            total_pct: [
+                100.0 * frac(region.luts * n, chip.luts),
+                100.0 * frac(region.ffs * n, chip.ffs),
+                100.0 * frac(region.brams * n, chip.brams),
+                100.0 * frac(region.dsps * n, chip.dsps),
+            ],
+        }
+    }
+
+    /// The Listing-1 JSON descriptor.
+    pub fn descriptor(&self) -> Value {
+        obj(vec![
+            ("name", s(self.name.clone())),
+            ("bitfile", s(format!("{}.bin", self.name))),
+            (
+                "regions",
+                arr(self
+                    .floorplan
+                    .regions
+                    .iter()
+                    .enumerate()
+                    .map(|(k, r)| {
+                        obj(vec![
+                            ("name", s(r.name.clone())),
+                            ("blank", s(format!("Blanking_slot_{k}.bin"))),
+                            ("bridge", s(format!("{:#x}", self.bridge_addrs[k]))),
+                            ("addr", s(format!("{:#x}", self.region_addrs[k]))),
+                        ])
+                    })
+                    .collect()),
+            ),
+        ])
+    }
+}
+
+/// Table 1 measurement bundle.
+#[derive(Debug, Clone)]
+pub struct Table1 {
+    pub region: Resources,
+    /// [LUT, FF, BRAM, DSP] chip-% per region.
+    pub per_region_pct: [f64; 4],
+    /// [LUT, FF, BRAM, DSP] chip-% across all regions.
+    pub total_pct: [f64; 4],
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_region_resources() {
+        let u96 = Shell::build(ShellBoard::Ultra96);
+        assert_eq!(u96.region_count(), 3);
+        let r = u96.region_resources();
+        assert_eq!((r.luts, r.ffs, r.brams, r.dsps), (17760, 35520, 72, 120));
+
+        let zcu = Shell::build(ShellBoard::Zcu102);
+        assert_eq!(zcu.region_count(), 4);
+        let r = zcu.region_resources();
+        assert_eq!((r.luts, r.ffs, r.brams, r.dsps), (32640, 65280, 108, 336));
+    }
+
+    #[test]
+    fn table1_percentages_near_paper() {
+        // Paper: ZCU102 ≈11.7–13.3% per region, 46.8–53.2% total;
+        // Ultra96 ≈25.17% per region, 75.51% total (LUTs).
+        let zcu = Shell::build(ShellBoard::Zcu102).table1();
+        assert!((zcu.per_region_pct[0] - 11.7).abs() < 0.5, "{:?}", zcu.per_region_pct);
+        assert!((zcu.total_pct[0] - 46.8).abs() < 2.0);
+        assert!((zcu.per_region_pct[3] - 13.3).abs() < 0.1);
+
+        let u96 = Shell::build(ShellBoard::Ultra96).table1();
+        assert!((u96.per_region_pct[0] - 25.17).abs() < 0.01);
+        assert!((u96.total_pct[0] - 75.51).abs() < 0.01);
+    }
+
+    #[test]
+    fn ultrazed_shares_zu3eg_shell_shape() {
+        let uz = Shell::build(ShellBoard::UltraZed);
+        let u96 = Shell::build(ShellBoard::Ultra96);
+        assert_eq!(uz.region_count(), u96.region_count());
+        assert_eq!(uz.region_resources(), u96.region_resources());
+        assert_ne!(uz.name, u96.name);
+    }
+
+    #[test]
+    fn descriptor_matches_listing1() {
+        let shell = Shell::build(ShellBoard::Ultra96);
+        let d = shell.descriptor();
+        assert_eq!(d.req_str("name").unwrap(), "Ultra96_100MHz_2");
+        assert_eq!(d.req_str("bitfile").unwrap(), "Ultra96_100MHz_2.bin");
+        let regions = d.req_array("regions").unwrap();
+        assert_eq!(regions.len(), 3);
+        assert_eq!(regions[0].req_str("addr").unwrap(), "0xa0000000");
+        assert_eq!(regions[1].req_str("addr").unwrap(), "0xa0001000");
+        assert_eq!(regions[1].req_str("bridge").unwrap(), "0xa0020000");
+        assert_eq!(regions[2].req_str("blank").unwrap(), "Blanking_slot_2.bin");
+        // Round-trips through our JSON.
+        let text = crate::json::to_string_pretty(&d);
+        assert_eq!(crate::json::parse(&text).unwrap(), d);
+    }
+
+    #[test]
+    fn axi_port_lists() {
+        assert_eq!(ShellBoard::Ultra96.axi_ports(), &["HP0", "HP1", "HP3"]);
+        assert_eq!(ShellBoard::Zcu102.axi_ports().len(), 4);
+    }
+}

@@ -1,0 +1,219 @@
+//! Bus virtualisation (§4.1.2, Table 2).
+//!
+//! The shell exposes one fixed physical interface per PR region — a
+//! 32-bit AXI4-Lite slave (control) and a 128-bit AXI4 master (memory).
+//! Modules that speak anything else (narrower AXI, AXI-Stream with or
+//! without a DMA engine) get a *bus adaptor*: vendor IP blocks
+//! (interconnect / MM2S / DMA / control registers) parameterised and
+//! stitched either at design time (logical wrapper, costs only what it
+//! uses) or at run time (a pre-allocated partial region of fixed size —
+//! the physical-level overhead column of Table 2).
+
+use crate::fabric::Resources;
+
+/// The shell-side fixed interface widths (§4.1.2).
+pub const SHELL_LITE_BITS: u32 = 32;
+pub const SHELL_MASTER_BITS: u32 = 128;
+
+/// What a module's native interface looks like.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AxiInterface {
+    /// AXI4 memory-mapped master of a given data width (module has its
+    /// own DMA).
+    Master { bits: u32 },
+    /// AXI4-Stream of a given width; `has_dma` says whether the module
+    /// embeds its own data mover.
+    Stream { bits: u32, has_dma: bool },
+    /// Control-only module (AXI-Lite slave, no data path).
+    LiteOnly,
+}
+
+/// Adaptor services the wrapper instantiates (Table 2's middle column).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BusService {
+    /// Width/protocol conversion between AXI4 masters.
+    AxiInterconnect,
+    /// Memory-mapped-to-stream bridge.
+    Mm2s,
+    /// Full DMA engine (for DMA-less stream modules).
+    Dma,
+    /// Control register block.
+    ControlRegs,
+}
+
+impl BusService {
+    /// Logical-level (design-time wrapper) resource cost of one service.
+    /// Calibrated so the two Table 2 configurations come out exactly:
+    /// interconnect alone = 153/284/0, ctrl+MM2S+DMA = 1952/2694/2.5.
+    pub fn resources(self) -> (usize, usize, f64) {
+        match self {
+            BusService::AxiInterconnect => (153, 284, 0.0),
+            BusService::Mm2s => (612, 901, 0.5),
+            BusService::Dma => (1188, 1602, 2.0),
+            BusService::ControlRegs => (152, 191, 0.0),
+        }
+    }
+}
+
+/// Design-time vs run-time stitching (§4.1.2, Figure 10).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WrapMode {
+    /// Wrapper compiled into the module: pays only the logical cost.
+    DesignTime,
+    /// Pre-built adaptor bitstream stitched by PR at run time: pays a
+    /// fixed pre-allocated adaptor region (Table 2 "physical level").
+    Runtime,
+}
+
+/// The pre-allocated adaptor region size at the physical level
+/// (Table 2): 2400 LUTs / 4800 FFs / 12 BRAMs.
+pub const PHYSICAL_PREALLOC: Resources = Resources {
+    luts: 2400,
+    ffs: 4800,
+    brams: 12,
+    dsps: 0,
+};
+
+/// A configured bus adaptor between a module interface and the shell.
+#[derive(Debug, Clone)]
+pub struct BusAdaptor {
+    pub module_if: AxiInterface,
+    pub services: Vec<BusService>,
+    pub mode: WrapMode,
+}
+
+impl BusAdaptor {
+    /// Choose the services a module interface needs (§4.1.2's automatic
+    /// parameterisation). `None` means the module matches the shell
+    /// natively and no adaptor is required at all — "an adaptor is only
+    /// integrated into a module if needed".
+    pub fn for_interface(module_if: AxiInterface, mode: WrapMode) -> Option<BusAdaptor> {
+        let services = match module_if {
+            AxiInterface::Master { bits } if bits == SHELL_MASTER_BITS => return None,
+            AxiInterface::Master { .. } => vec![BusService::AxiInterconnect],
+            AxiInterface::Stream { has_dma: true, .. } => {
+                vec![BusService::ControlRegs, BusService::Mm2s]
+            }
+            AxiInterface::Stream { has_dma: false, .. } => {
+                vec![BusService::ControlRegs, BusService::Mm2s, BusService::Dma]
+            }
+            AxiInterface::LiteOnly => return None,
+        };
+        Some(BusAdaptor { module_if, services, mode })
+    }
+
+    /// Logical-level cost: the sum of the instantiated services.
+    pub fn logical_resources(&self) -> Resources {
+        let mut luts = 0;
+        let mut ffs = 0;
+        let mut brams = 0.0;
+        for s in &self.services {
+            let (l, f, b) = s.resources();
+            luts += l;
+            ffs += f;
+            brams += b;
+        }
+        Resources { luts, ffs, brams: brams.ceil() as usize, dsps: 0 }
+    }
+
+    /// BRAMs with the half-BRAM18 granularity Table 2 reports (2.5).
+    pub fn logical_brams_frac(&self) -> f64 {
+        self.services.iter().map(|s| s.resources().2).sum()
+    }
+
+    /// What the adaptor actually occupies on the fabric.
+    pub fn physical_resources(&self) -> Resources {
+        match self.mode {
+            WrapMode::DesignTime => self.logical_resources(),
+            WrapMode::Runtime => PHYSICAL_PREALLOC,
+        }
+    }
+
+    /// Unused fraction of the pre-allocation (the paper's "448 LUTs
+    /// (18%)" observation is `1 -` this for the dense configuration).
+    pub fn prealloc_waste_luts(&self) -> usize {
+        match self.mode {
+            WrapMode::DesignTime => 0,
+            WrapMode::Runtime => {
+                PHYSICAL_PREALLOC.luts.saturating_sub(self.logical_resources().luts)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_interconnect_configuration() {
+        // Row 1: 32-bit AXI master module behind the 128-bit shell port.
+        let a = BusAdaptor::for_interface(
+            AxiInterface::Master { bits: 32 },
+            WrapMode::Runtime,
+        )
+        .unwrap();
+        assert_eq!(a.services, vec![BusService::AxiInterconnect]);
+        let r = a.logical_resources();
+        assert_eq!((r.luts, r.ffs), (153, 284));
+        assert_eq!(a.logical_brams_frac(), 0.0);
+        let p = a.physical_resources();
+        assert_eq!((p.luts, p.ffs, p.brams), (2400, 4800, 12));
+    }
+
+    #[test]
+    fn table2_stream_dma_configuration() {
+        // Row 2: 32-bit AXI-Stream module without DMA → ctrl + MM2S + DMA.
+        let a = BusAdaptor::for_interface(
+            AxiInterface::Stream { bits: 32, has_dma: false },
+            WrapMode::Runtime,
+        )
+        .unwrap();
+        let r = a.logical_resources();
+        assert_eq!((r.luts, r.ffs), (1952, 2694));
+        assert_eq!(a.logical_brams_frac(), 2.5);
+        // Paper: only ~448 LUTs of the 2400 pre-allocation stay unused
+        // for this configuration (18%).
+        assert_eq!(a.prealloc_waste_luts(), 448);
+        assert!((a.prealloc_waste_luts() as f64 / 2400.0 - 0.18).abs() < 0.01);
+    }
+
+    #[test]
+    fn native_modules_need_no_adaptor() {
+        assert!(BusAdaptor::for_interface(
+            AxiInterface::Master { bits: 128 },
+            WrapMode::DesignTime
+        )
+        .is_none());
+        assert!(BusAdaptor::for_interface(AxiInterface::LiteOnly, WrapMode::DesignTime).is_none());
+    }
+
+    #[test]
+    fn stream_with_dma_skips_dma_service() {
+        let a = BusAdaptor::for_interface(
+            AxiInterface::Stream { bits: 64, has_dma: true },
+            WrapMode::DesignTime,
+        )
+        .unwrap();
+        assert!(!a.services.contains(&BusService::Dma));
+        assert!(a.services.contains(&BusService::Mm2s));
+        // Design-time wrapper pays only what it uses.
+        assert_eq!(a.physical_resources(), a.logical_resources());
+        assert_eq!(a.prealloc_waste_luts(), 0);
+    }
+
+    #[test]
+    fn runtime_mode_fits_prealloc_region() {
+        // Every adaptor configuration must fit the pre-allocated region.
+        for m in [
+            AxiInterface::Master { bits: 32 },
+            AxiInterface::Master { bits: 64 },
+            AxiInterface::Stream { bits: 32, has_dma: false },
+            AxiInterface::Stream { bits: 128, has_dma: true },
+        ] {
+            if let Some(a) = BusAdaptor::for_interface(m, WrapMode::Runtime) {
+                assert!(a.logical_resources().fits_in(&PHYSICAL_PREALLOC), "{m:?}");
+            }
+        }
+    }
+}

@@ -1,0 +1,10 @@
+//! FPGA shells — the OS-kernel of the hardware infrastructure (§2.1.1,
+//! §4.1.1) plus bus virtualisation (§4.1.2).
+
+mod build;
+mod bus;
+
+pub use build::{Shell, ShellBoard};
+pub use bus::{
+    AxiInterface, BusAdaptor, BusService, WrapMode, SHELL_MASTER_BITS, SHELL_LITE_BITS,
+};

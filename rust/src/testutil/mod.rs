@@ -1,0 +1,132 @@
+//! Property-testing helpers (the offline vendor set has no proptest).
+//!
+//! A deterministic SplitMix64 generator plus a tiny `cases` driver:
+//! every property runs over `n` seeded cases and reports the failing
+//! seed, so failures reproduce exactly.
+
+/// SplitMix64 — tiny, fast, good-enough statistical quality for test
+/// data and simulated workload generation.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Rng {
+        Rng { state: seed.wrapping_add(0x9E3779B97F4A7C15) }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `[0, n)`. `n` must be > 0.
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        // Rejection-free Lemire reduction is overkill here; modulo bias
+        // is negligible for test-sized ranges.
+        self.next_u64() % n
+    }
+
+    /// Uniform in `[lo, hi)` (usize convenience).
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.below((hi - lo) as u64) as usize
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform f32 in `[0, 1)`.
+    pub fn f32(&mut self) -> f32 {
+        self.f64() as f32
+    }
+
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Standard-normal-ish (Irwin–Hall sum of 12 — fine for test data).
+    pub fn normal(&mut self) -> f32 {
+        let s: f64 = (0..12).map(|_| self.f64()).sum();
+        (s - 6.0) as f32
+    }
+
+    /// Pick one element of a slice.
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len() as u64) as usize]
+    }
+
+    /// Exponentially-distributed inter-arrival time with mean `mean`.
+    pub fn exp(&mut self, mean: f64) -> f64 {
+        -mean * (1.0 - self.f64()).ln()
+    }
+}
+
+/// Run a property over `n` seeded cases; panics with the failing seed.
+pub fn cases(n: u64, mut prop: impl FnMut(&mut Rng)) {
+    for seed in 0..n {
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng)
+        }));
+        if let Err(e) = result {
+            eprintln!("property failed at seed {seed}");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let a: Vec<u64> = {
+            let mut r = Rng::new(7);
+            (0..8).map(|_| r.next_u64()).collect()
+        };
+        let b: Vec<u64> = {
+            let mut r = Rng::new(7);
+            (0..8).map(|_| r.next_u64()).collect()
+        };
+        assert_eq!(a, b);
+        let mut r2 = Rng::new(8);
+        assert_ne!(a[0], r2.next_u64());
+    }
+
+    #[test]
+    fn ranges_in_bounds() {
+        let mut r = Rng::new(1);
+        for _ in 0..1000 {
+            let x = r.range(3, 10);
+            assert!((3..10).contains(&x));
+            let f = r.f64();
+            assert!((0.0..1.0).contains(&f));
+        }
+    }
+
+    #[test]
+    fn exp_mean_roughly_right() {
+        let mut r = Rng::new(2);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| r.exp(5.0)).sum::<f64>() / n as f64;
+        assert!((mean - 5.0).abs() < 0.2, "{mean}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn cases_reports_failure() {
+        let mut n = 0;
+        cases(10, |_rng| {
+            n += 1;
+            assert!(n < 5, "deliberate failure at case {n}");
+        });
+    }
+}

@@ -1,0 +1,145 @@
+//! Cross-module integration: the decoupled compile flow feeding the
+//! reconfiguration manager, the registry feeding the generic driver,
+//! and the shell/memsim/catalog contracts holding together.
+
+use fos::accel::Catalog;
+use fos::bitstream::{extract, relocate, synth_full};
+use fos::driver::{Cynq, RegisterFile};
+use fos::fabric::{Device, DeviceKind, Floorplan, Resources};
+use fos::memsim::{config_for, DdrModel};
+use fos::pnr::{compile_fos, CostModel, Netlist};
+use fos::reconfig::FpgaManager;
+use fos::registry::Registry;
+use fos::shell::{Shell, ShellBoard};
+
+#[test]
+fn compile_then_reconfigure_every_region() {
+    // FOS flow output must be loadable into every PR slot via the
+    // FPGA manager, with the decoupler protocol.
+    let fp = Floorplan::standard(Device::new(DeviceKind::Zu3eg));
+    let nl = Netlist::synthesize(
+        "itest",
+        &Resources { luts: 6000, ffs: 9000, brams: 10, dsps: 20 },
+    );
+    let report = compile_fos(&fp, &nl, &CostModel::default()).unwrap();
+    let mut mgr = FpgaManager::new(fp.device.clone(), fp.regions.len());
+    mgr.load_full(synth_full(&fp.device, 0));
+    for (i, target) in fp.regions.iter().enumerate() {
+        let moved = relocate(&fp.device, &report.partials[0], &fp.regions[0], target).unwrap();
+        let lat = mgr.reconfigure_region(i, &moved).unwrap();
+        assert!(lat.as_secs_f64() > 0.0);
+    }
+    assert_eq!(mgr.partial_loads, 3);
+}
+
+#[test]
+fn bitstream_file_roundtrip_through_manager() {
+    let fp = Floorplan::standard(Device::new(DeviceKind::Zu9eg));
+    let full = synth_full(&fp.device, 9);
+    let partial = extract(&fp.device, &full, &fp.regions[2]).unwrap();
+    // Serialise to disk the way the registry's bitfiles are stored.
+    let path = std::env::temp_dir().join(format!("fos_it_{}.bin", std::process::id()));
+    std::fs::write(&path, partial.to_bytes()).unwrap();
+    let back = fos::bitstream::Bitstream::from_bytes(&std::fs::read(&path).unwrap()).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(back, partial);
+}
+
+#[test]
+fn registry_register_map_drives_generic_driver() {
+    // The Listing-2 descriptor in the registry must be sufficient to
+    // program an accelerator with the generic driver — no other source
+    // of truth.
+    let catalog = Catalog::load_default().unwrap();
+    let shell = Shell::build(ShellBoard::Ultra96);
+    let reg = Registry::populate(&shell, &catalog).unwrap();
+    let desc = reg.accel("mm").unwrap();
+    let registers: Vec<fos::accel::Register> = desc
+        .req_array("registers")
+        .unwrap()
+        .iter()
+        .map(|r| fos::accel::Register {
+            name: r.req_str("name").unwrap().to_string(),
+            offset: u64::from_str_radix(
+                r.req_str("offset").unwrap().trim_start_matches("0x"),
+                16,
+            )
+            .unwrap(),
+        })
+        .collect();
+    let mut rf = RegisterFile::new(&registers);
+    rf.write_by_name("a_op", 0x4000_0000).unwrap();
+    rf.write_by_name("b_op", 0x4000_4000).unwrap();
+    rf.write_by_name("c_out", 0x4000_8000).unwrap();
+    assert_eq!(rf.operands().len(), 3);
+}
+
+#[test]
+fn shell_ports_match_memsim_config() {
+    for board in ShellBoard::all() {
+        let shell = Shell::build(board);
+        let cfg = config_for(board);
+        assert_eq!(
+            cfg.ports,
+            board.axi_ports().len(),
+            "{board:?}: memsim ports vs shell HP list"
+        );
+        assert_eq!(shell.region_count(), board.axi_ports().len());
+    }
+}
+
+#[test]
+fn every_variant_fits_its_claimed_regions_on_both_boards() {
+    // Catalog netlists must be placeable in the PR regions they claim —
+    // the contract between the python specs and the fabric.
+    let catalog = Catalog::load_default().unwrap();
+    for board in [ShellBoard::Ultra96, ShellBoard::Zcu102] {
+        let shell = Shell::build(board);
+        let region = shell.region_resources();
+        for a in &catalog.accelerators {
+            for v in &a.variants {
+                let budget = region.scaled(v.regions);
+                assert!(
+                    v.netlist.fits_in(&budget),
+                    "{} does not fit {} regions on {board:?}",
+                    v.name,
+                    v.regions
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn data_manager_feeds_real_compute() {
+    // Arena -> PJRT -> arena, via the Cynq glue, for a 2-input accel.
+    let catalog = Catalog::load_default().unwrap();
+    let mut fpga = Cynq::open(ShellBoard::Ultra96, catalog).unwrap();
+    let taps: Vec<f32> = (0..16).map(|i| 1.0 / (i + 1) as f32).collect();
+    let xs: Vec<f32> = (0..4111).map(|i| (i % 17) as f32).collect();
+    let px = fpga.alloc(4 * 4111).unwrap();
+    let pt = fpga.alloc(4 * 16).unwrap();
+    let py = fpga.alloc(4 * 4096).unwrap();
+    fpga.write_f32(px, &xs).unwrap();
+    fpga.write_f32(pt, &taps).unwrap();
+    let (h, _) = fpga.load_accelerator("fir", Some("fir_v1")).unwrap();
+    fpga.write_reg(h, "x_op", px).unwrap();
+    fpga.write_reg(h, "taps_op", pt).unwrap();
+    fpga.write_reg(h, "y_out", py).unwrap();
+    fpga.run(h).unwrap();
+    let y = fpga.read_f32(py, 4096).unwrap();
+    // CPU FIR reference at a few points.
+    for &i in &[0usize, 100, 4095] {
+        let want: f32 = (0..16).map(|j| taps[j] * xs[i + j]).sum();
+        assert!((y[i] - want).abs() < 1e-3, "y[{i}]: {} vs {want}", y[i]);
+    }
+}
+
+#[test]
+fn memsim_transfer_consistent_with_steady_state() {
+    let m = DdrModel::new(config_for(ShellBoard::Ultra96));
+    // 1 MiB at the uncontended per-direction rate.
+    let ns = m.transfer_ns(1 << 20, 0);
+    let rate_mbps = (1 << 20) as f64 / (ns / 1e9) / 1e6;
+    assert!((rate_mbps - 530.0).abs() < 60.0, "{rate_mbps}");
+}

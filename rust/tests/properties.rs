@@ -1,0 +1,202 @@
+//! Property-based tests over the core invariants (own `testutil::cases`
+//! driver — no proptest in the offline vendor set).
+
+use fos::accel::Catalog;
+use fos::bitstream::{extract, relocate, synth_full, Bitstream};
+use fos::driver::{DataManager, PhysAddr};
+use fos::fabric::{Device, DeviceKind, Floorplan};
+use fos::json::{parse, to_string, to_string_pretty, Value};
+use fos::sched::{simulate, JobSpec, Policy, SimConfig, Workload};
+use fos::shell::ShellBoard;
+use fos::testutil::{cases, Rng};
+
+/// Random JSON value generator.
+fn gen_value(rng: &mut Rng, depth: usize) -> Value {
+    match if depth == 0 { rng.below(5) } else { rng.below(7) } {
+        0 => Value::Null,
+        1 => Value::Bool(rng.bool(0.5)),
+        2 => Value::Int(rng.next_u64() as i64 / 2),
+        3 => Value::Float((rng.f64() - 0.5) * 1e9),
+        4 => {
+            let n = rng.below(12) as usize;
+            Value::Str(
+                (0..n)
+                    .map(|_| {
+                        let c = rng.below(128) as u8;
+                        if c.is_ascii_graphic() || c == b' ' { c as char } else { '\u{263A}' }
+                    })
+                    .collect(),
+            )
+        }
+        5 => Value::Array(
+            (0..rng.below(5)).map(|_| gen_value(rng, depth - 1)).collect(),
+        ),
+        _ => Value::Object(
+            (0..rng.below(5))
+                .map(|k| (format!("k{k}_{}", rng.below(100)), gen_value(rng, depth - 1)))
+                .collect(),
+        ),
+    }
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    cases(300, |rng| {
+        let v = gen_value(rng, 3);
+        assert_eq!(parse(&to_string(&v)).unwrap(), v);
+        assert_eq!(parse(&to_string_pretty(&v)).unwrap(), v);
+    });
+}
+
+#[test]
+fn prop_json_parser_never_panics_on_garbage() {
+    cases(500, |rng| {
+        let n = rng.below(64) as usize;
+        let junk: String = (0..n)
+            .map(|_| *rng.pick(&['{', '}', '[', ']', '"', ',', ':', '1', 'e', '.', '-', 'n', 't', ' ']))
+            .collect();
+        let _ = parse(&junk); // must return, never panic
+    });
+}
+
+#[test]
+fn prop_bitstream_serialisation_roundtrip() {
+    cases(60, |rng| {
+        let mut bs = Bitstream::new("dev", rng.bool(0.5));
+        for _ in 0..rng.below(20) {
+            let addr = fos::bitstream::FrameAddr {
+                clock_region: rng.below(8) as u32,
+                column: rng.below(100) as u32,
+                minor: rng.below(36) as u32,
+            };
+            let words = (0..fos::bitstream::FRAME_WORDS)
+                .map(|_| rng.next_u64() as u32)
+                .collect();
+            bs.insert(fos::bitstream::Frame::new(addr, words));
+        }
+        assert_eq!(Bitstream::from_bytes(&bs.to_bytes()).unwrap(), bs);
+        // Any single-bit corruption is detected (CRC or structure checks).
+        let mut bytes = bs.to_bytes();
+        if !bytes.is_empty() {
+            let idx = rng.below(bytes.len() as u64) as usize;
+            bytes[idx] ^= 1 << rng.below(8);
+            assert!(Bitstream::from_bytes(&bytes).is_err());
+        }
+    });
+}
+
+#[test]
+fn prop_relocation_is_invertible_and_content_preserving() {
+    let fp = Floorplan::standard(Device::new(DeviceKind::Zu9eg));
+    let full = synth_full(&fp.device, 77);
+    cases(40, |rng| {
+        let from = rng.below(fp.regions.len() as u64) as usize;
+        let to = rng.below(fp.regions.len() as u64) as usize;
+        let p = extract(&fp.device, &full, &fp.regions[from]).unwrap();
+        let moved = relocate(&fp.device, &p, &fp.regions[from], &fp.regions[to]).unwrap();
+        let back = relocate(&fp.device, &moved, &fp.regions[to], &fp.regions[from]).unwrap();
+        assert_eq!(back, p);
+        // Content multiset preserved.
+        let mut a: Vec<&Vec<u32>> = p.frames.values().collect();
+        let mut b: Vec<&Vec<u32>> = moved.frames.values().collect();
+        a.sort();
+        b.sort();
+        assert_eq!(a, b);
+    });
+}
+
+#[test]
+fn prop_data_manager_never_overlaps() {
+    cases(60, |rng| {
+        let mut dm = DataManager::new(1 << 18);
+        let mut live: Vec<(PhysAddr, usize)> = Vec::new();
+        for _ in 0..40 {
+            if rng.bool(0.6) || live.is_empty() {
+                let size = 1 + rng.below(8192) as usize;
+                if let Ok(addr) = dm.alloc(size) {
+                    // No overlap with any live allocation.
+                    for &(a, s) in &live {
+                        let disjoint = addr.0 + size as u64 <= a.0 || a.0 + s as u64 <= addr.0;
+                        assert!(disjoint, "{addr:?}+{size} overlaps {a:?}+{s}");
+                    }
+                    live.push((addr, size));
+                }
+            } else {
+                let idx = rng.below(live.len() as u64) as usize;
+                let (addr, _) = live.swap_remove(idx);
+                dm.free(addr).unwrap();
+            }
+        }
+        // Accounting is exact.
+        assert_eq!(dm.allocated_bytes(), live.iter().map(|&(_, s)| s).sum::<usize>());
+    });
+}
+
+#[test]
+fn prop_scheduler_trace_invariants_random_workloads() {
+    let catalog = Catalog::load_default().unwrap();
+    let accels = ["vadd", "mm", "fir", "histogram", "dct", "sobel", "mandelbrot", "black_scholes"];
+    cases(25, |rng| {
+        let mut w = Workload::new();
+        let users = 1 + rng.below(4) as usize;
+        for u in 0..users {
+            let accel = *rng.pick(&accels);
+            let tiles = 1 + rng.below(40) as usize;
+            let reqs = 1 + rng.below(8) as usize;
+            let arrival = rng.below(10_000_000);
+            for j in JobSpec::frame(u, accel, arrival, tiles, reqs) {
+                w.push(j);
+            }
+        }
+        let board = if rng.bool(0.5) { ShellBoard::Ultra96 } else { ShellBoard::Zcu102 };
+        let policy = if rng.bool(0.5) { Policy::Elastic } else { Policy::Fixed };
+        let r = simulate(&catalog, &w, &SimConfig::new(board, policy));
+        let n_regions = if board == ShellBoard::Ultra96 { 3 } else { 4 };
+
+        // Every request dispatched exactly once.
+        assert_eq!(r.trace.len(), w.total_requests());
+        assert_eq!(r.reconfigs + r.reuses, w.total_requests() as u64);
+        // No overlapping allocations on any region; all inside fabric.
+        for (i, a) in r.trace.iter().enumerate() {
+            assert!(a.end > a.start);
+            assert!(a.region + a.span <= n_regions, "{a:?}");
+            for b in &r.trace[i + 1..] {
+                let disjoint_regions =
+                    a.region + a.span <= b.region || b.region + b.span <= a.region;
+                let disjoint_time = a.end <= b.start || b.end <= a.start;
+                assert!(disjoint_regions || disjoint_time, "{a:?} vs {b:?}");
+            }
+        }
+        // Job completion happens after arrival and not after makespan.
+        for (j, &done) in r.job_completion.iter().enumerate() {
+            assert!(done >= w.jobs[j].arrival);
+            assert!(done <= r.makespan);
+        }
+        assert!(r.regions.iter().map(|t| t.busy_ns).sum::<u64>() > 0);
+    });
+}
+
+#[test]
+fn prop_floorplan_mutations_caught() {
+    cases(60, |rng| {
+        let mut fp = Floorplan::standard(Device::new(DeviceKind::Zu3eg));
+        let idx = rng.below(fp.regions.len() as u64) as usize;
+        let mutation = rng.below(4);
+        match mutation {
+            0 => fp.regions[idx].bbox.r0 += 1 + rng.below(30) as usize, // misalign
+            1 => {
+                fp.regions[idx].bbox.c0 += 1; // footprint shift
+                fp.regions[idx].bbox.c1 += 1;
+            }
+            2 => fp.regions[idx].tunnel_rows = vec![rng.below(20) as usize], // tunnel move
+            _ => {
+                let other = (idx + 1) % fp.regions.len();
+                fp.regions[idx].bbox = fp.regions[other].bbox; // overlap
+            }
+        }
+        assert!(
+            !fp.check().is_empty(),
+            "mutation {mutation} on region {idx} went undetected"
+        );
+    });
+}
