@@ -39,8 +39,8 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             requests.to_string(),
             format!("{ms:.2}"),
             format!("{:.2}x", b / ms),
-            r.reconfigs.to_string(),
-            r.reuses.to_string(),
+            r.counters.reconfigs.to_string(),
+            r.counters.reuses.to_string(),
         ]);
     }
     t.print();

@@ -45,12 +45,36 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let st = daemon.stats();
     use std::sync::atomic::Ordering::Relaxed;
     println!(
-        "  daemon: {} jobs, {} reconfig loads, {} reuse hits, mean sched decision {:.1} us",
+        "  daemon: {} jobs, {} reconfig loads, {} reuse hits, {} skips, \
+         {} replications ({} jobs on replicated instances), mean sched decision {:.1} us",
         st.jobs.load(Relaxed),
         st.reconfig_loads.load(Relaxed),
         st.reuse_hits.load(Relaxed),
+        st.skips.load(Relaxed),
+        st.replications.load(Relaxed),
+        st.replicated_jobs.load(Relaxed),
         st.sched_ns.load(Relaxed) as f64 / st.sched_decisions.load(Relaxed).max(1) as f64 / 1e3,
     );
+    // The dispatcher runs the same SchedCore as the simulator; its
+    // ordered decision log shows the elastic choices it made live.
+    let log = daemon.decision_log_tail(6);
+    println!(
+        "  decision log: {} placements (showing last {})",
+        st.jobs.load(Relaxed),
+        log.len()
+    );
+    for d in log.iter() {
+        println!(
+            "    user {} {}::{} @ pr{}..+{} {}{}",
+            d.user,
+            d.accel,
+            d.variant,
+            d.anchor,
+            d.span,
+            if d.reconfigure { "reconfigure" } else { "reuse" },
+            if d.replicated { " (replica)" } else { "" },
+        );
+    }
     let total_jobs = st.jobs.load(Relaxed);
     println!(
         "  throughput: {:.1} requests/s (daemon-side, real PJRT compute)",
@@ -63,6 +87,10 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
 /// Tenant A: Mandelbrot over a fixed window, one frame = `reqs` tiles.
 fn tenant_mandelbrot(socket: &std::path::Path, frames: usize, reqs: usize) -> (LatencyStats, usize) {
     let mut rpc = FpgaRpc::connect(socket).unwrap();
+    // The scheduling-policy knob: this tenant explicitly asks for the
+    // resource-elastic policy (also the default); `Policy::Fixed`
+    // would pin it to one static region instead.
+    rpc.set_policy(fos::sched::Policy::Elastic).unwrap();
     let mut stats = LatencyStats::new();
     let mut checked = 0usize;
     // 64x64 coordinate tile spanning [-2, 1] x [-1.5, 1.5].
@@ -81,10 +109,10 @@ fn tenant_mandelbrot(socket: &std::path::Path, frames: usize, reqs: usize) -> (L
     for _ in 0..frames {
         let jobs: Vec<Job> = outputs
             .iter()
-            .map(|&out| Job {
-                accname: "mandelbrot".into(),
-                params: vec![("in_coords".into(), input), ("out_cnt".into(), out)],
-            })
+            .map(|&out| Job::new(
+                "mandelbrot",
+                vec![("in_coords".into(), input), ("out_cnt".into(), out)],
+            ))
             .collect();
         let report = rpc.run(&jobs).unwrap();
         for us in report.latencies_us {
@@ -116,10 +144,10 @@ fn tenant_sobel(socket: &std::path::Path, frames: usize, reqs: usize) -> (Latenc
     for _ in 0..frames {
         let jobs: Vec<Job> = outputs
             .iter()
-            .map(|&out| Job {
-                accname: "sobel".into(),
-                params: vec![("in_img".into(), input), ("out_img".into(), out)],
-            })
+            .map(|&out| Job::new(
+                "sobel",
+                vec![("in_img".into(), input), ("out_img".into(), out)],
+            ))
             .collect();
         let report = rpc.run(&jobs).unwrap();
         for us in report.latencies_us {

@@ -4,7 +4,7 @@
 //! the makespans.
 
 use fos::accel::Catalog;
-use fos::metrics::Table;
+use fos::metrics::{sched_summary, Table};
 use fos::sched::{simulate, JobSpec, Policy, SimConfig, SimResult, Workload};
 use fos::shell::ShellBoard;
 
@@ -81,9 +81,15 @@ fn main() {
         ]);
     }
     t.print();
+    // Both policies run through the same SchedCore; report its shared
+    // counters (the daemon's DaemonStats mirrors the identical set).
+    println!("{}", sched_summary("elastic", &el.counters));
+    println!("{}", sched_summary("fixed  ", &fx.counters));
     println!(
-        "elastic: {} reconfigs, {} reuses; fixed: {} reconfigs",
-        el.reconfigs, el.reuses, fx.reconfigs
+        "elastic decision log: {} placements, first = {:?}",
+        el.decisions.len(),
+        el.decisions.first().map(|d| (&d.accel, &d.variant, d.anchor, d.span))
     );
     assert!(el.makespan < fx.makespan, "elastic must beat fixed");
+    assert!(el.counters.replications >= 1, "elastic run should replicate for task A's backlog");
 }

@@ -5,10 +5,10 @@
 
 use fos::accel::Catalog;
 use fos::metrics::Table;
-use fos::sched::{simulate, JobSpec, Policy, SimConfig, Workload};
+use fos::sched::{simulate, JobSpec, Policy, SchedCounters, SimConfig, Workload};
 use fos::shell::ShellBoard;
 
-fn scenario(catalog: &Catalog, m_reqs: usize, s_reqs: usize) -> f64 {
+fn scenario(catalog: &Catalog, m_reqs: usize, s_reqs: usize) -> (f64, SchedCounters) {
     let mut w = Workload::new();
     for j in JobSpec::frame_pinned(0, "mandelbrot", "mandelbrot_v1", 0, 12, m_reqs) {
         w.push(j);
@@ -21,29 +21,34 @@ fn scenario(catalog: &Catalog, m_reqs: usize, s_reqs: usize) -> f64 {
         &w,
         &SimConfig::new(ShellBoard::Ultra96, Policy::Elastic),
     );
-    r.makespan as f64 / 1e6
+    (r.makespan as f64 / 1e6, r.counters)
 }
 
 fn main() {
     let catalog = Catalog::load_default().expect("run `make artifacts`");
-    let base = scenario(&catalog, 1, 1);
+    let (base, _) = scenario(&catalog, 1, 1);
     let mut t = Table::new(
         "Fig 22 — Mandel x Sobel concurrent on Ultra96, latency relative to 1x1",
-        &["scenario", "makespan (ms)", "relative"],
+        &["scenario", "makespan (ms)", "relative", "reconfig/reuse/skip"],
     );
     let mut best = (String::new(), f64::INFINITY);
     for m in 1..=3usize {
         for s in 1..=3usize {
-            let ms = scenario(&catalog, m, s);
+            let (ms, c) = scenario(&catalog, m, s);
             let name = format!("{m}-Mandel x {s}-Sobel");
             if ms < best.1 {
                 best = (name.clone(), ms);
             }
-            t.row(&[name, format!("{ms:.2}"), format!("{:.2}", ms / base)]);
+            t.row(&[
+                name,
+                format!("{ms:.2}"),
+                format!("{:.2}", ms / base),
+                format!("{}/{}/{}", c.reconfigs, c.reuses, c.skips),
+            ]);
         }
     }
     t.print();
-    let greedy = scenario(&catalog, 3, 3);
+    let (greedy, _) = scenario(&catalog, 3, 3);
     println!(
         "best: {} at {:.2} ms ({:.0}% better than 1x1; paper: 46% at 3-Mandel x 1-Sobel)",
         best.0,

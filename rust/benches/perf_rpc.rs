@@ -51,10 +51,10 @@ fn main() {
     rpc.write_f32(a, &vec![1.0; 4096]).unwrap();
     rpc.write_f32(b, &vec![2.0; 4096]).unwrap();
     let jobs: Vec<Job> = (0..100)
-        .map(|_| Job {
-            accname: "vadd".into(),
-            params: vec![("a_op".into(), a), ("b_op".into(), b), ("c_out".into(), c)],
-        })
+        .map(|_| Job::new(
+            "vadd",
+            vec![("a_op".into(), a), ("b_op".into(), b), ("c_out".into(), c)],
+        ))
         .collect();
     let t0 = Instant::now();
     let report = rpc.run(&jobs).unwrap();

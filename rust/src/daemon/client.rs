@@ -8,19 +8,34 @@
 //! let c = rpc.alloc(4 * 4096).unwrap();
 //! rpc.write_f32(a, &vec![1.0; 4096]).unwrap();
 //! rpc.write_f32(b, &vec![2.0; 4096]).unwrap();
-//! let job = Job {
-//!     accname: "vadd".into(),
-//!     params: vec![("a_op".into(), a), ("b_op".into(), b), ("c_out".into(), c)],
-//! };
+//! let job = Job::new(
+//!     "vadd",
+//!     vec![("a_op".into(), a), ("b_op".into(), b), ("c_out".into(), c)],
+//! );
 //! rpc.run(&[job]).unwrap();
 //! let sum = rpc.read_f32(c, 4096).unwrap();
 //! ```
 
 use super::proto::{self, read_msg, write_msg, Job, ProtoError};
 use crate::json::{arr, i, obj, s, Value};
+use crate::sched::Policy;
 use std::os::unix::net::UnixStream;
 use std::path::Path;
 use std::time::{Duration, Instant};
+
+/// Scheduler-side counters as reported by the daemon's `stats` method
+/// (mirrors the shared [`crate::sched::SchedCounters`]).
+#[derive(Debug, Clone, Default)]
+pub struct SchedStatsReport {
+    /// Requests admitted but not yet scheduled.
+    pub queued: u64,
+    pub reconfigs: u64,
+    pub reuses: u64,
+    pub skips: u64,
+    pub replications: u64,
+    /// Dispatching is held (see [`FpgaRpc::pause`]).
+    pub paused: bool,
+}
 
 /// Per-run latency report.
 #[derive(Debug, Clone)]
@@ -146,6 +161,47 @@ impl FpgaRpc {
             ("offset", i(offset as i64)),
         ]))?;
         Ok(())
+    }
+
+    /// Route this tenant to a built-in scheduling policy (the daemon
+    /// default is [`Policy::Elastic`]).
+    pub fn set_policy(&mut self, policy: Policy) -> Result<(), ProtoError> {
+        self.set_policy_name(policy.name())
+    }
+
+    /// Route this tenant to a policy by registered name — custom
+    /// [`crate::sched::SchedPolicy`] implementations included.
+    pub fn set_policy_name(&mut self, name: &str) -> Result<(), ProtoError> {
+        self.call(obj(vec![("method", s("policy")), ("policy", s(name))]))?;
+        Ok(())
+    }
+
+    /// Hold dispatching: submitted jobs queue but nothing is scheduled
+    /// until [`FpgaRpc::resume`] — admission control for maintenance
+    /// windows (and the deterministic-arrival hook the sim/daemon
+    /// parity test uses).
+    pub fn pause(&mut self) -> Result<(), ProtoError> {
+        self.call(obj(vec![("method", s("pause"))]))?;
+        Ok(())
+    }
+
+    pub fn resume(&mut self) -> Result<(), ProtoError> {
+        self.call(obj(vec![("method", s("resume"))]))?;
+        Ok(())
+    }
+
+    /// Snapshot of the daemon's shared scheduler counters.
+    pub fn sched_stats(&mut self) -> Result<SchedStatsReport, ProtoError> {
+        let r = self.call(obj(vec![("method", s("stats"))]))?;
+        let num = |key: &str| r.get(key).as_u64().unwrap_or(0);
+        Ok(SchedStatsReport {
+            queued: num("queued"),
+            reconfigs: num("reconfigs"),
+            reuses: num("reuses"),
+            skips: num("skips"),
+            replications: num("replications"),
+            paused: num("paused") != 0,
+        })
     }
 
     /// Offload data-parallel acceleration requests (Listing 4's

@@ -6,18 +6,25 @@
 //! set has no gRPC, and the IPC structure is identical), while bulk
 //! data moves through shared memory so the socket never carries
 //! payloads (the paper's zero-copy design). The daemon owns the FPGA:
-//! a dispatcher thread round-robins acceleration requests across user
-//! connections (cooperative, run-to-completion — §4.4.3), reusing
-//! loaded accelerators when possible and reconfiguring otherwise, and
-//! drives real PJRT compute through the same Cynq stack single-tenant
-//! code uses.
+//! a dispatcher thread drives the shared resource-elastic scheduler
+//! core ([`crate::sched::SchedCore`]) — the same state machine the
+//! offline simulator uses — so the live path performs variant
+//! selection, multi-region spans, replication across free regions and
+//! backlog-amortised reconfiguration avoidance (§4.4.3), executing
+//! every decision through real PJRT compute in the Cynq stack.
+//!
+//! Tenants pick their scheduling policy over the wire
+//! ([`FpgaRpc::set_policy`]): [`crate::sched::Policy::Elastic`] is the
+//! default, [`crate::sched::Policy::Fixed`] reproduces the paper's
+//! static baseline, and custom [`crate::sched::SchedPolicy`]
+//! registrations are addressable by name.
 
 mod proto;
 mod server;
 mod client;
 mod shm;
 
-pub use client::FpgaRpc;
+pub use client::{FpgaRpc, RunReport, SchedStatsReport};
 pub use proto::{read_msg, write_msg, Job, ProtoError};
 pub use server::{Daemon, DaemonStats};
 pub use shm::SharedMem;

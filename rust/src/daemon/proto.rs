@@ -41,19 +41,34 @@ impl From<std::io::Error> for ProtoError {
 }
 
 /// One acceleration job (Listing 4/5): logical accelerator name +
-/// register values (physical addresses from `alloc`).
+/// register values (physical addresses from `alloc`) + the number of
+/// work items batched behind those registers (the §4.4.2 request
+/// granularity the scheduler amortises reconfigurations over).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Job {
     pub accname: String,
     /// (register name, value) pairs.
     pub params: Vec<(String, u64)>,
+    /// Work items (tiles) in this request; 1 for a single call.
+    pub tiles: usize,
 }
 
 impl Job {
+    /// A single-tile job — the common Listing-4 shape.
+    pub fn new(accname: impl Into<String>, params: Vec<(String, u64)>) -> Job {
+        Job { accname: accname.into(), params, tiles: 1 }
+    }
+
+    pub fn with_tiles(mut self, tiles: usize) -> Job {
+        self.tiles = tiles.max(1);
+        self
+    }
+
     pub fn to_value(&self) -> Value {
         use crate::json::{i, obj, s};
         obj(vec![
             ("name", s(self.accname.clone())),
+            ("tiles", i(self.tiles as i64)),
             (
                 "params",
                 Value::Object(
@@ -71,6 +86,8 @@ impl Job {
             .req_str("name")
             .map_err(ProtoError::Schema)?
             .to_string();
+        // Absent on old clients: default to a single work item.
+        let tiles = v.get("tiles").as_u64().unwrap_or(1).max(1) as usize;
         let params = v
             .get("params")
             .as_object()
@@ -82,7 +99,7 @@ impl Job {
                     .ok_or_else(|| ProtoError::Schema(format!("param {k} not an address")))
             })
             .collect::<Result<_, _>>()?;
-        Ok(Job { accname, params })
+        Ok(Job { accname, params, tiles })
     }
 }
 
@@ -208,18 +225,27 @@ mod tests {
 
     #[test]
     fn job_listing4_shape() {
-        let job = Job {
-            accname: "Partial_accel_vadd".into(),
-            params: vec![
+        let job = Job::new(
+            "Partial_accel_vadd",
+            vec![
                 ("a_op".into(), 0x4000_0000),
                 ("b_op".into(), 0x4000_4000),
                 ("c_out".into(), 0x4000_8000),
             ],
-        };
+        );
         let v = job.to_value();
         assert_eq!(v.req_str("name").unwrap(), "Partial_accel_vadd");
         let back = Job::from_value(&v).unwrap();
         assert_eq!(back, job);
+        // Batched work items survive the round-trip; old-style messages
+        // without "tiles" default to 1.
+        let batched = job.clone().with_tiles(8);
+        assert_eq!(Job::from_value(&batched.to_value()).unwrap().tiles, 8);
+        let mut legacy = batched.to_value();
+        if let crate::json::Value::Object(fields) = &mut legacy {
+            fields.retain(|k, _| k != "tiles");
+        }
+        assert_eq!(Job::from_value(&legacy).unwrap().tiles, 1);
     }
 
     #[test]

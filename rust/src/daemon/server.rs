@@ -1,13 +1,28 @@
 //! The daemon process: UDS accept loop + single dispatcher thread that
-//! owns the FPGA (Cynq stack) and round-robins requests across users.
+//! owns the FPGA (Cynq stack) and schedules requests across users
+//! through the shared resource-elastic scheduler core
+//! ([`crate::sched::SchedCore`]) — the same state machine the offline
+//! simulator drives, so the live path gains variant selection,
+//! multi-region spans, replication across free regions and
+//! backlog-amortised reconfiguration avoidance (§4.4.3).
+//!
+//! The dispatcher keeps a *virtual clock*: each decision's service time
+//! comes from the shared [`crate::sched::CostModel`] and completions
+//! are replayed into the core in virtual-time order, exactly like the
+//! simulator's event heap.  Real execution (register programming + PJRT
+//! compute through Cynq) happens synchronously in decision order, so
+//! for one trace the simulator and the daemon produce identical
+//! decision sequences — asserted by `tests/sched_parity.rs`.
 
 use super::proto::{self, read_msg, write_msg, Job};
 use super::shm::SharedMem;
 use crate::accel::Catalog;
 use crate::driver::{Cynq, LoadedAccel, PhysAddr};
 use crate::json::{arr, f, i, obj, s, Value};
+use crate::sched::{Decision, Policy, SchedCore, SchedCounters};
 use crate::shell::ShellBoard;
-use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap, VecDeque};
 use std::io;
 use std::os::unix::net::{UnixListener, UnixStream};
 use std::path::{Path, PathBuf};
@@ -15,12 +30,24 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::Instant;
 
-/// Daemon-side counters (Table 4/5 material).
+/// Daemon-side counters (Table 4/5 material). The scheduling counters
+/// (`reconfig_loads`, `reuse_hits`, `skips`, `replications`) mirror the
+/// core's [`crate::sched::SchedCounters`] — one source of truth for
+/// both the simulator and the daemon.
 #[derive(Debug, Default)]
 pub struct DaemonStats {
     pub jobs: AtomicU64,
     pub reconfig_loads: AtomicU64,
     pub reuse_hits: AtomicU64,
+    /// Rounds where a user was deferred (reconfiguration avoidance,
+    /// busy fixed home).
+    pub skips: AtomicU64,
+    /// Reconfigurations that created an additional instance of an
+    /// already-resident accelerator.
+    pub replications: AtomicU64,
+    /// Jobs served while ≥2 instances of their accelerator were
+    /// resident (served by a replicated instance).
+    pub replicated_jobs: AtomicU64,
     /// Scheduling decision time (pick user/region/variant), ns.
     pub sched_ns: AtomicU64,
     pub sched_decisions: AtomicU64,
@@ -28,6 +55,16 @@ pub struct DaemonStats {
 }
 
 enum Msg {
+    /// A connection opened (sent by its first `ping`): bind the daemon
+    /// user id to a recycled scheduler slot.
+    Hello {
+        user: u64,
+        reply: mpsc::Sender<Value>,
+    },
+    /// A connection closed: retire its scheduler slot for reuse.
+    Goodbye {
+        user: u64,
+    },
     Submit {
         user: u64,
         jobs: Vec<Job>,
@@ -36,6 +73,26 @@ enum Msg {
     Mem {
         op: MemOp,
         reply: mpsc::Sender<Value>,
+    },
+    SetPolicy {
+        user: u64,
+        name: String,
+        reply: mpsc::Sender<Value>,
+    },
+    Pause {
+        reply: mpsc::Sender<Value>,
+    },
+    Resume {
+        reply: mpsc::Sender<Value>,
+    },
+    Query {
+        reply: mpsc::Sender<Value>,
+    },
+    /// Snapshot of the scheduler core's ordered decision log — the
+    /// last `limit` entries, or all retained ones when `None`.
+    QueryLog {
+        limit: Option<usize>,
+        reply: mpsc::Sender<Vec<Decision>>,
     },
     Stop,
 }
@@ -60,12 +117,23 @@ pub struct Daemon {
 }
 
 impl Daemon {
-    /// Start the daemon: bind the socket, bring up the FPGA, spawn the
-    /// accept loop and the dispatcher.
+    /// Start the daemon under the resource-elastic default policy.
     pub fn start(
         socket_path: impl AsRef<Path>,
         board: ShellBoard,
         catalog: Catalog,
+    ) -> io::Result<Daemon> {
+        Self::start_with_policy(socket_path, board, catalog, Policy::Elastic)
+    }
+
+    /// Start the daemon: bind the socket, bring up the FPGA, spawn the
+    /// accept loop and the dispatcher. `default_policy` routes tenants
+    /// that never call `FpgaRpc::set_policy`.
+    pub fn start_with_policy(
+        socket_path: impl AsRef<Path>,
+        board: ShellBoard,
+        catalog: Catalog,
+        default_policy: Policy,
     ) -> io::Result<Daemon> {
         let socket_path = socket_path.as_ref().to_path_buf();
         let _ = std::fs::remove_file(&socket_path);
@@ -82,7 +150,7 @@ impl Daemon {
             let stats = stats.clone();
             std::thread::Builder::new()
                 .name("fos-dispatch".into())
-                .spawn(move || dispatcher(cynq, rx, stats))?
+                .spawn(move || dispatcher(cynq, rx, stats, default_policy))?
         };
 
         let accept_handle = {
@@ -125,6 +193,27 @@ impl Daemon {
         &self.stats
     }
 
+    /// Snapshot of the scheduler core's ordered decision log (the most
+    /// recent entries, ring-capped by the core). Empty once the
+    /// dispatcher has stopped.
+    pub fn decision_log(&self) -> Vec<Decision> {
+        self.decision_log_query(None)
+    }
+
+    /// The last `n` decisions only — what monitoring loops should poll
+    /// (a full-log snapshot clones up to the whole ring).
+    pub fn decision_log_tail(&self, n: usize) -> Vec<Decision> {
+        self.decision_log_query(Some(n))
+    }
+
+    fn decision_log_query(&self, limit: Option<usize>) -> Vec<Decision> {
+        let (rtx, rrx) = mpsc::channel();
+        if self.tx.send(Msg::QueryLog { limit, reply: rtx }).is_err() {
+            return Vec::new();
+        }
+        rrx.recv().unwrap_or_default()
+    }
+
     pub fn shutdown(&mut self) {
         self.stop.store(true, Ordering::Relaxed);
         let _ = self.tx.send(Msg::Stop);
@@ -144,22 +233,43 @@ impl Drop for Daemon {
     }
 }
 
-/// Per-connection request loop.
+/// Request/reply round-trip with the dispatcher thread.
+fn ask(tx: &mpsc::Sender<Msg>, make: impl FnOnce(mpsc::Sender<Value>) -> Msg) -> Value {
+    let (rtx, rrx) = mpsc::channel();
+    if tx.send(make(rtx)).is_err() {
+        return err_val("daemon stopping");
+    }
+    rrx.recv().unwrap_or_else(|_| err_val("dispatcher died"))
+}
+
+/// Per-connection request loop (retires the user's scheduler slot on
+/// exit, however the connection ends).
 fn connection(
     mut stream: UnixStream,
     user: u64,
     tx: mpsc::Sender<Msg>,
     stats: Arc<DaemonStats>,
 ) -> Result<(), proto::ProtoError> {
+    let r = serve(&mut stream, user, &tx, &stats);
+    let _ = tx.send(Msg::Goodbye { user });
+    r
+}
+
+fn serve(
+    stream: &mut UnixStream,
+    user: u64,
+    tx: &mpsc::Sender<Msg>,
+    stats: &Arc<DaemonStats>,
+) -> Result<(), proto::ProtoError> {
     loop {
-        let msg = match read_msg(&mut stream) {
+        let msg = match read_msg(stream) {
             Ok(m) => m,
             Err(_) => return Ok(()), // client hung up
         };
         stats.rpcs.fetch_add(1, Ordering::Relaxed);
         let method = msg.get("method").as_str().unwrap_or("");
         let resp = match method {
-            "ping" => ok(vec![("user", i(user as i64))]),
+            "ping" => ask(tx, |reply| Msg::Hello { user, reply }),
             "run" => {
                 let jobs: Result<Vec<Job>, _> = msg
                     .req_array("jobs")
@@ -169,32 +279,28 @@ fn connection(
                     .collect();
                 match jobs {
                     Err(e) => err_val(&e.to_string()),
-                    Ok(jobs) => {
-                        let (rtx, rrx) = mpsc::channel();
-                        if tx.send(Msg::Submit { user, jobs, reply: rtx }).is_err() {
-                            err_val("daemon stopping")
-                        } else {
-                            rrx.recv().unwrap_or_else(|_| err_val("dispatcher died"))
-                        }
-                    }
+                    Ok(jobs) => ask(tx, |reply| Msg::Submit { user, jobs, reply }),
                 }
             }
+            "policy" => match msg.req_str("policy") {
+                Err(e) => err_val(&e),
+                Ok(name) => {
+                    let name = name.to_string();
+                    ask(tx, |reply| Msg::SetPolicy { user, name, reply })
+                }
+            },
+            "pause" => ask(tx, |reply| Msg::Pause { reply }),
+            "resume" => ask(tx, |reply| Msg::Resume { reply }),
+            "stats" => ask(tx, |reply| Msg::Query { reply }),
             "alloc" | "free" | "write" | "read" | "import" | "export" => {
                 match parse_mem_op(method, &msg) {
                     Err(e) => err_val(&e),
-                    Ok(op) => {
-                        let (rtx, rrx) = mpsc::channel();
-                        if tx.send(Msg::Mem { op, reply: rtx }).is_err() {
-                            err_val("daemon stopping")
-                        } else {
-                            rrx.recv().unwrap_or_else(|_| err_val("dispatcher died"))
-                        }
-                    }
+                    Ok(op) => ask(tx, |reply| Msg::Mem { op, reply }),
                 }
             }
             other => err_val(&format!("unknown method {other:?}")),
         };
-        write_msg(&mut stream, &resp)?;
+        write_msg(stream, &resp)?;
     }
 }
 
@@ -226,162 +332,451 @@ fn parse_mem_op(method: &str, msg: &Value) -> Result<MemOp, String> {
     })
 }
 
-/// The dispatcher: owns the FPGA; round-robin across user queues at
-/// acceleration-request granularity (§4.4.3).
-fn dispatcher(mut cynq: Cynq, rx: mpsc::Receiver<Msg>, stats: Arc<DaemonStats>) {
-    struct Batch {
-        reply: mpsc::Sender<Value>,
-        remaining: usize,
-        latencies_us: Vec<f64>,
-        modelled_us: Vec<f64>,
-        error: Option<String>,
+struct Batch {
+    reply: mpsc::Sender<Value>,
+    remaining: usize,
+    latencies_us: Vec<f64>,
+    modelled_us: Vec<f64>,
+    error: Option<String>,
+}
+
+fn finish(b: Batch) {
+    let resp = match &b.error {
+        Some(e) => err_val(e),
+        None => ok(vec![
+            (
+                "latencies_us",
+                arr(b.latencies_us.iter().map(|&x| f(x)).collect()),
+            ),
+            (
+                "modelled_us",
+                arr(b.modelled_us.iter().map(|&x| f(x)).collect()),
+            ),
+        ]),
+    };
+    let _ = b.reply.send(resp);
+}
+
+/// A submitted proto job awaiting its scheduling decision.
+struct PendingJob {
+    job: Job,
+    batch: usize,
+}
+
+/// Fail one admitted-but-unfinished job of a batch, sending the batch
+/// reply when it was the last outstanding unit — the single bookkeeping
+/// path shared by client disconnects and the stall guard.
+fn fail_job(batches: &mut HashMap<usize, Batch>, batch_id: usize, err: String) {
+    if let Some(b) = batches.get_mut(&batch_id) {
+        b.error = Some(err);
+        b.remaining -= 1;
+        if b.remaining == 0 {
+            let b = batches.remove(&batch_id).unwrap();
+            finish(b);
+        }
     }
-    let mut queues: BTreeMap<u64, VecDeque<(Job, usize)>> = BTreeMap::new();
-    let mut batches: Vec<Batch> = Vec::new();
-    let mut loaded: HashMap<String, LoadedAccel> = HashMap::new();
-    let mut lru: Vec<String> = Vec::new();
-    let mut rr_last: Option<u64> = None;
+}
+
+/// The dispatcher: owns the FPGA and drives the shared scheduler core.
+/// Blocks on the channel when idle or paused; while work is in flight
+/// it alternates message draining, scheduling rounds and virtual-time
+/// completion replay — never a hot spin.
+fn dispatcher(mut cynq: Cynq, rx: mpsc::Receiver<Msg>, stats: Arc<DaemonStats>, policy: Policy) {
+    let mut core = SchedCore::new(&cynq.shell, cynq.catalog.clone(), policy);
+    // Live batches only — finished ones are removed, so a long-lived
+    // daemon does not accumulate per-job state.
+    let mut batches: HashMap<usize, Batch> = HashMap::new();
+    let mut next_batch = 0usize;
+    let mut pending: HashMap<u64, PendingJob> = HashMap::new();
+    let mut next_token = 0u64;
+    // Daemon connection id -> scheduler slot; slots are recycled on
+    // Goodbye so core state is bounded by peak concurrent tenants.
+    let mut user_index: HashMap<u64, usize> = HashMap::new();
+    let mut free_slots: std::collections::BTreeSet<usize> = std::collections::BTreeSet::new();
+    let mut next_fresh = 0usize;
+    // State-changing messages deferred from mid-round draining (see
+    // the round loop): processed before new channel messages.
+    let mut inbox: VecDeque<Msg> = VecDeque::new();
+    // anchor -> (handle, span) of the modules on the fabric.
+    let mut resident: HashMap<usize, (LoadedAccel, usize)> = HashMap::new();
+    // (virtual completion time, seq, anchor) — the simulator's heap.
+    let mut completions: BinaryHeap<Reverse<(u64, u64, usize)>> = BinaryHeap::new();
+    let mut seq = 0u64;
+    let mut vnow = 0u64;
+    let mut paused = false;
+    // A scheduling round is due: new admissions, a policy change or a
+    // virtual-time advance happened since the last one. Mirrors the
+    // simulator's one-round-per-event-batch cadence, which keeps the
+    // decision (and skip-counter) sequences identical on both paths.
+    let mut round_due = false;
 
     'outer: loop {
-        // Block when idle; drain without blocking when busy.
-        let msg = if queues.values().all(|q| q.is_empty()) {
-            match rx.recv() {
+        // Block when idle or paused (no busy-spin); drain without
+        // blocking while a round is due or completions are in flight.
+        let idle = paused || (!round_due && completions.is_empty());
+        let msg = match inbox.pop_front() {
+            Some(m) => Some(m),
+            None if idle => match rx.recv() {
                 Ok(m) => Some(m),
-                Err(_) => break,
-            }
-        } else {
-            rx.try_recv().ok()
+                Err(_) => break 'outer,
+            },
+            None => rx.try_recv().ok(),
         };
         if let Some(msg) = msg {
+            let Some(msg) = handle_cheap(
+                msg,
+                &mut cynq,
+                &core,
+                &mut paused,
+                &mut user_index,
+                &mut free_slots,
+                &mut next_fresh,
+            ) else {
+                continue;
+            };
             match msg {
                 Msg::Stop => break 'outer,
-                Msg::Mem { op, reply } => {
-                    let _ = reply.send(mem_op(&mut cynq, op));
+                Msg::Goodbye { user } => {
+                    // Recycle the departed connection's scheduler slot
+                    // so a long-lived daemon's per-user state is
+                    // bounded by peak concurrency, not connections-ever.
+                    if let Some(slot) = user_index.remove(&user) {
+                        for req in core.retire_user(slot) {
+                            if let Some(p) = pending.remove(&req.job) {
+                                fail_job(&mut batches, p.batch, "client disconnected".into());
+                            }
+                        }
+                        free_slots.insert(slot);
+                    }
+                }
+                Msg::Resume { reply } => {
+                    paused = false;
+                    round_due = core.has_pending();
+                    let _ = reply.send(ok(vec![]));
+                }
+                Msg::SetPolicy { user, name, reply } => {
+                    let slot = user_slot(&mut user_index, &mut free_slots, &mut next_fresh, user);
+                    let r = if core.set_user_policy(slot, &name) {
+                        round_due = core.has_pending();
+                        ok(vec![("policy", s(name))])
+                    } else {
+                        err_val(&format!("unknown policy {name:?}"))
+                    };
+                    let _ = reply.send(r);
                 }
                 Msg::Submit { user, jobs, reply } => {
-                    let idx = batches.len();
-                    batches.push(Batch {
+                    let slot = user_slot(&mut user_index, &mut free_slots, &mut next_fresh, user);
+                    let mut batch = Batch {
                         reply,
                         remaining: jobs.len(),
                         latencies_us: Vec::new(),
                         modelled_us: Vec::new(),
                         error: None,
-                    });
-                    if jobs.is_empty() {
-                        finish(&mut batches[idx]);
-                        continue;
+                    };
+                    for job in jobs {
+                        let token = next_token;
+                        next_token += 1;
+                        // Unknown accelerators fail fast at admission.
+                        match core.submit(slot, token, &job.accname, job.tiles, None) {
+                            Ok(()) => {
+                                pending.insert(token, PendingJob { job, batch: next_batch });
+                                round_due = true;
+                            }
+                            Err(e) => {
+                                batch.error = Some(e);
+                                batch.remaining -= 1;
+                            }
+                        }
                     }
-                    let q = queues.entry(user).or_default();
-                    for j in jobs {
-                        q.push_back((j, idx));
+                    if batch.remaining == 0 {
+                        finish(batch); // empty or fully rejected
+                    } else {
+                        batches.insert(next_batch, batch);
+                        next_batch += 1;
                     }
                 }
+                _ => unreachable!("handle_cheap services every other message"),
             }
-            continue; // re-check for more messages before dispatching
+            continue; // drain every queued message before dispatching
         }
-
-        // Dispatch ONE request (cooperative run-to-completion), from the
-        // next user after the last-served one (round-robin).
-        let users: Vec<u64> = queues.keys().copied().collect();
-        if users.is_empty() {
+        if paused {
             continue;
         }
-        let start_pos = rr_last
-            .and_then(|last| users.iter().position(|&u| u == last).map(|p| p + 1))
-            .unwrap_or(0);
-        let Some(&user) = (0..users.len())
-            .map(|k| &users[(start_pos + k) % users.len()])
-            .find(|&&u| !queues[&u].is_empty())
-        else {
-            continue;
-        };
-        rr_last = Some(user);
-        let (job, batch_idx) = queues.get_mut(&user).unwrap().pop_front().unwrap();
 
-        // Scheduling decision: reuse a loaded accelerator or decide to
-        // load one (evicting idle LRU modules if the fabric is full).
-        // Only the *decision* is scheduler latency (Table 4); the
-        // bitstream generation + PCAP load that follows is
-        // reconfiguration latency, accounted separately (Table 5).
-        let t_sched = Instant::now();
-        let decision = match loaded.get(&job.accname) {
-            Some(&h) => {
-                stats.reuse_hits.fetch_add(1, Ordering::Relaxed);
-                touch(&mut lru, &job.accname);
-                Some(h)
-            }
-            None => {
-                while cynq.free_regions() == 0 && !lru.is_empty() {
-                    let victim = lru.remove(0);
-                    if let Some(h) = loaded.remove(&victim) {
-                        let _ = cynq.unload(h);
+        if !round_due {
+            // Advance the virtual clock to the next completion(s); the
+            // freed modules stay resident for reuse, and the newly
+            // idle capacity warrants a fresh round.
+            if let Some(&Reverse((t, _, _))) = completions.peek() {
+                vnow = t;
+                while let Some(&Reverse((t2, _, anchor))) = completions.peek() {
+                    if t2 != t {
+                        break;
                     }
+                    completions.pop();
+                    core.complete(anchor);
                 }
-                None
+                round_due = core.has_pending();
             }
-        };
-        stats
-            .sched_ns
-            .fetch_add(t_sched.elapsed().as_nanos() as u64, Ordering::Relaxed);
-        stats.sched_decisions.fetch_add(1, Ordering::Relaxed);
+            continue;
+        }
+        round_due = false;
 
-        let handle = match decision {
-            Some(h) => Ok(h),
-            None => match cynq.load_accelerator(&job.accname, None) {
-                Ok((h, _)) => {
-                    stats.reconfig_loads.fetch_add(1, Ordering::Relaxed);
-                    loaded.insert(job.accname.clone(), h);
-                    touch(&mut lru, &job.accname);
-                    Ok(h)
+        // One scheduling round at the current virtual time: place as
+        // many requests as the policy allows, executing each decision
+        // for real as it is made.
+        core.begin_round();
+        let mut placed = false;
+        let mut stopping = false;
+        loop {
+            let t_sched = Instant::now();
+            let Some(d) = core.next_decision() else { break };
+            // Only committed decisions count toward the Table-4 mean —
+            // the terminal empty scan would skew it.
+            stats
+                .sched_ns
+                .fetch_add(t_sched.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            stats.sched_decisions.fetch_add(1, Ordering::Relaxed);
+            // Publish the core's counters before any client can observe
+            // this decision's batch reply (finish() below) — readers
+            // must never see pre-decision totals.
+            mirror_counters(&stats, core.counters());
+            placed = true;
+
+            // Virtual service latency from the shared cost model —
+            // identical to the simulator's for the same decision.
+            let busy_others = core.busy_anchors().saturating_sub(1);
+            let lat = core.service_ns(&d, busy_others);
+            completions.push(Reverse((vnow + lat, seq, d.anchor)));
+            seq += 1;
+
+            let p = pending.remove(&d.job).expect("decision for unknown job token");
+            let t0 = Instant::now();
+            let outcome = execute_decision(&mut cynq, &mut resident, &p.job, &d);
+            stats.jobs.fetch_add(1, Ordering::Relaxed);
+            if d.replicated {
+                stats.replicated_jobs.fetch_add(1, Ordering::Relaxed);
+            }
+            let anchor = d.anchor;
+            let b = batches.get_mut(&p.batch).expect("decision for unknown batch");
+            match outcome {
+                Ok(()) => {
+                    b.latencies_us.push(t0.elapsed().as_secs_f64() * 1e6);
+                    b.modelled_us.push(lat as f64 / 1e3);
                 }
-                Err(e) => Err(e.to_string()),
-            },
-        };
-
-        let t0 = Instant::now();
-        let outcome = handle.and_then(|h| {
-            for (reg, val) in &job.params {
-                cynq.write_reg(h, reg, PhysAddr(*val)).map_err(|e| e.to_string())?;
+                Err(fail) => {
+                    if fail.module_missing {
+                        // The (re)load itself failed: forget the core's
+                        // residency bookkeeping for this anchor so the
+                        // next decision reconfigures instead of reusing
+                        // a phantom instance forever. Compute failures
+                        // keep the module resident — it is still
+                        // reusable.
+                        core.evict(anchor);
+                    }
+                    b.error = Some(fail.msg);
+                }
             }
-            cynq.run(h).map_err(|e| e.to_string())
-        });
-        stats.jobs.fetch_add(1, Ordering::Relaxed);
-
-        let b = &mut batches[batch_idx];
-        match outcome {
-            Ok(modelled) => {
-                b.latencies_us.push(t0.elapsed().as_secs_f64() * 1e6);
-                b.modelled_us.push(modelled.as_secs_f64() * 1e6);
+            b.remaining -= 1;
+            if b.remaining == 0 {
+                let b = batches.remove(&p.batch).unwrap();
+                finish(b);
             }
-            Err(e) => b.error = Some(e),
-        }
-        b.remaining -= 1;
-        if b.remaining == 0 {
-            finish(b);
-        }
-    }
 
-    fn finish(b: &mut Batch) {
-        let resp = match &b.error {
-            Some(e) => err_val(e),
-            None => ok(vec![
-                (
-                    "latencies_us",
-                    arr(b.latencies_us.iter().map(|&x| f(x)).collect()),
-                ),
-                (
-                    "modelled_us",
-                    arr(b.modelled_us.iter().map(|&x| f(x)).collect()),
-                ),
-            ]),
-        };
-        let _ = b.reply.send(resp);
+            // Real execution above can be long (multi-tile PJRT): keep
+            // cheap RPCs (connects, mem ops, stats) responsive between
+            // decisions instead of head-of-line blocking them behind
+            // the whole round. State-changing messages are deferred to
+            // the inbox so arrivals keep the simulator's
+            // between-rounds cadence (decision-sequence parity).
+            while let Ok(m) = rx.try_recv() {
+                match handle_cheap(
+                    m,
+                    &mut cynq,
+                    &core,
+                    &mut paused,
+                    &mut user_index,
+                    &mut free_slots,
+                    &mut next_fresh,
+                ) {
+                    None => {}
+                    Some(Msg::Stop) => {
+                        stopping = true;
+                        break;
+                    }
+                    Some(other) => inbox.push_back(other),
+                }
+            }
+            if stopping || paused {
+                break; // hold the rest of the round
+            }
+        }
+        // Mirror the core's counters once more: the terminal
+        // next_decision() scan may have deferred users (skips).
+        mirror_counters(&stats, core.counters());
+
+        if stopping {
+            break 'outer;
+        }
+        if !placed && !paused && completions.is_empty() && core.has_pending() {
+            // Stall guard: nothing running, nothing placeable, so no
+            // future completion can unblock these requests — fail them
+            // instead of hanging their clients.
+            for req in core.drain_pending() {
+                let policy_name = core.policy_name_of(req.user);
+                if let Some(p) = pending.remove(&req.job) {
+                    fail_job(
+                        &mut batches,
+                        p.batch,
+                        format!(
+                            "request for {:?} is unplaceable under policy {policy_name:?}",
+                            req.accel
+                        ),
+                    );
+                }
+            }
+        }
     }
 }
 
-fn touch(lru: &mut Vec<String>, name: &str) {
-    lru.retain(|n| n != name);
-    lru.push(name.to_string());
+/// Publish the core's [`SchedCounters`] into the daemon's atomics —
+/// the single scheduling-counter source both paths report from.
+fn mirror_counters(stats: &DaemonStats, c: &SchedCounters) {
+    stats.reconfig_loads.store(c.reconfigs, Ordering::Relaxed);
+    stats.reuse_hits.store(c.reuses, Ordering::Relaxed);
+    stats.skips.store(c.skips, Ordering::Relaxed);
+    stats.replications.store(c.replications, Ordering::Relaxed);
+}
+
+/// Answer a message that needs no scheduling-state change (mem ops,
+/// connection Hello, stats/log queries, pause) — callable both from
+/// the top-level drain and mid-round, so long rounds don't head-of-line
+/// block cheap RPCs. Returns the message back when it *does* change
+/// scheduling state (Submit, SetPolicy, Resume, Goodbye, Stop) for the
+/// caller to process at round boundaries.
+fn handle_cheap(
+    msg: Msg,
+    cynq: &mut Cynq,
+    core: &SchedCore,
+    paused: &mut bool,
+    user_index: &mut HashMap<u64, usize>,
+    free_slots: &mut std::collections::BTreeSet<usize>,
+    next_fresh: &mut usize,
+) -> Option<Msg> {
+    match msg {
+        Msg::Mem { op, reply } => {
+            let _ = reply.send(mem_op(cynq, op));
+        }
+        Msg::Hello { user, reply } => {
+            let slot = user_slot(user_index, free_slots, next_fresh, user);
+            let _ = reply.send(ok(vec![("user", i(user as i64)), ("slot", i(slot as i64))]));
+        }
+        Msg::Query { reply } => {
+            let _ = reply.send(stats_value(core, *paused));
+        }
+        Msg::QueryLog { limit, reply } => {
+            let skip = limit.map_or(0, |n| core.decision_log().count().saturating_sub(n));
+            let _ = reply.send(core.decision_log().skip(skip).cloned().collect());
+        }
+        Msg::Pause { reply } => {
+            *paused = true;
+            let _ = reply.send(ok(vec![]));
+        }
+        other => return Some(other),
+    }
+    None
+}
+
+/// The `stats` RPC reply: queue depth + the core's shared counters.
+fn stats_value(core: &SchedCore, paused: bool) -> Value {
+    let c = core.counters();
+    ok(vec![
+        ("queued", i(core.pending() as i64)),
+        ("reconfigs", i(c.reconfigs as i64)),
+        ("reuses", i(c.reuses as i64)),
+        ("skips", i(c.skips as i64)),
+        ("replications", i(c.replications as i64)),
+        ("paused", i(paused as i64)),
+    ])
+}
+
+/// Scheduler slot for a daemon connection id: the existing binding, a
+/// recycled slot (lowest first, keeping round-robin order stable), or
+/// a fresh one.
+fn user_slot(
+    map: &mut HashMap<u64, usize>,
+    free: &mut std::collections::BTreeSet<usize>,
+    next_fresh: &mut usize,
+    user: u64,
+) -> usize {
+    *map.entry(user).or_insert_with(|| {
+        if let Some(&slot) = free.iter().next() {
+            free.remove(&slot);
+            slot
+        } else {
+            let slot = *next_fresh;
+            *next_fresh += 1;
+            slot
+        }
+    })
+}
+
+/// How a decision's hardware mirror failed. `module_missing` tells the
+/// dispatcher whether the core's residency bookkeeping must be rolled
+/// back (load never happened) or the module is resident and reusable
+/// (compute-only failure).
+struct ExecFailure {
+    msg: String,
+    module_missing: bool,
+}
+
+/// Mirror one core decision onto the hardware: evict overlapped
+/// modules, (re)load the chosen variant at its anchor, program the
+/// registers and run every tile to completion.
+fn execute_decision(
+    cynq: &mut Cynq,
+    resident: &mut HashMap<usize, (LoadedAccel, usize)>,
+    job: &Job,
+    d: &Decision,
+) -> Result<(), ExecFailure> {
+    let missing = |msg: String| ExecFailure { msg, module_missing: true };
+    let compute = |msg: String| ExecFailure { msg, module_missing: false };
+    let handle = if d.reconfigure {
+        // The core already replaced these modules in its bookkeeping;
+        // evict every resident module overlapping the new span.
+        let stale: Vec<usize> = resident
+            .iter()
+            .filter(|&(&a, &(_, span))| a < d.anchor + d.span && a + span > d.anchor)
+            .map(|(&a, _)| a)
+            .collect();
+        for a in stale {
+            if let Some((h, _)) = resident.remove(&a) {
+                cynq.unload(h).map_err(|e| missing(e.to_string()))?;
+            }
+        }
+        let (h, _reconfig_latency) = cynq
+            .load_accelerator_at(&d.accel, &d.variant, d.anchor)
+            .map_err(|e| missing(e.to_string()))?;
+        resident.insert(d.anchor, (h, d.span));
+        h
+    } else {
+        match resident.get(&d.anchor) {
+            Some(&(h, _)) => h,
+            None => {
+                return Err(missing(format!(
+                    "internal: reuse at unresident anchor {}",
+                    d.anchor
+                )))
+            }
+        }
+    };
+    for (reg, val) in &job.params {
+        cynq.write_reg(handle, reg, PhysAddr(*val)).map_err(|e| compute(e.to_string()))?;
+    }
+    for _ in 0..d.tiles {
+        cynq.run(handle).map_err(|e| compute(e.to_string()))?;
+    }
+    Ok(())
 }
 
 fn mem_op(cynq: &mut Cynq, op: MemOp) -> Value {
@@ -442,10 +837,9 @@ fn err_val(e: &str) -> Value {
 mod tests {
     use super::*;
     use crate::daemon::FpgaRpc;
-    use once_cell::sync::Lazy;
     use std::sync::Mutex;
 
-    static LOCK: Lazy<Mutex<()>> = Lazy::new(|| Mutex::new(()));
+    static LOCK: Mutex<()> = Mutex::new(());
 
     fn sock(name: &str) -> PathBuf {
         std::env::temp_dir().join(format!("fos_daemon_{name}_{}.sock", std::process::id()))
@@ -461,6 +855,10 @@ mod tests {
     #[test]
     fn single_client_vadd_end_to_end() {
         let _g = LOCK.lock().unwrap();
+        if !crate::testutil::pjrt_available() {
+            eprintln!("skipping: PJRT backend unavailable (offline stub)");
+            return;
+        }
         let (_d, path) = start("vadd");
         let mut rpc = FpgaRpc::connect(&path).unwrap();
         let a = rpc.alloc(4 * 4096).unwrap();
@@ -470,10 +868,10 @@ mod tests {
         let ys: Vec<f32> = (0..4096).map(|i| (i * 2) as f32).collect();
         rpc.write_f32(a, &xs).unwrap();
         rpc.write_f32(b, &ys).unwrap();
-        let job = Job {
-            accname: "vadd".into(),
-            params: vec![("a_op".into(), a), ("b_op".into(), b), ("c_out".into(), c)],
-        };
+        let job = Job::new(
+            "vadd",
+            vec![("a_op".into(), a), ("b_op".into(), b), ("c_out".into(), c)],
+        );
         let report = rpc.run(&[job]).unwrap();
         assert_eq!(report.latencies_us.len(), 1);
         assert!(report.modelled_us[0] > 0.0);
@@ -486,6 +884,10 @@ mod tests {
     #[test]
     fn two_tenants_interleave_and_share() {
         let _g = LOCK.lock().unwrap();
+        if !crate::testutil::pjrt_available() {
+            eprintln!("skipping: PJRT backend unavailable (offline stub)");
+            return;
+        }
         let (d, path) = start("multi");
         let mk = |rpc: &mut FpgaRpc, n: usize| -> (u64, u64, u64, Vec<Job>) {
             let a = rpc.alloc(4 * 4096).unwrap();
@@ -494,9 +896,11 @@ mod tests {
             rpc.write_f32(a, &vec![1.0; 4096]).unwrap();
             rpc.write_f32(b, &vec![2.0; 4096]).unwrap();
             let jobs = (0..n)
-                .map(|_| Job {
-                    accname: "vadd".into(),
-                    params: vec![("a_op".into(), a), ("b_op".into(), b), ("c_out".into(), c)],
+                .map(|_| {
+                    Job::new(
+                        "vadd",
+                        vec![("a_op".into(), a), ("b_op".into(), b), ("c_out".into(), c)],
+                    )
                 })
                 .collect();
             (a, b, c, jobs)
@@ -525,8 +929,77 @@ mod tests {
     }
 
     #[test]
+    fn single_tenant_backlog_replicates_on_live_path() {
+        let _g = LOCK.lock().unwrap();
+        let (d, path) = start("replicate");
+        let mut rpc = FpgaRpc::connect(&path).unwrap();
+        let catalog = Catalog::load_default().unwrap();
+        let params = crate::testutil::alloc_operand_params(&mut rpc, &catalog, "mandelbrot");
+        // A backlog of long-running requests from ONE tenant: the
+        // elastic core must fan them out over the free regions
+        // (replication) instead of serialising on one module.
+        let jobs: Vec<Job> = (0..4)
+            .map(|_| Job::new("mandelbrot", params.clone()).with_tiles(4))
+            .collect();
+        // Scheduling decisions are made (and logged) even when the
+        // compute backend is unavailable, so only gate on the reply.
+        if let Ok(report) = rpc.run(&jobs) {
+            assert_eq!(report.latencies_us.len(), 4);
+        }
+        assert!(
+            d.stats().replications.load(Ordering::Relaxed) >= 1,
+            "expected replication: {:?}",
+            d.decision_log()
+        );
+        assert!(d.stats().replicated_jobs.load(Ordering::Relaxed) >= 1);
+        let anchors: std::collections::HashSet<usize> =
+            d.decision_log().iter().map(|x| x.anchor).collect();
+        assert!(anchors.len() >= 2, "jobs stayed on {anchors:?}");
+    }
+
+    #[test]
+    fn policy_knob_routes_tenant_to_fixed() {
+        let _g = LOCK.lock().unwrap();
+        let (d, path) = start("policy");
+        let mut rpc = FpgaRpc::connect(&path).unwrap();
+        rpc.set_policy(Policy::Fixed).unwrap();
+        assert!(rpc.set_policy_name("themis").is_err());
+        let catalog = Catalog::load_default().unwrap();
+        let params = crate::testutil::alloc_operand_params(&mut rpc, &catalog, "mandelbrot");
+        let jobs: Vec<Job> = (0..3)
+            .map(|_| Job::new("mandelbrot", params.clone()).with_tiles(4))
+            .collect();
+        let _ = rpc.run(&jobs); // decisions land even if compute is stubbed
+        // A fixed tenant keeps one region: no replication, one anchor.
+        let anchors: std::collections::HashSet<usize> =
+            d.decision_log().iter().map(|x| x.anchor).collect();
+        assert_eq!(anchors.len(), 1, "fixed tenant moved: {anchors:?}");
+        assert_eq!(d.stats().replications.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn pause_resume_and_stats_roundtrip() {
+        let _g = LOCK.lock().unwrap();
+        let (_d, path) = start("pause");
+        let mut rpc = FpgaRpc::connect(&path).unwrap();
+        rpc.pause().unwrap();
+        let s0 = rpc.sched_stats().unwrap();
+        assert!(s0.paused);
+        assert_eq!(s0.queued, 0);
+        rpc.resume().unwrap();
+        let s1 = rpc.sched_stats().unwrap();
+        assert!(!s1.paused);
+        // Connection still healthy.
+        assert!(rpc.ping().is_ok());
+    }
+
+    #[test]
     fn shm_zero_copy_path() {
         let _g = LOCK.lock().unwrap();
+        if !crate::testutil::pjrt_available() {
+            eprintln!("skipping: PJRT backend unavailable (offline stub)");
+            return;
+        }
         let (_d, path) = start("shm");
         let mut rpc = FpgaRpc::connect(&path).unwrap();
         let shm_path = std::env::temp_dir().join(format!("fos_shm_{}.bin", std::process::id()));
@@ -536,10 +1009,7 @@ mod tests {
         let a = rpc.alloc(4 * 4096).unwrap();
         let o = rpc.alloc(4 * 4096).unwrap();
         rpc.import_shm(&shm.path, 0, 4096, a).unwrap();
-        let job = Job {
-            accname: "aes".into(),
-            params: vec![("in_data".into(), a), ("out_data".into(), o)],
-        };
+        let job = Job::new("aes", vec![("in_data".into(), a), ("out_data".into(), o)]);
         rpc.run(&[job]).unwrap();
         rpc.export_shm(o, 4096, &shm.path, 4 * 4096).unwrap();
         let out = shm.read_f32(4 * 4096, 4096).unwrap();
@@ -554,7 +1024,7 @@ mod tests {
         let _g = LOCK.lock().unwrap();
         let (_d, path) = start("err");
         let mut rpc = FpgaRpc::connect(&path).unwrap();
-        let job = Job { accname: "flux_capacitor".into(), params: vec![] };
+        let job = Job::new("flux_capacitor", vec![]);
         assert!(matches!(rpc.run(&[job]), Err(proto::ProtoError::Remote(_))));
         // Connection still usable after an error.
         assert!(rpc.ping().is_ok());

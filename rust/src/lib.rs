@@ -21,6 +21,28 @@
 //! [`bitstream`] the frame-addressed configuration + BitMan relocation,
 //! [`pnr`] the decoupled compilation flow, [`memsim`] the DDR/AXI
 //! bandwidth behaviour, and [`reconfig`] the FPGA-manager latencies.
+//!
+//! ## Scheduler core
+//!
+//! Modes 2 and 3 share **one** scheduling brain:
+//! [`sched::SchedCore`], a pure state machine owning region occupancy,
+//! per-user queues, round-robin fairness and the elastic
+//! placement/replacement/reuse/skip logic, pluggable through the
+//! [`sched::SchedPolicy`] trait ([`sched::Elastic`] and
+//! [`sched::Fixed`] ship as the seed policies).  The offline simulator
+//! ([`sched::simulate`]) is a virtual-time discrete-event harness over
+//! the core; the live daemon replays the *same* core against real
+//! hardware effects (region-anchored loads through
+//! [`driver::Cynq::load_accelerator_at`], PJRT compute, virtual-clock
+//! completions), so for one trace both paths produce identical
+//! decision sequences and report identical
+//! [`sched::SchedCounters`] — see `tests/sched_parity.rs`.  Each
+//! decision is a [`sched::Decision`] (user, accelerator, variant,
+//! anchor, span, reuse-vs-reconfigure, replication flag); tenants pick
+//! their policy per connection via `FpgaRpc::set_policy`, and new
+//! policies (fairness, preemption, ...) are `SchedPolicy`
+//! implementations registered with [`sched::SchedCore::register_policy`]
+//! — not forks of the dispatch loops.
 
 pub mod json;
 pub mod fabric;

@@ -80,7 +80,7 @@ fn main() {
                 params.push((reg.name.clone(), addr));
             }
             let jobs: Vec<Job> = (0..requests)
-                .map(|_| Job { accname: accel.clone(), params: params.clone() })
+                .map(|_| Job::new(accel.clone(), params.clone()))
                 .collect();
             let report = rpc.run(&jobs).unwrap();
             println!(

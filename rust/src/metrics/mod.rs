@@ -125,6 +125,16 @@ pub fn vs_paper(measured: f64, paper: f64, unit: &str) -> String {
     format!("{measured:.2}{unit} (paper {paper:.2}{unit})")
 }
 
+/// One-line summary of the shared scheduler-core counters — the same
+/// [`crate::sched::SchedCounters`] both the simulator (`SimResult`) and
+/// the daemon (`DaemonStats`) report from.
+pub fn sched_summary(label: &str, c: &crate::sched::SchedCounters) -> String {
+    format!(
+        "{label}: {} reconfigs, {} reuses, {} skips, {} replications",
+        c.reconfigs, c.reuses, c.skips, c.replications
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -168,5 +178,17 @@ mod tests {
     fn table_arity_checked() {
         let mut t = Table::new("x", &["a", "b"]);
         t.row(&["1".into()]);
+    }
+
+    #[test]
+    fn sched_summary_formats_shared_counters() {
+        let c = crate::sched::SchedCounters {
+            reconfigs: 3,
+            reuses: 9,
+            skips: 2,
+            replications: 1,
+        };
+        let s = sched_summary("elastic", &c);
+        assert_eq!(s, "elastic: 3 reconfigs, 9 reuses, 2 skips, 1 replications");
     }
 }

@@ -1,0 +1,113 @@
+//! Offline stand-in for the `xla` PJRT bindings.
+//!
+//! The vendored build environment does not ship the `xla` crate (the
+//! Rust bindings over xla_extension), so this module mirrors the exact
+//! API surface `runtime` uses and fails fast at client construction.
+//! Every consumer already handles that path gracefully: the executor
+//! worker answers each request with the construction error, the
+//! scheduler core keeps making (and logging) decisions, and the
+//! latency models stay fully functional — only *real* tile compute is
+//! unavailable.
+//!
+//! To run with genuine PJRT compute, vendor the real `xla` crate and
+//! swap the `use self::pjrt_stub as xla;` alias in `runtime/mod.rs`
+//! for `use xla;` — no other code changes are required, the types and
+//! signatures below match the real bindings one-to-one.
+
+use std::fmt;
+
+const UNAVAILABLE: &str =
+    "PJRT backend unavailable: built against the offline xla stub (see runtime/pjrt_stub.rs)";
+
+/// Mirror of the binding crate's error type.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Stand-in for `xla::PjRtClient`.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Err(Error(UNAVAILABLE.into()))
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(Error(UNAVAILABLE.into()))
+    }
+}
+
+/// Stand-in for `xla::PjRtLoadedExecutable`.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(Error(UNAVAILABLE.into()))
+    }
+}
+
+/// Stand-in for `xla::PjRtBuffer`.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(Error(UNAVAILABLE.into()))
+    }
+}
+
+/// Stand-in for `xla::Literal`.
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1(_data: &[f32]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Error> {
+        Ok(Literal)
+    }
+
+    pub fn to_tuple1(&self) -> Result<Literal, Error> {
+        Err(Error(UNAVAILABLE.into()))
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        Err(Error(UNAVAILABLE.into()))
+    }
+}
+
+/// Stand-in for `xla::HloModuleProto`.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
+        Err(Error(UNAVAILABLE.into()))
+    }
+}
+
+/// Stand-in for `xla::XlaComputation`.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_fails_fast_with_a_descriptive_error() {
+        let err = PjRtClient::cpu().err().unwrap().to_string();
+        assert!(err.contains("stub"), "{err}");
+    }
+}

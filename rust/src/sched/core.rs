@@ -1,0 +1,1083 @@
+//! # The scheduler core — one pluggable, resource-elastic brain (§4.4)
+//!
+//! FOS's headline claim is that a *single* resource-elastic scheduler
+//! arbitrates the FPGA in time and space for every consumer.  This
+//! module is that scheduler: a pure, side-effect-free state machine
+//! ([`SchedCore`]) shared by the offline discrete-event simulator
+//! ([`super::simulate`]) and the live multi-tenant daemon
+//! ([`crate::daemon::Daemon`]).  Both harnesses feed the same three
+//! inputs — request arrivals ([`SchedCore::submit`]), completions
+//! ([`SchedCore::complete`]) and dispatch rounds
+//! ([`SchedCore::next_decision`]) — and turn the resulting
+//! [`Decision`]s into virtual-time trace events (simulator) or real
+//! partial reconfigurations and PJRT executions (daemon).
+//!
+//! ## The `SchedPolicy` trait
+//!
+//! Placement strategy is pluggable.  A policy sees a read-only
+//! [`RegionMap`] (what is loaded/busy where), the shared [`CostModel`]
+//! (DMA + compute + reconfiguration latencies) and one [`PlaceReq`]
+//! (the head-of-queue request of the user whose round-robin turn it
+//! is), and answers with a [`Placement`] — *which anchor region, which
+//! implementation variant, and whether a partial reconfiguration is
+//! needed* — or `None` to skip the user this round (e.g. to wait for a
+//! busy instance instead of paying a reconfiguration).
+//!
+//! Two seed implementations ship:
+//!
+//! - [`Elastic`] — the paper's policy: **reuse** an idle instance
+//!   without reconfiguring, otherwise **replace** free capacity with
+//!   the variant minimising reconfig + backlog drain (replication-
+//!   aware), growing to **multi-region spans** when a single tenant is
+//!   active, and **skipping** when a busy instance makes waiting
+//!   cheaper than reconfiguring (§4.4.3's reconfiguration avoidance).
+//! - [`Fixed`] — the baseline: one static 1-region module per user,
+//!   run-to-completion.
+//!
+//! ## Adding a new policy
+//!
+//! Implement [`SchedPolicy`] (state lives in your struct — see
+//! [`Fixed`]'s `home` map), register it with
+//! [`SchedCore::register_policy`], and route users to it with
+//! [`SchedCore::set_user_policy`].  A THEMIS-style fairness policy or
+//! a preemption-aware policy is a new `impl`, not a fork of two code
+//! paths; the daemon protocol exposes the same knob per tenant
+//! (`FpgaRpc::set_policy`).
+//!
+//! ## Decision bookkeeping
+//!
+//! The core owns the shared counters ([`SchedCounters`]: reconfigs,
+//! reuses, skips, replications) and an ordered decision log, so the
+//! simulator's `SimResult` and the daemon's `DaemonStats` report from
+//! the *same* source — the parity test in `tests/sched_parity.rs`
+//! drives one trace through both and asserts identical sequences.
+//! Replacement victims are picked through an ordered LRU index
+//! (`BTreeSet<(tick, region)>`), not a linear scan of insertion order.
+
+use crate::accel::{Accelerator, Catalog};
+use crate::memsim::{config_for, DdrModel};
+use crate::reconfig::FpgaManager;
+use crate::shell::Shell;
+use std::collections::{BTreeSet, VecDeque};
+
+/// Built-in scheduling policy selector (the daemon protocol's knob).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// FOS: replication + replacement + reuse + time-mux (§4.4.3).
+    Elastic,
+    /// Baseline: one fixed 1-region module per user, run-to-completion.
+    Fixed,
+}
+
+impl Policy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::Elastic => "elastic",
+            Policy::Fixed => "fixed",
+        }
+    }
+
+}
+
+/// What a PR region currently holds.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LoadedModule {
+    pub accel: String,
+    pub variant: String,
+    /// Adjacent regions the variant spans (anchor included).
+    pub span: usize,
+}
+
+/// Scheduler-visible state of one PR region.
+#[derive(Debug, Clone)]
+pub struct Region {
+    /// The module anchored here (tails carry `None` + `tail_of`).
+    pub loaded: Option<LoadedModule>,
+    /// Anchor index if this slot is the tail of a combined span.
+    pub tail_of: Option<usize>,
+    /// An acceleration request is running on the module anchored here.
+    pub busy: bool,
+    /// LRU tick of the last placement touching this region.
+    last_used: u64,
+}
+
+/// One queued acceleration request (the §4.4.2 data-parallel unit).
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub user: usize,
+    /// Harness-owned token (simulator: workload job index; daemon:
+    /// monotonic job id) — echoed back in the [`Decision`].
+    pub job: u64,
+    pub accel: String,
+    /// Work items batched in this request.
+    pub tiles: usize,
+    /// Pin a specific implementation variant (None = policy's choice).
+    pub pin: Option<String>,
+}
+
+/// A committed scheduling decision: run `user`'s head request on the
+/// module (re)configured at `anchor..anchor+span`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Decision {
+    pub user: usize,
+    pub job: u64,
+    pub accel: String,
+    pub variant: String,
+    pub anchor: usize,
+    pub span: usize,
+    pub tiles: usize,
+    /// `true`: a partial reconfiguration was paid; `false`: reuse.
+    pub reconfigure: bool,
+    /// Another instance of the same accelerator is resident elsewhere
+    /// on the fabric after this placement (replication, Fig 20).
+    pub replicated: bool,
+}
+
+/// Counters both the simulator and the daemon report from.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct SchedCounters {
+    /// Placements that paid a partial reconfiguration.
+    pub reconfigs: u64,
+    /// Placements that reused a resident idle instance.
+    pub reuses: u64,
+    /// Rounds where a user was deferred (reconfiguration avoidance,
+    /// busy fixed home, no placeable capacity).
+    pub skips: u64,
+    /// Reconfigurations that created an *additional* instance of an
+    /// already-resident accelerator (replication events).
+    pub replications: u64,
+}
+
+/// Virtual-time latency model shared by the simulator and the daemon —
+/// DMA from the memsim DDR model, compute from the manifest cycle
+/// models, reconfiguration from the PCAP model.
+pub struct CostModel {
+    ddr: DdrModel,
+    /// Bytes of a single-region partial bitstream on this shell.
+    region_bytes: usize,
+}
+
+impl CostModel {
+    pub fn new(shell: &Shell) -> CostModel {
+        use crate::bitstream::{region_frames, FRAME_WORDS};
+        let dev = &shell.floorplan.device;
+        let region_bytes = region_frames(dev, &shell.floorplan.regions[0]).len() * FRAME_WORDS * 4;
+        CostModel { ddr: DdrModel::new(config_for(shell.board)), region_bytes }
+    }
+
+    /// Partial-bitstream load latency for a `span`-region module (ns).
+    pub fn reconfig_ns(&self, span: usize) -> u64 {
+        FpgaManager::latency_for(self.region_bytes * span, true).as_nanos() as u64
+    }
+
+    /// Per-tile DMA (in + out) under `concurrent` other busy modules.
+    pub fn dma_ns(&self, accel: &Accelerator, concurrent: usize) -> f64 {
+        self.ddr.transfer_ns(accel.bytes_in, concurrent)
+            + self.ddr.transfer_ns(accel.bytes_out, concurrent)
+    }
+
+    /// Per-tile service time: DMA + modelled compute.
+    pub fn per_tile_ns(
+        &self,
+        accel: &Accelerator,
+        variant: &crate::accel::Variant,
+        concurrent: usize,
+    ) -> f64 {
+        self.dma_ns(accel, concurrent) + variant.compute_ns()
+    }
+}
+
+/// Read-only region state handed to policies, with the span queries the
+/// seed policies need and the ordered-LRU replacement index.
+pub struct RegionMap {
+    regions: Vec<Region>,
+    /// Max combinable span anchored at each region (floorplan).
+    max_span: Vec<usize>,
+    /// Replacement order: `(last_used tick, region)` — oldest first.
+    lru: BTreeSet<(u64, usize)>,
+    clock: u64,
+}
+
+impl RegionMap {
+    fn new(shell: &Shell) -> RegionMap {
+        let n = shell.region_count();
+        let max_span = (0..n)
+            .map(|a| {
+                (1..=n - a)
+                    .take_while(|&k| shell.floorplan.combinable(a, k))
+                    .last()
+                    .unwrap_or(0)
+            })
+            .collect();
+        RegionMap {
+            regions: (0..n)
+                .map(|_| Region { loaded: None, tail_of: None, busy: false, last_used: 0 })
+                .collect(),
+            max_span,
+            lru: (0..n).map(|i| (0u64, i)).collect(),
+            clock: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.regions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.regions.is_empty()
+    }
+
+    pub fn get(&self, i: usize) -> &Region {
+        &self.regions[i]
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Region> {
+        self.regions.iter()
+    }
+
+    /// Anchors with a request currently running.
+    pub fn busy_anchors(&self) -> usize {
+        self.regions.iter().filter(|r| r.busy).count()
+    }
+
+    /// Slots that could take a placement now (non-busy, non-tail) —
+    /// the replication head-room the elastic score spreads over.
+    pub fn free_slots(&self) -> usize {
+        self.regions.iter().filter(|r| !r.busy && r.tail_of.is_none()).count()
+    }
+
+    /// `span` adjacent regions anchored at `anchor` are idle and form
+    /// exactly that module's combined slot.
+    pub fn span_idle(&self, anchor: usize, span: usize) -> bool {
+        if anchor + span > self.regions.len() {
+            return false;
+        }
+        !self.regions[anchor..anchor + span].iter().any(|r| r.busy)
+            && self.regions[anchor + 1..anchor + span]
+                .iter()
+                .all(|r| r.tail_of == Some(anchor))
+    }
+
+    fn placeable(&self, anchor: usize, span: usize) -> bool {
+        self.max_span.get(anchor).is_some_and(|&m| m >= span)
+            && (anchor..anchor + span).all(|r| {
+                !self.regions[r].busy
+                    // A tail slot may be cannibalised only with its anchor.
+                    && self.regions[r].tail_of.map(|t| t >= anchor).unwrap_or(true)
+            })
+    }
+
+    /// Anchor of `span` adjacent idle regions for a new load.  Blank
+    /// spans win first (nothing reusable is destroyed); otherwise the
+    /// LRU index picks the least-recently-touched victim anchor.  The
+    /// LRU scan is exhaustive — every region always has exactly one
+    /// `(tick, region)` entry — so no further fallback is needed, and
+    /// `placeable`'s combinable check already implies the span fits
+    /// inside the fabric.
+    pub fn find_free_span(&self, span: usize) -> Option<usize> {
+        if span == 0 || span > self.regions.len() {
+            return None;
+        }
+        if let Some(a) = (0..self.regions.len() - (span - 1)).find(|&a| {
+            self.placeable(a, span)
+                && (a..a + span).all(|r| self.regions[r].loaded.is_none())
+        }) {
+            return Some(a);
+        }
+        self.lru
+            .iter()
+            .find(|&&(_, a)| self.placeable(a, span))
+            .map(|&(_, a)| a)
+    }
+
+    fn touch(&mut self, region: usize) {
+        self.clock += 1;
+        let r = &mut self.regions[region];
+        self.lru.remove(&(r.last_used, region));
+        r.last_used = self.clock;
+        self.lru.insert((r.last_used, region));
+    }
+
+    /// Detach any span structure overlapping `[anchor, anchor+span)` —
+    /// a cannibalised tail destroys the module anchored before it.
+    fn clear_span(&mut self, anchor: usize, span: usize) {
+        for r in anchor..anchor + span {
+            if let Some(t) = self.regions[r].tail_of {
+                self.regions[t].loaded = None;
+            }
+            self.regions[r].tail_of = None;
+            self.regions[r].loaded = None;
+        }
+        for r in anchor + span..self.regions.len() {
+            if self.regions[r].tail_of.map(|t| t < anchor + span).unwrap_or(false) {
+                self.regions[r].tail_of = None;
+                self.regions[r].loaded = None;
+            }
+        }
+    }
+}
+
+/// The head-of-queue request a policy is asked to place.
+pub struct PlaceReq<'a> {
+    pub user: usize,
+    pub accel: &'a Accelerator,
+    pub pin: Option<&'a str>,
+    /// Tiles queued by this user (head request included).
+    pub backlog_tiles: usize,
+    /// Users with pending work (contention signal for span growth).
+    pub active_users: usize,
+}
+
+/// A policy's answer: where and what to run.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Placement {
+    pub anchor: usize,
+    pub variant: String,
+    /// `false` = reuse the resident instance at `anchor` as-is.
+    pub reconfigure: bool,
+}
+
+/// A pluggable placement strategy (see the module docs for the
+/// contract and the seed implementations).
+pub trait SchedPolicy: Send {
+    /// Stable identifier — the daemon protocol routes tenants by it.
+    fn name(&self) -> &'static str;
+
+    /// Place `req`, or `None` to defer the user for this round.
+    fn place(&mut self, regions: &RegionMap, costs: &CostModel, req: &PlaceReq)
+        -> Option<Placement>;
+
+    /// `user`'s slot was retired ([`SchedCore::retire_user`]): drop any
+    /// per-user state so a recycled slot starts clean. Default: none.
+    fn retire(&mut self, _user: usize) {}
+}
+
+/// FOS resource-elastic placement: reuse > replace-with-best-scoring >
+/// wait-for-busy-instance (§4.4.3).
+#[derive(Debug, Default)]
+pub struct Elastic;
+
+impl SchedPolicy for Elastic {
+    fn name(&self) -> &'static str {
+        "elastic"
+    }
+
+    fn place(
+        &mut self,
+        regions: &RegionMap,
+        costs: &CostModel,
+        req: &PlaceReq,
+    ) -> Option<Placement> {
+        // 1. Reuse an idle region already configured with this
+        //    accelerator (prefer the biggest loaded variant — it's
+        //    fastest). Pinned jobs reuse only their pinned variant.
+        let mut best_reuse: Option<(usize, usize)> = None; // (anchor, span)
+        for (i, r) in regions.iter().enumerate() {
+            if r.busy || r.tail_of.is_some() {
+                continue;
+            }
+            if let Some(l) = &r.loaded {
+                if l.accel == req.accel.name
+                    && req.pin.map(|p| p == l.variant).unwrap_or(true)
+                    && regions.span_idle(i, l.span)
+                    && best_reuse.map(|(_, s)| l.span > s).unwrap_or(true)
+                {
+                    best_reuse = Some((i, l.span));
+                }
+            }
+        }
+        if let Some((anchor, _)) = best_reuse {
+            let variant = regions.get(anchor).loaded.as_ref().unwrap().variant.clone();
+            return Some(Placement { anchor, variant, reconfigure: false });
+        }
+
+        // 2. Reconfigure free capacity. Multi-region variants only when
+        //    a single tenant is active (the paper grows a lone user's
+        //    share; under contention every user gets 1-region modules).
+        //    Among the variants that fit, pick the one minimising
+        //    reconfig + backlog x per-tile / replicas — bigger is NOT
+        //    always better when the job cannot amortise the larger
+        //    partial bitstream.
+        let dma_est_ns = costs.dma_ns(req.accel, 0);
+        let placement = if let Some(p) = req.pin {
+            let v = req.accel.variant(p)?;
+            let anchor = regions.find_free_span(v.regions)?;
+            Placement { anchor, variant: v.name.clone(), reconfigure: true }
+        } else {
+            let span_cap = if req.active_users <= 1 { regions.len() } else { 1 };
+            let free_now = regions.free_slots().max(1);
+            let mut best: Option<(u64, usize, String)> = None;
+            for v in &req.accel.variants {
+                if v.regions > span_cap {
+                    continue;
+                }
+                if let Some(anchor) = regions.find_free_span(v.regions) {
+                    // Throughput-aware score: assume the backlog will
+                    // spread over as many replicas of this variant as
+                    // fit in the currently free capacity, each paying
+                    // its own reconfiguration.
+                    let replicas = (free_now / v.regions).max(1) as f64;
+                    let drain =
+                        req.backlog_tiles as f64 * (v.compute_ns() + dma_est_ns) / replicas;
+                    let score = costs.reconfig_ns(v.regions) + drain as u64;
+                    if best.as_ref().map(|(s, _, _)| score < *s).unwrap_or(true) {
+                        best = Some((score, anchor, v.name.clone()));
+                    }
+                }
+            }
+            let (_, anchor, variant) = best?;
+            Placement { anchor, variant, reconfigure: true }
+        };
+
+        // 3. Reconfiguration avoidance (§4.4.3: "the scheduler avoids
+        //    partial reconfiguration and reuses an accelerator if it is
+        //    already available on-chip"): if an instance of this
+        //    accelerator is loaded but busy, pay a reconfiguration only
+        //    when the user's backlog amortises it — otherwise wait for
+        //    the busy instance to free up.
+        if placement.reconfigure {
+            let instance_busy = regions.iter().any(|r| {
+                r.busy && r.loaded.as_ref().map(|l| l.accel == req.accel.name).unwrap_or(false)
+            });
+            if instance_busy {
+                let v = req.accel.variant(&placement.variant).unwrap();
+                let service_ns =
+                    (req.backlog_tiles as f64 * (v.compute_ns() + dma_est_ns)) as u64;
+                if costs.reconfig_ns(v.regions) > service_ns {
+                    return None;
+                }
+            }
+        }
+        Some(placement)
+    }
+}
+
+/// Fixed-module baseline: each user keeps one 1-region module for the
+/// whole run (Fig 15's comparison point).
+#[derive(Debug, Default)]
+pub struct Fixed {
+    /// Per-user home region.
+    home: Vec<Option<usize>>,
+}
+
+impl SchedPolicy for Fixed {
+    fn name(&self) -> &'static str {
+        "fixed"
+    }
+
+    fn retire(&mut self, user: usize) {
+        // Release the departed tenant's home so it isn't phantom-owned
+        // across slot recycling.
+        if let Some(h) = self.home.get_mut(user) {
+            *h = None;
+        }
+    }
+
+    fn place(
+        &mut self,
+        regions: &RegionMap,
+        _costs: &CostModel,
+        req: &PlaceReq,
+    ) -> Option<Placement> {
+        if self.home.len() <= req.user {
+            self.home.resize(req.user + 1, None);
+        }
+        let v = req.accel.smallest_variant();
+        // A region we may (re)configure right now: neither running a
+        // request itself nor the tail of a span whose anchor is — a
+        // mixed-policy fabric (per-user policies) can have an elastic
+        // tenant's multi-region module next to fixed homes, and only
+        // the anchor carries the busy flag.
+        let covering_busy = |r: usize| {
+            let reg = regions.get(r);
+            reg.busy || reg.tail_of.map(|t| regions.get(t).busy).unwrap_or(false)
+        };
+        let home = match self.home[req.user] {
+            Some(r) => r,
+            None => {
+                // Claim the first region nobody owns; once every region
+                // is owned, share one deterministically (pure
+                // time-multiplexing) instead of starving the user.
+                let owned: Vec<usize> = self.home.iter().flatten().copied().collect();
+                match (0..regions.len())
+                    .find(|&r| !owned.contains(&r) && !covering_busy(r))
+                {
+                    Some(r) => {
+                        self.home[req.user] = Some(r);
+                        r
+                    }
+                    None if (0..regions.len()).all(|r| owned.contains(&r)) => {
+                        let n = regions.len();
+                        let start = req.user % n;
+                        let Some(r) =
+                            (0..n).map(|k| (start + k) % n).find(|&r| !covering_busy(r))
+                        else {
+                            return None; // everything is running; wait
+                        };
+                        self.home[req.user] = Some(r);
+                        r
+                    }
+                    None => return None, // an unowned region exists but is busy
+                }
+            }
+        };
+        if covering_busy(home) {
+            return None; // our module (or the span over it) is busy; wait
+        }
+        let needs = regions
+            .get(home)
+            .loaded
+            .as_ref()
+            .map(|l| l.accel != req.accel.name || l.variant != v.name)
+            .unwrap_or(true);
+        Some(Placement { anchor: home, variant: v.name.clone(), reconfigure: needs })
+    }
+}
+
+/// Decision-log ring cap: plenty for tests/benches, bounded for a
+/// long-lived daemon (overflow is counted, oldest entries dropped).
+const LOG_CAP: usize = 65_536;
+
+/// The shared scheduling state machine.  Pure: no I/O, no clocks — the
+/// harness owns time (virtual or real) and hardware effects.
+pub struct SchedCore {
+    catalog: Catalog,
+    costs: CostModel,
+    regions: RegionMap,
+    queues: Vec<VecDeque<Request>>,
+    rr: usize,
+    /// Users deferred in the current round (reset by `begin_round`).
+    skip: Vec<usize>,
+    counters: SchedCounters,
+    log: VecDeque<Decision>,
+    log_dropped: u64,
+    policies: Vec<Box<dyn SchedPolicy>>,
+    default_policy: usize,
+    user_policy: Vec<usize>,
+}
+
+impl SchedCore {
+    /// Build a core for a shell with the built-in policies registered
+    /// ([`Elastic`] and [`Fixed`]) and `default` routing new users.
+    pub fn new(shell: &Shell, catalog: Catalog, default: Policy) -> SchedCore {
+        SchedCore {
+            catalog,
+            costs: CostModel::new(shell),
+            regions: RegionMap::new(shell),
+            queues: Vec::new(),
+            rr: 0,
+            skip: Vec::new(),
+            counters: SchedCounters::default(),
+            log: VecDeque::new(),
+            log_dropped: 0,
+            policies: vec![Box::<Elastic>::default(), Box::<Fixed>::default()],
+            default_policy: match default {
+                Policy::Elastic => 0,
+                Policy::Fixed => 1,
+            },
+            user_policy: Vec::new(),
+        }
+    }
+
+    /// Register an additional policy; returns its index. Tenants opt in
+    /// via [`SchedCore::set_user_policy`] with the policy's name.
+    pub fn register_policy(&mut self, policy: Box<dyn SchedPolicy>) -> usize {
+        self.policies.push(policy);
+        self.policies.len() - 1
+    }
+
+    /// Route `user` to the policy named `name`; `false` if unknown.
+    pub fn set_user_policy(&mut self, user: usize, name: &str) -> bool {
+        match self.policies.iter().position(|p| p.name() == name) {
+            Some(idx) => {
+                self.ensure_user(user);
+                self.user_policy[user] = idx;
+                true
+            }
+            None => false,
+        }
+    }
+
+    pub fn policy_name_of(&self, user: usize) -> &'static str {
+        let idx = self.user_policy.get(user).copied().unwrap_or(self.default_policy);
+        self.policies[idx].name()
+    }
+
+    fn ensure_user(&mut self, user: usize) {
+        if self.queues.len() <= user {
+            self.queues.resize_with(user + 1, VecDeque::new);
+            self.user_policy.resize(user + 1, self.default_policy);
+        }
+    }
+
+    /// Enqueue one acceleration request. Rejects unknown accelerators
+    /// (and unknown pinned variants) so harnesses can fail fast.
+    pub fn submit(
+        &mut self,
+        user: usize,
+        job: u64,
+        accel: &str,
+        tiles: usize,
+        pin: Option<&str>,
+    ) -> Result<(), String> {
+        let known = match self.catalog.get(accel) {
+            None => return Err(format!("no accelerator named {accel:?}")),
+            Some(a) => a,
+        };
+        if let Some(p) = pin {
+            if known.variant(p).is_none() {
+                return Err(format!("no variant named {p:?} for accelerator {accel:?}"));
+            }
+        }
+        self.ensure_user(user);
+        self.queues[user].push_back(Request {
+            user,
+            job,
+            accel: accel.to_string(),
+            tiles: tiles.max(1),
+            pin: pin.map(str::to_string),
+        });
+        Ok(())
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queues.iter().map(VecDeque::len).sum()
+    }
+
+    pub fn has_pending(&self) -> bool {
+        self.queues.iter().any(|q| !q.is_empty())
+    }
+
+    /// Start a dispatch round: deferred users become eligible again.
+    /// Call after every (virtual or real) time advance.
+    pub fn begin_round(&mut self) {
+        self.skip.clear();
+    }
+
+    /// Round-robin pick of the next user with pending, non-deferred
+    /// work.
+    fn next_user(&mut self) -> Option<usize> {
+        let n = self.queues.len();
+        for k in 0..n {
+            let u = (self.rr + k) % n;
+            if !self.queues[u].is_empty() && !self.skip.contains(&u) {
+                self.rr = (u + 1) % n;
+                return Some(u);
+            }
+        }
+        None
+    }
+
+    /// Produce the next placement of the current round, applying it to
+    /// the region map (module loaded/replaced, anchor marked busy) and
+    /// the counters.  `None` ends the round: every user is drained or
+    /// deferred.  The harness must later call
+    /// [`SchedCore::complete`] for the decision's anchor.
+    pub fn next_decision(&mut self) -> Option<Decision> {
+        loop {
+            let user = self.next_user()?;
+            let head = self.queues[user].front().cloned().unwrap();
+            let backlog_tiles: usize = self.queues[user].iter().map(|r| r.tiles).sum();
+            let active_users = self.queues.iter().filter(|q| !q.is_empty()).count();
+
+            // Split-borrow the fields so a stateful policy can mutate
+            // itself while reading regions/costs.
+            let SchedCore { catalog, costs, regions, policies, user_policy, default_policy, .. } =
+                self;
+            let accel = catalog
+                .get(&head.accel)
+                .unwrap_or_else(|| panic!("unknown accel {}", head.accel));
+            let req = PlaceReq {
+                user,
+                accel,
+                pin: head.pin.as_deref(),
+                backlog_tiles,
+                active_users,
+            };
+            let idx = user_policy.get(user).copied().unwrap_or(*default_policy);
+            let Some(p) = policies[idx].place(regions, costs, &req) else {
+                self.counters.skips += 1;
+                self.skip.push(user);
+                continue;
+            };
+
+            let span = accel
+                .variant(&p.variant)
+                .unwrap_or_else(|| panic!("policy chose unknown variant {}", p.variant))
+                .regions;
+            let request = self.queues[user].pop_front().unwrap();
+            if p.reconfigure {
+                self.regions.clear_span(p.anchor, span);
+                self.regions.regions[p.anchor].loaded = Some(LoadedModule {
+                    accel: request.accel.clone(),
+                    variant: p.variant.clone(),
+                    span,
+                });
+                for r in p.anchor + 1..p.anchor + span {
+                    self.regions.regions[r].loaded = None;
+                    self.regions.regions[r].tail_of = Some(p.anchor);
+                }
+                self.counters.reconfigs += 1;
+            } else {
+                self.counters.reuses += 1;
+            }
+            self.regions.regions[p.anchor].busy = true;
+            for r in p.anchor..p.anchor + span {
+                self.regions.touch(r);
+            }
+            // Replication: after this placement, is the same
+            // accelerator resident at any other anchor?
+            let replicated = self.regions.regions.iter().enumerate().any(|(i, r)| {
+                i != p.anchor
+                    && r.loaded.as_ref().map(|l| l.accel == request.accel).unwrap_or(false)
+            });
+            if replicated && p.reconfigure {
+                self.counters.replications += 1;
+            }
+
+            let d = Decision {
+                user,
+                job: request.job,
+                accel: request.accel,
+                variant: p.variant,
+                anchor: p.anchor,
+                span,
+                tiles: request.tiles,
+                reconfigure: p.reconfigure,
+                replicated,
+            };
+            if self.log.len() >= LOG_CAP {
+                self.log.pop_front();
+                self.log_dropped += 1;
+            }
+            self.log.push_back(d.clone());
+            return Some(d);
+        }
+    }
+
+    /// The request running at `anchor` finished; its module stays
+    /// resident (reuse fodder) but the span is idle again.
+    pub fn complete(&mut self, anchor: usize) {
+        self.regions.regions[anchor].busy = false;
+    }
+
+    /// Roll back a placement whose hardware effect failed: the module
+    /// the last decision recorded at `anchor` is NOT actually resident,
+    /// so forget it (and its tails) — otherwise the reuse path would
+    /// keep preferring a phantom instance forever. The anchor's `busy`
+    /// flag is untouched; the harness still owns the completion.
+    pub fn evict(&mut self, anchor: usize) {
+        let span = self.regions.regions[anchor]
+            .loaded
+            .as_ref()
+            .map(|l| l.span)
+            .unwrap_or(1);
+        self.regions.regions[anchor].loaded = None;
+        for r in anchor + 1..(anchor + span).min(self.regions.regions.len()) {
+            if self.regions.regions[r].tail_of == Some(anchor) {
+                self.regions.regions[r].tail_of = None;
+                self.regions.regions[r].loaded = None;
+            }
+        }
+    }
+
+    /// A user departed: drop their queued requests (returned so the
+    /// harness can fail the matching replies), reset their policy
+    /// routing, and let every policy drop its per-user state so the
+    /// slot can be recycled cleanly for a future tenant.
+    pub fn retire_user(&mut self, user: usize) -> Vec<Request> {
+        if user >= self.queues.len() {
+            return Vec::new();
+        }
+        self.user_policy[user] = self.default_policy;
+        for p in &mut self.policies {
+            p.retire(user);
+        }
+        self.queues[user].drain(..).collect()
+    }
+
+    /// Drain every queued request (dispatcher stall-guard: lets a
+    /// harness fail requests no policy will ever place).
+    pub fn drain_pending(&mut self) -> Vec<Request> {
+        let mut out = Vec::new();
+        for q in &mut self.queues {
+            out.extend(q.drain(..));
+        }
+        out
+    }
+
+    /// Virtual service latency of a decision under `concurrent` other
+    /// busy modules: per-tile (DMA + compute) x tiles, plus the partial
+    /// reconfiguration when one was paid.
+    pub fn service_ns(&self, d: &Decision, concurrent: usize) -> u64 {
+        let accel = self.catalog.get(&d.accel).expect("decision for unknown accel");
+        let variant = accel.variant(&d.variant).expect("decision for unknown variant");
+        let mut ns = (self.costs.per_tile_ns(accel, variant, concurrent) * d.tiles as f64) as u64;
+        if d.reconfigure {
+            ns += self.costs.reconfig_ns(d.span);
+        }
+        ns
+    }
+
+    pub fn counters(&self) -> &SchedCounters {
+        &self.counters
+    }
+
+    /// Ordered decision history (oldest dropped past the ring cap).
+    pub fn decision_log(&self) -> impl Iterator<Item = &Decision> {
+        self.log.iter()
+    }
+
+    pub fn decisions_dropped(&self) -> u64 {
+        self.log_dropped
+    }
+
+    pub fn costs(&self) -> &CostModel {
+        &self.costs
+    }
+
+    pub fn regions(&self) -> &RegionMap {
+        &self.regions
+    }
+
+    pub fn busy_anchors(&self) -> usize {
+        self.regions.busy_anchors()
+    }
+
+    pub fn catalog(&self) -> &Catalog {
+        &self.catalog
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::shell::{Shell, ShellBoard};
+
+    fn catalog() -> Catalog {
+        Catalog::load_default().unwrap()
+    }
+
+    fn core(policy: Policy) -> SchedCore {
+        SchedCore::new(&Shell::build(ShellBoard::Ultra96), catalog(), policy)
+    }
+
+    #[test]
+    fn elastic_reuses_resident_idle_instance() {
+        let mut c = core(Policy::Elastic);
+        c.submit(0, 0, "sobel", 1, None).unwrap();
+        c.begin_round();
+        let d1 = c.next_decision().unwrap();
+        assert!(d1.reconfigure);
+        c.complete(d1.anchor);
+        c.submit(0, 1, "sobel", 1, None).unwrap();
+        c.begin_round();
+        let d2 = c.next_decision().unwrap();
+        assert!(!d2.reconfigure, "idle instance must be reused: {d2:?}");
+        assert_eq!(d2.anchor, d1.anchor);
+        assert_eq!(c.counters().reuses, 1);
+        assert_eq!(c.counters().reconfigs, 1);
+    }
+
+    #[test]
+    fn single_tenant_backlog_replicates() {
+        let mut c = core(Policy::Elastic);
+        for j in 0..3 {
+            // Long-running tiles so replication amortises reconfigs.
+            c.submit(0, j, "mandelbrot", 8, Some("mandelbrot_v1")).unwrap();
+        }
+        c.begin_round();
+        let mut anchors = Vec::new();
+        while let Some(d) = c.next_decision() {
+            anchors.push(d.anchor);
+        }
+        anchors.sort_unstable();
+        anchors.dedup();
+        assert!(anchors.len() >= 2, "expected replication, got {anchors:?}");
+        assert!(c.counters().replications >= 1);
+    }
+
+    #[test]
+    fn round_robin_alternates_users() {
+        let mut c = core(Policy::Elastic);
+        for j in 0..2 {
+            c.submit(0, j, "mandelbrot", 8, Some("mandelbrot_v1")).unwrap();
+            c.submit(1, 10 + j, "sobel", 8, Some("sobel_v1")).unwrap();
+        }
+        c.begin_round();
+        let mut users = Vec::new();
+        while let Some(d) = c.next_decision() {
+            users.push(d.user);
+        }
+        assert!(users.starts_with(&[0, 1]), "RR order violated: {users:?}");
+    }
+
+    #[test]
+    fn fixed_users_keep_one_region() {
+        let mut c = core(Policy::Fixed);
+        for j in 0..4 {
+            c.submit(0, j, "sobel", 1, None).unwrap();
+            c.submit(1, 10 + j, "dct", 1, None).unwrap();
+        }
+        let mut homes: std::collections::HashMap<usize, std::collections::HashSet<usize>> =
+            Default::default();
+        loop {
+            c.begin_round();
+            let mut any = false;
+            let mut done = Vec::new();
+            while let Some(d) = c.next_decision() {
+                any = true;
+                assert_eq!(d.span, 1);
+                homes.entry(d.user).or_default().insert(d.anchor);
+                done.push(d.anchor);
+            }
+            for a in done {
+                c.complete(a);
+            }
+            if !any && !c.has_pending() {
+                break;
+            }
+        }
+        for (u, regions) in homes {
+            assert_eq!(regions.len(), 1, "user {u} moved between {regions:?}");
+        }
+    }
+
+    #[test]
+    fn fixed_oversubscription_shares_instead_of_starving() {
+        let mut c = core(Policy::Fixed); // Ultra96: 3 regions, 4 users
+        for u in 0..4 {
+            c.submit(u, u as u64, "vadd", 1, None).unwrap();
+        }
+        let mut served = std::collections::HashSet::new();
+        for _ in 0..16 {
+            c.begin_round();
+            let mut done = Vec::new();
+            while let Some(d) = c.next_decision() {
+                served.insert(d.user);
+                done.push(d.anchor);
+            }
+            for a in done {
+                c.complete(a);
+            }
+            if !c.has_pending() {
+                break;
+            }
+        }
+        assert_eq!(served.len(), 4, "all users must eventually be served");
+        assert!(!c.has_pending());
+    }
+
+    #[test]
+    fn per_user_policy_routing() {
+        let mut c = core(Policy::Elastic);
+        assert!(c.set_user_policy(1, "fixed"));
+        assert!(!c.set_user_policy(1, "themis"));
+        assert_eq!(c.policy_name_of(0), "elastic");
+        assert_eq!(c.policy_name_of(1), "fixed");
+        // Elastic user with a single-tenant backlog may span regions;
+        // the fixed user stays on 1-region modules.
+        for j in 0..2 {
+            c.submit(1, j, "dct", 50, None).unwrap();
+        }
+        c.begin_round();
+        let d = c.next_decision().unwrap();
+        assert_eq!(d.span, 1, "fixed tenant must get the smallest variant");
+    }
+
+    #[test]
+    fn unknown_names_rejected_at_submit() {
+        let mut c = core(Policy::Elastic);
+        assert!(c.submit(0, 0, "flux_capacitor", 1, None).is_err());
+        assert!(c.submit(0, 0, "vadd", 1, Some("vadd_v9")).is_err());
+        assert!(!c.has_pending());
+    }
+
+    #[test]
+    fn lru_replacement_prefers_blank_then_oldest() {
+        let mut c = core(Policy::Elastic);
+        // Load sobel, complete; then mandelbrot must take a blank
+        // region, not destroy the reusable sobel instance.
+        c.submit(0, 0, "sobel", 1, Some("sobel_v1")).unwrap();
+        c.begin_round();
+        let d = c.next_decision().unwrap();
+        c.complete(d.anchor);
+        c.submit(0, 1, "mandelbrot", 1, Some("mandelbrot_v1")).unwrap();
+        c.begin_round();
+        let d2 = c.next_decision().unwrap();
+        assert_ne!(d2.anchor, d.anchor, "blank region must be preferred over eviction");
+        c.complete(d2.anchor);
+        // Sobel is still resident: a reuse, not a reconfig.
+        c.submit(0, 2, "sobel", 1, Some("sobel_v1")).unwrap();
+        c.begin_round();
+        let d3 = c.next_decision().unwrap();
+        assert!(!d3.reconfigure);
+        assert_eq!(d3.anchor, d.anchor);
+    }
+
+    #[test]
+    fn retire_clears_policy_state() {
+        let mut c = core(Policy::Fixed);
+        c.submit(0, 0, "vadd", 1, None).unwrap();
+        c.begin_round();
+        let d = c.next_decision().unwrap();
+        c.complete(d.anchor);
+        assert!(c.retire_user(0).is_empty());
+        // The recycled slot plus two new tenants must claim all three
+        // regions — no phantom ownership of the departed user's home.
+        for u in 0..3 {
+            c.submit(u, 10 + u as u64, "vadd", 1, None).unwrap();
+        }
+        c.begin_round();
+        let mut anchors: Vec<usize> = Vec::new();
+        while let Some(d) = c.next_decision() {
+            anchors.push(d.anchor);
+        }
+        anchors.sort_unstable();
+        assert_eq!(anchors, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn evict_forgets_phantom_residency() {
+        let mut c = core(Policy::Elastic);
+        c.submit(0, 0, "sobel", 1, Some("sobel_v1")).unwrap();
+        c.begin_round();
+        let d = c.next_decision().unwrap();
+        assert!(d.reconfigure);
+        // Harness reports the load failed: roll back, then complete.
+        c.evict(d.anchor);
+        c.complete(d.anchor);
+        // The next identical request must reconfigure again, not reuse.
+        c.submit(0, 1, "sobel", 1, Some("sobel_v1")).unwrap();
+        c.begin_round();
+        let d2 = c.next_decision().unwrap();
+        assert!(d2.reconfigure, "phantom module must not be reused: {d2:?}");
+    }
+
+    #[test]
+    fn counters_sum_to_placements() {
+        let mut c = core(Policy::Elastic);
+        let mut placements = 0u64;
+        for j in 0..6 {
+            c.submit(j % 2, j, "fir", 2, None).unwrap();
+        }
+        loop {
+            c.begin_round();
+            let mut done = Vec::new();
+            while let Some(d) = c.next_decision() {
+                placements += 1;
+                done.push(d.anchor);
+            }
+            for a in done {
+                c.complete(a);
+            }
+            if !c.has_pending() {
+                break;
+            }
+        }
+        let cts = c.counters();
+        assert_eq!(cts.reconfigs + cts.reuses, placements);
+        assert_eq!(placements, 6);
+        assert_eq!(c.decision_log().count(), 6);
+    }
+}

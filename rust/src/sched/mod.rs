@@ -17,16 +17,33 @@
 //!   is used without reconfiguration (cross-application sharing);
 //! - **time-multiplexing** when requests outnumber regions.
 //!
-//! The engine is a virtual-time discrete-event simulation: latencies
-//! come from the manifest cycle models (compute), the memsim DDR model
-//! (DMA), and the reconfig PCAP model (partial loads). Real PJRT
-//! compute can be attached ([`SimConfig::executor`]) so results are
-//! genuinely produced — virtual time stays independent of host speed.
+//! ## Architecture: one core, two harnesses
+//!
+//! All of the above lives in [`core`]: [`SchedCore`], a pure scheduling
+//! state machine driven through a pluggable [`SchedPolicy`] trait
+//! ([`Elastic`] and [`Fixed`] are the seed implementations).  Two
+//! harnesses consume it:
+//!
+//! - [`simulate`] — a virtual-time discrete-event engine: latencies
+//!   come from the manifest cycle models (compute), the memsim DDR
+//!   model (DMA) and the reconfig PCAP model (partial loads), all
+//!   bundled in the shared [`CostModel`].  Real PJRT compute can be
+//!   attached ([`SimConfig::executor`]) so results are genuinely
+//!   produced — virtual time stays independent of host speed.
+//! - the live daemon ([`crate::daemon::Daemon`]) — the same core
+//!   drives real partial reconfigurations and PJRT executions, with a
+//!   virtual clock mirroring the simulator so both paths make (and
+//!   log) identical decision sequences for identical traces.
 
+pub mod core;
 mod sim;
 mod workload;
 
-pub use sim::{gen_inputs, simulate, Policy, RegionTrace, SimConfig, SimResult, TraceEvent};
+pub use self::core::{
+    CostModel, Decision, Elastic, Fixed, LoadedModule, PlaceReq, Placement, Policy, Region,
+    RegionMap, Request, SchedCore, SchedCounters, SchedPolicy,
+};
+pub use sim::{gen_inputs, simulate, RegionTrace, SimConfig, SimResult, TraceEvent};
 pub use workload::{JobSpec, Workload};
 
 use std::time::Duration;

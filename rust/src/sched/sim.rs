@@ -1,26 +1,18 @@
-//! The virtual-time discrete-event engine implementing both policies:
-//! FOS resource-elastic scheduling and the fixed-module baseline
-//! (Fig 15's comparison).
+//! The virtual-time discrete-event harness around the shared scheduler
+//! core (Fig 15's comparison engine).  All placement intelligence lives
+//! in [`super::core::SchedCore`]; this file only owns *time*: it feeds
+//! arrivals and completions into the core and turns its [`Decision`]s
+//! into trace events, latencies and (optionally) real PJRT compute.
 
+use super::core::{Decision, Policy, SchedCore, SchedCounters};
 use super::workload::Workload;
 use super::SimTime;
 use crate::accel::Catalog;
-use crate::memsim::{config_for, DdrModel};
-use crate::reconfig::FpgaManager;
 use crate::runtime::Executor;
 use crate::shell::{Shell, ShellBoard};
 use crate::testutil::Rng;
-use std::collections::{BinaryHeap, VecDeque};
 use std::cmp::Reverse;
-
-/// Scheduling policy.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Policy {
-    /// FOS: replication + replacement + reuse + time-mux (§4.4.3).
-    Elastic,
-    /// Baseline: one fixed 1-region module per user, run-to-completion.
-    Fixed,
-}
+use std::collections::BinaryHeap;
 
 /// Simulation configuration.
 pub struct SimConfig {
@@ -72,35 +64,19 @@ pub struct SimResult {
     pub job_completion: Vec<SimTime>,
     /// Completion of each user's *last* job.
     pub user_completion: Vec<SimTime>,
-    pub reconfigs: u64,
-    pub reuses: u64,
+    /// The run's scheduling counters — the same
+    /// [`crate::sched::SchedCounters`] the daemon's `DaemonStats`
+    /// mirrors on the live path.
+    pub counters: SchedCounters,
     pub trace: Vec<TraceEvent>,
     pub regions: Vec<RegionTrace>,
+    /// The core's ordered decision log — compared verbatim against the
+    /// live daemon's in the sim/daemon parity test.
+    pub decisions: Vec<Decision>,
     /// FNV checksum over all real outputs (0 when executor is None) —
     /// lets tests assert that elastic vs fixed compute identical data.
     pub output_checksum: u64,
     pub tiles_executed: u64,
-}
-
-#[derive(Debug, Clone, PartialEq, Eq)]
-struct Loaded {
-    accel: String,
-    variant: String,
-    span: usize,
-}
-
-#[derive(Debug, Clone)]
-struct Region {
-    loaded: Option<Loaded>,
-    /// Anchor region index if this slot is the tail of a combined span.
-    tail_of: Option<usize>,
-    busy: bool,
-}
-
-#[derive(Debug, Clone)]
-struct PendingReq {
-    job: usize,
-    tiles: usize,
 }
 
 #[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
@@ -116,28 +92,19 @@ pub fn simulate(catalog: &Catalog, workload: &Workload, cfg: &SimConfig) -> SimR
     if let Some(limit) = cfg.region_limit {
         shell.floorplan.regions.truncate(limit.max(1));
     }
-    let ddr = DdrModel::new(config_for(cfg.board));
     let n_regions = shell.region_count();
     let n_users = workload.users();
 
-    // Precompute per-span partial-bitstream reconfig latency.
-    let region_bytes = partial_bytes(&shell);
-    let reconfig_ns =
-        |span: usize| -> u64 { FpgaManager::latency_for(region_bytes * span, true).as_nanos() as u64 };
-
-    let mut regions: Vec<Region> =
-        (0..n_regions).map(|_| Region { loaded: None, tail_of: None, busy: false }).collect();
-    let mut queues: Vec<VecDeque<PendingReq>> = vec![VecDeque::new(); n_users];
-    let mut fixed_home: Vec<Option<usize>> = vec![None; n_users]; // Fixed policy
+    let mut core = SchedCore::new(&shell, catalog.clone(), cfg.policy);
     let mut jobs_left: Vec<usize> = workload.jobs.iter().map(|j| j.requests).collect();
     let mut result = SimResult {
         makespan: 0,
         job_completion: vec![0; workload.jobs.len()],
         user_completion: vec![0; n_users],
-        reconfigs: 0,
-        reuses: 0,
+        counters: SchedCounters::default(),
         trace: Vec::new(),
         regions: vec![RegionTrace::default(); n_regions],
+        decisions: Vec::new(),
         output_checksum: 0xcbf29ce484222325,
         tiles_executed: 0,
     };
@@ -148,7 +115,6 @@ pub fn simulate(catalog: &Catalog, workload: &Workload, cfg: &SimConfig) -> SimR
         heap.push(Reverse((job.arrival, seq, Event::Arrival(j))));
         seq += 1;
     }
-    let mut rr = 0usize;
     let mut rng = Rng::new(0xD15);
 
     while let Some(Reverse((now, s0, ev))) = heap.pop() {
@@ -168,12 +134,18 @@ pub fn simulate(catalog: &Catalog, workload: &Workload, cfg: &SimConfig) -> SimR
                 Event::Arrival(j) => {
                     let job = &workload.jobs[j];
                     for _ in 0..job.requests {
-                        queues[job.user]
-                            .push_back(PendingReq { job: j, tiles: job.tiles_per_request });
+                        core.submit(
+                            job.user,
+                            j as u64,
+                            &job.accel,
+                            job.tiles_per_request,
+                            job.pin_variant.as_deref(),
+                        )
+                        .unwrap_or_else(|e| panic!("{e}"));
                     }
                 }
                 Event::Complete { anchor, job } => {
-                    regions[anchor].busy = false;
+                    core.complete(anchor);
                     jobs_left[job] -= 1;
                     if jobs_left[job] == 0 {
                         result.job_completion[job] = now;
@@ -186,97 +158,22 @@ pub fn simulate(catalog: &Catalog, workload: &Workload, cfg: &SimConfig) -> SimR
         }
 
         // Dispatch as many requests as will place (cooperative
-        // run-to-completion), round-robin across users with pending work.
-        // A user whose request cannot (or should not) be placed is
-        // skipped this round without blocking the others.
-        let mut skip: Vec<usize> = Vec::new();
-        loop {
-            let Some(user) = next_user(&queues, &mut rr, &skip) else { break };
-            let req = queues[user].front().cloned().unwrap();
-            let accel = catalog
-                .get(&workload.jobs[req.job].accel)
-                .unwrap_or_else(|| panic!("unknown accel {}", workload.jobs[req.job].accel));
-
-            let pin = workload.jobs[req.job].pin_variant.as_deref();
-            // Uncontended per-tile DMA estimate for cost-aware choices.
-            let dma_est_ns = ddr.transfer_ns(accel.bytes_in, 0) + ddr.transfer_ns(accel.bytes_out, 0);
-            let backlog_tiles: usize = queues[user].iter().map(|r| r.tiles).sum();
-            let placement = match cfg.policy {
-                Policy::Elastic => place_elastic(
-                    &regions,
-                    &shell,
-                    accel,
-                    &queues,
-                    pin,
-                    backlog_tiles,
-                    dma_est_ns,
-                    &reconfig_ns,
-                ),
-                Policy::Fixed => place_fixed(&regions, accel, user, &mut fixed_home),
-            };
-            let Some((anchor, variant_name, reconfigure)) = placement else {
-                skip.push(user);
-                continue;
-            };
-
-            // Reconfiguration-avoidance (§4.4.3: "the scheduler avoids
-            // partial reconfiguration and reuses an accelerator if it is
-            // already available on-chip"): if an instance of this
-            // accelerator is loaded but busy, pay a reconfiguration only
-            // when the user's backlog amortises it — otherwise wait for
-            // the busy instance to free up.
-            if reconfigure && cfg.policy == Policy::Elastic {
-                let instance_busy = regions.iter().any(|r| {
-                    r.busy && r.loaded.as_ref().map(|l| l.accel == accel.name).unwrap_or(false)
-                });
-                if instance_busy {
-                    let v = accel.variant(&variant_name).unwrap();
-                    let service_ns =
-                        (backlog_tiles as f64 * (v.compute_ns() + dma_est_ns)) as u64;
-                    if reconfig_ns(v.regions) > service_ns {
-                        skip.push(user);
-                        continue;
-                    }
-                }
-            }
-            queues[user].pop_front();
-
-            let variant = accel.variant(&variant_name).unwrap();
-            let span = variant.regions;
-
-            // Mark busy + (re)load.
-            if reconfigure {
-                // Clear any previous span association of these slots.
-                clear_span(&mut regions, anchor, span);
-                regions[anchor].loaded =
-                    Some(Loaded { accel: accel.name.clone(), variant: variant_name.clone(), span });
-                for r in anchor + 1..anchor + span {
-                    regions[r].loaded = None;
-                    regions[r].tail_of = Some(anchor);
-                }
-                result.reconfigs += 1;
-            } else {
-                result.reuses += 1;
-            }
-            regions[anchor].busy = true;
-
-            // Latency: reconfig + per-tile (DMA + compute).
-            let busy_others = regions.iter().filter(|r| r.busy).count().saturating_sub(1);
-            let dma_ns = ddr.transfer_ns(accel.bytes_in, busy_others)
-                + ddr.transfer_ns(accel.bytes_out, busy_others);
-            let per_tile = dma_ns + variant.compute_ns();
-            let mut lat = (per_tile * req.tiles as f64) as u64;
-            if reconfigure {
-                lat += reconfig_ns(span);
-            }
+        // run-to-completion); the core round-robins across users and
+        // defers anyone whose request cannot (or should not) be placed
+        // without blocking the others.
+        core.begin_round();
+        while let Some(d) = core.next_decision() {
+            // Latency: reconfig + per-tile (DMA + compute), contended
+            // by the other busy modules.
+            let busy_others = core.busy_anchors().saturating_sub(1);
+            let lat = core.service_ns(&d, busy_others);
 
             // Real compute, if attached.
             if let Some(exec) = &cfg.executor {
-                for _ in 0..req.tiles {
+                let accel = catalog.get(&d.accel).unwrap();
+                for _ in 0..d.tiles {
                     let inputs = gen_inputs(accel, &mut rng);
-                    let out = exec
-                        .execute(&variant_name, inputs)
-                        .expect("real compute failed");
+                    let out = exec.execute(&d.variant, inputs).expect("real compute failed");
                     for buf in &out.outputs {
                         for v in buf {
                             let bits = v.to_bits() as u64;
@@ -292,185 +189,29 @@ pub fn simulate(catalog: &Catalog, workload: &Workload, cfg: &SimConfig) -> SimR
             result.trace.push(TraceEvent {
                 start: now,
                 end,
-                region: anchor,
-                span,
-                user,
-                accel: accel.name.clone(),
-                variant: variant_name.clone(),
-                tiles: req.tiles,
-                reconfigured: reconfigure,
+                region: d.anchor,
+                span: d.span,
+                user: d.user,
+                accel: d.accel.clone(),
+                variant: d.variant.clone(),
+                tiles: d.tiles,
+                reconfigured: d.reconfigure,
             });
-            for t in result.regions[anchor..anchor + span].iter_mut() {
+            for t in result.regions[d.anchor..d.anchor + d.span].iter_mut() {
                 t.busy_ns += lat;
             }
-            heap.push(Reverse((end, seq, Event::Complete { anchor, job: req.job })));
+            heap.push(Reverse((
+                end,
+                seq,
+                Event::Complete { anchor: d.anchor, job: d.job as usize },
+            )));
             seq += 1;
         }
     }
 
+    result.counters = core.counters().clone();
+    result.decisions = core.decision_log().cloned().collect();
     result
-}
-
-/// Bytes of a single-region partial bitstream on this shell.
-fn partial_bytes(shell: &Shell) -> usize {
-    use crate::bitstream::region_frames;
-    let dev = &shell.floorplan.device;
-    region_frames(dev, &shell.floorplan.regions[0]).len() * crate::bitstream::FRAME_WORDS * 4
-}
-
-fn next_user(queues: &[VecDeque<PendingReq>], rr: &mut usize, skip: &[usize]) -> Option<usize> {
-    let n = queues.len();
-    for k in 0..n {
-        let u = (*rr + k) % n;
-        if !queues[u].is_empty() && !skip.contains(&u) {
-            *rr = (u + 1) % n;
-            return Some(u);
-        }
-    }
-    None
-}
-
-/// Elastic placement: reuse > replace-with-biggest-fitting > none.
-/// Returns (anchor, variant, needs_reconfig).
-#[allow(clippy::too_many_arguments)]
-fn place_elastic(
-    regions: &[Region],
-    shell: &Shell,
-    accel: &crate::accel::Accelerator,
-    queues: &[VecDeque<PendingReq>],
-    pin: Option<&str>,
-    backlog_tiles: usize,
-    dma_est_ns: f64,
-    reconfig_ns: &dyn Fn(usize) -> u64,
-) -> Option<(usize, String, bool)> {
-    // 1. Reuse an idle region already configured with this accelerator
-    //    (prefer the biggest loaded variant — it's fastest). Pinned jobs
-    //    reuse only their pinned variant.
-    let mut best_reuse: Option<(usize, usize)> = None; // (anchor, span)
-    for (i, r) in regions.iter().enumerate() {
-        if r.busy || r.tail_of.is_some() {
-            continue;
-        }
-        if let Some(l) = &r.loaded {
-            if l.accel == accel.name
-                && pin.map(|p| p == l.variant).unwrap_or(true)
-                && span_idle(regions, i, l.span)
-                && best_reuse.map(|(_, s)| l.span > s).unwrap_or(true)
-            {
-                best_reuse = Some((i, l.span));
-            }
-        }
-    }
-    if let Some((anchor, _)) = best_reuse {
-        let v = regions[anchor].loaded.as_ref().unwrap().variant.clone();
-        return Some((anchor, v, false));
-    }
-
-    // 2. Reconfigure free capacity. Multi-region variants only when a
-    //    single tenant is active (the paper grows a lone user's share;
-    //    under contention every user gets 1-region modules). Among the
-    //    variants that fit, pick the one minimising
-    //    reconfig + backlog x per-tile — bigger is NOT always better
-    //    when the job cannot amortise the larger partial bitstream.
-    if let Some(p) = pin {
-        let v = accel.variant(p)?;
-        let anchor = find_free_span(regions, shell, v.regions)?;
-        return Some((anchor, v.name.clone(), true));
-    }
-    let active_users = queues.iter().filter(|q| !q.is_empty()).count();
-    let span_cap = if active_users <= 1 { regions.len() } else { 1 };
-    let free_now = regions
-        .iter()
-        .filter(|r| !r.busy && r.tail_of.is_none())
-        .count()
-        .max(1);
-    let mut best: Option<(u64, usize, String)> = None;
-    for v in &accel.variants {
-        if v.regions > span_cap {
-            continue;
-        }
-        if let Some(anchor) = find_free_span(regions, shell, v.regions) {
-            // Throughput-aware score: assume the backlog will spread
-            // over as many replicas of this variant as fit in the
-            // currently free capacity (replication), each paying its
-            // own reconfiguration.
-            let replicas = (free_now / v.regions).max(1) as f64;
-            let drain = backlog_tiles as f64 * (v.compute_ns() + dma_est_ns) / replicas;
-            let score = reconfig_ns(v.regions) + drain as u64;
-            if best.as_ref().map(|(s, _, _)| score < *s).unwrap_or(true) {
-                best = Some((score, anchor, v.name.clone()));
-            }
-        }
-    }
-    best.map(|(_, anchor, name)| (anchor, name, true))
-}
-
-/// Fixed placement: user keeps one region for the whole run.
-fn place_fixed(
-    regions: &[Region],
-    accel: &crate::accel::Accelerator,
-    user: usize,
-    home: &mut [Option<usize>],
-) -> Option<(usize, String, bool)> {
-    let v = accel.smallest_variant();
-    if let Some(r) = home[user] {
-        if regions[r].busy {
-            return None; // our module is busy; wait (run-to-completion)
-        }
-        let needs = regions[r]
-            .loaded
-            .as_ref()
-            .map(|l| l.accel != accel.name || l.variant != v.name)
-            .unwrap_or(true);
-        return Some((r, v.name.clone(), needs));
-    }
-    // Claim the first region nobody owns.
-    let owned: Vec<usize> = home.iter().flatten().copied().collect();
-    let r = (0..regions.len()).find(|r| !owned.contains(r) && !regions[*r].busy)?;
-    home[user] = Some(r);
-    Some((r, v.name.clone(), true))
-}
-
-fn span_idle(regions: &[Region], anchor: usize, span: usize) -> bool {
-    if anchor + span > regions.len() {
-        return false;
-    }
-    !regions[anchor..anchor + span].iter().any(|r| r.busy)
-        && regions[anchor + 1..anchor + span]
-            .iter()
-            .all(|r| r.tail_of == Some(anchor))
-}
-
-/// First anchor of `span` adjacent, idle, non-tail regions.
-fn find_free_span(regions: &[Region], shell: &Shell, span: usize) -> Option<usize> {
-    (0..regions.len().saturating_sub(span - 1)).find(|&a| {
-        shell.floorplan.combinable(a, span)
-            && (a..a + span).all(|r| {
-                !regions[r].busy
-                    // A tail slot may be cannibalised only with its anchor.
-                    && regions[r].tail_of.map(|t| t >= a).unwrap_or(true)
-            })
-    })
-}
-
-/// Detach any span structure overlapping [anchor, anchor+span).
-fn clear_span(regions: &mut [Region], anchor: usize, span: usize) {
-    // If a slot we take was the tail of an earlier anchor, that loaded
-    // module is destroyed.
-    for r in anchor..anchor + span {
-        if let Some(t) = regions[r].tail_of {
-            regions[t].loaded = None;
-        }
-        regions[r].tail_of = None;
-        regions[r].loaded = None;
-    }
-    // If a later region was a tail of one of ours, detach it too.
-    for r in anchor + span..regions.len() {
-        if regions[r].tail_of.map(|t| t < anchor + span).unwrap_or(false) {
-            regions[r].tail_of = None;
-            regions[r].loaded = None;
-        }
-    }
 }
 
 /// Deterministic input generation for real-compute mode.
@@ -591,7 +332,7 @@ mod tests {
             fx.makespan
         );
         // The elastic run must actually have replicated/reused.
-        assert!(el.reuses > 0);
+        assert!(el.counters.reuses > 0);
     }
 
     #[test]
@@ -607,8 +348,8 @@ mod tests {
         }
         let r = simulate(&c, &w, &SimConfig::new(ShellBoard::Ultra96, Policy::Elastic));
         // 12 requests, 3 regions: at most a handful of reconfigs, many reuses.
-        assert!(r.reconfigs <= 3, "reconfigs {}", r.reconfigs);
-        assert_eq!(r.reconfigs + r.reuses, 12);
+        assert!(r.counters.reconfigs <= 3, "reconfigs {}", r.counters.reconfigs);
+        assert_eq!(r.counters.reconfigs + r.counters.reuses, 12);
     }
 
     #[test]
@@ -687,5 +428,20 @@ mod tests {
         for (u, regions) in per_user {
             assert_eq!(regions.len(), 1, "user {u} used {regions:?}");
         }
+    }
+
+    #[test]
+    fn decision_log_matches_trace() {
+        let c = catalog();
+        let w = single_user("fir", 4, 2);
+        let r = simulate(&c, &w, &SimConfig::new(ShellBoard::Ultra96, Policy::Elastic));
+        assert_eq!(r.decisions.len(), r.trace.len());
+        for (d, t) in r.decisions.iter().zip(&r.trace) {
+            assert_eq!(d.anchor, t.region);
+            assert_eq!(d.span, t.span);
+            assert_eq!(d.variant, t.variant);
+            assert_eq!(d.reconfigure, t.reconfigured);
+        }
+        assert_eq!(r.counters.reconfigs + r.counters.reuses, r.trace.len() as u64);
     }
 }

@@ -4,6 +4,46 @@
 //! every property runs over `n` seeded cases and reports the failing
 //! seed, so failures reproduce exactly.
 
+/// True when the PJRT backend can actually execute accelerator compute
+/// — false under the offline binding stub (`runtime/pjrt_stub.rs`) or
+/// when the `artifacts/` manifest is missing. Compute-dependent tests
+/// call this and skip gracefully instead of failing the tier-1 gate;
+/// scheduling, latency-model and protocol behaviour stay fully tested
+/// either way.
+pub fn pjrt_available() -> bool {
+    use std::sync::OnceLock;
+    static AVAILABLE: OnceLock<bool> = OnceLock::new();
+    *AVAILABLE.get_or_init(|| {
+        let Ok(catalog) = crate::accel::Catalog::load_default() else {
+            return false;
+        };
+        let exec = crate::runtime::Executor::new(catalog);
+        let ok = exec
+            .execute("vadd_v1", vec![vec![0.0; 4096], vec![0.0; 4096]])
+            .is_ok();
+        exec.stop();
+        ok
+    })
+}
+
+/// Operand register values for one request of `accel`, with properly
+/// sized buffers allocated through the daemon: the accelerator's
+/// non-control registers in map order, zipped with its input then
+/// output tensor specs (the same ordering `Cynq::run` DMAs by).
+pub fn alloc_operand_params(
+    rpc: &mut crate::daemon::FpgaRpc,
+    catalog: &crate::accel::Catalog,
+    accel: &str,
+) -> Vec<(String, u64)> {
+    let a = catalog.get(accel).expect("unknown accelerator");
+    a.registers
+        .iter()
+        .filter(|r| r.name != "control")
+        .zip(a.inputs.iter().chain(a.outputs.iter()))
+        .map(|(r, spec)| (r.name.clone(), rpc.alloc(spec.bytes()).unwrap()))
+        .collect()
+}
+
 /// SplitMix64 — tiny, fast, good-enough statistical quality for test
 /// data and simulated workload generation.
 #[derive(Debug, Clone)]

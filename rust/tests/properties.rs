@@ -155,7 +155,7 @@ fn prop_scheduler_trace_invariants_random_workloads() {
 
         // Every request dispatched exactly once.
         assert_eq!(r.trace.len(), w.total_requests());
-        assert_eq!(r.reconfigs + r.reuses, w.total_requests() as u64);
+        assert_eq!(r.counters.reconfigs + r.counters.reuses, w.total_requests() as u64);
         // No overlapping allocations on any region; all inside fabric.
         for (i, a) in r.trace.iter().enumerate() {
             assert!(a.end > a.start);
