@@ -13,7 +13,7 @@ fn rate(bytes: usize, iters: usize, el: std::time::Duration) -> f64 {
 fn main() {
     let fp = Floorplan::standard(Device::new(DeviceKind::Zu3eg));
     let full = synth_full(&fp.device, 42);
-    let iters = 50;
+    let iters = fos::testutil::bench_scale(50, 5);
 
     let t0 = Instant::now();
     let mut partial = None;

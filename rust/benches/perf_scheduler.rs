@@ -20,7 +20,7 @@ fn main() {
 
     for policy in [Policy::Elastic, Policy::Fixed] {
         let t0 = Instant::now();
-        let iters = 20;
+        let iters = fos::testutil::bench_scale(20, 2);
         let mut makespan = 0;
         for _ in 0..iters {
             let r = simulate(&catalog, &w, &SimConfig::new(ShellBoard::Zcu102, policy));

@@ -26,7 +26,7 @@ fn main() {
     let path = std::env::temp_dir().join(format!("fos_t4_{}.json", std::process::id()));
     reg.save(&path).unwrap();
     let mut parse_stats = LatencyStats::new();
-    for _ in 0..50 {
+    for _ in 0..fos::testutil::bench_scale(50, 10) {
         let t = Instant::now();
         let _r = Registry::load(&path).unwrap();
         parse_stats.record(t.elapsed());
@@ -35,7 +35,7 @@ fn main() {
 
     // --- RPC call (paper 0.71 ms): ping round trips --------------------
     let mut ping_stats = LatencyStats::new();
-    for _ in 0..200 {
+    for _ in 0..fos::testutil::bench_scale(200, 50) {
         ping_stats.record(rpc.ping().unwrap());
     }
 
@@ -46,13 +46,15 @@ fn main() {
     let c = rpc.alloc(4 * 4096).unwrap();
     rpc.write_f32(a, &vec![1.0; 4096]).unwrap();
     rpc.write_f32(b, &vec![2.0; 4096]).unwrap();
-    let jobs: Vec<Job> = (0..50)
+    let jobs: Vec<Job> = (0..fos::testutil::bench_scale(50, 10))
         .map(|_| Job::new(
             "vadd",
             vec![("a_op".into(), a), ("b_op".into(), b), ("c_out".into(), c)],
         ))
         .collect();
-    rpc.run(&jobs).unwrap();
+    // Decisions (the quantity measured here) land even when the PJRT
+    // backend is the offline stub and compute errors out.
+    let _ = rpc.run(&jobs);
     let st = daemon.stats();
     let sched_ms = st.sched_ns.load(Ordering::Relaxed) as f64
         / st.sched_decisions.load(Ordering::Relaxed).max(1) as f64

@@ -33,6 +33,11 @@ pub struct SchedStatsReport {
     pub reuses: u64,
     pub skips: u64,
     pub replications: u64,
+    /// Running requests checkpointed and requeued (time-domain
+    /// preemption).
+    pub preemptions: u64,
+    /// Checkpointed remainders re-dispatched.
+    pub resumes: u64,
     /// Dispatching is held (see [`FpgaRpc::pause`]).
     pub paused: bool,
 }
@@ -200,6 +205,8 @@ impl FpgaRpc {
             reuses: num("reuses"),
             skips: num("skips"),
             replications: num("replications"),
+            preemptions: num("preemptions"),
+            resumes: num("resumes"),
             paused: num("paused") != 0,
         })
     }

@@ -9,17 +9,23 @@
 //! The dispatcher keeps a *virtual clock*: each decision's service time
 //! comes from the shared [`crate::sched::CostModel`] and completions
 //! are replayed into the core in virtual-time order, exactly like the
-//! simulator's event heap.  Real execution (register programming + PJRT
-//! compute through Cynq) happens synchronously in decision order, so
-//! for one trace the simulator and the daemon produce identical
-//! decision sequences — asserted by `tests/sched_parity.rs`.
+//! simulator's event heap.  Reconfigurations are mirrored onto the
+//! hardware at decision time; register programming + PJRT compute are
+//! deferred to the decision's virtual completion, so a `Preempt`
+//! decision can split a batch exactly where the virtual clock says —
+//! the completed slice runs and is checkpointed
+//! (`Cynq::checkpoint_accelerator`), the remainder resumes later
+//! (`Cynq::restore_accelerator`), and no tile is computed twice.  For
+//! one trace the simulator and the daemon produce identical decision
+//! sequences — preemptions included — asserted by
+//! `tests/sched_parity.rs`.
 
 use super::proto::{self, read_msg, write_msg, Job};
 use super::shm::SharedMem;
 use crate::accel::Catalog;
-use crate::driver::{Cynq, LoadedAccel, PhysAddr};
+use crate::driver::{AccelSnapshot, Cynq, LoadedAccel, PhysAddr};
 use crate::json::{arr, f, i, obj, s, Value};
-use crate::sched::{Decision, Policy, SchedCore, SchedCounters};
+use crate::sched::{Decision, DecisionKind, Policy, SchedCore, SchedCounters};
 use crate::shell::ShellBoard;
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap, VecDeque};
@@ -45,6 +51,12 @@ pub struct DaemonStats {
     /// Reconfigurations that created an additional instance of an
     /// already-resident accelerator.
     pub replications: AtomicU64,
+    /// Running requests checkpointed and requeued (time-domain
+    /// preemption; mirrors `SchedCounters::preemptions`).
+    pub preemptions: AtomicU64,
+    /// Requeued remainders re-dispatched (mirrors
+    /// `SchedCounters::resumes`).
+    pub resumes: AtomicU64,
     /// Jobs served while ≥2 instances of their accelerator were
     /// resident (served by a replicated instance).
     pub replicated_jobs: AtomicU64,
@@ -357,11 +369,52 @@ fn finish(b: Batch) {
     let _ = b.reply.send(resp);
 }
 
-/// A submitted proto job awaiting its scheduling decision.
+/// A submitted proto job awaiting its (next) scheduling decision.  A
+/// preempted job re-enters this map carrying the real/modelled time its
+/// completed slices already consumed, plus any failure to report once
+/// its remainder finally completes.
 struct PendingJob {
     job: Job,
     batch: usize,
+    /// Real execution µs accumulated by earlier preempted slices.
+    carry_us: f64,
+    /// Modelled virtual µs consumed by earlier preempted slices.
+    carry_modelled_us: f64,
+    /// A slice already failed; report at the final completion.
+    failed: Option<String>,
 }
+
+impl PendingJob {
+    fn new(job: Job, batch: usize) -> PendingJob {
+        PendingJob { job, batch, carry_us: 0.0, carry_modelled_us: 0.0, failed: None }
+    }
+}
+
+/// A dispatched decision whose execution is deferred to its virtual
+/// completion — or to an earlier preemption of its anchor, which runs
+/// only the completed slice and checkpoints the rest.  Deferral is what
+/// lets the daemon split work *exactly* where the core's `Preempt`
+/// decision says, instead of having eagerly computed the whole batch.
+struct Inflight {
+    d: Decision,
+    job: Job,
+    batch: usize,
+    /// Module handle for execution; `None` when the (re)load failed —
+    /// `err` below then surfaces at completion.
+    handle: Option<LoadedAccel>,
+    err: Option<String>,
+    /// Virtual dispatch time and modelled service time.
+    start_ns: u64,
+    lat_ns: u64,
+    carry_us: f64,
+    carry_modelled_us: f64,
+}
+
+/// Sentinel "anchor" for preemption-check tick entries in the
+/// completion heap: never registered in `inflight`, so popping one only
+/// advances the virtual clock and triggers a round — exactly the
+/// simulator's `Event::Tick`.
+const TICK_ANCHOR: usize = usize::MAX;
 
 /// Fail one admitted-but-unfinished job of a batch, sending the batch
 /// reply when it was the last outstanding unit — the single bookkeeping
@@ -381,6 +434,14 @@ fn fail_job(batches: &mut HashMap<usize, Batch>, batch_id: usize, err: String) {
 /// Blocks on the channel when idle or paused; while work is in flight
 /// it alternates message draining, scheduling rounds and virtual-time
 /// completion replay — never a hot spin.
+///
+/// Execution is *deferred*: a decision mirrors its reconfiguration onto
+/// the hardware immediately (that is when the fabric changes), but
+/// register programming and tile compute run when the decision's
+/// virtual completion is replayed.  A `Preempt` decision arriving
+/// before that point cancels the completion, runs only the tiles the
+/// virtual clock says finished, and checkpoints the accelerator —
+/// so preempted work is split, never recomputed.
 fn dispatcher(mut cynq: Cynq, rx: mpsc::Receiver<Msg>, stats: Arc<DaemonStats>, policy: Policy) {
     let mut core = SchedCore::new(&cynq.shell, cynq.catalog.clone(), policy);
     // Live batches only — finished ones are removed, so a long-lived
@@ -401,6 +462,17 @@ fn dispatcher(mut cynq: Cynq, rx: mpsc::Receiver<Msg>, stats: Arc<DaemonStats>, 
     let mut resident: HashMap<usize, (LoadedAccel, usize)> = HashMap::new();
     // (virtual completion time, seq, anchor) — the simulator's heap.
     let mut completions: BinaryHeap<Reverse<(u64, u64, usize)>> = BinaryHeap::new();
+    // seq -> deferred execution context of a dispatched decision.  An
+    // entry missing at completion-pop means the dispatch was preempted
+    // (or the entry is a tick): the pop only advances virtual time.
+    let mut inflight: HashMap<u64, Inflight> = HashMap::new();
+    // anchor -> seq of the dispatch currently running there.
+    let mut running_seq: HashMap<usize, u64> = HashMap::new();
+    // checkpoint id -> register-file + progress snapshot (the hardware
+    // half of the core's checkpoint store).
+    let mut snapshots: HashMap<u64, AccelSnapshot> = HashMap::new();
+    // One pending preemption-check tick at a time (sim parity).
+    let mut next_tick: Option<u64> = None;
     let mut seq = 0u64;
     let mut vnow = 0u64;
     let mut paused = false;
@@ -442,6 +514,9 @@ fn dispatcher(mut cynq: Cynq, rx: mpsc::Receiver<Msg>, stats: Arc<DaemonStats>, 
                     // bounded by peak concurrency, not connections-ever.
                     if let Some(slot) = user_index.remove(&user) {
                         for req in core.retire_user(slot) {
+                            if let Some(id) = req.resume {
+                                snapshots.remove(&id); // orphaned checkpoint
+                            }
                             if let Some(p) = pending.remove(&req.job) {
                                 fail_job(&mut batches, p.batch, "client disconnected".into());
                             }
@@ -479,7 +554,7 @@ fn dispatcher(mut cynq: Cynq, rx: mpsc::Receiver<Msg>, stats: Arc<DaemonStats>, 
                         // Unknown accelerators fail fast at admission.
                         match core.submit(slot, token, &job.accname, job.tiles, None) {
                             Ok(()) => {
-                                pending.insert(token, PendingJob { job, batch: next_batch });
+                                pending.insert(token, PendingJob::new(job, next_batch));
                                 round_due = true;
                             }
                             Err(e) => {
@@ -506,15 +581,24 @@ fn dispatcher(mut cynq: Cynq, rx: mpsc::Receiver<Msg>, stats: Arc<DaemonStats>, 
         if !round_due {
             // Advance the virtual clock to the next completion(s); the
             // freed modules stay resident for reuse, and the newly
-            // idle capacity warrants a fresh round.
+            // idle capacity warrants a fresh round.  Execution happens
+            // HERE (deferred from dispatch): entries missing from
+            // `inflight` were preempted mid-span (or are ticks) and
+            // only advance the clock — the simulator's exact rule.
             if let Some(&Reverse((t, _, _))) = completions.peek() {
                 vnow = t;
-                while let Some(&Reverse((t2, _, anchor))) = completions.peek() {
+                while let Some(&Reverse((t2, _, _))) = completions.peek() {
                     if t2 != t {
                         break;
                     }
-                    completions.pop();
-                    core.complete(anchor);
+                    let Reverse((_, sq, anchor)) = completions.pop().unwrap();
+                    if let Some(inf) = inflight.remove(&sq) {
+                        if running_seq.get(&anchor) == Some(&sq) {
+                            running_seq.remove(&anchor);
+                        }
+                        core.complete(anchor);
+                        finish_inflight(&mut cynq, &mut snapshots, &mut batches, inf);
+                    }
                 }
                 round_due = core.has_pending();
             }
@@ -523,9 +607,10 @@ fn dispatcher(mut cynq: Cynq, rx: mpsc::Receiver<Msg>, stats: Arc<DaemonStats>, 
         round_due = false;
 
         // One scheduling round at the current virtual time: place as
-        // many requests as the policy allows, executing each decision
-        // for real as it is made.
-        core.begin_round();
+        // many requests as the policy allows.  Reconfigurations are
+        // mirrored onto the hardware immediately; compute is deferred
+        // to the decision's virtual completion (or preemption point).
+        core.begin_round_at(vnow);
         let mut placed = false;
         let mut stopping = false;
         loop {
@@ -538,56 +623,117 @@ fn dispatcher(mut cynq: Cynq, rx: mpsc::Receiver<Msg>, stats: Arc<DaemonStats>, 
                 .fetch_add(t_sched.elapsed().as_nanos() as u64, Ordering::Relaxed);
             stats.sched_decisions.fetch_add(1, Ordering::Relaxed);
             // Publish the core's counters before any client can observe
-            // this decision's batch reply (finish() below) — readers
-            // must never see pre-decision totals.
+            // this decision's batch reply — readers must never see
+            // pre-decision totals.
             mirror_counters(&stats, core.counters());
             placed = true;
+
+            if d.kind == DecisionKind::Preempt {
+                // Cancel the victim's virtual completion, run the slice
+                // the virtual clock says finished, checkpoint the
+                // accelerator, and re-link the proto job so the later
+                // Resume decision finds its context again.
+                if let Some(vseq) = running_seq.remove(&d.anchor) {
+                    if let Some(inf) = inflight.remove(&vseq) {
+                        let done = inf.d.tiles - d.tiles;
+                        let mut carry_us = inf.carry_us;
+                        let mut failed = inf.err;
+                        // A preempted Resume never reaches finish_inflight,
+                        // so its own pending snapshot is consumed (and
+                        // applied) here — same shared helper, so the two
+                        // paths cannot drift.
+                        let restored = take_and_restore_snapshot(&mut cynq, &mut snapshots, &inf);
+                        if failed.is_none() {
+                            let h = inf.handle.expect("loaded dispatch without handle");
+                            let t0 = Instant::now();
+                            let r = restored
+                                .and_then(|()| run_tiles(&mut cynq, h, &inf.job, done))
+                                .and_then(|()| {
+                                    let snap = cynq
+                                        .checkpoint_accelerator(h)
+                                        .map_err(|e| e.to_string())?;
+                                    snapshots
+                                        .insert(d.ckpt.expect("preempt without ckpt id"), snap);
+                                    Ok(())
+                                });
+                            if let Err(e) = r {
+                                failed = Some(e);
+                            }
+                            carry_us += t0.elapsed().as_secs_f64() * 1e6;
+                        }
+                        let carry_modelled_us = inf.carry_modelled_us
+                            + vnow.saturating_sub(inf.start_ns) as f64 / 1e3;
+                        pending.insert(
+                            d.job,
+                            PendingJob {
+                                job: inf.job,
+                                batch: inf.batch,
+                                carry_us,
+                                carry_modelled_us,
+                                failed,
+                            },
+                        );
+                    }
+                }
+                continue;
+            }
 
             // Virtual service latency from the shared cost model —
             // identical to the simulator's for the same decision.
             let busy_others = core.busy_anchors().saturating_sub(1);
             let lat = core.service_ns(&d, busy_others);
-            completions.push(Reverse((vnow + lat, seq, d.anchor)));
-            seq += 1;
+            core.mark_running(&d, vnow, vnow + lat);
 
             let p = pending.remove(&d.job).expect("decision for unknown job token");
-            let t0 = Instant::now();
-            let outcome = execute_decision(&mut cynq, &mut resident, &p.job, &d);
-            stats.jobs.fetch_add(1, Ordering::Relaxed);
+            let mut handle = None;
+            let mut err = p.failed;
+            // Mirror the configuration effect even when an earlier slice
+            // already failed (err pre-set): the core's region map has
+            // recorded this placement either way, and skipping the load
+            // would leave the hardware's residency permanently diverged
+            // at this anchor.  Only compute is gated on `err`.
+            match ensure_module(&mut cynq, &mut resident, &d) {
+                Ok(h) => handle = Some(h),
+                Err(fail) => {
+                    if fail.module_missing {
+                        // The (re)load itself failed: forget the
+                        // core's residency bookkeeping so the next
+                        // decision reconfigures instead of reusing
+                        // a phantom instance forever.
+                        core.evict(d.anchor);
+                    }
+                    if err.is_none() {
+                        err = Some(fail.msg);
+                    }
+                }
+            }
+            if d.kind == DecisionKind::Run {
+                stats.jobs.fetch_add(1, Ordering::Relaxed);
+            }
             if d.replicated {
                 stats.replicated_jobs.fetch_add(1, Ordering::Relaxed);
             }
-            let anchor = d.anchor;
-            let b = batches.get_mut(&p.batch).expect("decision for unknown batch");
-            match outcome {
-                Ok(()) => {
-                    b.latencies_us.push(t0.elapsed().as_secs_f64() * 1e6);
-                    b.modelled_us.push(lat as f64 / 1e3);
-                }
-                Err(fail) => {
-                    if fail.module_missing {
-                        // The (re)load itself failed: forget the core's
-                        // residency bookkeeping for this anchor so the
-                        // next decision reconfigures instead of reusing
-                        // a phantom instance forever. Compute failures
-                        // keep the module resident — it is still
-                        // reusable.
-                        core.evict(anchor);
-                    }
-                    b.error = Some(fail.msg);
-                }
-            }
-            b.remaining -= 1;
-            if b.remaining == 0 {
-                let b = batches.remove(&p.batch).unwrap();
-                finish(b);
-            }
+            completions.push(Reverse((vnow + lat, seq, d.anchor)));
+            running_seq.insert(d.anchor, seq);
+            inflight.insert(
+                seq,
+                Inflight {
+                    job: p.job,
+                    batch: p.batch,
+                    handle,
+                    err,
+                    start_ns: vnow,
+                    lat_ns: lat,
+                    carry_us: p.carry_us,
+                    carry_modelled_us: p.carry_modelled_us,
+                    d,
+                },
+            );
+            seq += 1;
 
-            // Real execution above can be long (multi-tile PJRT): keep
-            // cheap RPCs (connects, mem ops, stats) responsive between
-            // decisions instead of head-of-line blocking them behind
-            // the whole round. State-changing messages are deferred to
-            // the inbox so arrivals keep the simulator's
+            // Keep cheap RPCs (connects, mem ops, stats) responsive
+            // between decisions. State-changing messages are deferred
+            // to the inbox so arrivals keep the simulator's
             // between-rounds cadence (decision-sequence parity).
             while let Ok(m) = rx.try_recv() {
                 match handle_cheap(
@@ -615,15 +761,40 @@ fn dispatcher(mut cynq: Cynq, rx: mpsc::Receiver<Msg>, stats: Arc<DaemonStats>, 
         // next_decision() scan may have deferred users (skips).
         mirror_counters(&stats, core.counters());
 
+        // Requests the core rejected instead of dispatching (unknown
+        // accelerator past admission, or a policy naming an unknown
+        // variant): surface the reason to the waiting client — the
+        // dispatcher itself stays alive.
+        for (req, reason) in core.take_rejected() {
+            if let Some(id) = req.resume {
+                snapshots.remove(&id);
+            }
+            if let Some(p) = pending.remove(&req.job) {
+                fail_job(&mut batches, p.batch, reason);
+            }
+        }
+
         if stopping {
             break 'outer;
         }
-        if !placed && !paused && completions.is_empty() && core.has_pending() {
+
+        // Preemption-check cadence — the core-owned rule the simulator
+        // uses verbatim, so the two paths cannot drift apart on when a
+        // re-check round happens (that would break decision parity).
+        if let Some(t) = core.preempt_tick_due(&mut next_tick, vnow) {
+            completions.push(Reverse((t, seq, TICK_ANCHOR)));
+            seq += 1;
+        }
+
+        if !placed && !paused && inflight.is_empty() && core.has_pending() {
             // Stall guard: nothing running, nothing placeable, so no
             // future completion can unblock these requests — fail them
             // instead of hanging their clients.
             for req in core.drain_pending() {
                 let policy_name = core.policy_name_of(req.user);
+                if let Some(id) = req.resume {
+                    snapshots.remove(&id);
+                }
                 if let Some(p) = pending.remove(&req.job) {
                     fail_job(
                         &mut batches,
@@ -639,6 +810,70 @@ fn dispatcher(mut cynq: Cynq, rx: mpsc::Receiver<Msg>, stats: Arc<DaemonStats>, 
     }
 }
 
+/// Consume a Resume dispatch's pending register-file snapshot and,
+/// when its module is live, restore it.  Shared by normal completion
+/// ([`finish_inflight`]) and preempt-of-a-Resume so the two paths
+/// cannot drift; consuming unconditionally keeps the snapshot map
+/// leak-free even when the dispatch already failed (the snapshot is
+/// then just discarded).  `Ok` for non-Resume dispatches.  A failed
+/// restore rolls back to an error — the module itself is untouched and
+/// stays reusable.
+fn take_and_restore_snapshot(
+    cynq: &mut Cynq,
+    snapshots: &mut HashMap<u64, AccelSnapshot>,
+    inf: &Inflight,
+) -> Result<(), String> {
+    if inf.d.kind != DecisionKind::Resume {
+        return Ok(());
+    }
+    let id = inf.d.ckpt.expect("resume without checkpoint id");
+    let snap = snapshots
+        .remove(&id)
+        .ok_or_else(|| format!("internal: checkpoint {id} has no snapshot"))?;
+    match inf.handle {
+        Some(h) => cynq.restore_accelerator(h, &snap).map_err(|e| e.to_string()),
+        // The (re)load already failed (error recorded at dispatch);
+        // the snapshot is discarded with it.
+        None => Ok(()),
+    }
+}
+
+/// Execute a dispatch at its virtual completion: restore the checkpoint
+/// for resumes, program the operand registers, run every tile, and
+/// settle the batch reply.  Errors recorded at dispatch (failed loads)
+/// surface here too.
+fn finish_inflight(
+    cynq: &mut Cynq,
+    snapshots: &mut HashMap<u64, AccelSnapshot>,
+    batches: &mut HashMap<usize, Batch>,
+    inf: Inflight,
+) {
+    let mut err = inf.err;
+    let t0 = Instant::now();
+    // A Resume consumes its snapshot however it ends — a checkpoint
+    // whose resume errored must not sit in the map forever.
+    let restored = take_and_restore_snapshot(cynq, snapshots, &inf);
+    if err.is_none() {
+        let h = inf.handle.expect("loaded dispatch without handle");
+        if let Err(e) = restored.and_then(|()| run_tiles(cynq, h, &inf.job, inf.d.tiles)) {
+            err = Some(e);
+        }
+    }
+    let b = batches.get_mut(&inf.batch).expect("decision for unknown batch");
+    match err {
+        None => {
+            b.latencies_us.push(inf.carry_us + t0.elapsed().as_secs_f64() * 1e6);
+            b.modelled_us.push(inf.carry_modelled_us + inf.lat_ns as f64 / 1e3);
+        }
+        Some(e) => b.error = Some(e),
+    }
+    b.remaining -= 1;
+    if b.remaining == 0 {
+        let b = batches.remove(&inf.batch).unwrap();
+        finish(b);
+    }
+}
+
 /// Publish the core's [`SchedCounters`] into the daemon's atomics —
 /// the single scheduling-counter source both paths report from.
 fn mirror_counters(stats: &DaemonStats, c: &SchedCounters) {
@@ -646,6 +881,8 @@ fn mirror_counters(stats: &DaemonStats, c: &SchedCounters) {
     stats.reuse_hits.store(c.reuses, Ordering::Relaxed);
     stats.skips.store(c.skips, Ordering::Relaxed);
     stats.replications.store(c.replications, Ordering::Relaxed);
+    stats.preemptions.store(c.preemptions, Ordering::Relaxed);
+    stats.resumes.store(c.resumes, Ordering::Relaxed);
 }
 
 /// Answer a message that needs no scheduling-state change (mem ops,
@@ -696,6 +933,8 @@ fn stats_value(core: &SchedCore, paused: bool) -> Value {
         ("reuses", i(c.reuses as i64)),
         ("skips", i(c.skips as i64)),
         ("replications", i(c.replications as i64)),
+        ("preemptions", i(c.preemptions as i64)),
+        ("resumes", i(c.resumes as i64)),
         ("paused", i(paused as i64)),
     ])
 }
@@ -730,18 +969,17 @@ struct ExecFailure {
     module_missing: bool,
 }
 
-/// Mirror one core decision onto the hardware: evict overlapped
-/// modules, (re)load the chosen variant at its anchor, program the
-/// registers and run every tile to completion.
-fn execute_decision(
+/// Mirror a decision's *configuration* effect onto the hardware at
+/// schedule time: evict overlapped modules and (re)load the chosen
+/// variant at its anchor, or look up the reused resident instance.
+/// Compute is deferred (see [`finish_inflight`] / the preempt branch).
+fn ensure_module(
     cynq: &mut Cynq,
     resident: &mut HashMap<usize, (LoadedAccel, usize)>,
-    job: &Job,
     d: &Decision,
-) -> Result<(), ExecFailure> {
+) -> Result<LoadedAccel, ExecFailure> {
     let missing = |msg: String| ExecFailure { msg, module_missing: true };
-    let compute = |msg: String| ExecFailure { msg, module_missing: false };
-    let handle = if d.reconfigure {
+    if d.reconfigure {
         // The core already replaced these modules in its bookkeeping;
         // evict every resident module overlapping the new span.
         let stale: Vec<usize> = resident
@@ -758,23 +996,26 @@ fn execute_decision(
             .load_accelerator_at(&d.accel, &d.variant, d.anchor)
             .map_err(|e| missing(e.to_string()))?;
         resident.insert(d.anchor, (h, d.span));
-        h
+        Ok(h)
     } else {
         match resident.get(&d.anchor) {
-            Some(&(h, _)) => h,
-            None => {
-                return Err(missing(format!(
-                    "internal: reuse at unresident anchor {}",
-                    d.anchor
-                )))
-            }
+            Some(&(h, _)) => Ok(h),
+            None => Err(missing(format!(
+                "internal: reuse at unresident anchor {}",
+                d.anchor
+            ))),
         }
-    };
-    for (reg, val) in &job.params {
-        cynq.write_reg(handle, reg, PhysAddr(*val)).map_err(|e| compute(e.to_string()))?;
     }
-    for _ in 0..d.tiles {
-        cynq.run(handle).map_err(|e| compute(e.to_string()))?;
+}
+
+/// Program the job's operand registers and run `tiles` work items.
+/// Failures keep the module resident — it stays reusable.
+fn run_tiles(cynq: &mut Cynq, h: LoadedAccel, job: &Job, tiles: usize) -> Result<(), String> {
+    for (reg, val) in &job.params {
+        cynq.write_reg(h, reg, PhysAddr(*val)).map_err(|e| e.to_string())?;
+    }
+    for _ in 0..tiles {
+        cynq.run(h).map_err(|e| e.to_string())?;
     }
     Ok(())
 }

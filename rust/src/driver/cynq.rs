@@ -73,6 +73,22 @@ struct Slot {
     anchor: usize,
     span: usize,
     regs: RegisterFile,
+    /// Work items completed since load/restore — the progress counter a
+    /// checkpoint captures so a resumed batch continues, not restarts.
+    tiles_done: u64,
+}
+
+/// Captured execution context of a loaded accelerator (preemptive
+/// time-multiplexing, §4.4's time domain): the Listing-3 register file
+/// plus the progress counter of the interrupted batch.  Produced by
+/// [`Cynq::checkpoint_accelerator`], consumed by
+/// [`Cynq::restore_accelerator`].
+#[derive(Debug, Clone)]
+pub struct AccelSnapshot {
+    pub accel: String,
+    pub variant: String,
+    pub tiles_done: u64,
+    regs: RegisterFile,
 }
 
 /// The library context (one per FPGA).
@@ -229,6 +245,7 @@ impl Cynq {
             anchor,
             span: v.regions,
             regs: RegisterFile::new(&accel.registers),
+            tiles_done: 0,
         };
         let idx = self.slots.len();
         self.slots.push(Some(slot));
@@ -313,6 +330,7 @@ impl Cynq {
         }
         if let Some(slot) = self.slots.get_mut(h.0).and_then(Option::as_mut) {
             slot.regs.complete();
+            slot.tiles_done += 1;
         }
         // Modelled FPGA latency: DMA (memsim) + compute (cycle model).
         let mem = crate::memsim::DdrModel::new(crate::memsim::config_for(self.shell.board));
@@ -322,6 +340,55 @@ impl Cynq {
         let modelled = Duration::from_nanos((variant.compute_ns() + dma_ns) as u64);
         self.modelled_busy += modelled;
         Ok(modelled)
+    }
+
+    /// Checkpoint a loaded accelerator: snapshot its register file and
+    /// progress counter so the batch can be resumed later — possibly
+    /// after the module was replaced and reloaded (the scheduler's
+    /// `Preempt`/`Resume` decisions drive this on the daemon path).
+    pub fn checkpoint_accelerator(&self, h: LoadedAccel) -> Result<AccelSnapshot, CynqError> {
+        let slot = self
+            .slots
+            .get(h.0)
+            .and_then(Option::as_ref)
+            .ok_or(CynqError::BadHandle(h.0))?;
+        Ok(AccelSnapshot {
+            accel: slot.accel.clone(),
+            variant: slot.variant.clone(),
+            tiles_done: slot.tiles_done,
+            regs: slot.regs.clone(),
+        })
+    }
+
+    /// Restore a checkpoint onto a loaded accelerator.  The target must
+    /// run the snapshot's exact accelerator/variant (the register file
+    /// layout and progress semantics are variant-specific); on mismatch
+    /// the slot is left untouched — rollback-on-failure mirroring
+    /// [`Cynq::load_accelerator_at`]'s no-partial-effect contract.
+    pub fn restore_accelerator(
+        &mut self,
+        h: LoadedAccel,
+        snap: &AccelSnapshot,
+    ) -> Result<(), CynqError> {
+        let slot = self
+            .slots
+            .get_mut(h.0)
+            .and_then(Option::as_mut)
+            .ok_or(CynqError::BadHandle(h.0))?;
+        if slot.accel != snap.accel || slot.variant != snap.variant {
+            return Err(CynqError::Driver(format!(
+                "snapshot of {}/{} cannot restore onto {}/{}",
+                snap.accel, snap.variant, slot.accel, slot.variant
+            )));
+        }
+        slot.regs = snap.regs.clone();
+        slot.tiles_done = snap.tiles_done;
+        Ok(())
+    }
+
+    /// Work items completed on a live handle since load/restore.
+    pub fn progress_of(&self, h: LoadedAccel) -> Option<u64> {
+        self.slots.get(h.0).and_then(Option::as_ref).map(|s| s.tiles_done)
     }
 
     /// Which variant a handle currently runs (for tests/inspection).
@@ -491,6 +558,73 @@ mod tests {
         fpga.unload(h).unwrap();
         assert!(matches!(fpga.run(h), Err(CynqError::BadHandle(_))));
         assert!(matches!(fpga.unload(h), Err(CynqError::BadHandle(_))));
+    }
+
+    #[test]
+    fn checkpoint_restore_roundtrip() {
+        let _g = LOCK.lock().unwrap();
+        let mut fpga = open();
+        let (h, _) = fpga.load_accelerator("vadd", Some("vadd_v1")).unwrap();
+        let pa = fpga.alloc(4 * 4096).unwrap();
+        fpga.write_reg(h, "a_op", pa).unwrap();
+        assert_eq!(fpga.progress_of(h), Some(0));
+        let snap = fpga.checkpoint_accelerator(h).unwrap();
+        assert_eq!((snap.accel.as_str(), snap.variant.as_str()), ("vadd", "vadd_v1"));
+        assert_eq!(snap.tiles_done, 0);
+
+        // Replace the module entirely, then bring vadd back and restore:
+        // the programmed register survives the checkpoint, not the slot.
+        fpga.unload(h).unwrap();
+        let (h2, _) = fpga.load_accelerator("vadd", Some("vadd_v1")).unwrap();
+        fpga.restore_accelerator(h2, &snap).unwrap();
+        // a_op was restored from the snapshot without reprogramming.
+        // (run() would still fail on the unprogrammed b_op/c_out, which
+        // is exactly the state the checkpoint captured.)
+        assert_eq!(fpga.progress_of(h2), Some(0));
+
+        // Mismatched restore is rejected and leaves the slot untouched.
+        let (h3, _) = fpga.load_accelerator("dct", None).unwrap();
+        assert!(matches!(
+            fpga.restore_accelerator(h3, &snap),
+            Err(CynqError::Driver(_))
+        ));
+        assert_eq!(fpga.progress_of(h3), Some(0));
+        // Stale handles rejected for both operations.
+        fpga.unload(h2).unwrap();
+        assert!(matches!(fpga.checkpoint_accelerator(h2), Err(CynqError::BadHandle(_))));
+        assert!(matches!(
+            fpga.restore_accelerator(h2, &snap),
+            Err(CynqError::BadHandle(_))
+        ));
+    }
+
+    #[test]
+    fn progress_counter_tracks_completed_tiles() {
+        let _g = LOCK.lock().unwrap();
+        if !crate::testutil::pjrt_available() {
+            eprintln!("skipping: PJRT backend unavailable (offline stub)");
+            return;
+        }
+        let mut fpga = open();
+        let pa = fpga.alloc(4 * 4096).unwrap();
+        let pb = fpga.alloc(4 * 4096).unwrap();
+        let pc = fpga.alloc(4 * 4096).unwrap();
+        fpga.write_f32(pa, &vec![1.0; 4096]).unwrap();
+        fpga.write_f32(pb, &vec![2.0; 4096]).unwrap();
+        let (h, _) = fpga.load_accelerator("vadd", Some("vadd_v1")).unwrap();
+        fpga.write_reg(h, "a_op", pa).unwrap();
+        fpga.write_reg(h, "b_op", pb).unwrap();
+        fpga.write_reg(h, "c_out", pc).unwrap();
+        fpga.run(h).unwrap();
+        fpga.run(h).unwrap();
+        assert_eq!(fpga.progress_of(h), Some(2));
+        let snap = fpga.checkpoint_accelerator(h).unwrap();
+        assert_eq!(snap.tiles_done, 2);
+        fpga.run(h).unwrap();
+        assert_eq!(fpga.progress_of(h), Some(3));
+        // Restore rewinds the progress counter to the checkpoint.
+        fpga.restore_accelerator(h, &snap).unwrap();
+        assert_eq!(fpga.progress_of(h), Some(2));
     }
 
     #[test]

@@ -10,6 +10,6 @@ mod regs;
 mod memory;
 mod cynq;
 
-pub use cynq::{Cynq, CynqError, LoadedAccel};
+pub use cynq::{AccelSnapshot, Cynq, CynqError, LoadedAccel};
 pub use memory::{DataManager, MemError, PhysAddr};
 pub use regs::{ControlBits, RegisterFile};

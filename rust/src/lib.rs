@@ -38,11 +38,15 @@
 //! decision sequences and report identical
 //! [`sched::SchedCounters`] — see `tests/sched_parity.rs`.  Each
 //! decision is a [`sched::Decision`] (user, accelerator, variant,
-//! anchor, span, reuse-vs-reconfigure, replication flag); tenants pick
+//! anchor, span, reuse-vs-reconfigure, replication flag, and a
+//! [`sched::DecisionKind`] distinguishing fresh runs from
+//! checkpoint/restore `Preempt`/`Resume` steps); tenants pick
 //! their policy per connection via `FpgaRpc::set_policy`, and new
 //! policies (fairness, preemption, ...) are `SchedPolicy`
 //! implementations registered with [`sched::SchedCore::register_policy`]
-//! — not forks of the dispatch loops.
+//! — not forks of the dispatch loops.  The core/policy/sim/daemon
+//! split, the decision lifecycle and the preemption state machine are
+//! documented in `src/sched/ARCHITECTURE.md`.
 
 pub mod json;
 pub mod fabric;

@@ -130,8 +130,8 @@ pub fn vs_paper(measured: f64, paper: f64, unit: &str) -> String {
 /// the daemon (`DaemonStats`) report from.
 pub fn sched_summary(label: &str, c: &crate::sched::SchedCounters) -> String {
     format!(
-        "{label}: {} reconfigs, {} reuses, {} skips, {} replications",
-        c.reconfigs, c.reuses, c.skips, c.replications
+        "{label}: {} reconfigs, {} reuses, {} skips, {} replications, {} preemptions, {} resumes",
+        c.reconfigs, c.reuses, c.skips, c.replications, c.preemptions, c.resumes
     )
 }
 
@@ -187,8 +187,13 @@ mod tests {
             reuses: 9,
             skips: 2,
             replications: 1,
+            preemptions: 4,
+            resumes: 4,
         };
         let s = sched_summary("elastic", &c);
-        assert_eq!(s, "elastic: 3 reconfigs, 9 reuses, 2 skips, 1 replications");
+        assert_eq!(
+            s,
+            "elastic: 3 reconfigs, 9 reuses, 2 skips, 1 replications, 4 preemptions, 4 resumes"
+        );
     }
 }

@@ -23,7 +23,7 @@
 //! needed* — or `None` to skip the user this round (e.g. to wait for a
 //! busy instance instead of paying a reconfiguration).
 //!
-//! Two seed implementations ship:
+//! Three seed implementations ship:
 //!
 //! - [`Elastic`] — the paper's policy: **reuse** an idle instance
 //!   without reconfiguring, otherwise **replace** free capacity with
@@ -31,8 +31,41 @@
 //!   aware), growing to **multi-region spans** when a single tenant is
 //!   active, and **skipping** when a busy instance makes waiting
 //!   cheaper than reconfiguring (§4.4.3's reconfiguration avoidance).
+//!   [`Elastic::preemptive`] additionally checkpoints a replicated
+//!   tenant's span when another tenant is starved.
 //! - [`Fixed`] — the baseline: one static 1-region module per user,
 //!   run-to-completion.
+//! - [`Quantum`] — round-robin time-slicing: FOS's cooperative §4.4.3
+//!   scheduling made preemptive.  A request that has held its module
+//!   past the quantum while another user is starved is checkpointed
+//!   and its remainder requeued.
+//!
+//! ## Preemption (time-domain elasticity)
+//!
+//! FOS arbitrates the fabric "in both time and spatial domain"; the
+//! spatial half is the placement logic above, the time half is
+//! **preemptive checkpoint/restore**.  When a policy cannot place a
+//! request it may name a running victim instead
+//! ([`SchedPolicy::preempt`]).  The core then
+//!
+//! 1. computes the victim's progress from the running record the
+//!    harness registered ([`SchedCore::mark_running`]) — tiles
+//!    completed vs tiles total at the current virtual time,
+//! 2. stores a [`Checkpoint`] (accelerator, variant, progress) under a
+//!    fresh checkpoint id,
+//! 3. requeues the *remaining* tiles at the front of the victim's
+//!    queue, pinned to the checkpointed variant, and
+//! 4. emits a [`DecisionKind::Preempt`] decision so both harnesses
+//!    mirror the effect (the simulator cancels the victim's completion
+//!    event; the daemon runs the completed slice for real and snapshots
+//!    the register file through `Cynq::checkpoint_accelerator`).
+//!
+//! The requeued remainder is dispatched later as a
+//! [`DecisionKind::Resume`] decision whose service time carries the
+//! checkpoint + restore overhead ([`CostModel::checkpoint_ns`] /
+//! [`CostModel::restore_ns`]).  Harnesses re-run a scheduling round
+//! every [`PREEMPT_TICK_NS`] of virtual time while users are starved
+//! and work is running, so a quantum expiring mid-span is observed.
 //!
 //! ## Adding a new policy
 //!
@@ -58,7 +91,14 @@ use crate::accel::{Accelerator, Catalog};
 use crate::memsim::{config_for, DdrModel};
 use crate::reconfig::FpgaManager;
 use crate::shell::Shell;
-use std::collections::{BTreeSet, VecDeque};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+
+/// Virtual period at which harnesses re-run a scheduling round while at
+/// least one user is starved (deferred) and work is running — the
+/// cadence at which expired quanta are observed.  Both the simulator
+/// and the daemon schedule these ticks with identical rules, so the
+/// decision sequences stay in lockstep.
+pub const PREEMPT_TICK_NS: u64 = 5_000_000;
 
 /// Built-in scheduling policy selector (the daemon protocol's knob).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -67,6 +107,11 @@ pub enum Policy {
     Elastic,
     /// Baseline: one fixed 1-region module per user, run-to-completion.
     Fixed,
+    /// Round-robin time-slicing with checkpoint/restore preemption.
+    Quantum,
+    /// [`Policy::Elastic`] plus starvation-driven preemption of
+    /// replicated spans.
+    ElasticPreempt,
 }
 
 impl Policy {
@@ -74,6 +119,8 @@ impl Policy {
         match self {
             Policy::Elastic => "elastic",
             Policy::Fixed => "fixed",
+            Policy::Quantum => "quantum",
+            Policy::ElasticPreempt => "elastic-pre",
         }
     }
 
@@ -113,10 +160,29 @@ pub struct Request {
     pub tiles: usize,
     /// Pin a specific implementation variant (None = policy's choice).
     pub pin: Option<String>,
+    /// `Some(checkpoint id)`: this request is the requeued remainder of
+    /// a preempted dispatch and must restore that checkpoint.
+    pub resume: Option<u64>,
+}
+
+/// What a [`Decision`] asks the harness to do.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DecisionKind {
+    /// Fresh dispatch of a queued request.
+    Run,
+    /// Dispatch of a preempted request's remainder: restore the
+    /// checkpoint named by [`Decision::ckpt`], then run the remaining
+    /// tiles.
+    Resume,
+    /// Checkpoint the request running at [`Decision::anchor`] *now*:
+    /// its completion is cancelled, the span is idle again, and the
+    /// remaining [`Decision::tiles`] re-enter the victim's queue.
+    Preempt,
 }
 
 /// A committed scheduling decision: run `user`'s head request on the
-/// module (re)configured at `anchor..anchor+span`.
+/// module (re)configured at `anchor..anchor+span` — or, for
+/// [`DecisionKind::Preempt`], checkpoint the request running there.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Decision {
     pub user: usize,
@@ -125,12 +191,20 @@ pub struct Decision {
     pub variant: String,
     pub anchor: usize,
     pub span: usize,
+    /// Work items this decision covers. For `Preempt` decisions: the
+    /// tiles *remaining* (requeued); the victim completed
+    /// `original - tiles` of its work.
     pub tiles: usize,
     /// `true`: a partial reconfiguration was paid; `false`: reuse.
     pub reconfigure: bool,
     /// Another instance of the same accelerator is resident elsewhere
     /// on the fabric after this placement (replication, Fig 20).
     pub replicated: bool,
+    /// What the harness must do with this decision.
+    pub kind: DecisionKind,
+    /// Checkpoint id: created by a `Preempt`, consumed by the matching
+    /// `Resume` (the daemon keys its register-file snapshots by it).
+    pub ckpt: Option<u64>,
 }
 
 /// Counters both the simulator and the daemon report from.
@@ -146,6 +220,10 @@ pub struct SchedCounters {
     /// Reconfigurations that created an *additional* instance of an
     /// already-resident accelerator (replication events).
     pub replications: u64,
+    /// Running requests checkpointed and requeued ([`DecisionKind::Preempt`]).
+    pub preemptions: u64,
+    /// Requeued remainders re-dispatched ([`DecisionKind::Resume`]).
+    pub resumes: u64,
 }
 
 /// Virtual-time latency model shared by the simulator and the daemon —
@@ -185,6 +263,60 @@ impl CostModel {
     ) -> f64 {
         self.dma_ns(accel, concurrent) + variant.compute_ns()
     }
+
+    /// Context save of a running `span`-region module: PCAP readback of
+    /// its register file + progress counters and in-flight state drain.
+    /// Modelled as a quarter of the span's partial-bitstream load.
+    pub fn checkpoint_ns(&self, span: usize) -> u64 {
+        self.reconfig_ns(span) / 4
+    }
+
+    /// Context restore before re-arming a checkpointed module
+    /// (symmetric to [`CostModel::checkpoint_ns`]).
+    pub fn restore_ns(&self, span: usize) -> u64 {
+        self.reconfig_ns(span) / 4
+    }
+}
+
+/// Read-only view of one running request, handed to
+/// [`SchedPolicy::preempt`] so policies can pick a victim.  Registered
+/// by the harness through [`SchedCore::mark_running`].
+#[derive(Debug, Clone)]
+pub struct RunningSnap {
+    pub user: usize,
+    pub job: u64,
+    pub accel: String,
+    pub variant: String,
+    pub anchor: usize,
+    pub span: usize,
+    /// Tiles this dispatch covers.
+    pub tiles: usize,
+    /// Virtual dispatch time.
+    pub start: u64,
+    /// Virtual completion time the harness scheduled.
+    pub end: u64,
+    /// Leading non-compute part of `[start, end)`: reconfiguration
+    /// and/or restore overhead before the first tile starts.
+    pub setup: u64,
+    /// This dispatch is itself the remainder of an earlier preemption.
+    pub resumed: bool,
+}
+
+/// Progress record of a preempted request, stored until its remainder
+/// is resumed.  The scheduler-core half of checkpoint/restore: the
+/// daemon pairs it with a `Cynq::checkpoint_accelerator` register-file
+/// snapshot keyed by the same checkpoint id.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Checkpoint {
+    pub accel: String,
+    pub variant: String,
+    /// Anchor the victim was running at (a restore may relocate).
+    pub anchor: usize,
+    pub span: usize,
+    /// Tiles completed before the preemption.
+    pub tiles_done: usize,
+    /// Tiles of the original dispatch.
+    pub tiles_total: usize,
 }
 
 /// Read-only region state handed to policies, with the span queries the
@@ -347,19 +479,112 @@ pub trait SchedPolicy: Send {
     fn place(&mut self, regions: &RegionMap, costs: &CostModel, req: &PlaceReq)
         -> Option<Placement>;
 
+    /// `true` when this policy may ever answer [`SchedPolicy::preempt`]
+    /// with a victim.  Harnesses only schedule [`PREEMPT_TICK_NS`]
+    /// re-check rounds when a *preemption-capable* policy deferred a
+    /// user, so run-to-completion policies keep the seed's exact event
+    /// cadence (and zero tick overhead).  Default: `false`.
+    fn can_preempt(&self) -> bool {
+        false
+    }
+
+    /// Consulted when [`SchedPolicy::place`] returned `None`: name the
+    /// anchor of a running request to checkpoint instead of deferring
+    /// `req`'s user, or `None` to accept the deferral.  `now` is the
+    /// current virtual time; `running` lists every in-flight dispatch
+    /// in anchor order.  Default: never preempt (run-to-completion).
+    fn preempt(
+        &mut self,
+        _regions: &RegionMap,
+        _costs: &CostModel,
+        _running: &[RunningSnap],
+        _req: &PlaceReq,
+        _now: u64,
+    ) -> Option<usize> {
+        None
+    }
+
     /// `user`'s slot was retired ([`SchedCore::retire_user`]): drop any
     /// per-user state so a recycled slot starts clean. Default: none.
     fn retire(&mut self, _user: usize) {}
 }
 
 /// FOS resource-elastic placement: reuse > replace-with-best-scoring >
-/// wait-for-busy-instance (§4.4.3).
+/// wait-for-busy-instance (§4.4.3).  With
+/// [`Elastic::preemptive`], a starved tenant may additionally
+/// checkpoint one span of a tenant running replicated instances —
+/// trading a little of one user's parallelism for another user's
+/// liveness (the higher-value placement of the two).
 #[derive(Debug, Default)]
-pub struct Elastic;
+pub struct Elastic {
+    /// Starvation-driven preemption enabled (the "elastic-pre" seed).
+    preemptive: bool,
+}
+
+impl Elastic {
+    /// The preemptive flavour, registered as `"elastic-pre"`.
+    pub fn preemptive() -> Elastic {
+        Elastic { preemptive: true }
+    }
+}
 
 impl SchedPolicy for Elastic {
     fn name(&self) -> &'static str {
-        "elastic"
+        if self.preemptive {
+            "elastic-pre"
+        } else {
+            "elastic"
+        }
+    }
+
+    fn can_preempt(&self) -> bool {
+        self.preemptive
+    }
+
+    fn preempt(
+        &mut self,
+        _regions: &RegionMap,
+        costs: &CostModel,
+        running: &[RunningSnap],
+        req: &PlaceReq,
+        now: u64,
+    ) -> Option<usize> {
+        if !self.preemptive {
+            return None;
+        }
+        // Only a genuinely starved tenant (nothing running anywhere)
+        // may preempt, and only from a tenant holding >= 2 spans —
+        // rebalancing replicated parallelism, never taking a user's
+        // last module.
+        if running.iter().any(|r| r.user == req.user) {
+            return None;
+        }
+        let mut best: Option<(usize, u64, usize)> = None; // (share, elapsed, anchor)
+        for r in running {
+            if r.user == req.user {
+                continue;
+            }
+            let share = running.iter().filter(|x| x.user == r.user).count();
+            if share < 2 {
+                continue;
+            }
+            let elapsed = now.saturating_sub(r.start);
+            if elapsed == 0 {
+                continue; // placed this very round
+            }
+            // Worth splitting only when the remaining work dwarfs the
+            // checkpoint + restore + eventual re-reconfiguration bill.
+            let remaining = r.end.saturating_sub(now);
+            let overhead =
+                costs.checkpoint_ns(r.span) + costs.restore_ns(r.span) + costs.reconfig_ns(1);
+            if remaining <= 2 * overhead {
+                continue;
+            }
+            if best.map(|(s, e, _)| (share, elapsed) > (s, e)).unwrap_or(true) {
+                best = Some((share, elapsed, r.anchor));
+            }
+        }
+        best.map(|(_, _, a)| a)
     }
 
     fn place(
@@ -534,6 +759,93 @@ impl SchedPolicy for Fixed {
     }
 }
 
+/// Round-robin time-slicing (§4.4's time domain made preemptive):
+/// requests run on the smallest variant; when a user is starved, the
+/// longest-running request past the quantum is checkpointed and its
+/// remainder requeued.  The paper's cooperative scheduler relinquishes
+/// only *between* requests — this policy also relinquishes *within*
+/// one, so a single streaming request can no longer monopolise a
+/// module (the THEMIS-style fairness substrate).
+#[derive(Debug)]
+pub struct Quantum {
+    /// Minimum virtual run time before a request may be preempted.
+    pub quantum_ns: u64,
+}
+
+impl Default for Quantum {
+    fn default() -> Quantum {
+        // ~5 single-region reconfigurations on the Ultra96: long enough
+        // that checkpoint/restore overhead stays marginal, short
+        // against any streaming request worth preempting.
+        Quantum { quantum_ns: 20_000_000 }
+    }
+}
+
+impl SchedPolicy for Quantum {
+    fn name(&self) -> &'static str {
+        "quantum"
+    }
+
+    fn can_preempt(&self) -> bool {
+        true
+    }
+
+    fn place(
+        &mut self,
+        regions: &RegionMap,
+        _costs: &CostModel,
+        req: &PlaceReq,
+    ) -> Option<Placement> {
+        let v = match req.pin {
+            Some(p) => req.accel.variant(p)?,
+            None => req.accel.smallest_variant(),
+        };
+        // Reuse an idle resident instance of exactly this variant.
+        for (i, r) in regions.iter().enumerate() {
+            if r.busy || r.tail_of.is_some() {
+                continue;
+            }
+            if let Some(l) = &r.loaded {
+                if l.accel == req.accel.name && l.variant == v.name && regions.span_idle(i, l.span)
+                {
+                    return Some(Placement { anchor: i, variant: v.name.clone(), reconfigure: false });
+                }
+            }
+        }
+        let anchor = regions.find_free_span(v.regions)?;
+        Some(Placement { anchor, variant: v.name.clone(), reconfigure: true })
+    }
+
+    fn preempt(
+        &mut self,
+        _regions: &RegionMap,
+        costs: &CostModel,
+        running: &[RunningSnap],
+        req: &PlaceReq,
+        now: u64,
+    ) -> Option<usize> {
+        let mut best: Option<(u64, usize)> = None; // (elapsed, anchor)
+        for r in running {
+            if r.user == req.user {
+                continue; // preempting yourself buys no fairness
+            }
+            let elapsed = now.saturating_sub(r.start);
+            if elapsed < self.quantum_ns {
+                continue;
+            }
+            // Not worth splitting when the victim is nearly done.
+            let remaining = r.end.saturating_sub(now);
+            if remaining <= costs.checkpoint_ns(r.span) + costs.restore_ns(r.span) {
+                continue;
+            }
+            if best.map(|(e, _)| elapsed > e).unwrap_or(true) {
+                best = Some((elapsed, r.anchor));
+            }
+        }
+        best.map(|(_, a)| a)
+    }
+}
+
 /// Decision-log ring cap: plenty for tests/benches, bounded for a
 /// long-lived daemon (overflow is counted, oldest entries dropped).
 const LOG_CAP: usize = 65_536;
@@ -548,17 +860,35 @@ pub struct SchedCore {
     rr: usize,
     /// Users deferred in the current round (reset by `begin_round`).
     skip: Vec<usize>,
+    /// A deferred user of the current round is routed to a
+    /// preemption-capable policy — the signal harnesses gate their
+    /// [`PREEMPT_TICK_NS`] re-check rounds on.
+    skip_preemptive: bool,
     counters: SchedCounters,
     log: VecDeque<Decision>,
     log_dropped: u64,
     policies: Vec<Box<dyn SchedPolicy>>,
     default_policy: usize,
     user_policy: Vec<usize>,
+    /// Current virtual time (monotone; advanced by `begin_round_at`).
+    now: u64,
+    /// In-flight dispatches by anchor (ordered for deterministic
+    /// victim iteration), registered via [`SchedCore::mark_running`].
+    running: BTreeMap<usize, RunningSnap>,
+    /// Progress records of preempted requests, by checkpoint id.
+    checkpoints: BTreeMap<u64, Checkpoint>,
+    next_ckpt: u64,
+    /// Requests dropped by `next_decision` instead of panicking
+    /// (unknown accelerator / policy chose an unknown variant); the
+    /// harness drains these via [`SchedCore::take_rejected`] and fails
+    /// the matching client replies.
+    rejected: Vec<(Request, String)>,
 }
 
 impl SchedCore {
     /// Build a core for a shell with the built-in policies registered
-    /// ([`Elastic`] and [`Fixed`]) and `default` routing new users.
+    /// ([`Elastic`], [`Fixed`], [`Quantum`], [`Elastic::preemptive`])
+    /// and `default` routing new users.
     pub fn new(shell: &Shell, catalog: Catalog, default: Policy) -> SchedCore {
         SchedCore {
             catalog,
@@ -567,15 +897,28 @@ impl SchedCore {
             queues: Vec::new(),
             rr: 0,
             skip: Vec::new(),
+            skip_preemptive: false,
             counters: SchedCounters::default(),
             log: VecDeque::new(),
             log_dropped: 0,
-            policies: vec![Box::<Elastic>::default(), Box::<Fixed>::default()],
+            policies: vec![
+                Box::<Elastic>::default(),
+                Box::<Fixed>::default(),
+                Box::<Quantum>::default(),
+                Box::new(Elastic::preemptive()),
+            ],
             default_policy: match default {
                 Policy::Elastic => 0,
                 Policy::Fixed => 1,
+                Policy::Quantum => 2,
+                Policy::ElasticPreempt => 3,
             },
             user_policy: Vec::new(),
+            now: 0,
+            running: BTreeMap::new(),
+            checkpoints: BTreeMap::new(),
+            next_ckpt: 0,
+            rejected: Vec::new(),
         }
     }
 
@@ -636,6 +979,7 @@ impl SchedCore {
             accel: accel.to_string(),
             tiles: tiles.max(1),
             pin: pin.map(str::to_string),
+            resume: None,
         });
         Ok(())
     }
@@ -651,7 +995,94 @@ impl SchedCore {
     /// Start a dispatch round: deferred users become eligible again.
     /// Call after every (virtual or real) time advance.
     pub fn begin_round(&mut self) {
+        let now = self.now;
+        self.begin_round_at(now);
+    }
+
+    /// [`SchedCore::begin_round`] with an explicit virtual timestamp —
+    /// what both harnesses call.  The clock drives preemption progress
+    /// accounting and is monotone (stale timestamps are ignored).
+    pub fn begin_round_at(&mut self, now: u64) {
+        self.now = self.now.max(now);
         self.skip.clear();
+        self.skip_preemptive = false;
+    }
+
+    /// The shared preemption-tick cadence rule, called by a harness
+    /// right after each scheduling round: when a preemption-capable
+    /// policy deferred a user, work is running, and no tick is already
+    /// pending past `now`, returns the virtual time at which the
+    /// harness must schedule its next re-check round (and records it in
+    /// the harness-owned `next_tick` slot).  Single-sourced here so the
+    /// simulator and the daemon can never drift apart on it — that
+    /// would silently break decision parity.
+    pub fn preempt_tick_due(&self, next_tick: &mut Option<u64>, now: u64) -> Option<u64> {
+        if self.skip_preemptive
+            && !self.running.is_empty()
+            && next_tick.map_or(true, |t| t <= now)
+        {
+            let t = now + PREEMPT_TICK_NS;
+            *next_tick = Some(t);
+            Some(t)
+        } else {
+            None
+        }
+    }
+
+    /// In-flight dispatches currently registered.
+    pub fn running_count(&self) -> usize {
+        self.running.len()
+    }
+
+    /// Register a dispatched decision's virtual execution window so the
+    /// core can account preemption progress.  Call right after
+    /// computing the decision's service time; `Preempt` decisions are
+    /// ignored.  The record is dropped by [`SchedCore::complete`] or by
+    /// a later preemption of the anchor.
+    pub fn mark_running(&mut self, d: &Decision, start: u64, end: u64) {
+        if d.kind == DecisionKind::Preempt {
+            return;
+        }
+        let mut setup = if d.reconfigure { self.costs.reconfig_ns(d.span) } else { 0 };
+        if d.kind == DecisionKind::Resume {
+            setup += self.costs.checkpoint_ns(d.span) + self.costs.restore_ns(d.span);
+        }
+        let setup = setup.min(end.saturating_sub(start));
+        self.running.insert(
+            d.anchor,
+            RunningSnap {
+                user: d.user,
+                job: d.job,
+                accel: d.accel.clone(),
+                variant: d.variant.clone(),
+                anchor: d.anchor,
+                span: d.span,
+                tiles: d.tiles,
+                start,
+                end,
+                setup,
+                resumed: d.kind == DecisionKind::Resume,
+            },
+        );
+    }
+
+    /// Requests `next_decision` rejected (with the reason) instead of
+    /// panicking — unknown accelerator past admission or a policy
+    /// naming an unknown variant.  The harness fails the matching
+    /// replies; the dispatcher stays alive.
+    pub fn take_rejected(&mut self) -> Vec<(Request, String)> {
+        std::mem::take(&mut self.rejected)
+    }
+
+    /// Progress record of a live checkpoint (created by a `Preempt`
+    /// decision, consumed by its `Resume`).
+    pub fn checkpoint(&self, id: u64) -> Option<&Checkpoint> {
+        self.checkpoints.get(&id)
+    }
+
+    /// Live (unconsumed) checkpoints, oldest id first.
+    pub fn checkpoints(&self) -> impl Iterator<Item = (u64, &Checkpoint)> {
+        self.checkpoints.iter().map(|(&id, c)| (id, c))
     }
 
     /// Round-robin pick of the next user with pending, non-deferred
@@ -679,14 +1110,24 @@ impl SchedCore {
             let head = self.queues[user].front().cloned().unwrap();
             let backlog_tiles: usize = self.queues[user].iter().map(|r| r.tiles).sum();
             let active_users = self.queues.iter().filter(|q| !q.is_empty()).count();
+            let now = self.now;
 
             // Split-borrow the fields so a stateful policy can mutate
             // itself while reading regions/costs.
-            let SchedCore { catalog, costs, regions, policies, user_policy, default_policy, .. } =
-                self;
-            let accel = catalog
-                .get(&head.accel)
-                .unwrap_or_else(|| panic!("unknown accel {}", head.accel));
+            let SchedCore {
+                catalog, costs, regions, policies, user_policy, default_policy, running, ..
+            } = self;
+            let Some(accel) = catalog.get(&head.accel) else {
+                // Unknown accelerator past admission (`submit` validates,
+                // so only a harness bug or catalog swap gets here):
+                // reject the request back to the harness instead of
+                // killing the dispatcher.
+                let request = self.queues[user].pop_front().unwrap();
+                let reason = format!("no accelerator named {:?}", request.accel);
+                self.drop_checkpoint_of(&request);
+                self.rejected.push((request, reason));
+                continue;
+            };
             let req = PlaceReq {
                 user,
                 accel,
@@ -696,15 +1137,47 @@ impl SchedCore {
             };
             let idx = user_policy.get(user).copied().unwrap_or(*default_policy);
             let Some(p) = policies[idx].place(regions, costs, &req) else {
+                // No placement: the policy may checkpoint a running
+                // span instead of deferring (time-domain elasticity).
+                // The running-set snapshot is only built for policies
+                // that can actually use it.
+                let preemptive = policies[idx].can_preempt();
+                let victim = if preemptive {
+                    let snaps: Vec<RunningSnap> = running.values().cloned().collect();
+                    policies[idx].preempt(regions, costs, &snaps, &req, now)
+                } else {
+                    None
+                };
+                if let Some(anchor) = victim {
+                    if let Some(d) = self.preempt_anchor(anchor) {
+                        // Hand the freed span to the starved requester
+                        // first: plain round-robin could give it right
+                        // back to the victim's requeued remainder
+                        // (preemption thrash, no progress for anyone).
+                        self.rr = user;
+                        return Some(d);
+                    }
+                }
                 self.counters.skips += 1;
                 self.skip.push(user);
+                self.skip_preemptive |= preemptive;
                 continue;
             };
 
-            let span = accel
-                .variant(&p.variant)
-                .unwrap_or_else(|| panic!("policy chose unknown variant {}", p.variant))
-                .regions;
+            let Some(span) = accel.variant(&p.variant).map(|v| v.regions) else {
+                // A buggy policy chose a variant the catalog does not
+                // know: reject the request (the client learns why)
+                // rather than panicking the dispatcher.
+                let pname = policies[idx].name();
+                let request = self.queues[user].pop_front().unwrap();
+                let reason = format!(
+                    "policy {pname:?} chose unknown variant {:?} for {:?}",
+                    p.variant, request.accel
+                );
+                self.drop_checkpoint_of(&request);
+                self.rejected.push((request, reason));
+                continue;
+            };
             let request = self.queues[user].pop_front().unwrap();
             if p.reconfigure {
                 self.regions.clear_span(p.anchor, span);
@@ -734,6 +1207,14 @@ impl SchedCore {
             if replicated && p.reconfigure {
                 self.counters.replications += 1;
             }
+            let (kind, ckpt) = match request.resume {
+                Some(id) => {
+                    self.counters.resumes += 1;
+                    self.checkpoints.remove(&id);
+                    (DecisionKind::Resume, Some(id))
+                }
+                None => (DecisionKind::Run, None),
+            };
 
             let d = Decision {
                 user,
@@ -745,6 +1226,8 @@ impl SchedCore {
                 tiles: request.tiles,
                 reconfigure: p.reconfigure,
                 replicated,
+                kind,
+                ckpt,
             };
             if self.log.len() >= LOG_CAP {
                 self.log.pop_front();
@@ -755,10 +1238,82 @@ impl SchedCore {
         }
     }
 
+    /// Checkpoint the request running at `anchor` *now*: record its
+    /// progress, free the span, requeue the remainder at the front of
+    /// the victim's queue (pinned to the checkpointed variant), and
+    /// emit the `Preempt` decision.  `None` when there is no running
+    /// record, the dispatch only just started, or it is about to finish
+    /// anyway — the caller then falls back to deferring.
+    fn preempt_anchor(&mut self, anchor: usize) -> Option<Decision> {
+        let rec = self.running.get(&anchor)?;
+        if self.now <= rec.start {
+            return None; // same-instant preemption would waste the dispatch
+        }
+        let run_ns = self.now - rec.start;
+        let done = if run_ns <= rec.setup {
+            0
+        } else {
+            // Linear progress over the compute window (u128: the
+            // product can exceed u64 for long virtual runs).
+            let window = rec.end.saturating_sub(rec.start + rec.setup).max(1);
+            (((run_ns - rec.setup) as u128 * rec.tiles as u128) / window as u128) as usize
+        };
+        let done = done.min(rec.tiles);
+        let remaining = rec.tiles - done;
+        if remaining == 0 {
+            return None; // completing this instant: let it finish
+        }
+        let rec = self.running.remove(&anchor).unwrap();
+        self.regions.regions[anchor].busy = false;
+        let id = self.next_ckpt;
+        self.next_ckpt += 1;
+        self.checkpoints.insert(
+            id,
+            Checkpoint {
+                accel: rec.accel.clone(),
+                variant: rec.variant.clone(),
+                anchor,
+                span: rec.span,
+                tiles_done: done,
+                tiles_total: rec.tiles,
+            },
+        );
+        self.ensure_user(rec.user);
+        self.queues[rec.user].push_front(Request {
+            user: rec.user,
+            job: rec.job,
+            accel: rec.accel.clone(),
+            tiles: remaining,
+            pin: Some(rec.variant.clone()),
+            resume: Some(id),
+        });
+        self.counters.preemptions += 1;
+        let d = Decision {
+            user: rec.user,
+            job: rec.job,
+            accel: rec.accel,
+            variant: rec.variant,
+            anchor,
+            span: rec.span,
+            tiles: remaining,
+            reconfigure: false,
+            replicated: false,
+            kind: DecisionKind::Preempt,
+            ckpt: Some(id),
+        };
+        if self.log.len() >= LOG_CAP {
+            self.log.pop_front();
+            self.log_dropped += 1;
+        }
+        self.log.push_back(d.clone());
+        Some(d)
+    }
+
     /// The request running at `anchor` finished; its module stays
     /// resident (reuse fodder) but the span is idle again.
     pub fn complete(&mut self, anchor: usize) {
         self.regions.regions[anchor].busy = false;
+        self.running.remove(&anchor);
     }
 
     /// Roll back a placement whose hardware effect failed: the module
@@ -781,10 +1336,21 @@ impl SchedCore {
         }
     }
 
+    /// Drop the checkpoint a resume-request was due to consume — called
+    /// whenever such a request leaves the system by any path other than
+    /// a `Resume` dispatch (retire, drain, reject), so the store never
+    /// accumulates orphaned progress records in a long-lived daemon.
+    fn drop_checkpoint_of(&mut self, req: &Request) {
+        if let Some(id) = req.resume {
+            self.checkpoints.remove(&id);
+        }
+    }
+
     /// A user departed: drop their queued requests (returned so the
-    /// harness can fail the matching replies), reset their policy
-    /// routing, and let every policy drop its per-user state so the
-    /// slot can be recycled cleanly for a future tenant.
+    /// harness can fail the matching replies) and any checkpoints those
+    /// requests were due to consume, reset their policy routing, and
+    /// let every policy drop its per-user state so the slot can be
+    /// recycled cleanly for a future tenant.
     pub fn retire_user(&mut self, user: usize) -> Vec<Request> {
         if user >= self.queues.len() {
             return Vec::new();
@@ -793,28 +1359,50 @@ impl SchedCore {
         for p in &mut self.policies {
             p.retire(user);
         }
-        self.queues[user].drain(..).collect()
+        // Forget the departed user's running records too: the slot may
+        // be recycled to a new tenant before those dispatches complete,
+        // and a later preemption of one would otherwise requeue the
+        // ghost remainder into the new tenant's queue (and make the
+        // starvation checks see the ghost as the new tenant's work).
+        // The spans stay busy until the harness replays their
+        // completions; they just can no longer be preempted.
+        self.running.retain(|_, r| r.user != user);
+        let out: Vec<Request> = self.queues[user].drain(..).collect();
+        for r in &out {
+            self.drop_checkpoint_of(r);
+        }
+        out
     }
 
     /// Drain every queued request (dispatcher stall-guard: lets a
-    /// harness fail requests no policy will ever place).
+    /// harness fail requests no policy will ever place), dropping the
+    /// checkpoints the drained resume-requests were due to consume.
     pub fn drain_pending(&mut self) -> Vec<Request> {
         let mut out = Vec::new();
         for q in &mut self.queues {
             out.extend(q.drain(..));
+        }
+        for r in &out {
+            self.drop_checkpoint_of(r);
         }
         out
     }
 
     /// Virtual service latency of a decision under `concurrent` other
     /// busy modules: per-tile (DMA + compute) x tiles, plus the partial
-    /// reconfiguration when one was paid.
+    /// reconfiguration when one was paid.  A `Resume` additionally
+    /// carries the preemption overhead — the checkpoint of the slice it
+    /// continues plus its own context restore (both charged to the
+    /// preempted request, never to the tenant that displaced it).
     pub fn service_ns(&self, d: &Decision, concurrent: usize) -> u64 {
         let accel = self.catalog.get(&d.accel).expect("decision for unknown accel");
         let variant = accel.variant(&d.variant).expect("decision for unknown variant");
         let mut ns = (self.costs.per_tile_ns(accel, variant, concurrent) * d.tiles as f64) as u64;
         if d.reconfigure {
             ns += self.costs.reconfig_ns(d.span);
+        }
+        if d.kind == DecisionKind::Resume {
+            ns += self.costs.checkpoint_ns(d.span) + self.costs.restore_ns(d.span);
         }
         ns
     }
@@ -1079,5 +1667,145 @@ mod tests {
         assert_eq!(cts.reconfigs + cts.reuses, placements);
         assert_eq!(placements, 6);
         assert_eq!(c.decision_log().count(), 6);
+    }
+
+    #[test]
+    fn quantum_preempts_streaming_job_for_starved_tenant() {
+        let mut c = core(Policy::Quantum); // Ultra96: 3 regions
+        // Tenant 0 streams: three long pinned requests fill the fabric.
+        for j in 0..3 {
+            c.submit(0, j, "mandelbrot", 100, Some("mandelbrot_v1")).unwrap();
+        }
+        c.begin_round_at(0);
+        let mut dispatched = Vec::new();
+        while let Some(d) = c.next_decision() {
+            let lat = c.service_ns(&d, c.busy_anchors().saturating_sub(1));
+            c.mark_running(&d, 0, lat);
+            dispatched.push(d);
+        }
+        assert_eq!(dispatched.len(), 3);
+        assert_eq!(c.running_count(), 3);
+
+        // A starved tenant arrives well past the quantum: its failed
+        // placement checkpoints the longest-running stream instead of
+        // deferring forever.
+        c.submit(1, 10, "sobel", 2, Some("sobel_v1")).unwrap();
+        c.begin_round_at(50_000_000);
+        let p = c.next_decision().unwrap();
+        assert_eq!(p.kind, DecisionKind::Preempt);
+        assert_eq!(p.user, 0);
+        assert!(p.tiles > 0 && p.tiles < 100, "partial progress expected: {p:?}");
+        let ck = c.checkpoint(p.ckpt.unwrap()).unwrap();
+        assert_eq!(ck.tiles_done + p.tiles, 100, "no lost or duplicated tiles");
+        assert!(!c.regions().get(p.anchor).busy, "preempted span is idle");
+
+        // Same round: the starved tenant lands on the freed span.
+        let d = c.next_decision().unwrap();
+        assert_eq!((d.user, d.anchor, d.kind), (1, p.anchor, DecisionKind::Run));
+        let lat = c.service_ns(&d, c.busy_anchors().saturating_sub(1));
+        c.mark_running(&d, 50_000_000, 50_000_000 + lat);
+        // The victim's remainder cannot place (fabric full again) and
+        // must not preempt the short tenant inside its quantum.
+        assert!(c.next_decision().is_none());
+        assert_eq!(c.counters().preemptions, 1);
+
+        // The short job completes; the remainder resumes, consuming the
+        // checkpoint and paying checkpoint + restore in its service.
+        c.complete(d.anchor);
+        c.begin_round_at(60_000_000);
+        let r = c.next_decision().unwrap();
+        assert_eq!(r.kind, DecisionKind::Resume);
+        assert_eq!((r.user, r.tiles), (0, p.tiles));
+        assert_eq!(r.ckpt, p.ckpt);
+        assert!(c.checkpoint(p.ckpt.unwrap()).is_none(), "checkpoint consumed");
+        assert_eq!(c.counters().resumes, 1);
+        let plain = Decision { kind: DecisionKind::Run, ckpt: None, ..r.clone() };
+        assert!(
+            c.service_ns(&r, 0) > c.service_ns(&plain, 0),
+            "resume must carry checkpoint/restore overhead"
+        );
+    }
+
+    #[test]
+    fn elastic_pre_rebalances_replicas_for_starved_tenant() {
+        let mut c = core(Policy::ElasticPreempt);
+        // Tenant 0 replicates a long backlog over the whole fabric.
+        for j in 0..3 {
+            c.submit(0, j, "mandelbrot", 50, Some("mandelbrot_v1")).unwrap();
+        }
+        c.begin_round_at(0);
+        let mut placed = 0;
+        while let Some(d) = c.next_decision() {
+            let lat = c.service_ns(&d, c.busy_anchors().saturating_sub(1));
+            c.mark_running(&d, 0, lat);
+            placed += 1;
+        }
+        assert_eq!(placed, 3);
+        // A starved tenant takes one replica — never a user's last span.
+        c.submit(1, 9, "sobel", 1, Some("sobel_v1")).unwrap();
+        c.begin_round_at(10_000_000);
+        let p = c.next_decision().unwrap();
+        assert_eq!((p.kind, p.user), (DecisionKind::Preempt, 0));
+        let d = c.next_decision().unwrap();
+        assert_eq!((d.user, d.kind), (1, DecisionKind::Run));
+        // Plain elastic never preempts: same setup, no Preempt decision.
+        let mut c2 = core(Policy::Elastic);
+        for j in 0..3 {
+            c2.submit(0, j, "mandelbrot", 50, Some("mandelbrot_v1")).unwrap();
+        }
+        c2.begin_round_at(0);
+        while let Some(d) = c2.next_decision() {
+            let lat = c2.service_ns(&d, c2.busy_anchors().saturating_sub(1));
+            c2.mark_running(&d, 0, lat);
+        }
+        c2.submit(1, 9, "sobel", 1, Some("sobel_v1")).unwrap();
+        c2.begin_round_at(10_000_000);
+        assert!(c2.next_decision().is_none());
+        assert_eq!(c2.counters().preemptions, 0);
+        assert_eq!(c2.counters().skips, 1);
+    }
+
+    #[test]
+    fn unknown_variant_from_policy_is_rejected_not_fatal() {
+        struct BadPolicy;
+        impl SchedPolicy for BadPolicy {
+            fn name(&self) -> &'static str {
+                "bad"
+            }
+            fn place(
+                &mut self,
+                _r: &RegionMap,
+                _c: &CostModel,
+                _q: &PlaceReq,
+            ) -> Option<Placement> {
+                Some(Placement {
+                    anchor: 0,
+                    variant: "not_a_variant".into(),
+                    reconfigure: true,
+                })
+            }
+        }
+        let mut c = core(Policy::Elastic);
+        c.register_policy(Box::new(BadPolicy));
+        assert!(c.set_user_policy(0, "bad"));
+        c.submit(0, 7, "vadd", 1, None).unwrap();
+        c.begin_round();
+        assert!(c.next_decision().is_none(), "rejected, not dispatched");
+        let rejected = c.take_rejected();
+        assert_eq!(rejected.len(), 1);
+        assert_eq!(rejected[0].0.job, 7);
+        assert!(rejected[0].1.contains("unknown variant"), "{}", rejected[0].1);
+        assert!(!c.has_pending());
+        assert!(c.take_rejected().is_empty(), "drained once");
+    }
+
+    #[test]
+    fn builtin_policy_names_route() {
+        let mut c = core(Policy::Elastic);
+        for name in ["elastic", "fixed", "quantum", "elastic-pre"] {
+            assert!(c.set_user_policy(0, name), "{name} must be registered");
+            assert_eq!(c.policy_name_of(0), name);
+        }
+        assert!(!c.set_user_policy(0, "themis"));
     }
 }

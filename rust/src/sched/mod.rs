@@ -15,7 +15,11 @@
 //!   to it (module replacement — the DCT super-linear win of Fig 19);
 //! - **reuse**: a region already configured with the right accelerator
 //!   is used without reconfiguration (cross-application sharing);
-//! - **time-multiplexing** when requests outnumber regions.
+//! - **time-multiplexing** when requests outnumber regions — both
+//!   cooperatively (run-to-completion, §4.4.3) and **preemptively**:
+//!   the [`Quantum`] and [`Elastic::preemptive`] policies checkpoint a
+//!   running request's progress, requeue its remainder and restore it
+//!   later (see `sched/ARCHITECTURE.md` for the full lifecycle).
 //!
 //! ## Architecture: one core, two harnesses
 //!
@@ -40,10 +44,11 @@ mod sim;
 mod workload;
 
 pub use self::core::{
-    CostModel, Decision, Elastic, Fixed, LoadedModule, PlaceReq, Placement, Policy, Region,
-    RegionMap, Request, SchedCore, SchedCounters, SchedPolicy,
+    Checkpoint, CostModel, Decision, DecisionKind, Elastic, Fixed, LoadedModule, PlaceReq,
+    Placement, Policy, Quantum, Region, RegionMap, Request, RunningSnap, SchedCore,
+    SchedCounters, SchedPolicy, PREEMPT_TICK_NS,
 };
-pub use sim::{gen_inputs, simulate, RegionTrace, SimConfig, SimResult, TraceEvent};
+pub use sim::{gen_inputs, mean_turnaround_ns, simulate, RegionTrace, SimConfig, SimResult, TraceEvent};
 pub use workload::{JobSpec, Workload};
 
 use std::time::Duration;

@@ -4,7 +4,7 @@
 //! arrivals and completions into the core and turns its [`Decision`]s
 //! into trace events, latencies and (optionally) real PJRT compute.
 
-use super::core::{Decision, Policy, SchedCore, SchedCounters};
+use super::core::{Decision, DecisionKind, Policy, SchedCore, SchedCounters};
 use super::workload::Workload;
 use super::SimTime;
 use crate::accel::Catalog;
@@ -12,7 +12,7 @@ use crate::runtime::Executor;
 use crate::shell::{Shell, ShellBoard};
 use crate::testutil::Rng;
 use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, HashMap, HashSet};
 
 /// Simulation configuration.
 pub struct SimConfig {
@@ -84,6 +84,9 @@ enum Event {
     Arrival(usize),
     /// Completion at anchor region.
     Complete { anchor: usize, job: usize },
+    /// Preemption-check round: re-dispatch while users are starved and
+    /// work is running, so an expired quantum is observed mid-span.
+    Tick,
 }
 
 /// Run a workload under a policy on a board.
@@ -116,20 +119,28 @@ pub fn simulate(catalog: &Catalog, workload: &Workload, cfg: &SimConfig) -> SimR
         seq += 1;
     }
     let mut rng = Rng::new(0xD15);
+    // Completion events cancelled by a preemption (by event seq).
+    let mut cancelled: HashSet<u64> = HashSet::new();
+    // anchor -> seq of the completion event of the dispatch running there.
+    let mut running_seq: HashMap<usize, u64> = HashMap::new();
+    // anchor -> index of the open trace event of that dispatch, so a
+    // preemption can truncate it to the tiles actually completed.
+    let mut open_trace: HashMap<usize, usize> = HashMap::new();
+    // One pending preemption-check tick at a time (see PREEMPT_TICK_NS).
+    let mut next_tick: Option<SimTime> = None;
 
     while let Some(Reverse((now, s0, ev))) = heap.pop() {
         // Drain every event at this timestamp before dispatching, so
         // simultaneous arrivals see each other (RR fairness at t=0).
-        let mut batch = vec![ev];
-        let _ = s0;
+        let mut batch = vec![(s0, ev)];
         while let Some(Reverse((t, _, _))) = heap.peek() {
             if *t != now {
                 break;
             }
-            let Reverse((_, _, e)) = heap.pop().unwrap();
-            batch.push(e);
+            let Reverse((_, s, e)) = heap.pop().unwrap();
+            batch.push((s, e));
         }
-        for ev in batch {
+        for (s, ev) in batch {
             match ev {
                 Event::Arrival(j) => {
                     let job = &workload.jobs[j];
@@ -144,8 +155,16 @@ pub fn simulate(catalog: &Catalog, workload: &Workload, cfg: &SimConfig) -> SimR
                         .unwrap_or_else(|e| panic!("{e}"));
                     }
                 }
+                Event::Tick => {} // only exists to trigger the round below
                 Event::Complete { anchor, job } => {
+                    if cancelled.remove(&s) {
+                        continue; // this dispatch was preempted mid-span
+                    }
                     core.complete(anchor);
+                    if running_seq.get(&anchor) == Some(&s) {
+                        running_seq.remove(&anchor);
+                        open_trace.remove(&anchor);
+                    }
                     jobs_left[job] -= 1;
                     if jobs_left[job] == 0 {
                         result.job_completion[job] = now;
@@ -161,14 +180,42 @@ pub fn simulate(catalog: &Catalog, workload: &Workload, cfg: &SimConfig) -> SimR
         // run-to-completion); the core round-robins across users and
         // defers anyone whose request cannot (or should not) be placed
         // without blocking the others.
-        core.begin_round();
+        core.begin_round_at(now);
         while let Some(d) = core.next_decision() {
+            if d.kind == DecisionKind::Preempt {
+                // The victim's remainder is already requeued by the
+                // core; mirror the harness side: cancel its completion
+                // event and truncate its trace allocation to the tiles
+                // that actually finished before `now`.
+                let vseq = running_seq
+                    .remove(&d.anchor)
+                    .expect("preempt decision without a running dispatch");
+                cancelled.insert(vseq);
+                if let Some(idx) = open_trace.remove(&d.anchor) {
+                    let (old_end, region, span) = {
+                        let t = &mut result.trace[idx];
+                        let old_end = t.end;
+                        t.end = now;
+                        t.tiles -= d.tiles; // keep only the completed slice
+                        (old_end, t.region, t.span)
+                    };
+                    for t in result.regions[region..region + span].iter_mut() {
+                        t.busy_ns -= old_end - now;
+                    }
+                }
+                continue;
+            }
+
             // Latency: reconfig + per-tile (DMA + compute), contended
-            // by the other busy modules.
+            // by the other busy modules; resumes add checkpoint/restore.
             let busy_others = core.busy_anchors().saturating_sub(1);
             let lat = core.service_ns(&d, busy_others);
+            core.mark_running(&d, now, now + lat);
 
-            // Real compute, if attached.
+            // Real compute, if attached.  Executed eagerly at dispatch:
+            // a slice preempted later was still computed in full here,
+            // which inflates tiles_executed but never corrupts outputs
+            // (re-runs are idempotent; virtual time is unaffected).
             if let Some(exec) = &cfg.executor {
                 let accel = catalog.get(&d.accel).unwrap();
                 for _ in 0..d.tiles {
@@ -186,6 +233,7 @@ pub fn simulate(catalog: &Catalog, workload: &Workload, cfg: &SimConfig) -> SimR
             }
 
             let end = now + lat;
+            open_trace.insert(d.anchor, result.trace.len());
             result.trace.push(TraceEvent {
                 start: now,
                 end,
@@ -200,6 +248,7 @@ pub fn simulate(catalog: &Catalog, workload: &Workload, cfg: &SimConfig) -> SimR
             for t in result.regions[d.anchor..d.anchor + d.span].iter_mut() {
                 t.busy_ns += lat;
             }
+            running_seq.insert(d.anchor, seq);
             heap.push(Reverse((
                 end,
                 seq,
@@ -207,11 +256,49 @@ pub fn simulate(catalog: &Catalog, workload: &Workload, cfg: &SimConfig) -> SimR
             )));
             seq += 1;
         }
+
+        // Requests the core rejected instead of dispatching (a policy
+        // chose an unknown variant): count them completed-with-failure
+        // so the run terminates; built-in policies never trigger this.
+        for (req, _reason) in core.take_rejected() {
+            let j = req.job as usize;
+            jobs_left[j] = jobs_left[j].saturating_sub(1);
+            if jobs_left[j] == 0 {
+                result.job_completion[j] = now;
+                let u = workload.jobs[j].user;
+                result.user_completion[u] = result.user_completion[u].max(now);
+            }
+        }
+
+        // Preemption-check cadence (core-owned rule, shared verbatim
+        // with the daemon dispatcher): re-round every PREEMPT_TICK_NS
+        // while a preemption-capable policy has a starved user and work
+        // is running, so expired quanta are observed mid-span.
+        if let Some(t) = core.preempt_tick_due(&mut next_tick, now) {
+            heap.push(Reverse((t, seq, Event::Tick)));
+            seq += 1;
+        }
     }
 
     result.counters = core.counters().clone();
     result.decisions = core.decision_log().cloned().collect();
     result
+}
+
+/// Mean job turnaround (completion − arrival) over a finished run,
+/// in virtual ns — the fig22-style fairness measurement preemption is
+/// judged by.
+pub fn mean_turnaround_ns(w: &Workload, r: &SimResult) -> f64 {
+    if w.jobs.is_empty() {
+        return 0.0;
+    }
+    let sum: u64 = w
+        .jobs
+        .iter()
+        .zip(&r.job_completion)
+        .map(|(j, &c)| c.saturating_sub(j.arrival))
+        .sum();
+    sum as f64 / w.jobs.len() as f64
 }
 
 /// Deterministic input generation for real-compute mode.
@@ -428,6 +515,77 @@ mod tests {
         for (u, regions) in per_user {
             assert_eq!(regions.len(), 1, "user {u} used {regions:?}");
         }
+    }
+
+    /// One tenant streaming three long pinned requests, one tenant with
+    /// many short requests — the time-domain starvation scenario.
+    fn streams_plus_shorts() -> Workload {
+        let mut w = Workload::new();
+        for _ in 0..3 {
+            w.push(JobSpec::stream(0, "mandelbrot", Some("mandelbrot_v1"), 0, 120));
+        }
+        for j in JobSpec::frame_pinned(1, "sobel", "sobel_v1", 0, 20, 10) {
+            w.push(j);
+        }
+        w
+    }
+
+    #[test]
+    fn preemptive_policies_cut_turnaround_for_short_jobs() {
+        let c = catalog();
+        let w = streams_plus_shorts();
+        let rtc = simulate(&c, &w, &SimConfig::new(ShellBoard::Ultra96, Policy::Elastic));
+        let q = simulate(&c, &w, &SimConfig::new(ShellBoard::Ultra96, Policy::Quantum));
+        let ep = simulate(&c, &w, &SimConfig::new(ShellBoard::Ultra96, Policy::ElasticPreempt));
+        assert_eq!(rtc.counters.preemptions, 0, "elastic is run-to-completion");
+        assert!(q.counters.preemptions >= 1, "quantum must preempt: {:?}", q.counters);
+        assert!(ep.counters.preemptions >= 1, "elastic-pre must preempt: {:?}", ep.counters);
+        assert_eq!(
+            q.counters.preemptions, q.counters.resumes,
+            "every checkpointed remainder must resume"
+        );
+        assert_eq!(ep.counters.preemptions, ep.counters.resumes);
+        let m_rtc = mean_turnaround_ns(&w, &rtc);
+        let m_q = mean_turnaround_ns(&w, &q);
+        let m_ep = mean_turnaround_ns(&w, &ep);
+        assert!(
+            m_q < m_rtc,
+            "quantum turnaround {m_q:.0} must beat run-to-completion {m_rtc:.0}"
+        );
+        assert!(
+            m_ep < m_rtc,
+            "elastic-pre turnaround {m_ep:.0} must beat run-to-completion {m_rtc:.0}"
+        );
+    }
+
+    #[test]
+    fn preempted_trace_stays_consistent() {
+        let c = catalog();
+        let w = streams_plus_shorts();
+        let r = simulate(&c, &w, &SimConfig::new(ShellBoard::Ultra96, Policy::Quantum));
+        assert!(r.counters.preemptions >= 1);
+        // Preemption splits dispatches: at least one extra trace event.
+        assert!(r.trace.len() > w.total_requests());
+        for t in &r.trace {
+            assert!(t.end > t.start, "{t:?}");
+            assert!(t.region + t.span <= 3);
+        }
+        // No two allocations overlap on any region.
+        for (i, a) in r.trace.iter().enumerate() {
+            for b in &r.trace[i + 1..] {
+                let disjoint_regions =
+                    a.region + a.span <= b.region || b.region + b.span <= a.region;
+                let disjoint_time = a.end <= b.start || b.end <= a.start;
+                assert!(disjoint_regions || disjoint_time, "{a:?} vs {b:?}");
+            }
+        }
+        // Tile conservation across preempt/resume splits: the trace
+        // carries exactly the workload's tiles, no loss, no double-run.
+        let total: usize = r.trace.iter().map(|t| t.tiles).sum();
+        let expected: usize = w.jobs.iter().map(|j| j.requests * j.tiles_per_request).sum();
+        assert_eq!(total, expected);
+        // Every job still completes.
+        assert!(r.job_completion.iter().all(|&t| t > 0));
     }
 
     #[test]

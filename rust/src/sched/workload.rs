@@ -61,6 +61,30 @@ impl JobSpec {
         out
     }
 
+    /// A long-running/streaming job: ONE request carrying `tiles` work
+    /// items.  Under cooperative run-to-completion scheduling such a
+    /// job monopolises its module for the whole run (the §4.4
+    /// time-domain stressor); the preemptive policies (`quantum`,
+    /// `elastic-pre`) checkpoint it instead.  `variant` pins an
+    /// implementation (usually the 1-region one) so the stream does not
+    /// also grab a multi-region span.
+    pub fn stream(
+        user: usize,
+        accel: &str,
+        variant: Option<&str>,
+        arrival: SimTime,
+        tiles: usize,
+    ) -> JobSpec {
+        JobSpec {
+            user,
+            accel: accel.to_string(),
+            arrival,
+            requests: 1,
+            tiles_per_request: tiles.max(1),
+            pin_variant: variant.map(str::to_string),
+        }
+    }
+
     /// Same as [`JobSpec::frame`] but pinned to one variant.
     pub fn frame_pinned(
         user: usize,
@@ -117,6 +141,16 @@ mod tests {
             let n: usize = jobs.iter().map(|j| j.requests).sum();
             assert_eq!(n, reqs.min(total).max(reqs.min(total)), "reqs clamp");
         }
+    }
+
+    #[test]
+    fn stream_is_one_request() {
+        let j = JobSpec::stream(2, "mandelbrot", Some("mandelbrot_v1"), 5, 400);
+        assert_eq!(j.requests, 1);
+        assert_eq!(j.tiles_per_request, 400);
+        assert_eq!(j.pin_variant.as_deref(), Some("mandelbrot_v1"));
+        // Degenerate stream still carries one tile.
+        assert_eq!(JobSpec::stream(0, "vadd", None, 0, 0).tiles_per_request, 1);
     }
 
     #[test]

@@ -26,6 +26,23 @@ pub fn pjrt_available() -> bool {
     })
 }
 
+/// Short-iteration mode for the CI `bench-smoke` job: `FOS_BENCH_SMOKE=1`
+/// shrinks bench iteration counts so all 14 measurement programs run in
+/// seconds (numbers are then indicative only — the job guards against
+/// bit-rot, not regressions).
+pub fn bench_smoke() -> bool {
+    std::env::var("FOS_BENCH_SMOKE").map(|v| v != "0" && !v.is_empty()).unwrap_or(false)
+}
+
+/// `full` iterations normally, `smoke` under `FOS_BENCH_SMOKE=1`.
+pub fn bench_scale(full: usize, smoke: usize) -> usize {
+    if bench_smoke() {
+        smoke
+    } else {
+        full
+    }
+}
+
 /// Operand register values for one request of `accel`, with properly
 /// sized buffers allocated through the daemon: the accelerator's
 /// non-control registers in map order, zipped with its input then

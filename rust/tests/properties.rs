@@ -6,8 +6,8 @@ use fos::bitstream::{extract, relocate, synth_full, Bitstream};
 use fos::driver::{DataManager, PhysAddr};
 use fos::fabric::{Device, DeviceKind, Floorplan};
 use fos::json::{parse, to_string, to_string_pretty, Value};
-use fos::sched::{simulate, JobSpec, Policy, SimConfig, Workload};
-use fos::shell::ShellBoard;
+use fos::sched::{simulate, DecisionKind, JobSpec, Policy, SchedCore, SimConfig, Workload};
+use fos::shell::{Shell, ShellBoard};
 use fos::testutil::{cases, Rng};
 
 /// Random JSON value generator.
@@ -173,6 +173,127 @@ fn prop_scheduler_trace_invariants_random_workloads() {
             assert!(done <= r.makespan);
         }
         assert!(r.regions.iter().map(|t| t.busy_ns).sum::<u64>() > 0);
+    });
+}
+
+#[test]
+fn prop_sched_core_bookkeeping_consistent_under_interleavings() {
+    // Drive the bare core through arbitrary interleavings of
+    // submit/round/complete/evict/retire_user/drain_pending (the full
+    // harness surface) and check conservation: no request is ever lost
+    // or double-dispatched, and the counters/decision log stay in sync
+    // with the dispatch count — preemptive policies included.
+    let catalog = Catalog::load_default().unwrap();
+    let accels = ["vadd", "fir", "dct", "sobel", "mandelbrot"];
+    let policies = [Policy::Elastic, Policy::Fixed, Policy::Quantum, Policy::ElasticPreempt];
+    cases(30, |rng| {
+        let policy = *rng.pick(&policies);
+        let board =
+            if rng.bool(0.5) { ShellBoard::Ultra96 } else { ShellBoard::Zcu102 };
+        let shell = Shell::build(board);
+        let n_regions = shell.region_count();
+        let mut core = SchedCore::new(&shell, catalog.clone(), policy);
+
+        let mut now = 0u64;
+        let mut submitted = 0u64; // accepted submits
+        let mut dispatched = 0u64; // Run + Resume decisions (queue pops)
+        let mut preempts = 0u64; // Preempt decisions (queue pushes)
+        let mut retired = 0u64;
+        let mut drained = 0u64;
+        let mut rejects = 0u64;
+        // Checkpoints whose resume-request left via retire/drain.
+        let mut dropped_ckpts = 0u64;
+        let mut busy: Vec<usize> = Vec::new(); // anchors we owe a complete()
+        let mut next_job = 0u64;
+
+        for _ in 0..60 {
+            match rng.below(6) {
+                // submit
+                0 | 1 => {
+                    let user = rng.below(4) as usize;
+                    let accel = *rng.pick(&accels);
+                    let tiles = 1 + rng.below(30) as usize;
+                    let job = next_job;
+                    next_job += 1;
+                    core.submit(user, job, accel, tiles, None).unwrap();
+                    submitted += 1;
+                }
+                // dispatch round
+                2 => {
+                    core.begin_round_at(now);
+                    while let Some(d) = core.next_decision() {
+                        match d.kind {
+                            DecisionKind::Preempt => {
+                                preempts += 1;
+                                busy.retain(|&a| a != d.anchor);
+                            }
+                            DecisionKind::Run | DecisionKind::Resume => {
+                                dispatched += 1;
+                                let lat =
+                                    core.service_ns(&d, core.busy_anchors().saturating_sub(1));
+                                core.mark_running(&d, now, now + lat.max(1));
+                                busy.push(d.anchor);
+                            }
+                        }
+                    }
+                    rejects += core.take_rejected().len() as u64;
+                }
+                // complete a running anchor
+                3 => {
+                    if !busy.is_empty() {
+                        let idx = rng.below(busy.len() as u64) as usize;
+                        let anchor = busy.swap_remove(idx);
+                        core.complete(anchor);
+                    }
+                }
+                // evict (failed-load rollback) anywhere
+                4 => {
+                    core.evict(rng.below(n_regions as u64) as usize);
+                }
+                // retire a user or drain everything
+                _ => {
+                    let reqs = if rng.bool(0.7) {
+                        let n = core.retire_user(rng.below(4) as usize);
+                        retired += n.len() as u64;
+                        n
+                    } else {
+                        let n = core.drain_pending();
+                        drained += n.len() as u64;
+                        n
+                    };
+                    dropped_ckpts +=
+                        reqs.iter().filter(|r| r.resume.is_some()).count() as u64;
+                }
+            }
+            now += rng.below(10_000_000);
+
+            // Conservation after every op: each accepted submit and
+            // each preemption pushes exactly one queued request; each
+            // dispatch, retire, drain and reject pops exactly one.
+            let pending = core.pending() as u64;
+            assert_eq!(
+                submitted + preempts,
+                dispatched + pending + retired + drained + rejects,
+                "requests lost or duplicated (policy {policy:?})"
+            );
+            let c = core.counters();
+            assert_eq!(c.reconfigs + c.reuses, dispatched, "placement counters drifted");
+            assert_eq!(c.preemptions, preempts);
+            assert!(c.resumes <= c.preemptions, "resume without a checkpoint");
+            assert_eq!(
+                core.decision_log().count() as u64,
+                dispatched + preempts,
+                "decision log out of sync"
+            );
+        }
+
+        // Every checkpoint is live, consumed by a resume, or dropped
+        // with its retired/drained request — an exact partition.
+        let c = core.counters().clone();
+        assert_eq!(
+            core.checkpoints().count() as u64,
+            c.preemptions - c.resumes - dropped_ckpts
+        );
     });
 }
 

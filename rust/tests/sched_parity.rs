@@ -10,13 +10,26 @@
 
 use fos::accel::Catalog;
 use fos::daemon::{Daemon, FpgaRpc, Job};
-use fos::sched::{simulate, JobSpec, Policy, SimConfig, Workload};
+use fos::sched::{simulate, Decision, DecisionKind, JobSpec, Policy, SimConfig, Workload};
 use fos::shell::ShellBoard;
 use std::collections::HashMap;
 use std::path::PathBuf;
 
-/// (accel, variant, anchor, span, reconfigure, replicated, tiles)
-type Key = (String, String, usize, usize, bool, bool, usize);
+/// (kind, accel, variant, anchor, span, reconfigure, replicated, tiles)
+type Key = (DecisionKind, String, String, usize, usize, bool, bool, usize);
+
+fn key(d: &Decision) -> Key {
+    (
+        d.kind,
+        d.accel.clone(),
+        d.variant.clone(),
+        d.anchor,
+        d.span,
+        d.reconfigure,
+        d.replicated,
+        d.tiles,
+    )
+}
 
 fn sock(name: &str) -> PathBuf {
     std::env::temp_dir().join(format!("fos_parity_{name}_{}.sock", std::process::id()))
@@ -87,18 +100,8 @@ fn sim_and_daemon_make_identical_elastic_decisions() {
 
     // --- compare ------------------------------------------------------
     let daemon_log = daemon.decision_log();
-    let key = |accel: &str, variant: &str, anchor: usize, span: usize, rec: bool, repl: bool, tiles: usize| -> Key {
-        (accel.to_string(), variant.to_string(), anchor, span, rec, repl, tiles)
-    };
-    let sim_seq: Vec<Key> = sim
-        .decisions
-        .iter()
-        .map(|d| key(&d.accel, &d.variant, d.anchor, d.span, d.reconfigure, d.replicated, d.tiles))
-        .collect();
-    let dmn_seq: Vec<Key> = daemon_log
-        .iter()
-        .map(|d| key(&d.accel, &d.variant, d.anchor, d.span, d.reconfigure, d.replicated, d.tiles))
-        .collect();
+    let sim_seq: Vec<Key> = sim.decisions.iter().map(key).collect();
+    let dmn_seq: Vec<Key> = daemon_log.iter().map(key).collect();
     assert_eq!(sim_seq, dmn_seq, "decision sequences diverged");
 
     // User identities differ (the daemon's control connection consumes
@@ -192,6 +195,99 @@ fn sim_and_daemon_parity_under_fixed_policy() {
     assert!(daemon_log.iter().all(|d| d.span == 1));
     use std::sync::atomic::Ordering::Relaxed;
     assert_eq!(daemon.stats().replications.load(Relaxed), 0);
+}
+
+#[test]
+fn sim_and_daemon_parity_with_preemption() {
+    // A preemption-heavy trace: one tenant streams three long pinned
+    // mandelbrot requests (enough to hold the whole Ultra96 fabric),
+    // one tenant brings six short sobel requests. Under the quantum
+    // policy the shorts' tenant checkpoints a stream mid-span; sim and
+    // daemon must produce the identical decision sequence — Preempt
+    // and Resume decisions included.
+    let catalog = Catalog::load_default().unwrap();
+
+    let mut w = Workload::new();
+    for _ in 0..3 {
+        w.push(JobSpec::stream(0, "mandelbrot", Some("mandelbrot_v1"), 0, 40));
+    }
+    for j in JobSpec::frame_pinned(1, "sobel", "sobel_v1", 0, 12, 6) {
+        w.push(j);
+    }
+    let sim = simulate(&catalog, &w, &SimConfig::new(ShellBoard::Ultra96, Policy::Quantum));
+    assert!(
+        sim.counters.preemptions >= 1,
+        "trace must actually preempt: {:?}",
+        sim.counters
+    );
+    assert_eq!(sim.counters.preemptions, sim.counters.resumes);
+
+    let path = sock("preempt");
+    let daemon =
+        Daemon::start_with_policy(&path, ShellBoard::Ultra96, catalog.clone(), Policy::Quantum)
+            .unwrap();
+    let mut control = FpgaRpc::connect(&path).unwrap();
+    control.pause().unwrap();
+
+    // Tenant 0: the streams (one request of 40 tiles each, pinned by
+    // the daemon core itself on preemption); tenant 1: the shorts.
+    let mut t0_rpc = FpgaRpc::connect(&path).unwrap();
+    let mut t1_rpc = FpgaRpc::connect(&path).unwrap();
+    let h0 = {
+        let catalog = catalog.clone();
+        std::thread::spawn(move || {
+            let params = fos::testutil::alloc_operand_params(&mut t0_rpc, &catalog, "mandelbrot");
+            let jobs: Vec<Job> = (0..3)
+                .map(|_| Job::new("mandelbrot", params.clone()).with_tiles(40))
+                .collect();
+            let _ = t0_rpc.run(&jobs); // decisions land even if compute is stubbed
+        })
+    };
+    let h1 = {
+        let catalog = catalog.clone();
+        std::thread::spawn(move || {
+            let params = fos::testutil::alloc_operand_params(&mut t1_rpc, &catalog, "sobel");
+            let jobs: Vec<Job> = (0..6)
+                .map(|_| Job::new("sobel", params.clone()).with_tiles(2))
+                .collect();
+            let _ = t1_rpc.run(&jobs);
+        })
+    };
+
+    for _ in 0..2000 {
+        if control.sched_stats().unwrap().queued == 9 {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(2));
+    }
+    assert_eq!(control.sched_stats().unwrap().queued, 9, "jobs not admitted");
+    control.resume().unwrap();
+    h0.join().unwrap();
+    h1.join().unwrap();
+
+    let daemon_log = daemon.decision_log();
+    let sim_seq: Vec<Key> = sim.decisions.iter().map(key).collect();
+    let dmn_seq: Vec<Key> = daemon_log.iter().map(key).collect();
+    assert_eq!(sim_seq, dmn_seq, "preemptive decision sequences diverged");
+    assert!(
+        dmn_seq.iter().any(|k| k.0 == DecisionKind::Preempt),
+        "live path made no Preempt decision: {dmn_seq:?}"
+    );
+    assert!(dmn_seq.iter().any(|k| k.0 == DecisionKind::Resume));
+
+    // Shared counters agree, preemption counters included.
+    use std::sync::atomic::Ordering::Relaxed;
+    let st = daemon.stats();
+    assert_eq!(sim.counters.reconfigs, st.reconfig_loads.load(Relaxed));
+    assert_eq!(sim.counters.reuses, st.reuse_hits.load(Relaxed));
+    assert_eq!(sim.counters.skips, st.skips.load(Relaxed));
+    assert_eq!(sim.counters.preemptions, st.preemptions.load(Relaxed));
+    assert_eq!(sim.counters.resumes, st.resumes.load(Relaxed));
+
+    // The stats RPC exposes the preemption counters to tenants.
+    let report = control.sched_stats().unwrap();
+    assert_eq!(report.preemptions, sim.counters.preemptions);
+    assert_eq!(report.resumes, sim.counters.resumes);
 }
 
 #[test]
