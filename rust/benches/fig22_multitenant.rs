@@ -81,10 +81,13 @@ fn main() {
         &["policy", "mean turnaround (ms)", "makespan (ms)", "preempt/resume"],
     );
     let mut means = Vec::new();
+    let mut per_policy = Vec::new();
     for policy in [Policy::Elastic, Policy::Quantum, Policy::ElasticPreempt] {
         let r = simulate(&catalog, &w, &SimConfig::new(ShellBoard::Ultra96, policy));
-        let mean_ms = mean_turnaround_ns(&w, &r) / 1e6;
+        let mean_ns = mean_turnaround_ns(&w, &r);
+        let mean_ms = mean_ns / 1e6;
         means.push((policy, mean_ms));
+        per_policy.push((policy.name(), mean_ns, r.counters.clone()));
         t2.row(&[
             policy.name().into(),
             format!("{mean_ms:.2}"),
@@ -100,5 +103,34 @@ fn main() {
             policy.name(),
             100.0 * mean_ms / rtc
         );
+    }
+
+    // Machine-readable result for the CI bench-regression gate: mean
+    // turnaround (virtual ns — deterministic, so a >20% drift is a real
+    // scheduling regression, not machine noise), reconfiguration and
+    // preemption counts per policy.
+    use fos::json::{b, f, obj, s};
+    let policies = obj(per_policy
+        .iter()
+        .map(|(name, mean_ns, c)| {
+            (
+                *name,
+                obj(vec![
+                    ("mean_turnaround_ns", f(*mean_ns)),
+                    ("reconfigs", f(c.reconfigs as f64)),
+                    ("preemptions", f(c.preemptions as f64)),
+                    ("resumes", f(c.resumes as f64)),
+                ]),
+            )
+        })
+        .collect());
+    let doc = obj(vec![
+        ("bench", s("fig22_multitenant")),
+        ("smoke", b(fos::testutil::bench_smoke())),
+        ("policies", policies),
+    ]);
+    match fos::testutil::write_bench_json("fig22_multitenant", &doc) {
+        Ok(p) => println!("wrote {}", p.display()),
+        Err(e) => eprintln!("could not write bench JSON: {e}"),
     }
 }

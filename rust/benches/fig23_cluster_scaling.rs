@@ -1,0 +1,127 @@
+//! Fig 23 (extension): cluster scaling — the fig22 multi-tenant mix
+//! sharded over 1→8 boards (alternating Ultra96/ZCU102, the paper's
+//! two evaluation platforms) under each placement policy.
+//!
+//! The claim under test: **locality-aware placement beats blind
+//! round-robin on both reconfiguration count and mean turnaround once
+//! the cluster has ≥4 boards** — scattering a tenant's requests over
+//! every board makes every board reload every accelerator, while
+//! bitstream-affinity routing amortises one load per accelerator per
+//! home board (work stealing keeps the tail balanced).  All numbers
+//! are virtual-time (deterministic), so the emitted
+//! `BENCH_fig23_cluster_scaling.json` is regression-gateable in CI.
+
+use fos::accel::Catalog;
+use fos::json::{b, f, i, obj, s, Value};
+use fos::metrics::{cluster_summary, Table};
+use fos::sched::{
+    cluster_mean_turnaround_ns, simulate_cluster, ClusterSimConfig, ClusterSimResult,
+    PlacementKind, Policy, Workload,
+};
+use fos::shell::ShellBoard;
+
+fn boards(n: usize) -> Vec<ShellBoard> {
+    (0..n)
+        .map(|k| if k % 2 == 0 { ShellBoard::Ultra96 } else { ShellBoard::Zcu102 })
+        .collect()
+}
+
+fn run(catalog: &Catalog, w: &Workload, n: usize, kind: PlacementKind) -> ClusterSimResult {
+    simulate_cluster(catalog, w, &ClusterSimConfig::new(boards(n), Policy::Elastic, kind))
+}
+
+fn main() {
+    let catalog = Catalog::load_default().expect("run `make artifacts`");
+    // The multi-tenant mix: 8 tenants over 8 accelerators, staggered
+    // request waves (see Workload::cluster_mix) — fig22's concurrency
+    // scenario widened to exercise cross-board placement.
+    let waves = fos::testutil::bench_scale(6, 4);
+    let w = Workload::cluster_mix(8, waves, 3, 8, 400_000);
+    let kinds =
+        [PlacementKind::RoundRobin, PlacementKind::LeastLoaded, PlacementKind::Locality];
+
+    let mut t = Table::new(
+        format!(
+            "Fig 23 — cluster scaling, {} tenants x {} waves, Ultra96/ZCU102 alternating",
+            8, waves
+        ),
+        &[
+            "boards",
+            "policy",
+            "mean turnaround (ms)",
+            "makespan (ms)",
+            "reconfigs",
+            "reuses",
+            "steals",
+        ],
+    );
+    let mut sweep_entries: Vec<Value> = Vec::new();
+    let mut at4: Vec<(PlacementKind, u64, f64)> = Vec::new(); // (kind, reconfigs, mean)
+    for n in [1usize, 2, 4, 6, 8] {
+        let mut policy_fields: Vec<(&str, Value)> = Vec::new();
+        for kind in kinds {
+            let r = run(&catalog, &w, n, kind);
+            let mean_ns = cluster_mean_turnaround_ns(&w, &r);
+            let reconfigs = r.total_reconfigs();
+            let reuses: u64 = r.boards.iter().map(|x| x.counters.reuses).sum();
+            t.row(&[
+                n.to_string(),
+                kind.name().into(),
+                format!("{:.2}", mean_ns / 1e6),
+                format!("{:.2}", r.makespan as f64 / 1e6),
+                reconfigs.to_string(),
+                reuses.to_string(),
+                r.cluster.steals.to_string(),
+            ]);
+            if n == 4 {
+                at4.push((kind, reconfigs, mean_ns));
+                let per_board: Vec<(String, fos::sched::SchedCounters)> = r
+                    .boards
+                    .iter()
+                    .enumerate()
+                    .map(|(k, x)| (format!("board{k} ({})", x.board.name()), x.counters.clone()))
+                    .collect();
+                println!("{}", cluster_summary(&format!("{} x4 boards", kind.name()), &per_board));
+            }
+            policy_fields.push((
+                kind.name(),
+                obj(vec![
+                    ("mean_turnaround_ns", f(mean_ns)),
+                    ("reconfigs", f(reconfigs as f64)),
+                    ("preemptions", f(r.total_preemptions() as f64)),
+                    ("steals", f(r.cluster.steals as f64)),
+                ]),
+            ));
+        }
+        sweep_entries.push(obj(vec![
+            ("boards", i(n as i64)),
+            ("placements", obj(policy_fields)),
+        ]));
+    }
+    t.print();
+
+    // The headline comparison (the acceptance claim, also asserted by
+    // the simulator's locality_beats_round_robin_at_four_boards test).
+    let rr = at4.iter().find(|(k, _, _)| *k == PlacementKind::RoundRobin).unwrap();
+    let loc = at4.iter().find(|(k, _, _)| *k == PlacementKind::Locality).unwrap();
+    println!(
+        "at 4 boards: locality {} reconfigs vs round-robin {} ({:.0}% fewer); \
+         mean turnaround {:.2} ms vs {:.2} ms ({:.0}% lower)",
+        loc.1,
+        rr.1,
+        100.0 * (1.0 - loc.1 as f64 / rr.1.max(1) as f64),
+        loc.2 / 1e6,
+        rr.2 / 1e6,
+        100.0 * (1.0 - loc.2 / rr.2.max(1.0)),
+    );
+
+    let doc = obj(vec![
+        ("bench", s("fig23_cluster_scaling")),
+        ("smoke", b(fos::testutil::bench_smoke())),
+        ("sweep", fos::json::arr(sweep_entries)),
+    ]);
+    match fos::testutil::write_bench_json("fig23_cluster_scaling", &doc) {
+        Ok(p) => println!("wrote {}", p.display()),
+        Err(e) => eprintln!("could not write bench JSON: {e}"),
+    }
+}

@@ -42,6 +42,42 @@ pub struct SchedStatsReport {
     pub paused: bool,
 }
 
+/// One board's slice of the daemon's `cluster-stats`/`board-stats`
+/// replies (mirrors one scheduler shard's counters).
+#[derive(Debug, Clone, Default)]
+pub struct BoardStatsReport {
+    /// Board name (`Ultra96`, `ZCU102`, ...).
+    pub board: String,
+    /// Board index (the id `board_stats` is keyed by).
+    pub index: u64,
+    pub queued: u64,
+    pub running: u64,
+    pub reconfigs: u64,
+    pub reuses: u64,
+    pub skips: u64,
+    pub replications: u64,
+    pub preemptions: u64,
+    pub resumes: u64,
+}
+
+/// The daemon's `cluster-stats` reply: placement policy, routing and
+/// work-stealing counters, cluster totals and one entry per board.
+#[derive(Debug, Clone, Default)]
+pub struct ClusterStatsReport {
+    pub placement: String,
+    pub boards: Vec<BoardStatsReport>,
+    /// Requests routed to a board at admission.
+    pub routed: u64,
+    /// Requests moved between boards by work stealing.
+    pub steals: u64,
+    pub queued: u64,
+    pub reconfigs: u64,
+    pub reuses: u64,
+    pub preemptions: u64,
+    pub resumes: u64,
+    pub paused: bool,
+}
+
 /// Per-run latency report.
 #[derive(Debug, Clone)]
 pub struct RunReport {
@@ -211,6 +247,40 @@ impl FpgaRpc {
         })
     }
 
+    /// Cluster-wide scheduling stats: placement policy, routing and
+    /// work-stealing counters, and one [`BoardStatsReport`] per board.
+    pub fn cluster_stats(&mut self) -> Result<ClusterStatsReport, ProtoError> {
+        let r = self.call(obj(vec![("method", s("cluster-stats"))]))?;
+        let num = |key: &str| r.get(key).as_u64().unwrap_or(0);
+        let boards = r
+            .get("boards")
+            .as_array()
+            .map(|a| a.iter().map(board_report).collect())
+            .unwrap_or_default();
+        Ok(ClusterStatsReport {
+            placement: r.get("placement").as_str().unwrap_or("").to_string(),
+            boards,
+            routed: num("routed"),
+            steals: num("steals"),
+            queued: num("queued"),
+            reconfigs: num("reconfigs"),
+            reuses: num("reuses"),
+            preemptions: num("preemptions"),
+            resumes: num("resumes"),
+            paused: num("paused") != 0,
+        })
+    }
+
+    /// One board's scheduling counters and queue depth.  Errors for an
+    /// out-of-range board index.
+    pub fn board_stats(&mut self, board: usize) -> Result<BoardStatsReport, ProtoError> {
+        let r = self.call(obj(vec![
+            ("method", s("board-stats")),
+            ("board", i(board as i64)),
+        ]))?;
+        Ok(board_report(&r))
+    }
+
     /// Offload data-parallel acceleration requests (Listing 4's
     /// `fpgaRpc.Run(job)`). Blocks until every request completed.
     pub fn run(&mut self, jobs: &[Job]) -> Result<RunReport, ProtoError> {
@@ -230,5 +300,22 @@ impl FpgaRpc {
             modelled_us: nums("modelled_us"),
             round_trip: t0.elapsed(),
         })
+    }
+}
+
+/// Parse one board object of a `cluster-stats`/`board-stats` reply.
+fn board_report(v: &Value) -> BoardStatsReport {
+    let num = |key: &str| v.get(key).as_u64().unwrap_or(0);
+    BoardStatsReport {
+        board: v.get("board").as_str().unwrap_or("").to_string(),
+        index: num("index"),
+        queued: num("queued"),
+        running: num("running"),
+        reconfigs: num("reconfigs"),
+        reuses: num("reuses"),
+        skips: num("skips"),
+        replications: num("replications"),
+        preemptions: num("preemptions"),
+        resumes: num("resumes"),
     }
 }

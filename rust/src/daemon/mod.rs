@@ -18,13 +18,19 @@
 //! default, [`crate::sched::Policy::Fixed`] reproduces the paper's
 //! static baseline, and custom [`crate::sched::SchedPolicy`]
 //! registrations are addressable by name.
+//!
+//! [`Daemon::start_cluster`] scales the same daemon to N boards: one
+//! `Cynq` stack and scheduler shard per board behind one dispatcher,
+//! with a [`crate::sched::PlacementKind`] policy routing requests and
+//! `cluster-stats`/`board-stats` RPCs ([`FpgaRpc::cluster_stats`],
+//! [`FpgaRpc::board_stats`]) exposing the per-board counters.
 
 mod proto;
 mod server;
 mod client;
 mod shm;
 
-pub use client::{FpgaRpc, RunReport, SchedStatsReport};
+pub use client::{BoardStatsReport, ClusterStatsReport, FpgaRpc, RunReport, SchedStatsReport};
 pub use proto::{read_msg, write_msg, Job, ProtoError};
-pub use server::{Daemon, DaemonStats};
+pub use server::{BoardStats, Daemon, DaemonStats};
 pub use shm::SharedMem;

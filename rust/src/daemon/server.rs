@@ -19,13 +19,36 @@
 //! one trace the simulator and the daemon produce identical decision
 //! sequences — preemptions included — asserted by
 //! `tests/sched_parity.rs`.
+//!
+//! ## Multi-fabric dispatch (the cluster layer)
+//!
+//! [`Daemon::start_cluster`] brings up one `Cynq` stack per board
+//! (heterogeneous mixes welcome) behind one dispatcher thread driving
+//! a [`crate::sched::ClusterCore`]: requests are routed to a board at
+//! admission by a [`crate::sched::PlacementPolicy`]
+//! (round-robin / least-loaded / locality), each board keeps its own
+//! scheduler shard, resident-module map, snapshot store and preemption
+//! tick, completions from every board replay through one virtual-time
+//! heap, and an idle board steals queued work from an overloaded one
+//! at the same round boundary the cluster simulator uses — so the
+//! per-shard decision sequences still match the simulator verbatim
+//! (`tests/cluster_parity.rs`).  The single-board constructors are a
+//! one-board cluster.  `cluster-stats` / `board-stats` RPCs and the
+//! per-board mirrors in [`DaemonStats::per_board`] expose the
+//! per-board reconfiguration/preemption counters.  Device memory RPCs
+//! (`alloc`/`write`/shm-import) are *broadcast* into every board's DDR
+//! arena — the allocators evolve in lockstep, so a buffer has the same
+//! physical address cluster-wide and a job can run on any board —
+//! while reads come from the primary (board 0) arena, into which each
+//! completed job's outputs are synced back (the explicit cross-board
+//! result transfer).
 
 use super::proto::{self, read_msg, write_msg, Job};
 use super::shm::SharedMem;
 use crate::accel::Catalog;
 use crate::driver::{AccelSnapshot, Cynq, LoadedAccel, PhysAddr};
 use crate::json::{arr, f, i, obj, s, Value};
-use crate::sched::{Decision, DecisionKind, Policy, SchedCore, SchedCounters};
+use crate::sched::{ClusterCore, Decision, DecisionKind, PlacementKind, Policy};
 use crate::shell::ShellBoard;
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap, VecDeque};
@@ -64,6 +87,42 @@ pub struct DaemonStats {
     pub sched_ns: AtomicU64,
     pub sched_decisions: AtomicU64,
     pub rpcs: AtomicU64,
+    /// Requests routed to a board at admission (cluster layer).
+    pub routed: AtomicU64,
+    /// Requests moved between boards by work stealing.
+    pub steals: AtomicU64,
+    /// Per-board mirrors of each shard's scheduling counters — the
+    /// cluster observability surface (`board-stats` reports from the
+    /// same source).  Empty only for a `Default`-built block.
+    pub per_board: Vec<BoardStats>,
+}
+
+/// Per-board mirror of one scheduler shard's
+/// [`crate::sched::SchedCounters`].
+#[derive(Debug, Default)]
+pub struct BoardStats {
+    /// Board name (`Ultra96`, `ZCU102`, ...).
+    pub board: String,
+    pub reconfigs: AtomicU64,
+    pub reuses: AtomicU64,
+    pub skips: AtomicU64,
+    pub replications: AtomicU64,
+    pub preemptions: AtomicU64,
+    pub resumes: AtomicU64,
+}
+
+impl DaemonStats {
+    /// A stats block sized for a cluster of `boards` (one per-board
+    /// mirror each).
+    pub fn for_boards(boards: &[ShellBoard]) -> DaemonStats {
+        DaemonStats {
+            per_board: boards
+                .iter()
+                .map(|b| BoardStats { board: b.name().to_string(), ..Default::default() })
+                .collect(),
+            ..Default::default()
+        }
+    }
 }
 
 enum Msg {
@@ -100,9 +159,22 @@ enum Msg {
     Query {
         reply: mpsc::Sender<Value>,
     },
-    /// Snapshot of the scheduler core's ordered decision log — the
-    /// last `limit` entries, or all retained ones when `None`.
+    /// Cluster-wide stats: totals, routing/steal counters and one
+    /// object per board.
+    QueryCluster {
+        reply: mpsc::Sender<Value>,
+    },
+    /// One board's scheduler counters and queue depth.
+    QueryBoard {
+        board: usize,
+        reply: mpsc::Sender<Value>,
+    },
+    /// Tail of a decision log: one board's (`board: Some`) or the
+    /// merged cluster log (`None`).  `limit: None` means "all retained
+    /// entries" — still bounded by the core's ring cap; the reply
+    /// clones only the tail, never scans the whole ring.
     QueryLog {
+        board: Option<usize>,
         limit: Option<usize>,
         reply: mpsc::Sender<Vec<Decision>>,
     },
@@ -121,6 +193,7 @@ enum MemOp {
 /// A running daemon instance.
 pub struct Daemon {
     pub socket_path: PathBuf,
+    boards: Vec<ShellBoard>,
     stats: Arc<DaemonStats>,
     tx: mpsc::Sender<Msg>,
     stop: Arc<AtomicBool>,
@@ -138,23 +211,42 @@ impl Daemon {
         Self::start_with_policy(socket_path, board, catalog, Policy::Elastic)
     }
 
-    /// Start the daemon: bind the socket, bring up the FPGA, spawn the
-    /// accept loop and the dispatcher. `default_policy` routes tenants
-    /// that never call `FpgaRpc::set_policy`.
+    /// Start a single-board daemon (a one-board cluster).
+    /// `default_policy` routes tenants that never call
+    /// `FpgaRpc::set_policy`.
     pub fn start_with_policy(
         socket_path: impl AsRef<Path>,
         board: ShellBoard,
         catalog: Catalog,
         default_policy: Policy,
     ) -> io::Result<Daemon> {
+        Self::start_cluster(socket_path, &[board], catalog, default_policy, PlacementKind::Locality)
+    }
+
+    /// Start a multi-fabric daemon: bind the socket, bring up one FPGA
+    /// (`Cynq`) per entry of `boards` — heterogeneous mixes welcome —
+    /// and spawn the accept loop plus one dispatcher thread driving a
+    /// scheduler shard per board, with `placement` routing every
+    /// request to a board at admission.
+    pub fn start_cluster(
+        socket_path: impl AsRef<Path>,
+        boards: &[ShellBoard],
+        catalog: Catalog,
+        default_policy: Policy,
+        placement: PlacementKind,
+    ) -> io::Result<Daemon> {
+        assert!(!boards.is_empty(), "a cluster needs at least one board");
         let socket_path = socket_path.as_ref().to_path_buf();
         let _ = std::fs::remove_file(&socket_path);
         let listener = UnixListener::bind(&socket_path)?;
         listener.set_nonblocking(true)?;
-        let cynq = Cynq::open(board, catalog)
+        let cynqs = boards
+            .iter()
+            .map(|&b| Cynq::open(b, catalog.clone()))
+            .collect::<Result<Vec<Cynq>, _>>()
             .map_err(|e| io::Error::new(io::ErrorKind::Other, e.to_string()))?;
 
-        let stats = Arc::new(DaemonStats::default());
+        let stats = Arc::new(DaemonStats::for_boards(boards));
         let stop = Arc::new(AtomicBool::new(false));
         let (tx, rx) = mpsc::channel::<Msg>();
 
@@ -162,7 +254,7 @@ impl Daemon {
             let stats = stats.clone();
             std::thread::Builder::new()
                 .name("fos-dispatch".into())
-                .spawn(move || dispatcher(cynq, rx, stats, default_policy))?
+                .spawn(move || dispatcher(cynqs, rx, stats, default_policy, placement))?
         };
 
         let accept_handle = {
@@ -193,6 +285,7 @@ impl Daemon {
 
         Ok(Daemon {
             socket_path,
+            boards: boards.to_vec(),
             stats,
             tx,
             stop,
@@ -205,22 +298,35 @@ impl Daemon {
         &self.stats
     }
 
-    /// Snapshot of the scheduler core's ordered decision log (the most
-    /// recent entries, ring-capped by the core). Empty once the
-    /// dispatcher has stopped.
+    /// The boards this daemon dispatches to (index order = board ids).
+    pub fn boards(&self) -> &[ShellBoard] {
+        &self.boards
+    }
+
+    /// Snapshot of the merged cluster decision log in dispatch order
+    /// (the most recent entries, ring-capped). For a single-board
+    /// daemon this is the board's log. Empty once the dispatcher has
+    /// stopped.
     pub fn decision_log(&self) -> Vec<Decision> {
-        self.decision_log_query(None)
+        self.decision_log_query(None, None)
     }
 
-    /// The last `n` decisions only — what monitoring loops should poll
-    /// (a full-log snapshot clones up to the whole ring).
+    /// The last `n` merged decisions only — what monitoring loops
+    /// should poll.  The dispatcher clones only the tail (O(n)
+    /// positioning, never a full-ring scan).
     pub fn decision_log_tail(&self, n: usize) -> Vec<Decision> {
-        self.decision_log_query(Some(n))
+        self.decision_log_query(None, Some(n))
     }
 
-    fn decision_log_query(&self, limit: Option<usize>) -> Vec<Decision> {
+    /// One board's ordered decision log — the per-shard sequence the
+    /// cluster parity test compares against the simulator's.
+    pub fn board_decision_log(&self, board: usize) -> Vec<Decision> {
+        self.decision_log_query(Some(board), None)
+    }
+
+    fn decision_log_query(&self, board: Option<usize>, limit: Option<usize>) -> Vec<Decision> {
         let (rtx, rrx) = mpsc::channel();
-        if self.tx.send(Msg::QueryLog { limit, reply: rtx }).is_err() {
+        if self.tx.send(Msg::QueryLog { board, limit, reply: rtx }).is_err() {
             return Vec::new();
         }
         rrx.recv().unwrap_or_default()
@@ -304,6 +410,13 @@ fn serve(
             "pause" => ask(tx, |reply| Msg::Pause { reply }),
             "resume" => ask(tx, |reply| Msg::Resume { reply }),
             "stats" => ask(tx, |reply| Msg::Query { reply }),
+            "cluster-stats" => ask(tx, |reply| Msg::QueryCluster { reply }),
+            "board-stats" => match msg.req_u64("board") {
+                Err(e) => err_val(&e),
+                Ok(board) => {
+                    ask(tx, |reply| Msg::QueryBoard { board: board as usize, reply })
+                }
+            },
             "alloc" | "free" | "write" | "read" | "import" | "export" => {
                 match parse_mem_op(method, &msg) {
                     Err(e) => err_val(&e),
@@ -397,6 +510,9 @@ impl PendingJob {
 /// decision says, instead of having eagerly computed the whole batch.
 struct Inflight {
     d: Decision,
+    /// Board the decision was dispatched on (its `Cynq`, resident map
+    /// and snapshot store).
+    board: usize,
     job: Job,
     batch: usize,
     /// Module handle for execution; `None` when the (re)load failed —
@@ -430,20 +546,62 @@ fn fail_job(batches: &mut HashMap<usize, Batch>, batch_id: usize, err: String) {
     }
 }
 
-/// The dispatcher: owns the FPGA and drives the shared scheduler core.
-/// Blocks on the channel when idle or paused; while work is in flight
-/// it alternates message draining, scheduling rounds and virtual-time
+/// One board's hardware-side state: its `Cynq` stack, the resident
+/// module map, the dispatch-in-flight index, the register-file
+/// snapshot store (keyed by the *shard's* checkpoint ids — ids are
+/// per-shard, so each board keeps its own map) and its preemption
+/// tick.
+struct BoardHw {
+    cynq: Cynq,
+    /// anchor -> (handle, span) of the modules on this fabric.
+    resident: HashMap<usize, (LoadedAccel, usize)>,
+    /// anchor -> seq of the dispatch currently running there.
+    running_seq: HashMap<usize, u64>,
+    /// checkpoint id -> register-file + progress snapshot (the
+    /// hardware half of this shard's checkpoint store).
+    snapshots: HashMap<u64, AccelSnapshot>,
+    /// One pending preemption-check tick at a time (sim parity).
+    next_tick: Option<u64>,
+}
+
+/// The dispatcher: owns every board's FPGA and drives the shared
+/// cluster core (one scheduler shard per board).  Blocks on the
+/// channel when idle or paused; while work is in flight it alternates
+/// message draining, per-board scheduling rounds and virtual-time
 /// completion replay — never a hot spin.
 ///
 /// Execution is *deferred*: a decision mirrors its reconfiguration onto
-/// the hardware immediately (that is when the fabric changes), but
+/// its board immediately (that is when the fabric changes), but
 /// register programming and tile compute run when the decision's
 /// virtual completion is replayed.  A `Preempt` decision arriving
 /// before that point cancels the completion, runs only the tiles the
 /// virtual clock says finished, and checkpoints the accelerator —
-/// so preempted work is split, never recomputed.
-fn dispatcher(mut cynq: Cynq, rx: mpsc::Receiver<Msg>, stats: Arc<DaemonStats>, policy: Policy) {
-    let mut core = SchedCore::new(&cynq.shell, cynq.catalog.clone(), policy);
+/// so preempted work is split, never recomputed.  Completions from
+/// every board share one virtual-time heap, and every event batch
+/// triggers a round on each board in index order — exactly the
+/// cluster simulator's loop, which is what keeps per-shard decision
+/// parity.
+fn dispatcher(
+    cynqs: Vec<Cynq>,
+    rx: mpsc::Receiver<Msg>,
+    stats: Arc<DaemonStats>,
+    policy: Policy,
+    placement: PlacementKind,
+) {
+    let boards: Vec<ShellBoard> = cynqs.iter().map(|c| c.shell.board).collect();
+    let n_boards = boards.len();
+    let catalog = cynqs[0].catalog.clone();
+    let mut cluster = ClusterCore::new(&boards, &catalog, policy, placement);
+    let mut hws: Vec<BoardHw> = cynqs
+        .into_iter()
+        .map(|cynq| BoardHw {
+            cynq,
+            resident: HashMap::new(),
+            running_seq: HashMap::new(),
+            snapshots: HashMap::new(),
+            next_tick: None,
+        })
+        .collect();
     // Live batches only — finished ones are removed, so a long-lived
     // daemon does not accumulate per-job state.
     let mut batches: HashMap<usize, Batch> = HashMap::new();
@@ -458,21 +616,13 @@ fn dispatcher(mut cynq: Cynq, rx: mpsc::Receiver<Msg>, stats: Arc<DaemonStats>, 
     // State-changing messages deferred from mid-round draining (see
     // the round loop): processed before new channel messages.
     let mut inbox: VecDeque<Msg> = VecDeque::new();
-    // anchor -> (handle, span) of the modules on the fabric.
-    let mut resident: HashMap<usize, (LoadedAccel, usize)> = HashMap::new();
-    // (virtual completion time, seq, anchor) — the simulator's heap.
-    let mut completions: BinaryHeap<Reverse<(u64, u64, usize)>> = BinaryHeap::new();
+    // (virtual completion time, seq, board, anchor) — the cluster
+    // simulator's heap.
+    let mut completions: BinaryHeap<Reverse<(u64, u64, usize, usize)>> = BinaryHeap::new();
     // seq -> deferred execution context of a dispatched decision.  An
     // entry missing at completion-pop means the dispatch was preempted
     // (or the entry is a tick): the pop only advances virtual time.
     let mut inflight: HashMap<u64, Inflight> = HashMap::new();
-    // anchor -> seq of the dispatch currently running there.
-    let mut running_seq: HashMap<usize, u64> = HashMap::new();
-    // checkpoint id -> register-file + progress snapshot (the hardware
-    // half of the core's checkpoint store).
-    let mut snapshots: HashMap<u64, AccelSnapshot> = HashMap::new();
-    // One pending preemption-check tick at a time (sim parity).
-    let mut next_tick: Option<u64> = None;
     let mut seq = 0u64;
     let mut vnow = 0u64;
     let mut paused = false;
@@ -497,8 +647,8 @@ fn dispatcher(mut cynq: Cynq, rx: mpsc::Receiver<Msg>, stats: Arc<DaemonStats>, 
         if let Some(msg) = msg {
             let Some(msg) = handle_cheap(
                 msg,
-                &mut cynq,
-                &core,
+                &mut hws,
+                &cluster,
                 &mut paused,
                 &mut user_index,
                 &mut free_slots,
@@ -513,9 +663,9 @@ fn dispatcher(mut cynq: Cynq, rx: mpsc::Receiver<Msg>, stats: Arc<DaemonStats>, 
                     // so a long-lived daemon's per-user state is
                     // bounded by peak concurrency, not connections-ever.
                     if let Some(slot) = user_index.remove(&user) {
-                        for req in core.retire_user(slot) {
+                        for (b, req) in cluster.retire_user(slot) {
                             if let Some(id) = req.resume {
-                                snapshots.remove(&id); // orphaned checkpoint
+                                hws[b].snapshots.remove(&id); // orphaned checkpoint
                             }
                             if let Some(p) = pending.remove(&req.job) {
                                 fail_job(&mut batches, p.batch, "client disconnected".into());
@@ -526,13 +676,13 @@ fn dispatcher(mut cynq: Cynq, rx: mpsc::Receiver<Msg>, stats: Arc<DaemonStats>, 
                 }
                 Msg::Resume { reply } => {
                     paused = false;
-                    round_due = core.has_pending();
+                    round_due = cluster.has_pending();
                     let _ = reply.send(ok(vec![]));
                 }
                 Msg::SetPolicy { user, name, reply } => {
                     let slot = user_slot(&mut user_index, &mut free_slots, &mut next_fresh, user);
-                    let r = if core.set_user_policy(slot, &name) {
-                        round_due = core.has_pending();
+                    let r = if cluster.set_user_policy(slot, &name) {
+                        round_due = cluster.has_pending();
                         ok(vec![("policy", s(name))])
                     } else {
                         err_val(&format!("unknown policy {name:?}"))
@@ -551,9 +701,11 @@ fn dispatcher(mut cynq: Cynq, rx: mpsc::Receiver<Msg>, stats: Arc<DaemonStats>, 
                     for job in jobs {
                         let token = next_token;
                         next_token += 1;
-                        // Unknown accelerators fail fast at admission.
-                        match core.submit(slot, token, &job.accname, job.tiles, None) {
-                            Ok(()) => {
+                        // Unknown accelerators fail fast at admission;
+                        // accepted requests are routed to a board by
+                        // the placement policy right here.
+                        match cluster.submit(slot, token, &job.accname, job.tiles, None) {
+                            Ok(_board) => {
                                 pending.insert(token, PendingJob::new(job, next_batch));
                                 round_due = true;
                             }
@@ -585,192 +737,226 @@ fn dispatcher(mut cynq: Cynq, rx: mpsc::Receiver<Msg>, stats: Arc<DaemonStats>, 
             // HERE (deferred from dispatch): entries missing from
             // `inflight` were preempted mid-span (or are ticks) and
             // only advance the clock — the simulator's exact rule.
-            if let Some(&Reverse((t, _, _))) = completions.peek() {
+            if let Some(&Reverse((t, _, _, _))) = completions.peek() {
                 vnow = t;
-                while let Some(&Reverse((t2, _, _))) = completions.peek() {
+                while let Some(&Reverse((t2, _, _, _))) = completions.peek() {
                     if t2 != t {
                         break;
                     }
-                    let Reverse((_, sq, anchor)) = completions.pop().unwrap();
+                    let Reverse((_, sq, _, anchor)) = completions.pop().unwrap();
                     if let Some(inf) = inflight.remove(&sq) {
-                        if running_seq.get(&anchor) == Some(&sq) {
-                            running_seq.remove(&anchor);
+                        let b = inf.board;
+                        if hws[b].running_seq.get(&anchor) == Some(&sq) {
+                            hws[b].running_seq.remove(&anchor);
                         }
-                        core.complete(anchor);
-                        finish_inflight(&mut cynq, &mut snapshots, &mut batches, inf);
+                        cluster.complete(b, anchor);
+                        finish_inflight(&mut hws, &mut batches, inf);
                     }
                 }
-                round_due = core.has_pending();
+                round_due = cluster.has_pending();
             }
             continue;
         }
         round_due = false;
 
-        // One scheduling round at the current virtual time: place as
-        // many requests as the policy allows.  Reconfigurations are
-        // mirrored onto the hardware immediately; compute is deferred
-        // to the decision's virtual completion (or preemption point).
-        core.begin_round_at(vnow);
+        // One scheduling round per board at the current virtual time,
+        // in board order (the cluster simulator's exact rule): an idle
+        // board first steals from the deepest over-threshold backlog,
+        // then places as many requests as its policy allows.
+        // Reconfigurations are mirrored onto the hardware immediately;
+        // compute is deferred to the decision's virtual completion (or
+        // preemption point).
         let mut placed = false;
         let mut stopping = false;
-        loop {
-            let t_sched = Instant::now();
-            let Some(d) = core.next_decision() else { break };
-            // Only committed decisions count toward the Table-4 mean —
-            // the terminal empty scan would skew it.
-            stats
-                .sched_ns
-                .fetch_add(t_sched.elapsed().as_nanos() as u64, Ordering::Relaxed);
-            stats.sched_decisions.fetch_add(1, Ordering::Relaxed);
-            // Publish the core's counters before any client can observe
-            // this decision's batch reply — readers must never see
-            // pre-decision totals.
-            mirror_counters(&stats, core.counters());
-            placed = true;
+        'rounds: for b in 0..n_boards {
+            cluster.steal_into(b);
+            cluster.begin_round_at(b, vnow);
+            loop {
+                let t_sched = Instant::now();
+                let Some(d) = cluster.next_decision(b) else { break };
+                // Only committed decisions count toward the Table-4
+                // mean — the terminal empty scan would skew it.
+                stats
+                    .sched_ns
+                    .fetch_add(t_sched.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                stats.sched_decisions.fetch_add(1, Ordering::Relaxed);
+                // Publish the counters before any client can observe
+                // this decision's batch reply — readers must never see
+                // pre-decision totals.
+                mirror_counters(&stats, &cluster);
+                placed = true;
 
-            if d.kind == DecisionKind::Preempt {
-                // Cancel the victim's virtual completion, run the slice
-                // the virtual clock says finished, checkpoint the
-                // accelerator, and re-link the proto job so the later
-                // Resume decision finds its context again.
-                if let Some(vseq) = running_seq.remove(&d.anchor) {
-                    if let Some(inf) = inflight.remove(&vseq) {
-                        let done = inf.d.tiles - d.tiles;
-                        let mut carry_us = inf.carry_us;
-                        let mut failed = inf.err;
-                        // A preempted Resume never reaches finish_inflight,
-                        // so its own pending snapshot is consumed (and
-                        // applied) here — same shared helper, so the two
-                        // paths cannot drift.
-                        let restored = take_and_restore_snapshot(&mut cynq, &mut snapshots, &inf);
-                        if failed.is_none() {
-                            let h = inf.handle.expect("loaded dispatch without handle");
-                            let t0 = Instant::now();
-                            let r = restored
-                                .and_then(|()| run_tiles(&mut cynq, h, &inf.job, done))
-                                .and_then(|()| {
-                                    let snap = cynq
-                                        .checkpoint_accelerator(h)
-                                        .map_err(|e| e.to_string())?;
-                                    snapshots
-                                        .insert(d.ckpt.expect("preempt without ckpt id"), snap);
-                                    Ok(())
-                                });
-                            if let Err(e) = r {
-                                failed = Some(e);
+                if d.kind == DecisionKind::Preempt {
+                    // Cancel the victim's virtual completion, run the
+                    // slice the virtual clock says finished, checkpoint
+                    // the accelerator, and re-link the proto job so the
+                    // later Resume decision finds its context again.
+                    let hw = &mut hws[b];
+                    if let Some(vseq) = hw.running_seq.remove(&d.anchor) {
+                        if let Some(inf) = inflight.remove(&vseq) {
+                            let done = inf.d.tiles - d.tiles;
+                            let mut carry_us = inf.carry_us;
+                            let mut failed = inf.err;
+                            // A preempted Resume never reaches
+                            // finish_inflight, so its own pending
+                            // snapshot is consumed (and applied) here —
+                            // same shared helper, so the two paths
+                            // cannot drift.
+                            let restored =
+                                take_and_restore_snapshot(&mut hw.cynq, &mut hw.snapshots, &inf);
+                            if failed.is_none() {
+                                let h = inf.handle.expect("loaded dispatch without handle");
+                                let t0 = Instant::now();
+                                let r = restored
+                                    .and_then(|()| run_tiles(&mut hw.cynq, h, &inf.job, done))
+                                    .and_then(|()| {
+                                        let snap = hw
+                                            .cynq
+                                            .checkpoint_accelerator(h)
+                                            .map_err(|e| e.to_string())?;
+                                        hw.snapshots.insert(
+                                            d.ckpt.expect("preempt without ckpt id"),
+                                            snap,
+                                        );
+                                        Ok(())
+                                    });
+                                if let Err(e) = r {
+                                    failed = Some(e);
+                                }
+                                carry_us += t0.elapsed().as_secs_f64() * 1e6;
                             }
-                            carry_us += t0.elapsed().as_secs_f64() * 1e6;
+                            let carry_modelled_us = inf.carry_modelled_us
+                                + vnow.saturating_sub(inf.start_ns) as f64 / 1e3;
+                            pending.insert(
+                                d.job,
+                                PendingJob {
+                                    job: inf.job,
+                                    batch: inf.batch,
+                                    carry_us,
+                                    carry_modelled_us,
+                                    failed,
+                                },
+                            );
                         }
-                        let carry_modelled_us = inf.carry_modelled_us
-                            + vnow.saturating_sub(inf.start_ns) as f64 / 1e3;
-                        pending.insert(
-                            d.job,
-                            PendingJob {
-                                job: inf.job,
-                                batch: inf.batch,
-                                carry_us,
-                                carry_modelled_us,
-                                failed,
-                            },
-                        );
+                    }
+                    continue;
+                }
+
+                // Virtual service latency from this shard's cost model
+                // — identical to the simulator's for the same decision.
+                let busy_others = cluster.busy_anchors(b).saturating_sub(1);
+                let lat = cluster.service_ns(b, &d, busy_others);
+                cluster.mark_running(b, &d, vnow, vnow + lat);
+
+                let p = pending.remove(&d.job).expect("decision for unknown job token");
+                let mut handle = None;
+                let mut err = p.failed;
+                // Mirror the configuration effect even when an earlier
+                // slice already failed (err pre-set): the shard's
+                // region map has recorded this placement either way,
+                // and skipping the load would leave the hardware's
+                // residency permanently diverged at this anchor.  Only
+                // compute is gated on `err`.
+                {
+                    let hw = &mut hws[b];
+                    match ensure_module(&mut hw.cynq, &mut hw.resident, &d) {
+                        Ok(h) => handle = Some(h),
+                        Err(fail) => {
+                            if fail.module_missing {
+                                // The (re)load itself failed: forget
+                                // the shard's residency bookkeeping so
+                                // the next decision reconfigures
+                                // instead of reusing a phantom
+                                // instance forever.
+                                cluster.evict(b, d.anchor);
+                            }
+                            if err.is_none() {
+                                err = Some(fail.msg);
+                            }
+                        }
                     }
                 }
-                continue;
-            }
+                if d.kind == DecisionKind::Run {
+                    stats.jobs.fetch_add(1, Ordering::Relaxed);
+                }
+                if d.replicated {
+                    stats.replicated_jobs.fetch_add(1, Ordering::Relaxed);
+                }
+                completions.push(Reverse((vnow + lat, seq, b, d.anchor)));
+                hws[b].running_seq.insert(d.anchor, seq);
+                inflight.insert(
+                    seq,
+                    Inflight {
+                        board: b,
+                        job: p.job,
+                        batch: p.batch,
+                        handle,
+                        err,
+                        start_ns: vnow,
+                        lat_ns: lat,
+                        carry_us: p.carry_us,
+                        carry_modelled_us: p.carry_modelled_us,
+                        d,
+                    },
+                );
+                seq += 1;
 
-            // Virtual service latency from the shared cost model —
-            // identical to the simulator's for the same decision.
-            let busy_others = core.busy_anchors().saturating_sub(1);
-            let lat = core.service_ns(&d, busy_others);
-            core.mark_running(&d, vnow, vnow + lat);
-
-            let p = pending.remove(&d.job).expect("decision for unknown job token");
-            let mut handle = None;
-            let mut err = p.failed;
-            // Mirror the configuration effect even when an earlier slice
-            // already failed (err pre-set): the core's region map has
-            // recorded this placement either way, and skipping the load
-            // would leave the hardware's residency permanently diverged
-            // at this anchor.  Only compute is gated on `err`.
-            match ensure_module(&mut cynq, &mut resident, &d) {
-                Ok(h) => handle = Some(h),
-                Err(fail) => {
-                    if fail.module_missing {
-                        // The (re)load itself failed: forget the
-                        // core's residency bookkeeping so the next
-                        // decision reconfigures instead of reusing
-                        // a phantom instance forever.
-                        core.evict(d.anchor);
-                    }
-                    if err.is_none() {
-                        err = Some(fail.msg);
+                // Keep cheap RPCs (connects, mem ops, stats) responsive
+                // between decisions. State-changing messages are
+                // deferred to the inbox so arrivals keep the
+                // simulator's between-rounds cadence
+                // (decision-sequence parity).
+                while let Ok(m) = rx.try_recv() {
+                    match handle_cheap(
+                        m,
+                        &mut hws,
+                        &cluster,
+                        &mut paused,
+                        &mut user_index,
+                        &mut free_slots,
+                        &mut next_fresh,
+                    ) {
+                        None => {}
+                        Some(Msg::Stop) => {
+                            stopping = true;
+                            break;
+                        }
+                        Some(other) => inbox.push_back(other),
                     }
                 }
-            }
-            if d.kind == DecisionKind::Run {
-                stats.jobs.fetch_add(1, Ordering::Relaxed);
-            }
-            if d.replicated {
-                stats.replicated_jobs.fetch_add(1, Ordering::Relaxed);
-            }
-            completions.push(Reverse((vnow + lat, seq, d.anchor)));
-            running_seq.insert(d.anchor, seq);
-            inflight.insert(
-                seq,
-                Inflight {
-                    job: p.job,
-                    batch: p.batch,
-                    handle,
-                    err,
-                    start_ns: vnow,
-                    lat_ns: lat,
-                    carry_us: p.carry_us,
-                    carry_modelled_us: p.carry_modelled_us,
-                    d,
-                },
-            );
-            seq += 1;
-
-            // Keep cheap RPCs (connects, mem ops, stats) responsive
-            // between decisions. State-changing messages are deferred
-            // to the inbox so arrivals keep the simulator's
-            // between-rounds cadence (decision-sequence parity).
-            while let Ok(m) = rx.try_recv() {
-                match handle_cheap(
-                    m,
-                    &mut cynq,
-                    &core,
-                    &mut paused,
-                    &mut user_index,
-                    &mut free_slots,
-                    &mut next_fresh,
-                ) {
-                    None => {}
-                    Some(Msg::Stop) => {
-                        stopping = true;
-                        break;
-                    }
-                    Some(other) => inbox.push_back(other),
+                if stopping || paused {
+                    break 'rounds; // hold the rest of the rounds
                 }
             }
-            if stopping || paused {
-                break; // hold the rest of the round
+
+            // Per-board preemption-check cadence — the core-owned rule
+            // the simulator uses verbatim, so the two paths cannot
+            // drift apart on when a re-check round happens (that would
+            // break decision parity).
+            let due = cluster.preempt_tick_due(b, &mut hws[b].next_tick, vnow);
+            if let Some(t) = due {
+                completions.push(Reverse((t, seq, b, TICK_ANCHOR)));
+                seq += 1;
             }
         }
-        // Mirror the core's counters once more: the terminal
-        // next_decision() scan may have deferred users (skips).
-        mirror_counters(&stats, core.counters());
+        // Mirror the counters once more: the terminal next_decision()
+        // scans may have deferred users (skips).
+        mirror_counters(&stats, &cluster);
 
-        // Requests the core rejected instead of dispatching (unknown
+        // Requests any shard rejected instead of dispatching (unknown
         // accelerator past admission, or a policy naming an unknown
         // variant): surface the reason to the waiting client — the
-        // dispatcher itself stays alive.
-        for (req, reason) in core.take_rejected() {
-            if let Some(id) = req.resume {
-                snapshots.remove(&id);
-            }
-            if let Some(p) = pending.remove(&req.job) {
-                fail_job(&mut batches, p.batch, reason);
+        // dispatcher itself stays alive.  Swept here (not per board
+        // inside the round loop) so a paused/stopping early break can
+        // never strand a rejection.
+        for b in 0..n_boards {
+            for (req, reason) in cluster.take_rejected(b) {
+                if let Some(id) = req.resume {
+                    hws[b].snapshots.remove(&id);
+                }
+                if let Some(p) = pending.remove(&req.job) {
+                    fail_job(&mut batches, p.batch, reason);
+                }
             }
         }
 
@@ -778,22 +964,14 @@ fn dispatcher(mut cynq: Cynq, rx: mpsc::Receiver<Msg>, stats: Arc<DaemonStats>, 
             break 'outer;
         }
 
-        // Preemption-check cadence — the core-owned rule the simulator
-        // uses verbatim, so the two paths cannot drift apart on when a
-        // re-check round happens (that would break decision parity).
-        if let Some(t) = core.preempt_tick_due(&mut next_tick, vnow) {
-            completions.push(Reverse((t, seq, TICK_ANCHOR)));
-            seq += 1;
-        }
-
-        if !placed && !paused && inflight.is_empty() && core.has_pending() {
-            // Stall guard: nothing running, nothing placeable, so no
-            // future completion can unblock these requests — fail them
-            // instead of hanging their clients.
-            for req in core.drain_pending() {
-                let policy_name = core.policy_name_of(req.user);
+        if !placed && !paused && inflight.is_empty() && cluster.has_pending() {
+            // Stall guard: nothing running anywhere, nothing placeable,
+            // so no future completion can unblock these requests —
+            // fail them instead of hanging their clients.
+            for (b, req) in cluster.drain_pending() {
+                let policy_name = cluster.policy_name_of(req.user);
                 if let Some(id) = req.resume {
-                    snapshots.remove(&id);
+                    hws[b].snapshots.remove(&id);
                 }
                 if let Some(p) = pending.remove(&req.job) {
                     fail_job(
@@ -838,24 +1016,66 @@ fn take_and_restore_snapshot(
     }
 }
 
+/// Copy a completed job's output buffers from the board that computed
+/// them back into the primary (board 0) arena clients read from — the
+/// cluster's explicit cross-board result transfer.  Inputs need no
+/// staging: [`mem_op`] broadcasts every write, so operands are already
+/// resident on all boards at the same addresses.  No-op on board 0.
+fn sync_outputs_to_primary(
+    hws: &mut [BoardHw],
+    board: usize,
+    job: &Job,
+    accel: &str,
+) -> Result<(), String> {
+    if board == 0 {
+        return Ok(());
+    }
+    let Some(spec) = hws[0].cynq.catalog.get(accel).cloned() else {
+        return Ok(()); // decisions never name unknown accelerators
+    };
+    let n_in = spec.inputs.len();
+    // Non-control registers zip with input specs then output specs —
+    // the same ordering `Cynq::run` DMAs by.
+    for (k, reg) in spec.registers.iter().filter(|r| r.name != "control").enumerate() {
+        if k < n_in {
+            continue;
+        }
+        let Some(out) = spec.outputs.get(k - n_in) else { break };
+        let Some(&(_, addr)) = job.params.iter().find(|(name, _)| name == &reg.name) else {
+            continue; // job did not program this output register
+        };
+        let data = hws[board]
+            .cynq
+            .read_f32(PhysAddr(addr), out.bytes() / 4)
+            .map_err(|e| e.to_string())?;
+        hws[0].cynq.write_f32(PhysAddr(addr), &data).map_err(|e| e.to_string())?;
+    }
+    Ok(())
+}
+
 /// Execute a dispatch at its virtual completion: restore the checkpoint
-/// for resumes, program the operand registers, run every tile, and
-/// settle the batch reply.  Errors recorded at dispatch (failed loads)
-/// surface here too.
-fn finish_inflight(
-    cynq: &mut Cynq,
-    snapshots: &mut HashMap<u64, AccelSnapshot>,
-    batches: &mut HashMap<usize, Batch>,
-    inf: Inflight,
-) {
+/// for resumes, program the operand registers, run every tile, sync the
+/// outputs back to the primary arena, and settle the batch reply.
+/// Errors recorded at dispatch (failed loads) surface here too.
+fn finish_inflight(hws: &mut [BoardHw], batches: &mut HashMap<usize, Batch>, inf: Inflight) {
+    let board = inf.board;
     let mut err = inf.err;
     let t0 = Instant::now();
     // A Resume consumes its snapshot however it ends — a checkpoint
     // whose resume errored must not sit in the map forever.
-    let restored = take_and_restore_snapshot(cynq, snapshots, &inf);
+    let restored = {
+        let hw = &mut hws[board];
+        take_and_restore_snapshot(&mut hw.cynq, &mut hw.snapshots, &inf)
+    };
     if err.is_none() {
         let h = inf.handle.expect("loaded dispatch without handle");
-        if let Err(e) = restored.and_then(|()| run_tiles(cynq, h, &inf.job, inf.d.tiles)) {
+        let r = restored
+            .and_then(|()| {
+                let hw = &mut hws[board];
+                run_tiles(&mut hw.cynq, h, &inf.job, inf.d.tiles)
+            })
+            .and_then(|()| sync_outputs_to_primary(hws, board, &inf.job, &inf.d.accel));
+        if let Err(e) = r {
             err = Some(e);
         }
     }
@@ -874,15 +1094,33 @@ fn finish_inflight(
     }
 }
 
-/// Publish the core's [`SchedCounters`] into the daemon's atomics —
-/// the single scheduling-counter source both paths report from.
-fn mirror_counters(stats: &DaemonStats, c: &SchedCounters) {
-    stats.reconfig_loads.store(c.reconfigs, Ordering::Relaxed);
-    stats.reuse_hits.store(c.reuses, Ordering::Relaxed);
-    stats.skips.store(c.skips, Ordering::Relaxed);
-    stats.replications.store(c.replications, Ordering::Relaxed);
-    stats.preemptions.store(c.preemptions, Ordering::Relaxed);
-    stats.resumes.store(c.resumes, Ordering::Relaxed);
+/// Publish every shard's [`crate::sched::SchedCounters`] into the
+/// daemon's atomics —
+/// the per-board mirrors plus the cluster-wide totals the legacy
+/// fields carry.  The single scheduling-counter source both paths
+/// report from.
+fn mirror_counters(stats: &DaemonStats, cluster: &ClusterCore) {
+    for b in 0..cluster.len() {
+        let c = cluster.core(b).counters();
+        if let Some(pb) = stats.per_board.get(b) {
+            pb.reconfigs.store(c.reconfigs, Ordering::Relaxed);
+            pb.reuses.store(c.reuses, Ordering::Relaxed);
+            pb.skips.store(c.skips, Ordering::Relaxed);
+            pb.replications.store(c.replications, Ordering::Relaxed);
+            pb.preemptions.store(c.preemptions, Ordering::Relaxed);
+            pb.resumes.store(c.resumes, Ordering::Relaxed);
+        }
+    }
+    let total = cluster.total_counters();
+    stats.reconfig_loads.store(total.reconfigs, Ordering::Relaxed);
+    stats.reuse_hits.store(total.reuses, Ordering::Relaxed);
+    stats.skips.store(total.skips, Ordering::Relaxed);
+    stats.replications.store(total.replications, Ordering::Relaxed);
+    stats.preemptions.store(total.preemptions, Ordering::Relaxed);
+    stats.resumes.store(total.resumes, Ordering::Relaxed);
+    let cc = cluster.cluster_counters();
+    stats.routed.store(cc.routed, Ordering::Relaxed);
+    stats.steals.store(cc.steals, Ordering::Relaxed);
 }
 
 /// Answer a message that needs no scheduling-state change (mem ops,
@@ -893,8 +1131,8 @@ fn mirror_counters(stats: &DaemonStats, c: &SchedCounters) {
 /// caller to process at round boundaries.
 fn handle_cheap(
     msg: Msg,
-    cynq: &mut Cynq,
-    core: &SchedCore,
+    hws: &mut [BoardHw],
+    cluster: &ClusterCore,
     paused: &mut bool,
     user_index: &mut HashMap<u64, usize>,
     free_slots: &mut std::collections::BTreeSet<usize>,
@@ -902,18 +1140,39 @@ fn handle_cheap(
 ) -> Option<Msg> {
     match msg {
         Msg::Mem { op, reply } => {
-            let _ = reply.send(mem_op(cynq, op));
+            let _ = reply.send(mem_op(hws, op));
         }
         Msg::Hello { user, reply } => {
             let slot = user_slot(user_index, free_slots, next_fresh, user);
             let _ = reply.send(ok(vec![("user", i(user as i64)), ("slot", i(slot as i64))]));
         }
         Msg::Query { reply } => {
-            let _ = reply.send(stats_value(core, *paused));
+            let _ = reply.send(stats_value(cluster, *paused));
         }
-        Msg::QueryLog { limit, reply } => {
-            let skip = limit.map_or(0, |n| core.decision_log().count().saturating_sub(n));
-            let _ = reply.send(core.decision_log().skip(skip).cloned().collect());
+        Msg::QueryCluster { reply } => {
+            let _ = reply.send(cluster_stats_value(cluster, *paused));
+        }
+        Msg::QueryBoard { board, reply } => {
+            let v = if board < cluster.len() {
+                ok(board_fields(cluster, board))
+            } else {
+                err_val(&format!("no board {board} (cluster has {})", cluster.len()))
+            };
+            let _ = reply.send(v);
+        }
+        Msg::QueryLog { board, limit, reply } => {
+            // Tail-only clones, O(1) positioning: a monitoring poll on
+            // a long-lived daemon never walks (or copies) the whole
+            // ring under the dispatcher's feet.
+            let n = limit.unwrap_or(usize::MAX);
+            let out: Vec<Decision> = match board {
+                Some(b) if b < cluster.len() => {
+                    cluster.core(b).decision_log_tail(n).cloned().collect()
+                }
+                Some(_) => Vec::new(),
+                None => cluster.merged_log_tail(n).map(|(_, d)| d.clone()).collect(),
+            };
+            let _ = reply.send(out);
         }
         Msg::Pause { reply } => {
             *paused = true;
@@ -924,17 +1183,58 @@ fn handle_cheap(
     None
 }
 
-/// The `stats` RPC reply: queue depth + the core's shared counters.
-fn stats_value(core: &SchedCore, paused: bool) -> Value {
-    let c = core.counters();
+/// The `stats` RPC reply: queue depth + the cluster-wide counter
+/// totals (single-board daemons report exactly the shard's counters).
+fn stats_value(cluster: &ClusterCore, paused: bool) -> Value {
+    let c = cluster.total_counters();
     ok(vec![
-        ("queued", i(core.pending() as i64)),
+        ("queued", i(cluster.pending() as i64)),
         ("reconfigs", i(c.reconfigs as i64)),
         ("reuses", i(c.reuses as i64)),
         ("skips", i(c.skips as i64)),
         ("replications", i(c.replications as i64)),
         ("preemptions", i(c.preemptions as i64)),
         ("resumes", i(c.resumes as i64)),
+        ("boards", i(cluster.len() as i64)),
+        ("paused", i(paused as i64)),
+    ])
+}
+
+/// One board's `board-stats` fields: name, queue depth and the
+/// shard's scheduling counters.
+fn board_fields(cluster: &ClusterCore, b: usize) -> Vec<(&'static str, Value)> {
+    let core = cluster.core(b);
+    let c = core.counters();
+    vec![
+        ("board", s(cluster.board(b).name())),
+        ("index", i(b as i64)),
+        ("queued", i(core.pending() as i64)),
+        ("running", i(core.running_count() as i64)),
+        ("reconfigs", i(c.reconfigs as i64)),
+        ("reuses", i(c.reuses as i64)),
+        ("skips", i(c.skips as i64)),
+        ("replications", i(c.replications as i64)),
+        ("preemptions", i(c.preemptions as i64)),
+        ("resumes", i(c.resumes as i64)),
+    ]
+}
+
+/// The `cluster-stats` RPC reply: placement policy, routing/stealing
+/// counters, totals and one object per board.
+fn cluster_stats_value(cluster: &ClusterCore, paused: bool) -> Value {
+    let t = cluster.total_counters();
+    let cc = cluster.cluster_counters();
+    let boards: Vec<Value> = (0..cluster.len()).map(|b| obj(board_fields(cluster, b))).collect();
+    ok(vec![
+        ("placement", s(cluster.placement_name())),
+        ("boards", arr(boards)),
+        ("routed", i(cc.routed as i64)),
+        ("steals", i(cc.steals as i64)),
+        ("queued", i(cluster.pending() as i64)),
+        ("reconfigs", i(t.reconfigs as i64)),
+        ("reuses", i(t.reuses as i64)),
+        ("preemptions", i(t.preemptions as i64)),
+        ("resumes", i(t.resumes as i64)),
         ("paused", i(paused as i64)),
     ])
 }
@@ -1020,21 +1320,52 @@ fn run_tiles(cynq: &mut Cynq, h: LoadedAccel, job: &Job, tiles: usize) -> Result
     Ok(())
 }
 
-fn mem_op(cynq: &mut Cynq, op: MemOp) -> Value {
+/// Broadcast a write into every board's DDR arena (operand mirroring:
+/// with the allocators in lockstep, a buffer has the same physical
+/// address on every board, so a job can be dispatched anywhere without
+/// a pre-stage copy).
+fn write_all(hws: &mut [BoardHw], addr: u64, data: &[f32]) -> Result<(), String> {
+    for hw in hws.iter_mut() {
+        hw.cynq.write_f32(PhysAddr(addr), data).map_err(|e| e.to_string())?;
+    }
+    Ok(())
+}
+
+/// Apply a memory RPC across the cluster.  Allocations, frees and
+/// writes are mirrored into *every* board's arena — the allocators
+/// evolve in lockstep, so addresses agree cluster-wide; reads come
+/// from the primary (board 0) arena, into which [`finish_inflight`]
+/// syncs every completed job's outputs.
+fn mem_op(hws: &mut [BoardHw], op: MemOp) -> Value {
     match op {
-        MemOp::Alloc { bytes } => match cynq.alloc(bytes) {
-            Ok(a) => ok(vec![("addr", i(a.0 as i64))]),
-            Err(e) => err_val(&e.to_string()),
-        },
-        MemOp::Free { addr } => match cynq.mem.free(PhysAddr(addr)) {
+        MemOp::Alloc { bytes } => {
+            let mut addr: Option<u64> = None;
+            for hw in hws.iter_mut() {
+                match hw.cynq.alloc(bytes) {
+                    Ok(a) => {
+                        let expected = *addr.get_or_insert(a.0);
+                        if expected != a.0 {
+                            return err_val("internal: cluster memory arenas diverged");
+                        }
+                    }
+                    Err(e) => return err_val(&e.to_string()),
+                }
+            }
+            ok(vec![("addr", i(addr.expect("cluster has at least one board") as i64))])
+        }
+        MemOp::Free { addr } => {
+            for hw in hws.iter_mut() {
+                if let Err(e) = hw.cynq.mem.free(PhysAddr(addr)) {
+                    return err_val(&e.to_string());
+                }
+            }
+            ok(vec![])
+        }
+        MemOp::Write { addr, data } => match write_all(hws, addr, &data) {
             Ok(()) => ok(vec![]),
-            Err(e) => err_val(&e.to_string()),
+            Err(e) => err_val(&e),
         },
-        MemOp::Write { addr, data } => match cynq.write_f32(PhysAddr(addr), &data) {
-            Ok(()) => ok(vec![]),
-            Err(e) => err_val(&e.to_string()),
-        },
-        MemOp::Read { addr, count } => match cynq.read_f32(PhysAddr(addr), count) {
+        MemOp::Read { addr, count } => match hws[0].cynq.read_f32(PhysAddr(addr), count) {
             Ok(data) => ok(vec![("b64", s(proto::f32s_to_b64(&data)))]),
             Err(e) => err_val(&e.to_string()),
         },
@@ -1042,15 +1373,15 @@ fn mem_op(cynq: &mut Cynq, op: MemOp) -> Value {
             match SharedMem::open(&shm)
                 .map_err(|e| e.to_string())
                 .and_then(|m| m.read_f32(offset, count).map_err(|e| e.to_string()))
-                .and_then(|data| {
-                    cynq.write_f32(PhysAddr(addr), &data).map_err(|e| e.to_string())
-                }) {
+                .and_then(|data| write_all(hws, addr, &data))
+            {
                 Ok(()) => ok(vec![]),
                 Err(e) => err_val(&e),
             }
         }
         MemOp::Export { addr, count, shm, offset } => {
-            match cynq
+            match hws[0]
+                .cynq
                 .read_f32(PhysAddr(addr), count)
                 .map_err(|e| e.to_string())
                 .and_then(|data| {
@@ -1258,6 +1589,71 @@ mod tests {
         // except possibly a few fixed points; check it's not identity.
         let same = out.iter().zip(&xs).filter(|(a, b)| a == b).count();
         assert!(same < 100, "{same} unchanged values");
+    }
+
+    #[test]
+    fn cluster_daemon_routes_and_reports_per_board() {
+        let _g = LOCK.lock().unwrap();
+        let path = sock("cluster");
+        let catalog = Catalog::load_default().unwrap();
+        let d = Daemon::start_cluster(
+            &path,
+            &[ShellBoard::Ultra96, ShellBoard::Zcu102],
+            catalog.clone(),
+            Policy::Elastic,
+            PlacementKind::LeastLoaded,
+        )
+        .unwrap();
+        assert_eq!(d.boards().len(), 2);
+        let mut rpc = FpgaRpc::connect(&path).unwrap();
+
+        // Cluster/board stats RPCs answer before any work arrives.
+        let cs = rpc.cluster_stats().unwrap();
+        assert_eq!(cs.placement, "least-loaded");
+        assert_eq!(cs.boards.len(), 2);
+        assert_eq!(cs.boards[0].board, "Ultra96");
+        assert_eq!(cs.boards[1].board, "ZCU102");
+        let b1 = rpc.board_stats(1).unwrap();
+        assert_eq!(b1.index, 1);
+        assert_eq!(b1.board, "ZCU102");
+        assert!(rpc.board_stats(7).is_err(), "out-of-range board must error");
+
+        // Two queued mandelbrot jobs: least-loaded routing must spread
+        // them over both boards (the second sees the first's backlog).
+        let params = crate::testutil::alloc_operand_params(&mut rpc, &catalog, "mandelbrot");
+        let jobs: Vec<Job> = (0..2)
+            .map(|_| Job::new("mandelbrot", params.clone()).with_tiles(20))
+            .collect();
+        // Operands are mirrored into every board's arena at write time,
+        // so either board can run the job; decisions are made (and
+        // logged) even when the compute backend is stubbed.
+        let _ = rpc.run(&jobs);
+
+        let merged = d.decision_log();
+        let log0 = d.board_decision_log(0);
+        let log1 = d.board_decision_log(1);
+        assert_eq!(merged.len(), log0.len() + log1.len(), "logs must partition");
+        assert!(!log0.is_empty(), "board 0 got no work");
+        assert!(!log1.is_empty(), "board 1 got no work: {merged:?}");
+        // Every decision stays inside its board's fabric.
+        assert!(log0.iter().all(|x| x.anchor + x.span <= 3));
+        assert!(log1.iter().all(|x| x.anchor + x.span <= 4));
+
+        // Aggregate stats equal the per-board sums, and the per-board
+        // atomics mirror the shard counters.
+        let st = rpc.sched_stats().unwrap();
+        let cs = rpc.cluster_stats().unwrap();
+        let sum: u64 = cs.boards.iter().map(|b| b.reconfigs + b.reuses).sum();
+        assert_eq!(sum, st.reconfigs + st.reuses);
+        assert_eq!(sum, merged.len() as u64);
+        assert_eq!(cs.routed, 2);
+        let pb = &d.stats().per_board;
+        assert_eq!(pb.len(), 2);
+        let mirrored: u64 = pb
+            .iter()
+            .map(|b| b.reconfigs.load(Ordering::Relaxed) + b.reuses.load(Ordering::Relaxed))
+            .sum();
+        assert_eq!(mirrored, sum);
     }
 
     #[test]

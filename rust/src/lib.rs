@@ -44,9 +44,15 @@
 //! their policy per connection via `FpgaRpc::set_policy`, and new
 //! policies (fairness, preemption, ...) are `SchedPolicy`
 //! implementations registered with [`sched::SchedCore::register_policy`]
-//! — not forks of the dispatch loops.  The core/policy/sim/daemon
-//! split, the decision lifecycle and the preemption state machine are
-//! documented in `src/sched/ARCHITECTURE.md`.
+//! — not forks of the dispatch loops.  Above the per-board core, the
+//! **cluster layer** ([`sched::ClusterCore`]) shards the same machinery
+//! over N heterogeneous boards behind a pluggable
+//! [`sched::PlacementPolicy`] (round-robin / least-loaded /
+//! bitstream-locality with work stealing), driven by
+//! [`sched::simulate_cluster`] offline and `Daemon::start_cluster`
+//! live.  The core/policy/sim/daemon split, the decision lifecycle,
+//! the preemption state machine and the cluster layer are documented
+//! in `src/sched/ARCHITECTURE.md`.
 
 pub mod json;
 pub mod fabric;

@@ -4,10 +4,15 @@
 //!
 //! ```text
 //! fos daemon [--socket PATH] [--board ultra96|ultrazed|zcu102]
+//!            [--boards B1,B2,...] [--placement round-robin|least-loaded|locality]
 //! fos run    [--socket PATH] --accel NAME [--requests N]
 //! fos info   [--board BOARD]         # shell + catalog + Table 1 summary
 //! fos registry [--board BOARD] --out FILE
 //! ```
+//!
+//! `--boards` starts a multi-fabric cluster daemon (one `Cynq` per
+//! board, heterogeneous mixes welcome) with `--placement` routing
+//! requests across boards (default: locality).
 
 use fos::accel::Catalog;
 use fos::daemon::{Daemon, FpgaRpc, Job};
@@ -24,15 +29,18 @@ fn main() {
             .and_then(|p| args.get(p + 1))
             .cloned()
     };
-    let board = match get("--board").as_deref().unwrap_or("ultra96") {
-        "ultra96" => ShellBoard::Ultra96,
-        "ultrazed" => ShellBoard::UltraZed,
-        "zcu102" => ShellBoard::Zcu102,
-        other => {
-            eprintln!("unknown board {other:?}");
-            std::process::exit(2);
+    let parse_board = |name: &str| -> ShellBoard {
+        match name {
+            "ultra96" => ShellBoard::Ultra96,
+            "ultrazed" => ShellBoard::UltraZed,
+            "zcu102" => ShellBoard::Zcu102,
+            other => {
+                eprintln!("unknown board {other:?}");
+                std::process::exit(2);
+            }
         }
     };
+    let board = parse_board(get("--board").as_deref().unwrap_or("ultra96"));
     let socket = get("--socket").unwrap_or_else(|| "/tmp/fos-daemon.sock".to_string());
 
     match cmd {
@@ -40,10 +48,34 @@ fn main() {
             let catalog =
                 Catalog::load_default().expect("artifacts missing — run `make artifacts`");
             let n = catalog.accelerators.len();
-            let _d = Daemon::start(&socket, board, catalog).expect("daemon start");
+            // `--boards b1,b2,...` starts a multi-fabric cluster; the
+            // single `--board` is a one-board cluster.
+            let boards: Vec<ShellBoard> = match get("--boards") {
+                Some(list) => list.split(',').map(|b| parse_board(b.trim())).collect(),
+                None => vec![board],
+            };
+            let placement = match get("--placement").as_deref().unwrap_or("locality") {
+                "round-robin" => fos::sched::PlacementKind::RoundRobin,
+                "least-loaded" => fos::sched::PlacementKind::LeastLoaded,
+                "locality" => fos::sched::PlacementKind::Locality,
+                other => {
+                    eprintln!("unknown placement {other:?}");
+                    std::process::exit(2);
+                }
+            };
+            let _d = Daemon::start_cluster(
+                &socket,
+                &boards,
+                catalog,
+                fos::sched::Policy::Elastic,
+                placement,
+            )
+            .expect("daemon start");
+            let names: Vec<&str> = boards.iter().map(|b| b.name()).collect();
             println!(
-                "fos daemon: board={} socket={socket} accelerators={n}",
-                board.name()
+                "fos daemon: boards={} placement={} socket={socket} accelerators={n}",
+                names.join(","),
+                placement.name()
             );
             println!("press ctrl-c to stop");
             loop {
@@ -142,6 +174,7 @@ fn main() {
         _ => {
             println!("usage: fos <daemon|run|info|registry> [flags]");
             println!("  fos daemon   [--socket PATH] [--board ultra96|ultrazed|zcu102]");
+            println!("               [--boards B1,B2,...] [--placement round-robin|least-loaded|locality]");
             println!("  fos run      [--socket PATH] --accel NAME [--requests N]");
             println!("  fos info     [--board BOARD]");
             println!("  fos registry [--board BOARD] --out FILE");

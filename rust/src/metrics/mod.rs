@@ -135,6 +135,19 @@ pub fn sched_summary(label: &str, c: &crate::sched::SchedCounters) -> String {
     )
 }
 
+/// Multi-line per-board counter summary for cluster runs — one
+/// [`sched_summary`] line per board shard (the fig23 report format;
+/// the daemon's `DaemonStats::per_board` mirrors the same set).
+pub fn cluster_summary(label: &str, boards: &[(String, crate::sched::SchedCounters)]) -> String {
+    let mut out = format!("{label}:");
+    for (name, c) in boards {
+        out.push('\n');
+        out.push_str("  ");
+        out.push_str(&sched_summary(name, c));
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -195,5 +208,17 @@ mod tests {
             s,
             "elastic: 3 reconfigs, 9 reuses, 2 skips, 1 replications, 4 preemptions, 4 resumes"
         );
+    }
+
+    #[test]
+    fn cluster_summary_lists_each_board() {
+        let mk = |reconfigs| crate::sched::SchedCounters { reconfigs, ..Default::default() };
+        let s = cluster_summary(
+            "locality x2",
+            &[("Ultra96".to_string(), mk(3)), ("ZCU102".to_string(), mk(1))],
+        );
+        assert!(s.starts_with("locality x2:"));
+        assert!(s.contains("\n  Ultra96: 3 reconfigs"));
+        assert!(s.contains("\n  ZCU102: 1 reconfigs"));
     }
 }

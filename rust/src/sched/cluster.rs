@@ -1,0 +1,662 @@
+//! # The cluster layer — N boards, one scheduler (§5's heterogeneous
+//! evaluation scaled out)
+//!
+//! FOS evaluates per-board (Ultra96, ZCU102); the roadmap's north star
+//! is a production system sharding heavy traffic across many backends.
+//! This module is the layer above [`SchedCore`] that makes that real:
+//! a [`ClusterCore`] owns one scheduler shard per board — each with its
+//! *own* fabric model and [`CostModel`](super::core::CostModel), so
+//! heterogeneous boards coexist — and a pluggable [`PlacementPolicy`]
+//! decides which board every acceleration request lands on.
+//!
+//! The same two-harness architecture as the per-board core applies:
+//! the discrete-event simulator ([`super::simulate_cluster`]) and the
+//! live daemon (one `Cynq` per board) both drive this state machine,
+//! and the per-shard decision sequences must match verbatim for the
+//! same trace (`tests/cluster_parity.rs`).
+//!
+//! ## Placement policies
+//!
+//! A policy sees a read-only [`ShardView`] per board — residency
+//! (which accelerators are configured where), queued-tile backlog and
+//! running count — and routes one [`RouteReq`]:
+//!
+//! - [`RoundRobin`] — the baseline: boards in rotation, blind to state.
+//! - [`LeastLoaded`] — the board with the smallest backlog + running
+//!   load (ties to the lowest index).
+//! - [`Locality`] — prefer boards whose regions *already hold* the
+//!   request's accelerator (no partial reconfiguration on dispatch),
+//!   falling back to least-loaded when nothing is resident or every
+//!   resident board's backlog exceeds [`Locality::backlog_limit`].
+//!
+//! ## Work stealing
+//!
+//! Routing happens at admission; load changes afterwards.  To keep a
+//! drained board from idling while another shard's queue is deep, the
+//! harness calls [`ClusterCore::steal_into`] before each board's
+//! scheduling round: a fully idle shard (no queue, nothing running)
+//! pulls the most recently queued request from the shard with the
+//! largest backlog above [`ClusterCore::steal_threshold`].  Requests
+//! carrying a checkpoint are never stolen — their register-file
+//! snapshot lives on the donor board's hardware.  Both harnesses call
+//! the hook at the same point in the round lifecycle, so stealing
+//! never breaks decision parity.
+
+use super::core::{Decision, Policy, RegionMap, Request, SchedCore, SchedCounters};
+use crate::accel::Catalog;
+use crate::shell::{Shell, ShellBoard};
+use std::collections::VecDeque;
+
+/// Default backlog (queued tiles) past which an overloaded shard
+/// becomes a work-stealing donor, and past which [`Locality`] stops
+/// packing a resident board.
+pub const DEFAULT_STEAL_THRESHOLD: usize = 32;
+
+/// Merged-log ring cap (same order as the per-shard cap): bounded for
+/// a long-lived daemon, plenty for tests and benches.
+const MERGED_LOG_CAP: usize = 65_536;
+
+/// Built-in placement policy selector (the cluster analogue of
+/// [`Policy`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlacementKind {
+    /// Boards in rotation, blind to residency and load.
+    RoundRobin,
+    /// Smallest backlog + running load wins.
+    LeastLoaded,
+    /// Bitstream-residency affinity with least-loaded fallback.
+    Locality,
+}
+
+impl PlacementKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlacementKind::RoundRobin => "round-robin",
+            PlacementKind::LeastLoaded => "least-loaded",
+            PlacementKind::Locality => "locality",
+        }
+    }
+
+    fn instantiate(self) -> Box<dyn PlacementPolicy> {
+        match self {
+            PlacementKind::RoundRobin => Box::<RoundRobin>::default(),
+            PlacementKind::LeastLoaded => Box::<LeastLoaded>::default(),
+            PlacementKind::Locality => Box::<Locality>::default(),
+        }
+    }
+}
+
+/// Read-only per-shard state handed to placement policies.
+pub struct ShardView<'a> {
+    pub board: ShellBoard,
+    /// The shard's region map (residency + busy flags).
+    pub regions: &'a RegionMap,
+    /// Queued tiles across every user of this shard.
+    pub backlog_tiles: usize,
+    /// Queued requests.
+    pub pending: usize,
+    /// In-flight dispatches.
+    pub running: usize,
+}
+
+impl ShardView<'_> {
+    /// An instance of `accel` is configured somewhere on this board
+    /// (idle or busy) — dispatching there can reuse it or at least
+    /// avoid a cold load later.
+    pub fn holds(&self, accel: &str) -> bool {
+        self.regions
+            .iter()
+            .any(|r| r.loaded.as_ref().map(|l| l.accel == accel).unwrap_or(false))
+    }
+
+    /// Scalar load signal: queued tiles plus in-flight dispatches.
+    pub fn load(&self) -> usize {
+        self.backlog_tiles + self.running
+    }
+}
+
+/// The request a placement policy is asked to route.
+pub struct RouteReq<'a> {
+    pub user: usize,
+    pub accel: &'a str,
+    pub tiles: usize,
+}
+
+/// A pluggable board-placement strategy.  Must be deterministic for a
+/// given (shard states, request) pair — both harnesses route at
+/// admission and their decisions must agree (cluster parity).
+pub trait PlacementPolicy: Send {
+    /// Stable identifier (reporting + daemon configuration).
+    fn name(&self) -> &'static str;
+
+    /// Board index for `req`.  `shards` is never empty; the returned
+    /// index is clamped by the caller.
+    fn route(&mut self, shards: &[ShardView<'_>], req: &RouteReq<'_>) -> usize;
+}
+
+/// Boards in strict rotation — the baseline every smarter policy is
+/// judged against (fig23).
+#[derive(Debug, Default)]
+pub struct RoundRobin {
+    next: usize,
+}
+
+impl PlacementPolicy for RoundRobin {
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+
+    fn route(&mut self, shards: &[ShardView<'_>], _req: &RouteReq<'_>) -> usize {
+        let b = self.next % shards.len();
+        self.next = (b + 1) % shards.len();
+        b
+    }
+}
+
+/// The board with the smallest backlog + running load (ties break to
+/// the lowest index for determinism).
+#[derive(Debug, Default)]
+pub struct LeastLoaded;
+
+fn least_loaded(shards: &[ShardView<'_>]) -> usize {
+    shards
+        .iter()
+        .enumerate()
+        .min_by_key(|(i, s)| (s.load(), *i))
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+impl PlacementPolicy for LeastLoaded {
+    fn name(&self) -> &'static str {
+        "least-loaded"
+    }
+
+    fn route(&mut self, shards: &[ShardView<'_>], _req: &RouteReq<'_>) -> usize {
+        least_loaded(shards)
+    }
+}
+
+/// Bitstream-residency affinity: prefer the least-loaded board that
+/// already holds the request's accelerator — dispatching there avoids
+/// a partial reconfiguration — unless every such board's backlog
+/// exceeds [`Locality::backlog_limit`], in which case fall back to
+/// least-loaded (the spill then seeds residency on a fresh board, and
+/// work stealing drains any imbalance that still builds up).
+#[derive(Debug)]
+pub struct Locality {
+    /// Queued-tile backlog past which a resident board is considered
+    /// saturated and the request spills to the least-loaded board.
+    pub backlog_limit: usize,
+}
+
+impl Default for Locality {
+    fn default() -> Locality {
+        Locality { backlog_limit: DEFAULT_STEAL_THRESHOLD }
+    }
+}
+
+impl PlacementPolicy for Locality {
+    fn name(&self) -> &'static str {
+        "locality"
+    }
+
+    fn route(&mut self, shards: &[ShardView<'_>], req: &RouteReq<'_>) -> usize {
+        let resident = shards
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.holds(req.accel) && s.backlog_tiles < self.backlog_limit)
+            .min_by_key(|(i, s)| (s.load(), *i))
+            .map(|(i, _)| i);
+        resident.unwrap_or_else(|| least_loaded(shards))
+    }
+}
+
+/// Cluster-level counters (the per-shard [`SchedCounters`] live in
+/// each shard's core).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ClusterCounters {
+    /// Requests routed to a board at admission.
+    pub routed: u64,
+    /// Requests moved between shards by work stealing.
+    pub steals: u64,
+}
+
+struct Shard {
+    board: ShellBoard,
+    core: SchedCore,
+}
+
+/// N per-board scheduler shards behind one placement policy — the
+/// state machine both the cluster simulator and the multi-fabric
+/// daemon drive.  All per-board scheduling intelligence stays in each
+/// shard's [`SchedCore`]; this type owns only *routing* (admission),
+/// *stealing* (rebalance) and the merged decision log.
+pub struct ClusterCore {
+    shards: Vec<Shard>,
+    placement: Box<dyn PlacementPolicy>,
+    steal_threshold: usize,
+    counters: ClusterCounters,
+    /// (board, decision) in global dispatch order, ring-capped.
+    merged: VecDeque<(usize, Decision)>,
+    merged_dropped: u64,
+}
+
+impl ClusterCore {
+    /// Build a cluster of `boards` (one shard per entry, heterogeneous
+    /// mixes welcome) with a built-in placement policy.
+    pub fn new(
+        boards: &[ShellBoard],
+        catalog: &Catalog,
+        default: Policy,
+        placement: PlacementKind,
+    ) -> ClusterCore {
+        Self::with_placement(boards, catalog, default, placement.instantiate())
+    }
+
+    /// [`ClusterCore::new`] with a custom [`PlacementPolicy`].
+    pub fn with_placement(
+        boards: &[ShellBoard],
+        catalog: &Catalog,
+        default: Policy,
+        placement: Box<dyn PlacementPolicy>,
+    ) -> ClusterCore {
+        assert!(!boards.is_empty(), "a cluster needs at least one board");
+        ClusterCore {
+            shards: boards
+                .iter()
+                .map(|&board| Shard {
+                    board,
+                    core: SchedCore::new(&Shell::build(board), catalog.clone(), default),
+                })
+                .collect(),
+            placement,
+            steal_threshold: DEFAULT_STEAL_THRESHOLD,
+            counters: ClusterCounters::default(),
+            merged: VecDeque::new(),
+            merged_dropped: 0,
+        }
+    }
+
+    /// Override the work-stealing donor threshold (queued tiles).
+    pub fn with_steal_threshold(mut self, tiles: usize) -> ClusterCore {
+        self.steal_threshold = tiles;
+        self
+    }
+
+    /// Number of boards.
+    pub fn len(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.shards.is_empty()
+    }
+
+    pub fn board(&self, b: usize) -> ShellBoard {
+        self.shards[b].board
+    }
+
+    /// Read-only access to one shard's scheduler core (decision log,
+    /// counters, region map, catalog).
+    pub fn core(&self, b: usize) -> &SchedCore {
+        &self.shards[b].core
+    }
+
+    /// Mutable access to one shard's core — for registering custom
+    /// per-shard [`super::SchedPolicy`] implementations before traffic
+    /// starts.  Mutating queues mid-flight voids decision parity.
+    pub fn core_mut(&mut self, b: usize) -> &mut SchedCore {
+        &mut self.shards[b].core
+    }
+
+    pub fn placement_name(&self) -> &'static str {
+        self.placement.name()
+    }
+
+    pub fn cluster_counters(&self) -> &ClusterCounters {
+        &self.counters
+    }
+
+    /// Sum of every shard's [`SchedCounters`] — what aggregate stats
+    /// report.
+    pub fn total_counters(&self) -> SchedCounters {
+        let mut t = SchedCounters::default();
+        for s in &self.shards {
+            let c = s.core.counters();
+            t.reconfigs += c.reconfigs;
+            t.reuses += c.reuses;
+            t.skips += c.skips;
+            t.replications += c.replications;
+            t.preemptions += c.preemptions;
+            t.resumes += c.resumes;
+        }
+        t
+    }
+
+    /// Route one request to a board and enqueue it there.  Admission
+    /// errors (unknown accelerator/variant) surface before routing, so
+    /// a rejection never perturbs the placement policy's state.
+    /// Returns the board index the request landed on.
+    pub fn submit(
+        &mut self,
+        user: usize,
+        job: u64,
+        accel: &str,
+        tiles: usize,
+        pin: Option<&str>,
+    ) -> Result<usize, String> {
+        // Validate against shard 0's catalog first (all shards share
+        // one catalog): a rejected request must not advance RoundRobin.
+        self.shards[0].core.validate(accel, pin)?;
+        let views: Vec<ShardView<'_>> = self
+            .shards
+            .iter()
+            .map(|s| ShardView {
+                board: s.board,
+                regions: s.core.regions(),
+                backlog_tiles: s.core.backlog_tiles(),
+                pending: s.core.pending(),
+                running: s.core.running_count(),
+            })
+            .collect();
+        let req = RouteReq { user, accel, tiles };
+        let b = self.placement.route(&views, &req).min(self.shards.len() - 1);
+        self.shards[b].core.submit(user, job, accel, tiles, pin)?;
+        self.counters.routed += 1;
+        Ok(b)
+    }
+
+    /// Work-stealing hook — call right before board `b`'s scheduling
+    /// round.  A fully idle shard pulls one request from the deepest
+    /// *stealable* backlog above the threshold (checkpoint-pinned
+    /// remainders don't count — they can never move); `true` when a
+    /// request moved.
+    pub fn steal_into(&mut self, b: usize) -> bool {
+        if self.shards.len() < 2 {
+            return false;
+        }
+        if self.shards[b].core.has_pending() || self.shards[b].core.running_count() > 0 {
+            return false;
+        }
+        let donor = (0..self.shards.len())
+            .filter(|&i| i != b)
+            .map(|i| (self.shards[i].core.stealable_tiles(), i))
+            .filter(|&(tiles, _)| tiles > self.steal_threshold)
+            .max_by_key(|&(tiles, i)| (tiles, std::cmp::Reverse(i)))
+            .map(|(_, i)| i);
+        let Some(donor) = donor else { return false };
+        let Some(req) = self.shards[donor].core.steal_back() else { return false };
+        self.shards[b].core.inject(req);
+        self.counters.steals += 1;
+        true
+    }
+
+    // ---- per-shard delegation (the harness round lifecycle) ---------
+
+    pub fn begin_round_at(&mut self, b: usize, now: u64) {
+        self.shards[b].core.begin_round_at(now);
+    }
+
+    /// Next placement on board `b`; also appended to the merged log.
+    pub fn next_decision(&mut self, b: usize) -> Option<Decision> {
+        let d = self.shards[b].core.next_decision()?;
+        if self.merged.len() >= MERGED_LOG_CAP {
+            self.merged.pop_front();
+            self.merged_dropped += 1;
+        }
+        self.merged.push_back((b, d.clone()));
+        Some(d)
+    }
+
+    pub fn complete(&mut self, b: usize, anchor: usize) {
+        self.shards[b].core.complete(anchor);
+    }
+
+    pub fn evict(&mut self, b: usize, anchor: usize) {
+        self.shards[b].core.evict(anchor);
+    }
+
+    pub fn mark_running(&mut self, b: usize, d: &Decision, start: u64, end: u64) {
+        self.shards[b].core.mark_running(d, start, end);
+    }
+
+    pub fn service_ns(&self, b: usize, d: &Decision, concurrent: usize) -> u64 {
+        self.shards[b].core.service_ns(d, concurrent)
+    }
+
+    pub fn busy_anchors(&self, b: usize) -> usize {
+        self.shards[b].core.busy_anchors()
+    }
+
+    pub fn take_rejected(&mut self, b: usize) -> Vec<(Request, String)> {
+        self.shards[b].core.take_rejected()
+    }
+
+    pub fn preempt_tick_due(
+        &self,
+        b: usize,
+        next_tick: &mut Option<u64>,
+        now: u64,
+    ) -> Option<u64> {
+        self.shards[b].core.preempt_tick_due(next_tick, now)
+    }
+
+    // ---- cluster-wide queries and tenant lifecycle ------------------
+
+    /// Requests queued across every shard.
+    pub fn pending(&self) -> usize {
+        self.shards.iter().map(|s| s.core.pending()).sum()
+    }
+
+    pub fn has_pending(&self) -> bool {
+        self.shards.iter().any(|s| s.core.has_pending())
+    }
+
+    /// In-flight dispatches across every shard.
+    pub fn running_total(&self) -> usize {
+        self.shards.iter().map(|s| s.core.running_count()).sum()
+    }
+
+    /// Route `user` to the scheduling policy named `name` on every
+    /// shard; `false` if the name is unknown (all shards share the
+    /// built-in registry, so the answer is uniform).
+    pub fn set_user_policy(&mut self, user: usize, name: &str) -> bool {
+        let mut ok = true;
+        for s in &mut self.shards {
+            ok &= s.core.set_user_policy(user, name);
+        }
+        ok
+    }
+
+    pub fn policy_name_of(&self, user: usize) -> &'static str {
+        self.shards[0].core.policy_name_of(user)
+    }
+
+    /// Retire `user` on every shard; returns the dropped queued
+    /// requests tagged with the shard they were queued on (the daemon
+    /// fails their replies and drops per-board snapshots).
+    pub fn retire_user(&mut self, user: usize) -> Vec<(usize, Request)> {
+        let mut out = Vec::new();
+        for (b, s) in self.shards.iter_mut().enumerate() {
+            out.extend(s.core.retire_user(user).into_iter().map(|r| (b, r)));
+        }
+        out
+    }
+
+    /// Drain every queued request on every shard (stall guard).
+    pub fn drain_pending(&mut self) -> Vec<(usize, Request)> {
+        let mut out = Vec::new();
+        for (b, s) in self.shards.iter_mut().enumerate() {
+            out.extend(s.core.drain_pending().into_iter().map(|r| (b, r)));
+        }
+        out
+    }
+
+    /// The merged `(board, decision)` log in global dispatch order.
+    pub fn merged_log(&self) -> impl Iterator<Item = &(usize, Decision)> {
+        self.merged.iter()
+    }
+
+    /// The last `n` merged entries — O(1) positioning.
+    pub fn merged_log_tail(&self, n: usize) -> impl Iterator<Item = &(usize, Decision)> {
+        self.merged.iter().skip(self.merged.len().saturating_sub(n))
+    }
+
+    pub fn merged_dropped(&self) -> u64 {
+        self.merged_dropped
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::DecisionKind;
+
+    fn catalog() -> Catalog {
+        Catalog::load_default().unwrap()
+    }
+
+    fn cluster(n: usize, kind: PlacementKind) -> ClusterCore {
+        let boards: Vec<ShellBoard> = (0..n)
+            .map(|i| if i % 2 == 0 { ShellBoard::Ultra96 } else { ShellBoard::Zcu102 })
+            .collect();
+        ClusterCore::new(&boards, &catalog(), Policy::Elastic, kind)
+    }
+
+    /// Drive one shard's round to completion, replaying completions
+    /// immediately (run-to-completion harness stand-in).
+    fn drain_board(c: &mut ClusterCore, b: usize, now: u64) -> Vec<Decision> {
+        c.begin_round_at(b, now);
+        let mut out = Vec::new();
+        while let Some(d) = c.next_decision(b) {
+            assert_ne!(d.kind, DecisionKind::Preempt);
+            let lat = c.service_ns(b, &d, c.busy_anchors(b).saturating_sub(1));
+            c.mark_running(b, &d, now, now + lat.max(1));
+            out.push(d);
+        }
+        for d in &out {
+            c.complete(b, d.anchor);
+        }
+        out
+    }
+
+    #[test]
+    fn round_robin_rotates_boards() {
+        let mut c = cluster(3, PlacementKind::RoundRobin);
+        let mut routed = Vec::new();
+        for j in 0..6 {
+            routed.push(c.submit(0, j, "vadd", 1, None).unwrap());
+        }
+        assert_eq!(routed, vec![0, 1, 2, 0, 1, 2]);
+        assert_eq!(c.cluster_counters().routed, 6);
+    }
+
+    #[test]
+    fn least_loaded_prefers_empty_board() {
+        let mut c = cluster(2, PlacementKind::LeastLoaded);
+        let b0 = c.submit(0, 0, "mandelbrot", 10, None).unwrap();
+        assert_eq!(b0, 0, "tie breaks to the lowest index");
+        let b1 = c.submit(1, 1, "sobel", 1, None).unwrap();
+        assert_eq!(b1, 1, "board 0 carries 10 queued tiles");
+    }
+
+    #[test]
+    fn locality_prefers_resident_board() {
+        let mut c = cluster(2, PlacementKind::Locality);
+        // Nothing resident yet: least-loaded → board 0; run it so the
+        // sobel module becomes resident there.
+        assert_eq!(c.submit(0, 0, "sobel", 1, Some("sobel_v1")).unwrap(), 0);
+        drain_board(&mut c, 0, 0);
+        // Queue more sobel on the resident board, making it the
+        // *heavier* board; an unrelated accelerator routes least-loaded
+        // to the empty board 1.
+        assert_eq!(c.submit(0, 1, "sobel", 8, Some("sobel_v1")).unwrap(), 0);
+        assert_eq!(c.submit(1, 2, "mandelbrot", 1, None).unwrap(), 1);
+        // Locality: sobel keeps routing to its resident board even
+        // though board 1 now carries less queued work than board 0.
+        assert_eq!(c.submit(0, 3, "sobel", 1, Some("sobel_v1")).unwrap(), 0);
+        // And the resident instance is reused, not reconfigured.
+        c.begin_round_at(0, 1);
+        let d = c.next_decision(0).unwrap();
+        assert!(!d.reconfigure, "resident instance must be reused: {d:?}");
+    }
+
+    #[test]
+    fn locality_spills_past_backlog_limit() {
+        let mut c = cluster(2, PlacementKind::Locality);
+        assert_eq!(c.submit(0, 0, "sobel", 1, Some("sobel_v1")).unwrap(), 0);
+        drain_board(&mut c, 0, 0);
+        // Saturate the resident board past the default limit: the next
+        // sobel request spills to the least-loaded board instead.
+        assert_eq!(
+            c.submit(0, 1, "sobel", DEFAULT_STEAL_THRESHOLD + 1, Some("sobel_v1")).unwrap(),
+            0
+        );
+        assert_eq!(c.submit(0, 2, "sobel", 1, Some("sobel_v1")).unwrap(), 1);
+    }
+
+    #[test]
+    fn idle_board_steals_from_deep_backlog() {
+        let mut c = cluster(2, PlacementKind::LeastLoaded).with_steal_threshold(8);
+        // Board 0: deep backlog; board 1: idle.
+        for j in 0..4 {
+            c.shards[0].core.submit(0, j, "vadd", 8, None).unwrap();
+        }
+        assert!(c.steal_into(1), "idle board must steal");
+        assert_eq!(c.cluster_counters().steals, 1);
+        assert_eq!(c.core(1).pending(), 1);
+        assert_eq!(c.core(0).pending(), 3);
+        // A busy board never steals.
+        assert!(!c.steal_into(0));
+        // Below the threshold, nothing moves.
+        let mut c2 = cluster(2, PlacementKind::LeastLoaded).with_steal_threshold(1000);
+        c2.shards[0].core.submit(0, 0, "vadd", 8, None).unwrap();
+        assert!(!c2.steal_into(1));
+    }
+
+    #[test]
+    fn rejection_does_not_advance_round_robin() {
+        let mut c = cluster(2, PlacementKind::RoundRobin);
+        assert!(c.submit(0, 0, "flux_capacitor", 1, None).is_err());
+        assert!(c.submit(0, 1, "vadd", 1, Some("vadd_v9")).is_err());
+        assert_eq!(c.cluster_counters().routed, 0);
+        // First accepted request still lands on board 0.
+        assert_eq!(c.submit(0, 2, "vadd", 1, None).unwrap(), 0);
+    }
+
+    #[test]
+    fn merged_log_tags_boards() {
+        let mut c = cluster(2, PlacementKind::RoundRobin);
+        c.submit(0, 0, "vadd", 1, None).unwrap();
+        c.submit(1, 1, "dct", 1, None).unwrap();
+        drain_board(&mut c, 0, 0);
+        drain_board(&mut c, 1, 0);
+        let merged: Vec<(usize, String)> = c
+            .merged_log()
+            .map(|(b, d)| (*b, d.accel.clone()))
+            .collect();
+        assert_eq!(merged.len(), 2);
+        assert_eq!(merged[0], (0, "vadd".to_string()));
+        assert_eq!(merged[1], (1, "dct".to_string()));
+        // Per-shard logs partition the merged log.
+        assert_eq!(c.core(0).decision_log().count(), 1);
+        assert_eq!(c.core(1).decision_log().count(), 1);
+        // Tail query returns only the newest entries.
+        assert_eq!(c.merged_log_tail(1).count(), 1);
+        assert_eq!(c.merged_log_tail(1).next().unwrap().0, 1);
+    }
+
+    #[test]
+    fn retire_and_drain_tag_boards() {
+        let mut c = cluster(2, PlacementKind::RoundRobin);
+        c.submit(0, 0, "vadd", 1, None).unwrap(); // board 0
+        c.submit(0, 1, "vadd", 1, None).unwrap(); // board 1
+        let retired = c.retire_user(0);
+        let boards: Vec<usize> = retired.iter().map(|(b, _)| *b).collect();
+        assert_eq!(boards, vec![0, 1]);
+        assert!(!c.has_pending());
+        c.submit(1, 2, "dct", 1, None).unwrap();
+        assert_eq!(c.drain_pending().len(), 1);
+    }
+}

@@ -953,6 +953,23 @@ impl SchedCore {
         }
     }
 
+    /// Admission check shared by [`SchedCore::submit`] and the cluster
+    /// layer's routing (which must reject *before* consulting its
+    /// placement policy): the accelerator, and the pinned variant if
+    /// any, exist in the catalog.
+    pub fn validate(&self, accel: &str, pin: Option<&str>) -> Result<(), String> {
+        let known = match self.catalog.get(accel) {
+            None => return Err(format!("no accelerator named {accel:?}")),
+            Some(a) => a,
+        };
+        if let Some(p) = pin {
+            if known.variant(p).is_none() {
+                return Err(format!("no variant named {p:?} for accelerator {accel:?}"));
+            }
+        }
+        Ok(())
+    }
+
     /// Enqueue one acceleration request. Rejects unknown accelerators
     /// (and unknown pinned variants) so harnesses can fail fast.
     pub fn submit(
@@ -963,15 +980,7 @@ impl SchedCore {
         tiles: usize,
         pin: Option<&str>,
     ) -> Result<(), String> {
-        let known = match self.catalog.get(accel) {
-            None => return Err(format!("no accelerator named {accel:?}")),
-            Some(a) => a,
-        };
-        if let Some(p) = pin {
-            if known.variant(p).is_none() {
-                return Err(format!("no variant named {p:?} for accelerator {accel:?}"));
-            }
-        }
+        self.validate(accel, pin)?;
         self.ensure_user(user);
         self.queues[user].push_back(Request {
             user,
@@ -990,6 +999,57 @@ impl SchedCore {
 
     pub fn has_pending(&self) -> bool {
         self.queues.iter().any(|q| !q.is_empty())
+    }
+
+    /// Total queued tiles across every user — the backlog signal the
+    /// cluster layer's placement policies and work-stealing rules read.
+    pub fn backlog_tiles(&self) -> usize {
+        self.queues.iter().flat_map(|q| q.iter()).map(|r| r.tiles).sum()
+    }
+
+    /// Queued tiles that work stealing may actually move — non-resume
+    /// requests only (checkpointed remainders are pinned to this
+    /// shard's hardware).  The cluster's donor selection reads this,
+    /// not [`SchedCore::backlog_tiles`], so a queue full of pinned
+    /// remainders is never mistaken for a stealable backlog.
+    pub fn stealable_tiles(&self) -> usize {
+        self.queues
+            .iter()
+            .flat_map(|q| q.iter())
+            .filter(|r| r.resume.is_none())
+            .map(|r| r.tiles)
+            .sum()
+    }
+
+    /// Pop the most recently queued *non-resume* request from the user
+    /// with the deepest stealable backlog — the donor half of
+    /// cluster-level work stealing.  Requests pinned to a checkpoint
+    /// are never stolen: their register-file snapshot lives on this
+    /// shard's hardware and cannot be restored elsewhere.  `None` when
+    /// nothing is stealable.
+    pub fn steal_back(&mut self) -> Option<Request> {
+        let stealable = |q: &VecDeque<Request>| -> usize {
+            q.iter().filter(|r| r.resume.is_none()).map(|r| r.tiles).sum()
+        };
+        let user = self
+            .queues
+            .iter()
+            .enumerate()
+            .filter(|(_, q)| q.iter().any(|r| r.resume.is_none()))
+            .max_by_key(|(u, q)| (stealable(q), std::cmp::Reverse(*u)))
+            .map(|(u, _)| u)?;
+        let q = &mut self.queues[user];
+        let idx = q.iter().rposition(|r| r.resume.is_none())?;
+        q.remove(idx)
+    }
+
+    /// Enqueue a request stolen from another shard, fields preserved
+    /// (the receiver half of work stealing).  Unlike [`SchedCore::submit`]
+    /// this skips admission validation: the request was already admitted
+    /// by the donor shard against the same catalog.
+    pub fn inject(&mut self, req: Request) {
+        self.ensure_user(req.user);
+        self.queues[req.user].push_back(req);
     }
 
     /// Start a dispatch round: deferred users become eligible again.
@@ -1414,6 +1474,12 @@ impl SchedCore {
     /// Ordered decision history (oldest dropped past the ring cap).
     pub fn decision_log(&self) -> impl Iterator<Item = &Decision> {
         self.log.iter()
+    }
+
+    /// The last `n` decisions in order — O(1) positioning (no full-ring
+    /// scan), so monitoring queries never walk the whole log.
+    pub fn decision_log_tail(&self, n: usize) -> impl Iterator<Item = &Decision> {
+        self.log.iter().skip(self.log.len().saturating_sub(n))
     }
 
     pub fn decisions_dropped(&self) -> u64 {

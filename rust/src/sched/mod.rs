@@ -38,7 +38,16 @@
 //!   drives real partial reconfigurations and PJRT executions, with a
 //!   virtual clock mirroring the simulator so both paths make (and
 //!   log) identical decision sequences for identical traces.
+//!
+//! Above the per-board core sits the **cluster layer** ([`cluster`]):
+//! a [`ClusterCore`] owns one scheduler shard per board (heterogeneous
+//! mixes welcome) and a pluggable [`PlacementPolicy`] —
+//! [`RoundRobin`], [`LeastLoaded`], [`Locality`] — routes every
+//! request to a board, with work stealing rebalancing idle shards.
+//! [`simulate_cluster`] and the multi-fabric daemon drive it through
+//! the same two-harness discipline (see `sched/ARCHITECTURE.md`).
 
+pub mod cluster;
 pub mod core;
 mod sim;
 mod workload;
@@ -48,7 +57,14 @@ pub use self::core::{
     Placement, Policy, Quantum, Region, RegionMap, Request, RunningSnap, SchedCore,
     SchedCounters, SchedPolicy, PREEMPT_TICK_NS,
 };
-pub use sim::{gen_inputs, mean_turnaround_ns, simulate, RegionTrace, SimConfig, SimResult, TraceEvent};
+pub use cluster::{
+    ClusterCore, ClusterCounters, LeastLoaded, Locality, PlacementKind, PlacementPolicy,
+    RoundRobin, RouteReq, ShardView, DEFAULT_STEAL_THRESHOLD,
+};
+pub use sim::{
+    cluster_mean_turnaround_ns, gen_inputs, mean_turnaround_ns, simulate, simulate_cluster,
+    BoardSim, ClusterSimConfig, ClusterSimResult, RegionTrace, SimConfig, SimResult, TraceEvent,
+};
 pub use workload::{JobSpec, Workload};
 
 use std::time::Duration;

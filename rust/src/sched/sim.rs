@@ -4,6 +4,7 @@
 //! arrivals and completions into the core and turns its [`Decision`]s
 //! into trace events, latencies and (optionally) real PJRT compute.
 
+use super::cluster::{ClusterCore, ClusterCounters, PlacementKind, DEFAULT_STEAL_THRESHOLD};
 use super::core::{Decision, DecisionKind, Policy, SchedCore, SchedCounters};
 use super::workload::Workload;
 use super::SimTime;
@@ -289,16 +290,251 @@ pub fn simulate(catalog: &Catalog, workload: &Workload, cfg: &SimConfig) -> SimR
 /// in virtual ns — the fig22-style fairness measurement preemption is
 /// judged by.
 pub fn mean_turnaround_ns(w: &Workload, r: &SimResult) -> f64 {
+    mean_turnaround_from(w, &r.job_completion)
+}
+
+/// [`mean_turnaround_ns`] over a cluster run.
+pub fn cluster_mean_turnaround_ns(w: &Workload, r: &ClusterSimResult) -> f64 {
+    mean_turnaround_from(w, &r.job_completion)
+}
+
+fn mean_turnaround_from(w: &Workload, job_completion: &[SimTime]) -> f64 {
     if w.jobs.is_empty() {
         return 0.0;
     }
     let sum: u64 = w
         .jobs
         .iter()
-        .zip(&r.job_completion)
+        .zip(job_completion)
         .map(|(j, &c)| c.saturating_sub(j.arrival))
         .sum();
     sum as f64 / w.jobs.len() as f64
+}
+
+/// Cluster simulation configuration: one shard per entry of `boards`
+/// (heterogeneous mixes welcome), every shard running `policy`, with
+/// `placement` deciding which board each request lands on.
+pub struct ClusterSimConfig {
+    pub boards: Vec<ShellBoard>,
+    pub policy: Policy,
+    pub placement: PlacementKind,
+    /// Work-stealing donor threshold (queued tiles).
+    pub steal_threshold: usize,
+}
+
+impl ClusterSimConfig {
+    pub fn new(
+        boards: Vec<ShellBoard>,
+        policy: Policy,
+        placement: PlacementKind,
+    ) -> ClusterSimConfig {
+        ClusterSimConfig { boards, policy, placement, steal_threshold: DEFAULT_STEAL_THRESHOLD }
+    }
+}
+
+/// One board's slice of a cluster run.
+#[derive(Debug, Clone)]
+pub struct BoardSim {
+    pub board: ShellBoard,
+    /// The shard's scheduling counters (per-board reconfig/preemption
+    /// accounting — the fig23 comparison material).
+    pub counters: SchedCounters,
+    /// The shard's ordered decision log — compared verbatim against
+    /// the live daemon's per-board log in `tests/cluster_parity.rs`.
+    pub decisions: Vec<Decision>,
+    /// Region-seconds of busy time across the shard (utilisation).
+    pub busy_ns: u64,
+}
+
+/// Result of a multi-board cluster run.
+#[derive(Debug, Clone)]
+pub struct ClusterSimResult {
+    pub makespan: SimTime,
+    /// Completion time of each job in workload order.
+    pub job_completion: Vec<SimTime>,
+    /// Per-board counters, decision logs and utilisation.
+    pub boards: Vec<BoardSim>,
+    /// The merged `(board, decision)` log in global dispatch order.
+    pub merged: Vec<(usize, Decision)>,
+    /// Routing/stealing counters from the cluster core.
+    pub cluster: ClusterCounters,
+}
+
+impl ClusterSimResult {
+    /// Sum of every board's partial reconfigurations.
+    pub fn total_reconfigs(&self) -> u64 {
+        self.boards.iter().map(|b| b.counters.reconfigs).sum()
+    }
+
+    /// Sum of every board's preemptions.
+    pub fn total_preemptions(&self) -> u64 {
+        self.boards.iter().map(|b| b.counters.preemptions).sum()
+    }
+}
+
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+enum ClusterEvent {
+    Arrival(usize),
+    /// Completion at (board, anchor).
+    Complete { board: usize, anchor: usize, job: usize },
+    /// Preemption-check round (every board rounds at every event, so
+    /// the tick needs no board identity — per-board dedup lives in
+    /// `next_tick`).
+    Tick,
+}
+
+/// Run a workload over a cluster of boards: one discrete-event heap,
+/// per-board virtual clocks (each shard's core only advances at its
+/// own rounds), placement at admission, work stealing before each
+/// board's round, and a merged decision log.  The per-shard event
+/// cadence is identical to [`simulate`]'s, so a one-board cluster
+/// makes exactly the decisions of the single-board simulator — and
+/// the multi-fabric daemon mirrors this loop for parity.
+pub fn simulate_cluster(
+    catalog: &Catalog,
+    workload: &Workload,
+    cfg: &ClusterSimConfig,
+) -> ClusterSimResult {
+    assert!(!cfg.boards.is_empty(), "a cluster needs at least one board");
+    let n_boards = cfg.boards.len();
+    let mut cluster = ClusterCore::new(&cfg.boards, catalog, cfg.policy, cfg.placement)
+        .with_steal_threshold(cfg.steal_threshold);
+
+    let mut jobs_left: Vec<usize> = workload.jobs.iter().map(|j| j.requests).collect();
+    let mut result = ClusterSimResult {
+        makespan: 0,
+        job_completion: vec![0; workload.jobs.len()],
+        boards: Vec::new(),
+        merged: Vec::new(),
+        cluster: ClusterCounters::default(),
+    };
+    let mut busy_ns = vec![0u64; n_boards];
+
+    let mut heap: BinaryHeap<Reverse<(SimTime, u64, ClusterEvent)>> = BinaryHeap::new();
+    let mut seq = 0u64;
+    for (j, job) in workload.jobs.iter().enumerate() {
+        heap.push(Reverse((job.arrival, seq, ClusterEvent::Arrival(j))));
+        seq += 1;
+    }
+    // Completion events cancelled by a preemption (by event seq).
+    let mut cancelled: HashSet<u64> = HashSet::new();
+    // (board, anchor) -> seq of the completion event running there.
+    let mut running_seq: HashMap<(usize, usize), u64> = HashMap::new();
+    // (board, anchor) -> (scheduled end, span) of the open dispatch,
+    // so a preemption can roll back the uncompleted busy time.
+    let mut open: HashMap<(usize, usize), (SimTime, usize)> = HashMap::new();
+    // One pending preemption-check tick per board.
+    let mut next_tick: Vec<Option<SimTime>> = vec![None; n_boards];
+
+    while let Some(Reverse((now, s0, ev))) = heap.pop() {
+        // Drain every event at this timestamp before dispatching, so
+        // simultaneous arrivals/completions see each other (exactly the
+        // single-board simulator's batching rule).
+        let mut batch = vec![(s0, ev)];
+        while let Some(Reverse((t, _, _))) = heap.peek() {
+            if *t != now {
+                break;
+            }
+            let Reverse((_, s, e)) = heap.pop().unwrap();
+            batch.push((s, e));
+        }
+        for (s, ev) in batch {
+            match ev {
+                ClusterEvent::Arrival(j) => {
+                    let job = &workload.jobs[j];
+                    for _ in 0..job.requests {
+                        cluster
+                            .submit(
+                                job.user,
+                                j as u64,
+                                &job.accel,
+                                job.tiles_per_request,
+                                job.pin_variant.as_deref(),
+                            )
+                            .unwrap_or_else(|e| panic!("{e}"));
+                    }
+                }
+                ClusterEvent::Tick => {} // only triggers the rounds below
+                ClusterEvent::Complete { board, anchor, job } => {
+                    if cancelled.remove(&s) {
+                        continue; // this dispatch was preempted mid-span
+                    }
+                    cluster.complete(board, anchor);
+                    if running_seq.get(&(board, anchor)) == Some(&s) {
+                        running_seq.remove(&(board, anchor));
+                        open.remove(&(board, anchor));
+                    }
+                    jobs_left[job] -= 1;
+                    if jobs_left[job] == 0 {
+                        result.job_completion[job] = now;
+                    }
+                    result.makespan = result.makespan.max(now);
+                }
+            }
+        }
+
+        // One scheduling round per board, in board order: an idle board
+        // first steals from the deepest over-threshold backlog, then
+        // places as many requests as its policy allows.
+        for b in 0..n_boards {
+            cluster.steal_into(b);
+            cluster.begin_round_at(b, now);
+            while let Some(d) = cluster.next_decision(b) {
+                if d.kind == DecisionKind::Preempt {
+                    let vseq = running_seq
+                        .remove(&(b, d.anchor))
+                        .expect("preempt decision without a running dispatch");
+                    cancelled.insert(vseq);
+                    if let Some((old_end, span)) = open.remove(&(b, d.anchor)) {
+                        busy_ns[b] -= (old_end - now) * span as u64;
+                    }
+                    continue;
+                }
+                let busy_others = cluster.busy_anchors(b).saturating_sub(1);
+                let lat = cluster.service_ns(b, &d, busy_others);
+                cluster.mark_running(b, &d, now, now + lat);
+                let end = now + lat;
+                busy_ns[b] += lat * d.span as u64;
+                open.insert((b, d.anchor), (end, d.span));
+                running_seq.insert((b, d.anchor), seq);
+                heap.push(Reverse((
+                    end,
+                    seq,
+                    ClusterEvent::Complete { board: b, anchor: d.anchor, job: d.job as usize },
+                )));
+                seq += 1;
+            }
+
+            // Requests this shard rejected (a policy chose an unknown
+            // variant): count them completed-with-failure so the run
+            // terminates; built-in policies never trigger this.
+            for (req, _reason) in cluster.take_rejected(b) {
+                let j = req.job as usize;
+                jobs_left[j] = jobs_left[j].saturating_sub(1);
+                if jobs_left[j] == 0 {
+                    result.job_completion[j] = now;
+                }
+            }
+
+            // Per-board preemption-check cadence (the core-owned rule).
+            if let Some(t) = cluster.preempt_tick_due(b, &mut next_tick[b], now) {
+                heap.push(Reverse((t, seq, ClusterEvent::Tick)));
+                seq += 1;
+            }
+        }
+    }
+
+    result.boards = (0..n_boards)
+        .map(|b| BoardSim {
+            board: cluster.board(b),
+            counters: cluster.core(b).counters().clone(),
+            decisions: cluster.core(b).decision_log().cloned().collect(),
+            busy_ns: busy_ns[b],
+        })
+        .collect();
+    result.merged = cluster.merged_log().cloned().collect();
+    result.cluster = cluster.cluster_counters().clone();
+    result
 }
 
 /// Deterministic input generation for real-compute mode.
@@ -586,6 +822,124 @@ mod tests {
         assert_eq!(total, expected);
         // Every job still completes.
         assert!(r.job_completion.iter().all(|&t| t > 0));
+    }
+
+    fn hetero_boards(n: usize) -> Vec<ShellBoard> {
+        (0..n)
+            .map(|i| if i % 2 == 0 { ShellBoard::Ultra96 } else { ShellBoard::Zcu102 })
+            .collect()
+    }
+
+    #[test]
+    fn one_board_cluster_matches_single_sim() {
+        // A one-shard cluster must make exactly the single-board
+        // simulator's decisions — preemptions and ticks included.
+        let c = catalog();
+        let w = streams_plus_shorts();
+        for policy in [Policy::Elastic, Policy::Quantum] {
+            let single = simulate(&c, &w, &SimConfig::new(ShellBoard::Ultra96, policy));
+            let cl = simulate_cluster(
+                &c,
+                &w,
+                &ClusterSimConfig::new(
+                    vec![ShellBoard::Ultra96],
+                    policy,
+                    PlacementKind::RoundRobin,
+                ),
+            );
+            assert_eq!(cl.boards.len(), 1);
+            assert_eq!(single.decisions, cl.boards[0].decisions, "{policy:?} diverged");
+            assert_eq!(single.counters, cl.boards[0].counters);
+            assert_eq!(single.makespan, cl.makespan);
+            assert_eq!(single.job_completion, cl.job_completion);
+            // The merged log is the per-board log for one shard.
+            assert!(cl.merged.iter().all(|(b, _)| *b == 0));
+        }
+    }
+
+    #[test]
+    fn cluster_conserves_requests_across_boards() {
+        let c = catalog();
+        let w = Workload::cluster_mix(6, 3, 2, 6, 300_000);
+        for kind in
+            [PlacementKind::RoundRobin, PlacementKind::LeastLoaded, PlacementKind::Locality]
+        {
+            let r = simulate_cluster(
+                &c,
+                &w,
+                &ClusterSimConfig::new(hetero_boards(3), Policy::Elastic, kind),
+            );
+            // Every request routed and dispatched exactly once.
+            assert_eq!(r.cluster.routed, w.total_requests() as u64, "{kind:?}");
+            let placements: u64 =
+                r.boards.iter().map(|b| b.counters.reconfigs + b.counters.reuses).sum();
+            assert_eq!(placements, w.total_requests() as u64, "{kind:?}");
+            // Every job completes, after its arrival.
+            for (j, &done) in r.job_completion.iter().enumerate() {
+                assert!(done >= w.jobs[j].arrival, "{kind:?} job {j}");
+                assert!(done <= r.makespan);
+            }
+            // Per-shard logs partition the merged log.
+            let merged_per_board = |b: usize| r.merged.iter().filter(|(x, _)| *x == b).count();
+            for (b, board) in r.boards.iter().enumerate() {
+                assert_eq!(board.decisions.len(), merged_per_board(b));
+            }
+        }
+    }
+
+    #[test]
+    fn locality_beats_round_robin_at_four_boards() {
+        // The fig23 acceptance claim: on the staggered multi-tenant mix
+        // at >= 4 boards, bitstream-affinity routing pays fewer partial
+        // reconfigurations AND a lower mean turnaround than blind
+        // round-robin scattering.
+        let c = catalog();
+        let w = Workload::cluster_mix(8, 4, 3, 8, 400_000);
+        let run = |kind| {
+            simulate_cluster(
+                &c,
+                &w,
+                &ClusterSimConfig::new(hetero_boards(4), Policy::Elastic, kind),
+            )
+        };
+        let rr = run(PlacementKind::RoundRobin);
+        let loc = run(PlacementKind::Locality);
+        assert!(
+            loc.total_reconfigs() < rr.total_reconfigs(),
+            "locality {} reconfigs must beat round-robin {}",
+            loc.total_reconfigs(),
+            rr.total_reconfigs()
+        );
+        let m_rr = cluster_mean_turnaround_ns(&w, &rr);
+        let m_loc = cluster_mean_turnaround_ns(&w, &loc);
+        assert!(
+            m_loc < m_rr,
+            "locality turnaround {m_loc:.0} must beat round-robin {m_rr:.0}"
+        );
+    }
+
+    #[test]
+    fn heterogeneous_shards_use_their_own_fabric_models() {
+        // Ultra96 shards have 3 PR regions, ZCU102 shards 4: decisions
+        // on each shard must stay inside that shard's fabric.
+        let c = catalog();
+        let w = Workload::cluster_mix(4, 2, 3, 6, 200_000);
+        let r = simulate_cluster(
+            &c,
+            &w,
+            &ClusterSimConfig::new(hetero_boards(2), Policy::Elastic, PlacementKind::LeastLoaded),
+        );
+        for board in &r.boards {
+            let regions = match board.board {
+                ShellBoard::Zcu102 => 4,
+                _ => 3,
+            };
+            for d in &board.decisions {
+                assert!(d.anchor + d.span <= regions, "{:?}: {d:?}", board.board);
+            }
+        }
+        // Both shards actually served work.
+        assert!(r.boards.iter().all(|b| !b.decisions.is_empty()));
     }
 
     #[test]

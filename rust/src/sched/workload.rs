@@ -113,6 +113,41 @@ impl Workload {
         Workload::default()
     }
 
+    /// The multi-tenant cluster mix (fig22's concurrent-tenant scenario
+    /// scaled out for fig23): `tenants` users, tenant `t` driving
+    /// accelerator `t % 8` from a fixed 8-accelerator rotation, each
+    /// submitting `waves` request batches of `reqs_per_wave` x
+    /// `tiles_per_req` tiles, with submissions staggered `stagger_ns`
+    /// apart (wave-major, tenant-minor order).  The stagger is what
+    /// makes board placement interesting: requests arrive while earlier
+    /// ones are resident, so a locality-aware policy can route to warm
+    /// boards while round-robin scatters every accelerator over every
+    /// board.
+    pub fn cluster_mix(
+        tenants: usize,
+        waves: usize,
+        reqs_per_wave: usize,
+        tiles_per_req: usize,
+        stagger_ns: SimTime,
+    ) -> Workload {
+        const ACCELS: [&str; 8] =
+            ["mandelbrot", "sobel", "dct", "fir", "vadd", "histogram", "mm", "black_scholes"];
+        let mut w = Workload::new();
+        for wave in 0..waves {
+            for t in 0..tenants {
+                w.push(JobSpec {
+                    user: t,
+                    accel: ACCELS[t % ACCELS.len()].to_string(),
+                    arrival: ((wave * tenants + t) as SimTime) * stagger_ns,
+                    requests: reqs_per_wave,
+                    tiles_per_request: tiles_per_req,
+                    pin_variant: None,
+                });
+            }
+        }
+        w
+    }
+
     pub fn push(&mut self, job: JobSpec) -> &mut Self {
         self.jobs.push(job);
         self
@@ -151,6 +186,22 @@ mod tests {
         assert_eq!(j.pin_variant.as_deref(), Some("mandelbrot_v1"));
         // Degenerate stream still carries one tile.
         assert_eq!(JobSpec::stream(0, "vadd", None, 0, 0).tiles_per_request, 1);
+    }
+
+    #[test]
+    fn cluster_mix_shape() {
+        let w = Workload::cluster_mix(8, 2, 3, 4, 1000);
+        assert_eq!(w.users(), 8);
+        assert_eq!(w.jobs.len(), 16);
+        assert_eq!(w.total_requests(), 48);
+        // Arrivals strictly staggered in wave-major, tenant-minor order.
+        for (k, j) in w.jobs.iter().enumerate() {
+            assert_eq!(j.arrival, k as SimTime * 1000);
+        }
+        // Eight distinct accelerators in rotation.
+        let accels: std::collections::HashSet<&str> =
+            w.jobs.iter().map(|j| j.accel.as_str()).collect();
+        assert_eq!(accels.len(), 8);
     }
 
     #[test]

@@ -43,6 +43,32 @@ pub fn bench_scale(full: usize, smoke: usize) -> usize {
     }
 }
 
+/// Case count for a property test: `default`, unless the
+/// `FOS_PROPTEST_CASES` env knob overrides it (the nightly CI job sets
+/// it to run every property at long iteration counts; a PROPTEST_CASES
+/// -style absolute count, not a multiplier).
+pub fn prop_cases(default: u64) -> u64 {
+    std::env::var("FOS_PROPTEST_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or(default)
+}
+
+/// Write a bench's machine-readable result as `BENCH_<bench>.json` —
+/// into `FOS_BENCH_JSON_DIR` when set (CI points it at the workspace
+/// root so the regression gate and artifact upload find the files), or
+/// the current directory otherwise.  Returns the path written.
+pub fn write_bench_json(
+    bench: &str,
+    v: &crate::json::Value,
+) -> std::io::Result<std::path::PathBuf> {
+    let dir = std::env::var("FOS_BENCH_JSON_DIR").unwrap_or_else(|_| ".".to_string());
+    let path = std::path::Path::new(&dir).join(format!("BENCH_{bench}.json"));
+    std::fs::write(&path, crate::json::to_string_pretty(v) + "\n")?;
+    Ok(path)
+}
+
 /// Operand register values for one request of `accel`, with properly
 /// sized buffers allocated through the daemon: the accelerator's
 /// non-control registers in map order, zipped with its input then

@@ -1,14 +1,20 @@
 //! Property-based tests over the core invariants (own `testutil::cases`
-//! driver — no proptest in the offline vendor set).
+//! driver — no proptest in the offline vendor set).  Case counts obey
+//! the `FOS_PROPTEST_CASES` env knob (`testutil::prop_cases`): the
+//! nightly CI job sets it to run every property at long iteration
+//! counts, tier-1 runs keep the fast defaults.
 
 use fos::accel::Catalog;
 use fos::bitstream::{extract, relocate, synth_full, Bitstream};
 use fos::driver::{DataManager, PhysAddr};
 use fos::fabric::{Device, DeviceKind, Floorplan};
 use fos::json::{parse, to_string, to_string_pretty, Value};
-use fos::sched::{simulate, DecisionKind, JobSpec, Policy, SchedCore, SimConfig, Workload};
+use fos::sched::{
+    simulate, simulate_cluster, ClusterSimConfig, DecisionKind, JobSpec, PlacementKind, Policy,
+    SchedCore, SimConfig, Workload,
+};
 use fos::shell::{Shell, ShellBoard};
-use fos::testutil::{cases, Rng};
+use fos::testutil::{cases, prop_cases, Rng};
 
 /// Random JSON value generator.
 fn gen_value(rng: &mut Rng, depth: usize) -> Value {
@@ -41,7 +47,7 @@ fn gen_value(rng: &mut Rng, depth: usize) -> Value {
 
 #[test]
 fn prop_json_roundtrip() {
-    cases(300, |rng| {
+    cases(prop_cases(300), |rng| {
         let v = gen_value(rng, 3);
         assert_eq!(parse(&to_string(&v)).unwrap(), v);
         assert_eq!(parse(&to_string_pretty(&v)).unwrap(), v);
@@ -50,7 +56,7 @@ fn prop_json_roundtrip() {
 
 #[test]
 fn prop_json_parser_never_panics_on_garbage() {
-    cases(500, |rng| {
+    cases(prop_cases(500), |rng| {
         let n = rng.below(64) as usize;
         let junk: String = (0..n)
             .map(|_| *rng.pick(&['{', '}', '[', ']', '"', ',', ':', '1', 'e', '.', '-', 'n', 't', ' ']))
@@ -61,7 +67,7 @@ fn prop_json_parser_never_panics_on_garbage() {
 
 #[test]
 fn prop_bitstream_serialisation_roundtrip() {
-    cases(60, |rng| {
+    cases(prop_cases(60), |rng| {
         let mut bs = Bitstream::new("dev", rng.bool(0.5));
         for _ in 0..rng.below(20) {
             let addr = fos::bitstream::FrameAddr {
@@ -89,7 +95,7 @@ fn prop_bitstream_serialisation_roundtrip() {
 fn prop_relocation_is_invertible_and_content_preserving() {
     let fp = Floorplan::standard(Device::new(DeviceKind::Zu9eg));
     let full = synth_full(&fp.device, 77);
-    cases(40, |rng| {
+    cases(prop_cases(40), |rng| {
         let from = rng.below(fp.regions.len() as u64) as usize;
         let to = rng.below(fp.regions.len() as u64) as usize;
         let p = extract(&fp.device, &full, &fp.regions[from]).unwrap();
@@ -107,7 +113,7 @@ fn prop_relocation_is_invertible_and_content_preserving() {
 
 #[test]
 fn prop_data_manager_never_overlaps() {
-    cases(60, |rng| {
+    cases(prop_cases(60), |rng| {
         let mut dm = DataManager::new(1 << 18);
         let mut live: Vec<(PhysAddr, usize)> = Vec::new();
         for _ in 0..40 {
@@ -136,7 +142,7 @@ fn prop_data_manager_never_overlaps() {
 fn prop_scheduler_trace_invariants_random_workloads() {
     let catalog = Catalog::load_default().unwrap();
     let accels = ["vadd", "mm", "fir", "histogram", "dct", "sobel", "mandelbrot", "black_scholes"];
-    cases(25, |rng| {
+    cases(prop_cases(25), |rng| {
         let mut w = Workload::new();
         let users = 1 + rng.below(4) as usize;
         for u in 0..users {
@@ -186,7 +192,7 @@ fn prop_sched_core_bookkeeping_consistent_under_interleavings() {
     let catalog = Catalog::load_default().unwrap();
     let accels = ["vadd", "fir", "dct", "sobel", "mandelbrot"];
     let policies = [Policy::Elastic, Policy::Fixed, Policy::Quantum, Policy::ElasticPreempt];
-    cases(30, |rng| {
+    cases(prop_cases(30), |rng| {
         let policy = *rng.pick(&policies);
         let board =
             if rng.bool(0.5) { ShellBoard::Ultra96 } else { ShellBoard::Zcu102 };
@@ -299,7 +305,7 @@ fn prop_sched_core_bookkeeping_consistent_under_interleavings() {
 
 #[test]
 fn prop_floorplan_mutations_caught() {
-    cases(60, |rng| {
+    cases(prop_cases(60), |rng| {
         let mut fp = Floorplan::standard(Device::new(DeviceKind::Zu3eg));
         let idx = rng.below(fp.regions.len() as u64) as usize;
         let mutation = rng.below(4);
@@ -319,5 +325,60 @@ fn prop_floorplan_mutations_caught() {
             !fp.check().is_empty(),
             "mutation {mutation} on region {idx} went undetected"
         );
+    });
+}
+
+#[test]
+fn prop_cluster_conserves_requests_under_any_placement() {
+    // Random workloads over random heterogeneous clusters, any
+    // placement policy: every request is routed exactly once and
+    // dispatched exactly once on exactly one shard, every job
+    // completes, and no shard's decisions escape its own fabric.
+    let catalog = Catalog::load_default().unwrap();
+    let accels = ["vadd", "fir", "dct", "sobel", "mandelbrot", "histogram"];
+    let placements =
+        [PlacementKind::RoundRobin, PlacementKind::LeastLoaded, PlacementKind::Locality];
+    cases(prop_cases(15), |rng| {
+        let n_boards = 1 + rng.below(4) as usize;
+        let boards: Vec<ShellBoard> = (0..n_boards)
+            .map(|_| if rng.bool(0.5) { ShellBoard::Ultra96 } else { ShellBoard::Zcu102 })
+            .collect();
+        let mut w = Workload::new();
+        let users = 1 + rng.below(5) as usize;
+        for u in 0..users {
+            let accel = *rng.pick(&accels);
+            let tiles = 1 + rng.below(30) as usize;
+            let reqs = 1 + rng.below(6) as usize;
+            let arrival = rng.below(10_000_000);
+            for j in JobSpec::frame(u, accel, arrival, tiles, reqs) {
+                w.push(j);
+            }
+        }
+        let placement = *rng.pick(&placements);
+        let r = simulate_cluster(
+            &catalog,
+            &w,
+            &ClusterSimConfig::new(boards.clone(), Policy::Elastic, placement),
+        );
+
+        assert_eq!(r.cluster.routed, w.total_requests() as u64);
+        let placements_made: u64 =
+            r.boards.iter().map(|b| b.counters.reconfigs + b.counters.reuses).sum();
+        assert_eq!(placements_made, w.total_requests() as u64, "{placement:?}");
+        assert_eq!(
+            r.merged.len() as u64,
+            placements_made,
+            "merged log out of sync with per-shard placements"
+        );
+        for (b, board) in r.boards.iter().enumerate() {
+            let regions = if boards[b] == ShellBoard::Ultra96 { 3 } else { 4 };
+            for d in &board.decisions {
+                assert!(d.anchor + d.span <= regions, "board {b}: {d:?}");
+            }
+        }
+        for (j, &done) in r.job_completion.iter().enumerate() {
+            assert!(done >= w.jobs[j].arrival, "job {j} completed before arrival");
+            assert!(done <= r.makespan);
+        }
     });
 }

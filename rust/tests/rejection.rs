@@ -1,0 +1,130 @@
+//! Rejected-request buffer coverage: a client naming an unknown
+//! accelerator (or a policy naming an unknown variant) must get a
+//! *structured* rejection — an error reply carrying the reason, never
+//! a hang or a dead dispatcher — and `take_rejected` must drain each
+//! rejection exactly once.
+
+use fos::accel::Catalog;
+use fos::daemon::{Daemon, FpgaRpc, Job, ProtoError};
+use fos::sched::{
+    ClusterCore, CostModel, PlaceReq, Placement, PlacementKind, Policy, RegionMap, SchedPolicy,
+};
+use fos::shell::ShellBoard;
+use std::path::PathBuf;
+
+fn sock(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("fos_reject_{name}_{}.sock", std::process::id()))
+}
+
+#[test]
+fn unknown_accelerator_gets_structured_rejection_not_a_hang() {
+    let path = sock("unknown");
+    let catalog = Catalog::load_default().unwrap();
+    let _daemon = Daemon::start(&path, ShellBoard::Ultra96, catalog.clone()).unwrap();
+    let mut rpc = FpgaRpc::connect(&path).unwrap();
+
+    // The reply must be an error naming the accelerator — admission
+    // rejects before any scheduling state is touched.
+    let err = rpc.run(&[Job::new("flux_capacitor", vec![])]).unwrap_err();
+    match err {
+        ProtoError::Remote(msg) => {
+            assert!(msg.contains("flux_capacitor"), "unhelpful rejection: {msg}")
+        }
+        other => panic!("expected a remote rejection, got {other:?}"),
+    }
+
+    // The connection (and the dispatcher) survive: a valid submission
+    // afterwards is scheduled and decided.
+    assert!(rpc.ping().is_ok());
+    let params = fos::testutil::alloc_operand_params(&mut rpc, &catalog, "mandelbrot");
+    let _ = rpc.run(&[Job::new("mandelbrot", params).with_tiles(2)]);
+    let stats = rpc.sched_stats().unwrap();
+    assert_eq!(stats.reconfigs + stats.reuses, 1, "valid job after rejection not scheduled");
+}
+
+#[test]
+fn mixed_batch_reports_rejection_and_daemon_survives() {
+    let path = sock("mixed");
+    let catalog = Catalog::load_default().unwrap();
+    let _daemon = Daemon::start(&path, ShellBoard::Ultra96, catalog.clone()).unwrap();
+    let mut rpc = FpgaRpc::connect(&path).unwrap();
+
+    // One valid + one unknown job in a single batch: the batch reply is
+    // an error (the client learns the batch did not fully succeed), and
+    // it arrives — the valid half must not leave the reply hanging.
+    let params = fos::testutil::alloc_operand_params(&mut rpc, &catalog, "sobel");
+    let jobs = vec![Job::new("sobel", params).with_tiles(1), Job::new("warp_drive", vec![])];
+    match rpc.run(&jobs) {
+        Err(ProtoError::Remote(msg)) => {
+            assert!(msg.contains("warp_drive"), "rejection lost its reason: {msg}")
+        }
+        other => panic!("mixed batch must report the rejection, got {other:?}"),
+    }
+
+    // A second tenant is unaffected.
+    let mut rpc2 = FpgaRpc::connect(&path).unwrap();
+    assert!(rpc2.ping().is_ok());
+    assert!(rpc2.sched_stats().is_ok());
+}
+
+/// A policy that always names a variant the catalog does not know —
+/// the mid-flight rejection path (`next_decision` cannot panic the
+/// dispatcher on a buggy policy).
+struct BadVariant;
+
+impl SchedPolicy for BadVariant {
+    fn name(&self) -> &'static str {
+        "bad-variant"
+    }
+
+    fn place(
+        &mut self,
+        _regions: &RegionMap,
+        _costs: &CostModel,
+        _req: &PlaceReq,
+    ) -> Option<Placement> {
+        Some(Placement { anchor: 0, variant: "not_a_variant".into(), reconfigure: true })
+    }
+}
+
+#[test]
+fn cluster_take_rejected_drains_exactly_once_per_shard() {
+    let catalog = Catalog::load_default().unwrap();
+    let mut cluster = ClusterCore::new(
+        &[ShellBoard::Ultra96, ShellBoard::Zcu102],
+        &catalog,
+        Policy::Elastic,
+        PlacementKind::RoundRobin,
+    );
+    for b in 0..2 {
+        cluster.core_mut(b).register_policy(Box::new(BadVariant));
+    }
+    assert!(cluster.set_user_policy(0, "bad-variant"));
+
+    // Unknown names are rejected at admission (before routing), so the
+    // rejected buffer stays empty and round-robin does not advance.
+    assert!(cluster.submit(0, 0, "flux_capacitor", 1, None).is_err());
+    assert!(cluster.take_rejected(0).is_empty());
+
+    // One request per board; both get rejected mid-flight by the buggy
+    // policy, each into its own shard's buffer.
+    assert_eq!(cluster.submit(0, 1, "vadd", 1, None).unwrap(), 0);
+    assert_eq!(cluster.submit(0, 2, "vadd", 1, None).unwrap(), 1);
+    for b in 0..2 {
+        cluster.begin_round_at(b, 0);
+        assert!(cluster.next_decision(b).is_none(), "board {b} must reject, not dispatch");
+    }
+
+    let r0 = cluster.take_rejected(0);
+    assert_eq!(r0.len(), 1);
+    assert_eq!(r0[0].0.job, 1);
+    assert!(r0[0].1.contains("unknown variant"), "{}", r0[0].1);
+    // Exactly once: a second drain is empty, and board 1's rejection
+    // was not swept up by board 0's drain.
+    assert!(cluster.take_rejected(0).is_empty());
+    let r1 = cluster.take_rejected(1);
+    assert_eq!(r1.len(), 1);
+    assert_eq!(r1[0].0.job, 2);
+    assert!(cluster.take_rejected(1).is_empty());
+    assert!(!cluster.has_pending());
+}

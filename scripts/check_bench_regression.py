@@ -1,0 +1,126 @@
+#!/usr/bin/env python3
+"""Bench-regression gate for the deterministic scheduler benches.
+
+Compares the freshly generated ``BENCH_<name>.json`` files (written by
+``fig22_multitenant`` and ``fig23_cluster_scaling`` via
+``fos::testutil::write_bench_json``) against the committed
+``BENCH_BASELINE_<name>.json`` files at the repo root, and fails when
+any ``mean_turnaround_ns`` leaf regresses by more than the threshold
+(default 20%).
+
+All compared numbers are *virtual-time* simulator outputs, so they are
+bit-for-bit deterministic across machines: any drift past the threshold
+is a real scheduling regression, never runner noise.
+
+Bootstrapping: a baseline file containing ``"bootstrap": true`` carries
+no numbers yet. The gate then reports what it *would* compare and exits
+0 — copy the uploaded ``BENCH_<name>.json`` artifact over the baseline
+(or run with ``--update``) to arm the gate.
+
+Usage:
+  check_bench_regression.py [--baseline-dir DIR] [--current-dir DIR]
+                            [--threshold PCT] [--update]
+"""
+
+import argparse
+import json
+import os
+import shutil
+import sys
+
+BENCHES = ["fig22_multitenant", "fig23_cluster_scaling"]
+GATED_KEY = "mean_turnaround_ns"
+
+
+def leaves(node, prefix=()):
+    """Yield (path, number) for every numeric leaf."""
+    if isinstance(node, dict):
+        for k, v in sorted(node.items()):
+            yield from leaves(v, prefix + (k,))
+    elif isinstance(node, list):
+        for idx, v in enumerate(node):
+            yield from leaves(v, prefix + (str(idx),))
+    elif isinstance(node, (int, float)) and not isinstance(node, bool):
+        yield prefix, float(node)
+
+
+def gated_leaves(doc):
+    return {p: v for p, v in leaves(doc) if GATED_KEY in p}
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline-dir", default=".")
+    ap.add_argument("--current-dir", default=".")
+    ap.add_argument("--threshold", type=float, default=20.0,
+                    help="max allowed regression in percent (default 20)")
+    ap.add_argument("--update", action="store_true",
+                    help="copy current results over the baselines instead of gating")
+    args = ap.parse_args()
+
+    failures = []
+    for bench in BENCHES:
+        cur_path = os.path.join(args.current_dir, f"BENCH_{bench}.json")
+        base_path = os.path.join(args.baseline_dir, f"BENCH_BASELINE_{bench}.json")
+        if not os.path.exists(cur_path):
+            failures.append(f"{bench}: missing current result {cur_path} "
+                            "(did the bench run with FOS_BENCH_JSON_DIR set?)")
+            continue
+        with open(cur_path) as f:
+            cur = json.load(f)
+
+        if args.update:
+            shutil.copyfile(cur_path, base_path)
+            print(f"{bench}: baseline updated from {cur_path}")
+            continue
+
+        if not os.path.exists(base_path):
+            failures.append(f"{bench}: missing baseline {base_path}")
+            continue
+        with open(base_path) as f:
+            base = json.load(f)
+
+        if base.get("bootstrap"):
+            print(f"{bench}: baseline is a bootstrap placeholder — gate not armed.")
+            print(f"  To arm it: copy {cur_path} to {base_path} "
+                  "(or rerun this script with --update) and commit.")
+            for path, v in sorted(gated_leaves(cur).items()):
+                print(f"  would gate {'.'.join(path)} = {v:.0f}")
+            continue
+
+        if base.get("smoke") != cur.get("smoke"):
+            failures.append(
+                f"{bench}: smoke-mode mismatch (baseline smoke={base.get('smoke')}, "
+                f"current smoke={cur.get('smoke')}) — numbers are not comparable")
+            continue
+
+        base_l, cur_l = gated_leaves(base), gated_leaves(cur)
+        if not base_l:
+            failures.append(f"{bench}: baseline has no {GATED_KEY} leaves")
+            continue
+        for path, base_v in sorted(base_l.items()):
+            name = ".".join(path)
+            if path not in cur_l:
+                failures.append(f"{bench}: {name} missing from current result")
+                continue
+            cur_v = cur_l[path]
+            if base_v > 0 and cur_v > base_v * (1.0 + args.threshold / 100.0):
+                pct = 100.0 * (cur_v / base_v - 1.0)
+                failures.append(
+                    f"{bench}: {name} regressed {pct:.1f}% "
+                    f"({base_v:.0f} -> {cur_v:.0f}, threshold {args.threshold:.0f}%)")
+            else:
+                delta = 0.0 if base_v == 0 else 100.0 * (cur_v / base_v - 1.0)
+                print(f"{bench}: {name} ok ({base_v:.0f} -> {cur_v:.0f}, {delta:+.1f}%)")
+
+    if failures:
+        print("\nBENCH REGRESSION GATE FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print("bench regression gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
