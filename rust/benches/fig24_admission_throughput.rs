@@ -1,0 +1,149 @@
+//! Fig 24 (beyond the paper): admission-path throughput.  Batched
+//! tenant-aware admission (the daemon's pipeline: whole backlogs
+//! eligible at once, weighted DRR ingest) vs per-RPC blocking dispatch
+//! (one request in flight per tenant, one admission per round — the
+//! classic submit→wait client), swept from 1 to 32 tenants on the
+//! Ultra96.  Reports virtual requests/second and p50/p99 ticket
+//! latency (request turnaround), and emits the machine-readable
+//! `BENCH_fig24_admission_throughput.json` for the CI regression gate.
+//! The hard comparison (batched strictly beats per-RPC) is asserted by
+//! `batched_admission_beats_per_rpc_dispatch_on_throughput` in
+//! `sched/sim.rs` — this program measures the margin.
+
+use fos::accel::Catalog;
+use fos::json::{b, f, obj, Value};
+use fos::metrics::{percentile_ns, throughput_rps, Table};
+use fos::sched::{
+    simulate, AdmissionConfig, JobSpec, Policy, QosClass, SimConfig, SimResult, Workload,
+};
+use fos::shell::ShellBoard;
+
+/// A burst mix: every tenant submits `reqs` requests of 4 tiles at
+/// t=0, rotating over four accelerators so reuse/replication behave
+/// as in a real multi-tenant daemon.
+fn burst_mix(tenants: usize, reqs: usize) -> Workload {
+    const ACCELS: [&str; 4] = ["mandelbrot", "sobel", "dct", "fir"];
+    let mut w = Workload::new();
+    for t in 0..tenants {
+        for j in JobSpec::frame(t, ACCELS[t % ACCELS.len()], 0, reqs * 4, reqs) {
+            w.push(j);
+        }
+    }
+    w
+}
+
+struct Arm {
+    rps: f64,
+    mean_ns: f64,
+    p50_ns: u64,
+    p99_ns: u64,
+}
+
+fn measure(catalog: &Catalog, w: &Workload, cfg: &SimConfig) -> (SimResult, Arm) {
+    let r = simulate(catalog, w, cfg);
+    let turnarounds: Vec<u64> = w
+        .jobs
+        .iter()
+        .zip(&r.job_completion)
+        .map(|(j, &done)| done.saturating_sub(j.arrival))
+        .collect();
+    let arm = Arm {
+        rps: throughput_rps(w.total_requests(), r.makespan),
+        mean_ns: turnarounds.iter().sum::<u64>() as f64 / turnarounds.len().max(1) as f64,
+        p50_ns: percentile_ns(&turnarounds, 50.0),
+        p99_ns: percentile_ns(&turnarounds, 99.0),
+    };
+    (r, arm)
+}
+
+fn arm_json(a: &Arm) -> Value {
+    obj(vec![
+        ("reqs_per_sec", f(a.rps)),
+        ("mean_turnaround_ns", f(a.mean_ns)),
+        ("p50_ns", f(a.p50_ns as f64)),
+        ("p99_ns", f(a.p99_ns as f64)),
+    ])
+}
+
+fn main() {
+    let catalog = Catalog::load_default().expect("run `make artifacts`");
+    let tenant_counts: &[usize] = if fos::testutil::bench_smoke() {
+        &[1, 4, 8]
+    } else {
+        &[1, 2, 4, 8, 16, 32]
+    };
+    let reqs = fos::testutil::bench_scale(24, 8);
+
+    let mut t = Table::new(
+        "Fig 24 — batched tenant-aware admission vs per-RPC blocking dispatch (Ultra96)",
+        &[
+            "tenants",
+            "batched req/s",
+            "per-RPC req/s",
+            "speedup",
+            "batched p50/p99 (ms)",
+            "per-RPC p50/p99 (ms)",
+        ],
+    );
+    let mut configs = Vec::new();
+    for &tenants in tenant_counts {
+        let w = burst_mix(tenants, reqs);
+        let (_, batched) = measure(
+            &catalog,
+            &w,
+            &SimConfig::new(ShellBoard::Ultra96, Policy::Elastic),
+        );
+        // The per-RPC baseline: a strictly blocking client per tenant
+        // (in-flight quota 1) and one admission per scheduling round.
+        let w_rpc = w.clone().with_uniform_qos(QosClass::new(1, 1));
+        let (_, per_rpc) = measure(
+            &catalog,
+            &w_rpc,
+            &SimConfig::new(ShellBoard::Ultra96, Policy::Elastic)
+                .with_admission(AdmissionConfig::per_rpc()),
+        );
+        t.row(&[
+            tenants.to_string(),
+            format!("{:.0}", batched.rps),
+            format!("{:.0}", per_rpc.rps),
+            format!("{:.2}x", batched.rps / per_rpc.rps.max(1e-9)),
+            format!(
+                "{:.2}/{:.2}",
+                batched.p50_ns as f64 / 1e6,
+                batched.p99_ns as f64 / 1e6
+            ),
+            format!(
+                "{:.2}/{:.2}",
+                per_rpc.p50_ns as f64 / 1e6,
+                per_rpc.p99_ns as f64 / 1e6
+            ),
+        ]);
+        configs.push((
+            format!("tenants_{tenants}"),
+            obj(vec![
+                ("batched", arm_json(&batched)),
+                ("per_rpc", arm_json(&per_rpc)),
+            ]),
+        ));
+    }
+    t.print();
+    println!(
+        "batched admission keeps the whole fabric busy; a blocking per-RPC client caps \
+         concurrency at one request per tenant (asserted in sched/sim.rs)."
+    );
+
+    // Machine-readable result for the CI bench-regression gate — the
+    // mean_turnaround_ns leaves are deterministic virtual-time numbers.
+    let doc = obj(vec![
+        ("bench", fos::json::s("fig24_admission_throughput")),
+        ("smoke", b(fos::testutil::bench_smoke())),
+        (
+            "configs",
+            Value::Object(configs.into_iter().collect()),
+        ),
+    ]);
+    match fos::testutil::write_bench_json("fig24_admission_throughput", &doc) {
+        Ok(p) => println!("wrote {}", p.display()),
+        Err(e) => eprintln!("could not write bench JSON: {e}"),
+    }
+}

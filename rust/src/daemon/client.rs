@@ -27,8 +27,11 @@ use std::time::{Duration, Instant};
 /// (mirrors the shared [`crate::sched::SchedCounters`]).
 #[derive(Debug, Clone, Default)]
 pub struct SchedStatsReport {
-    /// Requests admitted but not yet scheduled.
+    /// Work the daemon is holding: queued for admission plus admitted
+    /// but not yet scheduled.
     pub queued: u64,
+    /// The admission-pipeline share of `queued` (not yet ingested).
+    pub admit_queued: u64,
     pub reconfigs: u64,
     pub reuses: u64,
     pub skips: u64,
@@ -40,6 +43,34 @@ pub struct SchedStatsReport {
     pub resumes: u64,
     /// Dispatching is held (see [`FpgaRpc::pause`]).
     pub paused: bool,
+    /// One entry per live tenant (admission + scheduling accounting).
+    pub tenants: Vec<TenantStatsReport>,
+}
+
+/// One tenant's slice of the daemon's `stats` reply.
+#[derive(Debug, Clone, Default)]
+pub struct TenantStatsReport {
+    pub tenant: u64,
+    /// DRR weight of the tenant's QoS class.
+    pub weight: u64,
+    /// Requests waiting in the tenant's admission queue.
+    pub queued: u64,
+    /// Admitted-but-uncompleted requests (held in-flight tokens).
+    pub inflight: u64,
+    /// Requests accepted into the admission queue, ever.
+    pub enqueued: u64,
+    /// Requests handed to the scheduler by batched ingest.
+    pub admitted: u64,
+    /// Completed dispatches (scheduler accounting).
+    pub completed: u64,
+    /// Dispatches checkpointed by preemption.
+    pub preempted: u64,
+    /// Requests refused with `Busy` backpressure (per request, so a
+    /// refused 10-job batch counts 10; the daemon-wide
+    /// `DaemonStats::busy_rejections` counts refused *batches*).
+    pub busy_rejected: u64,
+    /// Requests rejected by the scheduler mid-flight.
+    pub sched_rejected: u64,
 }
 
 /// One board's slice of the daemon's `cluster-stats`/`board-stats`
@@ -114,6 +145,13 @@ impl FpgaRpc {
         let resp = read_msg(&mut self.stream)?;
         if resp.get("status").as_str() == Some("ok") {
             Ok(resp)
+        } else if resp.get("busy").as_u64() == Some(1) {
+            // Structured backpressure, not a failure: honour the hint
+            // and retry.
+            Err(ProtoError::Busy {
+                message: resp.get("error").as_str().unwrap_or("busy").to_string(),
+                retry_after_ms: resp.get("retry_after_ms").as_u64().unwrap_or(1),
+            })
         } else {
             Err(ProtoError::Remote(
                 resp.get("error").as_str().unwrap_or("unknown").to_string(),
@@ -231,12 +269,96 @@ impl FpgaRpc {
         Ok(())
     }
 
+    /// Bind this connection to a named tenant with a QoS class: `weight`
+    /// is the admission DRR weight, `max_inflight` the token-bucket
+    /// in-flight quota (`0` = unbounded).  Several connections naming
+    /// the same tenant share one admission identity (queue, quota,
+    /// weight).  Returns the daemon's tenant id.
+    pub fn set_session(
+        &mut self,
+        tenant: &str,
+        weight: u32,
+        max_inflight: usize,
+    ) -> Result<u64, ProtoError> {
+        let r = self.call(obj(vec![
+            ("method", s("session")),
+            ("tenant", s(tenant)),
+            ("weight", i(weight as i64)),
+            ("max_inflight", i(max_inflight as i64)),
+        ]))?;
+        r.get("tenant")
+            .as_u64()
+            .ok_or_else(|| ProtoError::Schema("session reply missing tenant".into()))
+    }
+
+    /// Non-blocking offload: enqueue the batch and return a ticket
+    /// immediately (the connection thread never waits on scheduling).
+    /// Claim the result with [`FpgaRpc::wait`], [`FpgaRpc::poll`] or
+    /// [`FpgaRpc::completions`].  A full admission queue answers
+    /// [`ProtoError::Busy`] with a retry hint instead of blocking.
+    pub fn submit(&mut self, jobs: &[Job]) -> Result<u64, ProtoError> {
+        let r = self.call(obj(vec![
+            ("method", s("submit")),
+            ("jobs", arr(jobs.iter().map(|j| j.to_value()).collect())),
+        ]))?;
+        r.get("ticket")
+            .as_u64()
+            .ok_or_else(|| ProtoError::Schema("submit reply missing ticket".into()))
+    }
+
+    /// Block until `ticket` settles; consumes the ticket.
+    pub fn wait(&mut self, ticket: u64) -> Result<RunReport, ProtoError> {
+        let t0 = Instant::now();
+        let r = self.call(obj(vec![("method", s("wait")), ("ticket", i(ticket as i64))]))?;
+        Ok(run_report(&r, t0.elapsed()))
+    }
+
+    /// Non-blocking ticket status: `None` while in flight,
+    /// `Some(Ok(report))` / `Some(Err(_))` once settled.  Does not
+    /// consume the ticket — `wait`/`completions` do.
+    #[allow(clippy::type_complexity)]
+    pub fn poll(
+        &mut self,
+        ticket: u64,
+    ) -> Result<Option<Result<RunReport, ProtoError>>, ProtoError> {
+        let t0 = Instant::now();
+        let r = self.call(obj(vec![("method", s("poll")), ("ticket", i(ticket as i64))]))?;
+        if r.get("done").as_u64() != Some(1) {
+            return Ok(None);
+        }
+        Ok(Some(settle_result(r.get("result"), t0.elapsed())))
+    }
+
+    /// Drain every settled async ticket of this connection, in ticket
+    /// order (the `completions` RPC).
+    #[allow(clippy::type_complexity)]
+    pub fn completions(
+        &mut self,
+    ) -> Result<Vec<(u64, Result<RunReport, ProtoError>)>, ProtoError> {
+        let t0 = Instant::now();
+        let r = self.call(obj(vec![("method", s("completions"))]))?;
+        let mut out = Vec::new();
+        if let Some(items) = r.get("completions").as_array() {
+            for item in items {
+                let ticket = item.get("ticket").as_u64().unwrap_or(0);
+                out.push((ticket, settle_result(item.get("result"), t0.elapsed())));
+            }
+        }
+        Ok(out)
+    }
+
     /// Snapshot of the daemon's shared scheduler counters.
     pub fn sched_stats(&mut self) -> Result<SchedStatsReport, ProtoError> {
         let r = self.call(obj(vec![("method", s("stats"))]))?;
         let num = |key: &str| r.get(key).as_u64().unwrap_or(0);
+        let tenants = r
+            .get("tenants")
+            .as_array()
+            .map(|a| a.iter().map(tenant_report).collect())
+            .unwrap_or_default();
         Ok(SchedStatsReport {
             queued: num("queued"),
+            admit_queued: num("admit_queued"),
             reconfigs: num("reconfigs"),
             reuses: num("reuses"),
             skips: num("skips"),
@@ -244,6 +366,7 @@ impl FpgaRpc {
             preemptions: num("preemptions"),
             resumes: num("resumes"),
             paused: num("paused") != 0,
+            tenants,
         })
     }
 
@@ -283,23 +406,61 @@ impl FpgaRpc {
 
     /// Offload data-parallel acceleration requests (Listing 4's
     /// `fpgaRpc.Run(job)`). Blocks until every request completed.
+    /// One round trip: the daemon serves `run` as submit+wait over the
+    /// same admission pipeline the async ticket RPCs use — blocking
+    /// batches are exempt from `Busy` backpressure (a connection can
+    /// only ever hold one), so old callers keep the old contract.
     pub fn run(&mut self, jobs: &[Job]) -> Result<RunReport, ProtoError> {
         let t0 = Instant::now();
         let r = self.call(obj(vec![
             ("method", s("run")),
             ("jobs", arr(jobs.iter().map(|j| j.to_value()).collect())),
         ]))?;
-        let nums = |key: &str| -> Vec<f64> {
-            r.get(key)
-                .as_array()
-                .map(|a| a.iter().filter_map(|x| x.as_f64()).collect())
-                .unwrap_or_default()
-        };
-        Ok(RunReport {
-            latencies_us: nums("latencies_us"),
-            modelled_us: nums("modelled_us"),
-            round_trip: t0.elapsed(),
-        })
+        Ok(run_report(&r, t0.elapsed()))
+    }
+}
+
+/// Parse a settled batch reply into a [`RunReport`].
+fn run_report(r: &Value, round_trip: Duration) -> RunReport {
+    let nums = |key: &str| -> Vec<f64> {
+        r.get(key)
+            .as_array()
+            .map(|a| a.iter().filter_map(|x| x.as_f64()).collect())
+            .unwrap_or_default()
+    };
+    RunReport {
+        latencies_us: nums("latencies_us"),
+        modelled_us: nums("modelled_us"),
+        round_trip,
+    }
+}
+
+/// Interpret an embedded ticket result (from `poll`/`completions`):
+/// the stored reply keeps its own ok/err status.
+fn settle_result(r: &Value, round_trip: Duration) -> Result<RunReport, ProtoError> {
+    if r.get("status").as_str() == Some("ok") {
+        Ok(run_report(r, round_trip))
+    } else {
+        Err(ProtoError::Remote(
+            r.get("error").as_str().unwrap_or("unknown").to_string(),
+        ))
+    }
+}
+
+/// Parse one tenant object of a `stats` reply.
+fn tenant_report(v: &Value) -> TenantStatsReport {
+    let num = |key: &str| v.get(key).as_u64().unwrap_or(0);
+    TenantStatsReport {
+        tenant: num("tenant"),
+        weight: num("weight"),
+        queued: num("queued"),
+        inflight: num("inflight"),
+        enqueued: num("enqueued"),
+        admitted: num("admitted"),
+        completed: num("completed"),
+        preempted: num("preempted"),
+        busy_rejected: num("busy_rejected"),
+        sched_rejected: num("sched_rejected"),
     }
 }
 

@@ -24,13 +24,51 @@
 //! with a [`crate::sched::PlacementKind`] policy routing requests and
 //! `cluster-stats`/`board-stats` RPCs ([`FpgaRpc::cluster_stats`],
 //! [`FpgaRpc::board_stats`]) exposing the per-board counters.
+//!
+//! ## The submit/wait protocol (tenant-aware admission)
+//!
+//! Submission is asynchronous at the wire level; the blocking call is
+//! a convenience wrapper:
+//!
+//! - **`session`** ([`FpgaRpc::set_session`]) binds the connection to
+//!   a named *tenant* with a QoS class — an admission DRR `weight` and
+//!   a token-bucket `max_inflight` quota.  Connections sharing a
+//!   tenant name share one admission identity; connections that never
+//!   call it get a private tenant with the permissive default class.
+//! - **`submit`** ([`FpgaRpc::submit`]) enqueues a job batch into the
+//!   tenant's *bounded* admission queue and replies immediately with a
+//!   **ticket**.  A full queue answers a structured
+//!   `busy`/`retry_after_ms` reply ([`ProtoError::Busy`]) — batches
+//!   are accepted or refused atomically, never silently dropped, and
+//!   the connection thread never parks on the dispatcher.
+//! - **`wait`** ([`FpgaRpc::wait`]) blocks until the ticket settles
+//!   and consumes it; **`poll`** ([`FpgaRpc::poll`]) is its
+//!   non-blocking, non-consuming twin; **`completions`**
+//!   ([`FpgaRpc::completions`]) drains every settled ticket of the
+//!   connection in one round trip.
+//! - **`run`** ([`FpgaRpc::run`]) is kept for compatibility: one round
+//!   trip the daemon serves as submit+wait over the same pipeline.
+//!   Blocking batches are exempt from `Busy` backpressure — a
+//!   connection holds at most one, so the connection cap already
+//!   bounds that state and old callers keep the old contract.
+//!
+//! Between submission and scheduling sits the shared
+//! [`crate::sched::AdmissionPipeline`]: one batched ingest round per
+//! scheduling round admits all eligible queued work in weighted
+//! deficit-round-robin order under the per-tenant in-flight quotas —
+//! the same state machine the simulator drives, which is what keeps
+//! sim/daemon decision parity with QoS enabled (see
+//! `sched/ARCHITECTURE.md`, *Admission & QoS*).
 
 mod proto;
 mod server;
 mod client;
 mod shm;
 
-pub use client::{BoardStatsReport, ClusterStatsReport, FpgaRpc, RunReport, SchedStatsReport};
+pub use client::{
+    BoardStatsReport, ClusterStatsReport, FpgaRpc, RunReport, SchedStatsReport,
+    TenantStatsReport,
+};
 pub use proto::{read_msg, write_msg, Job, ProtoError};
-pub use server::{BoardStats, Daemon, DaemonStats};
+pub use server::{BoardStats, Daemon, DaemonStats, DEFAULT_MAX_CONNECTIONS, MAX_OPEN_TICKETS};
 pub use shm::SharedMem;

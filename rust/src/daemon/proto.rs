@@ -18,6 +18,10 @@ pub enum ProtoError {
     Json(String),
     Remote(String),
     Schema(String),
+    /// Structured admission backpressure: the daemon's bounded
+    /// per-tenant queue (or its connection table) is full.  Not a
+    /// failure — retry after the hinted delay.
+    Busy { message: String, retry_after_ms: u64 },
 }
 
 impl fmt::Display for ProtoError {
@@ -28,6 +32,9 @@ impl fmt::Display for ProtoError {
             ProtoError::Json(e) => write!(f, "bad json: {e}"),
             ProtoError::Remote(e) => write!(f, "daemon error: {e}"),
             ProtoError::Schema(e) => write!(f, "bad message: {e}"),
+            ProtoError::Busy { message, retry_after_ms } => {
+                write!(f, "daemon busy (retry in ~{retry_after_ms} ms): {message}")
+            }
         }
     }
 }

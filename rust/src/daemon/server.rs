@@ -48,16 +48,30 @@ use super::shm::SharedMem;
 use crate::accel::Catalog;
 use crate::driver::{AccelSnapshot, Cynq, LoadedAccel, PhysAddr};
 use crate::json::{arr, f, i, obj, s, Value};
-use crate::sched::{ClusterCore, Decision, DecisionKind, PlacementKind, Policy};
+use crate::sched::{
+    AdmissionConfig, AdmissionPipeline, AdmitRequest, ClusterCore, Decision, DecisionKind,
+    PlacementKind, Policy, QosClass,
+};
 use crate::shell::ShellBoard;
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap, VecDeque};
 use std::io;
 use std::os::unix::net::{UnixListener, UnixStream};
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::Instant;
+
+/// Connection-table cap of the default configuration: past this many
+/// live connections the accept loop sheds new clients with a
+/// structured busy reject instead of spawning threads without bound.
+pub const DEFAULT_MAX_CONNECTIONS: usize = 256;
+
+/// Open (pending + settled-but-unclaimed) async tickets one connection
+/// may hold.  A fire-and-forget client that submits without ever
+/// draining `wait`/`poll`/`completions` hits a structured busy reject
+/// here instead of growing the dispatcher's ticket store forever.
+pub const MAX_OPEN_TICKETS: usize = 1024;
 
 /// Daemon-side counters (Table 4/5 material). The scheduling counters
 /// (`reconfig_loads`, `reuse_hits`, `skips`, `replications`) mirror the
@@ -87,6 +101,17 @@ pub struct DaemonStats {
     pub sched_ns: AtomicU64,
     pub sched_decisions: AtomicU64,
     pub rpcs: AtomicU64,
+    /// Requests handed to the scheduler by the admission pipeline's
+    /// batched ingest.
+    pub admitted: AtomicU64,
+    /// Batches refused with a structured `Busy` reply (full admission
+    /// queue or open-ticket cap).  Counts *batches*; the per-tenant
+    /// `busy_rejected` in the stats RPC counts refused *requests*.
+    pub busy_rejections: AtomicU64,
+    /// Non-blocking `submit` batches (ticketed; `run` is submit+wait).
+    pub async_submits: AtomicU64,
+    /// Connections shed by the accept loop at the connection cap.
+    pub connections_shed: AtomicU64,
     /// Requests routed to a board at admission (cluster layer).
     pub routed: AtomicU64,
     /// Requests moved between boards by work stealing.
@@ -136,9 +161,39 @@ enum Msg {
     Goodbye {
         user: u64,
     },
+    /// Bind the connection to a named tenant + QoS class (weight and
+    /// in-flight quota); several connections may share one tenant.
+    Session {
+        user: u64,
+        tenant: String,
+        weight: u32,
+        max_inflight: usize,
+        reply: mpsc::Sender<Value>,
+    },
+    /// Job batch. `wait: true` is the blocking `run` RPC (reply
+    /// deferred to the batch's completion); `wait: false` is the
+    /// non-blocking `submit` RPC (reply is an immediate ticket).
     Submit {
         user: u64,
         jobs: Vec<Job>,
+        wait: bool,
+        reply: mpsc::Sender<Value>,
+    },
+    /// Block until the ticket settles (consumes it).
+    Wait {
+        user: u64,
+        ticket: u64,
+        reply: mpsc::Sender<Value>,
+    },
+    /// Non-blocking ticket status (does not consume).
+    Poll {
+        user: u64,
+        ticket: u64,
+        reply: mpsc::Sender<Value>,
+    },
+    /// Drain every settled ticket of this connection.
+    Completions {
+        user: u64,
         reply: mpsc::Sender<Value>,
     },
     Mem {
@@ -223,11 +278,8 @@ impl Daemon {
         Self::start_cluster(socket_path, &[board], catalog, default_policy, PlacementKind::Locality)
     }
 
-    /// Start a multi-fabric daemon: bind the socket, bring up one FPGA
-    /// (`Cynq`) per entry of `boards` — heterogeneous mixes welcome —
-    /// and spawn the accept loop plus one dispatcher thread driving a
-    /// scheduler shard per board, with `placement` routing every
-    /// request to a board at admission.
+    /// Start a multi-fabric daemon with the default admission pipeline
+    /// and connection cap (see [`Daemon::start_cluster_configured`]).
     pub fn start_cluster(
         socket_path: impl AsRef<Path>,
         boards: &[ShellBoard],
@@ -235,11 +287,38 @@ impl Daemon {
         default_policy: Policy,
         placement: PlacementKind,
     ) -> io::Result<Daemon> {
+        Self::start_cluster_configured(
+            socket_path,
+            boards,
+            catalog,
+            default_policy,
+            placement,
+            AdmissionConfig::default(),
+            DEFAULT_MAX_CONNECTIONS,
+        )
+    }
+
+    /// Start a multi-fabric daemon: bind the socket, bring up one FPGA
+    /// (`Cynq`) per entry of `boards` — heterogeneous mixes welcome —
+    /// and spawn the accept loop plus one dispatcher thread driving a
+    /// scheduler shard per board, with `placement` routing every
+    /// request to a board at ingest time.  `admission` tunes the
+    /// tenant-aware admission pipeline (bounded queues, DRR quantum,
+    /// ingest batch cap); `max_connections` caps the live connection
+    /// table (excess clients get a structured busy reject).
+    pub fn start_cluster_configured(
+        socket_path: impl AsRef<Path>,
+        boards: &[ShellBoard],
+        catalog: Catalog,
+        default_policy: Policy,
+        placement: PlacementKind,
+        admission: AdmissionConfig,
+        max_connections: usize,
+    ) -> io::Result<Daemon> {
         assert!(!boards.is_empty(), "a cluster needs at least one board");
         let socket_path = socket_path.as_ref().to_path_buf();
         let _ = std::fs::remove_file(&socket_path);
         let listener = UnixListener::bind(&socket_path)?;
-        listener.set_nonblocking(true)?;
         let cynqs = boards
             .iter()
             .map(|&b| Cynq::open(b, catalog.clone()))
@@ -254,30 +333,56 @@ impl Daemon {
             let stats = stats.clone();
             std::thread::Builder::new()
                 .name("fos-dispatch".into())
-                .spawn(move || dispatcher(cynqs, rx, stats, default_policy, placement))?
+                .spawn(move || dispatcher(cynqs, rx, stats, default_policy, placement, admission))?
         };
 
+        // Blocking accept (no sleep polling): `shutdown` wakes the
+        // loop with a throwaway connection after setting the stop
+        // flag.  Connection threads are named, counted, and capped —
+        // past the cap a client gets a structured busy reject instead
+        // of an unbounded anonymous spawn.
         let accept_handle = {
             let tx = tx.clone();
             let stop = stop.clone();
             let stats = stats.clone();
             std::thread::Builder::new().name("fos-accept".into()).spawn(move || {
+                let live = Arc::new(AtomicUsize::new(0));
                 let mut next_user = 0u64;
-                while !stop.load(Ordering::Relaxed) {
-                    match listener.accept() {
-                        Ok((stream, _)) => {
-                            let user = next_user;
-                            next_user += 1;
-                            let tx = tx.clone();
-                            let stats = stats.clone();
-                            std::thread::spawn(move || {
-                                let _ = connection(stream, user, tx, stats);
-                            });
-                        }
-                        Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
-                            std::thread::sleep(std::time::Duration::from_millis(2));
-                        }
+                loop {
+                    let mut stream = match listener.accept() {
+                        Ok((stream, _)) => stream,
                         Err(_) => break,
+                    };
+                    if stop.load(Ordering::Relaxed) {
+                        break; // woken by shutdown's throwaway connect
+                    }
+                    if live.load(Ordering::Relaxed) >= max_connections {
+                        stats.connections_shed.fetch_add(1, Ordering::Relaxed);
+                        let _ = write_msg(
+                            &mut stream,
+                            &busy_val(
+                                &format!(
+                                    "daemon at connection capacity ({max_connections})"
+                                ),
+                                50,
+                            ),
+                        );
+                        continue; // the dropped stream closes the client
+                    }
+                    let user = next_user;
+                    next_user += 1;
+                    let tx = tx.clone();
+                    let stats = stats.clone();
+                    let live_conn = live.clone();
+                    live.fetch_add(1, Ordering::Relaxed);
+                    let spawned = std::thread::Builder::new()
+                        .name(format!("fos-conn-{user}"))
+                        .spawn(move || {
+                            let _ = connection(stream, user, tx, stats);
+                            live_conn.fetch_sub(1, Ordering::Relaxed);
+                        });
+                    if spawned.is_err() {
+                        live.fetch_sub(1, Ordering::Relaxed);
                     }
                 }
             })?
@@ -334,11 +439,14 @@ impl Daemon {
 
     pub fn shutdown(&mut self) {
         self.stop.store(true, Ordering::Relaxed);
-        let _ = self.tx.send(Msg::Stop);
-        if let Some(h) = self.dispatch_handle.take() {
+        // Wake the blocking accept loop: it re-checks the stop flag
+        // after every accept, so a throwaway connection is enough.
+        let _ = UnixStream::connect(&self.socket_path);
+        if let Some(h) = self.accept_handle.take() {
             let _ = h.join();
         }
-        if let Some(h) = self.accept_handle.take() {
+        let _ = self.tx.send(Msg::Stop);
+        if let Some(h) = self.dispatch_handle.take() {
             let _ = h.join();
         }
         let _ = std::fs::remove_file(&self.socket_path);
@@ -388,7 +496,10 @@ fn serve(
         let method = msg.get("method").as_str().unwrap_or("");
         let resp = match method {
             "ping" => ask(tx, |reply| Msg::Hello { user, reply }),
-            "run" => {
+            // `run` blocks until the batch completes; `submit` returns
+            // a ticket immediately (drain via wait/poll/completions).
+            "run" | "submit" => {
+                let wait = method == "run";
                 let jobs: Result<Vec<Job>, _> = msg
                     .req_array("jobs")
                     .map_err(proto::ProtoError::Schema)?
@@ -397,9 +508,31 @@ fn serve(
                     .collect();
                 match jobs {
                     Err(e) => err_val(&e.to_string()),
-                    Ok(jobs) => ask(tx, |reply| Msg::Submit { user, jobs, reply }),
+                    Ok(jobs) => ask(tx, |reply| Msg::Submit { user, jobs, wait, reply }),
                 }
             }
+            "session" => match msg.req_str("tenant") {
+                Err(e) => err_val(&e),
+                Ok(tenant) => {
+                    let tenant = tenant.to_string();
+                    let weight = msg.get("weight").as_u64().unwrap_or(1).max(1) as u32;
+                    // 0 (or absent) = unbounded in-flight quota.
+                    let max_inflight = match msg.get("max_inflight").as_u64() {
+                        Some(0) | None => usize::MAX,
+                        Some(n) => n as usize,
+                    };
+                    ask(tx, |reply| Msg::Session { user, tenant, weight, max_inflight, reply })
+                }
+            },
+            "wait" => match msg.req_u64("ticket") {
+                Err(e) => err_val(&e),
+                Ok(ticket) => ask(tx, |reply| Msg::Wait { user, ticket, reply }),
+            },
+            "poll" => match msg.req_u64("ticket") {
+                Err(e) => err_val(&e),
+                Ok(ticket) => ask(tx, |reply| Msg::Poll { user, ticket, reply }),
+            },
+            "completions" => ask(tx, |reply| Msg::Completions { user, reply }),
             "policy" => match msg.req_str("policy") {
                 Err(e) => err_val(&e),
                 Ok(name) => {
@@ -457,15 +590,61 @@ fn parse_mem_op(method: &str, msg: &Value) -> Result<MemOp, String> {
     })
 }
 
+/// Where a finished batch's reply goes: straight back to a blocking
+/// `run` caller, or into the ticket store for the async
+/// `wait`/`poll`/`completions` RPCs to claim.
+enum BatchSink {
+    Reply(mpsc::Sender<Value>),
+    Ticket(u64),
+}
+
 struct Batch {
-    reply: mpsc::Sender<Value>,
+    sink: BatchSink,
     remaining: usize,
     latencies_us: Vec<f64>,
     modelled_us: Vec<f64>,
     error: Option<String>,
 }
 
-fn finish(b: Batch) {
+/// One async submission's completion slot.  `done` holds the settled
+/// reply until a `wait`/`completions` consumes it; `waiters` are
+/// blocked `wait` callers to answer at settlement.
+struct Ticket {
+    user: u64,
+    done: Option<Value>,
+    waiters: Vec<mpsc::Sender<Value>>,
+}
+
+/// Decrement a connection's open-ticket count (entry dropped at zero).
+fn close_ticket(open: &mut HashMap<u64, usize>, user: u64) {
+    if let Some(c) = open.get_mut(&user) {
+        *c = c.saturating_sub(1);
+        if *c == 0 {
+            open.remove(&user);
+        }
+    }
+}
+
+/// Drop one connection's claim on tenant `id`: decrement the refcount
+/// and, at zero, evict the name mapping and retire the pipeline state
+/// (removed once drained) — shared by the Goodbye and Session-rebind
+/// paths so retirement semantics cannot drift between them.
+fn release_tenant(
+    tenant_ids: &mut HashMap<String, usize>,
+    tenant_refs: &mut HashMap<usize, usize>,
+    admit: &mut AdmissionPipeline,
+    id: usize,
+) {
+    let refs = tenant_refs.entry(id).or_insert(1);
+    *refs = refs.saturating_sub(1);
+    if *refs == 0 {
+        tenant_refs.remove(&id);
+        tenant_ids.retain(|_, &mut t| t != id);
+        admit.retire(id);
+    }
+}
+
+fn finish(b: Batch, tickets: &mut HashMap<u64, Ticket>, open: &mut HashMap<u64, usize>) {
     let resp = match &b.error {
         Some(e) => err_val(e),
         None => ok(vec![
@@ -479,7 +658,27 @@ fn finish(b: Batch) {
             ),
         ]),
     };
-    let _ = b.reply.send(resp);
+    match b.sink {
+        BatchSink::Reply(tx) => {
+            let _ = tx.send(resp);
+        }
+        // A missing ticket means its connection departed: the reply
+        // has no claimant and is dropped.
+        BatchSink::Ticket(id) => match tickets.remove(&id) {
+            None => {}
+            Some(mut t) if t.waiters.is_empty() => {
+                // Claimed later (wait/poll/completions).
+                t.done = Some(resp);
+                tickets.insert(id, t);
+            }
+            Some(t) => {
+                for w in t.waiters {
+                    let _ = w.send(resp.clone());
+                }
+                close_ticket(open, t.user); // consumed by the waiter(s)
+            }
+        },
+    }
 }
 
 /// A submitted proto job awaiting its (next) scheduling decision.  A
@@ -535,13 +734,19 @@ const TICK_ANCHOR: usize = usize::MAX;
 /// Fail one admitted-but-unfinished job of a batch, sending the batch
 /// reply when it was the last outstanding unit — the single bookkeeping
 /// path shared by client disconnects and the stall guard.
-fn fail_job(batches: &mut HashMap<usize, Batch>, batch_id: usize, err: String) {
+fn fail_job(
+    batches: &mut HashMap<usize, Batch>,
+    tickets: &mut HashMap<u64, Ticket>,
+    open_tickets: &mut HashMap<u64, usize>,
+    batch_id: usize,
+    err: String,
+) {
     if let Some(b) = batches.get_mut(&batch_id) {
         b.error = Some(err);
         b.remaining -= 1;
         if b.remaining == 0 {
             let b = batches.remove(&batch_id).unwrap();
-            finish(b);
+            finish(b, tickets, open_tickets);
         }
     }
 }
@@ -587,11 +792,27 @@ fn dispatcher(
     stats: Arc<DaemonStats>,
     policy: Policy,
     placement: PlacementKind,
+    admission: AdmissionConfig,
 ) {
     let boards: Vec<ShellBoard> = cynqs.iter().map(|c| c.shell.board).collect();
     let n_boards = boards.len();
     let catalog = cynqs[0].catalog.clone();
     let mut cluster = ClusterCore::new(&boards, &catalog, policy, placement);
+    // The tenant-aware admission stage: per-tenant bounded queues
+    // feeding batched DRR ingest (the same pipeline the simulator
+    // drives at the same point of the round lifecycle).
+    let mut admit = AdmissionPipeline::new(admission);
+    // Tenant identity: named tenants (the `session` RPC) share an id
+    // across connections; anonymous connections get a private one.
+    let mut tenant_ids: HashMap<String, usize> = HashMap::new();
+    let mut conn_tenant: HashMap<u64, usize> = HashMap::new();
+    let mut tenant_refs: HashMap<usize, usize> = HashMap::new();
+    let mut next_tenant_id = 0usize;
+    // Async submission tickets (see `BatchSink::Ticket`), plus an O(1)
+    // per-connection open-ticket count for the MAX_OPEN_TICKETS cap.
+    let mut tickets: HashMap<u64, Ticket> = HashMap::new();
+    let mut open_tickets: HashMap<u64, usize> = HashMap::new();
+    let mut next_ticket = 0u64;
     let mut hws: Vec<BoardHw> = cynqs
         .into_iter()
         .map(|cynq| BoardHw {
@@ -649,6 +870,9 @@ fn dispatcher(
                 msg,
                 &mut hws,
                 &cluster,
+                &admit,
+                &mut tickets,
+                &mut open_tickets,
                 &mut paused,
                 &mut user_index,
                 &mut free_slots,
@@ -663,64 +887,203 @@ fn dispatcher(
                     // so a long-lived daemon's per-user state is
                     // bounded by peak concurrency, not connections-ever.
                     if let Some(slot) = user_index.remove(&user) {
+                        // Queued-but-unadmitted requests first (their
+                        // in-flight tokens were never taken)…
+                        for r in admit.drop_user(slot) {
+                            if let Some(p) = pending.remove(&r.job) {
+                                fail_job(
+                                    &mut batches,
+                                    &mut tickets,
+                                    &mut open_tickets,
+                                    p.batch,
+                                    "client disconnected".into(),
+                                );
+                            }
+                        }
+                        // …then the scheduler-side queues (tokens come
+                        // back through the pipeline).
                         for (b, req) in cluster.retire_user(slot) {
+                            admit.complete(req.tenant);
                             if let Some(id) = req.resume {
                                 hws[b].snapshots.remove(&id); // orphaned checkpoint
                             }
                             if let Some(p) = pending.remove(&req.job) {
-                                fail_job(&mut batches, p.batch, "client disconnected".into());
+                                fail_job(
+                                    &mut batches,
+                                    &mut tickets,
+                                    &mut open_tickets,
+                                    p.batch,
+                                    "client disconnected".into(),
+                                );
                             }
                         }
                         free_slots.insert(slot);
                     }
+                    // Release the tenant binding; a tenant with no
+                    // connections left is retired from the pipeline
+                    // once its remaining work drains, and its name
+                    // mapping is dropped so the id table stays bounded
+                    // by *live* tenants, not names-ever.
+                    if let Some(t) = conn_tenant.remove(&user) {
+                        release_tenant(&mut tenant_ids, &mut tenant_refs, &mut admit, t);
+                    }
+                    // Unclaimed tickets of the departed connection.
+                    tickets.retain(|_, t| t.user != user);
+                    open_tickets.remove(&user);
+                }
+                Msg::Session { user, tenant, weight, max_inflight, reply } => {
+                    let id = match tenant_ids.get(&tenant) {
+                        Some(&id) => id,
+                        None => {
+                            let id = next_tenant_id;
+                            next_tenant_id += 1;
+                            tenant_ids.insert(tenant.clone(), id);
+                            id
+                        }
+                    };
+                    let prev = conn_tenant.insert(user, id);
+                    if prev != Some(id) {
+                        *tenant_refs.entry(id).or_insert(0) += 1;
+                        if let Some(old) = prev {
+                            release_tenant(&mut tenant_ids, &mut tenant_refs, &mut admit, old);
+                        }
+                    }
+                    admit.set_qos(id, QosClass { weight: weight.max(1), max_inflight });
+                    cluster.set_tenant_weight(id, weight);
+                    round_due = round_due || admit.has_eligible();
+                    let _ = reply.send(ok(vec![
+                        ("tenant", i(id as i64)),
+                        ("name", s(tenant)),
+                        ("weight", i(weight.max(1) as i64)),
+                    ]));
                 }
                 Msg::Resume { reply } => {
                     paused = false;
-                    round_due = cluster.has_pending();
+                    round_due = cluster.has_pending() || admit.has_eligible();
                     let _ = reply.send(ok(vec![]));
                 }
                 Msg::SetPolicy { user, name, reply } => {
                     let slot = user_slot(&mut user_index, &mut free_slots, &mut next_fresh, user);
                     let r = if cluster.set_user_policy(slot, &name) {
-                        round_due = cluster.has_pending();
+                        round_due = cluster.has_pending() || admit.has_eligible();
                         ok(vec![("policy", s(name))])
                     } else {
                         err_val(&format!("unknown policy {name:?}"))
                     };
                     let _ = reply.send(r);
                 }
-                Msg::Submit { user, jobs, reply } => {
+                Msg::Submit { user, jobs, wait, reply } => {
                     let slot = user_slot(&mut user_index, &mut free_slots, &mut next_fresh, user);
-                    let mut batch = Batch {
-                        reply,
-                        remaining: jobs.len(),
+                    let tenant = *conn_tenant.entry(user).or_insert_with(|| {
+                        let id = next_tenant_id;
+                        next_tenant_id += 1;
+                        *tenant_refs.entry(id).or_insert(0) += 1;
+                        id
+                    });
+                    // Fail fast on unknown names: the whole batch is
+                    // refused before anything is queued.
+                    if let Some(e) = jobs
+                        .iter()
+                        .find_map(|j| cluster.core(0).validate(&j.accname, None).err())
+                    {
+                        let _ = reply.send(err_val(&e));
+                        continue;
+                    }
+                    // Backpressure applies to ASYNC submissions, which
+                    // a client can pile up without bound.  A blocking
+                    // `run` batch is exempt — the connection blocks on
+                    // it, so it holds at most one, and the connection
+                    // cap already bounds that state (pre-pipeline
+                    // behaviour, kept for compatibility).
+                    if !wait {
+                        // A batch that could NEVER fit the bounded
+                        // queue is a terminal error, not a Busy:
+                        // retrying would livelock the client forever.
+                        if jobs.len() > admit.config().queue_cap {
+                            let _ = reply.send(err_val(&format!(
+                                "batch of {} jobs exceeds the admission queue capacity ({})\
+                                 ; split the batch",
+                                jobs.len(),
+                                admit.config().queue_cap
+                            )));
+                            continue;
+                        }
+                        // Bounded-queue backpressure: a batch is
+                        // accepted or refused atomically, so `Busy`
+                        // rejections trivially conserve requests.
+                        if admit.free_capacity(tenant) < jobs.len() {
+                            stats.busy_rejections.fetch_add(1, Ordering::Relaxed);
+                            admit.note_rejected(tenant, jobs.len() as u64);
+                            let queued = admit.queued_of(tenant) as u64;
+                            let _ = reply.send(busy_val(
+                                &format!(
+                                    "tenant {tenant} admission queue full ({queued} queued)"
+                                ),
+                                queued + 1,
+                            ));
+                            continue;
+                        }
+                        // Bounded ticket store: an async client must
+                        // drain its settled tickets before submitting
+                        // more.
+                        if open_tickets.get(&user).copied().unwrap_or(0) >= MAX_OPEN_TICKETS {
+                            stats.busy_rejections.fetch_add(1, Ordering::Relaxed);
+                            admit.note_rejected(tenant, jobs.len() as u64);
+                            let _ = reply.send(busy_val(
+                                &format!(
+                                    "connection holds {MAX_OPEN_TICKETS} unclaimed tickets\
+                                     ; drain them with wait/poll/completions"
+                                ),
+                                10,
+                            ));
+                            continue;
+                        }
+                    }
+                    let n = jobs.len();
+                    let sink = if wait {
+                        BatchSink::Reply(reply)
+                    } else {
+                        let id = next_ticket;
+                        next_ticket += 1;
+                        tickets.insert(id, Ticket { user, done: None, waiters: Vec::new() });
+                        *open_tickets.entry(user).or_insert(0) += 1;
+                        stats.async_submits.fetch_add(1, Ordering::Relaxed);
+                        let _ = reply.send(ok(vec![
+                            ("ticket", i(id as i64)),
+                            ("jobs", i(n as i64)),
+                        ]));
+                        BatchSink::Ticket(id)
+                    };
+                    let batch = Batch {
+                        sink,
+                        remaining: n,
                         latencies_us: Vec::new(),
                         modelled_us: Vec::new(),
                         error: None,
                     };
+                    if n == 0 {
+                        // Empty batch: settle now.
+                        finish(batch, &mut tickets, &mut open_tickets);
+                        continue;
+                    }
                     for job in jobs {
                         let token = next_token;
                         next_token += 1;
-                        // Unknown accelerators fail fast at admission;
-                        // accepted requests are routed to a board by
-                        // the placement policy right here.
-                        match cluster.submit(slot, token, &job.accname, job.tiles, None) {
-                            Ok(_board) => {
-                                pending.insert(token, PendingJob::new(job, next_batch));
-                                round_due = true;
-                            }
-                            Err(e) => {
-                                batch.error = Some(e);
-                                batch.remaining -= 1;
-                            }
-                        }
+                        // Capacity pre-checked (async) or exempt
+                        // (blocking), so this cannot refuse.
+                        admit.enqueue_forced(AdmitRequest {
+                            user: slot,
+                            tenant,
+                            job: token,
+                            accel: job.accname.clone(),
+                            tiles: job.tiles,
+                            pin: None,
+                        });
+                        pending.insert(token, PendingJob::new(job, next_batch));
                     }
-                    if batch.remaining == 0 {
-                        finish(batch); // empty or fully rejected
-                    } else {
-                        batches.insert(next_batch, batch);
-                        next_batch += 1;
-                    }
+                    batches.insert(next_batch, batch);
+                    next_batch += 1;
+                    round_due = true;
                 }
                 _ => unreachable!("handle_cheap services every other message"),
             }
@@ -750,14 +1113,46 @@ fn dispatcher(
                             hws[b].running_seq.remove(&anchor);
                         }
                         cluster.complete(b, anchor);
-                        finish_inflight(&mut hws, &mut batches, inf);
+                        // Return the tenant's in-flight token exactly
+                        // once per admitted request (a preempted Run
+                        // never gets here — its Resume does).
+                        admit.complete(inf.d.tenant);
+                        finish_inflight(
+                            &mut hws,
+                            &mut batches,
+                            &mut tickets,
+                            &mut open_tickets,
+                            inf,
+                        );
                     }
                 }
-                round_due = cluster.has_pending();
+                round_due = cluster.has_pending() || admit.has_eligible();
             }
             continue;
         }
         round_due = false;
+
+        // Batched ingest: one admission round hands every eligible
+        // queued request (weighted DRR under token-bucket quotas) to
+        // the scheduler — board routing happens here, in ingest order,
+        // exactly as in the simulator.
+        for r in admit.ingest() {
+            match cluster.submit_for(r.user, r.tenant, r.job, &r.accel, r.tiles, r.pin.as_deref())
+            {
+                Ok(_board) => {
+                    stats.admitted.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(e) => {
+                    // Admission was validated at enqueue, so this is a
+                    // catalog swap mid-flight: fail the job, return
+                    // the token.
+                    admit.complete(r.tenant);
+                    if let Some(p) = pending.remove(&r.job) {
+                        fail_job(&mut batches, &mut tickets, &mut open_tickets, p.batch, e);
+                    }
+                }
+            }
+        }
 
         // One scheduling round per board at the current virtual time,
         // in board order (the cluster simulator's exact rule): an idle
@@ -911,6 +1306,9 @@ fn dispatcher(
                         m,
                         &mut hws,
                         &cluster,
+                        &admit,
+                        &mut tickets,
+                        &mut open_tickets,
                         &mut paused,
                         &mut user_index,
                         &mut free_slots,
@@ -951,11 +1349,12 @@ fn dispatcher(
         // never strand a rejection.
         for b in 0..n_boards {
             for (req, reason) in cluster.take_rejected(b) {
+                admit.complete(req.tenant);
                 if let Some(id) = req.resume {
                     hws[b].snapshots.remove(&id);
                 }
                 if let Some(p) = pending.remove(&req.job) {
-                    fail_job(&mut batches, p.batch, reason);
+                    fail_job(&mut batches, &mut tickets, &mut open_tickets, p.batch, reason);
                 }
             }
         }
@@ -970,12 +1369,15 @@ fn dispatcher(
             // fail them instead of hanging their clients.
             for (b, req) in cluster.drain_pending() {
                 let policy_name = cluster.policy_name_of(req.user);
+                admit.complete(req.tenant);
                 if let Some(id) = req.resume {
                     hws[b].snapshots.remove(&id);
                 }
                 if let Some(p) = pending.remove(&req.job) {
                     fail_job(
                         &mut batches,
+                        &mut tickets,
+                        &mut open_tickets,
                         p.batch,
                         format!(
                             "request for {:?} is unplaceable under policy {policy_name:?}",
@@ -984,6 +1386,9 @@ fn dispatcher(
                     );
                 }
             }
+            // The returned tokens may make more queued work eligible —
+            // ingest it next iteration (it may drain the same way).
+            round_due = admit.has_eligible();
         }
     }
 }
@@ -1057,7 +1462,13 @@ fn sync_outputs_to_primary(
 /// for resumes, program the operand registers, run every tile, sync the
 /// outputs back to the primary arena, and settle the batch reply.
 /// Errors recorded at dispatch (failed loads) surface here too.
-fn finish_inflight(hws: &mut [BoardHw], batches: &mut HashMap<usize, Batch>, inf: Inflight) {
+fn finish_inflight(
+    hws: &mut [BoardHw],
+    batches: &mut HashMap<usize, Batch>,
+    tickets: &mut HashMap<u64, Ticket>,
+    open_tickets: &mut HashMap<u64, usize>,
+    inf: Inflight,
+) {
     let board = inf.board;
     let mut err = inf.err;
     let t0 = Instant::now();
@@ -1090,7 +1501,7 @@ fn finish_inflight(hws: &mut [BoardHw], batches: &mut HashMap<usize, Batch>, inf
     b.remaining -= 1;
     if b.remaining == 0 {
         let b = batches.remove(&inf.batch).unwrap();
-        finish(b);
+        finish(b, tickets, open_tickets);
     }
 }
 
@@ -1124,15 +1535,20 @@ fn mirror_counters(stats: &DaemonStats, cluster: &ClusterCore) {
 }
 
 /// Answer a message that needs no scheduling-state change (mem ops,
-/// connection Hello, stats/log queries, pause) — callable both from
-/// the top-level drain and mid-round, so long rounds don't head-of-line
-/// block cheap RPCs. Returns the message back when it *does* change
-/// scheduling state (Submit, SetPolicy, Resume, Goodbye, Stop) for the
-/// caller to process at round boundaries.
+/// connection Hello, stats/log queries, ticket wait/poll/drain, pause)
+/// — callable both from the top-level drain and mid-round, so long
+/// rounds don't head-of-line block cheap RPCs. Returns the message
+/// back when it *does* change scheduling state (Submit, Session,
+/// SetPolicy, Resume, Goodbye, Stop) for the caller to process at
+/// round boundaries.
+#[allow(clippy::too_many_arguments)]
 fn handle_cheap(
     msg: Msg,
     hws: &mut [BoardHw],
     cluster: &ClusterCore,
+    admit: &AdmissionPipeline,
+    tickets: &mut HashMap<u64, Ticket>,
+    open_tickets: &mut HashMap<u64, usize>,
     paused: &mut bool,
     user_index: &mut HashMap<u64, usize>,
     free_slots: &mut std::collections::BTreeSet<usize>,
@@ -1146,8 +1562,54 @@ fn handle_cheap(
             let slot = user_slot(user_index, free_slots, next_fresh, user);
             let _ = reply.send(ok(vec![("user", i(user as i64)), ("slot", i(slot as i64))]));
         }
+        Msg::Wait { user, ticket, reply } => {
+            if tickets.get(&ticket).map(|t| t.user) != Some(user) {
+                let _ = reply.send(err_val(&format!("unknown ticket {ticket}")));
+            } else if tickets.get(&ticket).is_some_and(|t| t.done.is_some()) {
+                let t = tickets.remove(&ticket).expect("checked above");
+                close_ticket(open_tickets, t.user);
+                let _ = reply.send(t.done.expect("checked above"));
+            } else {
+                // Settled later by `finish` (which consumes the ticket).
+                tickets
+                    .get_mut(&ticket)
+                    .expect("checked above")
+                    .waiters
+                    .push(reply);
+            }
+        }
+        Msg::Poll { user, ticket, reply } => {
+            let v = match tickets.get(&ticket) {
+                Some(t) if t.user == user => match &t.done {
+                    Some(resp) => ok(vec![("done", i(1)), ("result", resp.clone())]),
+                    None => ok(vec![("done", i(0))]),
+                },
+                _ => err_val(&format!("unknown ticket {ticket}")),
+            };
+            let _ = reply.send(v);
+        }
+        Msg::Completions { user, reply } => {
+            let mut done_ids: Vec<u64> = tickets
+                .iter()
+                .filter(|(_, t)| t.user == user && t.done.is_some())
+                .map(|(&id, _)| id)
+                .collect();
+            done_ids.sort_unstable();
+            let items: Vec<Value> = done_ids
+                .into_iter()
+                .map(|id| {
+                    let t = tickets.remove(&id).unwrap();
+                    close_ticket(open_tickets, t.user);
+                    obj(vec![
+                        ("ticket", i(id as i64)),
+                        ("result", t.done.unwrap()),
+                    ])
+                })
+                .collect();
+            let _ = reply.send(ok(vec![("completions", arr(items))]));
+        }
         Msg::Query { reply } => {
-            let _ = reply.send(stats_value(cluster, *paused));
+            let _ = reply.send(stats_value(cluster, admit, *paused));
         }
         Msg::QueryCluster { reply } => {
             let _ = reply.send(cluster_stats_value(cluster, *paused));
@@ -1183,12 +1645,36 @@ fn handle_cheap(
     None
 }
 
-/// The `stats` RPC reply: queue depth + the cluster-wide counter
-/// totals (single-board daemons report exactly the shard's counters).
-fn stats_value(cluster: &ClusterCore, paused: bool) -> Value {
+/// The `stats` RPC reply: queue depth (admission + scheduler queues),
+/// the cluster-wide counter totals, and one object per live tenant
+/// (single-board daemons report exactly the shard's counters).
+fn stats_value(cluster: &ClusterCore, admit: &AdmissionPipeline, paused: bool) -> Value {
     let c = cluster.total_counters();
+    let sched = cluster.tenant_counters();
+    let tenants: Vec<Value> = admit
+        .tenant_counters()
+        .into_iter()
+        .map(|(id, tc)| {
+            let sc = sched.get(&id).copied().unwrap_or_default();
+            obj(vec![
+                ("tenant", i(id as i64)),
+                ("weight", i(admit.qos(id).weight as i64)),
+                ("queued", i(admit.queued_of(id) as i64)),
+                ("inflight", i(admit.inflight_of(id) as i64)),
+                ("enqueued", i(tc.enqueued as i64)),
+                ("admitted", i(tc.admitted as i64)),
+                ("completed", i(sc.completed as i64)),
+                ("preempted", i(sc.preempted as i64)),
+                ("busy_rejected", i(tc.rejected as i64)),
+                ("sched_rejected", i(sc.rejected as i64)),
+            ])
+        })
+        .collect();
     ok(vec![
-        ("queued", i(cluster.pending() as i64)),
+        // Admitted-but-unscheduled plus queued-for-admission: the
+        // "work the daemon is holding" number clients poll.
+        ("queued", i((cluster.pending() + admit.queued()) as i64)),
+        ("admit_queued", i(admit.queued() as i64)),
         ("reconfigs", i(c.reconfigs as i64)),
         ("reuses", i(c.reuses as i64)),
         ("skips", i(c.skips as i64)),
@@ -1197,6 +1683,19 @@ fn stats_value(cluster: &ClusterCore, paused: bool) -> Value {
         ("resumes", i(c.resumes as i64)),
         ("boards", i(cluster.len() as i64)),
         ("paused", i(paused as i64)),
+        ("tenants", arr(tenants)),
+    ])
+}
+
+/// Structured busy reply: `busy: 1` plus a deterministic retry hint —
+/// what `enqueue` overflow and the connection cap answer instead of
+/// stalling or silently dropping.
+fn busy_val(msg: &str, retry_after_ms: u64) -> Value {
+    obj(vec![
+        ("status", s("err")),
+        ("error", s(msg)),
+        ("busy", i(1)),
+        ("retry_after_ms", i(retry_after_ms.max(1) as i64)),
     ])
 }
 
@@ -1654,6 +2153,56 @@ mod tests {
             .map(|b| b.reconfigs.load(Ordering::Relaxed) + b.reuses.load(Ordering::Relaxed))
             .sum();
         assert_eq!(mirrored, sum);
+    }
+
+    #[test]
+    fn async_submit_wait_poll_completions_roundtrip() {
+        let _g = LOCK.lock().unwrap();
+        let (d, path) = start("async");
+        let mut rpc = FpgaRpc::connect(&path).unwrap();
+        let catalog = Catalog::load_default().unwrap();
+        // A named session with a QoS class (weight 2, quota 8).
+        let tenant = rpc.set_session("acme", 2, 8).unwrap();
+        let params = crate::testutil::alloc_operand_params(&mut rpc, &catalog, "sobel");
+
+        // Pause dispatching so the pending state is observable.
+        rpc.pause().unwrap();
+        let t1 = rpc.submit(&[Job::new("sobel", params.clone()).with_tiles(2)]).unwrap();
+        let t2 = rpc.submit(&[Job::new("sobel", params.clone()).with_tiles(2)]).unwrap();
+        assert_ne!(t1, t2);
+        assert!(rpc.poll(t1).unwrap().is_none(), "paused daemon: ticket must be pending");
+        let st = rpc.sched_stats().unwrap();
+        assert_eq!(st.queued, 2, "both submissions queued for admission");
+        assert_eq!(st.admit_queued, 2);
+        assert!(
+            st.tenants.iter().any(|t| t.tenant == tenant && t.weight == 2 && t.queued == 2),
+            "tenant stats missing: {:?}",
+            st.tenants
+        );
+
+        rpc.resume().unwrap();
+        // wait() settles and consumes t1 (ok or stubbed-compute error
+        // — either way a reply, never a hang)…
+        let _ = rpc.wait(t1);
+        // …after which the ticket is unknown.
+        assert!(matches!(rpc.wait(t1), Err(proto::ProtoError::Remote(_))));
+        // completions drains t2 once it settles.
+        let mut drained = Vec::new();
+        for _ in 0..2000 {
+            drained = rpc.completions().unwrap();
+            if !drained.is_empty() {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        assert_eq!(drained.len(), 1, "exactly one settled ticket to drain");
+        assert_eq!(drained[0].0, t2);
+        assert!(rpc.completions().unwrap().is_empty(), "drained exactly once");
+        // Both batches were scheduled and decided.
+        assert_eq!(d.decision_log().len(), 2);
+        use std::sync::atomic::Ordering::Relaxed;
+        assert_eq!(d.stats().async_submits.load(Relaxed), 2);
+        assert_eq!(d.stats().admitted.load(Relaxed), 2);
     }
 
     #[test]

@@ -44,8 +44,16 @@
 //! their policy per connection via `FpgaRpc::set_policy`, and new
 //! policies (fairness, preemption, ...) are `SchedPolicy`
 //! implementations registered with [`sched::SchedCore::register_policy`]
-//! — not forks of the dispatch loops.  Above the per-board core, the
-//! **cluster layer** ([`sched::ClusterCore`]) shards the same machinery
+//! — not forks of the dispatch loops.  In front of the core sits the
+//! tenant-aware **admission pipeline** ([`sched::AdmissionPipeline`]):
+//! per-tenant bounded queues with structured busy backpressure,
+//! weighted deficit-round-robin batched ingest and token-bucket
+//! in-flight quotas, driven identically by the simulator and the
+//! daemon (whose wire protocol splits blocking `run` into async
+//! `submit`→ticket plus `wait`/`poll`/`completions`); the
+//! [`sched::FairShare`] seed policy consumes the same tenant plumbing
+//! to bound any tenant's service deficit.  Above the per-board core,
+//! the **cluster layer** ([`sched::ClusterCore`]) shards the same machinery
 //! over N heterogeneous boards behind a pluggable
 //! [`sched::PlacementPolicy`] (round-robin / least-loaded /
 //! bitstream-locality with work stealing), driven by

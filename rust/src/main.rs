@@ -5,14 +5,23 @@
 //! ```text
 //! fos daemon [--socket PATH] [--board ultra96|ultrazed|zcu102]
 //!            [--boards B1,B2,...] [--placement round-robin|least-loaded|locality]
+//!            [--policy elastic|fixed|quantum|elastic-pre|fair]
+//!            [--queue-cap N] [--quantum-tiles N] [--max-conns N]
 //! fos run    [--socket PATH] --accel NAME [--requests N]
+//!            [--tenant NAME] [--weight W] [--max-inflight N] [--async]
 //! fos info   [--board BOARD]         # shell + catalog + Table 1 summary
 //! fos registry [--board BOARD] --out FILE
 //! ```
 //!
 //! `--boards` starts a multi-fabric cluster daemon (one `Cynq` per
 //! board, heterogeneous mixes welcome) with `--placement` routing
-//! requests across boards (default: locality).
+//! requests across boards (default: locality).  `--queue-cap` /
+//! `--quantum-tiles` tune the tenant-aware admission pipeline (bounded
+//! per-tenant queues with structured busy backpressure; finite quantum
+//! arms weighted DRR ingest), `--max-conns` caps the connection table.
+//! `fos run --tenant acme --weight 3` binds the connection to a named
+//! QoS session; `--async` submits for a ticket and drains it through
+//! the wait RPC explicitly.
 
 use fos::accel::Catalog;
 use fos::daemon::{Daemon, FpgaRpc, Job};
@@ -63,19 +72,45 @@ fn main() {
                     std::process::exit(2);
                 }
             };
-            let _d = Daemon::start_cluster(
+            let policy = match get("--policy").as_deref().unwrap_or("elastic") {
+                "elastic" => fos::sched::Policy::Elastic,
+                "fixed" => fos::sched::Policy::Fixed,
+                "quantum" => fos::sched::Policy::Quantum,
+                "elastic-pre" => fos::sched::Policy::ElasticPreempt,
+                "fair" => fos::sched::Policy::FairShare,
+                other => {
+                    eprintln!("unknown policy {other:?}");
+                    std::process::exit(2);
+                }
+            };
+            let mut admission = fos::sched::AdmissionConfig::default();
+            if let Some(cap) = get("--queue-cap").and_then(|v| v.parse().ok()) {
+                admission.queue_cap = cap;
+            }
+            if let Some(q) = get("--quantum-tiles").and_then(|v| v.parse().ok()) {
+                admission.quantum_tiles = q;
+            }
+            let max_conns: usize = get("--max-conns")
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(fos::daemon::DEFAULT_MAX_CONNECTIONS);
+            let _d = Daemon::start_cluster_configured(
                 &socket,
                 &boards,
                 catalog,
-                fos::sched::Policy::Elastic,
+                policy,
                 placement,
+                admission,
+                max_conns,
             )
             .expect("daemon start");
             let names: Vec<&str> = boards.iter().map(|b| b.name()).collect();
             println!(
-                "fos daemon: boards={} placement={} socket={socket} accelerators={n}",
+                "fos daemon: boards={} placement={} policy={} socket={socket} accelerators={n} \
+                 queue-cap={} max-conns={max_conns}",
                 names.join(","),
-                placement.name()
+                placement.name(),
+                policy.name(),
+                admission.queue_cap,
             );
             println!("press ctrl-c to stop");
             loop {
@@ -93,6 +128,17 @@ fn main() {
             });
             let mut rpc =
                 FpgaRpc::connect(&socket).expect("connect (is `fos daemon` running?)");
+            // Optional QoS session: a named tenant with a DRR weight
+            // and in-flight quota shared by every connection naming it.
+            if let Some(tenant) = get("--tenant") {
+                let weight: u32 = get("--weight").and_then(|v| v.parse().ok()).unwrap_or(1);
+                let max_inflight: usize =
+                    get("--max-inflight").and_then(|v| v.parse().ok()).unwrap_or(0);
+                let id = rpc
+                    .set_session(&tenant, weight, max_inflight)
+                    .expect("session bind");
+                println!("session: tenant {tenant:?} (id {id}, weight {weight})");
+            }
             let mut rng = fos::testutil::Rng::new(1);
             let inputs = fos::sched::gen_inputs(&info, &mut rng);
             let mut params = Vec::new();
@@ -114,7 +160,15 @@ fn main() {
             let jobs: Vec<Job> = (0..requests)
                 .map(|_| Job::new(accel.clone(), params.clone()))
                 .collect();
-            let report = rpc.run(&jobs).unwrap();
+            let report = if args.iter().any(|a| a == "--async") {
+                // Explicit ticket lifecycle: non-blocking submit, then
+                // drain through the wait RPC.
+                let ticket = rpc.submit(&jobs).unwrap();
+                println!("submitted: ticket {ticket}");
+                rpc.wait(ticket).unwrap()
+            } else {
+                rpc.run(&jobs).unwrap()
+            };
             println!(
                 "{requests} request(s) of {accel}: round-trip {:?}, daemon-side mean {:.1} us, modelled FPGA mean {:.1} us",
                 report.round_trip,
@@ -175,7 +229,10 @@ fn main() {
             println!("usage: fos <daemon|run|info|registry> [flags]");
             println!("  fos daemon   [--socket PATH] [--board ultra96|ultrazed|zcu102]");
             println!("               [--boards B1,B2,...] [--placement round-robin|least-loaded|locality]");
+            println!("               [--policy elastic|fixed|quantum|elastic-pre|fair]");
+            println!("               [--queue-cap N] [--quantum-tiles N] [--max-conns N]");
             println!("  fos run      [--socket PATH] --accel NAME [--requests N]");
+            println!("               [--tenant NAME] [--weight W] [--max-inflight N] [--async]");
             println!("  fos info     [--board BOARD]");
             println!("  fos registry [--board BOARD] --out FILE");
         }

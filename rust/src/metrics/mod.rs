@@ -125,6 +125,25 @@ pub fn vs_paper(measured: f64, paper: f64, unit: &str) -> String {
     format!("{measured:.2}{unit} (paper {paper:.2}{unit})")
 }
 
+/// Virtual-time throughput: requests per second over a finished
+/// simulator run (`makespan` in virtual ns) — the fig24 admission
+/// comparison metric.
+pub fn throughput_rps(requests: usize, makespan_ns: u64) -> f64 {
+    requests as f64 / (makespan_ns.max(1) as f64 / 1e9)
+}
+
+/// p-th percentile over virtual-ns samples (nearest-rank on a sorted
+/// copy; 0 for an empty set) — the fig24 ticket-latency reporter.
+pub fn percentile_ns(samples: &[u64], p: f64) -> u64 {
+    if samples.is_empty() {
+        return 0;
+    }
+    let mut v = samples.to_vec();
+    v.sort_unstable();
+    let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+    v[idx.min(v.len() - 1)]
+}
+
 /// One-line summary of the shared scheduler-core counters — the same
 /// [`crate::sched::SchedCounters`] both the simulator (`SimResult`) and
 /// the daemon (`DaemonStats`) report from.
@@ -191,6 +210,16 @@ mod tests {
     fn table_arity_checked() {
         let mut t = Table::new("x", &["a", "b"]);
         t.row(&["1".into()]);
+    }
+
+    #[test]
+    fn throughput_and_percentile_basics() {
+        assert_eq!(throughput_rps(10, 1_000_000_000), 10.0);
+        assert_eq!(throughput_rps(0, 0), 0.0, "empty run must not divide by zero");
+        let xs = [50u64, 10, 40, 20, 30];
+        assert_eq!(percentile_ns(&xs, 50.0), 30);
+        assert_eq!(percentile_ns(&xs, 100.0), 50);
+        assert_eq!(percentile_ns(&[], 99.0), 0);
     }
 
     #[test]

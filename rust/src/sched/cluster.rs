@@ -42,10 +42,12 @@
 //! the hook at the same point in the round lifecycle, so stealing
 //! never breaks decision parity.
 
-use super::core::{Decision, Policy, RegionMap, Request, SchedCore, SchedCounters};
+use super::core::{
+    Decision, Policy, RegionMap, Request, SchedCore, SchedCounters, TenantSchedCounters,
+};
 use crate::accel::Catalog;
 use crate::shell::{Shell, ShellBoard};
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 
 /// Default backlog (queued tiles) past which an overloaded shard
 /// becomes a work-stealing donor, and past which [`Locality`] stops
@@ -118,6 +120,12 @@ impl ShardView<'_> {
 /// The request a placement policy is asked to route.
 pub struct RouteReq<'a> {
     pub user: usize,
+    /// Tenant the request is accounted to (defaults to `user`) — lets
+    /// tenant-share-aware placements keep one tenant's requests from
+    /// crowding a single board.
+    pub tenant: usize,
+    /// The tenant's QoS weight ([`ClusterCore::set_tenant_weight`]).
+    pub weight: u32,
     pub accel: &'a str,
     pub tiles: usize,
 }
@@ -237,6 +245,9 @@ pub struct ClusterCore {
     placement: Box<dyn PlacementPolicy>,
     steal_threshold: usize,
     counters: ClusterCounters,
+    /// Per-tenant QoS weights, mirrored into every shard and handed to
+    /// the placement policy through [`RouteReq`].
+    tenant_weights: BTreeMap<usize, u32>,
     /// (board, decision) in global dispatch order, ring-capped.
     merged: VecDeque<(usize, Decision)>,
     merged_dropped: u64,
@@ -273,8 +284,17 @@ impl ClusterCore {
             placement,
             steal_threshold: DEFAULT_STEAL_THRESHOLD,
             counters: ClusterCounters::default(),
+            tenant_weights: BTreeMap::new(),
             merged: VecDeque::new(),
             merged_dropped: 0,
+        }
+    }
+
+    /// Set a tenant's QoS weight on every shard (and for routing).
+    pub fn set_tenant_weight(&mut self, tenant: usize, weight: u32) {
+        self.tenant_weights.insert(tenant, weight.max(1));
+        for s in &mut self.shards {
+            s.core.set_tenant_weight(tenant, weight);
         }
     }
 
@@ -337,10 +357,25 @@ impl ClusterCore {
     /// Route one request to a board and enqueue it there.  Admission
     /// errors (unknown accelerator/variant) surface before routing, so
     /// a rejection never perturbs the placement policy's state.
-    /// Returns the board index the request landed on.
+    /// Returns the board index the request landed on.  Accounted to
+    /// tenant `user`; the daemon's admission pipeline routes through
+    /// [`ClusterCore::submit_for`].
     pub fn submit(
         &mut self,
         user: usize,
+        job: u64,
+        accel: &str,
+        tiles: usize,
+        pin: Option<&str>,
+    ) -> Result<usize, String> {
+        self.submit_for(user, user, job, accel, tiles, pin)
+    }
+
+    /// [`ClusterCore::submit`] with an explicit tenant tag.
+    pub fn submit_for(
+        &mut self,
+        user: usize,
+        tenant: usize,
         job: u64,
         accel: &str,
         tiles: usize,
@@ -360,11 +395,27 @@ impl ClusterCore {
                 running: s.core.running_count(),
             })
             .collect();
-        let req = RouteReq { user, accel, tiles };
+        let weight = self.tenant_weights.get(&tenant).copied().unwrap_or(1);
+        let req = RouteReq { user, tenant, weight, accel, tiles };
         let b = self.placement.route(&views, &req).min(self.shards.len() - 1);
-        self.shards[b].core.submit(user, job, accel, tiles, pin)?;
+        self.shards[b].core.submit_for(user, tenant, job, accel, tiles, pin)?;
         self.counters.routed += 1;
         Ok(b)
+    }
+
+    /// Per-tenant scheduling counters summed across every shard.
+    pub fn tenant_counters(&self) -> BTreeMap<usize, TenantSchedCounters> {
+        let mut out: BTreeMap<usize, TenantSchedCounters> = BTreeMap::new();
+        for s in &self.shards {
+            for (&tenant, c) in s.core.tenant_counters() {
+                let t = out.entry(tenant).or_default();
+                t.admitted += c.admitted;
+                t.completed += c.completed;
+                t.preempted += c.preempted;
+                t.rejected += c.rejected;
+            }
+        }
+        out
     }
 
     /// Work-stealing hook — call right before board `b`'s scheduling

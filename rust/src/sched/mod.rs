@@ -39,6 +39,13 @@
 //!   virtual clock mirroring the simulator so both paths make (and
 //!   log) identical decision sequences for identical traces.
 //!
+//! In front of the core sits the **admission pipeline** ([`admission`]):
+//! per-tenant bounded queues with structured `Busy` backpressure,
+//! weighted deficit-round-robin batched ingest, and token-bucket
+//! in-flight quotas — driven by both harnesses at the same point of
+//! the round lifecycle, so tenant-level QoS never breaks sim/daemon
+//! decision parity (see `sched/ARCHITECTURE.md`, *Admission & QoS*).
+//!
 //! Above the per-board core sits the **cluster layer** ([`cluster`]):
 //! a [`ClusterCore`] owns one scheduler shard per board (heterogeneous
 //! mixes welcome) and a pluggable [`PlacementPolicy`] —
@@ -47,15 +54,20 @@
 //! [`simulate_cluster`] and the multi-fabric daemon drive it through
 //! the same two-harness discipline (see `sched/ARCHITECTURE.md`).
 
+pub mod admission;
 pub mod cluster;
 pub mod core;
 mod sim;
 mod workload;
 
 pub use self::core::{
-    Checkpoint, CostModel, Decision, DecisionKind, Elastic, Fixed, LoadedModule, PlaceReq,
-    Placement, Policy, Quantum, Region, RegionMap, Request, RunningSnap, SchedCore,
-    SchedCounters, SchedPolicy, PREEMPT_TICK_NS,
+    Checkpoint, CostModel, Decision, DecisionKind, Elastic, FairShare, Fixed, LoadedModule,
+    PlaceReq, Placement, Policy, Quantum, Region, RegionMap, Request, RunningSnap, SchedCore,
+    SchedCounters, SchedPolicy, TenantSchedCounters, PREEMPT_TICK_NS,
+};
+pub use admission::{
+    AdmissionConfig, AdmissionPipeline, AdmitError, AdmitRequest, QosClass, TenantAdmitCounters,
+    DEFAULT_ADMIT_QUEUE_CAP, DEFAULT_QUANTUM_TILES,
 };
 pub use cluster::{
     ClusterCore, ClusterCounters, LeastLoaded, Locality, PlacementKind, PlacementPolicy,

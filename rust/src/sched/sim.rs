@@ -4,9 +4,10 @@
 //! arrivals and completions into the core and turns its [`Decision`]s
 //! into trace events, latencies and (optionally) real PJRT compute.
 
+use super::admission::{AdmissionConfig, AdmissionPipeline, AdmitRequest};
 use super::cluster::{ClusterCore, ClusterCounters, PlacementKind, DEFAULT_STEAL_THRESHOLD};
-use super::core::{Decision, DecisionKind, Policy, SchedCore, SchedCounters};
-use super::workload::Workload;
+use super::core::{Decision, DecisionKind, Policy, SchedCore, SchedCounters, TenantSchedCounters};
+use super::workload::{JobSpec, Workload};
 use super::SimTime;
 use crate::accel::Catalog;
 use crate::runtime::Executor;
@@ -25,15 +26,33 @@ pub struct SimConfig {
     /// Restrict the number of usable PR regions (Fig 19 sweeps the
     /// resources available for acceleration). `None` = all.
     pub region_limit: Option<usize>,
+    /// Admission-pipeline tuning.  The default is permissive (ingest
+    /// drains every queue in tenant order), which reproduces the
+    /// pre-pipeline decision sequences exactly; tighten it (and the
+    /// workload's [`Workload::qos`] classes) to simulate the daemon's
+    /// QoS behaviour — the DES then replays the daemon's batched
+    /// ingest decision sequence verbatim (same pipeline code).
+    pub admission: AdmissionConfig,
 }
 
 impl SimConfig {
     pub fn new(board: ShellBoard, policy: Policy) -> SimConfig {
-        SimConfig { board, policy, executor: None, region_limit: None }
+        SimConfig {
+            board,
+            policy,
+            executor: None,
+            region_limit: None,
+            admission: AdmissionConfig::default(),
+        }
     }
 
     pub fn with_regions(mut self, n: usize) -> SimConfig {
         self.region_limit = Some(n);
+        self
+    }
+
+    pub fn with_admission(mut self, cfg: AdmissionConfig) -> SimConfig {
+        self.admission = cfg;
         self
     }
 }
@@ -74,6 +93,12 @@ pub struct SimResult {
     /// The core's ordered decision log — compared verbatim against the
     /// live daemon's in the sim/daemon parity test.
     pub decisions: Vec<Decision>,
+    /// Per-tenant scheduling counters (admitted / completed /
+    /// preempted / rejected), tenant id ascending.
+    pub per_tenant: Vec<(usize, TenantSchedCounters)>,
+    /// Requests deferred by `Busy` backpressure (a request retried
+    /// twice counts twice); every deferral is eventually admitted.
+    pub busy_retries: u64,
     /// FNV checksum over all real outputs (0 when executor is None) —
     /// lets tests assert that elastic vs fixed compute identical data.
     pub output_checksum: u64,
@@ -83,11 +108,49 @@ pub struct SimResult {
 #[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
 enum Event {
     Arrival(usize),
+    /// Re-arrival of a job's remaining requests after a `Busy`
+    /// admission rejection — the simulator's model of a client
+    /// honouring the retry hint.
+    Retry { job: usize, requests: usize },
     /// Completion at anchor region.
     Complete { anchor: usize, job: usize },
     /// Preemption-check round: re-dispatch while users are starved and
     /// work is running, so an expired quantum is observed mid-span.
     Tick,
+}
+
+/// Enqueue `count` requests of workload job `j` into the admission
+/// pipeline; on `Busy` backpressure, schedule a retry event (built by
+/// `retry(job, remaining)` — the single-board and cluster harnesses
+/// only differ in their event enum) at the hint's deadline and report
+/// how many requests were deferred.
+#[allow(clippy::too_many_arguments)]
+fn pipeline_enqueue<E: Ord>(
+    admit: &mut AdmissionPipeline,
+    heap: &mut BinaryHeap<Reverse<(SimTime, u64, E)>>,
+    seq: &mut u64,
+    now: SimTime,
+    j: usize,
+    spec: &JobSpec,
+    count: usize,
+    retry: impl Fn(usize, usize) -> E,
+) -> u64 {
+    for k in 0..count {
+        let r = AdmitRequest {
+            user: spec.user,
+            tenant: spec.user,
+            job: j as u64,
+            accel: spec.accel.clone(),
+            tiles: spec.tiles_per_request,
+            pin: spec.pin_variant.clone(),
+        };
+        if let Err(e) = admit.enqueue(r) {
+            heap.push(Reverse((now + e.retry_after_ns(), *seq, retry(j, count - k))));
+            *seq += 1;
+            return (count - k) as u64;
+        }
+    }
+    0
 }
 
 /// Run a workload under a policy on a board.
@@ -100,6 +163,15 @@ pub fn simulate(catalog: &Catalog, workload: &Workload, cfg: &SimConfig) -> SimR
     let n_users = workload.users();
 
     let mut core = SchedCore::new(&shell, catalog.clone(), cfg.policy);
+    // The tenant-aware admission stage (tenant = user in the DES):
+    // the same pipeline type the daemon dispatcher drives, at the same
+    // point of the round lifecycle, so a QoS-configured simulation
+    // reproduces the daemon's batched-ingest decision sequence.
+    let mut admit = AdmissionPipeline::new(cfg.admission);
+    for &(u, q) in &workload.qos {
+        admit.set_qos(u, q);
+        core.set_tenant_weight(u, q.weight);
+    }
     let mut jobs_left: Vec<usize> = workload.jobs.iter().map(|j| j.requests).collect();
     let mut result = SimResult {
         makespan: 0,
@@ -109,6 +181,8 @@ pub fn simulate(catalog: &Catalog, workload: &Workload, cfg: &SimConfig) -> SimR
         trace: Vec::new(),
         regions: vec![RegionTrace::default(); n_regions],
         decisions: Vec::new(),
+        per_tenant: Vec::new(),
+        busy_retries: 0,
         output_checksum: 0xcbf29ce484222325,
         tiles_executed: 0,
     };
@@ -145,16 +219,31 @@ pub fn simulate(catalog: &Catalog, workload: &Workload, cfg: &SimConfig) -> SimR
             match ev {
                 Event::Arrival(j) => {
                     let job = &workload.jobs[j];
-                    for _ in 0..job.requests {
-                        core.submit(
-                            job.user,
-                            j as u64,
-                            &job.accel,
-                            job.tiles_per_request,
-                            job.pin_variant.as_deref(),
-                        )
+                    core.validate(&job.accel, job.pin_variant.as_deref())
                         .unwrap_or_else(|e| panic!("{e}"));
-                    }
+                    result.busy_retries += pipeline_enqueue(
+                        &mut admit,
+                        &mut heap,
+                        &mut seq,
+                        now,
+                        j,
+                        job,
+                        job.requests,
+                        |job, requests| Event::Retry { job, requests },
+                    );
+                }
+                Event::Retry { job, requests } => {
+                    let spec = &workload.jobs[job];
+                    result.busy_retries += pipeline_enqueue(
+                        &mut admit,
+                        &mut heap,
+                        &mut seq,
+                        now,
+                        job,
+                        spec,
+                        requests,
+                        |job, requests| Event::Retry { job, requests },
+                    );
                 }
                 Event::Tick => {} // only exists to trigger the round below
                 Event::Complete { anchor, job } => {
@@ -162,6 +251,7 @@ pub fn simulate(catalog: &Catalog, workload: &Workload, cfg: &SimConfig) -> SimR
                         continue; // this dispatch was preempted mid-span
                     }
                     core.complete(anchor);
+                    admit.complete(workload.jobs[job].user);
                     if running_seq.get(&anchor) == Some(&s) {
                         running_seq.remove(&anchor);
                         open_trace.remove(&anchor);
@@ -175,6 +265,15 @@ pub fn simulate(catalog: &Catalog, workload: &Workload, cfg: &SimConfig) -> SimR
                     result.makespan = result.makespan.max(now);
                 }
             }
+        }
+
+        // Batched ingest: one admission round feeds every eligible
+        // queued request (weighted DRR under in-flight quotas) into
+        // the scheduler before the dispatch round — the daemon
+        // dispatcher's exact rule.
+        for r in admit.ingest() {
+            core.submit_for(r.user, r.tenant, r.job, &r.accel, r.tiles, r.pin.as_deref())
+                .unwrap_or_else(|e| panic!("{e}"));
         }
 
         // Dispatch as many requests as will place (cooperative
@@ -262,6 +361,7 @@ pub fn simulate(catalog: &Catalog, workload: &Workload, cfg: &SimConfig) -> SimR
         // chose an unknown variant): count them completed-with-failure
         // so the run terminates; built-in policies never trigger this.
         for (req, _reason) in core.take_rejected() {
+            admit.complete(req.tenant);
             let j = req.job as usize;
             jobs_left[j] = jobs_left[j].saturating_sub(1);
             if jobs_left[j] == 0 {
@@ -283,6 +383,7 @@ pub fn simulate(catalog: &Catalog, workload: &Workload, cfg: &SimConfig) -> SimR
 
     result.counters = core.counters().clone();
     result.decisions = core.decision_log().cloned().collect();
+    result.per_tenant = core.tenant_counters().iter().map(|(&t, &c)| (t, c)).collect();
     result
 }
 
@@ -320,6 +421,8 @@ pub struct ClusterSimConfig {
     pub placement: PlacementKind,
     /// Work-stealing donor threshold (queued tiles).
     pub steal_threshold: usize,
+    /// Admission-pipeline tuning (see [`SimConfig::admission`]).
+    pub admission: AdmissionConfig,
 }
 
 impl ClusterSimConfig {
@@ -328,7 +431,18 @@ impl ClusterSimConfig {
         policy: Policy,
         placement: PlacementKind,
     ) -> ClusterSimConfig {
-        ClusterSimConfig { boards, policy, placement, steal_threshold: DEFAULT_STEAL_THRESHOLD }
+        ClusterSimConfig {
+            boards,
+            policy,
+            placement,
+            steal_threshold: DEFAULT_STEAL_THRESHOLD,
+            admission: AdmissionConfig::default(),
+        }
+    }
+
+    pub fn with_admission(mut self, cfg: AdmissionConfig) -> ClusterSimConfig {
+        self.admission = cfg;
+        self
     }
 }
 
@@ -358,6 +472,10 @@ pub struct ClusterSimResult {
     pub merged: Vec<(usize, Decision)>,
     /// Routing/stealing counters from the cluster core.
     pub cluster: ClusterCounters,
+    /// Per-tenant scheduling counters summed across the shards.
+    pub per_tenant: Vec<(usize, TenantSchedCounters)>,
+    /// Requests deferred by `Busy` admission backpressure.
+    pub busy_retries: u64,
 }
 
 impl ClusterSimResult {
@@ -375,6 +493,9 @@ impl ClusterSimResult {
 #[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
 enum ClusterEvent {
     Arrival(usize),
+    /// Re-arrival of a job's remaining requests after `Busy`
+    /// admission backpressure.
+    Retry { job: usize, requests: usize },
     /// Completion at (board, anchor).
     Complete { board: usize, anchor: usize, job: usize },
     /// Preemption-check round (every board rounds at every event, so
@@ -399,6 +520,11 @@ pub fn simulate_cluster(
     let n_boards = cfg.boards.len();
     let mut cluster = ClusterCore::new(&cfg.boards, catalog, cfg.policy, cfg.placement)
         .with_steal_threshold(cfg.steal_threshold);
+    let mut admit = AdmissionPipeline::new(cfg.admission);
+    for &(u, q) in &workload.qos {
+        admit.set_qos(u, q);
+        cluster.set_tenant_weight(u, q.weight);
+    }
 
     let mut jobs_left: Vec<usize> = workload.jobs.iter().map(|j| j.requests).collect();
     let mut result = ClusterSimResult {
@@ -407,6 +533,8 @@ pub fn simulate_cluster(
         boards: Vec::new(),
         merged: Vec::new(),
         cluster: ClusterCounters::default(),
+        per_tenant: Vec::new(),
+        busy_retries: 0,
     };
     let mut busy_ns = vec![0u64; n_boards];
 
@@ -442,17 +570,33 @@ pub fn simulate_cluster(
             match ev {
                 ClusterEvent::Arrival(j) => {
                     let job = &workload.jobs[j];
-                    for _ in 0..job.requests {
-                        cluster
-                            .submit(
-                                job.user,
-                                j as u64,
-                                &job.accel,
-                                job.tiles_per_request,
-                                job.pin_variant.as_deref(),
-                            )
-                            .unwrap_or_else(|e| panic!("{e}"));
-                    }
+                    cluster
+                        .core(0)
+                        .validate(&job.accel, job.pin_variant.as_deref())
+                        .unwrap_or_else(|e| panic!("{e}"));
+                    result.busy_retries += pipeline_enqueue(
+                        &mut admit,
+                        &mut heap,
+                        &mut seq,
+                        now,
+                        j,
+                        job,
+                        job.requests,
+                        |job, requests| ClusterEvent::Retry { job, requests },
+                    );
+                }
+                ClusterEvent::Retry { job, requests } => {
+                    let spec = &workload.jobs[job];
+                    result.busy_retries += pipeline_enqueue(
+                        &mut admit,
+                        &mut heap,
+                        &mut seq,
+                        now,
+                        job,
+                        spec,
+                        requests,
+                        |job, requests| ClusterEvent::Retry { job, requests },
+                    );
                 }
                 ClusterEvent::Tick => {} // only triggers the rounds below
                 ClusterEvent::Complete { board, anchor, job } => {
@@ -460,6 +604,7 @@ pub fn simulate_cluster(
                         continue; // this dispatch was preempted mid-span
                     }
                     cluster.complete(board, anchor);
+                    admit.complete(workload.jobs[job].user);
                     if running_seq.get(&(board, anchor)) == Some(&s) {
                         running_seq.remove(&(board, anchor));
                         open.remove(&(board, anchor));
@@ -471,6 +616,14 @@ pub fn simulate_cluster(
                     result.makespan = result.makespan.max(now);
                 }
             }
+        }
+
+        // Batched ingest (routing happens here, at admission into the
+        // cluster): the daemon dispatcher's exact rule and order.
+        for r in admit.ingest() {
+            cluster
+                .submit_for(r.user, r.tenant, r.job, &r.accel, r.tiles, r.pin.as_deref())
+                .unwrap_or_else(|e| panic!("{e}"));
         }
 
         // One scheduling round per board, in board order: an idle board
@@ -509,6 +662,7 @@ pub fn simulate_cluster(
             // variant): count them completed-with-failure so the run
             // terminates; built-in policies never trigger this.
             for (req, _reason) in cluster.take_rejected(b) {
+                admit.complete(req.tenant);
                 let j = req.job as usize;
                 jobs_left[j] = jobs_left[j].saturating_sub(1);
                 if jobs_left[j] == 0 {
@@ -534,6 +688,7 @@ pub fn simulate_cluster(
         .collect();
     result.merged = cluster.merged_log().cloned().collect();
     result.cluster = cluster.cluster_counters().clone();
+    result.per_tenant = cluster.tenant_counters().into_iter().collect();
     result
 }
 
@@ -568,7 +723,7 @@ pub fn gen_inputs(accel: &crate::accel::Accelerator, rng: &mut Rng) -> Vec<Vec<f
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sched::workload::JobSpec;
+    use crate::sched::admission::QosClass;
 
     fn catalog() -> Catalog {
         Catalog::load_default().unwrap()
@@ -940,6 +1095,129 @@ mod tests {
         }
         // Both shards actually served work.
         assert!(r.boards.iter().all(|b| !b.decisions.is_empty()));
+    }
+
+    /// Virtual requests/second over a finished run (the shared fig24
+    /// metric).
+    fn throughput_rps(w: &Workload, r: &SimResult) -> f64 {
+        crate::metrics::throughput_rps(w.total_requests(), r.makespan)
+    }
+
+    #[test]
+    fn batched_admission_beats_per_rpc_dispatch_on_throughput() {
+        // The fig24 acceptance claim, pinned as a deterministic sim
+        // assertion: batched tenant-aware admission (whole backlogs
+        // eligible at once) beats per-RPC blocking dispatch (one
+        // request in flight per tenant, one admission per round) on
+        // requests/second — the fabric parallelism a blocking client
+        // can never expose.
+        let c = catalog();
+        for tenants in [1usize, 2] {
+            // Heavy pinned work so parallelism (not reconfiguration
+            // cost) dominates: the elastic core provably replicates
+            // this backlog over the free regions, which a one-in-
+            // flight blocking client can never trigger.
+            let mut w = Workload::new();
+            for u in 0..tenants {
+                for j in JobSpec::frame_pinned(u, "mandelbrot", "mandelbrot_v1", 0, 48, 12) {
+                    w.push(j);
+                }
+            }
+            let batched =
+                simulate(&c, &w, &SimConfig::new(ShellBoard::Ultra96, Policy::Elastic));
+            let w_rpc = w.clone().with_uniform_qos(QosClass::new(1, 1));
+            let per_rpc = simulate(
+                &c,
+                &w_rpc,
+                &SimConfig::new(ShellBoard::Ultra96, Policy::Elastic)
+                    .with_admission(AdmissionConfig::per_rpc()),
+            );
+            // Both dispatch every request exactly once…
+            assert_eq!(batched.trace.len(), w.total_requests());
+            assert_eq!(per_rpc.trace.len(), w.total_requests());
+            // …but batched admission finishes strictly sooner.
+            assert!(
+                batched.makespan < per_rpc.makespan,
+                "{tenants} tenant(s): batched {} must beat per-RPC {}",
+                batched.makespan,
+                per_rpc.makespan
+            );
+            assert!(throughput_rps(&w, &batched) > throughput_rps(&w, &per_rpc));
+        }
+    }
+
+    #[test]
+    fn fair_share_prevents_starvation_on_streams_plus_shorts() {
+        // The no-starvation acceptance scenario: three tenants
+        // streaming long pinned requests fill the whole fabric at t=0;
+        // a fourth tenant brings short requests.  Under run-to-
+        // completion elastic the shorts wait for a whole stream to
+        // finish; under FairShare the fully starved tenant preempts
+        // once a victim has run `min_run_ns` — so its first dispatch
+        // lands at the 10 ms mark (the second preemption-check tick),
+        // bounded and early.
+        use crate::sched::PREEMPT_TICK_NS;
+        let c = catalog();
+        let w = Workload::tenant_mix(4, 3, 400, 10, 2);
+        let fair = simulate(&c, &w, &SimConfig::new(ShellBoard::Ultra96, Policy::FairShare));
+        let rtc = simulate(&c, &w, &SimConfig::new(ShellBoard::Ultra96, Policy::Elastic));
+        assert!(fair.counters.preemptions >= 1, "fair share must preempt: {:?}", fair.counters);
+        assert_eq!(fair.counters.preemptions, fair.counters.resumes);
+        assert!(fair.job_completion.iter().all(|&t| t > 0), "every job completes");
+
+        let first_dispatch = |r: &SimResult, u: usize| {
+            r.trace.iter().filter(|t| t.user == u).map(|t| t.start).min().unwrap()
+        };
+        // Starvation is bounded: the shorts tenant is served within
+        // min_run_ns + one tick of the streams filling the fabric…
+        assert!(
+            first_dispatch(&fair, 3) <= 3 * PREEMPT_TICK_NS,
+            "fair share left tenant 3 starved until {}",
+            first_dispatch(&fair, 3)
+        );
+        // …while run-to-completion makes it wait for a whole stream.
+        assert!(
+            first_dispatch(&rtc, 3) > first_dispatch(&fair, 3),
+            "rtc {} vs fair {}",
+            first_dispatch(&rtc, 3),
+            first_dispatch(&fair, 3)
+        );
+        // And the fairness is productive: mean turnaround improves.
+        let m_fair = mean_turnaround_ns(&w, &fair);
+        let m_rtc = mean_turnaround_ns(&w, &rtc);
+        assert!(
+            m_fair < m_rtc,
+            "fair-share turnaround {m_fair:.0} must beat run-to-completion {m_rtc:.0}"
+        );
+        // Per-tenant counters surface the preemption accounting.
+        let preempted: u64 = fair.per_tenant.iter().map(|(_, c)| c.preempted).sum();
+        assert_eq!(preempted, fair.counters.preemptions);
+        let admitted: u64 = fair.per_tenant.iter().map(|(_, c)| c.admitted).sum();
+        assert_eq!(admitted, w.total_requests() as u64);
+        // Exactly one completed running record per request: a
+        // preempted dispatch is credited only at its resumed finish.
+        let completed: u64 = fair.per_tenant.iter().map(|(_, c)| c.completed).sum();
+        assert_eq!(completed, w.total_requests() as u64);
+    }
+
+    #[test]
+    fn busy_backpressure_retries_and_conserves_requests() {
+        // A burst far above the bounded admission queue: the overflow
+        // is deferred with Busy hints and retried — every request is
+        // still dispatched exactly once, nothing is lost or doubled.
+        let c = catalog();
+        let mut w = Workload::new();
+        for j in JobSpec::frame_pinned(0, "sobel", "sobel_v1", 0, 16, 16) {
+            w.push(j);
+        }
+        let cfg = SimConfig::new(ShellBoard::Ultra96, Policy::Elastic).with_admission(
+            AdmissionConfig { queue_cap: 2, ..AdmissionConfig::default() },
+        );
+        let r = simulate(&c, &w, &cfg);
+        assert!(r.busy_retries > 0, "a 16-request burst must trip a 2-deep queue");
+        assert_eq!(r.trace.len(), 16, "every deferred request is eventually dispatched");
+        assert_eq!(r.counters.reconfigs + r.counters.reuses, 16);
+        assert!(r.job_completion.iter().all(|&t| t > 0));
     }
 
     #[test]

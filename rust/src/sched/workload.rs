@@ -1,5 +1,7 @@
-//! Workload descriptions for the scheduler: who submits what, when.
+//! Workload descriptions for the scheduler: who submits what, when —
+//! and, for admission-aware scenarios, each tenant's QoS class.
 
+use super::admission::QosClass;
 use super::SimTime;
 
 /// One job: a user's data-parallel acceleration call (Listing 4/5's
@@ -106,6 +108,11 @@ impl JobSpec {
 #[derive(Debug, Clone, Default)]
 pub struct Workload {
     pub jobs: Vec<JobSpec>,
+    /// Per-tenant QoS classes (tenant = user in the simulator), applied
+    /// to the admission pipeline and the core's tenant weights by
+    /// [`super::simulate`] / [`super::simulate_cluster`].  Tenants
+    /// without an entry get the permissive default.
+    pub qos: Vec<(usize, QosClass)>,
 }
 
 impl Workload {
@@ -143,6 +150,68 @@ impl Workload {
                     tiles_per_request: tiles_per_req,
                     pin_variant: None,
                 });
+            }
+        }
+        w
+    }
+
+    /// Set (or replace) one tenant's QoS class.
+    pub fn set_qos(&mut self, user: usize, qos: QosClass) -> &mut Self {
+        self.qos.retain(|(u, _)| *u != user);
+        self.qos.push((user, qos));
+        self
+    }
+
+    /// Give every tenant of the workload the same QoS class — the
+    /// uniform-quota knob the fig24 per-RPC baseline uses
+    /// (`max_inflight = 1` models a strictly blocking submit→wait
+    /// client).
+    pub fn with_uniform_qos(mut self, qos: QosClass) -> Workload {
+        for u in 0..self.users() {
+            self.set_qos(u, qos);
+        }
+        self
+    }
+
+    /// The adversarial admission mix (the no-starvation scenario):
+    /// `streamers` tenants each submit one long pinned streaming
+    /// request of `stream_tiles` work items, and the remaining
+    /// `tenants - streamers` tenants each submit `shorts` short
+    /// requests of `short_tiles`.  Everything arrives at t=0 in tenant
+    /// order, so neither arrival spacing nor luck spreads the load —
+    /// any fairness the short tenants see must come from the admission
+    /// pipeline's weighted DRR / quotas and the scheduling policy
+    /// (FairShare preemption), which is exactly what the fig24 bench
+    /// and the starvation property test measure.
+    pub fn tenant_mix(
+        tenants: usize,
+        streamers: usize,
+        stream_tiles: usize,
+        shorts: usize,
+        short_tiles: usize,
+    ) -> Workload {
+        let streamers = streamers.min(tenants);
+        let mut w = Workload::new();
+        for t in 0..tenants {
+            if t < streamers {
+                w.push(JobSpec::stream(
+                    t,
+                    "mandelbrot",
+                    Some("mandelbrot_v1"),
+                    0,
+                    stream_tiles,
+                ));
+            } else {
+                for j in JobSpec::frame_pinned(
+                    t,
+                    "sobel",
+                    "sobel_v1",
+                    0,
+                    shorts * short_tiles,
+                    shorts,
+                ) {
+                    w.push(j);
+                }
             }
         }
         w
@@ -202,6 +271,24 @@ mod tests {
         let accels: std::collections::HashSet<&str> =
             w.jobs.iter().map(|j| j.accel.as_str()).collect();
         assert_eq!(accels.len(), 8);
+    }
+
+    #[test]
+    fn tenant_mix_shape_and_qos() {
+        let w = Workload::tenant_mix(5, 2, 100, 6, 2);
+        assert_eq!(w.users(), 5);
+        // 2 streams (one request each) + 3 short tenants x 6 requests.
+        assert_eq!(w.total_requests(), 2 + 3 * 6);
+        assert!(w.jobs.iter().all(|j| j.arrival == 0), "adversarial mix arrives at once");
+        let streams = w.jobs.iter().filter(|j| j.accel == "mandelbrot").count();
+        assert_eq!(streams, 2);
+        // Uniform QoS covers every tenant; set_qos replaces.
+        let mut w = w.with_uniform_qos(QosClass::new(1, 1));
+        assert_eq!(w.qos.len(), 5);
+        assert!(w.qos.iter().all(|(_, q)| q.max_inflight == 1));
+        w.set_qos(0, QosClass::new(4, 2));
+        assert_eq!(w.qos.len(), 5);
+        assert_eq!(w.qos.iter().find(|(u, _)| *u == 0).unwrap().1.weight, 4);
     }
 
     #[test]
