@@ -81,6 +81,8 @@ pub struct BoardStatsReport {
     pub board: String,
     /// Board index (the id `board_stats` is keyed by).
     pub index: u64,
+    /// Failure-domain health: `"healthy"`, `"draining"` or `"down"`.
+    pub health: String,
     pub queued: u64,
     pub running: u64,
     pub reconfigs: u64,
@@ -106,6 +108,24 @@ pub struct ClusterStatsReport {
     pub reuses: u64,
     pub preemptions: u64,
     pub resumes: u64,
+    /// Boards currently routable (health `healthy`).
+    pub healthy: u64,
+    /// Boards failed over (running + queued work migrated).
+    pub failovers: u64,
+    /// Requests migrated off failed boards.
+    pub migrations: u64,
+    /// Virtual ns of execution destroyed by faults.
+    pub lost_ns: u64,
+    /// Reconfiguration attempts that failed (injected or real).
+    pub reconfig_failures: u64,
+    /// Failed reconfigurations parked for a backoff retry.
+    pub reconfig_retries: u64,
+    /// Requests rejected at the reconfiguration retry cap.
+    pub reconfig_rejections: u64,
+    /// Dispatches re-queued after a transient run error.
+    pub run_faults: u64,
+    /// Requests currently parked (backoff retries + revival waits).
+    pub parked_retries: u64,
     pub paused: bool,
 }
 
@@ -390,8 +410,37 @@ impl FpgaRpc {
             reuses: num("reuses"),
             preemptions: num("preemptions"),
             resumes: num("resumes"),
+            healthy: num("healthy"),
+            failovers: num("failovers"),
+            migrations: num("migrations"),
+            lost_ns: num("lost_ns"),
+            reconfig_failures: num("reconfig_failures"),
+            reconfig_retries: num("reconfig_retries"),
+            reconfig_rejections: num("reconfig_rejections"),
+            run_faults: num("run_faults"),
+            parked_retries: num("parked_retries"),
             paused: num("paused") != 0,
         })
+    }
+
+    /// Operator drain: board `board` leaves the routable set (health
+    /// `draining`) — running and queued work finishes in place, new
+    /// requests route around it.  Undo with [`FpgaRpc::revive_board`].
+    pub fn drain_board(&mut self, board: usize) -> Result<String, ProtoError> {
+        let r = self.call(obj(vec![
+            ("method", s("drain-board")),
+            ("board", i(board as i64)),
+        ]))?;
+        Ok(r.get("health").as_str().unwrap_or("").to_string())
+    }
+
+    /// Bring a drained (or failed) board back into rotation.
+    pub fn revive_board(&mut self, board: usize) -> Result<String, ProtoError> {
+        let r = self.call(obj(vec![
+            ("method", s("revive-board")),
+            ("board", i(board as i64)),
+        ]))?;
+        Ok(r.get("health").as_str().unwrap_or("").to_string())
     }
 
     /// One board's scheduling counters and queue depth.  Errors for an
@@ -470,6 +519,7 @@ fn board_report(v: &Value) -> BoardStatsReport {
     BoardStatsReport {
         board: v.get("board").as_str().unwrap_or("").to_string(),
         index: num("index"),
+        health: v.get("health").as_str().unwrap_or("").to_string(),
         queued: num("queued"),
         running: num("running"),
         reconfigs: num("reconfigs"),

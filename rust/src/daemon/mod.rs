@@ -59,6 +59,38 @@
 //! the same state machine the simulator drives, which is what keeps
 //! sim/daemon decision parity with QoS enabled (see
 //! `sched/ARCHITECTURE.md`, *Admission & QoS*).
+//!
+//! ## Failure domain (board health + failover RPCs)
+//!
+//! The cluster dispatcher recovers from substrate faults — failed
+//! partial reconfigurations (real `CynqError`s from
+//! `load_accelerator_at`, or injected via
+//! [`Daemon::start_cluster_with_faults`] / `fos daemon --fault-plan`),
+//! transient run errors, and whole-board outages — by retrying with
+//! exponential backoff and by checkpoint-migrating work off failed
+//! boards (see `sched/ARCHITECTURE.md`, *Failure domain & recovery*).
+//! The RPC surface:
+//!
+//! - **`drain-board`** ([`FpgaRpc::drain_board`]) takes a board out of
+//!   the routable set (health `draining`): running and queued work
+//!   finishes in place, new requests route around it.
+//!   **`revive-board`** ([`FpgaRpc::revive_board`]) returns a drained
+//!   or failed board to rotation (a failed board comes back blank).
+//! - **`cluster-stats`** gained the failure-domain counters:
+//!   `healthy` (routable boards), `failovers`, `migrations` (requests
+//!   moved off failed boards), `lost_ns` (virtual execution destroyed
+//!   by faults), `reconfig_failures` / `reconfig_retries` /
+//!   `reconfig_rejections` (the backoff-retry pipeline), `run_faults`
+//!   (transient errors re-queued) and `parked_retries` — parsed into
+//!   [`ClusterStatsReport`].
+//! - **`board-stats`** (and each board object of `cluster-stats`)
+//!   gained `health`: `"healthy"`, `"draining"` or `"down"` —
+//!   [`BoardStatsReport::health`].
+//!
+//! A request whose reconfiguration keeps failing past the per-accel
+//! cap is answered with a structured error (the same reply path as
+//! scheduler rejections), never silently dropped: batches still settle
+//! and conservation holds under any fault plan (`tests/chaos.rs`).
 
 mod proto;
 mod server;

@@ -50,7 +50,7 @@ use crate::driver::{AccelSnapshot, Cynq, LoadedAccel, PhysAddr};
 use crate::json::{arr, f, i, obj, s, Value};
 use crate::sched::{
     AdmissionConfig, AdmissionPipeline, AdmitRequest, ClusterCore, Decision, DecisionKind,
-    PlacementKind, Policy, QosClass,
+    FailDisposition, FaultPlan, MovedCkpt, PlacementKind, Policy, QosClass,
 };
 use crate::shell::ShellBoard;
 use std::cmp::Reverse;
@@ -116,6 +116,21 @@ pub struct DaemonStats {
     pub routed: AtomicU64,
     /// Requests moved between boards by work stealing.
     pub steals: AtomicU64,
+    /// Boards failed over (drained + migrated) — the failure domain.
+    pub failovers: AtomicU64,
+    /// Requests migrated off failed boards with progress preserved.
+    pub migrations: AtomicU64,
+    /// Virtual ns of execution destroyed by faults.
+    pub lost_ns: AtomicU64,
+    /// Reconfiguration attempts that failed (injected or real
+    /// `CynqError`s from `load_accelerator_at`).
+    pub reconfig_failures: AtomicU64,
+    /// Failed reconfigurations parked for a backoff retry.
+    pub reconfig_retries: AtomicU64,
+    /// Requests rejected at the reconfiguration retry cap.
+    pub reconfig_rejections: AtomicU64,
+    /// Dispatches re-queued after a transient run error.
+    pub run_faults: AtomicU64,
     /// Per-board mirrors of each shard's scheduling counters — the
     /// cluster observability surface (`board-stats` reports from the
     /// same source).  Empty only for a `Default`-built block.
@@ -224,6 +239,17 @@ enum Msg {
         board: usize,
         reply: mpsc::Sender<Value>,
     },
+    /// Operator drain: board leaves the routable set, running work
+    /// finishes in place ([`crate::sched::BoardHealth::Draining`]).
+    DrainBoard {
+        board: usize,
+        reply: mpsc::Sender<Value>,
+    },
+    /// Bring a drained (or failed) board back into rotation.
+    ReviveBoard {
+        board: usize,
+        reply: mpsc::Sender<Value>,
+    },
     /// Tail of a decision log: one board's (`board: Some`) or the
     /// merged cluster log (`None`).  `limit: None` means "all retained
     /// entries" — still bounded by the core's ring cap; the reply
@@ -232,6 +258,12 @@ enum Msg {
         board: Option<usize>,
         limit: Option<usize>,
         reply: mpsc::Sender<Vec<Decision>>,
+    },
+    /// The merged cluster log with its board tags — what the cluster
+    /// fault-parity test compares against the simulator's
+    /// `(board, decision)` sequence.
+    QueryMergedTagged {
+        reply: mpsc::Sender<Vec<(usize, Decision)>>,
     },
     Stop,
 }
@@ -315,6 +347,35 @@ impl Daemon {
         admission: AdmissionConfig,
         max_connections: usize,
     ) -> io::Result<Daemon> {
+        Self::start_cluster_with_faults(
+            socket_path,
+            boards,
+            catalog,
+            default_policy,
+            placement,
+            admission,
+            max_connections,
+            None,
+        )
+    }
+
+    /// [`Daemon::start_cluster_configured`] with a deterministic
+    /// [`FaultPlan`] injected into the dispatcher's virtual-time loop —
+    /// soak testing against board outages, reconfiguration failures and
+    /// transient run errors (`fos daemon --fault-plan <spec>`).  The
+    /// same plan driven through [`crate::sched::simulate_cluster`]
+    /// replays the identical fault (and recovery decision) sequence.
+    #[allow(clippy::too_many_arguments)]
+    pub fn start_cluster_with_faults(
+        socket_path: impl AsRef<Path>,
+        boards: &[ShellBoard],
+        catalog: Catalog,
+        default_policy: Policy,
+        placement: PlacementKind,
+        admission: AdmissionConfig,
+        max_connections: usize,
+        faults: Option<FaultPlan>,
+    ) -> io::Result<Daemon> {
         assert!(!boards.is_empty(), "a cluster needs at least one board");
         let socket_path = socket_path.as_ref().to_path_buf();
         let _ = std::fs::remove_file(&socket_path);
@@ -331,9 +392,9 @@ impl Daemon {
 
         let dispatch_handle = {
             let stats = stats.clone();
-            std::thread::Builder::new()
-                .name("fos-dispatch".into())
-                .spawn(move || dispatcher(cynqs, rx, stats, default_policy, placement, admission))?
+            std::thread::Builder::new().name("fos-dispatch".into()).spawn(move || {
+                dispatcher(cynqs, rx, stats, default_policy, placement, admission, faults)
+            })?
         };
 
         // Blocking accept (no sleep polling): `shutdown` wakes the
@@ -427,6 +488,17 @@ impl Daemon {
     /// cluster parity test compares against the simulator's.
     pub fn board_decision_log(&self, board: usize) -> Vec<Decision> {
         self.decision_log_query(Some(board), None)
+    }
+
+    /// The merged cluster decision log WITH board tags, in global
+    /// dispatch order — the `(board, decision)` sequence the fault
+    /// parity test compares against `ClusterSimResult::merged`.
+    pub fn merged_decision_log(&self) -> Vec<(usize, Decision)> {
+        let (rtx, rrx) = mpsc::channel();
+        if self.tx.send(Msg::QueryMergedTagged { reply: rtx }).is_err() {
+            return Vec::new();
+        }
+        rrx.recv().unwrap_or_default()
     }
 
     fn decision_log_query(&self, board: Option<usize>, limit: Option<usize>) -> Vec<Decision> {
@@ -548,6 +620,18 @@ fn serve(
                 Err(e) => err_val(&e),
                 Ok(board) => {
                     ask(tx, |reply| Msg::QueryBoard { board: board as usize, reply })
+                }
+            },
+            "drain-board" => match msg.req_u64("board") {
+                Err(e) => err_val(&e),
+                Ok(board) => {
+                    ask(tx, |reply| Msg::DrainBoard { board: board as usize, reply })
+                }
+            },
+            "revive-board" => match msg.req_u64("board") {
+                Err(e) => err_val(&e),
+                Ok(board) => {
+                    ask(tx, |reply| Msg::ReviveBoard { board: board as usize, reply })
                 }
             },
             "alloc" | "free" | "write" | "read" | "import" | "export" => {
@@ -731,6 +815,17 @@ struct Inflight {
 /// simulator's `Event::Tick`.
 const TICK_ANCHOR: usize = usize::MAX;
 
+/// Sentinel anchor: injected board outage starts (the heap entry's
+/// board field names the victim) — the simulator's `BoardDown` event.
+const DOWN_ANCHOR: usize = usize::MAX - 1;
+
+/// Sentinel anchor: outage end, the board rejoins the routable set.
+const REVIVE_ANCHOR: usize = usize::MAX - 2;
+
+/// Sentinel anchor: a reconfiguration-retry backoff expired — wakes
+/// the loop so `release_retries` runs at the right virtual time.
+const RETRY_ANCHOR: usize = usize::MAX - 3;
+
 /// Fail one admitted-but-unfinished job of a batch, sending the batch
 /// reply when it was the last outstanding unit — the single bookkeeping
 /// path shared by client disconnects and the stall guard.
@@ -793,6 +888,7 @@ fn dispatcher(
     policy: Policy,
     placement: PlacementKind,
     admission: AdmissionConfig,
+    faults: Option<FaultPlan>,
 ) {
     let boards: Vec<ShellBoard> = cynqs.iter().map(|c| c.shell.board).collect();
     let n_boards = boards.len();
@@ -847,6 +943,29 @@ fn dispatcher(
     let mut seq = 0u64;
     let mut vnow = 0u64;
     let mut paused = false;
+    // Fault injection: the plan's draw counters advance as decisions
+    // and completions are processed — the same consumption points as
+    // the simulator's, so a shared plan replays identically.  Outage
+    // sentinels are parked until the first submission so the virtual
+    // clock (which only advances with work) anchors them the same way
+    // the simulator's t=0 arrivals do.
+    let mut plan = faults;
+    let mut fault_events: Vec<(u64, usize, usize)> = plan
+        .as_ref()
+        .map(|p| {
+            p.outages()
+                .iter()
+                .filter(|o| o.board < n_boards)
+                .flat_map(|o| {
+                    [(o.at_ns, o.board, DOWN_ANCHOR), (o.revive_at_ns(), o.board, REVIVE_ANCHOR)]
+                })
+                .collect()
+        })
+        .unwrap_or_default();
+    // Register-file snapshots drained off a failed board before any
+    // healthy shard could adopt them, keyed by job token until a
+    // `release_retries` reports the adoption.
+    let mut parked_snaps: HashMap<u64, AccelSnapshot> = HashMap::new();
     // A scheduling round is due: new admissions, a policy change or a
     // virtual-time advance happened since the last one. Mirrors the
     // simulator's one-round-per-event-batch cadence, which keeps the
@@ -907,6 +1026,7 @@ fn dispatcher(
                             if let Some(id) = req.resume {
                                 hws[b].snapshots.remove(&id); // orphaned checkpoint
                             }
+                            parked_snaps.remove(&req.job);
                             if let Some(p) = pending.remove(&req.job) {
                                 fail_job(
                                     &mut batches,
@@ -1084,6 +1204,59 @@ fn dispatcher(
                     batches.insert(next_batch, batch);
                     next_batch += 1;
                     round_due = true;
+                    // First work arrived: arm the fault plan's outage
+                    // sentinels (virtual time is still at the point the
+                    // simulator calls t=0, so `at_ns` lines up).  A
+                    // sentinel already due — an outage at virtual 0 —
+                    // is applied NOW, before the scheduling round this
+                    // submission triggers: the simulator processes a
+                    // t=0 BoardDown in the arrival batch, ahead of the
+                    // first ingest, and the daemon must match it.
+                    for (t, b, kind) in fault_events.drain(..) {
+                        if t <= vnow {
+                            match kind {
+                                DOWN_ANCHOR => handle_board_down(
+                                    &mut cluster,
+                                    &mut hws,
+                                    &mut inflight,
+                                    &mut pending,
+                                    &mut parked_snaps,
+                                    b,
+                                    vnow,
+                                ),
+                                REVIVE_ANCHOR => cluster.revive_board(b),
+                                _ => {}
+                            }
+                        } else {
+                            completions.push(Reverse((t, seq, b, kind)));
+                            seq += 1;
+                        }
+                    }
+                }
+                Msg::DrainBoard { board, reply } => {
+                    let v = if board < cluster.len() {
+                        cluster.drain_board(board);
+                        ok(vec![
+                            ("board", i(board as i64)),
+                            ("health", s(cluster.health(board).name())),
+                        ])
+                    } else {
+                        err_val(&format!("no board {board} (cluster has {})", cluster.len()))
+                    };
+                    let _ = reply.send(v);
+                }
+                Msg::ReviveBoard { board, reply } => {
+                    let v = if board < cluster.len() {
+                        cluster.revive_board(board);
+                        round_due = cluster.has_pending() || admit.has_eligible();
+                        ok(vec![
+                            ("board", i(board as i64)),
+                            ("health", s(cluster.health(board).name())),
+                        ])
+                    } else {
+                        err_val(&format!("no board {board} (cluster has {})", cluster.len()))
+                    };
+                    let _ = reply.send(v);
                 }
                 _ => unreachable!("handle_cheap services every other message"),
             }
@@ -1102,13 +1275,75 @@ fn dispatcher(
             // only advance the clock — the simulator's exact rule.
             if let Some(&Reverse((t, _, _, _))) = completions.peek() {
                 vnow = t;
+                let mut fault_round = false;
                 while let Some(&Reverse((t2, _, _, _))) = completions.peek() {
                     if t2 != t {
                         break;
                     }
-                    let Reverse((_, sq, _, anchor)) = completions.pop().unwrap();
+                    let Reverse((_, sq, ev_board, anchor)) = completions.pop().unwrap();
+                    match anchor {
+                        // Injected board failure: drain + migrate — the
+                        // simulator's BoardDown event, verbatim.
+                        DOWN_ANCHOR => {
+                            handle_board_down(
+                                &mut cluster,
+                                &mut hws,
+                                &mut inflight,
+                                &mut pending,
+                                &mut parked_snaps,
+                                ev_board,
+                                vnow,
+                            );
+                            fault_round = true;
+                            continue;
+                        }
+                        REVIVE_ANCHOR => {
+                            cluster.revive_board(ev_board);
+                            fault_round = true;
+                            continue;
+                        }
+                        // Backoff expiry: only wakes the loop; the
+                        // release itself happens in the round section.
+                        RETRY_ANCHOR => {
+                            fault_round = true;
+                            continue;
+                        }
+                        _ => {}
+                    }
                     if let Some(inf) = inflight.remove(&sq) {
                         let b = inf.board;
+                        // Injected transient run error — consumed per
+                        // non-cancelled completion, in completion
+                        // order, exactly as the simulator does: the
+                        // dispatch's work is lost and the request
+                        // re-queued for a clean re-run.
+                        if plan.as_mut().is_some_and(|p| p.run_should_fail(b))
+                            && cluster.fail_run(b, anchor, vnow)
+                        {
+                            if hws[b].running_seq.get(&anchor) == Some(&sq) {
+                                hws[b].running_seq.remove(&anchor);
+                            }
+                            // A failed Resume consumed its snapshot.
+                            if inf.d.kind == DecisionKind::Resume {
+                                if let Some(id) = inf.d.ckpt {
+                                    hws[b].snapshots.remove(&id);
+                                }
+                            }
+                            pending.insert(
+                                inf.d.job,
+                                PendingJob {
+                                    job: inf.job,
+                                    batch: inf.batch,
+                                    carry_us: inf.carry_us,
+                                    // The failed slice's virtual time
+                                    // was genuinely consumed.
+                                    carry_modelled_us: inf.carry_modelled_us
+                                        + inf.lat_ns as f64 / 1e3,
+                                    failed: inf.err,
+                                },
+                            );
+                            continue;
+                        }
                         if hws[b].running_seq.get(&anchor) == Some(&sq) {
                             hws[b].running_seq.remove(&anchor);
                         }
@@ -1126,29 +1361,41 @@ fn dispatcher(
                         );
                     }
                 }
-                round_due = cluster.has_pending() || admit.has_eligible();
+                round_due = fault_round || cluster.has_pending() || admit.has_eligible();
             }
             continue;
         }
         round_due = false;
 
+        // Release backoff-expired retries (and revival-parked work)
+        // before admitting new arrivals — the simulator's exact order —
+        // mirroring any checkpoint adoptions in the per-board snapshot
+        // stores.
+        let released = cluster.release_retries(vnow);
+        move_snapshots(&mut hws, &mut parked_snaps, &released.moved_ckpts);
+
         // Batched ingest: one admission round hands every eligible
         // queued request (weighted DRR under token-bucket quotas) to
         // the scheduler — board routing happens here, in ingest order,
-        // exactly as in the simulator.
-        for r in admit.ingest() {
-            match cluster.submit_for(r.user, r.tenant, r.job, &r.accel, r.tiles, r.pin.as_deref())
-            {
-                Ok(_board) => {
-                    stats.admitted.fetch_add(1, Ordering::Relaxed);
-                }
-                Err(e) => {
-                    // Admission was validated at enqueue, so this is a
-                    // catalog swap mid-flight: fail the job, return
-                    // the token.
-                    admit.complete(r.tenant);
-                    if let Some(p) = pending.remove(&r.job) {
-                        fail_job(&mut batches, &mut tickets, &mut open_tickets, p.batch, e);
+        // exactly as in the simulator.  With every board down, ingest
+        // waits: queued work stays in the admission pipeline until a
+        // revival re-opens routing.
+        if cluster.healthy_count() > 0 {
+            for r in admit.ingest() {
+                match cluster
+                    .submit_for(r.user, r.tenant, r.job, &r.accel, r.tiles, r.pin.as_deref())
+                {
+                    Ok(_board) => {
+                        stats.admitted.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Err(e) => {
+                        // Admission was validated at enqueue, so this
+                        // is a catalog swap mid-flight: fail the job,
+                        // return the token.
+                        admit.complete(r.tenant);
+                        if let Some(p) = pending.remove(&r.job) {
+                            fail_job(&mut batches, &mut tickets, &mut open_tickets, p.batch, e);
+                        }
                     }
                 }
             }
@@ -1185,40 +1432,17 @@ fn dispatcher(
                     // Cancel the victim's virtual completion, run the
                     // slice the virtual clock says finished, checkpoint
                     // the accelerator, and re-link the proto job so the
-                    // later Resume decision finds its context again.
+                    // later Resume decision finds its context again —
+                    // checkpoint_slice is shared with the board-down
+                    // drain, so the two paths cannot drift.
                     let hw = &mut hws[b];
                     if let Some(vseq) = hw.running_seq.remove(&d.anchor) {
                         if let Some(inf) = inflight.remove(&vseq) {
                             let done = inf.d.tiles - d.tiles;
-                            let mut carry_us = inf.carry_us;
-                            let mut failed = inf.err;
-                            // A preempted Resume never reaches
-                            // finish_inflight, so its own pending
-                            // snapshot is consumed (and applied) here —
-                            // same shared helper, so the two paths
-                            // cannot drift.
-                            let restored =
-                                take_and_restore_snapshot(&mut hw.cynq, &mut hw.snapshots, &inf);
-                            if failed.is_none() {
-                                let h = inf.handle.expect("loaded dispatch without handle");
-                                let t0 = Instant::now();
-                                let r = restored
-                                    .and_then(|()| run_tiles(&mut hw.cynq, h, &inf.job, done))
-                                    .and_then(|()| {
-                                        let snap = hw
-                                            .cynq
-                                            .checkpoint_accelerator(h)
-                                            .map_err(|e| e.to_string())?;
-                                        hw.snapshots.insert(
-                                            d.ckpt.expect("preempt without ckpt id"),
-                                            snap,
-                                        );
-                                        Ok(())
-                                    });
-                                if let Err(e) = r {
-                                    failed = Some(e);
-                                }
-                                carry_us += t0.elapsed().as_secs_f64() * 1e6;
+                            let (snap, carry, failed) = checkpoint_slice(hw, &inf, done, true);
+                            if let Some(snap) = snap {
+                                hw.snapshots
+                                    .insert(d.ckpt.expect("preempt without ckpt id"), snap);
                             }
                             let carry_modelled_us = inf.carry_modelled_us
                                 + vnow.saturating_sub(inf.start_ns) as f64 / 1e3;
@@ -1227,12 +1451,29 @@ fn dispatcher(
                                 PendingJob {
                                     job: inf.job,
                                     batch: inf.batch,
-                                    carry_us,
+                                    carry_us: inf.carry_us + carry,
                                     carry_modelled_us,
                                     failed,
                                 },
                             );
                         }
+                    }
+                    continue;
+                }
+
+                // Injected reconfiguration fault — the plan is drawn
+                // for every reconfiguring dispatch, in dispatch order,
+                // exactly as the simulator does; a failure skips the
+                // hardware (the load never happens) and the request is
+                // parked for a backoff retry or rejected at the cap.
+                // Its pending entry stays: the retried dispatch (or
+                // the rejected sweep) keeps the job token.
+                if d.reconfigure && plan.as_mut().is_some_and(|p| p.reconfig_should_fail(b)) {
+                    if let Some(FailDisposition::Retry { at_ns }) =
+                        cluster.reconfig_outcome(b, &d, true, vnow)
+                    {
+                        completions.push(Reverse((at_ns, seq, b, RETRY_ANCHOR)));
+                        seq += 1;
                     }
                     continue;
                 }
@@ -1245,7 +1486,8 @@ fn dispatcher(
 
                 let p = pending.remove(&d.job).expect("decision for unknown job token");
                 let mut handle = None;
-                let mut err = p.failed;
+                let mut err = p.failed.clone();
+                let mut load_failed = false;
                 // Mirror the configuration effect even when an earlier
                 // slice already failed (err pre-set): the shard's
                 // region map has recorded this placement either way,
@@ -1257,18 +1499,41 @@ fn dispatcher(
                     match ensure_module(&mut hw.cynq, &mut hw.resident, &d) {
                         Ok(h) => handle = Some(h),
                         Err(fail) => {
-                            if fail.module_missing {
-                                // The (re)load itself failed: forget
-                                // the shard's residency bookkeeping so
-                                // the next decision reconfigures
-                                // instead of reusing a phantom
-                                // instance forever.
-                                cluster.evict(b, d.anchor);
-                            }
-                            if err.is_none() {
-                                err = Some(fail.msg);
+                            if fail.module_missing && d.reconfigure {
+                                // A real CynqError from
+                                // load_accelerator_at: recovered below
+                                // through the same retry/reject path as
+                                // an injected ReconfigFail.
+                                load_failed = true;
+                            } else {
+                                if fail.module_missing {
+                                    // Reuse at an unresident anchor:
+                                    // forget the phantom residency so
+                                    // the next decision reconfigures.
+                                    cluster.evict(b, d.anchor);
+                                }
+                                if err.is_none() {
+                                    err = Some(fail.msg);
+                                }
                             }
                         }
+                    }
+                }
+                if d.reconfigure {
+                    // Report the hardware outcome: success resets the
+                    // accelerator's failure streak; a real load failure
+                    // rolls the placement back (running record
+                    // included) and parks the request for an
+                    // exponential-backoff retry — or surfaces a
+                    // structured rejection once the per-accel cap is
+                    // spent.
+                    if let Some(disp) = cluster.reconfig_outcome(b, &d, load_failed, vnow) {
+                        if let FailDisposition::Retry { at_ns } = disp {
+                            completions.push(Reverse((at_ns, seq, b, RETRY_ANCHOR)));
+                            seq += 1;
+                        }
+                        pending.insert(d.job, p);
+                        continue;
                     }
                 }
                 if d.kind == DecisionKind::Run {
@@ -1505,6 +1770,127 @@ fn finish_inflight(
     }
 }
 
+/// Mirror cluster-level checkpoint moves in the per-board register-file
+/// snapshot stores: `from: Some((board, id))` entries move between
+/// board stores, `from: None` entries come out of the job-keyed
+/// parked-snapshot stash (drained while no board was healthy).
+fn move_snapshots(
+    hws: &mut [BoardHw],
+    parked_snaps: &mut HashMap<u64, AccelSnapshot>,
+    moved: &[MovedCkpt],
+) {
+    for m in moved {
+        let snap = match m.from {
+            Some((from_board, old)) => hws[from_board].snapshots.remove(&old),
+            None => parked_snaps.remove(&m.job),
+        };
+        if let Some(s) = snap {
+            hws[m.to].snapshots.insert(m.new_ckpt, s);
+        }
+    }
+}
+
+/// Run the completed slice of a cancelled dispatch and (optionally)
+/// capture a fresh register-file snapshot — the emergency-checkpoint
+/// protocol shared by the Preempt branch and the board-failover drain,
+/// implemented once so the two paths cannot drift.  A Resume
+/// dispatch's own pending snapshot is consumed (and applied) first,
+/// whatever else happens.  Returns the snapshot (when requested and
+/// nothing failed), the real µs the slice consumed, and the failure to
+/// carry into the re-linked job.
+fn checkpoint_slice(
+    hw: &mut BoardHw,
+    inf: &Inflight,
+    done: usize,
+    snapshot: bool,
+) -> (Option<AccelSnapshot>, f64, Option<String>) {
+    let restored = take_and_restore_snapshot(&mut hw.cynq, &mut hw.snapshots, inf);
+    if let Some(e) = inf.err.clone() {
+        return (None, 0.0, Some(e));
+    }
+    let h = inf.handle.expect("loaded dispatch without handle");
+    let t0 = Instant::now();
+    let r = restored
+        .and_then(|()| run_tiles(&mut hw.cynq, h, &inf.job, done))
+        .and_then(|()| {
+            if snapshot {
+                hw.cynq.checkpoint_accelerator(h).map(Some).map_err(|e| e.to_string())
+            } else {
+                Ok(None)
+            }
+        });
+    let carry_us = t0.elapsed().as_secs_f64() * 1e6;
+    match r {
+        Ok(snap) => (snap, carry_us, None),
+        Err(e) => (None, carry_us, Some(e)),
+    }
+}
+
+/// The daemon half of a board failure: drive the cluster-core failover
+/// ([`ClusterCore::mark_board_down`]) and mirror it onto the hardware
+/// state — every running dispatch's completion is cancelled (its heap
+/// entry becomes a clock-advance no-op), the slice the virtual clock
+/// says completed is executed for real and checkpointed
+/// ([`checkpoint_slice`]), the snapshot moves to the board that
+/// adopted the remainder, queued remainders' snapshots move with
+/// their checkpoints, and the failed board's fabric is blanked.
+#[allow(clippy::too_many_arguments)]
+fn handle_board_down(
+    cluster: &mut ClusterCore,
+    hws: &mut [BoardHw],
+    inflight: &mut HashMap<u64, Inflight>,
+    pending: &mut HashMap<u64, PendingJob>,
+    parked_snaps: &mut HashMap<u64, AccelSnapshot>,
+    b: usize,
+    now: u64,
+) {
+    if b >= hws.len() {
+        return;
+    }
+    let report = cluster.mark_board_down(b, now);
+    for dr in &report.drained {
+        let Some(vseq) = hws[b].running_seq.remove(&dr.anchor) else { continue };
+        let Some(inf) = inflight.remove(&vseq) else { continue };
+        let (snap, carry, failed) = checkpoint_slice(&mut hws[b], &inf, dr.done, dr.done > 0);
+        if let Some(snap) = snap {
+            match (dr.to, dr.new_ckpt) {
+                (Some(to), Some(id)) => {
+                    hws[to].snapshots.insert(id, snap);
+                }
+                // No healthy board yet: park keyed by job until a
+                // release reports the adoption.
+                _ => {
+                    parked_snaps.insert(dr.job, snap);
+                }
+            }
+        }
+        let carry_modelled_us =
+            inf.carry_modelled_us + now.saturating_sub(inf.start_ns) as f64 / 1e3;
+        pending.insert(
+            dr.job,
+            PendingJob {
+                job: inf.job,
+                batch: inf.batch,
+                carry_us: inf.carry_us + carry,
+                carry_modelled_us,
+                failed,
+            },
+        );
+    }
+    move_snapshots(hws, parked_snaps, &report.moved_ckpts);
+    // The board comes back blank: unload every resident module and
+    // forget its dispatch state.
+    let hw = &mut hws[b];
+    let stale: Vec<usize> = hw.resident.keys().copied().collect();
+    for a in stale {
+        if let Some((h, _)) = hw.resident.remove(&a) {
+            let _ = hw.cynq.unload(h);
+        }
+    }
+    hw.running_seq.clear();
+    hw.next_tick = None;
+}
+
 /// Publish every shard's [`crate::sched::SchedCounters`] into the
 /// daemon's atomics —
 /// the per-board mirrors plus the cluster-wide totals the legacy
@@ -1532,6 +1918,13 @@ fn mirror_counters(stats: &DaemonStats, cluster: &ClusterCore) {
     let cc = cluster.cluster_counters();
     stats.routed.store(cc.routed, Ordering::Relaxed);
     stats.steals.store(cc.steals, Ordering::Relaxed);
+    stats.failovers.store(cc.failovers, Ordering::Relaxed);
+    stats.migrations.store(cc.migrations, Ordering::Relaxed);
+    stats.lost_ns.store(cc.lost_ns, Ordering::Relaxed);
+    stats.reconfig_failures.store(cc.reconfig_failures, Ordering::Relaxed);
+    stats.reconfig_retries.store(cc.reconfig_retries, Ordering::Relaxed);
+    stats.reconfig_rejections.store(cc.reconfig_rejections, Ordering::Relaxed);
+    stats.run_faults.store(cc.run_faults, Ordering::Relaxed);
 }
 
 /// Answer a message that needs no scheduling-state change (mem ops,
@@ -1636,6 +2029,9 @@ fn handle_cheap(
             };
             let _ = reply.send(out);
         }
+        Msg::QueryMergedTagged { reply } => {
+            let _ = reply.send(cluster.merged_log().cloned().collect());
+        }
         Msg::Pause { reply } => {
             *paused = true;
             let _ = reply.send(ok(vec![]));
@@ -1707,6 +2103,7 @@ fn board_fields(cluster: &ClusterCore, b: usize) -> Vec<(&'static str, Value)> {
     vec![
         ("board", s(cluster.board(b).name())),
         ("index", i(b as i64)),
+        ("health", s(cluster.health(b).name())),
         ("queued", i(core.pending() as i64)),
         ("running", i(core.running_count() as i64)),
         ("reconfigs", i(c.reconfigs as i64)),
@@ -1734,6 +2131,16 @@ fn cluster_stats_value(cluster: &ClusterCore, paused: bool) -> Value {
         ("reuses", i(t.reuses as i64)),
         ("preemptions", i(t.preemptions as i64)),
         ("resumes", i(t.resumes as i64)),
+        // Failure-domain counters (board health is per board above).
+        ("healthy", i(cluster.healthy_count() as i64)),
+        ("failovers", i(cc.failovers as i64)),
+        ("migrations", i(cc.migrations as i64)),
+        ("lost_ns", i(cc.lost_ns as i64)),
+        ("reconfig_failures", i(cc.reconfig_failures as i64)),
+        ("reconfig_retries", i(cc.reconfig_retries as i64)),
+        ("reconfig_rejections", i(cc.reconfig_rejections as i64)),
+        ("run_faults", i(cc.run_faults as i64)),
+        ("parked_retries", i(cluster.parked_count() as i64)),
         ("paused", i(paused as i64)),
     ])
 }

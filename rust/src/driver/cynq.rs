@@ -628,6 +628,98 @@ mod tests {
     }
 
     #[test]
+    fn restore_mismatch_rolls_back_slot_state() {
+        // The restore rollback path in isolation: a snapshot of one
+        // variant must refuse to land on any other accelerator OR
+        // variant, leaving the target slot byte-for-byte untouched —
+        // the no-partial-effect contract cross-board migration relies
+        // on (a migrated snapshot only restores onto a fresh load of
+        // the exact same variant).
+        let _g = LOCK.lock().unwrap();
+        let mut fpga = open();
+        let (h1, _) = fpga.load_accelerator("vadd", Some("vadd_v1")).unwrap();
+        let pa = fpga.alloc(4 * 4096).unwrap();
+        fpga.write_reg(h1, "a_op", pa).unwrap();
+        let snap = fpga.checkpoint_accelerator(h1).unwrap();
+        fpga.unload(h1).unwrap();
+
+        // Same accelerator, different variant: refused.
+        let (h2, _) = fpga.load_accelerator_at("vadd", "vadd_v2", 0).unwrap();
+        let pb = fpga.alloc(4 * 4096).unwrap();
+        fpga.write_reg(h2, "b_op", pb).unwrap();
+        let before = fpga.checkpoint_accelerator(h2).unwrap();
+        assert!(matches!(
+            fpga.restore_accelerator(h2, &snap),
+            Err(CynqError::Driver(_))
+        ));
+        // Slot state survived the refused restore: variant, progress
+        // and the register file are exactly what they were.
+        assert_eq!(fpga.variant_of(h2), Some("vadd_v2"));
+        assert_eq!(fpga.progress_of(h2), Some(before.tiles_done));
+        let after = fpga.checkpoint_accelerator(h2).unwrap();
+        assert_eq!(after.regs, before.regs, "register file must be untouched");
+        fpga.unload(h2).unwrap();
+
+        // Different accelerator entirely: also refused, also untouched.
+        let (h3, _) = fpga.load_accelerator("sobel", Some("sobel_v1")).unwrap();
+        assert!(fpga.restore_accelerator(h3, &snap).is_err());
+        assert_eq!(fpga.variant_of(h3), Some("sobel_v1"));
+        assert_eq!(fpga.progress_of(h3), Some(0));
+
+        // The exact variant restores cleanly — and carries the
+        // programmed operand register across the reload.
+        fpga.unload(h3).unwrap();
+        let (h4, _) = fpga.load_accelerator("vadd", Some("vadd_v1")).unwrap();
+        fpga.restore_accelerator(h4, &snap).unwrap();
+        let restored = fpga.checkpoint_accelerator(h4).unwrap();
+        assert_eq!(restored.regs, snap.regs, "restore must reinstate the register file");
+    }
+
+    #[test]
+    fn failed_load_has_no_partial_effect() {
+        // The load-failure rollback path in isolation: a load refused
+        // for capacity (the "third load") or for an occupied/invalid
+        // anchor must leave occupancy, live handles and register state
+        // exactly as they were — the daemon maps these CynqErrors into
+        // the scheduler's retry path, which assumes nothing changed.
+        let _g = LOCK.lock().unwrap();
+        let mut fpga = open(); // Ultra96: 3 PR regions
+        let (h1, _) = fpga.load_accelerator("dct", None).unwrap(); // dct_v2, 2 regions
+        let (h2, _) = fpga.load_accelerator("dct", None).unwrap(); // dct_v1, 1 region
+        assert_eq!(fpga.free_regions(), 0);
+        let pa = fpga.alloc(4096).unwrap();
+        fpga.write_reg(h2, "in_img", pa).unwrap();
+        let before = fpga.checkpoint_accelerator(h2).unwrap();
+
+        // Third load fails for capacity…
+        assert!(matches!(
+            fpga.load_accelerator("dct", None),
+            Err(CynqError::NoFreeRegions { .. })
+        ));
+        // …an anchored load fails for occupancy…
+        assert!(matches!(
+            fpga.load_accelerator_at("vadd", "vadd_v1", 0),
+            Err(CynqError::RegionOccupied { .. })
+        ));
+        // …an out-of-fabric anchor fails…
+        assert!(fpga.load_accelerator_at("vadd", "vadd_v1", 17).is_err());
+        // …and none of it perturbed anything: occupancy, both live
+        // handles, and the programmed register file are unchanged.
+        assert_eq!(fpga.free_regions(), 0);
+        assert_eq!(fpga.variant_of(h1), Some("dct_v2"));
+        assert_eq!(fpga.variant_of(h2), Some("dct_v1"));
+        assert_eq!(fpga.occupant(0), Some(h1));
+        assert_eq!(fpga.occupant(2), Some(h2));
+        let after = fpga.checkpoint_accelerator(h2).unwrap();
+        assert_eq!(after.regs, before.regs);
+        // Recovery after freeing capacity works first try — the failed
+        // attempts left no poisoned state behind.
+        fpga.unload(h1).unwrap();
+        let (h3, _) = fpga.load_accelerator_at("vadd", "vadd_v1", 0).unwrap();
+        assert_eq!(fpga.anchor_of(h3), Some((0, 1)));
+    }
+
+    #[test]
     fn missing_register_programming_caught() {
         let _g = LOCK.lock().unwrap();
         let mut fpga = open();

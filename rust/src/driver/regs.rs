@@ -16,8 +16,10 @@ impl ControlBits {
     pub const AUTO_RESTART: u32 = 1 << 7; // Read/Write
 }
 
-/// The MMIO register space of one loaded accelerator.
-#[derive(Debug, Clone)]
+/// The MMIO register space of one loaded accelerator.  `PartialEq`
+/// lets checkpoint/restore tests assert byte-exact register-file
+/// round-trips (the rollback no-partial-effect contract).
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct RegisterFile {
     /// Operand registers by offset (64-bit pointer registers).
     values: BTreeMap<u64, u64>,

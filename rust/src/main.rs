@@ -7,6 +7,7 @@
 //!            [--boards B1,B2,...] [--placement round-robin|least-loaded|locality]
 //!            [--policy elastic|fixed|quantum|elastic-pre|fair]
 //!            [--queue-cap N] [--quantum-tiles N] [--max-conns N]
+//!            [--fault-plan SPEC]
 //! fos run    [--socket PATH] --accel NAME [--requests N]
 //!            [--tenant NAME] [--weight W] [--max-inflight N] [--async]
 //! fos info   [--board BOARD]         # shell + catalog + Table 1 summary
@@ -21,7 +22,10 @@
 //! arms weighted DRR ingest), `--max-conns` caps the connection table.
 //! `fos run --tenant acme --weight 3` binds the connection to a named
 //! QoS session; `--async` submits for a ticket and drains it through
-//! the wait RPC explicitly.
+//! the wait RPC explicitly.  `--fault-plan` arms deterministic fault
+//! injection (board outages, reconfiguration failures, transient run
+//! errors — see `fos::sched::FaultPlan::parse` for the spec format)
+//! for failover soak testing against the live daemon.
 
 use fos::accel::Catalog;
 use fos::daemon::{Daemon, FpgaRpc, Job};
@@ -93,7 +97,18 @@ fn main() {
             let max_conns: usize = get("--max-conns")
                 .and_then(|v| v.parse().ok())
                 .unwrap_or(fos::daemon::DEFAULT_MAX_CONNECTIONS);
-            let _d = Daemon::start_cluster_configured(
+            // `--fault-plan seed=7,reconfig=0.05,down=1@50+40` arms
+            // deterministic fault injection for soak testing: board
+            // outages + reconfig/run failures replay the exact
+            // sequence the same spec produces in simulate_cluster.
+            let faults = get("--fault-plan").map(|spec| {
+                fos::sched::FaultPlan::parse(&spec).unwrap_or_else(|e| {
+                    eprintln!("bad --fault-plan: {e}");
+                    std::process::exit(2);
+                })
+            });
+            let fault_spec = faults.as_ref().map(|p| p.to_spec());
+            let _d = Daemon::start_cluster_with_faults(
                 &socket,
                 &boards,
                 catalog,
@@ -101,16 +116,20 @@ fn main() {
                 placement,
                 admission,
                 max_conns,
+                faults,
             )
             .expect("daemon start");
             let names: Vec<&str> = boards.iter().map(|b| b.name()).collect();
             println!(
                 "fos daemon: boards={} placement={} policy={} socket={socket} accelerators={n} \
-                 queue-cap={} max-conns={max_conns}",
+                 queue-cap={} max-conns={max_conns}{}",
                 names.join(","),
                 placement.name(),
                 policy.name(),
                 admission.queue_cap,
+                fault_spec
+                    .map(|sp| format!(" fault-plan={sp}"))
+                    .unwrap_or_default(),
             );
             println!("press ctrl-c to stop");
             loop {
@@ -231,6 +250,7 @@ fn main() {
             println!("               [--boards B1,B2,...] [--placement round-robin|least-loaded|locality]");
             println!("               [--policy elastic|fixed|quantum|elastic-pre|fair]");
             println!("               [--queue-cap N] [--quantum-tiles N] [--max-conns N]");
+            println!("               [--fault-plan seed=N,reconfig=R,run=R,down=B@Tms+Dms,...]");
             println!("  fos run      [--socket PATH] --accel NAME [--requests N]");
             println!("               [--tenant NAME] [--weight W] [--max-inflight N] [--async]");
             println!("  fos info     [--board BOARD]");

@@ -43,7 +43,8 @@
 //! never breaks decision parity.
 
 use super::core::{
-    Decision, Policy, RegionMap, Request, SchedCore, SchedCounters, TenantSchedCounters,
+    Checkpoint, Decision, Policy, RegionMap, Request, SchedCore, SchedCounters,
+    TenantSchedCounters,
 };
 use crate::accel::Catalog;
 use crate::shell::{Shell, ShellBoard};
@@ -57,6 +58,120 @@ pub const DEFAULT_STEAL_THRESHOLD: usize = 32;
 /// Merged-log ring cap (same order as the per-shard cap): bounded for
 /// a long-lived daemon, plenty for tests and benches.
 const MERGED_LOG_CAP: usize = 65_536;
+
+/// Consecutive reconfiguration failures of one accelerator tolerated
+/// (with exponential backoff) before the request is surfaced as a
+/// structured rejection.
+pub const DEFAULT_RECONFIG_FAIL_CAP: u32 = 3;
+
+/// Base virtual backoff before a failed reconfiguration is retried;
+/// doubles per consecutive failure of the same accelerator.
+pub const RETRY_BACKOFF_BASE_NS: u64 = 1_000_000;
+
+/// One board's health state (the failure-domain lifecycle):
+/// `Healthy → Draining` (operator drain: no new routing, running work
+/// finishes), `Healthy/Draining → Down` (failure: running + queued
+/// work migrates to healthy shards), `→ Healthy` again via
+/// [`ClusterCore::revive_board`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BoardHealth {
+    Healthy,
+    Draining,
+    Down,
+}
+
+impl BoardHealth {
+    pub fn name(&self) -> &'static str {
+        match self {
+            BoardHealth::Healthy => "healthy",
+            BoardHealth::Draining => "draining",
+            BoardHealth::Down => "down",
+        }
+    }
+}
+
+/// What [`ClusterCore::reconfig_outcome`] decided about a failed
+/// reconfiguration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FailDisposition {
+    /// Parked for an exponential-backoff retry: the harness must
+    /// schedule a [`ClusterCore::release_retries`] wake-up at `at_ns`.
+    Retry { at_ns: u64 },
+    /// Retry cap spent: the request is in the shard's rejected buffer
+    /// (drained by the usual `take_rejected` sweep).
+    Rejected,
+}
+
+/// A progress record that changed shards during failover: the daemon
+/// mirrors the move in its per-board register-file snapshot stores.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MovedCkpt {
+    /// Harness job token of the owning request.
+    pub job: u64,
+    /// `(board, checkpoint id)` of the snapshot's previous home;
+    /// `None` when the harness parked it at drain time (no healthy
+    /// board) keyed by `job`.
+    pub from: Option<(usize, u64)>,
+    pub to: usize,
+    pub new_ckpt: u64,
+}
+
+/// One running dispatch drained off a failed board: the daemon runs
+/// the completed slice, snapshots the accelerator, and stores the
+/// snapshot under `(to, new_ckpt)` — or keyed by `job` when the drain
+/// found no healthy board yet.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DrainedRun {
+    /// Anchor the dispatch was running at on the failed board.
+    pub anchor: usize,
+    pub job: u64,
+    /// Tiles whose progress the checkpoint preserves (0 = plain
+    /// re-run; no snapshot needed).
+    pub done: usize,
+    /// Target board the remainder migrated to (`None` = parked).
+    pub to: Option<usize>,
+    /// Checkpoint id the target shard assigned (`None` when `done == 0`
+    /// or the remainder is parked).
+    pub new_ckpt: Option<u64>,
+}
+
+/// Everything a harness must mirror after
+/// [`ClusterCore::mark_board_down`].
+#[derive(Debug, Clone, Default)]
+pub struct FailoverReport {
+    /// Running dispatches checkpointed at the failure.
+    pub drained: Vec<DrainedRun>,
+    /// Progress records of *queued* remainders that moved shards.
+    pub moved_ckpts: Vec<MovedCkpt>,
+    /// `(job token, target board)` of every migrated request.
+    pub migrated_jobs: Vec<(u64, usize)>,
+}
+
+/// Result of one [`ClusterCore::release_retries`] sweep.
+#[derive(Debug, Clone, Default)]
+pub struct RetryOutcome {
+    /// Requests re-injected into a shard.
+    pub released: usize,
+    /// Parked progress records adopted by a shard (daemon: move the
+    /// job-keyed snapshot into the target board's store).
+    pub moved_ckpts: Vec<MovedCkpt>,
+}
+
+/// A request waiting out a reconfiguration backoff — or waiting for
+/// any board to be healthy again (`ckpt` carries a migrated progress
+/// record drained while the whole cluster was down).
+struct Parked {
+    at_ns: u64,
+    origin: usize,
+    req: Request,
+    ckpt: Option<Checkpoint>,
+    /// Where the daemon's register-file snapshot for `ckpt` lives:
+    /// `Some((board, old id))` = still in that board's store, `None` =
+    /// the harness parked it keyed by job (a running dispatch drained
+    /// while no board was healthy).  Carried into the [`MovedCkpt`]
+    /// emitted at release so the daemon moves the right snapshot.
+    snap_home: Option<(usize, u64)>,
+}
 
 /// Built-in placement policy selector (the cluster analogue of
 /// [`Policy`]).
@@ -228,6 +343,21 @@ pub struct ClusterCounters {
     pub routed: u64,
     /// Requests moved between shards by work stealing.
     pub steals: u64,
+    /// Boards that failed over ([`ClusterCore::mark_board_down`]).
+    pub failovers: u64,
+    /// Requests migrated off a failed board (running *and* queued).
+    pub migrations: u64,
+    /// Virtual ns of execution destroyed by faults (failed runs, plus
+    /// the checkpoint-unpreserved slice of every failover drain).
+    pub lost_ns: u64,
+    /// Reconfiguration attempts that failed (injected or real).
+    pub reconfig_failures: u64,
+    /// Failed reconfigurations parked for a backoff retry.
+    pub reconfig_retries: u64,
+    /// Requests surfaced as structured rejections at the retry cap.
+    pub reconfig_rejections: u64,
+    /// Dispatches whose execution failed transiently and re-queued.
+    pub run_faults: u64,
 }
 
 struct Shard {
@@ -250,7 +380,20 @@ pub struct ClusterCore {
     tenant_weights: BTreeMap<usize, u32>,
     /// (board, decision) in global dispatch order, ring-capped.
     merged: VecDeque<(usize, Decision)>,
+    merged_cap: usize,
     merged_dropped: u64,
+    /// Per-board health (the failure-domain lifecycle).
+    health: Vec<BoardHealth>,
+    /// Consecutive reconfiguration-failure streak per accelerator
+    /// (reset by the first success), driving backoff + the cap.
+    reconfig_failures: BTreeMap<String, u32>,
+    reconfig_fail_cap: u32,
+    /// Requests parked for a backoff retry or the next revival.
+    parked: Vec<Parked>,
+    /// `false` = drop-and-resubmit baseline: failover migrates full
+    /// requests instead of checkpointed remainders (the comparison arm
+    /// the fig23-style failover assertion beats).
+    checkpoint_migration: bool,
 }
 
 impl ClusterCore {
@@ -286,7 +429,13 @@ impl ClusterCore {
             counters: ClusterCounters::default(),
             tenant_weights: BTreeMap::new(),
             merged: VecDeque::new(),
+            merged_cap: MERGED_LOG_CAP,
             merged_dropped: 0,
+            health: vec![BoardHealth::Healthy; boards.len()],
+            reconfig_failures: BTreeMap::new(),
+            reconfig_fail_cap: DEFAULT_RECONFIG_FAIL_CAP,
+            parked: Vec::new(),
+            checkpoint_migration: true,
         }
     }
 
@@ -301,6 +450,22 @@ impl ClusterCore {
     /// Override the work-stealing donor threshold (queued tiles).
     pub fn with_steal_threshold(mut self, tiles: usize) -> ClusterCore {
         self.steal_threshold = tiles;
+        self
+    }
+
+    /// `false` switches failover to the drop-and-resubmit baseline:
+    /// running work on a failed board migrates as *full* requests with
+    /// no checkpointed progress (the comparison arm checkpoint-based
+    /// migration is measured against).
+    pub fn with_checkpoint_migration(mut self, enabled: bool) -> ClusterCore {
+        self.checkpoint_migration = enabled;
+        self
+    }
+
+    /// Override the consecutive-failure cap before a reconfiguration
+    /// fault becomes a structured rejection.
+    pub fn with_reconfig_fail_cap(mut self, cap: u32) -> ClusterCore {
+        self.reconfig_fail_cap = cap.max(1);
         self
     }
 
@@ -371,7 +536,9 @@ impl ClusterCore {
         self.submit_for(user, user, job, accel, tiles, pin)
     }
 
-    /// [`ClusterCore::submit`] with an explicit tenant tag.
+    /// [`ClusterCore::submit`] with an explicit tenant tag.  Routing
+    /// only ever considers `Healthy` boards — the placement policy
+    /// routes around `Draining` and `Down` shards by construction.
     pub fn submit_for(
         &mut self,
         user: usize,
@@ -384,23 +551,51 @@ impl ClusterCore {
         // Validate against shard 0's catalog first (all shards share
         // one catalog): a rejected request must not advance RoundRobin.
         self.shards[0].core.validate(accel, pin)?;
-        let views: Vec<ShardView<'_>> = self
-            .shards
-            .iter()
-            .map(|s| ShardView {
-                board: s.board,
-                regions: s.core.regions(),
-                backlog_tiles: s.core.backlog_tiles(),
-                pending: s.core.pending(),
-                running: s.core.running_count(),
-            })
-            .collect();
-        let weight = self.tenant_weights.get(&tenant).copied().unwrap_or(1);
-        let req = RouteReq { user, tenant, weight, accel, tiles };
-        let b = self.placement.route(&views, &req).min(self.shards.len() - 1);
+        let healthy = self.healthy_indices();
+        if healthy.is_empty() {
+            return Err("no healthy boards in the cluster".to_string());
+        }
+        let b = self.route_among(&healthy, user, tenant, accel, tiles);
         self.shards[b].core.submit_for(user, tenant, job, accel, tiles, pin)?;
         self.counters.routed += 1;
         Ok(b)
+    }
+
+    /// Board indices currently routable (health `Healthy`).
+    fn healthy_indices(&self) -> Vec<usize> {
+        (0..self.shards.len())
+            .filter(|&b| self.health[b] == BoardHealth::Healthy)
+            .collect()
+    }
+
+    /// Ask the placement policy to pick one of `indices` (never empty)
+    /// for the request — shared by admission routing and migration
+    /// re-routing, so both consult the same policy state.
+    fn route_among(
+        &mut self,
+        indices: &[usize],
+        user: usize,
+        tenant: usize,
+        accel: &str,
+        tiles: usize,
+    ) -> usize {
+        let ClusterCore { shards, placement, tenant_weights, .. } = self;
+        let views: Vec<ShardView<'_>> = indices
+            .iter()
+            .map(|&i| {
+                let s = &shards[i];
+                ShardView {
+                    board: s.board,
+                    regions: s.core.regions(),
+                    backlog_tiles: s.core.backlog_tiles(),
+                    pending: s.core.pending(),
+                    running: s.core.running_count(),
+                }
+            })
+            .collect();
+        let weight = tenant_weights.get(&tenant).copied().unwrap_or(1);
+        let req = RouteReq { user, tenant, weight, accel, tiles };
+        indices[placement.route(&views, &req).min(indices.len() - 1)]
     }
 
     /// Per-tenant scheduling counters summed across every shard.
@@ -424,14 +619,16 @@ impl ClusterCore {
     /// remainders don't count — they can never move); `true` when a
     /// request moved.
     pub fn steal_into(&mut self, b: usize) -> bool {
-        if self.shards.len() < 2 {
+        if self.shards.len() < 2 || self.health[b] != BoardHealth::Healthy {
             return false;
         }
         if self.shards[b].core.has_pending() || self.shards[b].core.running_count() > 0 {
             return false;
         }
+        // Down boards hold no queue; Draining boards are valid donors
+        // (stealing accelerates their drain).
         let donor = (0..self.shards.len())
-            .filter(|&i| i != b)
+            .filter(|&i| i != b && self.health[i] != BoardHealth::Down)
             .map(|i| (self.shards[i].core.stealable_tiles(), i))
             .filter(|&(tiles, _)| tiles > self.steal_threshold)
             .max_by_key(|&(tiles, i)| (tiles, std::cmp::Reverse(i)))
@@ -450,14 +647,294 @@ impl ClusterCore {
     }
 
     /// Next placement on board `b`; also appended to the merged log.
+    /// A `Down` board never schedules (its queues were drained at
+    /// failover; this guard keeps a stale harness loop harmless).
     pub fn next_decision(&mut self, b: usize) -> Option<Decision> {
+        if self.health[b] == BoardHealth::Down {
+            return None;
+        }
         let d = self.shards[b].core.next_decision()?;
-        if self.merged.len() >= MERGED_LOG_CAP {
+        self.push_merged(b, d.clone());
+        Some(d)
+    }
+
+    /// Append to the ring-capped merged `(board, decision)` log.
+    fn push_merged(&mut self, b: usize, d: Decision) {
+        if self.merged.len() >= self.merged_cap {
             self.merged.pop_front();
             self.merged_dropped += 1;
         }
-        self.merged.push_back((b, d.clone()));
-        Some(d)
+        self.merged.push_back((b, d));
+    }
+
+    /// Override the merged-log ring cap (default 65 536) — ops tuning
+    /// and wrap-boundary tests.
+    pub fn set_merged_log_cap(&mut self, cap: usize) {
+        self.merged_cap = cap.max(1);
+        while self.merged.len() > self.merged_cap {
+            self.merged.pop_front();
+            self.merged_dropped += 1;
+        }
+    }
+
+    // ---- failure domain: health lifecycle, migration, retries -------
+
+    pub fn health(&self, b: usize) -> BoardHealth {
+        self.health[b]
+    }
+
+    /// Boards currently routable.
+    pub fn healthy_count(&self) -> usize {
+        self.health.iter().filter(|&&h| h == BoardHealth::Healthy).count()
+    }
+
+    /// Operator drain: no new work routes to board `b`; queued and
+    /// running work finishes in place.  No-op on a `Down` board.
+    pub fn drain_board(&mut self, b: usize) {
+        if self.health[b] == BoardHealth::Healthy {
+            self.health[b] = BoardHealth::Draining;
+        }
+    }
+
+    /// Bring board `b` back into rotation (from `Draining` or `Down`).
+    /// A revived board comes back blank — failover cleared its
+    /// residency — so the first placements reconfigure from scratch.
+    pub fn revive_board(&mut self, b: usize) {
+        self.health[b] = BoardHealth::Healthy;
+    }
+
+    /// Board `b` failed at virtual time `now`: checkpoint every running
+    /// dispatch (progress preserved; `Preempt` decisions are logged so
+    /// migrations show up in the decision sequence), drain the queued
+    /// requests, and re-inject everything into healthy shards via the
+    /// placement policy — progress records are adopted by the target
+    /// shard under fresh checkpoint ids.  With no healthy board left,
+    /// the work parks until [`ClusterCore::release_retries`] finds a
+    /// revived shard.  Tenant counters stay conserved: migration uses
+    /// [`SchedCore::inject`] (no re-admission), so every request is
+    /// admitted once and completed once, whichever board finishes it.
+    pub fn mark_board_down(&mut self, b: usize, now: u64) -> FailoverReport {
+        let mut report = FailoverReport::default();
+        if self.health[b] == BoardHealth::Down {
+            return report;
+        }
+        self.health[b] = BoardHealth::Down;
+        self.counters.failovers += 1;
+        // 1. Running dispatches: checkpoint + migrate the remainders.
+        let keep = self.checkpoint_migration;
+        let drains = self.shards[b].core.drain_running_for_failover(now, keep);
+        for f in drains {
+            self.counters.lost_ns += f.lost_ns;
+            let job = f.request.job;
+            self.push_merged(b, f.decision);
+            let (to, new_ckpt) = self.migrate(b, f.request, f.checkpoint, None, now, &mut report);
+            report.drained.push(DrainedRun { anchor: f.anchor, job, done: f.done, to, new_ckpt });
+        }
+        // 2. Queued requests — including not-yet-resumed remainders,
+        //    whose progress records move along with them (the failover
+        //    drain, unlike `drain_pending`, keeps each checkpoint
+        //    paired with its request).
+        for (mut req, ck) in self.shards[b].core.drain_pending_with_checkpoints() {
+            match (req.resume.take(), ck) {
+                (Some(old), Some(c)) => {
+                    self.migrate(b, req, Some(c), Some((b, old)), now, &mut report);
+                }
+                _ => {
+                    self.migrate(b, req, None, None, now, &mut report);
+                }
+            }
+        }
+        // 3. Retries parked against this board lose their shard: pull
+        //    their progress records along for a later adoption.  The
+        //    hardware snapshot stays in the dead board's store under
+        //    the old id — `snap_home` tells the release-time MovedCkpt
+        //    where to find it.
+        let ClusterCore { parked, shards, .. } = self;
+        for p in parked.iter_mut().filter(|p| p.origin == b) {
+            if let Some(old) = p.req.resume.take() {
+                p.ckpt = shards[b].core.take_checkpoint(old);
+                p.snap_home = Some((b, old));
+            }
+        }
+        // 4. The board comes back blank: forget its residency so a
+        //    post-revival reuse can never trust pre-failure modules.
+        self.shards[b].core.clear_residency();
+        report
+    }
+
+    /// Route one drained request into a healthy shard (adopting its
+    /// progress record there under a fresh id), or park it for the
+    /// next revival when no board is healthy.  `snapshot_from` names
+    /// the old `(board, id)` snapshot home for the daemon's mirror.
+    fn migrate(
+        &mut self,
+        origin: usize,
+        mut req: Request,
+        ckpt: Option<Checkpoint>,
+        snapshot_from: Option<(usize, u64)>,
+        now: u64,
+        report: &mut FailoverReport,
+    ) -> (Option<usize>, Option<u64>) {
+        let healthy = self.healthy_indices();
+        if healthy.is_empty() {
+            // Remember where the (possible) hardware snapshot lives so
+            // the release can tell the daemon to move it.
+            self.parked.push(Parked { at_ns: now, origin, req, ckpt, snap_home: snapshot_from });
+            return (None, None);
+        }
+        let to = self.route_among(&healthy, req.user, req.tenant, &req.accel, req.tiles);
+        let new_ckpt = ckpt.map(|c| self.shards[to].core.adopt_checkpoint(c));
+        if let Some(id) = new_ckpt {
+            req.resume = Some(id);
+            if let Some(from) = snapshot_from {
+                report.moved_ckpts.push(MovedCkpt {
+                    job: req.job,
+                    from: Some(from),
+                    to,
+                    new_ckpt: id,
+                });
+            }
+        }
+        report.migrated_jobs.push((req.job, to));
+        self.counters.migrations += 1;
+        self.shards[to].core.inject(req);
+        (Some(to), new_ckpt)
+    }
+
+    /// Report the outcome of a `reconfigure` decision's hardware
+    /// mirror.  Call for EVERY reconfiguring dispatch, success or
+    /// failure, at the same round-lifecycle point in both harnesses —
+    /// the per-accelerator failure streak (and therefore the backoff
+    /// and cap) is part of the parity contract.
+    ///
+    /// Success (`failed == false`) resets the accelerator's streak and
+    /// returns `None`.  Failure rolls the placement back
+    /// ([`SchedCore::rollback_failed_dispatch`]) and either parks the
+    /// request for an exponential-backoff retry or, past
+    /// `reconfig_fail_cap` consecutive failures, surfaces it as a
+    /// structured rejection through the shard's `take_rejected` buffer.
+    pub fn reconfig_outcome(
+        &mut self,
+        b: usize,
+        d: &Decision,
+        failed: bool,
+        now: u64,
+    ) -> Option<FailDisposition> {
+        if !failed {
+            self.reconfig_failures.remove(&d.accel);
+            return None;
+        }
+        let req = self.shards[b].core.rollback_failed_dispatch(d);
+        let streak = {
+            let e = self.reconfig_failures.entry(d.accel.clone()).or_insert(0);
+            *e += 1;
+            *e
+        };
+        self.counters.reconfig_failures += 1;
+        if streak > self.reconfig_fail_cap {
+            self.reconfig_failures.remove(&d.accel);
+            self.counters.reconfig_rejections += 1;
+            self.shards[b].core.push_rejected(
+                req,
+                format!(
+                    "partial reconfiguration of {:?} failed {streak} consecutive times \
+                     (cap {}); giving up",
+                    d.accel, self.reconfig_fail_cap
+                ),
+            );
+            Some(FailDisposition::Rejected)
+        } else {
+            let at_ns = now + (RETRY_BACKOFF_BASE_NS << (streak - 1).min(16));
+            self.counters.reconfig_retries += 1;
+            // A retried Resume's checkpoint and snapshot both stay on
+            // the origin shard under the original id; snap_home is only
+            // needed if the origin later fails (mark_board_down fills
+            // it when pulling the checkpoint out).
+            self.parked.push(Parked { at_ns, origin: b, req, ckpt: None, snap_home: None });
+            Some(FailDisposition::Retry { at_ns })
+        }
+    }
+
+    /// A dispatch's execution failed transiently at its completion
+    /// point: the work is lost and the whole dispatch re-queued at the
+    /// front of its owner's queue on the same shard
+    /// ([`SchedCore::fail_running`]).  `false` when nothing was running
+    /// at `anchor`.
+    pub fn fail_run(&mut self, b: usize, anchor: usize, now: u64) -> bool {
+        match self.shards[b].core.fail_running(anchor, now) {
+            Some(lost) => {
+                self.counters.run_faults += 1;
+                self.counters.lost_ns += lost;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Earliest parked retry deadline, if any — harnesses that lost
+    /// their wake-up event can re-arm from this.
+    pub fn next_retry_at(&self) -> Option<u64> {
+        self.parked.iter().map(|p| p.at_ns).min()
+    }
+
+    /// Requests currently parked (backoff retries + revival waits).
+    pub fn parked_count(&self) -> usize {
+        self.parked.len()
+    }
+
+    /// Re-inject every parked request whose deadline has passed: plain
+    /// retries go back to their origin shard when it still lives
+    /// (their checkpoints, if any, are still stored there), everything
+    /// else re-routes over the healthy boards — adopting carried
+    /// progress records under fresh ids on the target shard.  Entries
+    /// that still have no live home stay parked.  Call once per event
+    /// batch, before ingest, in BOTH harnesses (parity).
+    pub fn release_retries(&mut self, now: u64) -> RetryOutcome {
+        let mut out = RetryOutcome::default();
+        if self.parked.is_empty() {
+            return out;
+        }
+        let parked = std::mem::take(&mut self.parked);
+        for p in parked {
+            if p.at_ns > now {
+                self.parked.push(p);
+                continue;
+            }
+            // A retry whose checkpoint still lives on its (alive)
+            // origin shard must go back there.
+            if p.ckpt.is_none() && p.req.resume.is_some() {
+                if self.health[p.origin] != BoardHealth::Down {
+                    self.shards[p.origin].core.inject(p.req);
+                    out.released += 1;
+                } else {
+                    // Defensive: mark_board_down pulls checkpoints out
+                    // of failing shards, so this arm is unreachable.
+                    self.parked.push(p);
+                }
+                continue;
+            }
+            let healthy = self.healthy_indices();
+            if healthy.is_empty() {
+                self.parked.push(p);
+                continue;
+            }
+            let Parked { mut req, ckpt, snap_home, .. } = p;
+            let to = self.route_among(&healthy, req.user, req.tenant, &req.accel, req.tiles);
+            if let Some(c) = ckpt {
+                let id = self.shards[to].core.adopt_checkpoint(c);
+                out.moved_ckpts.push(MovedCkpt {
+                    job: req.job,
+                    from: snap_home,
+                    to,
+                    new_ckpt: id,
+                });
+                req.resume = Some(id);
+                self.counters.migrations += 1;
+            }
+            self.shards[to].core.inject(req);
+            out.released += 1;
+        }
+        out
     }
 
     pub fn complete(&mut self, b: usize, anchor: usize) {
@@ -531,6 +1008,33 @@ impl ClusterCore {
         let mut out = Vec::new();
         for (b, s) in self.shards.iter_mut().enumerate() {
             out.extend(s.core.retire_user(user).into_iter().map(|r| (b, r)));
+        }
+        // The departed user's parked retries must never re-inject: a
+        // later release would dispatch a job token nobody owns.  A
+        // parked Resume's checkpoint still lives in its origin shard's
+        // store — drop it (the invariant: a resume-request leaving by
+        // any path other than a Resume dispatch drops its checkpoint);
+        // the harness drops the matching snapshot via the returned
+        // request's `resume` id.
+        let parked = std::mem::take(&mut self.parked);
+        for p in parked {
+            if p.req.user == user {
+                let mut req = p.req;
+                let mut b = p.origin.min(self.shards.len() - 1);
+                if let Some((home, old)) = p.snap_home {
+                    // The carried checkpoint drops with the entry; the
+                    // hardware snapshot still sits on its home board —
+                    // re-point `resume` so the harness's usual cleanup
+                    // (`snapshots.remove(resume id)`) finds it.
+                    req.resume = Some(old);
+                    b = home.min(self.shards.len() - 1);
+                } else if let Some(id) = req.resume {
+                    let _ = self.shards[b].core.take_checkpoint(id);
+                }
+                out.push((b, req));
+            } else {
+                self.parked.push(p);
+            }
         }
         out
     }
@@ -696,6 +1200,292 @@ mod tests {
         // Tail query returns only the newest entries.
         assert_eq!(c.merged_log_tail(1).count(), 1);
         assert_eq!(c.merged_log_tail(1).next().unwrap().0, 1);
+    }
+
+    #[test]
+    fn merged_log_ring_wrap_boundary() {
+        let mut c = cluster(2, PlacementKind::RoundRobin);
+        c.set_merged_log_cap(3);
+        for j in 0..3 {
+            let b = c.submit(0, j, "vadd", 1, None).unwrap();
+            drain_board(&mut c, b, j);
+        }
+        assert_eq!(c.merged_log().count(), 3, "at the cap: nothing dropped");
+        assert_eq!(c.merged_dropped(), 0);
+        for j in 3..5 {
+            let b = c.submit(0, j, "vadd", 1, None).unwrap();
+            drain_board(&mut c, b, j);
+        }
+        let jobs: Vec<u64> = c.merged_log().map(|(_, d)| d.job).collect();
+        assert_eq!(jobs, vec![2, 3, 4], "oldest dropped first across the wrap");
+        assert_eq!(c.merged_dropped(), 2);
+        // Tail positioning at the boundary.
+        assert_eq!(c.merged_log_tail(3).count(), 3);
+        assert_eq!(c.merged_log_tail(9).count(), 3, "over-long tail = whole ring");
+        assert_eq!(c.merged_log_tail(1).next().unwrap().1.job, 4);
+        assert_eq!(c.merged_log_tail(0).count(), 0);
+        // Shrinking below the live length drops the oldest.
+        c.set_merged_log_cap(1);
+        assert_eq!(c.merged_log().count(), 1);
+        assert_eq!(c.merged_log().next().unwrap().1.job, 4);
+        assert_eq!(c.merged_dropped(), 4);
+    }
+
+    #[test]
+    fn health_lifecycle_routes_around_drained_and_down_boards() {
+        let mut c = cluster(3, PlacementKind::RoundRobin);
+        assert_eq!(c.healthy_count(), 3);
+        // Draining board 1: round-robin now rotates over {0, 2} only.
+        c.drain_board(1);
+        assert_eq!(c.health(1), BoardHealth::Draining);
+        let routed: Vec<usize> =
+            (0..4).map(|j| c.submit(0, j, "vadd", 1, None).unwrap()).collect();
+        assert_eq!(routed, vec![0, 2, 0, 2], "no new work on a draining board");
+        // Down takes board 0 out too; everything lands on board 2.
+        c.mark_board_down(0, 0);
+        assert_eq!(c.health(0), BoardHealth::Down);
+        assert_eq!(c.healthy_count(), 1);
+        assert_eq!(c.submit(0, 9, "vadd", 1, None).unwrap(), 2);
+        // Revival rejoins the rotation.
+        c.revive_board(0);
+        c.revive_board(1);
+        assert_eq!(c.healthy_count(), 3);
+        // Submitting with every board down is a structured error.
+        c.mark_board_down(0, 0);
+        c.mark_board_down(1, 0);
+        c.mark_board_down(2, 0);
+        assert!(c.submit(0, 10, "vadd", 1, None).is_err());
+        // A down board never schedules or steals.
+        assert!(c.next_decision(0).is_none());
+        assert!(!c.steal_into(0));
+    }
+
+    #[test]
+    fn board_down_migrates_queued_and_running_work_with_progress() {
+        let mut c = cluster(2, PlacementKind::LeastLoaded);
+        // Board 0: one long running dispatch + one queued request.
+        assert_eq!(c.submit(0, 0, "mandelbrot", 100, Some("mandelbrot_v1")).unwrap(), 0);
+        c.begin_round_at(0, 0);
+        let d = c.next_decision(0).unwrap();
+        let lat = c.service_ns(0, &d, 0);
+        c.mark_running(0, &d, 0, lat);
+        c.shards[0].core.submit(0, 1, "sobel", 2, Some("sobel_v1")).unwrap();
+        let before = c.tenant_counters()[&0].admitted;
+
+        let report = c.mark_board_down(0, lat / 2);
+        // Both requests migrated to board 1 — the running one carries a
+        // checkpoint adopted by the target shard.
+        assert_eq!(report.migrated_jobs.len(), 2);
+        assert!(report.migrated_jobs.iter().all(|&(_, to)| to == 1));
+        assert_eq!(report.drained.len(), 1);
+        let dr = report.drained[0];
+        assert!(dr.done > 0, "mid-run progress must be preserved: {dr:?}");
+        assert_eq!((dr.to, dr.job), (Some(1), 0));
+        let new_id = dr.new_ckpt.unwrap();
+        assert!(c.core(1).checkpoint(new_id).is_some(), "target adopted the checkpoint");
+        assert_eq!(c.cluster_counters().failovers, 1);
+        assert_eq!(c.cluster_counters().migrations, 2);
+        assert!(c.cluster_counters().lost_ns > 0);
+        // The migration shows up in the merged log as a Preempt.
+        assert!(c
+            .merged_log()
+            .any(|(b, d)| *b == 0 && d.kind == DecisionKind::Preempt && d.job == 0));
+        // Tenant counters conserved: no re-admission on migration.
+        assert_eq!(c.tenant_counters()[&0].admitted, before);
+        // Board 1 resumes the remainder with the adopted checkpoint and
+        // runs the queued request — nothing lost, nothing doubled.
+        c.begin_round_at(1, lat / 2);
+        let mut kinds = Vec::new();
+        while let Some(d1) = c.next_decision(1) {
+            if d1.kind == DecisionKind::Resume {
+                assert_eq!(d1.ckpt, Some(new_id));
+                assert_eq!(d1.tiles as u64 + dr.done as u64, 100);
+            }
+            let l = c.service_ns(1, &d1, 0);
+            c.mark_running(1, &d1, lat / 2, lat / 2 + l);
+            kinds.push(d1.kind);
+        }
+        assert!(kinds.contains(&DecisionKind::Resume), "{kinds:?}");
+        assert!(kinds.contains(&DecisionKind::Run), "{kinds:?}");
+        assert!(c.core(1).checkpoint(new_id).is_none(), "checkpoint consumed at resume");
+    }
+
+    #[test]
+    fn reconfig_failures_back_off_then_reject_at_cap() {
+        let mut c = cluster(1, PlacementKind::RoundRobin).with_reconfig_fail_cap(2);
+        c.submit(0, 7, "sobel", 2, Some("sobel_v1")).unwrap();
+        let mut now = 0u64;
+        let mut retry_times = Vec::new();
+        for attempt in 0..2 {
+            c.begin_round_at(0, now);
+            let d = c.next_decision(0).unwrap();
+            assert!(d.reconfigure);
+            match c.reconfig_outcome(0, &d, true, now) {
+                Some(FailDisposition::Retry { at_ns }) => {
+                    assert!(at_ns > now, "backoff must be in the future");
+                    retry_times.push(at_ns - now);
+                    now = at_ns;
+                    let rel = c.release_retries(now);
+                    assert_eq!(rel.released, 1, "attempt {attempt} must re-queue");
+                }
+                other => panic!("expected a retry, got {other:?}"),
+            }
+        }
+        assert!(retry_times[1] > retry_times[0], "backoff must grow: {retry_times:?}");
+        // Third consecutive failure exceeds the cap: structured reject.
+        c.begin_round_at(0, now);
+        let d = c.next_decision(0).unwrap();
+        assert_eq!(c.reconfig_outcome(0, &d, true, now), Some(FailDisposition::Rejected));
+        let rejected = c.take_rejected(0);
+        assert_eq!(rejected.len(), 1);
+        assert_eq!(rejected[0].0.job, 7);
+        assert!(rejected[0].1.contains("failed 3 consecutive times"), "{}", rejected[0].1);
+        assert_eq!(c.cluster_counters().reconfig_failures, 3);
+        assert_eq!(c.cluster_counters().reconfig_retries, 2);
+        assert_eq!(c.cluster_counters().reconfig_rejections, 1);
+        // A later success resets the streak.
+        c.submit(0, 8, "sobel", 2, Some("sobel_v1")).unwrap();
+        c.begin_round_at(0, now + 1);
+        let d = c.next_decision(0).unwrap();
+        assert!(c.reconfig_outcome(0, &d, false, now + 1).is_none());
+    }
+
+    #[test]
+    fn retry_parked_on_down_board_rehomes_at_release() {
+        let mut c = cluster(2, PlacementKind::RoundRobin);
+        assert_eq!(c.submit(0, 0, "sobel", 2, Some("sobel_v1")).unwrap(), 0);
+        c.begin_round_at(0, 0);
+        let d = c.next_decision(0).unwrap();
+        let Some(FailDisposition::Retry { at_ns }) = c.reconfig_outcome(0, &d, true, 0) else {
+            panic!("expected retry");
+        };
+        // The origin board dies before the backoff expires: the retry
+        // re-routes to the surviving board.
+        c.mark_board_down(0, 1);
+        let rel = c.release_retries(at_ns);
+        assert_eq!(rel.released, 1);
+        assert_eq!(c.core(1).pending(), 1, "retry re-homed on the healthy board");
+        assert_eq!(c.core(0).pending(), 0);
+    }
+
+    #[test]
+    fn board_down_carries_queued_remainder_checkpoints() {
+        // A preempted remainder sitting in a failed board's QUEUE (not
+        // running) must migrate together with its checkpoint: the
+        // normal drain_pending drops departing checkpoints, so the
+        // failover drain pairs them explicitly.
+        let boards = [ShellBoard::Ultra96, ShellBoard::Zcu102];
+        let mut c =
+            ClusterCore::new(&boards, &catalog(), Policy::Quantum, PlacementKind::LeastLoaded);
+        // Three long streams fill board 0's fabric (the shard core's
+        // quantum-preemption scenario from core.rs).
+        for j in 0..3 {
+            c.shards[0].core.submit(0, j, "mandelbrot", 100, Some("mandelbrot_v1")).unwrap();
+        }
+        c.begin_round_at(0, 0);
+        while let Some(d) = c.next_decision(0) {
+            let lat = c.service_ns(0, &d, c.busy_anchors(0).saturating_sub(1));
+            c.mark_running(0, &d, 0, lat);
+        }
+        // A starved tenant past the quantum checkpoints one stream; the
+        // remainder re-queues (pinned, resume id) but cannot place —
+        // the fabric refills the same round.
+        c.shards[0].core.submit(1, 10, "sobel", 2, Some("sobel_v1")).unwrap();
+        c.begin_round_at(0, 50_000_000);
+        let p = c.next_decision(0).unwrap();
+        assert_eq!(p.kind, DecisionKind::Preempt);
+        let old_id = p.ckpt.unwrap();
+        while let Some(d) = c.next_decision(0) {
+            let lat = c.service_ns(0, &d, c.busy_anchors(0).saturating_sub(1));
+            c.mark_running(0, &d, 50_000_000, 50_000_000 + lat);
+        }
+        assert!(c.core(0).checkpoint(old_id).is_some(), "remainder queued with its ckpt");
+        assert!(c.core(0).has_pending());
+
+        let report = c.mark_board_down(0, 60_000_000);
+        // The queued remainder's checkpoint travelled: a MovedCkpt
+        // names the dead board's store as the snapshot home and the
+        // adopting shard holds the progress record.
+        let mv = report
+            .moved_ckpts
+            .iter()
+            .find(|m| m.from == Some((0, old_id)))
+            .expect("queued remainder's checkpoint must migrate with it");
+        assert_eq!(mv.to, 1);
+        assert!(c.core(1).checkpoint(mv.new_ckpt).is_some());
+        assert!(c.core(0).checkpoint(old_id).is_none(), "no orphan on the dead shard");
+        // And the remainder re-dispatches as a Resume consuming the
+        // adopted id — progress preserved, not restarted.
+        c.begin_round_at(1, 60_000_000);
+        let mut resumed = false;
+        while let Some(d) = c.next_decision(1) {
+            if d.ckpt == Some(mv.new_ckpt) {
+                assert_eq!(d.kind, DecisionKind::Resume);
+                resumed = true;
+            }
+            let lat = c.service_ns(1, &d, c.busy_anchors(1).saturating_sub(1));
+            c.mark_running(1, &d, 60_000_000, 60_000_000 + lat);
+        }
+        assert!(resumed, "migrated remainder must resume on the survivor");
+    }
+
+    #[test]
+    fn parked_resume_retry_rehomes_with_snapshot_pointer() {
+        // The full unlucky chain: failover migrates a checkpointed
+        // remainder to board B; B's Resume hits a reconfiguration
+        // fault and parks; B dies before the backoff expires.  The
+        // release must adopt the progress record on a survivor AND
+        // tell the harness exactly where the old hardware snapshot
+        // lives (MovedCkpt::from), or the daemon's restore would look
+        // in the wrong store.
+        let mut c = cluster(3, PlacementKind::LeastLoaded);
+        assert_eq!(c.submit(0, 0, "mandelbrot", 100, Some("mandelbrot_v1")).unwrap(), 0);
+        c.begin_round_at(0, 0);
+        let d = c.next_decision(0).unwrap();
+        let lat = c.service_ns(0, &d, 0);
+        c.mark_running(0, &d, 0, lat);
+        let report = c.mark_board_down(0, lat / 2);
+        let dr = report.drained[0];
+        let (to, id) = (dr.to.unwrap(), dr.new_ckpt.unwrap());
+        c.begin_round_at(to, lat / 2);
+        let r = c.next_decision(to).unwrap();
+        assert_eq!(r.kind, DecisionKind::Resume);
+        assert!(r.reconfigure, "fresh shard must reload");
+        let Some(FailDisposition::Retry { at_ns }) = c.reconfig_outcome(to, &r, true, lat / 2)
+        else {
+            panic!("expected a retry");
+        };
+        assert!(c.core(to).checkpoint(id).is_some(), "rollback re-stores the checkpoint");
+        c.mark_board_down(to, lat / 2 + 1);
+        let rel = c.release_retries(at_ns);
+        assert_eq!(rel.released, 1);
+        assert_eq!(rel.moved_ckpts.len(), 1);
+        let mv = rel.moved_ckpts[0];
+        assert_eq!(mv.from, Some((to, id)), "snapshot home must be reported");
+        let survivor = (0..3).find(|&x| x != 0 && x != to).unwrap();
+        assert_eq!(mv.to, survivor);
+        assert!(c.core(survivor).checkpoint(mv.new_ckpt).is_some());
+        assert_eq!(c.core(survivor).pending(), 1, "remainder re-homed on the survivor");
+    }
+
+    #[test]
+    fn retire_user_drops_parked_retries() {
+        let mut c = cluster(1, PlacementKind::RoundRobin);
+        c.submit(0, 5, "sobel", 1, Some("sobel_v1")).unwrap();
+        c.begin_round_at(0, 0);
+        let d = c.next_decision(0).unwrap();
+        assert!(matches!(
+            c.reconfig_outcome(0, &d, true, 0),
+            Some(FailDisposition::Retry { .. })
+        ));
+        assert_eq!(c.parked_count(), 1);
+        let dropped = c.retire_user(0);
+        assert_eq!(dropped.len(), 1, "parked retry returned to the harness");
+        assert_eq!(dropped[0].1.job, 5);
+        assert_eq!(c.parked_count(), 0);
+        // Nothing re-injects later.
+        assert_eq!(c.release_retries(u64::MAX / 2).released, 0);
+        assert!(!c.has_pending());
     }
 
     #[test]

@@ -220,7 +220,13 @@ pub struct Decision {
     pub kind: DecisionKind,
     /// Checkpoint id: created by a `Preempt`, consumed by the matching
     /// `Resume` (the daemon keys its register-file snapshots by it).
+    /// Failover `Preempt`s emitted by a board-down drain carry `None` —
+    /// the *target* shard assigns the id when it adopts the checkpoint.
     pub ckpt: Option<u64>,
+    /// The dispatched request's variant pin, carried so a failed
+    /// placement can be rolled back into an identical [`Request`]
+    /// ([`SchedCore::rollback_failed_dispatch`]).
+    pub pin: Option<String>,
 }
 
 /// Counters both the simulator and the daemon report from.
@@ -318,6 +324,10 @@ pub struct RunningSnap {
     pub setup: u64,
     /// This dispatch is itself the remainder of an earlier preemption.
     pub resumed: bool,
+    /// The checkpoint a `Resume` dispatch consumed (its progress record
+    /// is parked in the consumed-checkpoint stash until completion, so
+    /// a failed or failed-over dispatch can reconstruct it).
+    pub ckpt: Option<u64>,
 }
 
 /// Progress record of a preempted request, stored until its remainder
@@ -335,6 +345,25 @@ pub struct Checkpoint {
     pub tiles_done: usize,
     /// Tiles of the original dispatch.
     pub tiles_total: usize,
+}
+
+/// One running dispatch drained off a failed board
+/// ([`SchedCore::drain_running_for_failover`]): the `Preempt` decision
+/// logged for it, the remainder request the cluster layer migrates,
+/// the progress record the target shard adopts (when any tiles
+/// completed), and the virtual work the failure destroyed.
+#[derive(Debug, Clone)]
+pub struct FailoverDrain {
+    pub decision: Decision,
+    pub request: Request,
+    pub checkpoint: Option<Checkpoint>,
+    /// Virtual ns the failed dispatch burned that the checkpoint does
+    /// NOT preserve (setup overhead + the in-progress tile).
+    pub lost_ns: u64,
+    /// Tiles the checkpoint preserves (0 = plain re-run).
+    pub done: usize,
+    /// Anchor the dispatch was running at on the failed board.
+    pub anchor: usize,
 }
 
 /// Read-only region state handed to policies, with the span queries the
@@ -1024,6 +1053,7 @@ pub struct SchedCore {
     skip_preemptive: bool,
     counters: SchedCounters,
     log: VecDeque<Decision>,
+    log_cap: usize,
     log_dropped: u64,
     policies: Vec<Box<dyn SchedPolicy>>,
     default_policy: usize,
@@ -1035,6 +1065,12 @@ pub struct SchedCore {
     running: BTreeMap<usize, RunningSnap>,
     /// Progress records of preempted requests, by checkpoint id.
     checkpoints: BTreeMap<u64, Checkpoint>,
+    /// Checkpoints consumed by a dispatched `Resume` but not yet
+    /// completed — parked so a failed dispatch (reconfig fault) or a
+    /// board-down drain can reconstruct the progress record instead of
+    /// losing it.  Entries drop at the dispatch's completion, so the
+    /// stash is bounded by the running set.
+    consumed: BTreeMap<u64, Checkpoint>,
     next_ckpt: u64,
     /// Requests dropped by `next_decision` instead of panicking
     /// (unknown accelerator / policy chose an unknown variant); the
@@ -1064,6 +1100,7 @@ impl SchedCore {
             skip_preemptive: false,
             counters: SchedCounters::default(),
             log: VecDeque::new(),
+            log_cap: LOG_CAP,
             log_dropped: 0,
             policies: vec![
                 Box::<Elastic>::default(),
@@ -1083,6 +1120,7 @@ impl SchedCore {
             now: 0,
             running: BTreeMap::new(),
             checkpoints: BTreeMap::new(),
+            consumed: BTreeMap::new(),
             next_ckpt: 0,
             rejected: Vec::new(),
             tenant_weights: BTreeMap::new(),
@@ -1324,6 +1362,7 @@ impl SchedCore {
                 end,
                 setup,
                 resumed: d.kind == DecisionKind::Resume,
+                ckpt: if d.kind == DecisionKind::Resume { d.ckpt } else { None },
             },
         );
     }
@@ -1498,7 +1537,13 @@ impl SchedCore {
             let (kind, ckpt) = match request.resume {
                 Some(id) => {
                     self.counters.resumes += 1;
-                    self.checkpoints.remove(&id);
+                    // Park the progress record in the consumed stash
+                    // (dropped at completion): a failed dispatch or a
+                    // board-down drain can then reconstruct it instead
+                    // of losing the checkpointed progress.
+                    if let Some(c) = self.checkpoints.remove(&id) {
+                        self.consumed.insert(id, c);
+                    }
                     (DecisionKind::Resume, Some(id))
                 }
                 None => (DecisionKind::Run, None),
@@ -1517,13 +1562,31 @@ impl SchedCore {
                 replicated,
                 kind,
                 ckpt,
+                pin: request.pin,
             };
-            if self.log.len() >= LOG_CAP {
-                self.log.pop_front();
-                self.log_dropped += 1;
-            }
-            self.log.push_back(d.clone());
+            self.log_decision(&d);
             return Some(d);
+        }
+    }
+
+    /// Append a decision to the ring-capped log (oldest dropped and
+    /// counted past the cap).
+    fn log_decision(&mut self, d: &Decision) {
+        if self.log.len() >= self.log_cap {
+            self.log.pop_front();
+            self.log_dropped += 1;
+        }
+        self.log.push_back(d.clone());
+    }
+
+    /// Override the decision-log ring cap (default 65 536) — for ops
+    /// tuning a long-lived daemon's memory, and for tests exercising
+    /// the wrap boundary without pushing 65k decisions.
+    pub fn set_log_cap(&mut self, cap: usize) {
+        self.log_cap = cap.max(1);
+        while self.log.len() > self.log_cap {
+            self.log.pop_front();
+            self.log_dropped += 1;
         }
     }
 
@@ -1554,6 +1617,11 @@ impl SchedCore {
         }
         let rec = self.running.remove(&anchor).unwrap();
         self.regions.regions[anchor].busy = false;
+        // A preempted Resume supersedes the checkpoint it had consumed:
+        // its progress is folded into the new record's tile counts.
+        if let Some(old) = rec.ckpt {
+            self.consumed.remove(&old);
+        }
         let id = self.next_ckpt;
         self.next_ckpt += 1;
         self.checkpoints.insert(
@@ -1584,7 +1652,7 @@ impl SchedCore {
             tenant: rec.tenant,
             job: rec.job,
             accel: rec.accel,
-            variant: rec.variant,
+            variant: rec.variant.clone(),
             anchor,
             span: rec.span,
             tiles: remaining,
@@ -1592,12 +1660,9 @@ impl SchedCore {
             replicated: false,
             kind: DecisionKind::Preempt,
             ckpt: Some(id),
+            pin: Some(rec.variant),
         };
-        if self.log.len() >= LOG_CAP {
-            self.log.pop_front();
-            self.log_dropped += 1;
-        }
-        self.log.push_back(d.clone());
+        self.log_decision(&d);
         Some(d)
     }
 
@@ -1609,6 +1674,10 @@ impl SchedCore {
         self.regions.regions[anchor].busy = false;
         if let Some(rec) = self.running.remove(&anchor) {
             self.per_tenant.entry(rec.tenant).or_default().completed += 1;
+            // A completed Resume's parked progress record is obsolete.
+            if let Some(id) = rec.ckpt {
+                self.consumed.remove(&id);
+            }
         }
     }
 
@@ -1629,6 +1698,203 @@ impl SchedCore {
                 self.regions.regions[r].tail_of = None;
                 self.regions.regions[r].loaded = None;
             }
+        }
+    }
+
+    // ---- failure domain (see cluster.rs for the recovery policy) ----
+
+    /// Roll back a dispatched decision whose hardware effect failed
+    /// (injected or real reconfiguration fault): the span is freed, the
+    /// phantom module forgotten, the running record (when already
+    /// registered) dropped, and the original [`Request`] reconstructed
+    /// — a consumed checkpoint goes back to the live store so the
+    /// retried `Resume` still restores its progress.  The caller (the
+    /// cluster layer's [`reconfig_outcome`]) decides between a backoff
+    /// retry and a structured rejection.
+    ///
+    /// [`reconfig_outcome`]: super::ClusterCore::reconfig_outcome
+    pub fn rollback_failed_dispatch(&mut self, d: &Decision) -> Request {
+        self.regions.regions[d.anchor].busy = false;
+        self.evict(d.anchor);
+        self.running.remove(&d.anchor);
+        let resume = match (d.kind, d.ckpt) {
+            (DecisionKind::Resume, Some(id)) => {
+                if let Some(c) = self.consumed.remove(&id) {
+                    self.checkpoints.insert(id, c);
+                }
+                Some(id)
+            }
+            _ => None,
+        };
+        Request {
+            user: d.user,
+            tenant: d.tenant,
+            job: d.job,
+            accel: d.accel.clone(),
+            tiles: d.tiles,
+            pin: d.pin.clone(),
+            resume,
+        }
+    }
+
+    /// Push a request into the rejected buffer with a structured
+    /// reason — the fault layer's terminal path once the retry cap is
+    /// spent — dropping any checkpoint it was due to consume.
+    pub fn push_rejected(&mut self, req: Request, reason: String) {
+        self.drop_checkpoint_of(&req);
+        self.per_tenant.entry(req.tenant).or_default().rejected += 1;
+        self.rejected.push((req, reason));
+    }
+
+    /// A running dispatch's execution failed transiently (injected
+    /// `TransientRunError`): free the span — the module itself stays
+    /// resident, the load was fine — and requeue the whole dispatch at
+    /// the front of its owner's queue for a clean re-run.  Returns the
+    /// virtual time the failed dispatch burned; `None` when nothing
+    /// runs at `anchor`.
+    pub fn fail_running(&mut self, anchor: usize, now: u64) -> Option<u64> {
+        let rec = self.running.remove(&anchor)?;
+        self.regions.regions[anchor].busy = false;
+        // A failed Resume already consumed its checkpoint; the progress
+        // survives in the record's (remainder) tile count, so the
+        // parked progress record is obsolete.
+        if let Some(id) = rec.ckpt {
+            self.consumed.remove(&id);
+        }
+        self.ensure_user(rec.user);
+        self.queues[rec.user].push_front(Request {
+            user: rec.user,
+            tenant: rec.tenant,
+            job: rec.job,
+            accel: rec.accel,
+            tiles: rec.tiles,
+            pin: Some(rec.variant),
+            resume: None,
+        });
+        Some(now.saturating_sub(rec.start))
+    }
+
+    /// Drain every running dispatch for board failover: each record is
+    /// checkpointed at `now` (progress computed exactly like a
+    /// preemption, clamped so at least one tile remains), its span
+    /// freed, a `Preempt` decision logged — the migration shows up in
+    /// the decision sequence — and the remainder returned for the
+    /// cluster layer to re-inject into a healthy shard.  The progress
+    /// record travels WITH the remainder (the target shard adopts it
+    /// under a fresh id) instead of entering this shard's store — this
+    /// board's hardware is gone.  `keep_progress: false` is the
+    /// drop-and-resubmit baseline: remainders restart from zero tiles.
+    pub fn drain_running_for_failover(
+        &mut self,
+        now: u64,
+        keep_progress: bool,
+    ) -> Vec<FailoverDrain> {
+        let anchors: Vec<usize> = self.running.keys().copied().collect();
+        let mut out = Vec::new();
+        for anchor in anchors {
+            let rec = self.running.remove(&anchor).unwrap();
+            self.regions.regions[anchor].busy = false;
+            if let Some(id) = rec.ckpt {
+                self.consumed.remove(&id);
+            }
+            let run_ns = now.saturating_sub(rec.start);
+            let window = rec.end.saturating_sub(rec.start + rec.setup).max(1);
+            let done = if !keep_progress || run_ns <= rec.setup {
+                0
+            } else {
+                ((((run_ns - rec.setup) as u128 * rec.tiles as u128) / window as u128)
+                    as usize)
+                    .min(rec.tiles.saturating_sub(1))
+            };
+            let remaining = rec.tiles - done;
+            // Work the failure destroyed: everything this dispatch
+            // spent minus the compute window of the tiles whose
+            // progress the checkpoint preserves.
+            let saved = (done as u128 * window as u128 / rec.tiles as u128) as u64;
+            let lost_ns = run_ns.saturating_sub(saved);
+            let checkpoint = (done > 0).then(|| Checkpoint {
+                accel: rec.accel.clone(),
+                variant: rec.variant.clone(),
+                anchor,
+                span: rec.span,
+                tiles_done: done,
+                tiles_total: rec.tiles,
+            });
+            if checkpoint.is_some() {
+                self.counters.preemptions += 1;
+                self.per_tenant.entry(rec.tenant).or_default().preempted += 1;
+            }
+            let d = Decision {
+                user: rec.user,
+                tenant: rec.tenant,
+                job: rec.job,
+                accel: rec.accel.clone(),
+                variant: rec.variant.clone(),
+                anchor,
+                span: rec.span,
+                tiles: remaining,
+                reconfigure: false,
+                replicated: false,
+                kind: DecisionKind::Preempt,
+                ckpt: None,
+                pin: Some(rec.variant.clone()),
+            };
+            self.log_decision(&d);
+            let request = Request {
+                user: rec.user,
+                tenant: rec.tenant,
+                job: rec.job,
+                accel: rec.accel,
+                tiles: remaining,
+                pin: Some(rec.variant),
+                // The target shard sets this when adopting `checkpoint`.
+                resume: None,
+            };
+            out.push(FailoverDrain { decision: d, request, checkpoint, lost_ns, done, anchor });
+        }
+        out
+    }
+
+    /// [`SchedCore::drain_pending`] for board failover: unlike the
+    /// normal drain — which drops the checkpoint a departing
+    /// resume-request was due to consume — each request leaves
+    /// TOGETHER with its progress record, so the cluster layer can
+    /// re-home both on the adopting shard.
+    pub fn drain_pending_with_checkpoints(&mut self) -> Vec<(Request, Option<Checkpoint>)> {
+        let SchedCore { queues, checkpoints, .. } = self;
+        let mut out = Vec::new();
+        for q in queues.iter_mut() {
+            for r in q.drain(..) {
+                let ck = r.resume.and_then(|id| checkpoints.remove(&id));
+                out.push((r, ck));
+            }
+        }
+        out
+    }
+
+    /// Adopt a migrated progress record under a fresh checkpoint id —
+    /// the receiving half of checkpoint-based migration.
+    pub fn adopt_checkpoint(&mut self, c: Checkpoint) -> u64 {
+        let id = self.next_ckpt;
+        self.next_ckpt += 1;
+        self.checkpoints.insert(id, c);
+        id
+    }
+
+    /// Remove and return a live checkpoint — a queued remainder leaving
+    /// this shard (board failover) takes its progress record along.
+    pub fn take_checkpoint(&mut self, id: u64) -> Option<Checkpoint> {
+        self.checkpoints.remove(&id)
+    }
+
+    /// Forget every resident module (a failed board comes back blank):
+    /// after a revival the reuse path must reconfigure from scratch
+    /// instead of trusting pre-failure residency.
+    pub fn clear_residency(&mut self) {
+        for r in &mut self.regions.regions {
+            r.loaded = None;
+            r.tail_of = None;
+            r.busy = false;
         }
     }
 
@@ -1662,6 +1928,15 @@ impl SchedCore {
         // starvation checks see the ghost as the new tenant's work).
         // The spans stay busy until the harness replays their
         // completions; they just can no longer be preempted.
+        let stale: Vec<u64> = self
+            .running
+            .values()
+            .filter(|r| r.user == user)
+            .filter_map(|r| r.ckpt)
+            .collect();
+        for id in stale {
+            self.consumed.remove(&id);
+        }
         self.running.retain(|_, r| r.user != user);
         let out: Vec<Request> = self.queues[user].drain(..).collect();
         for r in &out {
@@ -2189,5 +2464,137 @@ mod tests {
         }
         assert_eq!(tags, vec![(0, 0), (1, 7)]);
         assert_eq!(c.tenant_counters()[&7].admitted, 1);
+    }
+
+    #[test]
+    fn decision_log_ring_wrap_boundary() {
+        // The wrap boundary of the ring-capped log: exactly at the cap
+        // nothing drops; one past it the oldest entry (and only it)
+        // drops; tail queries stay exact across the wrap.
+        let mut c = core(Policy::Elastic);
+        c.set_log_cap(4);
+        for j in 0..4u64 {
+            c.submit(0, j, "vadd", 1, None).unwrap();
+            c.begin_round();
+            let d = c.next_decision().unwrap();
+            c.complete(d.anchor);
+        }
+        assert_eq!(c.decision_log().count(), 4, "at the cap: nothing dropped");
+        assert_eq!(c.decisions_dropped(), 0);
+        for j in 4..6u64 {
+            c.submit(0, j, "vadd", 1, None).unwrap();
+            c.begin_round();
+            let d = c.next_decision().unwrap();
+            c.complete(d.anchor);
+        }
+        assert_eq!(c.decision_log().count(), 4);
+        assert_eq!(c.decisions_dropped(), 2);
+        let jobs: Vec<u64> = c.decision_log().map(|d| d.job).collect();
+        assert_eq!(jobs, vec![2, 3, 4, 5], "oldest dropped first");
+        // Tail positioning at the boundary: n == len, n > len, 1, 0.
+        let tail = |c: &SchedCore, n: usize| -> Vec<u64> {
+            c.decision_log_tail(n).map(|d| d.job).collect()
+        };
+        assert_eq!(tail(&c, 4), vec![2, 3, 4, 5]);
+        assert_eq!(tail(&c, 9), vec![2, 3, 4, 5], "over-long tail = whole ring");
+        assert_eq!(tail(&c, 1), vec![5]);
+        assert_eq!(tail(&c, 0), Vec::<u64>::new());
+        // Shrinking the cap below the live length drops the oldest.
+        c.set_log_cap(2);
+        assert_eq!(tail(&c, 9), vec![4, 5]);
+        assert_eq!(c.decisions_dropped(), 4);
+    }
+
+    #[test]
+    fn rollback_failed_dispatch_restores_request_and_regions() {
+        let mut c = core(Policy::Elastic);
+        c.submit(0, 3, "sobel", 2, Some("sobel_v1")).unwrap();
+        c.begin_round();
+        let d = c.next_decision().unwrap();
+        assert!(d.reconfigure);
+        let lat = c.service_ns(&d, 0);
+        c.mark_running(&d, 0, lat);
+        let req = c.rollback_failed_dispatch(&d);
+        assert_eq!((req.user, req.job, req.tiles), (0, 3, 2));
+        assert_eq!(req.pin.as_deref(), Some("sobel_v1"), "pin survives the rollback");
+        assert!(req.resume.is_none());
+        assert_eq!(c.running_count(), 0, "running record dropped");
+        assert!(!c.regions().get(d.anchor).busy);
+        assert!(
+            c.regions().get(d.anchor).loaded.is_none(),
+            "phantom module must be forgotten"
+        );
+        // Re-injected, the request dispatches again with a fresh load.
+        c.inject(req);
+        c.begin_round();
+        let d2 = c.next_decision().unwrap();
+        assert!(d2.reconfigure);
+        assert_eq!(d2.job, 3);
+    }
+
+    #[test]
+    fn failover_drain_checkpoints_and_migrates_progress() {
+        let mut c = core(Policy::Quantum);
+        c.submit(0, 0, "mandelbrot", 100, Some("mandelbrot_v1")).unwrap();
+        c.begin_round_at(0);
+        let d = c.next_decision().unwrap();
+        let lat = c.service_ns(&d, 0);
+        c.mark_running(&d, 0, lat);
+        let drained = c.drain_running_for_failover(lat / 2, true);
+        assert_eq!(drained.len(), 1);
+        let f = &drained[0];
+        assert_eq!(f.decision.kind, DecisionKind::Preempt);
+        assert!(f.decision.ckpt.is_none(), "target shard assigns the id");
+        assert!(f.done > 0 && f.done < 100, "mid-run progress expected: {f:?}");
+        let ck = f.checkpoint.clone().unwrap();
+        assert_eq!(ck.tiles_done + f.request.tiles, 100, "no lost or duplicated tiles");
+        assert!(f.lost_ns > 0, "setup + partial tile are lost");
+        assert!(f.lost_ns < lat, "most of the run is preserved");
+        assert_eq!(c.running_count(), 0);
+        assert!(!c.regions().get(f.anchor).busy);
+        // The remainder resumes on ANOTHER shard via adoption.
+        let mut other = core(Policy::Quantum);
+        let id = other.adopt_checkpoint(ck.clone());
+        let mut req = f.request.clone();
+        req.resume = Some(id);
+        other.inject(req);
+        other.begin_round_at(0);
+        let r = other.next_decision().unwrap();
+        assert_eq!(r.kind, DecisionKind::Resume);
+        assert_eq!(r.ckpt, Some(id));
+        assert_eq!(r.tiles, 100 - ck.tiles_done);
+        // Drop-and-resubmit baseline: no progress survives.
+        let mut c2 = core(Policy::Quantum);
+        c2.submit(0, 0, "mandelbrot", 100, Some("mandelbrot_v1")).unwrap();
+        c2.begin_round_at(0);
+        let d2 = c2.next_decision().unwrap();
+        let lat2 = c2.service_ns(&d2, 0);
+        c2.mark_running(&d2, 0, lat2);
+        let resub = c2.drain_running_for_failover(lat2 / 2, false);
+        assert_eq!(resub[0].done, 0);
+        assert!(resub[0].checkpoint.is_none());
+        assert_eq!(resub[0].request.tiles, 100, "whole dispatch re-runs");
+        assert!(resub[0].lost_ns >= f.lost_ns, "resubmit loses at least as much work");
+    }
+
+    #[test]
+    fn transient_run_failure_requeues_for_rerun() {
+        let mut c = core(Policy::Elastic);
+        c.submit(0, 9, "sobel", 4, Some("sobel_v1")).unwrap();
+        c.begin_round_at(0);
+        let d = c.next_decision().unwrap();
+        let lat = c.service_ns(&d, 0);
+        c.mark_running(&d, 0, lat);
+        let lost = c.fail_running(d.anchor, lat).unwrap();
+        assert_eq!(lost, lat, "the whole dispatch's work is lost");
+        assert!(!c.regions().get(d.anchor).busy);
+        assert!(c.regions().get(d.anchor).loaded.is_some(), "module stays resident");
+        assert_eq!(c.pending(), 1, "request requeued for a clean re-run");
+        c.begin_round_at(lat);
+        let d2 = c.next_decision().unwrap();
+        assert_eq!((d2.job, d2.tiles, d2.kind), (9, 4, DecisionKind::Run));
+        assert!(!d2.reconfigure, "the resident module is reused for the re-run");
+        // Nothing at an idle anchor: no-op.
+        assert!(c.fail_running(2, 0).is_none());
     }
 }

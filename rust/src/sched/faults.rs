@@ -1,0 +1,343 @@
+//! # Deterministic fault injection (the reliability scenario axis)
+//!
+//! FOS's pitch is modularity that survives "changing workloads"; a
+//! production cluster must also survive a changing *substrate* —
+//! reconfigurations that fail, boards that drop out mid-round,
+//! transient execution glitches.  This module is the injection half of
+//! the failure domain: a [`FaultPlan`] is a pure, seedable description
+//! of what goes wrong and when, consumed **identically** by the
+//! discrete-event simulator ([`super::simulate_cluster`]) and the
+//! daemon's virtual-time dispatcher, so a fault scenario validated
+//! offline replays bit-for-bit on the live path
+//! (`tests/cluster_parity.rs`, fault-parity).
+//!
+//! Three fault kinds:
+//!
+//! - **Board outages** ([`Outage`]) — board `b` goes
+//!   [`Down`](super::cluster::BoardHealth::Down) at virtual time
+//!   `at_ns` and revives `duration_ns` later.  The recovery half lives
+//!   in [`ClusterCore::mark_board_down`](super::ClusterCore::mark_board_down):
+//!   running work is drained through the checkpoint store and migrated
+//!   to healthy shards with its progress preserved.
+//! - **Reconfiguration failures** — the `k`-th partial-reconfiguration
+//!   attempt on board `b` fails when a seed-derived draw lands under
+//!   [`FaultPlan::reconfig_rate`].  Recovery: exponential-backoff
+//!   retries with a per-accelerator failure cap
+//!   ([`ClusterCore::reconfig_outcome`](super::ClusterCore::reconfig_outcome)).
+//! - **Transient run errors** — the `k`-th dispatch *completion* on
+//!   board `b` fails likewise; the dispatch's work is lost and the
+//!   request re-queued at the front of its owner's queue
+//!   ([`ClusterCore::fail_run`](super::ClusterCore::fail_run)).
+//!
+//! ## Determinism contract
+//!
+//! No wall clock, no shared RNG stream: every draw is a pure function
+//! `splitmix(seed ^ mix(kind, board, attempt))`, and the only mutable
+//! state is the per-board attempt counters.  Because the two harnesses
+//! make identical decision sequences, they consult the plan with
+//! identical `(board, attempt)` arguments in identical order — the
+//! injected fault sequence can never diverge between them.
+
+use crate::testutil::Rng;
+
+/// One board outage: `board` fails at virtual `at_ns` and revives at
+/// `at_ns + duration_ns`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Outage {
+    pub board: usize,
+    pub at_ns: u64,
+    pub duration_ns: u64,
+}
+
+impl Outage {
+    pub fn revive_at_ns(&self) -> u64 {
+        self.at_ns.saturating_add(self.duration_ns)
+    }
+}
+
+/// Domain separators for the per-kind draw streams (arbitrary odd
+/// constants; only inequality matters).
+const DOMAIN_RECONFIG: u64 = 0x5265_636F_6E66_6731;
+const DOMAIN_RUN: u64 = 0x5472_616E_7369_656E;
+
+/// A deterministic, seedable fault schedule — see the module docs.
+/// Cheap to clone (tests clone one plan into both harnesses).
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    seed: u64,
+    /// Probability that any given reconfiguration attempt fails.
+    reconfig_rate: f64,
+    /// Probability that any given dispatch completion fails.
+    run_rate: f64,
+    outages: Vec<Outage>,
+    /// Per-board reconfiguration attempts consumed so far.
+    reconfig_attempts: Vec<u64>,
+    /// Per-board dispatch completions consumed so far.
+    completions: Vec<u64>,
+}
+
+impl FaultPlan {
+    /// An empty plan (no faults) with the draw-stream seed `seed`.
+    pub fn new(seed: u64) -> FaultPlan {
+        FaultPlan { seed, ..FaultPlan::default() }
+    }
+
+    /// Add one board outage.
+    pub fn with_outage(mut self, board: usize, at_ns: u64, duration_ns: u64) -> FaultPlan {
+        self.outages.push(Outage { board, at_ns, duration_ns });
+        self.outages.sort_by_key(|o| (o.at_ns, o.board));
+        self
+    }
+
+    /// Fail each reconfiguration attempt with probability `rate`.
+    pub fn with_reconfig_rate(mut self, rate: f64) -> FaultPlan {
+        self.reconfig_rate = rate.clamp(0.0, 1.0);
+        self
+    }
+
+    /// Fail each dispatch completion with probability `rate`.
+    pub fn with_run_rate(mut self, rate: f64) -> FaultPlan {
+        self.run_rate = rate.clamp(0.0, 1.0);
+        self
+    }
+
+    /// A seed-derived chaos mix over `boards` boards and a virtual
+    /// `horizon_ns`: one mid-run outage (fails in the middle half of
+    /// the horizon, down for an eighth to a quarter of it) plus small
+    /// seed-derived reconfiguration / transient-run failure rates.
+    /// The chaos property suite (`tests/chaos.rs`) sweeps seeds of
+    /// this generator.
+    pub fn chaos(seed: u64, boards: usize, horizon_ns: u64) -> FaultPlan {
+        let mut rng = Rng::new(seed ^ 0xC4A0_5C4A_05C4_A05C);
+        let h = horizon_ns.max(8);
+        let board = rng.below(boards.max(1) as u64) as usize;
+        let at = h / 4 + rng.below((h / 4).max(1));
+        let dur = h / 8 + rng.below((h / 8).max(1));
+        FaultPlan::new(seed)
+            .with_outage(board, at, dur)
+            .with_reconfig_rate(rng.f64() * 0.15)
+            .with_run_rate(rng.f64() * 0.10)
+    }
+
+    /// Parse a CLI spec (`fos daemon --fault-plan <spec>`): comma- or
+    /// semicolon-separated `key=value` entries —
+    ///
+    /// - `seed=N` — draw-stream seed (default 0)
+    /// - `reconfig=R` — reconfiguration failure probability (0..1)
+    /// - `run=R` — transient run-error probability (0..1)
+    /// - `down=B@T+D` — board `B` down at virtual time `T` for `D`
+    ///   (repeatable).  `T`/`D` are milliseconds, or exact nanoseconds
+    ///   with an `ns` suffix — [`FaultPlan::to_spec`] emits the latter
+    ///   so a repro artifact replays bit-identically.
+    ///
+    /// e.g. `seed=7,reconfig=0.05,down=1@50+40`.
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::default();
+        for part in spec.split([',', ';']).filter(|p| !p.trim().is_empty()) {
+            let (key, value) = part
+                .split_once('=')
+                .ok_or_else(|| format!("fault-plan entry {part:?} is not key=value"))?;
+            let (key, value) = (key.trim(), value.trim());
+            match key {
+                "seed" => {
+                    plan.seed =
+                        value.parse().map_err(|_| format!("bad seed {value:?}"))?;
+                }
+                "reconfig" => {
+                    let r: f64 =
+                        value.parse().map_err(|_| format!("bad reconfig rate {value:?}"))?;
+                    plan.reconfig_rate = r.clamp(0.0, 1.0);
+                }
+                "run" => {
+                    let r: f64 =
+                        value.parse().map_err(|_| format!("bad run rate {value:?}"))?;
+                    plan.run_rate = r.clamp(0.0, 1.0);
+                }
+                "down" => {
+                    // B@T+D; T and D in ms, or exact ns with a suffix.
+                    let (board, rest) = value
+                        .split_once('@')
+                        .ok_or_else(|| format!("bad outage {value:?} (want B@T+D)"))?;
+                    let (at, dur) = rest
+                        .split_once('+')
+                        .ok_or_else(|| format!("bad outage {value:?} (want B@T+D)"))?;
+                    let parse_time = |t: &str| -> Result<u64, String> {
+                        match t.strip_suffix("ns") {
+                            Some(ns) => {
+                                ns.parse().map_err(|_| format!("bad outage time {t:?}"))
+                            }
+                            None => t
+                                .parse::<u64>()
+                                .ok()
+                                .and_then(|ms| ms.checked_mul(1_000_000))
+                                .ok_or_else(|| format!("bad outage time {t:?}")),
+                        }
+                    };
+                    let board: usize =
+                        board.parse().map_err(|_| format!("bad board {board:?}"))?;
+                    plan = plan.with_outage(board, parse_time(at)?, parse_time(dur)?);
+                }
+                other => return Err(format!("unknown fault-plan key {other:?}")),
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Render the plan back to the [`FaultPlan::parse`] spec format —
+    /// what the chaos suite writes into failure repro artifacts.
+    pub fn to_spec(&self) -> String {
+        let mut out = vec![format!("seed={}", self.seed)];
+        if self.reconfig_rate > 0.0 {
+            out.push(format!("reconfig={}", self.reconfig_rate));
+        }
+        if self.run_rate > 0.0 {
+            out.push(format!("run={}", self.run_rate));
+        }
+        for o in &self.outages {
+            // Exact nanoseconds: a repro artifact must replay
+            // bit-identically, never rounded to milliseconds.
+            out.push(format!("down={}@{}ns+{}ns", o.board, o.at_ns, o.duration_ns));
+        }
+        out.join(",")
+    }
+
+    /// The scheduled outages, `(at_ns, board)` ascending.  Harnesses
+    /// turn each into a pair of virtual-time events (down at `at_ns`,
+    /// revive at [`Outage::revive_at_ns`]).
+    pub fn outages(&self) -> &[Outage] {
+        &self.outages
+    }
+
+    pub fn reconfig_rate(&self) -> f64 {
+        self.reconfig_rate
+    }
+
+    pub fn run_rate(&self) -> f64 {
+        self.run_rate
+    }
+
+    /// `true` when the plan can inject anything at all.
+    pub fn is_armed(&self) -> bool {
+        !self.outages.is_empty() || self.reconfig_rate > 0.0 || self.run_rate > 0.0
+    }
+
+    /// Pure draw: splitmix over `(seed, domain, board, attempt)`.
+    fn draw(&self, domain: u64, board: usize, attempt: u64) -> f64 {
+        let mix = domain
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add((board as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9))
+            .wrapping_add(attempt.wrapping_mul(0x94D0_49BB_1331_11EB));
+        Rng::new(self.seed ^ mix).f64()
+    }
+
+    fn counter(v: &mut Vec<u64>, board: usize) -> &mut u64 {
+        if v.len() <= board {
+            v.resize(board + 1, 0);
+        }
+        &mut v[board]
+    }
+
+    /// Consume one reconfiguration attempt on `board`: `true` when the
+    /// injected fault schedule fails it.  Call exactly once per
+    /// `reconfigure` decision, in dispatch order — both harnesses do,
+    /// which is the whole parity contract.
+    pub fn reconfig_should_fail(&mut self, board: usize) -> bool {
+        let k = Self::counter(&mut self.reconfig_attempts, board);
+        let attempt = *k;
+        *k += 1;
+        self.reconfig_rate > 0.0 && self.draw(DOMAIN_RECONFIG, board, attempt) < self.reconfig_rate
+    }
+
+    /// Consume one dispatch completion on `board`: `true` when the
+    /// schedule injects a transient run error (the dispatch's work is
+    /// lost; the request must be re-queued).  Call exactly once per
+    /// non-cancelled completion, in completion order.
+    pub fn run_should_fail(&mut self, board: usize) -> bool {
+        let k = Self::counter(&mut self.completions, board);
+        let attempt = *k;
+        *k += 1;
+        self.run_rate > 0.0 && self.draw(DOMAIN_RUN, board, attempt) < self.run_rate
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn draws_are_deterministic_and_seed_sensitive() {
+        let seq = |seed: u64| -> Vec<bool> {
+            let mut p = FaultPlan::new(seed).with_reconfig_rate(0.5).with_run_rate(0.5);
+            (0..32)
+                .flat_map(|_| [p.reconfig_should_fail(0), p.run_should_fail(1)])
+                .collect()
+        };
+        assert_eq!(seq(7), seq(7), "same seed must replay identically");
+        assert_ne!(seq(7), seq(8), "different seeds must differ");
+        // Two clones consume independent counters but identical draws —
+        // the sim/daemon consumption model.
+        let plan = FaultPlan::new(3).with_reconfig_rate(0.3);
+        let (mut a, mut b) = (plan.clone(), plan);
+        for _ in 0..64 {
+            assert_eq!(a.reconfig_should_fail(2), b.reconfig_should_fail(2));
+        }
+    }
+
+    #[test]
+    fn rates_bound_behaviour() {
+        let mut never = FaultPlan::new(1);
+        let mut always = FaultPlan::new(1).with_reconfig_rate(1.0).with_run_rate(1.0);
+        for _ in 0..100 {
+            assert!(!never.reconfig_should_fail(0));
+            assert!(!never.run_should_fail(0));
+            assert!(always.reconfig_should_fail(0));
+            assert!(always.run_should_fail(0));
+        }
+    }
+
+    #[test]
+    fn parse_and_spec_roundtrip() {
+        let p = FaultPlan::parse("seed=7,reconfig=0.05,run=0.02,down=1@50+40,down=0@10+5")
+            .unwrap();
+        assert_eq!(p.seed, 7);
+        assert_eq!(p.reconfig_rate(), 0.05);
+        assert_eq!(p.run_rate(), 0.02);
+        assert_eq!(
+            p.outages(),
+            &[
+                Outage { board: 0, at_ns: 10_000_000, duration_ns: 5_000_000 },
+                Outage { board: 1, at_ns: 50_000_000, duration_ns: 40_000_000 },
+            ]
+        );
+        assert!(p.is_armed());
+        // Spec render re-parses to the same plan — exactly, including
+        // ns-precision outage times that don't fall on ms boundaries.
+        let p2 = FaultPlan::parse(&p.to_spec()).unwrap();
+        assert_eq!(p2.outages(), p.outages());
+        assert_eq!(p2.reconfig_rate(), p.reconfig_rate());
+        let odd = FaultPlan::new(0).with_outage(2, 1_234_567, 7_654_321);
+        let odd2 = FaultPlan::parse(&odd.to_spec()).unwrap();
+        assert_eq!(odd2.outages(), odd.outages(), "ns precision must round-trip");
+        // Bad specs are structured errors, not panics.
+        assert!(FaultPlan::parse("warp=1").is_err());
+        assert!(FaultPlan::parse("down=1@xx+3").is_err());
+        assert!(FaultPlan::parse("down=nope").is_err());
+        // An ms value whose ns conversion overflows is a structured
+        // error, not a panic or a wrapped bogus time.
+        assert!(FaultPlan::parse("down=0@99999999999999999+1").is_err());
+        // Empty spec = empty plan.
+        assert!(!FaultPlan::parse("").unwrap().is_armed());
+    }
+
+    #[test]
+    fn chaos_generator_is_deterministic_and_in_horizon() {
+        let a = FaultPlan::chaos(5, 4, 1_000_000);
+        let b = FaultPlan::chaos(5, 4, 1_000_000);
+        assert_eq!(a.outages(), b.outages());
+        assert_eq!(a.outages().len(), 1);
+        let o = a.outages()[0];
+        assert!(o.board < 4);
+        assert!(o.at_ns >= 250_000 && o.at_ns < 500_000, "{o:?}");
+        assert!(o.duration_ns >= 125_000 && o.duration_ns < 250_000, "{o:?}");
+    }
+}

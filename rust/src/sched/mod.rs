@@ -57,22 +57,26 @@
 pub mod admission;
 pub mod cluster;
 pub mod core;
+pub mod faults;
 mod sim;
 mod workload;
 
 pub use self::core::{
-    Checkpoint, CostModel, Decision, DecisionKind, Elastic, FairShare, Fixed, LoadedModule,
-    PlaceReq, Placement, Policy, Quantum, Region, RegionMap, Request, RunningSnap, SchedCore,
-    SchedCounters, SchedPolicy, TenantSchedCounters, PREEMPT_TICK_NS,
+    Checkpoint, CostModel, Decision, DecisionKind, Elastic, FailoverDrain, FairShare, Fixed,
+    LoadedModule, PlaceReq, Placement, Policy, Quantum, Region, RegionMap, Request, RunningSnap,
+    SchedCore, SchedCounters, SchedPolicy, TenantSchedCounters, PREEMPT_TICK_NS,
 };
 pub use admission::{
     AdmissionConfig, AdmissionPipeline, AdmitError, AdmitRequest, QosClass, TenantAdmitCounters,
     DEFAULT_ADMIT_QUEUE_CAP, DEFAULT_QUANTUM_TILES,
 };
 pub use cluster::{
-    ClusterCore, ClusterCounters, LeastLoaded, Locality, PlacementKind, PlacementPolicy,
-    RoundRobin, RouteReq, ShardView, DEFAULT_STEAL_THRESHOLD,
+    BoardHealth, ClusterCore, ClusterCounters, DrainedRun, FailDisposition, FailoverReport,
+    LeastLoaded, Locality, MovedCkpt, PlacementKind, PlacementPolicy, RetryOutcome, RoundRobin,
+    RouteReq, ShardView, DEFAULT_RECONFIG_FAIL_CAP, DEFAULT_STEAL_THRESHOLD,
+    RETRY_BACKOFF_BASE_NS,
 };
+pub use faults::{FaultPlan, Outage};
 pub use sim::{
     cluster_mean_turnaround_ns, gen_inputs, mean_turnaround_ns, simulate, simulate_cluster,
     BoardSim, ClusterSimConfig, ClusterSimResult, RegionTrace, SimConfig, SimResult, TraceEvent,

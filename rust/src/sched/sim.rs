@@ -5,8 +5,11 @@
 //! into trace events, latencies and (optionally) real PJRT compute.
 
 use super::admission::{AdmissionConfig, AdmissionPipeline, AdmitRequest};
-use super::cluster::{ClusterCore, ClusterCounters, PlacementKind, DEFAULT_STEAL_THRESHOLD};
+use super::cluster::{
+    ClusterCore, ClusterCounters, FailDisposition, PlacementKind, DEFAULT_STEAL_THRESHOLD,
+};
 use super::core::{Decision, DecisionKind, Policy, SchedCore, SchedCounters, TenantSchedCounters};
+use super::faults::FaultPlan;
 use super::workload::{JobSpec, Workload};
 use super::SimTime;
 use crate::accel::Catalog;
@@ -423,6 +426,14 @@ pub struct ClusterSimConfig {
     pub steal_threshold: usize,
     /// Admission-pipeline tuning (see [`SimConfig::admission`]).
     pub admission: AdmissionConfig,
+    /// Deterministic fault injection: board outages, reconfiguration
+    /// failures, transient run errors — consumed at the same
+    /// round-lifecycle points the daemon's virtual-time loop consumes
+    /// the identical plan (fault parity).  `None` = perfect substrate.
+    pub faults: Option<FaultPlan>,
+    /// `false` switches failover to the drop-and-resubmit baseline
+    /// (no checkpointed progress across migration).
+    pub checkpoint_migration: bool,
 }
 
 impl ClusterSimConfig {
@@ -437,11 +448,25 @@ impl ClusterSimConfig {
             placement,
             steal_threshold: DEFAULT_STEAL_THRESHOLD,
             admission: AdmissionConfig::default(),
+            faults: None,
+            checkpoint_migration: true,
         }
     }
 
     pub fn with_admission(mut self, cfg: AdmissionConfig) -> ClusterSimConfig {
         self.admission = cfg;
+        self
+    }
+
+    pub fn with_faults(mut self, plan: FaultPlan) -> ClusterSimConfig {
+        self.faults = Some(plan);
+        self
+    }
+
+    /// Use the drop-and-resubmit failover baseline instead of
+    /// checkpoint-based migration.
+    pub fn with_drop_and_resubmit(mut self) -> ClusterSimConfig {
+        self.checkpoint_migration = false;
         self
     }
 }
@@ -488,6 +513,21 @@ impl ClusterSimResult {
     pub fn total_preemptions(&self) -> u64 {
         self.boards.iter().map(|b| b.counters.preemptions).sum()
     }
+
+    /// Boards that failed over during the run.
+    pub fn failovers(&self) -> u64 {
+        self.cluster.failovers
+    }
+
+    /// Requests migrated off failed boards (running + queued).
+    pub fn migrations(&self) -> u64 {
+        self.cluster.migrations
+    }
+
+    /// Virtual ns of execution destroyed by faults.
+    pub fn lost_ns(&self) -> u64 {
+        self.cluster.lost_ns
+    }
 }
 
 #[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
@@ -502,6 +542,12 @@ enum ClusterEvent {
     /// the tick needs no board identity — per-board dedup lives in
     /// `next_tick`).
     Tick,
+    /// Injected board failure ([`FaultPlan`] outage start).
+    BoardDown { board: usize },
+    /// Outage end: the board rejoins the routable set (blank fabric).
+    BoardRevive { board: usize },
+    /// A reconfiguration-retry backoff expired: release parked work.
+    RetryRelease,
 }
 
 /// Run a workload over a cluster of boards: one discrete-event heap,
@@ -519,7 +565,12 @@ pub fn simulate_cluster(
     assert!(!cfg.boards.is_empty(), "a cluster needs at least one board");
     let n_boards = cfg.boards.len();
     let mut cluster = ClusterCore::new(&cfg.boards, catalog, cfg.policy, cfg.placement)
-        .with_steal_threshold(cfg.steal_threshold);
+        .with_steal_threshold(cfg.steal_threshold)
+        .with_checkpoint_migration(cfg.checkpoint_migration);
+    // The plan is consumed (per-board attempt counters advance), so
+    // each run takes its own copy — cloning the same plan into the
+    // daemon replays the identical fault sequence (fault parity).
+    let mut plan = cfg.faults.clone();
     let mut admit = AdmissionPipeline::new(cfg.admission);
     for &(u, q) in &workload.qos {
         admit.set_qos(u, q);
@@ -543,6 +594,24 @@ pub fn simulate_cluster(
     for (j, job) in workload.jobs.iter().enumerate() {
         heap.push(Reverse((job.arrival, seq, ClusterEvent::Arrival(j))));
         seq += 1;
+    }
+    // Injected outages become ordinary virtual-time events — scheduled
+    // before any dispatch, so at equal timestamps a failure is
+    // processed before the completions it cancels (the daemon arms its
+    // sentinels at the same point for the same ordering).
+    if let Some(p) = &plan {
+        for o in p.outages() {
+            if o.board < n_boards {
+                heap.push(Reverse((o.at_ns, seq, ClusterEvent::BoardDown { board: o.board })));
+                seq += 1;
+                heap.push(Reverse((
+                    o.revive_at_ns(),
+                    seq,
+                    ClusterEvent::BoardRevive { board: o.board },
+                )));
+                seq += 1;
+            }
+        }
     }
     // Completion events cancelled by a preemption (by event seq).
     let mut cancelled: HashSet<u64> = HashSet::new();
@@ -599,9 +668,46 @@ pub fn simulate_cluster(
                     );
                 }
                 ClusterEvent::Tick => {} // only triggers the rounds below
+                ClusterEvent::RetryRelease => {} // release happens below
+                ClusterEvent::BoardDown { board } => {
+                    // Cancel every in-flight completion of the failed
+                    // board and roll back its uncompleted busy time —
+                    // the work migrates, so it never completes here.
+                    let stale: Vec<(usize, usize)> =
+                        running_seq.keys().filter(|&&(b, _)| b == board).copied().collect();
+                    for key in stale {
+                        let vseq = running_seq.remove(&key).unwrap();
+                        cancelled.insert(vseq);
+                        if let Some((old_end, span)) = open.remove(&key) {
+                            busy_ns[board] -= old_end.saturating_sub(now) * span as u64;
+                        }
+                    }
+                    // Forget the board's pending preempt tick exactly
+                    // like the daemon does: a post-revival round must
+                    // re-arm from scratch or the tick cadences (and so
+                    // the decision sequences) drift apart.
+                    next_tick[board] = None;
+                    cluster.mark_board_down(board, now);
+                }
+                ClusterEvent::BoardRevive { board } => {
+                    cluster.revive_board(board);
+                }
                 ClusterEvent::Complete { board, anchor, job } => {
                     if cancelled.remove(&s) {
                         continue; // this dispatch was preempted mid-span
+                    }
+                    // Injected transient run error: the dispatch's work
+                    // is lost and the request re-queued at the front of
+                    // its owner's queue — it completes on a later,
+                    // clean dispatch (conservation holds).
+                    if plan.as_mut().is_some_and(|p| p.run_should_fail(board))
+                        && cluster.fail_run(board, anchor, now)
+                    {
+                        if running_seq.get(&(board, anchor)) == Some(&s) {
+                            running_seq.remove(&(board, anchor));
+                            open.remove(&(board, anchor));
+                        }
+                        continue;
                     }
                     cluster.complete(board, anchor);
                     admit.complete(workload.jobs[job].user);
@@ -618,12 +724,21 @@ pub fn simulate_cluster(
             }
         }
 
+        // Release backoff-expired retries (and revival-parked work)
+        // before admitting new arrivals — oldest work first, the same
+        // order the daemon uses.
+        cluster.release_retries(now);
+
         // Batched ingest (routing happens here, at admission into the
         // cluster): the daemon dispatcher's exact rule and order.
-        for r in admit.ingest() {
-            cluster
-                .submit_for(r.user, r.tenant, r.job, &r.accel, r.tiles, r.pin.as_deref())
-                .unwrap_or_else(|e| panic!("{e}"));
+        // With every board down, ingest waits — queued work stays in
+        // the admission pipeline until a revival event re-opens it.
+        if cluster.healthy_count() > 0 {
+            for r in admit.ingest() {
+                cluster
+                    .submit_for(r.user, r.tenant, r.job, &r.accel, r.tiles, r.pin.as_deref())
+                    .unwrap_or_else(|e| panic!("{e}"));
+            }
         }
 
         // One scheduling round per board, in board order: an idle board
@@ -642,6 +757,21 @@ pub fn simulate_cluster(
                         busy_ns[b] -= (old_end - now) * span as u64;
                     }
                     continue;
+                }
+                // Injected reconfiguration fault — consumed (and the
+                // per-accel streak reported) for EVERY reconfiguring
+                // dispatch, success or failure, exactly as the daemon
+                // does.  A failed load is rolled back and either parked
+                // for a backoff retry or rejected at the cap.
+                if d.reconfigure {
+                    let failed = plan.as_mut().is_some_and(|p| p.reconfig_should_fail(b));
+                    if let Some(disp) = cluster.reconfig_outcome(b, &d, failed, now) {
+                        if let FailDisposition::Retry { at_ns } = disp {
+                            heap.push(Reverse((at_ns, seq, ClusterEvent::RetryRelease)));
+                            seq += 1;
+                        }
+                        continue; // rejections surface via take_rejected below
+                    }
                 }
                 let busy_others = cluster.busy_anchors(b).saturating_sub(1);
                 let lat = cluster.service_ns(b, &d, busy_others);
@@ -1218,6 +1348,96 @@ mod tests {
         assert_eq!(r.trace.len(), 16, "every deferred request is eventually dispatched");
         assert_eq!(r.counters.reconfigs + r.counters.reuses, 16);
         assert!(r.job_completion.iter().all(|&t| t > 0));
+    }
+
+    #[test]
+    fn board_failover_completes_all_requests_and_beats_resubmit() {
+        // The failure-domain acceptance claim: a seeded FaultPlan kills
+        // 1 of 4 boards mid-run, yet 100% of admitted requests complete
+        // (zero lost work) via checkpoint-based migration — and mean
+        // turnaround under failover beats the drop-and-resubmit
+        // baseline (the fig23-style comparison).
+        let c = catalog();
+        // Long pinned streams: every board carries substantial
+        // in-flight progress when the outage hits.
+        let mut w = Workload::new();
+        for t in 0..8 {
+            w.push(JobSpec::stream(t, "mandelbrot", Some("mandelbrot_v1"), 0, 60));
+        }
+        let base =
+            ClusterSimConfig::new(hetero_boards(4), Policy::Elastic, PlacementKind::RoundRobin);
+        let clean = simulate_cluster(&c, &w, &base);
+        // Kill board 1 once real progress exists; no revival in-run.
+        let outage = FaultPlan::new(3).with_outage(1, clean.makespan / 2, clean.makespan * 4);
+        let mk = |resubmit: bool| {
+            let mut cfg = ClusterSimConfig::new(
+                hetero_boards(4),
+                Policy::Elastic,
+                PlacementKind::RoundRobin,
+            )
+            .with_faults(outage.clone());
+            if resubmit {
+                cfg = cfg.with_drop_and_resubmit();
+            }
+            simulate_cluster(&c, &w, &cfg)
+        };
+        let failover = mk(false);
+        assert_eq!(failover.failovers(), 1);
+        assert!(failover.migrations() >= 1, "{:?}", failover.cluster);
+        assert!(failover.job_completion.iter().all(|&t| t > 0), "every job completes");
+        let completed: u64 = failover.per_tenant.iter().map(|(_, tc)| tc.completed).sum();
+        assert_eq!(completed, w.total_requests() as u64, "zero lost work");
+        let rejected: u64 = failover.per_tenant.iter().map(|(_, tc)| tc.rejected).sum();
+        assert_eq!(rejected, 0, "outages alone must never reject");
+        assert!(failover.makespan >= clean.makespan, "failure is never free");
+        // Checkpointed migration preserves progress that the
+        // drop-and-resubmit baseline throws away.
+        let resub = mk(true);
+        assert!(resub.job_completion.iter().all(|&t| t > 0));
+        let m_ck = cluster_mean_turnaround_ns(&w, &failover);
+        let m_rs = cluster_mean_turnaround_ns(&w, &resub);
+        assert!(
+            m_ck < m_rs,
+            "checkpoint failover {m_ck:.0} must beat drop-and-resubmit {m_rs:.0}"
+        );
+        assert!(
+            failover.lost_ns() < resub.lost_ns(),
+            "{} vs {}",
+            failover.lost_ns(),
+            resub.lost_ns()
+        );
+    }
+
+    #[test]
+    fn injected_faults_conserve_requests() {
+        // Reconfiguration and transient-run faults at aggressive rates:
+        // every admitted request still either completes or surfaces as
+        // a structured rejection at the retry cap — exactly once.
+        let c = catalog();
+        let w = Workload::cluster_mix(6, 3, 2, 6, 300_000);
+        let plan = FaultPlan::new(11).with_reconfig_rate(0.3).with_run_rate(0.2);
+        let cfg =
+            ClusterSimConfig::new(hetero_boards(3), Policy::Elastic, PlacementKind::Locality)
+                .with_faults(plan);
+        let r = simulate_cluster(&c, &w, &cfg);
+        assert!(
+            r.cluster.reconfig_failures > 0 && r.cluster.run_faults > 0,
+            "faults must actually fire: {:?}",
+            r.cluster
+        );
+        let admitted: u64 = r.per_tenant.iter().map(|(_, tc)| tc.admitted).sum();
+        let completed: u64 = r.per_tenant.iter().map(|(_, tc)| tc.completed).sum();
+        let rejected: u64 = r.per_tenant.iter().map(|(_, tc)| tc.rejected).sum();
+        assert_eq!(admitted, w.total_requests() as u64);
+        assert_eq!(completed + rejected, admitted, "conserved under faults");
+        assert!(r.job_completion.iter().all(|&t| t > 0), "every job terminates");
+        assert!(r.cluster.lost_ns > 0);
+        assert_eq!(
+            r.cluster.reconfig_failures,
+            r.cluster.reconfig_retries + r.cluster.reconfig_rejections,
+            "every failure is either retried or rejected: {:?}",
+            r.cluster
+        );
     }
 
     #[test]

@@ -15,8 +15,8 @@
 use fos::accel::Catalog;
 use fos::daemon::{Daemon, FpgaRpc, Job};
 use fos::sched::{
-    simulate_cluster, ClusterSimConfig, ClusterSimResult, Decision, DecisionKind, JobSpec,
-    PlacementKind, Policy, Workload,
+    simulate_cluster, AdmissionConfig, ClusterSimConfig, ClusterSimResult, Decision,
+    DecisionKind, FaultPlan, JobSpec, PlacementKind, Policy, Workload,
 };
 use fos::shell::ShellBoard;
 use std::path::PathBuf;
@@ -47,6 +47,15 @@ const BOARDS: [ShellBoard; 2] = [ShellBoard::Ultra96, ShellBoard::Zcu102];
 type Trace = [(&'static str, usize, usize)];
 
 fn sim_side(catalog: &Catalog, trace: &Trace, policy: Policy) -> ClusterSimResult {
+    sim_side_with_faults(catalog, trace, policy, None)
+}
+
+fn sim_side_with_faults(
+    catalog: &Catalog,
+    trace: &Trace,
+    policy: Policy,
+    faults: Option<FaultPlan>,
+) -> ClusterSimResult {
     // All arrivals at t=0, jobs in tenant order — matching the
     // daemon side's sequential admission exactly.
     let mut w = Workload::new();
@@ -60,21 +69,37 @@ fn sim_side(catalog: &Catalog, trace: &Trace, policy: Policy) -> ClusterSimResul
             pin_variant: None,
         });
     }
-    simulate_cluster(
-        catalog,
-        &w,
-        &ClusterSimConfig::new(BOARDS.to_vec(), policy, PlacementKind::Locality),
-    )
+    let mut cfg = ClusterSimConfig::new(BOARDS.to_vec(), policy, PlacementKind::Locality);
+    cfg.faults = faults;
+    simulate_cluster(catalog, &w, &cfg)
 }
 
 /// Start a paused 2-board cluster daemon, admit each tenant's jobs in
 /// strict tenant order (board routing happens at admission, so the
 /// order must match the simulator's), resume, and wait for the drain.
 fn daemon_side(name: &str, catalog: &Catalog, trace: &'static Trace, policy: Policy) -> Daemon {
+    daemon_side_with_faults(name, catalog, trace, policy, None)
+}
+
+fn daemon_side_with_faults(
+    name: &str,
+    catalog: &Catalog,
+    trace: &'static Trace,
+    policy: Policy,
+    faults: Option<FaultPlan>,
+) -> Daemon {
     let path = sock(name);
-    let daemon =
-        Daemon::start_cluster(&path, &BOARDS, catalog.clone(), policy, PlacementKind::Locality)
-            .unwrap();
+    let daemon = Daemon::start_cluster_with_faults(
+        &path,
+        &BOARDS,
+        catalog.clone(),
+        policy,
+        PlacementKind::Locality,
+        AdmissionConfig::default(),
+        fos::daemon::DEFAULT_MAX_CONNECTIONS,
+        faults,
+    )
+    .unwrap();
     let mut control = FpgaRpc::connect(&path).unwrap();
     control.pause().unwrap();
 
@@ -175,6 +200,64 @@ fn cluster_parity_holds_under_preemption() {
         assert_eq!(sim_seq, dmn_seq, "board {b} preemptive sequences diverged");
     }
     use std::sync::atomic::Ordering::Relaxed;
+    for (b, board) in sim.boards.iter().enumerate() {
+        let pb = &daemon.stats().per_board[b];
+        assert_eq!(board.counters.preemptions, pb.preemptions.load(Relaxed), "board {b}");
+        assert_eq!(board.counters.resumes, pb.resumes.load(Relaxed), "board {b}");
+    }
+}
+
+#[test]
+fn fault_parity_same_plan_drives_identical_failover_sequences() {
+    // The failure-domain parity claim: the SAME FaultPlan — one board
+    // killed mid-run — driven through simulate_cluster and a live
+    // 2-board daemon yields identical per-shard and merged decision
+    // sequences, the board-down drain's Preempt (migration) decisions
+    // and the migrated remainders' Resume decisions included.
+    static TRACE: &Trace = &[("mandelbrot", 4, 30), ("sobel", 6, 2)];
+    let catalog = Catalog::load_default().unwrap();
+
+    // Probe the fault-free virtual makespan so the outage lands while
+    // work is genuinely running on the victim board.
+    let clean = sim_side(&catalog, TRACE, Policy::Elastic);
+    let outage_at = clean.makespan / 2;
+    let plan = FaultPlan::new(5).with_outage(1, outage_at, clean.makespan * 4);
+
+    let sim = sim_side_with_faults(&catalog, TRACE, Policy::Elastic, Some(plan.clone()));
+    assert_eq!(sim.failovers(), 1, "the plan must actually kill board 1");
+    assert!(sim.migrations() >= 1, "the outage must migrate work: {:?}", sim.cluster);
+    assert!(
+        sim.merged
+            .iter()
+            .any(|(b, d)| *b == 1 && d.kind == DecisionKind::Preempt),
+        "the drain must appear in the decision sequence"
+    );
+    assert!(sim.job_completion.iter().all(|&t| t > 0), "migration loses nothing");
+
+    let daemon =
+        daemon_side_with_faults("faults", &catalog, TRACE, Policy::Elastic, Some(plan));
+
+    // Identical per-shard decision sequences — migration decisions
+    // included — and the identical merged global order.
+    for b in 0..BOARDS.len() {
+        let sim_seq: Vec<Key> = sim.boards[b].decisions.iter().map(key).collect();
+        let dmn_seq: Vec<Key> = daemon.board_decision_log(b).iter().map(key).collect();
+        assert_eq!(sim_seq, dmn_seq, "board {b} failover sequences diverged");
+    }
+    let merged_sim: Vec<(usize, DecisionKind)> =
+        sim.merged.iter().map(|(b, d)| (*b, d.kind)).collect();
+    let merged_dmn: Vec<(usize, DecisionKind)> = daemon
+        .merged_decision_log()
+        .iter()
+        .map(|(b, d)| (*b, d.kind))
+        .collect();
+    assert_eq!(merged_sim, merged_dmn, "merged (board, kind) order diverged");
+
+    // Failover accounting agrees.
+    use std::sync::atomic::Ordering::Relaxed;
+    assert_eq!(daemon.stats().failovers.load(Relaxed), sim.cluster.failovers);
+    assert_eq!(daemon.stats().migrations.load(Relaxed), sim.cluster.migrations);
+    assert_eq!(daemon.stats().lost_ns.load(Relaxed), sim.cluster.lost_ns);
     for (b, board) in sim.boards.iter().enumerate() {
         let pb = &daemon.stats().per_board[b];
         assert_eq!(board.counters.preemptions, pb.preemptions.load(Relaxed), "board {b}");
