@@ -1,0 +1,204 @@
+//! §Perf microbench: scheduling-round latency and decision throughput
+//! on the hot path — the virtual-time drain loop the simulator and the
+//! daemon dispatcher both drive.
+//!
+//! Two sweeps, both deterministic in decision content (only the
+//! wall-clock numbers vary by machine):
+//!
+//! * **single shard** — one `SchedCore`, queue depths 1k → 100k
+//!   requests from 8 users over a mixed accelerator set; measures
+//!   decisions per wall-second and the p99 per-round latency.
+//! * **cluster** — the same mix through `ClusterCore` at 1 → 8 boards.
+//!
+//! Emits `BENCH_perf_round_latency.json` with a top-level
+//! `single_shard_decisions_per_sec` leaf (the peak across the depth
+//! sweep).  `scripts/check_bench_regression.py` enforces a throughput
+//! *floor* on that leaf — wall-clock rates are machine-dependent, so
+//! the gate is a floor, not a baseline comparison.
+
+use fos::accel::Catalog;
+use fos::json::{arr, b, f, i, obj, s, Value};
+use fos::sched::{ClusterCore, DecisionKind, PlacementKind, Policy, SchedCore};
+use fos::shell::{Shell, ShellBoard};
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::time::Instant;
+
+const USERS: usize = 8;
+const ACCELS: [&str; 8] =
+    ["vadd", "mm", "fir", "histogram", "dct", "sobel", "mandelbrot", "black_scholes"];
+
+fn p99(mut xs: Vec<u64>) -> u64 {
+    if xs.is_empty() {
+        return 0;
+    }
+    xs.sort_unstable();
+    xs[(xs.len() * 99 / 100).min(xs.len() - 1)]
+}
+
+/// Drain one pre-filled core in virtual time, timing each scheduling
+/// round with a wall clock.  Returns (decisions, elapsed_s, p99_ns).
+fn drain_core(core: &mut SchedCore) -> (u64, f64, u64) {
+    let mut now = 0u64;
+    let mut completions: BinaryHeap<Reverse<(u64, usize)>> = BinaryHeap::new();
+    let mut round_ns: Vec<u64> = Vec::new();
+    let mut decisions = 0u64;
+    let t0 = Instant::now();
+    loop {
+        let r0 = Instant::now();
+        core.begin_round_at(now);
+        while let Some(d) = core.next_decision() {
+            decisions += 1;
+            if d.kind != DecisionKind::Preempt {
+                let lat = core.service_ns(&d, core.busy_anchors().saturating_sub(1));
+                let end = now + lat.max(1);
+                core.mark_running(&d, now, end);
+                completions.push(Reverse((end, d.anchor)));
+            }
+        }
+        round_ns.push(r0.elapsed().as_nanos() as u64);
+        match completions.pop() {
+            Some(Reverse((end, anchor))) => {
+                now = now.max(end);
+                core.complete(anchor);
+            }
+            None => {
+                if !core.has_pending() {
+                    break;
+                }
+                // Nothing running and nothing placeable would be a
+                // livelock; the mixed elastic workload never gets here.
+                now += 1;
+            }
+        }
+    }
+    (decisions, t0.elapsed().as_secs_f64(), p99(round_ns))
+}
+
+fn fill_core(core: &mut SchedCore, depth: usize) {
+    for j in 0..depth as u64 {
+        let u = (j as usize) % USERS;
+        let accel = ACCELS[(j as usize) % ACCELS.len()];
+        let tiles = 1 + (j as usize) % 3;
+        core.submit(u, j, accel, tiles, None).unwrap();
+    }
+}
+
+fn boards(n: usize) -> Vec<ShellBoard> {
+    (0..n)
+        .map(|k| if k % 2 == 0 { ShellBoard::Ultra96 } else { ShellBoard::Zcu102 })
+        .collect()
+}
+
+/// The cluster drain: every board rounds at each virtual-time step.
+fn drain_cluster(cluster: &mut ClusterCore, n: usize) -> (u64, f64, u64) {
+    let mut now = 0u64;
+    let mut completions: BinaryHeap<Reverse<(u64, usize, usize)>> = BinaryHeap::new();
+    let mut round_ns: Vec<u64> = Vec::new();
+    let mut decisions = 0u64;
+    let t0 = Instant::now();
+    loop {
+        let r0 = Instant::now();
+        for board in 0..n {
+            cluster.begin_round_at(board, now);
+            while let Some(d) = cluster.next_decision(board) {
+                decisions += 1;
+                if d.kind != DecisionKind::Preempt {
+                    let core = cluster.core(board);
+                    let lat = core.service_ns(&d, core.busy_anchors().saturating_sub(1));
+                    let end = now + lat.max(1);
+                    cluster.core_mut(board).mark_running(&d, now, end);
+                    completions.push(Reverse((end, board, d.anchor)));
+                }
+            }
+        }
+        round_ns.push(r0.elapsed().as_nanos() as u64);
+        match completions.pop() {
+            Some(Reverse((end, board, anchor))) => {
+                now = now.max(end);
+                cluster.complete(board, anchor);
+            }
+            None => {
+                if !cluster.has_pending() {
+                    break;
+                }
+                now += 1;
+            }
+        }
+    }
+    (decisions, t0.elapsed().as_secs_f64(), p99(round_ns))
+}
+
+fn main() {
+    let catalog = Catalog::load_default().expect("run `make artifacts`");
+    let smoke = fos::testutil::bench_smoke();
+
+    // --- single shard ---------------------------------------------
+    let depths: &[usize] = if smoke { &[1_000, 4_000] } else { &[1_000, 10_000, 100_000] };
+    let mut single_entries: Vec<Value> = Vec::new();
+    let mut peak_rate = 0.0f64;
+    println!("single shard (Ultra96, Elastic), {USERS} users, {} accelerators:", ACCELS.len());
+    for &depth in depths {
+        let shell = Shell::build(ShellBoard::Ultra96);
+        let mut core = SchedCore::new(&shell, catalog.clone(), Policy::Elastic);
+        fill_core(&mut core, depth);
+        let (decisions, secs, p99_ns) = drain_core(&mut core);
+        let rate = decisions as f64 / secs;
+        peak_rate = peak_rate.max(rate);
+        println!(
+            "  depth {depth:>6}: {decisions} decisions in {:.3} s -> {:.0}/s, p99 round {:.2} us",
+            secs,
+            rate,
+            p99_ns as f64 / 1e3
+        );
+        single_entries.push(obj(vec![
+            ("depth", i(depth as i64)),
+            ("decisions", i(decisions as i64)),
+            ("decisions_per_sec", f(rate)),
+            ("p99_round_ns", f(p99_ns as f64)),
+        ]));
+    }
+
+    // --- cluster --------------------------------------------------
+    let board_counts: &[usize] = if smoke { &[1, 4] } else { &[1, 2, 4, 8] };
+    let cluster_depth = if smoke { 4_000 } else { 20_000 };
+    let mut cluster_entries: Vec<Value> = Vec::new();
+    println!("cluster (Elastic, Locality), depth {cluster_depth}:");
+    for &n in board_counts {
+        let mut cluster =
+            ClusterCore::new(&boards(n), &catalog, Policy::Elastic, PlacementKind::Locality);
+        for j in 0..cluster_depth as u64 {
+            let u = (j as usize) % USERS;
+            let accel = ACCELS[(j as usize) % ACCELS.len()];
+            cluster.submit(u, j, accel, 1 + (j as usize) % 3, None).unwrap();
+        }
+        let (decisions, secs, p99_ns) = drain_cluster(&mut cluster, n);
+        let rate = decisions as f64 / secs;
+        println!(
+            "  {n} board(s): {decisions} decisions in {:.3} s -> {:.0}/s, p99 round {:.2} us",
+            secs,
+            rate,
+            p99_ns as f64 / 1e3
+        );
+        cluster_entries.push(obj(vec![
+            ("boards", i(n as i64)),
+            ("decisions", i(decisions as i64)),
+            ("decisions_per_sec", f(rate)),
+            ("p99_round_ns", f(p99_ns as f64)),
+        ]));
+    }
+
+    println!("peak single-shard throughput: {:.0} decisions/s", peak_rate);
+
+    let doc = obj(vec![
+        ("bench", s("perf_round_latency")),
+        ("smoke", b(smoke)),
+        ("single_shard_decisions_per_sec", f(peak_rate)),
+        ("single_shard", arr(single_entries)),
+        ("cluster", arr(cluster_entries)),
+    ]);
+    match fos::testutil::write_bench_json("perf_round_latency", &doc) {
+        Ok(p) => println!("wrote {}", p.display()),
+        Err(e) => eprintln!("could not write bench JSON: {e}"),
+    }
+}

@@ -50,7 +50,7 @@ use crate::driver::{AccelSnapshot, Cynq, LoadedAccel, PhysAddr};
 use crate::json::{arr, f, i, obj, s, Value};
 use crate::sched::{
     AdmissionConfig, AdmissionPipeline, AdmitRequest, ClusterCore, Decision, DecisionKind,
-    FailDisposition, FaultPlan, MovedCkpt, PlacementKind, Policy, QosClass,
+    FailDisposition, FaultPlan, MovedCkpt, PlacementKind, Policy, QosClass, SymbolTable,
 };
 use crate::shell::ShellBoard;
 use std::cmp::Reverse;
@@ -894,6 +894,10 @@ fn dispatcher(
     let n_boards = boards.len();
     let catalog = cynqs[0].catalog.clone();
     let mut cluster = ClusterCore::new(&boards, &catalog, policy, placement);
+    // Interned-name resolution at the RPC/hardware boundary: the same
+    // deterministic table every scheduler core derives from the shared
+    // catalog, so a `Sym` carried by any decision resolves here.
+    let symbols = SymbolTable::from_catalog(&catalog);
     // The tenant-aware admission stage: per-tenant bounded queues
     // feeding batched DRR ingest (the same pipeline the simulator
     // drives at the same point of the round lifecycle).
@@ -1357,6 +1361,7 @@ fn dispatcher(
                             &mut batches,
                             &mut tickets,
                             &mut open_tickets,
+                            &symbols,
                             inf,
                         );
                     }
@@ -1496,7 +1501,7 @@ fn dispatcher(
                 // compute is gated on `err`.
                 {
                     let hw = &mut hws[b];
-                    match ensure_module(&mut hw.cynq, &mut hw.resident, &d) {
+                    match ensure_module(&mut hw.cynq, &mut hw.resident, &symbols, &d) {
                         Ok(h) => handle = Some(h),
                         Err(fail) => {
                             if fail.module_missing && d.reconfigure {
@@ -1646,7 +1651,7 @@ fn dispatcher(
                         p.batch,
                         format!(
                             "request for {:?} is unplaceable under policy {policy_name:?}",
-                            req.accel
+                            symbols.resolve(req.accel)
                         ),
                     );
                 }
@@ -1732,6 +1737,7 @@ fn finish_inflight(
     batches: &mut HashMap<usize, Batch>,
     tickets: &mut HashMap<u64, Ticket>,
     open_tickets: &mut HashMap<u64, usize>,
+    symbols: &SymbolTable,
     inf: Inflight,
 ) {
     let board = inf.board;
@@ -1750,7 +1756,9 @@ fn finish_inflight(
                 let hw = &mut hws[board];
                 run_tiles(&mut hw.cynq, h, &inf.job, inf.d.tiles)
             })
-            .and_then(|()| sync_outputs_to_primary(hws, board, &inf.job, &inf.d.accel));
+            .and_then(|()| {
+                sync_outputs_to_primary(hws, board, &inf.job, symbols.resolve(inf.d.accel))
+            });
         if let Err(e) = r {
             err = Some(e);
         }
@@ -2016,21 +2024,22 @@ fn handle_cheap(
             let _ = reply.send(v);
         }
         Msg::QueryLog { board, limit, reply } => {
-            // Tail-only clones, O(1) positioning: a monitoring poll on
-            // a long-lived daemon never walks (or copies) the whole
-            // ring under the dispatcher's feet.
+            // Tail-only POD copies (decisions carry interned symbols,
+            // no heap fields), O(1) positioning: a monitoring poll on a
+            // long-lived daemon never walks the whole ring under the
+            // dispatcher's feet.
             let n = limit.unwrap_or(usize::MAX);
             let out: Vec<Decision> = match board {
                 Some(b) if b < cluster.len() => {
-                    cluster.core(b).decision_log_tail(n).cloned().collect()
+                    cluster.core(b).decision_log_tail(n).copied().collect()
                 }
                 Some(_) => Vec::new(),
-                None => cluster.merged_log_tail(n).map(|(_, d)| d.clone()).collect(),
+                None => cluster.merged_log_tail(n).map(|(_, d)| *d).collect(),
             };
             let _ = reply.send(out);
         }
         Msg::QueryMergedTagged { reply } => {
-            let _ = reply.send(cluster.merged_log().cloned().collect());
+            let _ = reply.send(cluster.merged_log().copied().collect());
         }
         Msg::Pause { reply } => {
             *paused = true;
@@ -2182,6 +2191,7 @@ struct ExecFailure {
 fn ensure_module(
     cynq: &mut Cynq,
     resident: &mut HashMap<usize, (LoadedAccel, usize)>,
+    symbols: &SymbolTable,
     d: &Decision,
 ) -> Result<LoadedAccel, ExecFailure> {
     let missing = |msg: String| ExecFailure { msg, module_missing: true };
@@ -2199,7 +2209,7 @@ fn ensure_module(
             }
         }
         let (h, _reconfig_latency) = cynq
-            .load_accelerator_at(&d.accel, &d.variant, d.anchor)
+            .load_accelerator_at(symbols.resolve(d.accel), symbols.resolve(d.variant), d.anchor)
             .map_err(|e| missing(e.to_string()))?;
         resident.insert(d.anchor, (h, d.span));
         Ok(h)

@@ -43,7 +43,7 @@
 //! never breaks decision parity.
 
 use super::core::{
-    Checkpoint, Decision, Policy, RegionMap, Request, SchedCore, SchedCounters,
+    Checkpoint, Decision, Policy, RegionMap, Request, SchedCore, SchedCounters, Sym,
     TenantSchedCounters,
 };
 use crate::accel::Catalog;
@@ -220,10 +220,8 @@ impl ShardView<'_> {
     /// An instance of `accel` is configured somewhere on this board
     /// (idle or busy) — dispatching there can reuse it or at least
     /// avoid a cold load later.
-    pub fn holds(&self, accel: &str) -> bool {
-        self.regions
-            .iter()
-            .any(|r| r.loaded.as_ref().map(|l| l.accel == accel).unwrap_or(false))
+    pub fn holds(&self, accel: Sym) -> bool {
+        self.regions.has_resident(accel)
     }
 
     /// Scalar load signal: queued tiles plus in-flight dispatches.
@@ -233,7 +231,7 @@ impl ShardView<'_> {
 }
 
 /// The request a placement policy is asked to route.
-pub struct RouteReq<'a> {
+pub struct RouteReq {
     pub user: usize,
     /// Tenant the request is accounted to (defaults to `user`) — lets
     /// tenant-share-aware placements keep one tenant's requests from
@@ -241,7 +239,9 @@ pub struct RouteReq<'a> {
     pub tenant: usize,
     /// The tenant's QoS weight ([`ClusterCore::set_tenant_weight`]).
     pub weight: u32,
-    pub accel: &'a str,
+    /// Interned accelerator symbol (shared across every shard — all
+    /// cores derive the same table from the same catalog).
+    pub accel: Sym,
     pub tiles: usize,
 }
 
@@ -254,7 +254,7 @@ pub trait PlacementPolicy: Send {
 
     /// Board index for `req`.  `shards` is never empty; the returned
     /// index is clamped by the caller.
-    fn route(&mut self, shards: &[ShardView<'_>], req: &RouteReq<'_>) -> usize;
+    fn route(&mut self, shards: &[ShardView<'_>], req: &RouteReq) -> usize;
 }
 
 /// Boards in strict rotation — the baseline every smarter policy is
@@ -269,7 +269,7 @@ impl PlacementPolicy for RoundRobin {
         "round-robin"
     }
 
-    fn route(&mut self, shards: &[ShardView<'_>], _req: &RouteReq<'_>) -> usize {
+    fn route(&mut self, shards: &[ShardView<'_>], _req: &RouteReq) -> usize {
         let b = self.next % shards.len();
         self.next = (b + 1) % shards.len();
         b
@@ -295,7 +295,7 @@ impl PlacementPolicy for LeastLoaded {
         "least-loaded"
     }
 
-    fn route(&mut self, shards: &[ShardView<'_>], _req: &RouteReq<'_>) -> usize {
+    fn route(&mut self, shards: &[ShardView<'_>], _req: &RouteReq) -> usize {
         least_loaded(shards)
     }
 }
@@ -324,7 +324,7 @@ impl PlacementPolicy for Locality {
         "locality"
     }
 
-    fn route(&mut self, shards: &[ShardView<'_>], req: &RouteReq<'_>) -> usize {
+    fn route(&mut self, shards: &[ShardView<'_>], req: &RouteReq) -> usize {
         let resident = shards
             .iter()
             .enumerate()
@@ -386,7 +386,7 @@ pub struct ClusterCore {
     health: Vec<BoardHealth>,
     /// Consecutive reconfiguration-failure streak per accelerator
     /// (reset by the first success), driving backoff + the cap.
-    reconfig_failures: BTreeMap<String, u32>,
+    reconfig_failures: BTreeMap<Sym, u32>,
     reconfig_fail_cap: u32,
     /// Requests parked for a backoff retry or the next revival.
     parked: Vec<Parked>,
@@ -488,6 +488,13 @@ impl ClusterCore {
         &self.shards[b].core
     }
 
+    /// Resolve an interned symbol back to its name.  Every shard
+    /// derives the same table from the shared catalog, so shard 0's
+    /// table answers for the whole cluster.
+    pub fn resolve(&self, sym: Sym) -> &str {
+        self.shards[0].core.resolve(sym)
+    }
+
     /// Mutable access to one shard's core — for registering custom
     /// per-shard [`super::SchedPolicy`] implementations before traffic
     /// starts.  Mutating queues mid-flight voids decision parity.
@@ -555,7 +562,12 @@ impl ClusterCore {
         if healthy.is_empty() {
             return Err("no healthy boards in the cluster".to_string());
         }
-        let b = self.route_among(&healthy, user, tenant, accel, tiles);
+        let accel_sym = self.shards[0]
+            .core
+            .symbols()
+            .lookup(accel)
+            .expect("validated accelerator interned");
+        let b = self.route_among(&healthy, user, tenant, accel_sym, tiles);
         self.shards[b].core.submit_for(user, tenant, job, accel, tiles, pin)?;
         self.counters.routed += 1;
         Ok(b)
@@ -576,7 +588,7 @@ impl ClusterCore {
         indices: &[usize],
         user: usize,
         tenant: usize,
-        accel: &str,
+        accel: Sym,
         tiles: usize,
     ) -> usize {
         let ClusterCore { shards, placement, tenant_weights, .. } = self;
@@ -654,7 +666,7 @@ impl ClusterCore {
             return None;
         }
         let d = self.shards[b].core.next_decision()?;
-        self.push_merged(b, d.clone());
+        self.push_merged(b, d);
         Some(d)
     }
 
@@ -782,7 +794,7 @@ impl ClusterCore {
             self.parked.push(Parked { at_ns: now, origin, req, ckpt, snap_home: snapshot_from });
             return (None, None);
         }
-        let to = self.route_among(&healthy, req.user, req.tenant, &req.accel, req.tiles);
+        let to = self.route_among(&healthy, req.user, req.tenant, req.accel, req.tiles);
         let new_ckpt = ckpt.map(|c| self.shards[to].core.adopt_checkpoint(c));
         if let Some(id) = new_ckpt {
             req.resume = Some(id);
@@ -826,7 +838,7 @@ impl ClusterCore {
         }
         let req = self.shards[b].core.rollback_failed_dispatch(d);
         let streak = {
-            let e = self.reconfig_failures.entry(d.accel.clone()).or_insert(0);
+            let e = self.reconfig_failures.entry(d.accel).or_insert(0);
             *e += 1;
             *e
         };
@@ -834,12 +846,13 @@ impl ClusterCore {
         if streak > self.reconfig_fail_cap {
             self.reconfig_failures.remove(&d.accel);
             self.counters.reconfig_rejections += 1;
+            let accel_name = self.shards[b].core.resolve(d.accel).to_string();
             self.shards[b].core.push_rejected(
                 req,
                 format!(
-                    "partial reconfiguration of {:?} failed {streak} consecutive times \
-                     (cap {}); giving up",
-                    d.accel, self.reconfig_fail_cap
+                    "partial reconfiguration of {accel_name:?} failed {streak} consecutive \
+                     times (cap {}); giving up",
+                    self.reconfig_fail_cap
                 ),
             );
             Some(FailDisposition::Rejected)
@@ -919,7 +932,7 @@ impl ClusterCore {
                 continue;
             }
             let Parked { mut req, ckpt, snap_home, .. } = p;
-            let to = self.route_among(&healthy, req.user, req.tenant, &req.accel, req.tiles);
+            let to = self.route_among(&healthy, req.user, req.tenant, req.accel, req.tiles);
             if let Some(c) = ckpt {
                 let id = self.shards[to].core.adopt_checkpoint(c);
                 out.moved_ckpts.push(MovedCkpt {
@@ -1189,7 +1202,7 @@ mod tests {
         drain_board(&mut c, 1, 0);
         let merged: Vec<(usize, String)> = c
             .merged_log()
-            .map(|(b, d)| (*b, d.accel.clone()))
+            .map(|(b, d)| (*b, c.resolve(d.accel).to_string()))
             .collect();
         assert_eq!(merged.len(), 2);
         assert_eq!(merged[0], (0, "vadd".to_string()));

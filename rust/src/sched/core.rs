@@ -92,6 +92,29 @@
 //! drives one trace through both and asserts identical sequences.
 //! Replacement victims are picked through an ordered LRU index
 //! (`BTreeSet<(tick, region)>`), not a linear scan of insertion order.
+//!
+//! ## Hot path & memory discipline
+//!
+//! A scheduling round is allocation-free in the steady state (see
+//! `sched/ARCHITECTURE.md`, *Hot path & memory discipline*):
+//!
+//! - accelerator/variant names are interned once per core into integer
+//!   [`Sym`]s by a [`SymbolTable`] derived deterministically from the
+//!   catalog, so [`Request`]/[`Decision`]/[`RunningSnap`]/[`Checkpoint`]
+//!   are `Copy` and every queue push, log append and tail query is a
+//!   memcpy — names are resolved back to `&str` only at the RPC/trace
+//!   boundary ([`SchedCore::resolve`]);
+//! - per-user queue statistics, pending/backlog/stealable totals and
+//!   the non-empty-user index are maintained incrementally on every
+//!   enqueue/dequeue, so [`SchedCore::next_user`] and the `PlaceReq`
+//!   fields cost `O(log users)` instead of a full scan;
+//! - round-scoped buffers (`scratch_snaps`, `scratch_tenants`) and the
+//!   round-stamped skip marks (`skip_round`) live on the core and are
+//!   reused, never reallocated per round;
+//! - [`RegionMap`] keeps a residency index (accelerator sym → anchor
+//!   set) and a blank-slot index coherent with every `loaded`/`tail_of`
+//!   mutation, so `idle_resident`/`find_free_span`/replication checks
+//!   stop walking every region.
 
 use crate::accel::{Accelerator, Catalog};
 use crate::memsim::{config_for, DdrModel};
@@ -137,17 +160,100 @@ impl Policy {
 
 }
 
+/// An interned accelerator or variant name.
+///
+/// Syms are assigned by [`SymbolTable::from_catalog`] in a
+/// deterministic order (catalog accelerators are name-sorted, variants
+/// region-sorted), so every holder of the same catalog — each cluster
+/// shard, the daemon, a test harness — derives the *identical* mapping
+/// and syms can cross [`SchedCore`] boundaries without translation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Sym(u32);
+
+impl Sym {
+    /// Dense table index of this sym.
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// Interner mapping accelerator/variant names to dense [`Sym`] ids.
+///
+/// Built once per core from the catalog; the scheduler hot path deals
+/// exclusively in syms and resolves back to `&str` only at the
+/// RPC/trace boundary.
+#[derive(Debug, Clone, Default)]
+pub struct SymbolTable {
+    names: Vec<String>,
+    index: BTreeMap<String, Sym>,
+}
+
+impl SymbolTable {
+    pub fn new() -> SymbolTable {
+        SymbolTable::default()
+    }
+
+    /// The canonical table for a catalog: every accelerator name, then
+    /// each of its variant names, in catalog order.  Catalog order is
+    /// itself deterministic (accelerators name-sorted at load, variants
+    /// region-sorted), so two tables built from equal catalogs are
+    /// equal.
+    pub fn from_catalog(catalog: &Catalog) -> SymbolTable {
+        let mut t = SymbolTable::new();
+        for a in &catalog.accelerators {
+            t.intern(&a.name);
+            for v in &a.variants {
+                t.intern(&v.name);
+            }
+        }
+        t
+    }
+
+    /// Intern `name`, returning its (possibly pre-existing) sym.
+    pub fn intern(&mut self, name: &str) -> Sym {
+        if let Some(&s) = self.index.get(name) {
+            return s;
+        }
+        let s = Sym(self.names.len() as u32);
+        self.names.push(name.to_string());
+        self.index.insert(name.to_string(), s);
+        s
+    }
+
+    /// Sym of an already-interned name.
+    pub fn lookup(&self, name: &str) -> Option<Sym> {
+        self.index.get(name).copied()
+    }
+
+    /// Name of `sym` (a stable placeholder for out-of-table syms, so
+    /// diagnostics never panic on a buggy policy's fabricated sym).
+    pub fn resolve(&self, sym: Sym) -> &str {
+        self.names
+            .get(sym.index())
+            .map(String::as_str)
+            .unwrap_or("<unknown-sym>")
+    }
+
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+}
+
 /// What a PR region currently holds.
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct LoadedModule {
-    pub accel: String,
-    pub variant: String,
+    pub accel: Sym,
+    pub variant: Sym,
     /// Adjacent regions the variant spans (anchor included).
     pub span: usize,
 }
 
 /// Scheduler-visible state of one PR region.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Copy)]
 pub struct Region {
     /// The module anchored here (tails carry `None` + `tail_of`).
     pub loaded: Option<LoadedModule>,
@@ -160,7 +266,7 @@ pub struct Region {
 }
 
 /// One queued acceleration request (the §4.4.2 data-parallel unit).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Copy)]
 pub struct Request {
     pub user: usize,
     /// QoS identity the request is accounted to (several users —
@@ -169,11 +275,11 @@ pub struct Request {
     /// Harness-owned token (simulator: workload job index; daemon:
     /// monotonic job id) — echoed back in the [`Decision`].
     pub job: u64,
-    pub accel: String,
+    pub accel: Sym,
     /// Work items batched in this request.
     pub tiles: usize,
     /// Pin a specific implementation variant (None = policy's choice).
-    pub pin: Option<String>,
+    pub pin: Option<Sym>,
     /// `Some(checkpoint id)`: this request is the requeued remainder of
     /// a preempted dispatch and must restore that checkpoint.
     pub resume: Option<u64>,
@@ -197,14 +303,14 @@ pub enum DecisionKind {
 /// A committed scheduling decision: run `user`'s head request on the
 /// module (re)configured at `anchor..anchor+span` — or, for
 /// [`DecisionKind::Preempt`], checkpoint the request running there.
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Decision {
     pub user: usize,
     /// Tenant the dispatched request is accounted to.
     pub tenant: usize,
     pub job: u64,
-    pub accel: String,
-    pub variant: String,
+    pub accel: Sym,
+    pub variant: Sym,
     pub anchor: usize,
     pub span: usize,
     /// Work items this decision covers. For `Preempt` decisions: the
@@ -226,7 +332,7 @@ pub struct Decision {
     /// The dispatched request's variant pin, carried so a failed
     /// placement can be rolled back into an identical [`Request`]
     /// ([`SchedCore::rollback_failed_dispatch`]).
-    pub pin: Option<String>,
+    pub pin: Option<Sym>,
 }
 
 /// Counters both the simulator and the daemon report from.
@@ -303,14 +409,14 @@ impl CostModel {
 /// Read-only view of one running request, handed to
 /// [`SchedPolicy::preempt`] so policies can pick a victim.  Registered
 /// by the harness through [`SchedCore::mark_running`].
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Copy)]
 pub struct RunningSnap {
     pub user: usize,
     /// Tenant of the dispatched request (fair-share victim selection).
     pub tenant: usize,
     pub job: u64,
-    pub accel: String,
-    pub variant: String,
+    pub accel: Sym,
+    pub variant: Sym,
     pub anchor: usize,
     pub span: usize,
     /// Tiles this dispatch covers.
@@ -334,10 +440,10 @@ pub struct RunningSnap {
 /// is resumed.  The scheduler-core half of checkpoint/restore: the
 /// daemon pairs it with a `Cynq::checkpoint_accelerator` register-file
 /// snapshot keyed by the same checkpoint id.
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Checkpoint {
-    pub accel: String,
-    pub variant: String,
+    pub accel: Sym,
+    pub variant: Sym,
     /// Anchor the victim was running at (a restore may relocate).
     pub anchor: usize,
     pub span: usize,
@@ -352,7 +458,7 @@ pub struct Checkpoint {
 /// logged for it, the remainder request the cluster layer migrates,
 /// the progress record the target shard adopts (when any tiles
 /// completed), and the virtual work the failure destroyed.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Copy)]
 pub struct FailoverDrain {
     pub decision: Decision,
     pub request: Request,
@@ -368,6 +474,17 @@ pub struct FailoverDrain {
 
 /// Read-only region state handed to policies, with the span queries the
 /// seed policies need and the ordered-LRU replacement index.
+///
+/// Two secondary indexes keep the placement path from walking every
+/// region (see `sched/ARCHITECTURE.md`, *Hot path & memory
+/// discipline*).  Every `loaded`/`tail_of` mutation is funneled through
+/// [`RegionMap::set_slot`], which maintains both:
+///
+/// - `by_accel`: accelerator sym → anchors where an instance is
+///   resident (entries always have `tail_of == None`; `busy` is
+///   checked per-query because it changes without residency changing);
+/// - `blank`: slots with neither a module nor tail membership — the
+///   candidates for a destroy-nothing blank-span placement.
 pub struct RegionMap {
     regions: Vec<Region>,
     /// Max combinable span anchored at each region (floorplan).
@@ -375,6 +492,10 @@ pub struct RegionMap {
     /// Replacement order: `(last_used tick, region)` — oldest first.
     lru: BTreeSet<(u64, usize)>,
     clock: u64,
+    /// Residency index: accelerator sym → anchors holding an instance.
+    by_accel: BTreeMap<Sym, BTreeSet<usize>>,
+    /// Slots with `loaded == None && tail_of == None`.
+    blank: BTreeSet<usize>,
 }
 
 impl RegionMap {
@@ -395,6 +516,31 @@ impl RegionMap {
             max_span,
             lru: (0..n).map(|i| (0u64, i)).collect(),
             clock: 0,
+            by_accel: BTreeMap::new(),
+            blank: (0..n).collect(),
+        }
+    }
+
+    /// The single mutation point for a slot's residency state; keeps
+    /// `by_accel` and `blank` coherent with `loaded`/`tail_of`.
+    fn set_slot(&mut self, i: usize, loaded: Option<LoadedModule>, tail_of: Option<usize>) {
+        if let Some(old) = self.regions[i].loaded {
+            if let Some(set) = self.by_accel.get_mut(&old.accel) {
+                set.remove(&i);
+                if set.is_empty() {
+                    self.by_accel.remove(&old.accel);
+                }
+            }
+        }
+        self.regions[i].loaded = loaded;
+        self.regions[i].tail_of = tail_of;
+        if let Some(l) = loaded {
+            self.by_accel.entry(l.accel).or_default().insert(i);
+        }
+        if loaded.is_none() && tail_of.is_none() {
+            self.blank.insert(i);
+        } else {
+            self.blank.remove(&i);
         }
     }
 
@@ -425,19 +571,38 @@ impl RegionMap {
         self.regions.iter().filter(|r| !r.busy && r.tail_of.is_none()).count()
     }
 
+    /// Anchors where an instance of `accel` is resident, ascending
+    /// (busy or not) — the residency index behind every reuse scan.
+    pub fn resident(&self, accel: Sym) -> impl Iterator<Item = usize> + '_ {
+        self.by_accel.get(&accel).into_iter().flatten().copied()
+    }
+
+    /// An instance of `accel` is configured somewhere on the fabric.
+    pub fn has_resident(&self, accel: Sym) -> bool {
+        self.by_accel.get(&accel).is_some_and(|s| !s.is_empty())
+    }
+
+    /// An instance of `accel` is resident at some anchor other than
+    /// `anchor` (the replication signal, Fig 20).
+    pub fn replicated_elsewhere(&self, accel: Sym, anchor: usize) -> bool {
+        self.by_accel
+            .get(&accel)
+            .is_some_and(|s| s.iter().any(|&i| i != anchor))
+    }
+
     /// Anchor of an idle resident instance of exactly (`accel`,
     /// `variant`), if one is configured — the shared reuse scan of the
-    /// fixed-variant policies ([`Quantum`], [`FairShare`]).
-    pub fn idle_resident(&self, accel: &str, variant: &str) -> Option<usize> {
-        self.regions.iter().enumerate().find_map(|(i, r)| {
-            if r.busy || r.tail_of.is_some() {
-                return None;
+    /// fixed-variant policies ([`Quantum`], [`FairShare`]).  Walks only
+    /// the residency index, not every region.
+    pub fn idle_resident(&self, accel: Sym, variant: Sym) -> Option<usize> {
+        self.resident(accel).find(|&i| {
+            let r = &self.regions[i];
+            if r.busy {
+                return false;
             }
-            let l = r.loaded.as_ref()?;
-            if l.accel == accel && l.variant == variant && self.span_idle(i, l.span) {
-                Some(i)
-            } else {
-                None
+            match r.loaded {
+                Some(l) => l.variant == variant && self.span_idle(i, l.span),
+                None => false,
             }
         })
     }
@@ -470,11 +635,18 @@ impl RegionMap {
     /// `(tick, region)` entry — so no further fallback is needed, and
     /// `placeable`'s combinable check already implies the span fits
     /// inside the fabric.
+    ///
+    /// The blank-first pass draws candidate anchors from the blank-slot
+    /// index instead of scanning every region: a winning anchor is
+    /// necessarily blank itself (its `loaded` must be `None` and a tail
+    /// always points *backwards*, so `placeable` rules out tail
+    /// membership), hence the blank set — iterated ascending — yields
+    /// exactly the original first-fit anchor.
     pub fn find_free_span(&self, span: usize) -> Option<usize> {
         if span == 0 || span > self.regions.len() {
             return None;
         }
-        if let Some(a) = (0..self.regions.len() - (span - 1)).find(|&a| {
+        if let Some(a) = self.blank.iter().copied().find(|&a| {
             self.placeable(a, span)
                 && (a..a + span).all(|r| self.regions[r].loaded.is_none())
         }) {
@@ -499,16 +671,46 @@ impl RegionMap {
     fn clear_span(&mut self, anchor: usize, span: usize) {
         for r in anchor..anchor + span {
             if let Some(t) = self.regions[r].tail_of {
-                self.regions[t].loaded = None;
+                let keep_tail = self.regions[t].tail_of;
+                self.set_slot(t, None, keep_tail);
             }
-            self.regions[r].tail_of = None;
-            self.regions[r].loaded = None;
+            self.set_slot(r, None, None);
         }
         for r in anchor + span..self.regions.len() {
             if self.regions[r].tail_of.map(|t| t < anchor + span).unwrap_or(false) {
-                self.regions[r].tail_of = None;
-                self.regions[r].loaded = None;
+                self.set_slot(r, None, None);
             }
+        }
+    }
+
+    /// Configure `module` at `anchor..anchor+span`, cannibalising any
+    /// overlapping spans first.
+    fn install(&mut self, anchor: usize, span: usize, module: LoadedModule) {
+        self.clear_span(anchor, span);
+        self.set_slot(anchor, Some(module), None);
+        for r in anchor + 1..anchor + span {
+            self.set_slot(r, None, Some(anchor));
+        }
+    }
+
+    /// Forget the module anchored at `anchor` and its tail membership
+    /// (`busy` is deliberately untouched — see [`SchedCore::evict`]).
+    fn evict_anchor(&mut self, anchor: usize) {
+        let span = self.regions[anchor].loaded.map(|l| l.span).unwrap_or(1);
+        let keep_tail = self.regions[anchor].tail_of;
+        self.set_slot(anchor, None, keep_tail);
+        for r in anchor + 1..(anchor + span).min(self.regions.len()) {
+            if self.regions[r].tail_of == Some(anchor) {
+                self.set_slot(r, None, None);
+            }
+        }
+    }
+
+    /// Forget every module and mark every region idle (board reset).
+    fn clear_all(&mut self) {
+        for i in 0..self.regions.len() {
+            self.set_slot(i, None, None);
+            self.regions[i].busy = false;
         }
     }
 }
@@ -519,7 +721,12 @@ pub struct PlaceReq<'a> {
     /// Tenant the request is accounted to (defaults to `user`).
     pub tenant: usize,
     pub accel: &'a Accelerator,
-    pub pin: Option<&'a str>,
+    /// Interned sym of `accel`'s name (what [`RegionMap::resident`]
+    /// and a [`Placement`] are keyed by).
+    pub accel_sym: Sym,
+    /// Interned syms of `accel.variants`, index-parallel to them.
+    pub variant_syms: &'a [Sym],
+    pub pin: Option<Sym>,
     /// Tiles queued by this user (head request included).
     pub backlog_tiles: usize,
     /// Users with pending work (contention signal for span growth).
@@ -537,11 +744,23 @@ pub struct PlaceReq<'a> {
     pub active_weight: u32,
 }
 
+impl PlaceReq<'_> {
+    /// The variant of `accel` that `sym` names, if any (the sym-keyed
+    /// counterpart of `Accelerator::variant`; variant lists hold 1–3
+    /// entries, so the position scan is effectively constant).
+    pub fn variant_of(&self, sym: Sym) -> Option<&crate::accel::Variant> {
+        self.variant_syms
+            .iter()
+            .position(|&s| s == sym)
+            .map(|i| &self.accel.variants[i])
+    }
+}
+
 /// A policy's answer: where and what to run.
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Placement {
     pub anchor: usize,
-    pub variant: String,
+    pub variant: Sym,
     /// `false` = reuse the resident instance at `anchor` as-is.
     pub reconfigure: bool,
 }
@@ -673,23 +892,23 @@ impl SchedPolicy for Elastic {
         // 1. Reuse an idle region already configured with this
         //    accelerator (prefer the biggest loaded variant — it's
         //    fastest). Pinned jobs reuse only their pinned variant.
-        let mut best_reuse: Option<(usize, usize)> = None; // (anchor, span)
-        for (i, r) in regions.iter().enumerate() {
+        //    Walks the residency index, not every region.
+        let mut best_reuse: Option<(usize, usize, Sym)> = None; // (anchor, span, variant)
+        for i in regions.resident(req.accel_sym) {
+            let r = regions.get(i);
             if r.busy || r.tail_of.is_some() {
                 continue;
             }
-            if let Some(l) = &r.loaded {
-                if l.accel == req.accel.name
-                    && req.pin.map(|p| p == l.variant).unwrap_or(true)
+            if let Some(l) = r.loaded {
+                if req.pin.map(|p| p == l.variant).unwrap_or(true)
                     && regions.span_idle(i, l.span)
-                    && best_reuse.map(|(_, s)| l.span > s).unwrap_or(true)
+                    && best_reuse.map(|(_, s, _)| l.span > s).unwrap_or(true)
                 {
-                    best_reuse = Some((i, l.span));
+                    best_reuse = Some((i, l.span, l.variant));
                 }
             }
         }
-        if let Some((anchor, _)) = best_reuse {
-            let variant = regions.get(anchor).loaded.as_ref().unwrap().variant.clone();
+        if let Some((anchor, _, variant)) = best_reuse {
             return Some(Placement { anchor, variant, reconfigure: false });
         }
 
@@ -702,14 +921,14 @@ impl SchedPolicy for Elastic {
         //    partial bitstream.
         let dma_est_ns = costs.dma_ns(req.accel, 0);
         let placement = if let Some(p) = req.pin {
-            let v = req.accel.variant(p)?;
+            let v = req.variant_of(p)?;
             let anchor = regions.find_free_span(v.regions)?;
-            Placement { anchor, variant: v.name.clone(), reconfigure: true }
+            Placement { anchor, variant: p, reconfigure: true }
         } else {
             let span_cap = if req.active_users <= 1 { regions.len() } else { 1 };
             let free_now = regions.free_slots().max(1);
-            let mut best: Option<(u64, usize, String)> = None;
-            for v in &req.accel.variants {
+            let mut best: Option<(u64, usize, Sym)> = None;
+            for (vi, v) in req.accel.variants.iter().enumerate() {
                 if v.regions > span_cap {
                     continue;
                 }
@@ -722,8 +941,8 @@ impl SchedPolicy for Elastic {
                     let drain =
                         req.backlog_tiles as f64 * (v.compute_ns() + dma_est_ns) / replicas;
                     let score = costs.reconfig_ns(v.regions) + drain as u64;
-                    if best.as_ref().map(|(s, _, _)| score < *s).unwrap_or(true) {
-                        best = Some((score, anchor, v.name.clone()));
+                    if best.map(|(s, _, _)| score < s).unwrap_or(true) {
+                        best = Some((score, anchor, req.variant_syms[vi]));
                     }
                 }
             }
@@ -738,11 +957,12 @@ impl SchedPolicy for Elastic {
         //    when the user's backlog amortises it — otherwise wait for
         //    the busy instance to free up.
         if placement.reconfigure {
-            let instance_busy = regions.iter().any(|r| {
-                r.busy && r.loaded.as_ref().map(|l| l.accel == req.accel.name).unwrap_or(false)
-            });
+            let instance_busy =
+                regions.resident(req.accel_sym).any(|i| regions.get(i).busy);
             if instance_busy {
-                let v = req.accel.variant(&placement.variant).unwrap();
+                let v = req
+                    .variant_of(placement.variant)
+                    .expect("placement variant chosen from this accelerator");
                 let service_ns =
                     (req.backlog_tiles as f64 * (v.compute_ns() + dma_est_ns)) as u64;
                 if costs.reconfig_ns(v.regions) > service_ns {
@@ -784,7 +1004,8 @@ impl SchedPolicy for Fixed {
         if self.home.len() <= req.user {
             self.home.resize(req.user + 1, None);
         }
-        let v = req.accel.smallest_variant();
+        // The smallest variant (variants are region-sorted, so index 0).
+        let vsym = req.variant_syms[0];
         // A region we may (re)configure right now: neither running a
         // request itself nor the tail of a span whose anchor is — a
         // mixed-policy fabric (per-user policies) can have an elastic
@@ -829,10 +1050,9 @@ impl SchedPolicy for Fixed {
         let needs = regions
             .get(home)
             .loaded
-            .as_ref()
-            .map(|l| l.accel != req.accel.name || l.variant != v.name)
+            .map(|l| l.accel != req.accel_sym || l.variant != vsym)
             .unwrap_or(true);
-        Some(Placement { anchor: home, variant: v.name.clone(), reconfigure: needs })
+        Some(Placement { anchor: home, variant: vsym, reconfigure: needs })
     }
 }
 
@@ -873,16 +1093,16 @@ impl SchedPolicy for Quantum {
         _costs: &CostModel,
         req: &PlaceReq,
     ) -> Option<Placement> {
-        let v = match req.pin {
-            Some(p) => req.accel.variant(p)?,
-            None => req.accel.smallest_variant(),
+        let (v, vsym) = match req.pin {
+            Some(p) => (req.variant_of(p)?, p),
+            None => (req.accel.smallest_variant(), req.variant_syms[0]),
         };
         // Reuse an idle resident instance of exactly this variant.
-        if let Some(anchor) = regions.idle_resident(&req.accel.name, &v.name) {
-            return Some(Placement { anchor, variant: v.name.clone(), reconfigure: false });
+        if let Some(anchor) = regions.idle_resident(req.accel_sym, vsym) {
+            return Some(Placement { anchor, variant: vsym, reconfigure: false });
         }
         let anchor = regions.find_free_span(v.regions)?;
-        Some(Placement { anchor, variant: v.name.clone(), reconfigure: true })
+        Some(Placement { anchor, variant: vsym, reconfigure: true })
     }
 
     fn preempt(
@@ -965,16 +1185,16 @@ impl SchedPolicy for FairShare {
                 return None; // over fair share while others wait
             }
         }
-        let v = match req.pin {
-            Some(p) => req.accel.variant(p)?,
-            None => req.accel.smallest_variant(),
+        let (v, vsym) = match req.pin {
+            Some(p) => (req.variant_of(p)?, p),
+            None => (req.accel.smallest_variant(), req.variant_syms[0]),
         };
         // Reuse an idle resident instance of exactly this variant.
-        if let Some(anchor) = regions.idle_resident(&req.accel.name, &v.name) {
-            return Some(Placement { anchor, variant: v.name.clone(), reconfigure: false });
+        if let Some(anchor) = regions.idle_resident(req.accel_sym, vsym) {
+            return Some(Placement { anchor, variant: vsym, reconfigure: false });
         }
         let anchor = regions.find_free_span(v.regions)?;
-        Some(Placement { anchor, variant: v.name.clone(), reconfigure: true })
+        Some(Placement { anchor, variant: vsym, reconfigure: true })
     }
 
     fn preempt(
@@ -1041,12 +1261,32 @@ const LOG_CAP: usize = 65_536;
 /// harness owns time (virtual or real) and hardware effects.
 pub struct SchedCore {
     catalog: Catalog,
+    /// Interned accelerator/variant names (hot path deals in [`Sym`]s).
+    symbols: SymbolTable,
+    /// Sym index → catalog accelerator index (`None` for variant syms).
+    accel_of: Vec<Option<usize>>,
+    /// Per catalog accelerator: its variants' syms, index-parallel.
+    variant_syms: Vec<Vec<Sym>>,
     costs: CostModel,
     regions: RegionMap,
     queues: Vec<VecDeque<Request>>,
+    /// Per-user queue statistics, maintained incrementally on every
+    /// enqueue/dequeue so `pending`/`backlog_tiles`/`stealable_tiles`
+    /// and the per-round `PlaceReq` inputs never rescan the queues.
+    qstats: Vec<QueueStats>,
+    /// Users with a non-empty queue, ascending — the round-robin scan
+    /// set ([`SchedCore::next_user`] is `O(log users)` per pick).
+    nonempty: BTreeSet<usize>,
+    /// Mirrors of the queue totals (see `QueueStats`).
+    pending_total: usize,
+    backlog_total: usize,
+    stealable_total: usize,
     rr: usize,
-    /// Users deferred in the current round (reset by `begin_round`).
-    skip: Vec<usize>,
+    /// Round stamp: `skip_round[u] == round_id` means `u` is deferred
+    /// for the current round (an O(1) membership test that needs no
+    /// per-round clearing, unlike the seed's `Vec<usize>` skip list).
+    round_id: u64,
+    skip_round: Vec<u64>,
     /// A deferred user of the current round is routed to a
     /// preemption-capable policy — the signal harnesses gate their
     /// [`PREEMPT_TICK_NS`] re-check rounds on.
@@ -1083,6 +1323,21 @@ pub struct SchedCore {
     /// Per-tenant scheduling counters (admitted / completed /
     /// preempted / rejected).
     per_tenant: BTreeMap<usize, TenantSchedCounters>,
+    /// Round-scoped scratch buffers, reused across rounds so the
+    /// dispatch loop allocates nothing in the steady state.
+    scratch_snaps: Vec<RunningSnap>,
+    scratch_tenants: Vec<usize>,
+}
+
+/// Incrementally maintained per-user queue statistics.
+#[derive(Debug, Clone, Copy, Default)]
+struct QueueStats {
+    /// Queued tiles (the `PlaceReq::backlog_tiles` signal).
+    tiles: usize,
+    /// Queued tiles on non-resume requests (stealable backlog).
+    steal_tiles: usize,
+    /// Queued non-resume requests (donor eligibility).
+    steal_reqs: usize,
 }
 
 impl SchedCore {
@@ -1090,13 +1345,37 @@ impl SchedCore {
     /// ([`Elastic`], [`Fixed`], [`Quantum`], [`Elastic::preemptive`])
     /// and `default` routing new users.
     pub fn new(shell: &Shell, catalog: Catalog, default: Policy) -> SchedCore {
+        let symbols = SymbolTable::from_catalog(&catalog);
+        let mut accel_of = vec![None; symbols.len()];
+        let mut variant_syms = Vec::with_capacity(catalog.accelerators.len());
+        for (ai, a) in catalog.accelerators.iter().enumerate() {
+            let s = symbols.lookup(&a.name).expect("accelerator name interned");
+            accel_of[s.index()] = Some(ai);
+            variant_syms.push(
+                a.variants
+                    .iter()
+                    .map(|v| symbols.lookup(&v.name).expect("variant name interned"))
+                    .collect(),
+            );
+        }
         SchedCore {
             catalog,
+            symbols,
+            accel_of,
+            variant_syms,
             costs: CostModel::new(shell),
             regions: RegionMap::new(shell),
             queues: Vec::new(),
+            qstats: Vec::new(),
+            nonempty: BTreeSet::new(),
+            pending_total: 0,
+            backlog_total: 0,
+            stealable_total: 0,
             rr: 0,
-            skip: Vec::new(),
+            // Starts at 1 so fresh users' zeroed skip stamps are never
+            // mistaken for "deferred this round".
+            round_id: 1,
+            skip_round: Vec::new(),
             skip_preemptive: false,
             counters: SchedCounters::default(),
             log: VecDeque::new(),
@@ -1125,6 +1404,55 @@ impl SchedCore {
             rejected: Vec::new(),
             tenant_weights: BTreeMap::new(),
             per_tenant: BTreeMap::new(),
+            scratch_snaps: Vec::new(),
+            scratch_tenants: Vec::new(),
+        }
+    }
+
+    /// The interned name table.  Deterministically derived from the
+    /// catalog, so any holder of an equal catalog — every cluster
+    /// shard, the daemon boundary, a test harness — can build an
+    /// identical table with [`SymbolTable::from_catalog`] and exchange
+    /// raw [`Sym`]s with this core.
+    pub fn symbols(&self) -> &SymbolTable {
+        &self.symbols
+    }
+
+    /// Resolve an interned accelerator/variant sym to its name — the
+    /// RPC/trace-boundary escape hatch.
+    pub fn resolve(&self, sym: Sym) -> &str {
+        self.symbols.resolve(sym)
+    }
+
+    /// Account one enqueued request in the incremental queue stats.
+    /// Call with the request being pushed, before or after the push.
+    fn stats_add(&mut self, r: &Request) {
+        let s = &mut self.qstats[r.user];
+        s.tiles += r.tiles;
+        if r.resume.is_none() {
+            s.steal_tiles += r.tiles;
+            s.steal_reqs += 1;
+            self.stealable_total += r.tiles;
+        }
+        self.pending_total += 1;
+        self.backlog_total += r.tiles;
+        self.nonempty.insert(r.user);
+    }
+
+    /// Un-account one dequeued request.  Call AFTER removing it from
+    /// its queue (the non-empty check reads the queue's new length).
+    fn stats_remove(&mut self, r: &Request) {
+        let s = &mut self.qstats[r.user];
+        s.tiles -= r.tiles;
+        if r.resume.is_none() {
+            s.steal_tiles -= r.tiles;
+            s.steal_reqs -= 1;
+            self.stealable_total -= r.tiles;
+        }
+        self.pending_total -= 1;
+        self.backlog_total -= r.tiles;
+        if self.queues[r.user].is_empty() {
+            self.nonempty.remove(&r.user);
         }
     }
 
@@ -1171,6 +1499,8 @@ impl SchedCore {
         if self.queues.len() <= user {
             self.queues.resize_with(user + 1, VecDeque::new);
             self.user_policy.resize(user + 1, self.default_policy);
+            self.qstats.resize(user + 1, QueueStats::default());
+            self.skip_round.resize(user + 1, 0);
         }
     }
 
@@ -1219,45 +1549,47 @@ impl SchedCore {
     ) -> Result<(), String> {
         self.validate(accel, pin)?;
         self.ensure_user(user);
-        self.queues[user].push_back(Request {
+        // Validation guarantees both names are catalog entries, and
+        // every catalog name was interned at construction.
+        let accel_sym = self.symbols.lookup(accel).expect("validated accelerator interned");
+        let pin_sym = pin.map(|p| self.symbols.lookup(p).expect("validated variant interned"));
+        let req = Request {
             user,
             tenant,
             job,
-            accel: accel.to_string(),
+            accel: accel_sym,
             tiles: tiles.max(1),
-            pin: pin.map(str::to_string),
+            pin: pin_sym,
             resume: None,
-        });
+        };
+        self.stats_add(&req);
+        self.queues[user].push_back(req);
         self.per_tenant.entry(tenant).or_default().admitted += 1;
         Ok(())
     }
 
     pub fn pending(&self) -> usize {
-        self.queues.iter().map(VecDeque::len).sum()
+        self.pending_total
     }
 
     pub fn has_pending(&self) -> bool {
-        self.queues.iter().any(|q| !q.is_empty())
+        self.pending_total > 0
     }
 
     /// Total queued tiles across every user — the backlog signal the
     /// cluster layer's placement policies and work-stealing rules read.
+    /// O(1): maintained incrementally by the enqueue/dequeue paths.
     pub fn backlog_tiles(&self) -> usize {
-        self.queues.iter().flat_map(|q| q.iter()).map(|r| r.tiles).sum()
+        self.backlog_total
     }
 
     /// Queued tiles that work stealing may actually move — non-resume
     /// requests only (checkpointed remainders are pinned to this
     /// shard's hardware).  The cluster's donor selection reads this,
     /// not [`SchedCore::backlog_tiles`], so a queue full of pinned
-    /// remainders is never mistaken for a stealable backlog.
+    /// remainders is never mistaken for a stealable backlog.  O(1).
     pub fn stealable_tiles(&self) -> usize {
-        self.queues
-            .iter()
-            .flat_map(|q| q.iter())
-            .filter(|r| r.resume.is_none())
-            .map(|r| r.tiles)
-            .sum()
+        self.stealable_total
     }
 
     /// Pop the most recently queued *non-resume* request from the user
@@ -1267,19 +1599,24 @@ impl SchedCore {
     /// shard's hardware and cannot be restored elsewhere.  `None` when
     /// nothing is stealable.
     pub fn steal_back(&mut self) -> Option<Request> {
-        let stealable = |q: &VecDeque<Request>| -> usize {
-            q.iter().filter(|r| r.resume.is_none()).map(|r| r.tiles).sum()
-        };
-        let user = self
-            .queues
-            .iter()
-            .enumerate()
-            .filter(|(_, q)| q.iter().any(|r| r.resume.is_none()))
-            .max_by_key(|(u, q)| (stealable(q), std::cmp::Reverse(*u)))
-            .map(|(u, _)| u)?;
+        // Donor: deepest stealable backlog, lowest user on ties —
+        // ascending scan with a strict `>` over the incremental stats
+        // (identical pick to the seed's max_by_key over queue scans).
+        let mut donor: Option<(usize, usize)> = None; // (steal_tiles, user)
+        for (u, s) in self.qstats.iter().enumerate() {
+            if s.steal_reqs == 0 {
+                continue;
+            }
+            if donor.map(|(t, _)| s.steal_tiles > t).unwrap_or(true) {
+                donor = Some((s.steal_tiles, u));
+            }
+        }
+        let (_, user) = donor?;
         let q = &mut self.queues[user];
         let idx = q.iter().rposition(|r| r.resume.is_none())?;
-        q.remove(idx)
+        let r = q.remove(idx)?;
+        self.stats_remove(&r);
+        Some(r)
     }
 
     /// Enqueue a request stolen from another shard, fields preserved
@@ -1288,6 +1625,7 @@ impl SchedCore {
     /// by the donor shard against the same catalog.
     pub fn inject(&mut self, req: Request) {
         self.ensure_user(req.user);
+        self.stats_add(&req);
         self.queues[req.user].push_back(req);
     }
 
@@ -1303,7 +1641,9 @@ impl SchedCore {
     /// accounting and is monotone (stale timestamps are ignored).
     pub fn begin_round_at(&mut self, now: u64) {
         self.now = self.now.max(now);
-        self.skip.clear();
+        // Advancing the round stamp invalidates every `skip_round`
+        // mark at once — no O(users) clear.
+        self.round_id += 1;
         self.skip_preemptive = false;
     }
 
@@ -1353,8 +1693,8 @@ impl SchedCore {
                 user: d.user,
                 tenant: d.tenant,
                 job: d.job,
-                accel: d.accel.clone(),
-                variant: d.variant.clone(),
+                accel: d.accel,
+                variant: d.variant,
                 anchor: d.anchor,
                 span: d.span,
                 tiles: d.tiles,
@@ -1387,17 +1727,19 @@ impl SchedCore {
     }
 
     /// Round-robin pick of the next user with pending, non-deferred
-    /// work.
+    /// work.  Walks the non-empty-user index from the RR cursor (with
+    /// wrap-around) instead of scanning every queue, so a pick costs
+    /// `O(log users + deferred)` rather than `O(users)`.
     fn next_user(&mut self) -> Option<usize> {
         let n = self.queues.len();
-        for k in 0..n {
-            let u = (self.rr + k) % n;
-            if !self.queues[u].is_empty() && !self.skip.contains(&u) {
-                self.rr = (u + 1) % n;
-                return Some(u);
-            }
-        }
-        None
+        let u = self
+            .nonempty
+            .range(self.rr..)
+            .chain(self.nonempty.range(..self.rr))
+            .copied()
+            .find(|&u| self.skip_round[u] != self.round_id)?;
+        self.rr = (u + 1) % n;
+        Some(u)
     }
 
     /// Produce the next placement of the current round, applying it to
@@ -1408,13 +1750,15 @@ impl SchedCore {
     pub fn next_decision(&mut self) -> Option<Decision> {
         loop {
             let user = self.next_user()?;
-            let head = self.queues[user].front().cloned().unwrap();
-            let backlog_tiles: usize = self.queues[user].iter().map(|r| r.tiles).sum();
-            let active_users = self.queues.iter().filter(|q| !q.is_empty()).count();
+            let head = *self.queues[user].front().unwrap();
+            let backlog_tiles = self.qstats[user].tiles;
+            let active_users = self.nonempty.len();
             let now = self.now;
             // Fair-share inputs: the tenant's in-flight span count and
             // the total weight of every active tenant (pending work or
             // a running dispatch), computed before the split borrow.
+            // The tenant set is collected into a reused scratch buffer
+            // (sort + dedup) instead of a fresh BTreeSet per round.
             let tenant = head.tenant;
             let tenant_running: usize = self
                 .running
@@ -1424,37 +1768,58 @@ impl SchedCore {
                 .sum();
             let weight = self.tenant_weight(tenant);
             let active_weight: u32 = {
-                let mut active: BTreeSet<usize> = self
-                    .queues
-                    .iter()
-                    .filter_map(|q| q.front().map(|r| r.tenant))
-                    .collect();
+                let mut active = std::mem::take(&mut self.scratch_tenants);
+                active.clear();
+                active.extend(
+                    self.nonempty
+                        .iter()
+                        .filter_map(|&u| self.queues[u].front().map(|r| r.tenant)),
+                );
                 active.extend(self.running.values().map(|r| r.tenant));
-                active.iter().map(|&t| self.tenant_weight(t)).sum()
+                active.sort_unstable();
+                active.dedup();
+                let w = active.iter().map(|&t| self.tenant_weight(t)).sum();
+                self.scratch_tenants = active;
+                w
             };
 
             // Split-borrow the fields so a stateful policy can mutate
             // itself while reading regions/costs.
             let SchedCore {
-                catalog, costs, regions, policies, user_policy, default_policy, running, ..
+                catalog,
+                costs,
+                regions,
+                policies,
+                user_policy,
+                default_policy,
+                running,
+                accel_of,
+                variant_syms,
+                scratch_snaps,
+                ..
             } = self;
-            let Some(accel) = catalog.get(&head.accel) else {
+            let Some(ai) = accel_of.get(head.accel.index()).copied().flatten() else {
                 // Unknown accelerator past admission (`submit` validates,
                 // so only a harness bug or catalog swap gets here):
                 // reject the request back to the harness instead of
                 // killing the dispatcher.
                 let request = self.queues[user].pop_front().unwrap();
-                let reason = format!("no accelerator named {:?}", request.accel);
+                self.stats_remove(&request);
+                let reason =
+                    format!("no accelerator named {:?}", self.symbols.resolve(request.accel));
                 self.drop_checkpoint_of(&request);
                 self.per_tenant.entry(request.tenant).or_default().rejected += 1;
                 self.rejected.push((request, reason));
                 continue;
             };
+            let accel = &catalog.accelerators[ai];
             let req = PlaceReq {
                 user,
                 tenant,
                 accel,
-                pin: head.pin.as_deref(),
+                accel_sym: head.accel,
+                variant_syms: &variant_syms[ai][..],
+                pin: head.pin,
                 backlog_tiles,
                 active_users,
                 tenant_running,
@@ -1466,11 +1831,13 @@ impl SchedCore {
                 // No placement: the policy may checkpoint a running
                 // span instead of deferring (time-domain elasticity).
                 // The running-set snapshot is only built for policies
-                // that can actually use it.
+                // that can actually use it — into a reused scratch
+                // buffer (records are `Copy`), not a fresh Vec.
                 let preemptive = policies[idx].can_preempt();
                 let victim = if preemptive {
-                    let snaps: Vec<RunningSnap> = running.values().cloned().collect();
-                    policies[idx].preempt(regions, costs, &snaps, &req, now)
+                    scratch_snaps.clear();
+                    scratch_snaps.extend(running.values().copied());
+                    policies[idx].preempt(regions, costs, &scratch_snaps[..], &req, now)
                 } else {
                     None
                 };
@@ -1485,20 +1852,26 @@ impl SchedCore {
                     }
                 }
                 self.counters.skips += 1;
-                self.skip.push(user);
+                self.skip_round[user] = self.round_id;
                 self.skip_preemptive |= preemptive;
                 continue;
             };
 
-            let Some(span) = accel.variant(&p.variant).map(|v| v.regions) else {
+            let Some(span) = variant_syms[ai]
+                .iter()
+                .position(|&s| s == p.variant)
+                .map(|vi| accel.variants[vi].regions)
+            else {
                 // A buggy policy chose a variant the catalog does not
                 // know: reject the request (the client learns why)
                 // rather than panicking the dispatcher.
                 let pname = policies[idx].name();
                 let request = self.queues[user].pop_front().unwrap();
+                self.stats_remove(&request);
                 let reason = format!(
                     "policy {pname:?} chose unknown variant {:?} for {:?}",
-                    p.variant, request.accel
+                    self.symbols.resolve(p.variant),
+                    self.symbols.resolve(request.accel)
                 );
                 self.drop_checkpoint_of(&request);
                 self.per_tenant.entry(request.tenant).or_default().rejected += 1;
@@ -1506,17 +1879,13 @@ impl SchedCore {
                 continue;
             };
             let request = self.queues[user].pop_front().unwrap();
+            self.stats_remove(&request);
             if p.reconfigure {
-                self.regions.clear_span(p.anchor, span);
-                self.regions.regions[p.anchor].loaded = Some(LoadedModule {
-                    accel: request.accel.clone(),
-                    variant: p.variant.clone(),
+                self.regions.install(
+                    p.anchor,
                     span,
-                });
-                for r in p.anchor + 1..p.anchor + span {
-                    self.regions.regions[r].loaded = None;
-                    self.regions.regions[r].tail_of = Some(p.anchor);
-                }
+                    LoadedModule { accel: request.accel, variant: p.variant, span },
+                );
                 self.counters.reconfigs += 1;
             } else {
                 self.counters.reuses += 1;
@@ -1526,11 +1895,9 @@ impl SchedCore {
                 self.regions.touch(r);
             }
             // Replication: after this placement, is the same
-            // accelerator resident at any other anchor?
-            let replicated = self.regions.regions.iter().enumerate().any(|(i, r)| {
-                i != p.anchor
-                    && r.loaded.as_ref().map(|l| l.accel == request.accel).unwrap_or(false)
-            });
+            // accelerator resident at any other anchor?  O(log) via
+            // the residency index.
+            let replicated = self.regions.replicated_elsewhere(request.accel, p.anchor);
             if replicated && p.reconfigure {
                 self.counters.replications += 1;
             }
@@ -1576,7 +1943,7 @@ impl SchedCore {
             self.log.pop_front();
             self.log_dropped += 1;
         }
-        self.log.push_back(d.clone());
+        self.log.push_back(*d);
     }
 
     /// Override the decision-log ring cap (default 65 536) — for ops
@@ -1627,8 +1994,8 @@ impl SchedCore {
         self.checkpoints.insert(
             id,
             Checkpoint {
-                accel: rec.accel.clone(),
-                variant: rec.variant.clone(),
+                accel: rec.accel,
+                variant: rec.variant,
                 anchor,
                 span: rec.span,
                 tiles_done: done,
@@ -1636,15 +2003,17 @@ impl SchedCore {
             },
         );
         self.ensure_user(rec.user);
-        self.queues[rec.user].push_front(Request {
+        let req = Request {
             user: rec.user,
             tenant: rec.tenant,
             job: rec.job,
-            accel: rec.accel.clone(),
+            accel: rec.accel,
             tiles: remaining,
-            pin: Some(rec.variant.clone()),
+            pin: Some(rec.variant),
             resume: Some(id),
-        });
+        };
+        self.stats_add(&req);
+        self.queues[rec.user].push_front(req);
         self.counters.preemptions += 1;
         self.per_tenant.entry(rec.tenant).or_default().preempted += 1;
         let d = Decision {
@@ -1652,7 +2021,7 @@ impl SchedCore {
             tenant: rec.tenant,
             job: rec.job,
             accel: rec.accel,
-            variant: rec.variant.clone(),
+            variant: rec.variant,
             anchor,
             span: rec.span,
             tiles: remaining,
@@ -1687,18 +2056,7 @@ impl SchedCore {
     /// keep preferring a phantom instance forever. The anchor's `busy`
     /// flag is untouched; the harness still owns the completion.
     pub fn evict(&mut self, anchor: usize) {
-        let span = self.regions.regions[anchor]
-            .loaded
-            .as_ref()
-            .map(|l| l.span)
-            .unwrap_or(1);
-        self.regions.regions[anchor].loaded = None;
-        for r in anchor + 1..(anchor + span).min(self.regions.regions.len()) {
-            if self.regions.regions[r].tail_of == Some(anchor) {
-                self.regions.regions[r].tail_of = None;
-                self.regions.regions[r].loaded = None;
-            }
-        }
+        self.regions.evict_anchor(anchor);
     }
 
     // ---- failure domain (see cluster.rs for the recovery policy) ----
@@ -1730,9 +2088,9 @@ impl SchedCore {
             user: d.user,
             tenant: d.tenant,
             job: d.job,
-            accel: d.accel.clone(),
+            accel: d.accel,
             tiles: d.tiles,
-            pin: d.pin.clone(),
+            pin: d.pin,
             resume,
         }
     }
@@ -1762,7 +2120,7 @@ impl SchedCore {
             self.consumed.remove(&id);
         }
         self.ensure_user(rec.user);
-        self.queues[rec.user].push_front(Request {
+        let req = Request {
             user: rec.user,
             tenant: rec.tenant,
             job: rec.job,
@@ -1770,7 +2128,9 @@ impl SchedCore {
             tiles: rec.tiles,
             pin: Some(rec.variant),
             resume: None,
-        });
+        };
+        self.stats_add(&req);
+        self.queues[rec.user].push_front(req);
         Some(now.saturating_sub(rec.start))
     }
 
@@ -1813,8 +2173,8 @@ impl SchedCore {
             let saved = (done as u128 * window as u128 / rec.tiles as u128) as u64;
             let lost_ns = run_ns.saturating_sub(saved);
             let checkpoint = (done > 0).then(|| Checkpoint {
-                accel: rec.accel.clone(),
-                variant: rec.variant.clone(),
+                accel: rec.accel,
+                variant: rec.variant,
                 anchor,
                 span: rec.span,
                 tiles_done: done,
@@ -1828,8 +2188,8 @@ impl SchedCore {
                 user: rec.user,
                 tenant: rec.tenant,
                 job: rec.job,
-                accel: rec.accel.clone(),
-                variant: rec.variant.clone(),
+                accel: rec.accel,
+                variant: rec.variant,
                 anchor,
                 span: rec.span,
                 tiles: remaining,
@@ -1837,7 +2197,7 @@ impl SchedCore {
                 replicated: false,
                 kind: DecisionKind::Preempt,
                 ckpt: None,
-                pin: Some(rec.variant.clone()),
+                pin: Some(rec.variant),
             };
             self.log_decision(&d);
             let request = Request {
@@ -1861,11 +2221,11 @@ impl SchedCore {
     /// TOGETHER with its progress record, so the cluster layer can
     /// re-home both on the adopting shard.
     pub fn drain_pending_with_checkpoints(&mut self) -> Vec<(Request, Option<Checkpoint>)> {
-        let SchedCore { queues, checkpoints, .. } = self;
         let mut out = Vec::new();
-        for q in queues.iter_mut() {
-            for r in q.drain(..) {
-                let ck = r.resume.and_then(|id| checkpoints.remove(&id));
+        for u in 0..self.queues.len() {
+            while let Some(r) = self.queues[u].pop_front() {
+                self.stats_remove(&r);
+                let ck = r.resume.and_then(|id| self.checkpoints.remove(&id));
                 out.push((r, ck));
             }
         }
@@ -1891,11 +2251,7 @@ impl SchedCore {
     /// after a revival the reuse path must reconfigure from scratch
     /// instead of trusting pre-failure residency.
     pub fn clear_residency(&mut self) {
-        for r in &mut self.regions.regions {
-            r.loaded = None;
-            r.tail_of = None;
-            r.busy = false;
-        }
+        self.regions.clear_all();
     }
 
     /// Drop the checkpoint a resume-request was due to consume — called
@@ -1938,9 +2294,11 @@ impl SchedCore {
             self.consumed.remove(&id);
         }
         self.running.retain(|_, r| r.user != user);
-        let out: Vec<Request> = self.queues[user].drain(..).collect();
-        for r in &out {
-            self.drop_checkpoint_of(r);
+        let mut out = Vec::new();
+        while let Some(r) = self.queues[user].pop_front() {
+            self.stats_remove(&r);
+            self.drop_checkpoint_of(&r);
+            out.push(r);
         }
         out
     }
@@ -1950,11 +2308,12 @@ impl SchedCore {
     /// checkpoints the drained resume-requests were due to consume.
     pub fn drain_pending(&mut self) -> Vec<Request> {
         let mut out = Vec::new();
-        for q in &mut self.queues {
-            out.extend(q.drain(..));
-        }
-        for r in &out {
-            self.drop_checkpoint_of(r);
+        for u in 0..self.queues.len() {
+            while let Some(r) = self.queues[u].pop_front() {
+                self.stats_remove(&r);
+                self.drop_checkpoint_of(&r);
+                out.push(r);
+            }
         }
         out
     }
@@ -1966,8 +2325,18 @@ impl SchedCore {
     /// continues plus its own context restore (both charged to the
     /// preempted request, never to the tenant that displaced it).
     pub fn service_ns(&self, d: &Decision, concurrent: usize) -> u64 {
-        let accel = self.catalog.get(&d.accel).expect("decision for unknown accel");
-        let variant = accel.variant(&d.variant).expect("decision for unknown variant");
+        let ai = self
+            .accel_of
+            .get(d.accel.index())
+            .copied()
+            .flatten()
+            .expect("decision for unknown accel");
+        let accel = &self.catalog.accelerators[ai];
+        let vi = self.variant_syms[ai]
+            .iter()
+            .position(|&s| s == d.variant)
+            .expect("decision for unknown variant");
+        let variant = &accel.variants[vi];
         let mut ns = (self.costs.per_tile_ns(accel, variant, concurrent) * d.tiles as f64) as u64;
         if d.reconfigure {
             ns += self.costs.reconfig_ns(d.span);
@@ -2296,7 +2665,7 @@ mod tests {
         assert_eq!(r.ckpt, p.ckpt);
         assert!(c.checkpoint(p.ckpt.unwrap()).is_none(), "checkpoint consumed");
         assert_eq!(c.counters().resumes, 1);
-        let plain = Decision { kind: DecisionKind::Run, ckpt: None, ..r.clone() };
+        let plain = Decision { kind: DecisionKind::Run, ckpt: None, ..r };
         assert!(
             c.service_ns(&r, 0) > c.service_ns(&plain, 0),
             "resume must carry checkpoint/restore overhead"
@@ -2353,13 +2722,12 @@ mod tests {
                 &mut self,
                 _r: &RegionMap,
                 _c: &CostModel,
-                _q: &PlaceReq,
+                q: &PlaceReq,
             ) -> Option<Placement> {
-                Some(Placement {
-                    anchor: 0,
-                    variant: "not_a_variant".into(),
-                    reconfigure: true,
-                })
+                // The accelerator's own symbol is a valid `Sym` that is
+                // never one of its variant symbols — a variant the
+                // catalog does not know.
+                Some(Placement { anchor: 0, variant: q.accel_sym, reconfigure: true })
             }
         }
         let mut c = core(Policy::Elastic);
@@ -2516,7 +2884,7 @@ mod tests {
         c.mark_running(&d, 0, lat);
         let req = c.rollback_failed_dispatch(&d);
         assert_eq!((req.user, req.job, req.tiles), (0, 3, 2));
-        assert_eq!(req.pin.as_deref(), Some("sobel_v1"), "pin survives the rollback");
+        assert_eq!(req.pin.map(|p| c.resolve(p)), Some("sobel_v1"), "pin survives the rollback");
         assert!(req.resume.is_none());
         assert_eq!(c.running_count(), 0, "running record dropped");
         assert!(!c.regions().get(d.anchor).busy);
@@ -2546,7 +2914,7 @@ mod tests {
         assert_eq!(f.decision.kind, DecisionKind::Preempt);
         assert!(f.decision.ckpt.is_none(), "target shard assigns the id");
         assert!(f.done > 0 && f.done < 100, "mid-run progress expected: {f:?}");
-        let ck = f.checkpoint.clone().unwrap();
+        let ck = f.checkpoint.unwrap();
         assert_eq!(ck.tiles_done + f.request.tiles, 100, "no lost or duplicated tiles");
         assert!(f.lost_ns > 0, "setup + partial tile are lost");
         assert!(f.lost_ns < lat, "most of the run is preserved");
@@ -2554,8 +2922,8 @@ mod tests {
         assert!(!c.regions().get(f.anchor).busy);
         // The remainder resumes on ANOTHER shard via adoption.
         let mut other = core(Policy::Quantum);
-        let id = other.adopt_checkpoint(ck.clone());
-        let mut req = f.request.clone();
+        let id = other.adopt_checkpoint(ck);
+        let mut req = f.request;
         req.resume = Some(id);
         other.inject(req);
         other.begin_round_at(0);

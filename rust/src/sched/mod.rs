@@ -64,7 +64,7 @@ mod workload;
 pub use self::core::{
     Checkpoint, CostModel, Decision, DecisionKind, Elastic, FailoverDrain, FairShare, Fixed,
     LoadedModule, PlaceReq, Placement, Policy, Quantum, Region, RegionMap, Request, RunningSnap,
-    SchedCore, SchedCounters, SchedPolicy, TenantSchedCounters, PREEMPT_TICK_NS,
+    SchedCore, SchedCounters, SchedPolicy, Sym, SymbolTable, TenantSchedCounters, PREEMPT_TICK_NS,
 };
 pub use admission::{
     AdmissionConfig, AdmissionPipeline, AdmitError, AdmitRequest, QosClass, TenantAdmitCounters,

@@ -320,10 +320,11 @@ pub fn simulate(catalog: &Catalog, workload: &Workload, cfg: &SimConfig) -> SimR
             // which inflates tiles_executed but never corrupts outputs
             // (re-runs are idempotent; virtual time is unaffected).
             if let Some(exec) = &cfg.executor {
-                let accel = catalog.get(&d.accel).unwrap();
+                let accel = catalog.get(core.resolve(d.accel)).unwrap();
+                let variant_name = core.resolve(d.variant).to_string();
                 for _ in 0..d.tiles {
                     let inputs = gen_inputs(accel, &mut rng);
-                    let out = exec.execute(&d.variant, inputs).expect("real compute failed");
+                    let out = exec.execute(&variant_name, inputs).expect("real compute failed");
                     for buf in &out.outputs {
                         for v in buf {
                             let bits = v.to_bits() as u64;
@@ -343,8 +344,8 @@ pub fn simulate(catalog: &Catalog, workload: &Workload, cfg: &SimConfig) -> SimR
                 region: d.anchor,
                 span: d.span,
                 user: d.user,
-                accel: d.accel.clone(),
-                variant: d.variant.clone(),
+                accel: core.resolve(d.accel).to_string(),
+                variant: core.resolve(d.variant).to_string(),
                 tiles: d.tiles,
                 reconfigured: d.reconfigure,
             });
@@ -385,7 +386,7 @@ pub fn simulate(catalog: &Catalog, workload: &Workload, cfg: &SimConfig) -> SimR
     }
 
     result.counters = core.counters().clone();
-    result.decisions = core.decision_log().cloned().collect();
+    result.decisions = core.decision_log().copied().collect();
     result.per_tenant = core.tenant_counters().iter().map(|(&t, &c)| (t, c)).collect();
     result
 }
@@ -812,11 +813,11 @@ pub fn simulate_cluster(
         .map(|b| BoardSim {
             board: cluster.board(b),
             counters: cluster.core(b).counters().clone(),
-            decisions: cluster.core(b).decision_log().cloned().collect(),
+            decisions: cluster.core(b).decision_log().copied().collect(),
             busy_ns: busy_ns[b],
         })
         .collect();
-    result.merged = cluster.merged_log().cloned().collect();
+    result.merged = cluster.merged_log().copied().collect();
     result.cluster = cluster.cluster_counters().clone();
     result.per_tenant = cluster.tenant_counters().into_iter().collect();
     result
@@ -1445,11 +1446,12 @@ mod tests {
         let c = catalog();
         let w = single_user("fir", 4, 2);
         let r = simulate(&c, &w, &SimConfig::new(ShellBoard::Ultra96, Policy::Elastic));
+        let symbols = crate::sched::SymbolTable::from_catalog(&c);
         assert_eq!(r.decisions.len(), r.trace.len());
         for (d, t) in r.decisions.iter().zip(&r.trace) {
             assert_eq!(d.anchor, t.region);
             assert_eq!(d.span, t.span);
-            assert_eq!(d.variant, t.variant);
+            assert_eq!(symbols.resolve(d.variant), t.variant);
             assert_eq!(d.reconfigure, t.reconfigured);
         }
         assert_eq!(r.counters.reconfigs + r.counters.reuses, r.trace.len() as u64);

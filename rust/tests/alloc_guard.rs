@@ -1,0 +1,122 @@
+//! Allocation guard for the log tail queries: tailing a 100k-entry
+//! decision log (and a cluster merged log) must perform **zero** heap
+//! allocations.  Decisions carry interned symbols — no heap fields —
+//! so a tail query is pure pointer iteration over the ring buffer;
+//! this test pins that property with a counting global allocator.
+//!
+//! The counter is armed per-thread (a thread-local flag) so libtest's
+//! own threads cannot pollute the window.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use fos::accel::Catalog;
+use fos::sched::{ClusterCore, PlacementKind, Policy, SchedCore};
+use fos::shell::{Shell, ShellBoard};
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+thread_local! {
+    static ARMED: Cell<bool> = const { Cell::new(false) };
+}
+
+struct CountingAlloc;
+
+// SAFETY: delegates every operation to `System` unchanged; the only
+// addition is a counter bump, which allocates nothing (the armed flag
+// is a const-initialised `Cell<bool>`, so the TLS access itself never
+// allocates, and `try_with` covers teardown).
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        bump();
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+fn bump() {
+    if ARMED.try_with(Cell::get).unwrap_or(false) {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Run `f` with the counter armed on this thread; returns how many
+/// allocations happened inside the window.
+fn allocations_in(f: impl FnOnce()) -> u64 {
+    let before = ALLOCS.load(Ordering::Relaxed);
+    ARMED.with(|a| a.set(true));
+    f();
+    ARMED.with(|a| a.set(false));
+    ALLOCS.load(Ordering::Relaxed) - before
+}
+
+const LOG: usize = 100_000;
+
+#[test]
+fn log_tail_queries_do_zero_heap_allocations() {
+    let catalog = Catalog::load_default().unwrap();
+
+    // --- single core: fill a 100k-entry ring log ------------------
+    let shell = Shell::build(ShellBoard::Ultra96);
+    let mut core = SchedCore::new(&shell, catalog.clone(), Policy::Elastic);
+    core.set_log_cap(LOG);
+    for j in 0..LOG as u64 {
+        core.submit(0, j, "vadd", 1, None).unwrap();
+        core.begin_round();
+        let d = core.next_decision().expect("vadd must place on an idle fabric");
+        core.complete(d.anchor);
+    }
+    assert_eq!(core.decision_log().count(), LOG, "log must be full before the query");
+
+    let allocs = allocations_in(|| {
+        let mut acc = 0usize;
+        for d in core.decision_log_tail(LOG) {
+            acc += d.anchor + d.span + d.tiles + d.accel.index() + d.variant.index();
+        }
+        std::hint::black_box(acc);
+    });
+    assert_eq!(allocs, 0, "decision_log_tail over {LOG} entries allocated {allocs} times");
+
+    // --- cluster: the merged tagged log ---------------------------
+    let mut cluster = ClusterCore::new(
+        &[ShellBoard::Ultra96, ShellBoard::Zcu102],
+        &catalog,
+        Policy::Elastic,
+        PlacementKind::RoundRobin,
+    );
+    for j in 0..512u64 {
+        let b = cluster.submit(0, j, "vadd", 1, None).unwrap();
+        cluster.begin_round_at(b, 0);
+        while let Some(d) = cluster.next_decision(b) {
+            cluster.complete(b, d.anchor);
+        }
+    }
+    let merged = cluster.merged_log().count();
+    assert!(merged >= 512, "cluster drive must populate the merged log ({merged})");
+
+    let allocs = allocations_in(|| {
+        let mut acc = 0usize;
+        for (b, d) in cluster.merged_log_tail(merged) {
+            acc += b + d.anchor + d.accel.index();
+        }
+        std::hint::black_box(acc);
+    });
+    assert_eq!(allocs, 0, "merged_log_tail over {merged} entries allocated {allocs} times");
+}

@@ -16,25 +16,20 @@ use fos::accel::Catalog;
 use fos::daemon::{Daemon, FpgaRpc, Job};
 use fos::sched::{
     simulate_cluster, AdmissionConfig, ClusterSimConfig, ClusterSimResult, Decision,
-    DecisionKind, FaultPlan, JobSpec, PlacementKind, Policy, Workload,
+    DecisionKind, FaultPlan, JobSpec, PlacementKind, Policy, Sym, Workload,
 };
 use fos::shell::ShellBoard;
 use std::path::PathBuf;
 
 /// (kind, accel, variant, anchor, span, reconfigure, replicated, tiles)
-type Key = (DecisionKind, String, String, usize, usize, bool, bool, usize);
+///
+/// Accel/variant are interned symbols; both harnesses derive the same
+/// deterministic table from the shared catalog, so equal syms mean
+/// equal names.
+type Key = (DecisionKind, Sym, Sym, usize, usize, bool, bool, usize);
 
 fn key(d: &Decision) -> Key {
-    (
-        d.kind,
-        d.accel.clone(),
-        d.variant.clone(),
-        d.anchor,
-        d.span,
-        d.reconfigure,
-        d.replicated,
-        d.tiles,
-    )
+    (d.kind, d.accel, d.variant, d.anchor, d.span, d.reconfigure, d.replicated, d.tiles)
 }
 
 fn sock(name: &str) -> PathBuf {

@@ -1,0 +1,125 @@
+//! Golden decision-sequence snapshot: the fig22/fig23 workload mixes
+//! run through `simulate` / `simulate_cluster`, with every decision's
+//! (board, kind, accel, anchor) tuple compared byte-for-byte against a
+//! committed fixture.
+//!
+//! The point: hot-path work (symbol interning, slab recycling, indexed
+//! placement) must be behaviour-preserving, and this test makes any
+//! silent scheduling drift a visible diff.  Regenerate the fixture
+//! deliberately with:
+//!
+//! ```text
+//! FOS_UPDATE_GOLDEN=1 cargo test --test golden_decisions
+//! ```
+
+use fos::accel::Catalog;
+use fos::sched::{
+    simulate, simulate_cluster, ClusterSimConfig, JobSpec, PlacementKind, Policy, SimConfig,
+    SymbolTable, Workload,
+};
+use fos::shell::ShellBoard;
+
+const FIXTURE: &str =
+    concat!(env!("CARGO_MANIFEST_DIR"), "/tests/fixtures/golden_decisions.txt");
+
+/// The fig22 time-multiplexing mix: three long Mandelbrot streams next
+/// to ten short pinned Sobel frames (fixed smoke-scale sizes so the
+/// fixture is identical with and without `FOS_BENCH_SMOKE`).
+fn fig22_mix() -> Workload {
+    let mut w = Workload::new();
+    for _ in 0..3 {
+        w.push(JobSpec::stream(0, "mandelbrot", Some("mandelbrot_v1"), 0, 60));
+    }
+    for j in JobSpec::frame_pinned(1, "sobel", "sobel_v1", 0, 20, 10) {
+        w.push(j);
+    }
+    w
+}
+
+/// The fig23 cluster mix: 8 tenants x 4 staggered waves over 8
+/// accelerators (the bench's smoke-scale parameters, fixed here).
+fn fig23_mix() -> Workload {
+    Workload::cluster_mix(8, 4, 3, 8, 400_000)
+}
+
+fn boards(n: usize) -> Vec<ShellBoard> {
+    (0..n)
+        .map(|k| if k % 2 == 0 { ShellBoard::Ultra96 } else { ShellBoard::Zcu102 })
+        .collect()
+}
+
+/// Render every decision of every scenario as one line per decision:
+/// `<board> <kind> <accel> <anchor>` under a `== scenario ==` header.
+fn render(catalog: &Catalog) -> String {
+    // Decisions carry interned symbols; resolve through the same
+    // deterministic table every core derives from this catalog.
+    let symbols = SymbolTable::from_catalog(catalog);
+    let mut out = String::new();
+    let w22 = fig22_mix();
+    for policy in [Policy::Elastic, Policy::Quantum, Policy::ElasticPreempt] {
+        let r = simulate(catalog, &w22, &SimConfig::new(ShellBoard::Ultra96, policy));
+        out.push_str(&format!("== fig22 {} ==\n", policy.name()));
+        for d in &r.decisions {
+            out.push_str(&format!("0 {:?} {} {}\n", d.kind, symbols.resolve(d.accel), d.anchor));
+        }
+    }
+    let w23 = fig23_mix();
+    for kind in [PlacementKind::RoundRobin, PlacementKind::LeastLoaded, PlacementKind::Locality]
+    {
+        let r = simulate_cluster(
+            catalog,
+            &w23,
+            &ClusterSimConfig::new(boards(4), Policy::Elastic, kind),
+        );
+        out.push_str(&format!("== fig23 x4 {} ==\n", kind.name()));
+        for (b, d) in &r.merged {
+            out.push_str(&format!(
+                "{} {:?} {} {}\n",
+                b,
+                d.kind,
+                symbols.resolve(d.accel),
+                d.anchor
+            ));
+        }
+    }
+    out
+}
+
+#[test]
+fn decision_sequences_match_committed_fixture() {
+    let catalog = Catalog::load_default().unwrap();
+    let got = render(&catalog);
+    if std::env::var("FOS_UPDATE_GOLDEN").is_ok_and(|v| !v.is_empty() && v != "0") {
+        std::fs::create_dir_all(std::path::Path::new(FIXTURE).parent().unwrap()).unwrap();
+        std::fs::write(FIXTURE, &got).unwrap();
+        eprintln!("golden fixture rewritten: {FIXTURE}");
+        return;
+    }
+    let want = match std::fs::read_to_string(FIXTURE) {
+        Ok(w) => w,
+        Err(_) => {
+            // Bootstrap (the repo's bench-baseline pattern): the first
+            // run on a machine with a toolchain arms the fixture from
+            // the deterministic sim output; every later run — and any
+            // hot-path change — is then gated byte-for-byte against it.
+            // Commit the generated file to pin the sequences.
+            std::fs::create_dir_all(std::path::Path::new(FIXTURE).parent().unwrap()).unwrap();
+            std::fs::write(FIXTURE, &got).unwrap();
+            eprintln!("golden fixture bootstrapped: {FIXTURE} — commit it to arm the gate");
+            return;
+        }
+    };
+    if got != want {
+        // A full-text assert would dump ~10k lines; report the first
+        // divergence instead.
+        for (i, (g, w)) in got.lines().zip(want.lines()).enumerate() {
+            assert_eq!(g, w, "first divergence at fixture line {}", i + 1);
+        }
+        assert_eq!(
+            got.lines().count(),
+            want.lines().count(),
+            "decision sequence length changed"
+        );
+        unreachable!("sequences differ but no divergent line found");
+    }
+}

@@ -150,9 +150,12 @@ impl SchedPolicy for BadVariant {
         &mut self,
         _regions: &RegionMap,
         _costs: &CostModel,
-        _req: &PlaceReq,
+        req: &PlaceReq,
     ) -> Option<Placement> {
-        Some(Placement { anchor: 0, variant: "not_a_variant".into(), reconfigure: true })
+        // The accelerator's own symbol is a valid `Sym` that is never
+        // one of its variant symbols — a variant the catalog does not
+        // know.
+        Some(Placement { anchor: 0, variant: req.accel_sym, reconfigure: true })
     }
 }
 

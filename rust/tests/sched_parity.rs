@@ -12,26 +12,21 @@ use fos::accel::Catalog;
 use fos::daemon::{Daemon, FpgaRpc, Job};
 use fos::sched::{
     simulate, AdmissionConfig, Decision, DecisionKind, JobSpec, PlacementKind, Policy, QosClass,
-    SimConfig, Workload,
+    SimConfig, Sym, Workload,
 };
 use fos::shell::ShellBoard;
 use std::collections::HashMap;
 use std::path::PathBuf;
 
 /// (kind, accel, variant, anchor, span, reconfigure, replicated, tiles)
-type Key = (DecisionKind, String, String, usize, usize, bool, bool, usize);
+///
+/// Accel/variant are interned symbols; both harnesses derive the same
+/// deterministic table from the shared catalog, so equal syms mean
+/// equal names.
+type Key = (DecisionKind, Sym, Sym, usize, usize, bool, bool, usize);
 
 fn key(d: &Decision) -> Key {
-    (
-        d.kind,
-        d.accel.clone(),
-        d.variant.clone(),
-        d.anchor,
-        d.span,
-        d.reconfigure,
-        d.replicated,
-        d.tiles,
-    )
+    (d.kind, d.accel, d.variant, d.anchor, d.span, d.reconfigure, d.replicated, d.tiles)
 }
 
 fn sock(name: &str) -> PathBuf {
@@ -187,11 +182,11 @@ fn sim_and_daemon_parity_under_fixed_policy() {
     let sim_seq: Vec<_> = sim
         .decisions
         .iter()
-        .map(|d| (d.accel.clone(), d.variant.clone(), d.span, d.reconfigure))
+        .map(|d| (d.accel, d.variant, d.span, d.reconfigure))
         .collect();
     let dmn_seq: Vec<_> = daemon_log
         .iter()
-        .map(|d| (d.accel.clone(), d.variant.clone(), d.span, d.reconfigure))
+        .map(|d| (d.accel, d.variant, d.span, d.reconfigure))
         .collect();
     assert_eq!(sim_seq, dmn_seq);
     // Fixed policy: 1-region modules only, no replication.

@@ -1,0 +1,26 @@
+#!/usr/bin/env bash
+# Arm the committed bench baselines in one shot: run the gated benches
+# with deterministic smoke iterations (the same mode CI gates in),
+# write their BENCH_<name>.json results at the repo root, and copy them
+# over the committed BENCH_BASELINE_<name>.json placeholders.
+#
+# Run this once on a machine with a Rust toolchain, then commit the
+# rewritten BENCH_BASELINE_*.json files — the regression gate switches
+# from the rolling previous-run comparison to the pinned numbers.
+# Floor-gated benches (perf_round_latency) need no baseline; they are
+# still run so the floor check exercises a real result.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export FOS_BENCH_SMOKE=1
+export FOS_BENCH_JSON_DIR="$PWD"
+
+for b in fig22_multitenant fig23_cluster_scaling fig24_admission_throughput \
+         perf_round_latency; do
+    echo "== $b =="
+    cargo bench --manifest-path rust/Cargo.toml --bench "$b"
+done
+
+python3 scripts/check_bench_regression.py --baseline-dir . --current-dir . --update
+python3 scripts/check_bench_regression.py --baseline-dir . --current-dir .
+echo "baselines armed — commit the BENCH_BASELINE_*.json files"

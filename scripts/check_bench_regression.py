@@ -12,6 +12,12 @@ All compared numbers are *virtual-time* simulator outputs, so they are
 bit-for-bit deterministic across machines: any drift past the threshold
 is a real scheduling regression, never runner noise.
 
+Wall-clock benches are different: their numbers vary by machine, so
+they are gated against an absolute *floor* instead of a prior run (see
+``FLOOR_BENCHES``).  ``perf_round_latency`` must sustain at least 1M
+decisions/sec on a single shard (300k in smoke mode) — the hot-path
+throughput budget from the scheduler-microperformance work.
+
 Bootstrapping: a baseline file containing ``"bootstrap": true`` carries
 no numbers yet.  Then:
 
@@ -41,6 +47,13 @@ import sys
 
 BENCHES = ["fig22_multitenant", "fig23_cluster_scaling", "fig24_admission_throughput"]
 GATED_KEY = "mean_turnaround_ns"
+
+# Wall-clock throughput benches: machine-dependent numbers, gated
+# against an absolute floor, never compared across runs.
+# (bench, leaf key, full-mode floor, smoke-mode floor)
+FLOOR_BENCHES = [
+    ("perf_round_latency", "single_shard_decisions_per_sec", 1_000_000.0, 300_000.0),
+]
 
 
 def leaves(node, prefix=()):
@@ -146,6 +159,28 @@ def main():
             else:
                 delta = 0.0 if base_v == 0 else 100.0 * (cur_v / base_v - 1.0)
                 print(f"{bench}: {name} ok ({base_v:.0f} -> {cur_v:.0f}, {delta:+.1f}%)")
+
+    for bench, key, full_floor, smoke_floor in FLOOR_BENCHES:
+        cur_path = os.path.join(args.current_dir, f"BENCH_{bench}.json")
+        if not os.path.exists(cur_path):
+            failures.append(f"{bench}: missing current result {cur_path} "
+                            "(did the bench run with FOS_BENCH_JSON_DIR set?)")
+            continue
+        with open(cur_path) as f:
+            cur = json.load(f)
+        smoke = bool(cur.get("smoke"))
+        floor = smoke_floor if smoke else full_floor
+        v = cur.get(key)
+        if not isinstance(v, (int, float)) or isinstance(v, bool):
+            failures.append(f"{bench}: {key} missing from current result")
+            continue
+        if float(v) < floor:
+            failures.append(
+                f"{bench}: {key} = {float(v):.0f} below the "
+                f"{'smoke' if smoke else 'full'}-mode floor {floor:.0f}")
+        else:
+            print(f"{bench}: {key} ok ({float(v):.0f} >= floor {floor:.0f}, "
+                  f"{'smoke' if smoke else 'full'} mode)")
 
     if failures:
         print("\nBENCH REGRESSION GATE FAILED:", file=sys.stderr)
