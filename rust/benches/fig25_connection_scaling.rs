@@ -1,0 +1,466 @@
+//! Fig 25: connection scaling of the daemon's reactor network plane.
+//!
+//! Sweeps 1k → 10k concurrent sessions against a live daemon, each
+//! session issuing ping RPCs over its own Unix-domain connection, and
+//! measures requests/second, p99 round-trip latency and peak resident
+//! memory.  A faithful in-bench reproduction of the pre-reactor
+//! architecture — one blocking thread per connection bridging to a
+//! dispatcher channel — is measured at 1k sessions as the baseline.
+//!
+//! The client driver is itself a single multiplexed non-blocking event
+//! loop built on the public `fos::daemon::transport` poller/framing
+//! types, so a 10k-session sweep costs 10k sockets, not 10k threads,
+//! and both the reactor daemon and the thread-per-connection baseline
+//! are driven identically.
+//!
+//! Emits `BENCH_fig25_connection_scaling.json` with two floor-gated
+//! leaves (`scripts/check_bench_regression.py`):
+//!
+//! * `sessions_sustained` — every session of the largest sweep level
+//!   connected and completed its full ping schedule (floor: 10 000);
+//! * `reactor_vs_thread_ratio` — reactor requests/sec at the largest
+//!   level divided by the thread-per-connection baseline's at 1k
+//!   (floor: the reactor must not be slower than the architecture it
+//!   replaced, despite serving 10x the sessions).
+
+use fos::accel::Catalog;
+use fos::daemon::transport::{Events, FrameBuf, Poller};
+use fos::daemon::{read_msg, write_msg, Daemon};
+use fos::json::{arr, b, f, i, obj, s, Value};
+use fos::sched::{AdmissionConfig, PlacementKind, Policy};
+use fos::shell::ShellBoard;
+use std::io::{ErrorKind, Read, Write};
+use std::os::fd::AsRawFd;
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+/// Raise RLIMIT_NOFILE to its hard cap (two fds per session live in
+/// this one process: the client socket and the daemon's accepted end).
+/// Returns the resulting soft limit.
+#[cfg(target_os = "linux")]
+fn raise_nofile_limit() -> u64 {
+    #[repr(C)]
+    struct RLimit {
+        cur: u64,
+        max: u64,
+    }
+    extern "C" {
+        fn getrlimit(resource: i32, rlim: *mut RLimit) -> i32;
+        fn setrlimit(resource: i32, rlim: *const RLimit) -> i32;
+    }
+    const RLIMIT_NOFILE: i32 = 7;
+    unsafe {
+        let mut r = RLimit { cur: 0, max: 0 };
+        if getrlimit(RLIMIT_NOFILE, &mut r) != 0 {
+            return 1024;
+        }
+        if r.cur < r.max {
+            let want = RLimit { cur: r.max, max: r.max };
+            let _ = setrlimit(RLIMIT_NOFILE, &want);
+            if getrlimit(RLIMIT_NOFILE, &mut r) != 0 {
+                return 1024;
+            }
+        }
+        r.cur
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+fn raise_nofile_limit() -> u64 {
+    1024
+}
+
+/// Peak resident set (VmHWM) of this process in bytes; 0 when /proc is
+/// unavailable.  Both the daemon and the bench driver live in this
+/// process, so this is the whole experiment's memory high-water mark.
+fn peak_rss_bytes() -> u64 {
+    match std::fs::read_to_string("/proc/self/status") {
+        Ok(text) => text
+            .lines()
+            .find(|l| l.starts_with("VmHWM:"))
+            .and_then(|l| l.split_whitespace().nth(1))
+            .and_then(|kb| kb.parse::<u64>().ok())
+            .map(|kb| kb * 1024)
+            .unwrap_or(0),
+        Err(_) => 0,
+    }
+}
+
+fn p99(mut xs: Vec<u64>) -> u64 {
+    if xs.is_empty() {
+        return 0;
+    }
+    xs.sort_unstable();
+    xs[(xs.len() * 99 / 100).min(xs.len() - 1)]
+}
+
+/// One client session of the multiplexed driver.
+struct Session {
+    stream: UnixStream,
+    rbuf: FrameBuf,
+    /// Unsent tail of the current request frame.
+    wbuf: Vec<u8>,
+    wpos: usize,
+    /// Ping round-trips left, including any in flight.
+    remaining: usize,
+    sent_at: Instant,
+    /// Registered interest, mirrors the poller (read, write).
+    interest: (bool, bool),
+    done: bool,
+}
+
+/// Result of driving `sessions` concurrent connections for `pings`
+/// round-trips each against the socket at `path`.
+struct DriveResult {
+    completed_sessions: usize,
+    replies: u64,
+    elapsed_s: f64,
+    p99_ns: u64,
+}
+
+/// Connect `sessions` sockets and pump `pings` strict request/reply
+/// round-trips on each from one non-blocking event loop.
+fn drive(path: &PathBuf, sessions: usize, pings: usize) -> std::io::Result<DriveResult> {
+    let ping_frame = {
+        let mut bytes = Vec::new();
+        write_msg(&mut bytes, &obj(vec![("method", s("ping"))])).expect("encode ping");
+        bytes
+    };
+
+    let mut poller = Poller::new()?;
+    let mut conns: Vec<Session> = Vec::with_capacity(sessions);
+    let t0 = Instant::now();
+    for k in 0..sessions {
+        // The accept side keeps up easily, but a connect burst can
+        // momentarily fill the listen backlog: retry briefly.
+        let stream = loop {
+            match UnixStream::connect(path) {
+                Ok(st) => break st,
+                Err(e) => match e.kind() {
+                    ErrorKind::WouldBlock | ErrorKind::ConnectionRefused => {
+                        std::thread::yield_now()
+                    }
+                    _ => return Err(e),
+                },
+            }
+        };
+        stream.set_nonblocking(true)?;
+        poller.register(stream.as_raw_fd(), k as u64, false, false)?;
+        conns.push(Session {
+            stream,
+            rbuf: FrameBuf::new(),
+            wbuf: Vec::new(),
+            wpos: 0,
+            remaining: pings,
+            sent_at: t0,
+            interest: (false, false),
+            done: false,
+        });
+    }
+
+    let mut latencies: Vec<u64> = Vec::with_capacity(sessions.min(65_536) * pings.min(8));
+    let mut replies = 0u64;
+    let mut live = sessions;
+    let start = Instant::now();
+    // Seed every session's first request.
+    for (k, c) in conns.iter_mut().enumerate() {
+        arm_request(c, &ping_frame);
+        pump(&mut poller, c, k, &ping_frame, &mut latencies, &mut replies);
+        if c.done {
+            live -= 1;
+            let _ = poller.deregister(c.stream.as_raw_fd());
+        }
+    }
+    let mut events = Events::with_capacity(1024);
+    while live > 0 {
+        poller.wait(&mut events, 10_000)?;
+        for e in 0..events.len() {
+            let k = events.get(e).token as usize;
+            if conns[k].done {
+                continue;
+            }
+            pump(&mut poller, &mut conns[k], k, &ping_frame, &mut latencies, &mut replies);
+            if conns[k].done {
+                live -= 1;
+                // Stop watching immediately: a dead peer's EPOLLHUP
+                // would otherwise re-fire on every subsequent wait.
+                let _ = poller.deregister(conns[k].stream.as_raw_fd());
+            }
+        }
+    }
+    let elapsed_s = start.elapsed().as_secs_f64();
+    let completed = conns.iter().filter(|c| c.remaining == 0).count();
+    Ok(DriveResult { completed_sessions: completed, replies, elapsed_s, p99_ns: p99(latencies) })
+}
+
+fn arm_request(c: &mut Session, ping_frame: &[u8]) {
+    c.wbuf.clear();
+    c.wbuf.extend_from_slice(ping_frame);
+    c.wpos = 0;
+    c.sent_at = Instant::now();
+}
+
+/// Drive one session as far as it can go right now: flush the pending
+/// request, then consume replies, arming follow-up requests until the
+/// socket would block or the schedule is done.  Adjusts poller
+/// interest to exactly what the session still waits for.
+fn pump(
+    poller: &mut Poller,
+    c: &mut Session,
+    token: usize,
+    ping_frame: &[u8],
+    latencies: &mut Vec<u64>,
+    replies: &mut u64,
+) {
+    loop {
+        // Flush the current request.
+        while c.wpos < c.wbuf.len() {
+            match c.stream.write(&c.wbuf[c.wpos..]) {
+                Ok(0) => {
+                    c.done = true;
+                    return;
+                }
+                Ok(n) => c.wpos += n,
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    set_interest(poller, c, token, (false, true));
+                    return;
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(_) => {
+                    c.done = true;
+                    return;
+                }
+            }
+        }
+        // Await the reply.
+        let mut got_frame = false;
+        loop {
+            match c.rbuf.next_frame() {
+                Ok(Some(_body)) => {
+                    got_frame = true;
+                    break;
+                }
+                Ok(None) => {}
+                Err(_) => {
+                    c.done = true;
+                    return;
+                }
+            }
+            let space = c.rbuf.space();
+            match c.stream.read(space) {
+                Ok(0) => {
+                    c.done = true;
+                    return;
+                }
+                Ok(n) => c.rbuf.commit(n),
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    set_interest(poller, c, token, (true, false));
+                    return;
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(_) => {
+                    c.done = true;
+                    return;
+                }
+            }
+        }
+        if got_frame {
+            latencies.push(c.sent_at.elapsed().as_nanos() as u64);
+            *replies += 1;
+            c.remaining -= 1;
+            if c.remaining == 0 {
+                c.done = true;
+                set_interest(poller, c, token, (false, false));
+                return;
+            }
+            arm_request(c, ping_frame);
+        }
+    }
+}
+
+fn set_interest(poller: &mut Poller, c: &mut Session, token: usize, want: (bool, bool)) {
+    if c.interest != want {
+        let _ = poller.reregister(c.stream.as_raw_fd(), token as u64, want.0, want.1);
+        c.interest = want;
+    }
+}
+
+/// The pre-reactor architecture, reproduced faithfully for the
+/// baseline: a blocking accept loop spawning one thread per
+/// connection, each bridging read_msg → dispatcher channel →
+/// per-request reply channel → write_msg.  The dispatcher answers
+/// pings exactly like the daemon's `handle_cheap` (constant work), so
+/// the comparison isolates the transport architecture.
+struct ThreadPerConnServer {
+    path: PathBuf,
+    stop: Arc<AtomicBool>,
+    accept: Option<std::thread::JoinHandle<()>>,
+    dispatch: Option<std::thread::JoinHandle<()>>,
+    tx: mpsc::Sender<Option<mpsc::Sender<Value>>>,
+}
+
+impl ThreadPerConnServer {
+    fn start(path: PathBuf) -> std::io::Result<ThreadPerConnServer> {
+        let _ = std::fs::remove_file(&path);
+        let listener = UnixListener::bind(&path)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let (tx, rx) = mpsc::channel::<Option<mpsc::Sender<Value>>>();
+        let dispatch = std::thread::spawn(move || {
+            let mut users = 0i64;
+            while let Ok(Some(reply)) = rx.recv() {
+                users += 1;
+                let _ = reply.send(obj(vec![("status", s("ok")), ("user", i(users))]));
+            }
+        });
+        let accept = {
+            let stop = stop.clone();
+            let tx = tx.clone();
+            std::thread::spawn(move || {
+                while let Ok((mut stream, _)) = listener.accept() {
+                    if stop.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    let tx = tx.clone();
+                    std::thread::spawn(move || {
+                        while let Ok(_req) = read_msg(&mut stream) {
+                            let (rtx, rrx) = mpsc::channel();
+                            if tx.send(Some(rtx)).is_err() {
+                                break;
+                            }
+                            let Ok(resp) = rrx.recv() else { break };
+                            if write_msg(&mut stream, &resp).is_err() {
+                                break;
+                            }
+                        }
+                    });
+                }
+            })
+        };
+        Ok(ThreadPerConnServer { path, stop, accept: Some(accept), dispatch: Some(dispatch), tx })
+    }
+}
+
+impl Drop for ThreadPerConnServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        let _ = UnixStream::connect(&self.path);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        let _ = self.tx.send(None);
+        if let Some(h) = self.dispatch.take() {
+            let _ = h.join();
+        }
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+fn main() {
+    let smoke = fos::testutil::bench_smoke();
+    let catalog = Catalog::load_default().expect("run `make artifacts`");
+    let limit = raise_nofile_limit();
+    // Two fds per session plus slack for the daemon/driver plumbing.
+    let fd_budget_sessions = ((limit.saturating_sub(256)) / 2) as usize;
+
+    let levels: &[usize] = if smoke { &[1_000, 10_000] } else { &[1_000, 4_000, 10_000] };
+    let pings = if smoke { 2 } else { 5 };
+    println!("fd limit {limit} (budget: {fd_budget_sessions} sessions), {pings} pings/session");
+
+    let sock_dir = std::env::temp_dir();
+    let reactor_path = sock_dir.join(format!("fos_fig25_reactor_{}.sock", std::process::id()));
+
+    // --- reactor sweep --------------------------------------------
+    let mut entries: Vec<Value> = Vec::new();
+    let mut sustained = 0usize;
+    let mut reactor_top_rate = 0.0f64;
+    for &want in levels {
+        let sessions = want.min(fd_budget_sessions);
+        if sessions < want {
+            println!("  level {want}: CLAMPED to {sessions} sessions by the fd limit");
+        }
+        let mut daemon = Daemon::start_cluster_configured(
+            &reactor_path,
+            &[ShellBoard::Ultra96],
+            catalog.clone(),
+            Policy::Elastic,
+            PlacementKind::Locality,
+            AdmissionConfig::default(),
+            sessions + 64,
+        )
+        .expect("daemon start");
+        let r = drive(&reactor_path, sessions, pings).expect("reactor drive");
+        daemon.shutdown();
+        let rate = r.replies as f64 / r.elapsed_s;
+        if r.completed_sessions == sessions {
+            sustained = sustained.max(sessions);
+        }
+        reactor_top_rate = rate;
+        println!(
+            "  reactor {sessions:>6} sessions: {} replies in {:.3} s -> {:.0} req/s, \
+             p99 {:.1} us, {}/{} completed",
+            r.replies,
+            r.elapsed_s,
+            rate,
+            r.p99_ns as f64 / 1e3,
+            r.completed_sessions,
+            sessions,
+        );
+        entries.push(obj(vec![
+            ("sessions", i(sessions as i64)),
+            ("completed_sessions", i(r.completed_sessions as i64)),
+            ("replies", i(r.replies as i64)),
+            ("reqs_per_sec", f(rate)),
+            ("p99_rtt_ns", f(r.p99_ns as f64)),
+        ]));
+    }
+    let reactor_peak_rss = peak_rss_bytes();
+    println!("  reactor peak RSS: {:.1} MiB", reactor_peak_rss as f64 / (1024.0 * 1024.0));
+
+    // --- thread-per-connection baseline at 1k ---------------------
+    let baseline_sessions = 1_000usize.min(fd_budget_sessions);
+    let baseline_path = sock_dir.join(format!("fos_fig25_threads_{}.sock", std::process::id()));
+    let baseline = {
+        let srv = ThreadPerConnServer::start(baseline_path.clone()).expect("baseline start");
+        drive(&srv.path, baseline_sessions, pings).expect("baseline drive")
+    };
+    let baseline_rate = baseline.replies as f64 / baseline.elapsed_s;
+    println!(
+        "  threads {baseline_sessions:>6} sessions: {} replies in {:.3} s -> {:.0} req/s, \
+         p99 {:.1} us",
+        baseline.replies,
+        baseline.elapsed_s,
+        baseline_rate,
+        baseline.p99_ns as f64 / 1e3,
+    );
+    let ratio = if baseline_rate > 0.0 { reactor_top_rate / baseline_rate } else { 0.0 };
+    println!(
+        "  sessions sustained: {sustained}; reactor@top vs threads@1k ratio: {ratio:.2}"
+    );
+
+    let doc = obj(vec![
+        ("bench", s("fig25_connection_scaling")),
+        ("smoke", b(smoke)),
+        ("pings_per_session", i(pings as i64)),
+        ("fd_limit", i(limit as i64)),
+        ("sessions_sustained", f(sustained as f64)),
+        ("reactor_vs_thread_ratio", f(ratio)),
+        ("peak_rss_bytes", f(reactor_peak_rss as f64)),
+        ("reactor", arr(entries)),
+        (
+            "thread_per_conn_baseline",
+            obj(vec![
+                ("sessions", i(baseline_sessions as i64)),
+                ("replies", i(baseline.replies as i64)),
+                ("reqs_per_sec", f(baseline_rate)),
+                ("p99_rtt_ns", f(baseline.p99_ns as f64)),
+            ]),
+        ),
+    ]);
+    match fos::testutil::write_bench_json("fig25_connection_scaling", &doc) {
+        Ok(p) => println!("wrote {}", p.display()),
+        Err(e) => eprintln!("could not write bench JSON: {e}"),
+    }
+}

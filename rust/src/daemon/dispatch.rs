@@ -1,10 +1,20 @@
-//! The daemon process: UDS accept loop + single dispatcher thread that
-//! owns the FPGA (Cynq stack) and schedules requests across users
-//! through the shared resource-elastic scheduler core
+//! The dispatch layer: daemon lifecycle plus the single dispatcher
+//! thread that owns the FPGA (Cynq stack) and schedules requests
+//! across users through the shared resource-elastic scheduler core
 //! ([`crate::sched::SchedCore`]) — the same state machine the offline
 //! simulator drives, so the live path gains variant selection,
 //! multi-region spans, replication across free regions and
 //! backlog-amortised reconfiguration avoidance (§4.4.3).
+//!
+//! Requests reach this module through the event-driven reactor in
+//! [`super::transport`] (non-blocking accept, epoll readiness, slab
+//! connection table), which decodes frames via [`super::session`] and
+//! forwards [`Msg`](super::session) values over the dispatcher
+//! channel.  Replies travel back through a
+//! [`ReplySink`](super::transport::ReplySink), which either answers a
+//! local in-process query channel or enqueues the value on the
+//! originating connection's write buffer and wakes the reactor.  The
+//! wire protocol itself is specified in `rust/src/daemon/PROTOCOL.md`.
 //!
 //! The dispatcher keeps a *virtual clock*: each decision's service time
 //! comes from the shared [`crate::sched::CostModel`] and completions
@@ -43,11 +53,16 @@
 //! completed job's outputs are synced back (the explicit cross-board
 //! result transfer).
 
-use super::proto::{self, read_msg, write_msg, Job};
+use super::proto::{self, Job};
+use super::session::{
+    busy_val, close_ticket, err_val, fail_job, finish, ok, release_tenant, user_slot, Batch,
+    BatchSink, MemOp, Msg, Ticket, MAX_OPEN_TICKETS,
+};
 use super::shm::SharedMem;
+use super::transport::{Reactor, Waker, DEFAULT_MAX_CONNECTIONS};
 use crate::accel::Catalog;
 use crate::driver::{AccelSnapshot, Cynq, LoadedAccel, PhysAddr};
-use crate::json::{arr, f, i, obj, s, Value};
+use crate::json::{arr, i, obj, s, Value};
 use crate::sched::{
     AdmissionConfig, AdmissionPipeline, AdmitRequest, ClusterCore, Decision, DecisionKind,
     FailDisposition, FaultPlan, MovedCkpt, PlacementKind, Policy, QosClass, SymbolTable,
@@ -56,22 +71,11 @@ use crate::shell::ShellBoard;
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap, VecDeque};
 use std::io;
-use std::os::unix::net::{UnixListener, UnixStream};
+use std::os::unix::net::UnixListener;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::Instant;
-
-/// Connection-table cap of the default configuration: past this many
-/// live connections the accept loop sheds new clients with a
-/// structured busy reject instead of spawning threads without bound.
-pub const DEFAULT_MAX_CONNECTIONS: usize = 256;
-
-/// Open (pending + settled-but-unclaimed) async tickets one connection
-/// may hold.  A fire-and-forget client that submits without ever
-/// draining `wait`/`poll`/`completions` hits a structured busy reject
-/// here instead of growing the dispatcher's ticket store forever.
-pub const MAX_OPEN_TICKETS: usize = 1024;
 
 /// Daemon-side counters (Table 4/5 material). The scheduling counters
 /// (`reconfig_loads`, `reuse_hits`, `skips`, `replications`) mirror the
@@ -165,118 +169,6 @@ impl DaemonStats {
     }
 }
 
-enum Msg {
-    /// A connection opened (sent by its first `ping`): bind the daemon
-    /// user id to a recycled scheduler slot.
-    Hello {
-        user: u64,
-        reply: mpsc::Sender<Value>,
-    },
-    /// A connection closed: retire its scheduler slot for reuse.
-    Goodbye {
-        user: u64,
-    },
-    /// Bind the connection to a named tenant + QoS class (weight and
-    /// in-flight quota); several connections may share one tenant.
-    Session {
-        user: u64,
-        tenant: String,
-        weight: u32,
-        max_inflight: usize,
-        reply: mpsc::Sender<Value>,
-    },
-    /// Job batch. `wait: true` is the blocking `run` RPC (reply
-    /// deferred to the batch's completion); `wait: false` is the
-    /// non-blocking `submit` RPC (reply is an immediate ticket).
-    Submit {
-        user: u64,
-        jobs: Vec<Job>,
-        wait: bool,
-        reply: mpsc::Sender<Value>,
-    },
-    /// Block until the ticket settles (consumes it).
-    Wait {
-        user: u64,
-        ticket: u64,
-        reply: mpsc::Sender<Value>,
-    },
-    /// Non-blocking ticket status (does not consume).
-    Poll {
-        user: u64,
-        ticket: u64,
-        reply: mpsc::Sender<Value>,
-    },
-    /// Drain every settled ticket of this connection.
-    Completions {
-        user: u64,
-        reply: mpsc::Sender<Value>,
-    },
-    Mem {
-        op: MemOp,
-        reply: mpsc::Sender<Value>,
-    },
-    SetPolicy {
-        user: u64,
-        name: String,
-        reply: mpsc::Sender<Value>,
-    },
-    Pause {
-        reply: mpsc::Sender<Value>,
-    },
-    Resume {
-        reply: mpsc::Sender<Value>,
-    },
-    Query {
-        reply: mpsc::Sender<Value>,
-    },
-    /// Cluster-wide stats: totals, routing/steal counters and one
-    /// object per board.
-    QueryCluster {
-        reply: mpsc::Sender<Value>,
-    },
-    /// One board's scheduler counters and queue depth.
-    QueryBoard {
-        board: usize,
-        reply: mpsc::Sender<Value>,
-    },
-    /// Operator drain: board leaves the routable set, running work
-    /// finishes in place ([`crate::sched::BoardHealth::Draining`]).
-    DrainBoard {
-        board: usize,
-        reply: mpsc::Sender<Value>,
-    },
-    /// Bring a drained (or failed) board back into rotation.
-    ReviveBoard {
-        board: usize,
-        reply: mpsc::Sender<Value>,
-    },
-    /// Tail of a decision log: one board's (`board: Some`) or the
-    /// merged cluster log (`None`).  `limit: None` means "all retained
-    /// entries" — still bounded by the core's ring cap; the reply
-    /// clones only the tail, never scans the whole ring.
-    QueryLog {
-        board: Option<usize>,
-        limit: Option<usize>,
-        reply: mpsc::Sender<Vec<Decision>>,
-    },
-    /// The merged cluster log with its board tags — what the cluster
-    /// fault-parity test compares against the simulator's
-    /// `(board, decision)` sequence.
-    QueryMergedTagged {
-        reply: mpsc::Sender<Vec<(usize, Decision)>>,
-    },
-    Stop,
-}
-
-enum MemOp {
-    Alloc { bytes: usize },
-    Free { addr: u64 },
-    Write { addr: u64, data: Vec<f32> },
-    Read { addr: u64, count: usize },
-    Import { shm: PathBuf, offset: usize, count: usize, addr: u64 },
-    Export { addr: u64, count: usize, shm: PathBuf, offset: usize },
-}
-
 /// A running daemon instance.
 pub struct Daemon {
     pub socket_path: PathBuf,
@@ -284,7 +176,8 @@ pub struct Daemon {
     stats: Arc<DaemonStats>,
     tx: mpsc::Sender<Msg>,
     stop: Arc<AtomicBool>,
-    accept_handle: Option<std::thread::JoinHandle<()>>,
+    waker: Waker,
+    reactor_handle: Option<std::thread::JoinHandle<()>>,
     dispatch_handle: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -397,57 +290,15 @@ impl Daemon {
             })?
         };
 
-        // Blocking accept (no sleep polling): `shutdown` wakes the
-        // loop with a throwaway connection after setting the stop
-        // flag.  Connection threads are named, counted, and capped —
-        // past the cap a client gets a structured busy reject instead
-        // of an unbounded anonymous spawn.
-        let accept_handle = {
-            let tx = tx.clone();
-            let stop = stop.clone();
-            let stats = stats.clone();
-            std::thread::Builder::new().name("fos-accept".into()).spawn(move || {
-                let live = Arc::new(AtomicUsize::new(0));
-                let mut next_user = 0u64;
-                loop {
-                    let mut stream = match listener.accept() {
-                        Ok((stream, _)) => stream,
-                        Err(_) => break,
-                    };
-                    if stop.load(Ordering::Relaxed) {
-                        break; // woken by shutdown's throwaway connect
-                    }
-                    if live.load(Ordering::Relaxed) >= max_connections {
-                        stats.connections_shed.fetch_add(1, Ordering::Relaxed);
-                        let _ = write_msg(
-                            &mut stream,
-                            &busy_val(
-                                &format!(
-                                    "daemon at connection capacity ({max_connections})"
-                                ),
-                                50,
-                            ),
-                        );
-                        continue; // the dropped stream closes the client
-                    }
-                    let user = next_user;
-                    next_user += 1;
-                    let tx = tx.clone();
-                    let stats = stats.clone();
-                    let live_conn = live.clone();
-                    live.fetch_add(1, Ordering::Relaxed);
-                    let spawned = std::thread::Builder::new()
-                        .name(format!("fos-conn-{user}"))
-                        .spawn(move || {
-                            let _ = connection(stream, user, tx, stats);
-                            live_conn.fetch_sub(1, Ordering::Relaxed);
-                        });
-                    if spawned.is_err() {
-                        live.fetch_sub(1, Ordering::Relaxed);
-                    }
-                }
-            })?
-        };
+        // The network plane: one event-driven reactor thread holds
+        // every connection in a slab (no thread per client), polls for
+        // readiness, frames requests into reusable buffers and ships
+        // decoded messages to the dispatcher.  Past `max_connections`
+        // live entries a new client gets a structured busy reject.
+        let (reactor, waker) =
+            Reactor::new(listener, tx.clone(), stats.clone(), stop.clone(), max_connections)?;
+        let reactor_handle =
+            std::thread::Builder::new().name("fos-reactor".into()).spawn(move || reactor.run())?;
 
         Ok(Daemon {
             socket_path,
@@ -455,7 +306,8 @@ impl Daemon {
             stats,
             tx,
             stop,
-            accept_handle: Some(accept_handle),
+            waker,
+            reactor_handle: Some(reactor_handle),
             dispatch_handle: Some(dispatch_handle),
         })
     }
@@ -510,11 +362,13 @@ impl Daemon {
     }
 
     pub fn shutdown(&mut self) {
-        self.stop.store(true, Ordering::Relaxed);
-        // Wake the blocking accept loop: it re-checks the stop flag
-        // after every accept, so a throwaway connection is enough.
-        let _ = UnixStream::connect(&self.socket_path);
-        if let Some(h) = self.accept_handle.take() {
+        self.stop.store(true, Ordering::SeqCst);
+        // Wake the reactor's poll wait: it re-checks the stop flag at
+        // the top of every loop, closes every connection (emitting
+        // their Goodbyes) and exits — all before the dispatcher sees
+        // Stop, so no slot retirement is lost.
+        self.waker.wake_force();
+        if let Some(h) = self.reactor_handle.take() {
             let _ = h.join();
         }
         let _ = self.tx.send(Msg::Stop);
@@ -528,240 +382,6 @@ impl Daemon {
 impl Drop for Daemon {
     fn drop(&mut self) {
         self.shutdown();
-    }
-}
-
-/// Request/reply round-trip with the dispatcher thread.
-fn ask(tx: &mpsc::Sender<Msg>, make: impl FnOnce(mpsc::Sender<Value>) -> Msg) -> Value {
-    let (rtx, rrx) = mpsc::channel();
-    if tx.send(make(rtx)).is_err() {
-        return err_val("daemon stopping");
-    }
-    rrx.recv().unwrap_or_else(|_| err_val("dispatcher died"))
-}
-
-/// Per-connection request loop (retires the user's scheduler slot on
-/// exit, however the connection ends).
-fn connection(
-    mut stream: UnixStream,
-    user: u64,
-    tx: mpsc::Sender<Msg>,
-    stats: Arc<DaemonStats>,
-) -> Result<(), proto::ProtoError> {
-    let r = serve(&mut stream, user, &tx, &stats);
-    let _ = tx.send(Msg::Goodbye { user });
-    r
-}
-
-fn serve(
-    stream: &mut UnixStream,
-    user: u64,
-    tx: &mpsc::Sender<Msg>,
-    stats: &Arc<DaemonStats>,
-) -> Result<(), proto::ProtoError> {
-    loop {
-        let msg = match read_msg(stream) {
-            Ok(m) => m,
-            Err(_) => return Ok(()), // client hung up
-        };
-        stats.rpcs.fetch_add(1, Ordering::Relaxed);
-        let method = msg.get("method").as_str().unwrap_or("");
-        let resp = match method {
-            "ping" => ask(tx, |reply| Msg::Hello { user, reply }),
-            // `run` blocks until the batch completes; `submit` returns
-            // a ticket immediately (drain via wait/poll/completions).
-            "run" | "submit" => {
-                let wait = method == "run";
-                let jobs: Result<Vec<Job>, _> = msg
-                    .req_array("jobs")
-                    .map_err(proto::ProtoError::Schema)?
-                    .iter()
-                    .map(Job::from_value)
-                    .collect();
-                match jobs {
-                    Err(e) => err_val(&e.to_string()),
-                    Ok(jobs) => ask(tx, |reply| Msg::Submit { user, jobs, wait, reply }),
-                }
-            }
-            "session" => match msg.req_str("tenant") {
-                Err(e) => err_val(&e),
-                Ok(tenant) => {
-                    let tenant = tenant.to_string();
-                    let weight = msg.get("weight").as_u64().unwrap_or(1).max(1) as u32;
-                    // 0 (or absent) = unbounded in-flight quota.
-                    let max_inflight = match msg.get("max_inflight").as_u64() {
-                        Some(0) | None => usize::MAX,
-                        Some(n) => n as usize,
-                    };
-                    ask(tx, |reply| Msg::Session { user, tenant, weight, max_inflight, reply })
-                }
-            },
-            "wait" => match msg.req_u64("ticket") {
-                Err(e) => err_val(&e),
-                Ok(ticket) => ask(tx, |reply| Msg::Wait { user, ticket, reply }),
-            },
-            "poll" => match msg.req_u64("ticket") {
-                Err(e) => err_val(&e),
-                Ok(ticket) => ask(tx, |reply| Msg::Poll { user, ticket, reply }),
-            },
-            "completions" => ask(tx, |reply| Msg::Completions { user, reply }),
-            "policy" => match msg.req_str("policy") {
-                Err(e) => err_val(&e),
-                Ok(name) => {
-                    let name = name.to_string();
-                    ask(tx, |reply| Msg::SetPolicy { user, name, reply })
-                }
-            },
-            "pause" => ask(tx, |reply| Msg::Pause { reply }),
-            "resume" => ask(tx, |reply| Msg::Resume { reply }),
-            "stats" => ask(tx, |reply| Msg::Query { reply }),
-            "cluster-stats" => ask(tx, |reply| Msg::QueryCluster { reply }),
-            "board-stats" => match msg.req_u64("board") {
-                Err(e) => err_val(&e),
-                Ok(board) => {
-                    ask(tx, |reply| Msg::QueryBoard { board: board as usize, reply })
-                }
-            },
-            "drain-board" => match msg.req_u64("board") {
-                Err(e) => err_val(&e),
-                Ok(board) => {
-                    ask(tx, |reply| Msg::DrainBoard { board: board as usize, reply })
-                }
-            },
-            "revive-board" => match msg.req_u64("board") {
-                Err(e) => err_val(&e),
-                Ok(board) => {
-                    ask(tx, |reply| Msg::ReviveBoard { board: board as usize, reply })
-                }
-            },
-            "alloc" | "free" | "write" | "read" | "import" | "export" => {
-                match parse_mem_op(method, &msg) {
-                    Err(e) => err_val(&e),
-                    Ok(op) => ask(tx, |reply| Msg::Mem { op, reply }),
-                }
-            }
-            other => err_val(&format!("unknown method {other:?}")),
-        };
-        write_msg(stream, &resp)?;
-    }
-}
-
-fn parse_mem_op(method: &str, msg: &Value) -> Result<MemOp, String> {
-    Ok(match method {
-        "alloc" => MemOp::Alloc { bytes: msg.req_u64("bytes")? as usize },
-        "free" => MemOp::Free { addr: msg.req_u64("addr")? },
-        "write" => MemOp::Write {
-            addr: msg.req_u64("addr")?,
-            data: proto::b64_to_f32s(msg.req_str("b64")?).map_err(|e| e.to_string())?,
-        },
-        "read" => MemOp::Read {
-            addr: msg.req_u64("addr")?,
-            count: msg.req_u64("count")? as usize,
-        },
-        "import" => MemOp::Import {
-            shm: msg.req_str("shm")?.into(),
-            offset: msg.req_u64("offset")? as usize,
-            count: msg.req_u64("count")? as usize,
-            addr: msg.req_u64("addr")?,
-        },
-        "export" => MemOp::Export {
-            addr: msg.req_u64("addr")?,
-            count: msg.req_u64("count")? as usize,
-            shm: msg.req_str("shm")?.into(),
-            offset: msg.req_u64("offset")? as usize,
-        },
-        _ => unreachable!(),
-    })
-}
-
-/// Where a finished batch's reply goes: straight back to a blocking
-/// `run` caller, or into the ticket store for the async
-/// `wait`/`poll`/`completions` RPCs to claim.
-enum BatchSink {
-    Reply(mpsc::Sender<Value>),
-    Ticket(u64),
-}
-
-struct Batch {
-    sink: BatchSink,
-    remaining: usize,
-    latencies_us: Vec<f64>,
-    modelled_us: Vec<f64>,
-    error: Option<String>,
-}
-
-/// One async submission's completion slot.  `done` holds the settled
-/// reply until a `wait`/`completions` consumes it; `waiters` are
-/// blocked `wait` callers to answer at settlement.
-struct Ticket {
-    user: u64,
-    done: Option<Value>,
-    waiters: Vec<mpsc::Sender<Value>>,
-}
-
-/// Decrement a connection's open-ticket count (entry dropped at zero).
-fn close_ticket(open: &mut HashMap<u64, usize>, user: u64) {
-    if let Some(c) = open.get_mut(&user) {
-        *c = c.saturating_sub(1);
-        if *c == 0 {
-            open.remove(&user);
-        }
-    }
-}
-
-/// Drop one connection's claim on tenant `id`: decrement the refcount
-/// and, at zero, evict the name mapping and retire the pipeline state
-/// (removed once drained) — shared by the Goodbye and Session-rebind
-/// paths so retirement semantics cannot drift between them.
-fn release_tenant(
-    tenant_ids: &mut HashMap<String, usize>,
-    tenant_refs: &mut HashMap<usize, usize>,
-    admit: &mut AdmissionPipeline,
-    id: usize,
-) {
-    let refs = tenant_refs.entry(id).or_insert(1);
-    *refs = refs.saturating_sub(1);
-    if *refs == 0 {
-        tenant_refs.remove(&id);
-        tenant_ids.retain(|_, &mut t| t != id);
-        admit.retire(id);
-    }
-}
-
-fn finish(b: Batch, tickets: &mut HashMap<u64, Ticket>, open: &mut HashMap<u64, usize>) {
-    let resp = match &b.error {
-        Some(e) => err_val(e),
-        None => ok(vec![
-            (
-                "latencies_us",
-                arr(b.latencies_us.iter().map(|&x| f(x)).collect()),
-            ),
-            (
-                "modelled_us",
-                arr(b.modelled_us.iter().map(|&x| f(x)).collect()),
-            ),
-        ]),
-    };
-    match b.sink {
-        BatchSink::Reply(tx) => {
-            let _ = tx.send(resp);
-        }
-        // A missing ticket means its connection departed: the reply
-        // has no claimant and is dropped.
-        BatchSink::Ticket(id) => match tickets.remove(&id) {
-            None => {}
-            Some(mut t) if t.waiters.is_empty() => {
-                // Claimed later (wait/poll/completions).
-                t.done = Some(resp);
-                tickets.insert(id, t);
-            }
-            Some(t) => {
-                for w in t.waiters {
-                    let _ = w.send(resp.clone());
-                }
-                close_ticket(open, t.user); // consumed by the waiter(s)
-            }
-        },
     }
 }
 
@@ -825,26 +445,6 @@ const REVIVE_ANCHOR: usize = usize::MAX - 2;
 /// Sentinel anchor: a reconfiguration-retry backoff expired — wakes
 /// the loop so `release_retries` runs at the right virtual time.
 const RETRY_ANCHOR: usize = usize::MAX - 3;
-
-/// Fail one admitted-but-unfinished job of a batch, sending the batch
-/// reply when it was the last outstanding unit — the single bookkeeping
-/// path shared by client disconnects and the stall guard.
-fn fail_job(
-    batches: &mut HashMap<usize, Batch>,
-    tickets: &mut HashMap<u64, Ticket>,
-    open_tickets: &mut HashMap<u64, usize>,
-    batch_id: usize,
-    err: String,
-) {
-    if let Some(b) = batches.get_mut(&batch_id) {
-        b.error = Some(err);
-        b.remaining -= 1;
-        if b.remaining == 0 {
-            let b = batches.remove(&batch_id).unwrap();
-            finish(b, tickets, open_tickets);
-        }
-    }
-}
 
 /// One board's hardware-side state: its `Cynq` stack, the resident
 /// module map, the dispatch-in-flight index, the register-file
@@ -1075,7 +675,7 @@ fn dispatcher(
                     admit.set_qos(id, QosClass { weight: weight.max(1), max_inflight });
                     cluster.set_tenant_weight(id, weight);
                     round_due = round_due || admit.has_eligible();
-                    let _ = reply.send(ok(vec![
+                    reply.send(ok(vec![
                         ("tenant", i(id as i64)),
                         ("name", s(tenant)),
                         ("weight", i(weight.max(1) as i64)),
@@ -1084,7 +684,7 @@ fn dispatcher(
                 Msg::Resume { reply } => {
                     paused = false;
                     round_due = cluster.has_pending() || admit.has_eligible();
-                    let _ = reply.send(ok(vec![]));
+                    reply.send(ok(vec![]));
                 }
                 Msg::SetPolicy { user, name, reply } => {
                     let slot = user_slot(&mut user_index, &mut free_slots, &mut next_fresh, user);
@@ -1094,7 +694,7 @@ fn dispatcher(
                     } else {
                         err_val(&format!("unknown policy {name:?}"))
                     };
-                    let _ = reply.send(r);
+                    reply.send(r);
                 }
                 Msg::Submit { user, jobs, wait, reply } => {
                     let slot = user_slot(&mut user_index, &mut free_slots, &mut next_fresh, user);
@@ -1110,7 +710,7 @@ fn dispatcher(
                         .iter()
                         .find_map(|j| cluster.core(0).validate(&j.accname, None).err())
                     {
-                        let _ = reply.send(err_val(&e));
+                        reply.send(err_val(&e));
                         continue;
                     }
                     // Backpressure applies to ASYNC submissions, which
@@ -1124,7 +724,7 @@ fn dispatcher(
                         // queue is a terminal error, not a Busy:
                         // retrying would livelock the client forever.
                         if jobs.len() > admit.config().queue_cap {
-                            let _ = reply.send(err_val(&format!(
+                            reply.send(err_val(&format!(
                                 "batch of {} jobs exceeds the admission queue capacity ({})\
                                  ; split the batch",
                                 jobs.len(),
@@ -1139,7 +739,7 @@ fn dispatcher(
                             stats.busy_rejections.fetch_add(1, Ordering::Relaxed);
                             admit.note_rejected(tenant, jobs.len() as u64);
                             let queued = admit.queued_of(tenant) as u64;
-                            let _ = reply.send(busy_val(
+                            reply.send(busy_val(
                                 &format!(
                                     "tenant {tenant} admission queue full ({queued} queued)"
                                 ),
@@ -1153,7 +753,7 @@ fn dispatcher(
                         if open_tickets.get(&user).copied().unwrap_or(0) >= MAX_OPEN_TICKETS {
                             stats.busy_rejections.fetch_add(1, Ordering::Relaxed);
                             admit.note_rejected(tenant, jobs.len() as u64);
-                            let _ = reply.send(busy_val(
+                            reply.send(busy_val(
                                 &format!(
                                     "connection holds {MAX_OPEN_TICKETS} unclaimed tickets\
                                      ; drain them with wait/poll/completions"
@@ -1172,10 +772,7 @@ fn dispatcher(
                         tickets.insert(id, Ticket { user, done: None, waiters: Vec::new() });
                         *open_tickets.entry(user).or_insert(0) += 1;
                         stats.async_submits.fetch_add(1, Ordering::Relaxed);
-                        let _ = reply.send(ok(vec![
-                            ("ticket", i(id as i64)),
-                            ("jobs", i(n as i64)),
-                        ]));
+                        reply.send(ok(vec![("ticket", i(id as i64)), ("jobs", i(n as i64))]));
                         BatchSink::Ticket(id)
                     };
                     let batch = Batch {
@@ -1247,7 +844,7 @@ fn dispatcher(
                     } else {
                         err_val(&format!("no board {board} (cluster has {})", cluster.len()))
                     };
-                    let _ = reply.send(v);
+                    reply.send(v);
                 }
                 Msg::ReviveBoard { board, reply } => {
                     let v = if board < cluster.len() {
@@ -1260,7 +857,7 @@ fn dispatcher(
                     } else {
                         err_val(&format!("no board {board} (cluster has {})", cluster.len()))
                     };
-                    let _ = reply.send(v);
+                    reply.send(v);
                 }
                 _ => unreachable!("handle_cheap services every other message"),
             }
@@ -1957,19 +1554,19 @@ fn handle_cheap(
 ) -> Option<Msg> {
     match msg {
         Msg::Mem { op, reply } => {
-            let _ = reply.send(mem_op(hws, op));
+            reply.send(mem_op(hws, op));
         }
         Msg::Hello { user, reply } => {
             let slot = user_slot(user_index, free_slots, next_fresh, user);
-            let _ = reply.send(ok(vec![("user", i(user as i64)), ("slot", i(slot as i64))]));
+            reply.send(ok(vec![("user", i(user as i64)), ("slot", i(slot as i64))]));
         }
         Msg::Wait { user, ticket, reply } => {
             if tickets.get(&ticket).map(|t| t.user) != Some(user) {
-                let _ = reply.send(err_val(&format!("unknown ticket {ticket}")));
+                reply.send(err_val(&format!("unknown ticket {ticket}")));
             } else if tickets.get(&ticket).is_some_and(|t| t.done.is_some()) {
                 let t = tickets.remove(&ticket).expect("checked above");
                 close_ticket(open_tickets, t.user);
-                let _ = reply.send(t.done.expect("checked above"));
+                reply.send(t.done.expect("checked above"));
             } else {
                 // Settled later by `finish` (which consumes the ticket).
                 tickets
@@ -1987,7 +1584,7 @@ fn handle_cheap(
                 },
                 _ => err_val(&format!("unknown ticket {ticket}")),
             };
-            let _ = reply.send(v);
+            reply.send(v);
         }
         Msg::Completions { user, reply } => {
             let mut done_ids: Vec<u64> = tickets
@@ -2007,13 +1604,13 @@ fn handle_cheap(
                     ])
                 })
                 .collect();
-            let _ = reply.send(ok(vec![("completions", arr(items))]));
+            reply.send(ok(vec![("completions", arr(items))]));
         }
         Msg::Query { reply } => {
-            let _ = reply.send(stats_value(cluster, admit, *paused));
+            reply.send(stats_value(cluster, admit, *paused));
         }
         Msg::QueryCluster { reply } => {
-            let _ = reply.send(cluster_stats_value(cluster, *paused));
+            reply.send(cluster_stats_value(cluster, *paused));
         }
         Msg::QueryBoard { board, reply } => {
             let v = if board < cluster.len() {
@@ -2021,7 +1618,7 @@ fn handle_cheap(
             } else {
                 err_val(&format!("no board {board} (cluster has {})", cluster.len()))
             };
-            let _ = reply.send(v);
+            reply.send(v);
         }
         Msg::QueryLog { board, limit, reply } => {
             // Tail-only POD copies (decisions carry interned symbols,
@@ -2043,7 +1640,7 @@ fn handle_cheap(
         }
         Msg::Pause { reply } => {
             *paused = true;
-            let _ = reply.send(ok(vec![]));
+            reply.send(ok(vec![]));
         }
         other => return Some(other),
     }
@@ -2089,18 +1686,6 @@ fn stats_value(cluster: &ClusterCore, admit: &AdmissionPipeline, paused: bool) -
         ("boards", i(cluster.len() as i64)),
         ("paused", i(paused as i64)),
         ("tenants", arr(tenants)),
-    ])
-}
-
-/// Structured busy reply: `busy: 1` plus a deterministic retry hint —
-/// what `enqueue` overflow and the connection cap answer instead of
-/// stalling or silently dropping.
-fn busy_val(msg: &str, retry_after_ms: u64) -> Value {
-    obj(vec![
-        ("status", s("err")),
-        ("error", s(msg)),
-        ("busy", i(1)),
-        ("retry_after_ms", i(retry_after_ms.max(1) as i64)),
     ])
 }
 
@@ -2152,27 +1737,6 @@ fn cluster_stats_value(cluster: &ClusterCore, paused: bool) -> Value {
         ("parked_retries", i(cluster.parked_count() as i64)),
         ("paused", i(paused as i64)),
     ])
-}
-
-/// Scheduler slot for a daemon connection id: the existing binding, a
-/// recycled slot (lowest first, keeping round-robin order stable), or
-/// a fresh one.
-fn user_slot(
-    map: &mut HashMap<u64, usize>,
-    free: &mut std::collections::BTreeSet<usize>,
-    next_fresh: &mut usize,
-    user: u64,
-) -> usize {
-    *map.entry(user).or_insert_with(|| {
-        if let Some(&slot) = free.iter().next() {
-            free.remove(&slot);
-            slot
-        } else {
-            let slot = *next_fresh;
-            *next_fresh += 1;
-            slot
-        }
-    })
 }
 
 /// How a decision's hardware mirror failed. `module_missing` tells the
@@ -2310,15 +1874,6 @@ fn mem_op(hws: &mut [BoardHw], op: MemOp) -> Value {
             }
         }
     }
-}
-
-fn ok(mut fields: Vec<(&str, Value)>) -> Value {
-    fields.insert(0, ("status", s("ok")));
-    obj(fields)
-}
-
-fn err_val(e: &str) -> Value {
-    obj(vec![("status", s("err")), ("error", s(e))])
 }
 
 #[cfg(test)]

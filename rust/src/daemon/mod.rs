@@ -5,13 +5,31 @@
 //! JSON protocol over a Unix domain socket here — the offline vendor
 //! set has no gRPC, and the IPC structure is identical), while bulk
 //! data moves through shared memory so the socket never carries
-//! payloads (the paper's zero-copy design). The daemon owns the FPGA:
-//! a dispatcher thread drives the shared resource-elastic scheduler
-//! core ([`crate::sched::SchedCore`]) — the same state machine the
-//! offline simulator uses — so the live path performs variant
-//! selection, multi-region spans, replication across free regions and
-//! backlog-amortised reconfiguration avoidance (§4.4.3), executing
-//! every decision through real PJRT compute in the Cynq stack.
+//! payloads (the paper's zero-copy design).
+//!
+//! **The wire protocol — frame layout, every RPC, the ticket
+//! lifecycle, `Busy { retry_after_ms }` backpressure and
+//! version/compat notes — is specified in
+//! `rust/src/daemon/PROTOCOL.md`.** This rustdoc covers only how the
+//! pieces fit.
+//!
+//! The daemon is three layers (see also `rust/src/sched/ARCHITECTURE.md`,
+//! *Network plane*):
+//!
+//! - [`transport`] — the event-driven reactor network plane:
+//!   non-blocking accept + readiness polling (epoll on Linux behind a
+//!   portable poller), connection state in a generational slab instead
+//!   of a thread each, zero-copy frame reassembly into reusable
+//!   per-connection buffers, and backpressure-aware write flushing.
+//! - `session` — the per-connection RPC surface: request decoding,
+//!   tenant binding with QoS refcounting, the async ticket store and
+//!   the structured `ok`/`err`/`busy` reply vocabulary.
+//! - `dispatch` — the [`Daemon`] lifecycle and the dispatcher thread
+//!   that owns the FPGA (Cynq stack) per board, drives the shared
+//!   resource-elastic scheduler core ([`crate::sched::SchedCore`] /
+//!   [`crate::sched::ClusterCore`]) — the same state machine the
+//!   offline simulator uses, so sim/daemon decision parity holds —
+//!   and replays completions through one virtual-time heap.
 //!
 //! Tenants pick their scheduling policy over the wire
 //! ([`FpgaRpc::set_policy`]): [`crate::sched::Policy::Elastic`] is the
@@ -24,83 +42,26 @@
 //! with a [`crate::sched::PlacementKind`] policy routing requests and
 //! `cluster-stats`/`board-stats` RPCs ([`FpgaRpc::cluster_stats`],
 //! [`FpgaRpc::board_stats`]) exposing the per-board counters.
-//!
-//! ## The submit/wait protocol (tenant-aware admission)
-//!
-//! Submission is asynchronous at the wire level; the blocking call is
-//! a convenience wrapper:
-//!
-//! - **`session`** ([`FpgaRpc::set_session`]) binds the connection to
-//!   a named *tenant* with a QoS class — an admission DRR `weight` and
-//!   a token-bucket `max_inflight` quota.  Connections sharing a
-//!   tenant name share one admission identity; connections that never
-//!   call it get a private tenant with the permissive default class.
-//! - **`submit`** ([`FpgaRpc::submit`]) enqueues a job batch into the
-//!   tenant's *bounded* admission queue and replies immediately with a
-//!   **ticket**.  A full queue answers a structured
-//!   `busy`/`retry_after_ms` reply ([`ProtoError::Busy`]) — batches
-//!   are accepted or refused atomically, never silently dropped, and
-//!   the connection thread never parks on the dispatcher.
-//! - **`wait`** ([`FpgaRpc::wait`]) blocks until the ticket settles
-//!   and consumes it; **`poll`** ([`FpgaRpc::poll`]) is its
-//!   non-blocking, non-consuming twin; **`completions`**
-//!   ([`FpgaRpc::completions`]) drains every settled ticket of the
-//!   connection in one round trip.
-//! - **`run`** ([`FpgaRpc::run`]) is kept for compatibility: one round
-//!   trip the daemon serves as submit+wait over the same pipeline.
-//!   Blocking batches are exempt from `Busy` backpressure — a
-//!   connection holds at most one, so the connection cap already
-//!   bounds that state and old callers keep the old contract.
-//!
-//! Between submission and scheduling sits the shared
-//! [`crate::sched::AdmissionPipeline`]: one batched ingest round per
-//! scheduling round admits all eligible queued work in weighted
-//! deficit-round-robin order under the per-tenant in-flight quotas —
-//! the same state machine the simulator drives, which is what keeps
-//! sim/daemon decision parity with QoS enabled (see
-//! `sched/ARCHITECTURE.md`, *Admission & QoS*).
-//!
-//! ## Failure domain (board health + failover RPCs)
-//!
-//! The cluster dispatcher recovers from substrate faults — failed
-//! partial reconfigurations (real `CynqError`s from
-//! `load_accelerator_at`, or injected via
-//! [`Daemon::start_cluster_with_faults`] / `fos daemon --fault-plan`),
-//! transient run errors, and whole-board outages — by retrying with
-//! exponential backoff and by checkpoint-migrating work off failed
-//! boards (see `sched/ARCHITECTURE.md`, *Failure domain & recovery*).
-//! The RPC surface:
-//!
-//! - **`drain-board`** ([`FpgaRpc::drain_board`]) takes a board out of
-//!   the routable set (health `draining`): running and queued work
-//!   finishes in place, new requests route around it.
-//!   **`revive-board`** ([`FpgaRpc::revive_board`]) returns a drained
-//!   or failed board to rotation (a failed board comes back blank).
-//! - **`cluster-stats`** gained the failure-domain counters:
-//!   `healthy` (routable boards), `failovers`, `migrations` (requests
-//!   moved off failed boards), `lost_ns` (virtual execution destroyed
-//!   by faults), `reconfig_failures` / `reconfig_retries` /
-//!   `reconfig_rejections` (the backoff-retry pipeline), `run_faults`
-//!   (transient errors re-queued) and `parked_retries` — parsed into
-//!   [`ClusterStatsReport`].
-//! - **`board-stats`** (and each board object of `cluster-stats`)
-//!   gained `health`: `"healthy"`, `"draining"` or `"down"` —
-//!   [`BoardStatsReport::health`].
-//!
-//! A request whose reconfiguration keeps failing past the per-accel
-//! cap is answered with a structured error (the same reply path as
-//! scheduler rejections), never silently dropped: batches still settle
-//! and conservation holds under any fault plan (`tests/chaos.rs`).
+//! [`Daemon::start_cluster_with_faults`] injects a deterministic
+//! [`crate::sched::FaultPlan`]; recovery (drain/failover, checkpoint
+//! migration, reconfig retry with backoff) is documented in
+//! `sched/ARCHITECTURE.md`, *Failure domain & recovery*, and the
+//! corresponding RPCs (`drain-board`, `revive-board`, the
+//! failure-domain counters of `cluster-stats`) in `PROTOCOL.md`.
 
-mod proto;
-mod server;
 mod client;
+mod dispatch;
+mod proto;
+mod session;
 mod shm;
+pub mod transport;
 
 pub use client::{
     BoardStatsReport, ClusterStatsReport, FpgaRpc, RunReport, SchedStatsReport,
     TenantStatsReport,
 };
-pub use proto::{read_msg, write_msg, Job, ProtoError};
-pub use server::{BoardStats, Daemon, DaemonStats, DEFAULT_MAX_CONNECTIONS, MAX_OPEN_TICKETS};
+pub use dispatch::{BoardStats, Daemon, DaemonStats};
+pub use proto::{read_msg, write_msg, Job, ProtoError, MAX_MSG};
+pub use session::MAX_OPEN_TICKETS;
 pub use shm::SharedMem;
+pub use transport::DEFAULT_MAX_CONNECTIONS;

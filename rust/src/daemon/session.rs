@@ -1,0 +1,426 @@
+//! Session layer: everything between a framed request and the
+//! scheduler — request decoding, connection→scheduler-slot binding,
+//! tenant identity with QoS refcounting, async submission tickets and
+//! batch settlement.
+//!
+//! The [`Msg`] enum is the daemon's internal RPC vocabulary (one
+//! variant per wire method, documented in
+//! `rust/src/daemon/PROTOCOL.md`); [`decode_request`] translates a
+//! parsed wire frame into it, preserving the original blocking
+//! server's error contract exactly: schema errors on most fields
+//! answer a structured `err` reply on the live connection, while a
+//! missing `jobs` array (a protocol-level schema violation) tears the
+//! connection down, just as the old `serve()` loop's `?` did.
+//!
+//! Tenant identity is reference-counted per connection: named tenants
+//! (the `session` RPC) share an id across connections; anonymous
+//! connections get a private one.  [`release_tenant`] drops one
+//! connection's claim and retires the admission-pipeline state at
+//! zero, shared by the Goodbye and rebind paths so the semantics
+//! cannot drift between them.  Tickets ([`Ticket`], [`BatchSink`])
+//! carry async `submit` results until `wait`/`poll`/`completions`
+//! claims them, capped per connection by [`MAX_OPEN_TICKETS`].
+
+use super::proto::{self, Job};
+use super::transport::ReplySink;
+use crate::json::{arr, f, i, obj, s, Value};
+use crate::sched::{AdmissionPipeline, Decision};
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::mpsc;
+
+/// Open (pending + settled-but-unclaimed) async tickets one connection
+/// may hold.  A fire-and-forget client that submits without ever
+/// draining `wait`/`poll`/`completions` hits a structured busy reject
+/// here instead of growing the dispatcher's ticket store forever.
+pub const MAX_OPEN_TICKETS: usize = 1024;
+
+pub(crate) enum Msg {
+    /// A connection opened (sent by its first `ping`): bind the daemon
+    /// user id to a recycled scheduler slot.
+    Hello {
+        user: u64,
+        reply: ReplySink,
+    },
+    /// A connection closed: retire its scheduler slot for reuse.
+    Goodbye {
+        user: u64,
+    },
+    /// Bind the connection to a named tenant + QoS class (weight and
+    /// in-flight quota); several connections may share one tenant.
+    Session {
+        user: u64,
+        tenant: String,
+        weight: u32,
+        max_inflight: usize,
+        reply: ReplySink,
+    },
+    /// Job batch. `wait: true` is the blocking `run` RPC (reply
+    /// deferred to the batch's completion); `wait: false` is the
+    /// non-blocking `submit` RPC (reply is an immediate ticket).
+    Submit {
+        user: u64,
+        jobs: Vec<Job>,
+        wait: bool,
+        reply: ReplySink,
+    },
+    /// Block until the ticket settles (consumes it).
+    Wait {
+        user: u64,
+        ticket: u64,
+        reply: ReplySink,
+    },
+    /// Non-blocking ticket status (does not consume).
+    Poll {
+        user: u64,
+        ticket: u64,
+        reply: ReplySink,
+    },
+    /// Drain every settled ticket of this connection.
+    Completions {
+        user: u64,
+        reply: ReplySink,
+    },
+    Mem {
+        op: MemOp,
+        reply: ReplySink,
+    },
+    SetPolicy {
+        user: u64,
+        name: String,
+        reply: ReplySink,
+    },
+    Pause {
+        reply: ReplySink,
+    },
+    Resume {
+        reply: ReplySink,
+    },
+    Query {
+        reply: ReplySink,
+    },
+    /// Cluster-wide stats: totals, routing/steal counters and one
+    /// object per board.
+    QueryCluster {
+        reply: ReplySink,
+    },
+    /// One board's scheduler counters and queue depth.
+    QueryBoard {
+        board: usize,
+        reply: ReplySink,
+    },
+    /// Operator drain: board leaves the routable set, running work
+    /// finishes in place ([`crate::sched::BoardHealth::Draining`]).
+    DrainBoard {
+        board: usize,
+        reply: ReplySink,
+    },
+    /// Bring a drained (or failed) board back into rotation.
+    ReviveBoard {
+        board: usize,
+        reply: ReplySink,
+    },
+    /// Tail of a decision log: one board's (`board: Some`) or the
+    /// merged cluster log (`None`).  `limit: None` means "all retained
+    /// entries" — still bounded by the core's ring cap; the reply
+    /// clones only the tail, never scans the whole ring.
+    QueryLog {
+        board: Option<usize>,
+        limit: Option<usize>,
+        reply: mpsc::Sender<Vec<Decision>>,
+    },
+    /// The merged cluster log with its board tags — what the cluster
+    /// fault-parity test compares against the simulator's
+    /// `(board, decision)` sequence.
+    QueryMergedTagged {
+        reply: mpsc::Sender<Vec<(usize, Decision)>>,
+    },
+    Stop,
+}
+
+pub(crate) enum MemOp {
+    Alloc { bytes: usize },
+    Free { addr: u64 },
+    Write { addr: u64, data: Vec<f32> },
+    Read { addr: u64, count: usize },
+    Import { shm: PathBuf, offset: usize, count: usize, addr: u64 },
+    Export { addr: u64, count: usize, shm: PathBuf, offset: usize },
+}
+
+/// What one decoded wire frame means for the connection that sent it.
+pub(crate) enum Decoded {
+    /// Forward to the dispatcher; the reply arrives via the
+    /// [`ReplySink`] embedded in the message.
+    Dispatch(Msg),
+    /// Answer right away without involving the dispatcher (schema
+    /// errors, unknown methods).
+    Immediate(Value),
+    /// Protocol violation: tear the connection down, exactly as the
+    /// blocking server's schema `?` did.
+    Close,
+}
+
+/// Decode one parsed wire frame into the dispatcher vocabulary — the
+/// reactor-side twin of the old blocking `serve()` match, preserving
+/// its reply-vs-close error contract byte for byte.
+pub(crate) fn decode_request(user: u64, msg: &Value, reply: ReplySink) -> Decoded {
+    let method = msg.get("method").as_str().unwrap_or("");
+    let m = match method {
+        "ping" => Msg::Hello { user, reply },
+        // `run` blocks until the batch completes; `submit` returns
+        // a ticket immediately (drain via wait/poll/completions).
+        "run" | "submit" => {
+            let wait = method == "run";
+            let Ok(items) = msg.req_array("jobs") else {
+                return Decoded::Close;
+            };
+            let jobs: Result<Vec<Job>, _> = items.iter().map(Job::from_value).collect();
+            match jobs {
+                Err(e) => return Decoded::Immediate(err_val(&e.to_string())),
+                Ok(jobs) => Msg::Submit { user, jobs, wait, reply },
+            }
+        }
+        "session" => match msg.req_str("tenant") {
+            Err(e) => return Decoded::Immediate(err_val(&e)),
+            Ok(tenant) => {
+                let tenant = tenant.to_string();
+                let weight = msg.get("weight").as_u64().unwrap_or(1).max(1) as u32;
+                // 0 (or absent) = unbounded in-flight quota.
+                let max_inflight = match msg.get("max_inflight").as_u64() {
+                    Some(0) | None => usize::MAX,
+                    Some(n) => n as usize,
+                };
+                Msg::Session { user, tenant, weight, max_inflight, reply }
+            }
+        },
+        "wait" => match msg.req_u64("ticket") {
+            Err(e) => return Decoded::Immediate(err_val(&e)),
+            Ok(ticket) => Msg::Wait { user, ticket, reply },
+        },
+        "poll" => match msg.req_u64("ticket") {
+            Err(e) => return Decoded::Immediate(err_val(&e)),
+            Ok(ticket) => Msg::Poll { user, ticket, reply },
+        },
+        "completions" => Msg::Completions { user, reply },
+        "policy" => match msg.req_str("policy") {
+            Err(e) => return Decoded::Immediate(err_val(&e)),
+            Ok(name) => {
+                let name = name.to_string();
+                Msg::SetPolicy { user, name, reply }
+            }
+        },
+        "pause" => Msg::Pause { reply },
+        "resume" => Msg::Resume { reply },
+        "stats" => Msg::Query { reply },
+        "cluster-stats" => Msg::QueryCluster { reply },
+        "board-stats" => match msg.req_u64("board") {
+            Err(e) => return Decoded::Immediate(err_val(&e)),
+            Ok(board) => Msg::QueryBoard { board: board as usize, reply },
+        },
+        "drain-board" => match msg.req_u64("board") {
+            Err(e) => return Decoded::Immediate(err_val(&e)),
+            Ok(board) => Msg::DrainBoard { board: board as usize, reply },
+        },
+        "revive-board" => match msg.req_u64("board") {
+            Err(e) => return Decoded::Immediate(err_val(&e)),
+            Ok(board) => Msg::ReviveBoard { board: board as usize, reply },
+        },
+        "alloc" | "free" | "write" | "read" | "import" | "export" => {
+            match parse_mem_op(method, msg) {
+                Err(e) => return Decoded::Immediate(err_val(&e)),
+                Ok(op) => Msg::Mem { op, reply },
+            }
+        }
+        other => return Decoded::Immediate(err_val(&format!("unknown method {other:?}"))),
+    };
+    Decoded::Dispatch(m)
+}
+
+fn parse_mem_op(method: &str, msg: &Value) -> Result<MemOp, String> {
+    Ok(match method {
+        "alloc" => MemOp::Alloc { bytes: msg.req_u64("bytes")? as usize },
+        "free" => MemOp::Free { addr: msg.req_u64("addr")? },
+        "write" => MemOp::Write {
+            addr: msg.req_u64("addr")?,
+            data: proto::b64_to_f32s(msg.req_str("b64")?).map_err(|e| e.to_string())?,
+        },
+        "read" => MemOp::Read {
+            addr: msg.req_u64("addr")?,
+            count: msg.req_u64("count")? as usize,
+        },
+        "import" => MemOp::Import {
+            shm: msg.req_str("shm")?.into(),
+            offset: msg.req_u64("offset")? as usize,
+            count: msg.req_u64("count")? as usize,
+            addr: msg.req_u64("addr")?,
+        },
+        "export" => MemOp::Export {
+            addr: msg.req_u64("addr")?,
+            count: msg.req_u64("count")? as usize,
+            shm: msg.req_str("shm")?.into(),
+            offset: msg.req_u64("offset")? as usize,
+        },
+        _ => unreachable!(),
+    })
+}
+
+/// Where a finished batch's reply goes: straight back to a blocking
+/// `run` caller, or into the ticket store for the async
+/// `wait`/`poll`/`completions` RPCs to claim.
+pub(crate) enum BatchSink {
+    Reply(ReplySink),
+    Ticket(u64),
+}
+
+pub(crate) struct Batch {
+    pub(crate) sink: BatchSink,
+    pub(crate) remaining: usize,
+    pub(crate) latencies_us: Vec<f64>,
+    pub(crate) modelled_us: Vec<f64>,
+    pub(crate) error: Option<String>,
+}
+
+/// One async submission's completion slot.  `done` holds the settled
+/// reply until a `wait`/`completions` consumes it; `waiters` are
+/// blocked `wait` callers to answer at settlement.
+pub(crate) struct Ticket {
+    pub(crate) user: u64,
+    pub(crate) done: Option<Value>,
+    pub(crate) waiters: Vec<ReplySink>,
+}
+
+/// Decrement a connection's open-ticket count (entry dropped at zero).
+pub(crate) fn close_ticket(open: &mut HashMap<u64, usize>, user: u64) {
+    if let Some(c) = open.get_mut(&user) {
+        *c = c.saturating_sub(1);
+        if *c == 0 {
+            open.remove(&user);
+        }
+    }
+}
+
+/// Drop one connection's claim on tenant `id`: decrement the refcount
+/// and, at zero, evict the name mapping and retire the pipeline state
+/// (removed once drained) — shared by the Goodbye and Session-rebind
+/// paths so retirement semantics cannot drift between them.
+pub(crate) fn release_tenant(
+    tenant_ids: &mut HashMap<String, usize>,
+    tenant_refs: &mut HashMap<usize, usize>,
+    admit: &mut AdmissionPipeline,
+    id: usize,
+) {
+    let refs = tenant_refs.entry(id).or_insert(1);
+    *refs = refs.saturating_sub(1);
+    if *refs == 0 {
+        tenant_refs.remove(&id);
+        tenant_ids.retain(|_, &mut t| t != id);
+        admit.retire(id);
+    }
+}
+
+/// Settle a finished batch: build the reply (error or latency arrays)
+/// and deliver it to its sink — directly for a blocking `run`, or into
+/// the ticket store (answering any blocked `wait` callers) for async
+/// submissions.
+pub(crate) fn finish(
+    b: Batch,
+    tickets: &mut HashMap<u64, Ticket>,
+    open: &mut HashMap<u64, usize>,
+) {
+    let resp = match &b.error {
+        Some(e) => err_val(e),
+        None => ok(vec![
+            (
+                "latencies_us",
+                arr(b.latencies_us.iter().map(|&x| f(x)).collect()),
+            ),
+            (
+                "modelled_us",
+                arr(b.modelled_us.iter().map(|&x| f(x)).collect()),
+            ),
+        ]),
+    };
+    match b.sink {
+        BatchSink::Reply(tx) => {
+            tx.send(resp);
+        }
+        // A missing ticket means its connection departed: the reply
+        // has no claimant and is dropped.
+        BatchSink::Ticket(id) => match tickets.remove(&id) {
+            None => {}
+            Some(mut t) if t.waiters.is_empty() => {
+                // Claimed later (wait/poll/completions).
+                t.done = Some(resp);
+                tickets.insert(id, t);
+            }
+            Some(t) => {
+                for w in t.waiters {
+                    w.send(resp.clone());
+                }
+                close_ticket(open, t.user); // consumed by the waiter(s)
+            }
+        },
+    }
+}
+
+/// Fail one admitted-but-unfinished job of a batch, sending the batch
+/// reply when it was the last outstanding unit — the single bookkeeping
+/// path shared by client disconnects and the stall guard.
+pub(crate) fn fail_job(
+    batches: &mut HashMap<usize, Batch>,
+    tickets: &mut HashMap<u64, Ticket>,
+    open_tickets: &mut HashMap<u64, usize>,
+    batch_id: usize,
+    err: String,
+) {
+    if let Some(b) = batches.get_mut(&batch_id) {
+        b.error = Some(err);
+        b.remaining -= 1;
+        if b.remaining == 0 {
+            let b = batches.remove(&batch_id).unwrap();
+            finish(b, tickets, open_tickets);
+        }
+    }
+}
+
+/// Scheduler slot for a daemon connection id: the existing binding, a
+/// recycled slot (lowest first, keeping round-robin order stable), or
+/// a fresh one.
+pub(crate) fn user_slot(
+    map: &mut HashMap<u64, usize>,
+    free: &mut std::collections::BTreeSet<usize>,
+    next_fresh: &mut usize,
+    user: u64,
+) -> usize {
+    *map.entry(user).or_insert_with(|| {
+        if let Some(&slot) = free.iter().next() {
+            free.remove(&slot);
+            slot
+        } else {
+            let slot = *next_fresh;
+            *next_fresh += 1;
+            slot
+        }
+    })
+}
+
+pub(crate) fn ok(mut fields: Vec<(&str, Value)>) -> Value {
+    fields.insert(0, ("status", s("ok")));
+    obj(fields)
+}
+
+pub(crate) fn err_val(e: &str) -> Value {
+    obj(vec![("status", s("err")), ("error", s(e))])
+}
+
+/// Structured busy reply: `busy: 1` plus a deterministic retry hint —
+/// what `enqueue` overflow and the connection cap answer instead of
+/// stalling or silently dropping.
+pub(crate) fn busy_val(msg: &str, retry_after_ms: u64) -> Value {
+    obj(vec![
+        ("status", s("err")),
+        ("error", s(msg)),
+        ("busy", i(1)),
+        ("retry_after_ms", i(retry_after_ms.max(1) as i64)),
+    ])
+}

@@ -1,0 +1,1227 @@
+//! Event-driven network plane: the daemon's reactor.
+//!
+//! One thread owns every client connection.  A [`Poller`] (epoll(7) on
+//! Linux, poll(2) elsewhere) reports readiness; connection state lives
+//! in a generational [`Slab`] keyed by a `u64` token instead of a
+//! thread per client; requests assemble zero-copy inside a reusable
+//! per-connection [`FrameBuf`]; replies batch into a per-connection
+//! write buffer flushed as far as the kernel will take it, with the
+//! remainder waiting on the next writable event.
+//!
+//! The wire protocol the reactor frames is specified in
+//! `rust/src/daemon/PROTOCOL.md`, and the RPC semantics are
+//! byte-for-byte those of the old thread-per-connection server:
+//!
+//! * clients are strict write-one-read-one ([`crate::daemon::FpgaRpc`]),
+//!   so at most **one** request per connection is in flight with the
+//!   dispatcher at a time, and at most one serialized reply sits in the
+//!   write buffer;
+//! * while a request is in flight (or a reply is still flushing) the
+//!   connection's read interest is dropped — a client that pipelines
+//!   requests without draining replies is eventually backpressured by
+//!   the kernel socket buffers, exactly as it was when a blocking
+//!   thread served it, and daemon-side memory stays bounded;
+//! * a malformed or oversized frame closes the connection silently
+//!   (the blocking `read_msg` contract);
+//! * at the connection cap a new client is shed with a best-effort
+//!   `Busy { retry_after_ms }` frame before the close.
+//!
+//! Dispatcher replies travel back over an in-process channel as
+//! `(slab key, Value)` pairs plus a `Waker` byte on a socketpair;
+//! the slab key's generation makes a reply for an already-closed
+//! connection drop harmlessly instead of landing on a recycled slot.
+
+use std::io::{self, Read, Write};
+use std::os::unix::io::{AsRawFd, RawFd};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+
+use super::dispatch::DaemonStats;
+use super::proto::{write_msg, MAX_MSG};
+use super::session::{busy_val, decode_request, err_val, Decoded, Msg};
+use crate::json::Value;
+
+/// Connection-table cap of the default configuration: past this many
+/// live connections the reactor sheds new clients with a structured
+/// busy reject instead of growing the slab without bound.
+pub const DEFAULT_MAX_CONNECTIONS: usize = 256;
+
+/// Socket read granularity (and the minimum spare tail a [`FrameBuf`]
+/// guarantees).
+const READ_CHUNK: usize = 4096;
+
+/// Largest single growth step of a [`FrameBuf`] — big frames arrive in
+/// bounded reallocation increments instead of one huge reserve.
+const GROW_LIMIT: usize = 1 << 20;
+
+/// Buffers larger than this shrink back once fully drained, so one
+/// 64 MiB frame does not pin 64 MiB per connection forever.
+const SHRINK_AT: usize = 256 * 1024;
+
+/// Retained capacity after a shrink.
+const INIT_CAP: usize = 16 * 1024;
+
+/// One readiness notification out of [`Poller::wait`].
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    /// The token the file descriptor was registered under.
+    pub token: u64,
+    /// Readable — or hung up / errored, which a `read()` will observe.
+    pub readable: bool,
+    /// Writable — or errored, which a `write()` will observe.
+    pub writable: bool,
+}
+
+#[cfg(target_os = "linux")]
+mod sys {
+    //! Raw epoll(7) FFI.  std links libc, so the symbols resolve
+    //! without any external crate (the build environment is offline).
+
+    use std::io;
+    use std::os::raw::c_int;
+    use std::os::unix::io::RawFd;
+
+    use super::Event;
+
+    const EPOLL_CLOEXEC: c_int = 0o2000000;
+    const EPOLL_CTL_ADD: c_int = 1;
+    const EPOLL_CTL_DEL: c_int = 2;
+    const EPOLL_CTL_MOD: c_int = 3;
+    const EPOLLIN: u32 = 0x001;
+    const EPOLLOUT: u32 = 0x004;
+    const EPOLLERR: u32 = 0x008;
+    const EPOLLHUP: u32 = 0x010;
+    const EPOLLRDHUP: u32 = 0x2000;
+
+    // Kernel ABI: packed on x86-64 (the 64-bit data field is unaligned
+    // there), naturally laid out on other architectures.
+    #[derive(Clone, Copy)]
+    #[repr(C)]
+    #[cfg_attr(target_arch = "x86_64", repr(packed))]
+    struct EpollEvent {
+        events: u32,
+        data: u64,
+    }
+
+    extern "C" {
+        fn epoll_create1(flags: c_int) -> c_int;
+        fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut EpollEvent) -> c_int;
+        fn epoll_wait(
+            epfd: c_int,
+            events: *mut EpollEvent,
+            maxevents: c_int,
+            timeout: c_int,
+        ) -> c_int;
+        fn close(fd: c_int) -> c_int;
+    }
+
+    /// Readiness poller over epoll(7).
+    pub struct Poller {
+        epfd: RawFd,
+    }
+
+    impl Poller {
+        pub fn new() -> io::Result<Poller> {
+            let epfd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+            if epfd < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(Poller { epfd })
+        }
+
+        fn bits(read: bool, write: bool) -> u32 {
+            let mut e = EPOLLRDHUP;
+            if read {
+                e |= EPOLLIN;
+            }
+            if write {
+                e |= EPOLLOUT;
+            }
+            e
+        }
+
+        fn ctl(&mut self, op: c_int, fd: RawFd, events: u32, token: u64) -> io::Result<()> {
+            let mut ev = EpollEvent { events, data: token };
+            let rc = unsafe { epoll_ctl(self.epfd, op, fd, &mut ev) };
+            if rc < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(())
+        }
+
+        /// Start watching `fd` under `token`.
+        pub fn register(
+            &mut self,
+            fd: RawFd,
+            token: u64,
+            read: bool,
+            write: bool,
+        ) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_ADD, fd, Self::bits(read, write), token)
+        }
+
+        /// Change the interest set of an already-watched `fd`.
+        pub fn reregister(
+            &mut self,
+            fd: RawFd,
+            token: u64,
+            read: bool,
+            write: bool,
+        ) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_MOD, fd, Self::bits(read, write), token)
+        }
+
+        /// Stop watching `fd` entirely.
+        pub fn deregister(&mut self, fd: RawFd) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_DEL, fd, 0, 0)
+        }
+
+        /// Block until a registered fd is ready or `timeout_ms` elapses
+        /// (negative = forever).  Fills `events`.
+        pub fn wait(&mut self, events: &mut Events, timeout_ms: i32) -> io::Result<usize> {
+            let n = unsafe {
+                epoll_wait(
+                    self.epfd,
+                    events.buf.as_mut_ptr(),
+                    events.buf.len() as c_int,
+                    timeout_ms,
+                )
+            };
+            if n < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            events.len = n as usize;
+            Ok(events.len)
+        }
+    }
+
+    impl Drop for Poller {
+        fn drop(&mut self) {
+            unsafe {
+                close(self.epfd);
+            }
+        }
+    }
+
+    /// Reusable readiness-event buffer for [`Poller::wait`].
+    pub struct Events {
+        buf: Vec<EpollEvent>,
+        len: usize,
+    }
+
+    impl Events {
+        pub fn with_capacity(n: usize) -> Events {
+            Events { buf: vec![EpollEvent { events: 0, data: 0 }; n.max(1)], len: 0 }
+        }
+
+        pub fn len(&self) -> usize {
+            self.len
+        }
+
+        pub fn is_empty(&self) -> bool {
+            self.len == 0
+        }
+
+        /// The `i`-th ready event of the last [`Poller::wait`] call.
+        pub fn get(&self, i: usize) -> Event {
+            assert!(i < self.len);
+            let ev = self.buf[i];
+            let bits = ev.events;
+            Event {
+                token: ev.data,
+                readable: bits & (EPOLLIN | EPOLLRDHUP | EPOLLHUP | EPOLLERR) != 0,
+                writable: bits & (EPOLLOUT | EPOLLHUP | EPOLLERR) != 0,
+            }
+        }
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+mod sys {
+    //! Portable fallback poller over poll(2) for non-Linux Unixes.
+    //! O(n) per wait, which is fine for a development machine; the
+    //! deployment target is the epoll backend above.
+
+    use std::io;
+    use std::os::raw::{c_int, c_short, c_uint};
+    use std::os::unix::io::RawFd;
+
+    use super::Event;
+
+    const POLLIN: c_short = 0x001;
+    const POLLOUT: c_short = 0x004;
+    const POLLERR: c_short = 0x008;
+    const POLLHUP: c_short = 0x010;
+
+    #[derive(Clone, Copy)]
+    #[repr(C)]
+    struct PollFd {
+        fd: c_int,
+        events: c_short,
+        revents: c_short,
+    }
+
+    extern "C" {
+        fn poll(fds: *mut PollFd, nfds: c_uint, timeout: c_int) -> c_int;
+    }
+
+    struct Entry {
+        fd: RawFd,
+        token: u64,
+        read: bool,
+        write: bool,
+    }
+
+    /// Readiness poller over poll(2).
+    pub struct Poller {
+        entries: Vec<Entry>,
+    }
+
+    impl Poller {
+        pub fn new() -> io::Result<Poller> {
+            Ok(Poller { entries: Vec::new() })
+        }
+
+        pub fn register(
+            &mut self,
+            fd: RawFd,
+            token: u64,
+            read: bool,
+            write: bool,
+        ) -> io::Result<()> {
+            self.entries.push(Entry { fd, token, read, write });
+            Ok(())
+        }
+
+        pub fn reregister(
+            &mut self,
+            fd: RawFd,
+            token: u64,
+            read: bool,
+            write: bool,
+        ) -> io::Result<()> {
+            match self.entries.iter_mut().find(|e| e.fd == fd) {
+                Some(e) => {
+                    e.token = token;
+                    e.read = read;
+                    e.write = write;
+                    Ok(())
+                }
+                None => Err(io::Error::new(io::ErrorKind::NotFound, "fd not registered")),
+            }
+        }
+
+        pub fn deregister(&mut self, fd: RawFd) -> io::Result<()> {
+            self.entries.retain(|e| e.fd != fd);
+            Ok(())
+        }
+
+        pub fn wait(&mut self, events: &mut Events, timeout_ms: i32) -> io::Result<usize> {
+            events.out.clear();
+            let mut fds: Vec<PollFd> = self
+                .entries
+                .iter()
+                .map(|e| {
+                    let mut ev: c_short = 0;
+                    if e.read {
+                        ev |= POLLIN;
+                    }
+                    if e.write {
+                        ev |= POLLOUT;
+                    }
+                    PollFd { fd: e.fd, events: ev, revents: 0 }
+                })
+                .collect();
+            if fds.is_empty() {
+                return Ok(0);
+            }
+            let rc = unsafe { poll(fds.as_mut_ptr(), fds.len() as c_uint, timeout_ms) };
+            if rc < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            for (e, p) in self.entries.iter().zip(fds.iter()) {
+                let r = p.revents;
+                if r == 0 {
+                    continue;
+                }
+                events.out.push(Event {
+                    token: e.token,
+                    readable: r & (POLLIN | POLLHUP | POLLERR) != 0,
+                    writable: r & (POLLOUT | POLLHUP | POLLERR) != 0,
+                });
+                if events.out.len() == events.cap {
+                    break;
+                }
+            }
+            Ok(events.out.len())
+        }
+    }
+
+    /// Reusable readiness-event buffer for [`Poller::wait`].
+    pub struct Events {
+        out: Vec<Event>,
+        cap: usize,
+    }
+
+    impl Events {
+        pub fn with_capacity(n: usize) -> Events {
+            Events { out: Vec::with_capacity(n.max(1)), cap: n.max(1) }
+        }
+
+        pub fn len(&self) -> usize {
+            self.out.len()
+        }
+
+        pub fn is_empty(&self) -> bool {
+            self.out.is_empty()
+        }
+
+        /// The `i`-th ready event of the last [`Poller::wait`] call.
+        pub fn get(&self, i: usize) -> Event {
+            self.out[i]
+        }
+    }
+}
+
+pub use sys::{Events, Poller};
+
+struct Slot<T> {
+    epoch: u32,
+    val: Option<T>,
+}
+
+/// Generational slab: dense storage addressed by a `u64` key carrying
+/// the slot index in the low 32 bits and the slot's generation in the
+/// high 32.  Removing an entry bumps the generation, so a stale key —
+/// say, a dispatcher reply for a connection that died while its request
+/// was in flight — misses instead of landing on a recycled slot.
+pub struct Slab<T> {
+    slots: Vec<Slot<T>>,
+    free: Vec<u32>,
+    live: usize,
+}
+
+impl<T> Slab<T> {
+    pub fn new() -> Slab<T> {
+        Slab { slots: Vec::new(), free: Vec::new(), live: 0 }
+    }
+
+    /// Number of live entries.
+    pub fn len(&self) -> usize {
+        self.live
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.live == 0
+    }
+
+    fn split(key: u64) -> (u32, usize) {
+        ((key >> 32) as u32, (key & 0xffff_ffff) as usize)
+    }
+
+    /// Insert, returning the entry's generational key.
+    pub fn insert(&mut self, val: T) -> u64 {
+        let idx = match self.free.pop() {
+            Some(i) => i as usize,
+            None => {
+                self.slots.push(Slot { epoch: 0, val: None });
+                self.slots.len() - 1
+            }
+        };
+        self.slots[idx].val = Some(val);
+        self.live += 1;
+        ((self.slots[idx].epoch as u64) << 32) | idx as u64
+    }
+
+    pub fn get(&self, key: u64) -> Option<&T> {
+        let (epoch, idx) = Self::split(key);
+        match self.slots.get(idx) {
+            Some(slot) if slot.epoch == epoch => slot.val.as_ref(),
+            _ => None,
+        }
+    }
+
+    pub fn get_mut(&mut self, key: u64) -> Option<&mut T> {
+        let (epoch, idx) = Self::split(key);
+        match self.slots.get_mut(idx) {
+            Some(slot) if slot.epoch == epoch => slot.val.as_mut(),
+            _ => None,
+        }
+    }
+
+    /// Remove an entry; its slot's generation bumps so the key (and any
+    /// stale copy of it) misses forever after.
+    pub fn remove(&mut self, key: u64) -> Option<T> {
+        let (epoch, idx) = Self::split(key);
+        let slot = self.slots.get_mut(idx)?;
+        if slot.epoch != epoch || slot.val.is_none() {
+            return None;
+        }
+        let v = slot.val.take();
+        slot.epoch = slot.epoch.wrapping_add(1);
+        self.free.push(idx as u32);
+        self.live -= 1;
+        v
+    }
+
+    /// Take every live entry (reactor shutdown).
+    pub fn drain(&mut self) -> Vec<T> {
+        let mut out = Vec::with_capacity(self.live);
+        for (i, slot) in self.slots.iter_mut().enumerate() {
+            if let Some(v) = slot.val.take() {
+                slot.epoch = slot.epoch.wrapping_add(1);
+                self.free.push(i as u32);
+                out.push(v);
+            }
+        }
+        self.live = 0;
+        out
+    }
+}
+
+impl<T> Default for Slab<T> {
+    fn default() -> Slab<T> {
+        Slab::new()
+    }
+}
+
+/// Framing error out of [`FrameBuf::next_frame`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrameError {
+    /// The header announced a body larger than [`crate::daemon::MAX_MSG`].
+    TooLarge(u32),
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, fm: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::TooLarge(n) => write!(fm, "frame of {n} bytes exceeds MAX_MSG"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+/// Incremental assembly of `[u32 LE length][body]` frames over one
+/// reusable buffer.
+///
+/// Socket bytes land in the spare tail handed out by
+/// [`FrameBuf::space`] / committed by [`FrameBuf::commit`];
+/// [`FrameBuf::next_frame`] then yields each complete frame body *in
+/// place* — the returned slice borrows the buffer, no copy.  The buffer
+/// grows in bounded steps toward a parsed header's announced length and
+/// shrinks back once drained, so a single large frame does not pin its
+/// peak allocation for the connection's lifetime.
+pub struct FrameBuf {
+    buf: Vec<u8>,
+    start: usize,
+    end: usize,
+}
+
+impl FrameBuf {
+    pub fn new() -> FrameBuf {
+        FrameBuf { buf: Vec::new(), start: 0, end: 0 }
+    }
+
+    /// Unconsumed buffered bytes (complete and partial frames).
+    pub fn pending(&self) -> usize {
+        self.end - self.start
+    }
+
+    /// Currently allocated buffer size — what the backpressure tests
+    /// bound.
+    pub fn capacity(&self) -> usize {
+        self.buf.len()
+    }
+
+    fn peek_len(&self) -> Option<u32> {
+        if self.pending() < 4 {
+            return None;
+        }
+        let b = &self.buf[self.start..self.start + 4];
+        Some(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    /// Spare tail to read into; at least `READ_CHUNK` (4 KiB), more
+    /// when a parsed header says a large frame is mid-flight.  Follow
+    /// with [`FrameBuf::commit`] for the bytes actually read.
+    pub fn space(&mut self) -> &mut [u8] {
+        if self.start == self.end {
+            self.start = 0;
+            self.end = 0;
+            if self.buf.len() > SHRINK_AT {
+                self.buf.truncate(INIT_CAP);
+                self.buf.shrink_to(INIT_CAP);
+            }
+        }
+        let mut chunk = READ_CHUNK;
+        if let Some(len) = self.peek_len() {
+            if len <= MAX_MSG {
+                let need = (4 + len as usize).saturating_sub(self.pending());
+                chunk = chunk.max(need.min(GROW_LIMIT));
+            }
+        }
+        if self.buf.len() - self.end < chunk {
+            if self.start > 0 {
+                self.buf.copy_within(self.start..self.end, 0);
+                self.end -= self.start;
+                self.start = 0;
+            }
+            if self.buf.len() - self.end < chunk {
+                let grow_to = self.end + chunk;
+                self.buf.resize(grow_to, 0);
+            }
+        }
+        &mut self.buf[self.end..]
+    }
+
+    /// Mark `n` bytes of the last [`FrameBuf::space`] slice as filled.
+    pub fn commit(&mut self, n: usize) {
+        self.end += n;
+        debug_assert!(self.end <= self.buf.len());
+    }
+
+    /// The next complete frame body, in place; `Ok(None)` means more
+    /// bytes are needed first.
+    pub fn next_frame(&mut self) -> Result<Option<&[u8]>, FrameError> {
+        let Some(len) = self.peek_len() else { return Ok(None) };
+        if len > MAX_MSG {
+            return Err(FrameError::TooLarge(len));
+        }
+        let need = 4 + len as usize;
+        if self.pending() < need {
+            return Ok(None);
+        }
+        let body = self.start + 4;
+        self.start += need;
+        Ok(Some(&self.buf[body..body + len as usize]))
+    }
+
+    /// Append raw bytes — the test/bench seam standing in for a socket
+    /// read (`space` + `commit` under the hood).
+    pub fn extend(&mut self, bytes: &[u8]) {
+        let mut off = 0;
+        while off < bytes.len() {
+            let dst = self.space();
+            let n = dst.len().min(bytes.len() - off);
+            dst[..n].copy_from_slice(&bytes[off..off + n]);
+            self.commit(n);
+            off += n;
+        }
+    }
+}
+
+impl Default for FrameBuf {
+    fn default() -> FrameBuf {
+        FrameBuf::new()
+    }
+}
+
+/// Wakes the reactor out of [`Poller::wait`] from the dispatcher
+/// thread: one byte down a socketpair, deduplicated by an atomic so a
+/// storm of replies costs one write until the reactor drains it.
+#[derive(Clone)]
+pub(crate) struct Waker {
+    tx: Arc<UnixStream>,
+    armed: Arc<AtomicBool>,
+}
+
+impl Waker {
+    fn new(tx: UnixStream) -> Waker {
+        Waker { tx: Arc::new(tx), armed: Arc::new(AtomicBool::new(false)) }
+    }
+
+    /// Wake unless a wake is already pending.
+    pub fn wake(&self) {
+        if !self.armed.swap(true, Ordering::AcqRel) {
+            let _ = (&*self.tx).write(&[1]);
+        }
+    }
+
+    /// Unconditional wake — shutdown must never lose its wakeup to the
+    /// deduplication race.
+    pub fn wake_force(&self) {
+        self.armed.store(true, Ordering::Release);
+        let _ = (&*self.tx).write(&[1]);
+    }
+
+    fn disarm(&self) {
+        self.armed.store(false, Ordering::Release);
+    }
+}
+
+/// Where a dispatcher reply goes: straight back into an in-process
+/// channel (daemon-internal queries, the old `ask()` shape) or to a
+/// reactor connection addressed by its generational slab key.
+pub(crate) enum ReplySink {
+    Local(mpsc::Sender<Value>),
+    Conn { key: u64, tx: mpsc::Sender<(u64, Value)>, waker: Waker },
+}
+
+impl ReplySink {
+    pub fn send(&self, v: Value) {
+        match self {
+            ReplySink::Local(tx) => {
+                let _ = tx.send(v);
+            }
+            ReplySink::Conn { key, tx, waker } => {
+                if tx.send((*key, v)).is_ok() {
+                    waker.wake();
+                }
+            }
+        }
+    }
+}
+
+/// Per-connection state held in the reactor's slab.
+struct Conn {
+    stream: UnixStream,
+    user: u64,
+    rbuf: FrameBuf,
+    wbuf: Vec<u8>,
+    wpos: usize,
+    /// A request is with the dispatcher; its reply has not been queued.
+    in_flight: bool,
+    /// The peer hung up (or the socket errored); buffered complete
+    /// frames still run before the connection closes.
+    eof: bool,
+    /// Currently registered poller interest, `None` when deregistered.
+    interest: Option<(bool, bool)>,
+}
+
+impl Conn {
+    fn new(stream: UnixStream, user: u64) -> Conn {
+        Conn {
+            stream,
+            user,
+            rbuf: FrameBuf::new(),
+            wbuf: Vec::new(),
+            wpos: 0,
+            in_flight: false,
+            eof: false,
+            interest: None,
+        }
+    }
+
+    fn write_pending(&self) -> bool {
+        self.wpos < self.wbuf.len()
+    }
+}
+
+const LISTENER_TOKEN: u64 = u64::MAX;
+const WAKER_TOKEN: u64 = u64::MAX - 1;
+
+/// What one parsed frame turned into (extracted as a step so the
+/// connection borrow drops before the reactor acts on it).
+enum Step {
+    Dispatch(Value),
+    Park,
+    Close,
+}
+
+/// The daemon's event loop: accepts, frames, decodes and forwards
+/// requests to the dispatcher thread, and flushes its replies — all on
+/// one thread, one epoll set, zero threads per connection.
+pub(crate) struct Reactor {
+    poller: Poller,
+    listener: UnixListener,
+    waker_rx: UnixStream,
+    waker: Waker,
+    conns: Slab<Conn>,
+    tx: mpsc::Sender<Msg>,
+    reply_tx: mpsc::Sender<(u64, Value)>,
+    reply_rx: mpsc::Receiver<(u64, Value)>,
+    stats: Arc<DaemonStats>,
+    stop: Arc<AtomicBool>,
+    max_connections: usize,
+    next_user: u64,
+}
+
+impl Reactor {
+    /// Wire up the reactor around a bound listener.  Returns the
+    /// [`Waker`] handle `Daemon::shutdown` pokes.
+    pub fn new(
+        listener: UnixListener,
+        tx: mpsc::Sender<Msg>,
+        stats: Arc<DaemonStats>,
+        stop: Arc<AtomicBool>,
+        max_connections: usize,
+    ) -> io::Result<(Reactor, Waker)> {
+        listener.set_nonblocking(true)?;
+        let (wtx, wrx) = UnixStream::pair()?;
+        wtx.set_nonblocking(true)?;
+        wrx.set_nonblocking(true)?;
+        let waker = Waker::new(wtx);
+        let mut poller = Poller::new()?;
+        poller.register(listener.as_raw_fd(), LISTENER_TOKEN, true, false)?;
+        poller.register(wrx.as_raw_fd(), WAKER_TOKEN, true, false)?;
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let reactor = Reactor {
+            poller,
+            listener,
+            waker_rx: wrx,
+            waker: waker.clone(),
+            conns: Slab::new(),
+            tx,
+            reply_tx,
+            reply_rx,
+            stats,
+            stop,
+            max_connections,
+            next_user: 0,
+        };
+        Ok((reactor, waker))
+    }
+
+    /// Run until the stop flag is raised (and the waker poked).
+    pub fn run(mut self) {
+        let mut events = Events::with_capacity(1024);
+        while !self.stop.load(Ordering::SeqCst) {
+            match self.poller.wait(&mut events, -1) {
+                Ok(_) => {}
+                Err(ref e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => break,
+            }
+            for k in 0..events.len() {
+                let ev = events.get(k);
+                match ev.token {
+                    LISTENER_TOKEN => self.accept_ready(),
+                    WAKER_TOKEN => self.drain_waker(),
+                    key => self.conn_event(key, ev.readable, ev.writable),
+                }
+            }
+            self.drain_replies();
+        }
+        // Shutdown: close every connection; the dispatcher hears one
+        // Goodbye each, so per-user scheduler slots retire normally.
+        for conn in self.conns.drain() {
+            let _ = self.tx.send(Msg::Goodbye { user: conn.user });
+        }
+    }
+
+    fn accept_ready(&mut self) {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _)) => self.admit(stream),
+                Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(ref e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => break,
+            }
+        }
+    }
+
+    /// Admit or shed one accepted connection.  At the cap the client
+    /// gets a best-effort `Busy { retry_after_ms: 50 }` frame and an
+    /// immediate close — the same contract the thread-per-connection
+    /// server honoured.
+    fn admit(&mut self, stream: UnixStream) {
+        if self.conns.len() >= self.max_connections {
+            self.stats.connections_shed.fetch_add(1, Ordering::Relaxed);
+            let max = self.max_connections;
+            let v = busy_val(&format!("daemon at connection capacity ({max})"), 50);
+            let mut frame = Vec::new();
+            if write_msg(&mut frame, &v).is_ok() {
+                let _ = stream.set_nonblocking(true);
+                let _ = (&stream).write(&frame);
+            }
+            return; // dropping the stream closes the client
+        }
+        if stream.set_nonblocking(true).is_err() {
+            return;
+        }
+        let user = self.next_user;
+        self.next_user += 1;
+        let key = self.conns.insert(Conn::new(stream, user));
+        let fd = match self.conns.get(key) {
+            Some(c) => c.stream.as_raw_fd(),
+            None => return,
+        };
+        if self.poller.register(fd, key, true, false).is_err() {
+            self.conns.remove(key);
+            return;
+        }
+        if let Some(c) = self.conns.get_mut(key) {
+            c.interest = Some((true, false));
+        }
+    }
+
+    fn drain_waker(&mut self) {
+        let mut buf = [0u8; 64];
+        loop {
+            match (&self.waker_rx).read(&mut buf) {
+                Ok(0) => break,
+                Ok(_) => continue,
+                Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(ref e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => break,
+            }
+        }
+        self.waker.disarm();
+    }
+
+    fn conn_event(&mut self, key: u64, readable: bool, writable: bool) {
+        if self.conns.get(key).is_none() {
+            return; // stale readiness for a connection closed this sweep
+        }
+        if writable && !self.flush(key) {
+            return;
+        }
+        if readable {
+            self.fill(key);
+        }
+        if self.advance(key) {
+            self.update_interest(key);
+        }
+    }
+
+    /// Drain the socket into the frame buffer.  EOF and read errors
+    /// both mark the connection `eof`; buffered complete frames still
+    /// run before it closes.
+    fn fill(&mut self, key: u64) {
+        loop {
+            let Some(conn) = self.conns.get_mut(key) else { return };
+            if conn.eof {
+                return;
+            }
+            let spare = conn.rbuf.space();
+            match (&conn.stream).read(spare) {
+                Ok(0) => {
+                    conn.eof = true;
+                    return;
+                }
+                Ok(n) => conn.rbuf.commit(n),
+                Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => return,
+                Err(ref e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    conn.eof = true;
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Parse and dispatch every actionable buffered frame, then close
+    /// the connection if its peer is gone and nothing is left to do.
+    /// Returns false when the connection was closed.
+    fn advance(&mut self, key: u64) -> bool {
+        loop {
+            let step = {
+                let Some(conn) = self.conns.get_mut(key) else { return false };
+                if conn.in_flight || !conn.wbuf.is_empty() {
+                    // One request in flight / one reply buffered at a
+                    // time: the parse gate that bounds memory under a
+                    // pipelining client.
+                    Step::Park
+                } else {
+                    match conn.rbuf.next_frame() {
+                        Ok(Some(frame)) => match std::str::from_utf8(frame)
+                            .ok()
+                            .and_then(|t| crate::json::parse(t).ok())
+                        {
+                            Some(v) => Step::Dispatch(v),
+                            // Malformed JSON closes the connection
+                            // silently — the blocking read_msg contract.
+                            None => Step::Close,
+                        },
+                        Ok(None) => Step::Park,
+                        // Oversized frame: same silent close.
+                        Err(_) => Step::Close,
+                    }
+                }
+            };
+            match step {
+                Step::Dispatch(v) => {
+                    if !self.dispatch_one(key, v) {
+                        return false;
+                    }
+                }
+                Step::Park => break,
+                Step::Close => {
+                    self.close(key);
+                    return false;
+                }
+            }
+        }
+        self.maybe_close(key)
+    }
+
+    /// Route one parsed request.  Returns false when the connection was
+    /// closed.
+    fn dispatch_one(&mut self, key: u64, msg: Value) -> bool {
+        self.stats.rpcs.fetch_add(1, Ordering::Relaxed);
+        let user = match self.conns.get(key) {
+            Some(c) => c.user,
+            None => return false,
+        };
+        let sink = ReplySink::Conn { key, tx: self.reply_tx.clone(), waker: self.waker.clone() };
+        match decode_request(user, &msg, sink) {
+            Decoded::Dispatch(m) => {
+                if self.tx.send(m).is_ok() {
+                    if let Some(c) = self.conns.get_mut(key) {
+                        c.in_flight = true;
+                    }
+                    true
+                } else {
+                    // Dispatcher already gone: answer what ask() would.
+                    self.enqueue_reply(key, err_val("daemon stopping"))
+                }
+            }
+            Decoded::Immediate(v) => self.enqueue_reply(key, v),
+            Decoded::Close => {
+                self.close(key);
+                false
+            }
+        }
+    }
+
+    /// Serialize a reply into the connection's write buffer and flush
+    /// what the socket will take.  Returns false when the connection
+    /// was closed.
+    fn enqueue_reply(&mut self, key: u64, v: Value) -> bool {
+        let serialized = match self.conns.get_mut(key) {
+            Some(c) => write_msg(&mut c.wbuf, &v).is_ok(),
+            None => return false,
+        };
+        if !serialized {
+            self.close(key);
+            return false;
+        }
+        self.flush(key)
+    }
+
+    /// Write as much buffered reply data as the kernel will take; the
+    /// remainder waits for the next writable event (backpressure-aware
+    /// flushing).  Returns false when the connection was closed.
+    fn flush(&mut self, key: u64) -> bool {
+        let mut broken = false;
+        {
+            let Some(conn) = self.conns.get_mut(key) else { return false };
+            while conn.wpos < conn.wbuf.len() {
+                match (&conn.stream).write(&conn.wbuf[conn.wpos..]) {
+                    Ok(0) => {
+                        broken = true;
+                        break;
+                    }
+                    Ok(n) => conn.wpos += n,
+                    Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                    Err(ref e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        broken = true;
+                        break;
+                    }
+                }
+            }
+            if !broken && !conn.wbuf.is_empty() && conn.wpos == conn.wbuf.len() {
+                conn.wbuf.clear();
+                conn.wpos = 0;
+                if conn.wbuf.capacity() > SHRINK_AT {
+                    conn.wbuf.shrink_to(INIT_CAP);
+                }
+            }
+        }
+        if broken {
+            self.close(key);
+            return false;
+        }
+        self.update_interest(key);
+        true
+    }
+
+    /// Deliver dispatcher replies queued since the last sweep, then
+    /// resume parsing whatever those connections had buffered.
+    fn drain_replies(&mut self) {
+        while let Ok((key, v)) = self.reply_rx.try_recv() {
+            match self.conns.get_mut(key) {
+                Some(c) => c.in_flight = false,
+                // Generation miss: the client died mid-request and the
+                // slot may already be serving someone else — drop it.
+                None => continue,
+            }
+            if !self.enqueue_reply(key, v) {
+                continue;
+            }
+            if self.advance(key) {
+                self.update_interest(key);
+            }
+        }
+    }
+
+    /// A connection whose peer hung up closes once every buffered
+    /// complete frame has been dispatched and answered.  Returns false
+    /// when it closed.
+    fn maybe_close(&mut self, key: u64) -> bool {
+        let done = match self.conns.get(key) {
+            Some(c) => c.eof && !c.in_flight && c.wbuf.is_empty(),
+            None => return false,
+        };
+        if done {
+            self.close(key);
+            return false;
+        }
+        true
+    }
+
+    /// Re-register exactly the interest the connection state needs:
+    /// read only while idle (dropping read interest mid-request is what
+    /// bounds per-connection memory — a pipelining client stops being
+    /// read until its reply drains), write only while flushing, nothing
+    /// while parked on the dispatcher (a closed peer would otherwise
+    /// storm EPOLLHUP and spin the loop).
+    fn update_interest(&mut self, key: u64) {
+        let (fd, have, want) = match self.conns.get(key) {
+            Some(c) => {
+                let read = !c.in_flight && c.wbuf.is_empty() && !c.eof;
+                let write = c.write_pending();
+                let want = if read || write { Some((read, write)) } else { None };
+                (c.stream.as_raw_fd(), c.interest, want)
+            }
+            None => return,
+        };
+        if have == want {
+            return;
+        }
+        let res = match (have, want) {
+            (Some(_), None) => self.poller.deregister(fd).map(|_| None),
+            (None, Some((r, w))) => self.poller.register(fd, key, r, w).map(|_| want),
+            (Some(_), Some((r, w))) => self.poller.reregister(fd, key, r, w).map(|_| want),
+            (None, None) => return,
+        };
+        match res {
+            Ok(interest) => {
+                if let Some(c) = self.conns.get_mut(key) {
+                    c.interest = interest;
+                }
+            }
+            Err(_) => self.close(key),
+        }
+    }
+
+    /// Tear down a connection: deregister, close the socket, and tell
+    /// the dispatcher the user is gone (slot retirement, ticket and
+    /// tenant-refcount cleanup).
+    fn close(&mut self, key: u64) {
+        if let Some(conn) = self.conns.remove(key) {
+            if conn.interest.is_some() {
+                let _ = self.poller.deregister(conn.stream.as_raw_fd());
+            }
+            let _ = self.tx.send(Msg::Goodbye { user: conn.user });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json::{obj, s};
+
+    fn frame_bytes(v: &Value) -> Vec<u8> {
+        let mut out = Vec::new();
+        write_msg(&mut out, v).unwrap();
+        out
+    }
+
+    #[test]
+    fn framebuf_reassembles_across_partial_reads() {
+        let bytes = frame_bytes(&obj(vec![("method", s("ping"))]));
+        // Dribble one byte at a time; the frame pops out exactly once,
+        // on the final byte.
+        let mut fb = FrameBuf::new();
+        let mut seen = 0;
+        for (idx, byte) in bytes.iter().enumerate() {
+            fb.extend(&[*byte]);
+            match fb.next_frame() {
+                Ok(Some(body)) => {
+                    assert_eq!(idx, bytes.len() - 1);
+                    assert_eq!(body, &bytes[4..]);
+                    seen += 1;
+                }
+                Ok(None) => assert!(idx < bytes.len() - 1),
+                Err(e) => panic!("unexpected framing error {e:?}"),
+            }
+        }
+        assert_eq!(seen, 1);
+        assert_eq!(fb.pending(), 0);
+    }
+
+    #[test]
+    fn framebuf_yields_pipelined_frames_split_at_odd_boundaries() {
+        let a = frame_bytes(&obj(vec![("method", s("ping"))]));
+        let b = frame_bytes(&obj(vec![("method", s("stats"))]));
+        let mut stream: Vec<u8> = Vec::new();
+        stream.extend_from_slice(&a);
+        stream.extend_from_slice(&b);
+        // Split the two concatenated frames at every possible boundary:
+        // the same two bodies must come out regardless of chunking.
+        for cut in 1..stream.len() {
+            let mut fb = FrameBuf::new();
+            let mut bodies: Vec<Vec<u8>> = Vec::new();
+            for chunk in [&stream[..cut], &stream[cut..]] {
+                fb.extend(chunk);
+                while let Ok(Some(body)) = fb.next_frame() {
+                    bodies.push(body.to_vec());
+                }
+            }
+            assert_eq!(bodies.len(), 2, "cut at {cut}");
+            assert_eq!(bodies[0], &a[4..]);
+            assert_eq!(bodies[1], &b[4..]);
+        }
+    }
+
+    #[test]
+    fn framebuf_rejects_oversized_header() {
+        let mut fb = FrameBuf::new();
+        fb.extend(&(MAX_MSG + 1).to_le_bytes());
+        assert_eq!(fb.next_frame(), Err(FrameError::TooLarge(MAX_MSG + 1)));
+        // Exactly MAX_MSG is still legal (merely incomplete here).
+        let mut fb = FrameBuf::new();
+        fb.extend(&MAX_MSG.to_le_bytes());
+        assert_eq!(fb.next_frame(), Ok(None));
+    }
+
+    #[test]
+    fn framebuf_grows_for_large_frames_then_shrinks() {
+        let blob = "x".repeat(1 << 20);
+        let bytes = frame_bytes(&obj(vec![("blob", s(blob))]));
+        let mut fb = FrameBuf::new();
+        for chunk in bytes.chunks(64 * 1024) {
+            fb.extend(chunk);
+        }
+        {
+            let body = fb.next_frame().unwrap().expect("complete frame");
+            assert_eq!(body.len(), bytes.len() - 4);
+        }
+        assert!(fb.capacity() > SHRINK_AT, "grew to hold the 1 MiB frame");
+        // The next idle space() call resets and releases the bulk.
+        assert!(!fb.space().is_empty());
+        assert!(fb.capacity() <= SHRINK_AT, "shrank back after draining");
+    }
+
+    #[test]
+    fn slab_generation_prevents_stale_key_reuse() {
+        let mut slab = Slab::new();
+        let a = slab.insert("a");
+        assert_eq!(slab.len(), 1);
+        assert_eq!(slab.remove(a), Some("a"));
+        let b = slab.insert("b");
+        assert_eq!(a & 0xffff_ffff, b & 0xffff_ffff, "slot index is recycled");
+        assert_ne!(a, b, "generation differs");
+        assert!(slab.get(a).is_none(), "stale key misses");
+        assert!(slab.remove(a).is_none(), "stale remove is a no-op");
+        assert_eq!(slab.get(b), Some(&"b"));
+        assert_eq!(slab.len(), 1);
+    }
+
+    #[test]
+    fn slab_drain_empties_and_bumps_generations() {
+        let mut slab = Slab::new();
+        let k1 = slab.insert(1);
+        let k2 = slab.insert(2);
+        let mut drained = slab.drain();
+        drained.sort_unstable();
+        assert_eq!(drained, vec![1, 2]);
+        assert!(slab.is_empty());
+        assert!(slab.get(k1).is_none());
+        assert!(slab.get(k2).is_none());
+    }
+}

@@ -4,7 +4,8 @@
 //! Operating System for Dynamic Workloads"* (2020), on a simulated Zynq
 //! UltraScale+ substrate. The paper's three usage modes are all here:
 //!
-//! 1. **static acceleration, single tenant** — [`cynq`]-style direct API,
+//! 1. **static acceleration, single tenant** — [`driver::Cynq`]-style
+//!    direct API,
 //! 2. **dynamic (PR) acceleration, single tenant** — [`sched`] +
 //!    [`reconfig`] under one user,
 //! 3. **dynamic acceleration, multi tenant** — the [`daemon`], which

@@ -14,7 +14,7 @@
 //! (L-shaped route with congestion rip-up, honouring blockers and
 //! interface tunnels) run for real on synthesised netlists — they
 //! enforce the §4.1 isolation rules structurally. Tool *latency* is a
-//! calibrated model (see [`flow::CostModel`]) because Vivado's wallclock
+//! calibrated model (see [`CostModel`]) because Vivado's wallclock
 //! obviously cannot be reproduced by a simulator; the calibration
 //! constants and their provenance are documented on the type.
 

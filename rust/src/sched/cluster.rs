@@ -36,7 +36,8 @@
 //! harness calls [`ClusterCore::steal_into`] before each board's
 //! scheduling round: a fully idle shard (no queue, nothing running)
 //! pulls the most recently queued request from the shard with the
-//! largest backlog above [`ClusterCore::steal_threshold`].  Requests
+//! largest backlog above the steal threshold
+//! ([`ClusterCore::with_steal_threshold`]).  Requests
 //! carrying a checkpoint are never stolen — their register-file
 //! snapshot lives on the donor board's hardware.  Both harnesses call
 //! the hook at the same point in the round lifecycle, so stealing

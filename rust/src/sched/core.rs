@@ -106,7 +106,7 @@
 //!   boundary ([`SchedCore::resolve`]);
 //! - per-user queue statistics, pending/backlog/stealable totals and
 //!   the non-empty-user index are maintained incrementally on every
-//!   enqueue/dequeue, so [`SchedCore::next_user`] and the `PlaceReq`
+//!   enqueue/dequeue, so the round-robin user scan and the `PlaceReq`
 //!   fields cost `O(log users)` instead of a full scan;
 //! - round-scoped buffers (`scratch_snaps`, `scratch_tenants`) and the
 //!   round-stamped skip marks (`skip_round`) live on the core and are

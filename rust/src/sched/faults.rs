@@ -21,7 +21,8 @@
 //!   to healthy shards with its progress preserved.
 //! - **Reconfiguration failures** — the `k`-th partial-reconfiguration
 //!   attempt on board `b` fails when a seed-derived draw lands under
-//!   [`FaultPlan::reconfig_rate`].  Recovery: exponential-backoff
+//!   the plan's reconfiguration failure rate
+//!   ([`FaultPlan::with_reconfig_rate`]).  Recovery: exponential-backoff
 //!   retries with a per-accelerator failure cap
 //!   ([`ClusterCore::reconfig_outcome`](super::ClusterCore::reconfig_outcome)).
 //! - **Transient run errors** — the `k`-th dispatch *completion* on

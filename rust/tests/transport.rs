@@ -1,0 +1,180 @@
+//! Framing-layer integration tests against a live daemon socket.
+//!
+//! The reactor transport (`src/daemon/transport.rs`) reassembles
+//! `[u32 LE length][JSON body]` frames from whatever byte boundaries
+//! the kernel delivers, rejects frames that violate the protocol by
+//! silently closing the connection (see `src/daemon/PROTOCOL.md` §6),
+//! and flushes replies under write backpressure without buffering more
+//! than one in-flight reply per connection.  Each test drives those
+//! paths over a real `UnixStream` — no test-only hooks into the
+//! reactor.
+
+use fos::accel::Catalog;
+use fos::daemon::{read_msg, write_msg, Daemon, FpgaRpc, MAX_MSG};
+use fos::json::{i, obj, s, Value};
+use fos::shell::ShellBoard;
+use std::io::{Read, Write};
+use std::os::unix::net::UnixStream;
+use std::path::PathBuf;
+use std::time::Duration;
+
+fn sock(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("fos_transport_{name}_{}.sock", std::process::id()))
+}
+
+fn start(name: &str) -> (Daemon, PathBuf) {
+    let path = sock(name);
+    let d = Daemon::start(&path, ShellBoard::Ultra96, Catalog::load_default().unwrap()).unwrap();
+    (d, path)
+}
+
+fn ping_frame() -> Vec<u8> {
+    let mut buf = Vec::new();
+    write_msg(&mut buf, &obj(vec![("method", s("ping"))])).unwrap();
+    buf
+}
+
+fn connect(path: &PathBuf) -> UnixStream {
+    let c = UnixStream::connect(path).unwrap();
+    c.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    c
+}
+
+/// Read until EOF (or fail the test if the server keeps the
+/// connection open past the read timeout).
+fn expect_eof(c: &mut UnixStream) {
+    let mut buf = [0u8; 256];
+    loop {
+        match c.read(&mut buf) {
+            Ok(0) => return,
+            Ok(_) => continue, // drain whatever was already queued
+            Err(e) => panic!("expected server-side close, got read error: {e}"),
+        }
+    }
+}
+
+#[test]
+fn dribbled_ping_reassembles_across_every_boundary() {
+    let (_d, path) = start("dribble");
+    let mut c = connect(&path);
+    // One byte per write: the header itself arrives in four separate
+    // reads, the body in as many more — every partial-read branch of
+    // the frame assembler fires.
+    for b in ping_frame() {
+        c.write_all(&[b]).unwrap();
+        c.flush().unwrap();
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let reply = read_msg(&mut c).unwrap();
+    assert_eq!(reply.get("status").as_str(), Some("ok"));
+}
+
+#[test]
+fn pipelined_pings_split_at_odd_boundaries() {
+    let (_d, path) = start("pipeline");
+    let mut c = connect(&path);
+    // Three frames back-to-back, delivered in 7-byte slices so every
+    // chunk straddles a header or frame boundary.  The reactor parses
+    // one frame per round trip (strict write-one-read-one) and leaves
+    // the rest buffered; replies must come back in order.
+    let mut wire = Vec::new();
+    for _ in 0..3 {
+        wire.extend_from_slice(&ping_frame());
+    }
+    for chunk in wire.chunks(7) {
+        c.write_all(chunk).unwrap();
+        c.flush().unwrap();
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    for _ in 0..3 {
+        let reply = read_msg(&mut c).unwrap();
+        assert_eq!(reply.get("status").as_str(), Some("ok"));
+    }
+}
+
+#[test]
+fn oversized_frame_header_closes_the_connection() {
+    let (_d, path) = start("oversized");
+    let mut c = connect(&path);
+    // A header announcing a body past MAX_MSG is a protocol violation:
+    // the server closes without a reply rather than reserving 64 MiB+.
+    c.write_all(&(MAX_MSG + 1).to_le_bytes()).unwrap();
+    // The connection may already be gone; any trailing write error is
+    // part of the expected close.
+    let _ = c.write_all(b"xxxx");
+    expect_eof(&mut c);
+    // The daemon itself is unaffected: a fresh connection still works.
+    let mut c2 = connect(&path);
+    c2.write_all(&ping_frame()).unwrap();
+    assert_eq!(read_msg(&mut c2).unwrap().get("status").as_str(), Some("ok"));
+}
+
+#[test]
+fn malformed_json_body_closes_the_connection() {
+    let (_d, path) = start("malformed");
+    let mut c = connect(&path);
+    let body = b"not json at all";
+    c.write_all(&(body.len() as u32).to_le_bytes()).unwrap();
+    c.write_all(body).unwrap();
+    expect_eof(&mut c);
+    let mut c2 = connect(&path);
+    c2.write_all(&ping_frame()).unwrap();
+    assert_eq!(read_msg(&mut c2).unwrap().get("status").as_str(), Some("ok"));
+}
+
+#[test]
+fn missing_method_is_an_error_reply_not_a_close() {
+    // Contrast with the framing violations above: a well-framed frame
+    // with an unknown method gets a structured err reply and the
+    // connection survives (PROTOCOL.md §3).
+    let (_d, path) = start("unknown");
+    let mut c = connect(&path);
+    write_msg(&mut c, &obj(vec![("method", s("no-such-rpc"))])).unwrap();
+    let reply = read_msg(&mut c).unwrap();
+    assert_eq!(reply.get("status").as_str(), Some("err"));
+    write_msg(&mut c, &obj(vec![("method", s("ping"))])).unwrap();
+    assert_eq!(read_msg(&mut c).unwrap().get("status").as_str(), Some("ok"));
+}
+
+#[test]
+fn slow_reader_backpressure_stalls_one_connection_not_the_reactor() {
+    let (_d, path) = start("backpressure");
+
+    // Stage 1 MiB of device memory through the normal client.
+    let mut setup = FpgaRpc::connect(&path).unwrap();
+    let n_floats = (1usize << 20) / 4;
+    let addr = setup.alloc(1 << 20).unwrap();
+    let xs: Vec<f32> = (0..n_floats).map(|v| v as f32).collect();
+    setup.write_f32(addr, &xs).unwrap();
+
+    // Ask for all of it on a raw connection and then refuse to read:
+    // the ~1.4 MB base64 reply overflows the socket buffer, so the
+    // reactor must park the remainder in the connection's write buffer
+    // and wait for writability instead of blocking the event loop.
+    let mut slow = connect(&path);
+    let req = obj(vec![
+        ("method", s("read")),
+        ("addr", i(addr as i64)),
+        ("count", i(n_floats as i64)),
+    ]);
+    write_msg(&mut slow, &req).unwrap();
+    std::thread::sleep(Duration::from_millis(300));
+
+    // While the slow reader stalls, the reactor still serves others.
+    let mut probe = FpgaRpc::connect(&path).unwrap();
+    let rtt = probe.ping().unwrap();
+    assert!(rtt < Duration::from_secs(2), "reactor blocked behind a slow reader: {rtt:?}");
+
+    // Drain the stalled reply: complete, valid, correct payload size.
+    let expect_b64 = |reply: Value| {
+        assert_eq!(reply.get("status").as_str(), Some("ok"));
+        let b64 = reply.get("b64").as_str().expect("read reply missing b64").to_string();
+        assert_eq!(b64.len(), (1usize << 20).div_ceil(3) * 4);
+    };
+    expect_b64(read_msg(&mut slow).unwrap());
+
+    // The connection survives backpressure: the same request round-
+    // trips again after the write buffer drained (and shrank).
+    write_msg(&mut slow, &req).unwrap();
+    expect_b64(read_msg(&mut slow).unwrap());
+}

@@ -7,8 +7,14 @@
 # Run this once on a machine with a Rust toolchain, then commit the
 # rewritten BENCH_BASELINE_*.json files — the regression gate switches
 # from the rolling previous-run comparison to the pinned numbers.
-# Floor-gated benches (perf_round_latency) need no baseline; they are
-# still run so the floor check exercises a real result.
+# Floor-gated benches (perf_round_latency, fig25_connection_scaling)
+# need no baseline; they are still run so the floor checks exercise a
+# real result.
+#
+# Also (re)arms the golden decision-trace fixture
+# (rust/tests/fixtures/golden_decisions.txt): it self-arms on the first
+# `cargo test` run, and FOS_UPDATE_GOLDEN=1 regenerates it after an
+# intentional scheduling change.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -16,7 +22,7 @@ export FOS_BENCH_SMOKE=1
 export FOS_BENCH_JSON_DIR="$PWD"
 
 for b in fig22_multitenant fig23_cluster_scaling fig24_admission_throughput \
-         perf_round_latency; do
+         perf_round_latency fig25_connection_scaling; do
     echo "== $b =="
     cargo bench --manifest-path rust/Cargo.toml --bench "$b"
 done
@@ -24,3 +30,8 @@ done
 python3 scripts/check_bench_regression.py --baseline-dir . --current-dir . --update
 python3 scripts/check_bench_regression.py --baseline-dir . --current-dir .
 echo "baselines armed — commit the BENCH_BASELINE_*.json files"
+
+echo "== golden decision fixture =="
+FOS_UPDATE_GOLDEN=1 cargo test --manifest-path rust/Cargo.toml \
+    --test golden_decisions -q
+echo "fixture armed — commit rust/tests/fixtures/golden_decisions.txt"

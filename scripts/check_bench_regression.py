@@ -53,6 +53,11 @@ GATED_KEY = "mean_turnaround_ns"
 # (bench, leaf key, full-mode floor, smoke-mode floor)
 FLOOR_BENCHES = [
     ("perf_round_latency", "single_shard_decisions_per_sec", 1_000_000.0, 300_000.0),
+    # The reactor transport must sustain 10k concurrent sessions...
+    ("fig25_connection_scaling", "sessions_sustained", 10_000.0, 10_000.0),
+    # ...at no less throughput than the thread-per-connection baseline
+    # serving 1k (smoke allows 10% runner noise on the ratio).
+    ("fig25_connection_scaling", "reactor_vs_thread_ratio", 1.0, 0.9),
 ]
 
 
