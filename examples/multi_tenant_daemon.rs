@@ -14,7 +14,7 @@
 //! ```
 
 use fos::accel::Catalog;
-use fos::daemon::{Daemon, FpgaRpc, Job};
+use fos::daemon::{BufferHandle, Daemon, FpgaRpc, Job};
 use fos::metrics::LatencyStats;
 use fos::shell::ShellBoard;
 use std::time::Instant;
@@ -105,7 +105,8 @@ fn tenant_mandelbrot(socket: &std::path::Path, frames: usize, reqs: usize) -> (L
         .collect();
     let input = rpc.alloc(coords.len() * 4).unwrap();
     rpc.write_f32(input, &coords).unwrap();
-    let outputs: Vec<u64> = (0..reqs).map(|_| rpc.alloc(64 * 64 * 4).unwrap()).collect();
+    let outputs: Vec<BufferHandle> =
+        (0..reqs).map(|_| rpc.alloc(64 * 64 * 4).unwrap()).collect();
     for _ in 0..frames {
         let jobs: Vec<Job> = outputs
             .iter()
@@ -140,7 +141,8 @@ fn tenant_sobel(socket: &std::path::Path, frames: usize, reqs: usize) -> (Latenc
     let img: Vec<f32> = (0..128 * 128).map(|_| rng.normal()).collect();
     let input = rpc.alloc(img.len() * 4).unwrap();
     rpc.write_f32(input, &img).unwrap();
-    let outputs: Vec<u64> = (0..reqs).map(|_| rpc.alloc(128 * 128 * 4).unwrap()).collect();
+    let outputs: Vec<BufferHandle> =
+        (0..reqs).map(|_| rpc.alloc(128 * 128 * 4).unwrap()).collect();
     for _ in 0..frames {
         let jobs: Vec<Job> = outputs
             .iter()

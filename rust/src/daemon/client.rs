@@ -1,5 +1,10 @@
 //! FpgaRpc — the client side of the daemon API (Listings 4–5).
 //!
+//! Buffers are named by opaque generational [`BufferHandle`]s scoped
+//! to the connection's tenant; physical addresses never cross the
+//! wire.  The connection opens with the v2 `hello` handshake
+//! (protocol version negotiation — see `rust/src/daemon/PROTOCOL.md`).
+//!
 //! ```no_run
 //! use fos::daemon::{FpgaRpc, Job};
 //! let mut rpc = FpgaRpc::connect("/tmp/fos.sock").unwrap();
@@ -16,7 +21,7 @@
 //! let sum = rpc.read_f32(c, 4096).unwrap();
 //! ```
 
-use super::proto::{self, read_msg, write_msg, Job, ProtoError};
+use super::proto::{self, read_msg, write_msg, BufferHandle, Job, ProtoError, PROTO_MAX, PROTO_MIN};
 use crate::json::{arr, i, obj, s, Value};
 use crate::sched::Policy;
 use std::os::unix::net::UnixStream;
@@ -140,22 +145,56 @@ pub struct RunReport {
     pub round_trip: Duration,
 }
 
+/// One entry of the `audit` RPC reply: a scheduling decision of the
+/// calling connection's tenant (and nothing of its neighbours').
+#[derive(Debug, Clone, Default)]
+pub struct AuditEntry {
+    pub board: u64,
+    pub tenant: u64,
+    pub job: u64,
+    pub accel: String,
+    pub variant: String,
+    pub anchor: u64,
+    pub span: u64,
+    pub tiles: u64,
+    /// `Run`, `Resume` or `Preempt`.
+    pub kind: String,
+    pub reconfigure: bool,
+    pub replicated: bool,
+}
+
 /// The client connection.
 pub struct FpgaRpc {
     stream: UnixStream,
-    /// User id the daemon assigned (from the first ping).
+    /// User id the daemon assigned (from the handshake).
     pub user: Option<u64>,
+    /// Protocol version negotiated by the `hello` handshake.
+    pub proto_version: u32,
     /// Time spent establishing the connection (Table 4 "Initialize").
     pub connect_latency: Duration,
 }
 
 impl FpgaRpc {
+    /// Connect and negotiate the protocol version: the client offers
+    /// `[PROTO_MIN, PROTO_MAX]` and the daemon picks the highest
+    /// version both sides speak — or answers a structured error
+    /// naming its own range (surfaced as [`ProtoError::Remote`]).
     pub fn connect(path: impl AsRef<Path>) -> Result<FpgaRpc, ProtoError> {
         let t0 = Instant::now();
         let stream = UnixStream::connect(path.as_ref())?;
-        let mut rpc = FpgaRpc { stream, user: None, connect_latency: Duration::ZERO };
-        let pong = rpc.call(obj(vec![("method", s("ping"))]))?;
-        rpc.user = pong.get("user").as_u64();
+        let mut rpc = FpgaRpc {
+            stream,
+            user: None,
+            proto_version: 0,
+            connect_latency: Duration::ZERO,
+        };
+        let hello = rpc.call(obj(vec![
+            ("method", s("hello")),
+            ("min", i(i64::from(PROTO_MIN))),
+            ("max", i(i64::from(PROTO_MAX))),
+        ]))?;
+        rpc.user = hello.get("user").as_u64();
+        rpc.proto_version = hello.get("proto").as_u64().unwrap_or(0) as u32;
         rpc.connect_latency = t0.elapsed();
         Ok(rpc)
     }
@@ -186,36 +225,45 @@ impl FpgaRpc {
         Ok(t0.elapsed())
     }
 
-    /// Allocate contiguous device-visible memory; returns the physical
-    /// address to program into accelerator registers.
-    pub fn alloc(&mut self, bytes: usize) -> Result<u64, ProtoError> {
+    /// Allocate contiguous device-visible memory in this connection's
+    /// tenant arena; returns an opaque tenant-scoped [`BufferHandle`]
+    /// to pass into [`Job`] params and the other memory RPCs.
+    pub fn alloc(&mut self, bytes: usize) -> Result<BufferHandle, ProtoError> {
         let r = self.call(obj(vec![
             ("method", s("alloc")),
             ("bytes", i(bytes as i64)),
         ]))?;
-        r.get("addr")
+        r.get("handle")
             .as_u64()
-            .ok_or_else(|| ProtoError::Schema("alloc reply missing addr".into()))
+            .map(BufferHandle::from_raw)
+            .ok_or_else(|| ProtoError::Schema("alloc reply missing handle".into()))
     }
 
-    pub fn free(&mut self, addr: u64) -> Result<(), ProtoError> {
-        self.call(obj(vec![("method", s("free")), ("addr", i(addr as i64))]))?;
+    pub fn free(&mut self, handle: BufferHandle) -> Result<(), ProtoError> {
+        self.call(obj(vec![
+            ("method", s("free")),
+            ("handle", i(handle.raw() as i64)),
+        ]))?;
         Ok(())
     }
 
-    pub fn write_f32(&mut self, addr: u64, data: &[f32]) -> Result<(), ProtoError> {
+    pub fn write_f32(&mut self, handle: BufferHandle, data: &[f32]) -> Result<(), ProtoError> {
         self.call(obj(vec![
             ("method", s("write")),
-            ("addr", i(addr as i64)),
+            ("handle", i(handle.raw() as i64)),
             ("b64", s(proto::f32s_to_b64(data))),
         ]))?;
         Ok(())
     }
 
-    pub fn read_f32(&mut self, addr: u64, count: usize) -> Result<Vec<f32>, ProtoError> {
+    pub fn read_f32(
+        &mut self,
+        handle: BufferHandle,
+        count: usize,
+    ) -> Result<Vec<f32>, ProtoError> {
         let r = self.call(obj(vec![
             ("method", s("read")),
-            ("addr", i(addr as i64)),
+            ("handle", i(handle.raw() as i64)),
             ("count", i(count as i64)),
         ]))?;
         proto::b64_to_f32s(
@@ -226,35 +274,36 @@ impl FpgaRpc {
     }
 
     /// Zero-copy input: the daemon pulls `count` f32s from the shared-
-    /// memory file at `shm_path` + `offset` into device memory `addr`.
+    /// memory file at `shm_path` + `offset` into the buffer named by
+    /// `handle`.
     pub fn import_shm(
         &mut self,
         shm_path: &Path,
         offset: usize,
         count: usize,
-        addr: u64,
+        handle: BufferHandle,
     ) -> Result<(), ProtoError> {
         self.call(obj(vec![
             ("method", s("import")),
             ("shm", s(shm_path.to_string_lossy())),
             ("offset", i(offset as i64)),
             ("count", i(count as i64)),
-            ("addr", i(addr as i64)),
+            ("handle", i(handle.raw() as i64)),
         ]))?;
         Ok(())
     }
 
-    /// Zero-copy output: device memory -> shared-memory file.
+    /// Zero-copy output: device buffer -> shared-memory file.
     pub fn export_shm(
         &mut self,
-        addr: u64,
+        handle: BufferHandle,
         count: usize,
         shm_path: &Path,
         offset: usize,
     ) -> Result<(), ProtoError> {
         self.call(obj(vec![
             ("method", s("export")),
-            ("addr", i(addr as i64)),
+            ("handle", i(handle.raw() as i64)),
             ("count", i(count as i64)),
             ("shm", s(shm_path.to_string_lossy())),
             ("offset", i(offset as i64)),
@@ -293,22 +342,79 @@ impl FpgaRpc {
     /// is the admission DRR weight, `max_inflight` the token-bucket
     /// in-flight quota (`0` = unbounded).  Several connections naming
     /// the same tenant share one admission identity (queue, quota,
-    /// weight).  Returns the daemon's tenant id.
+    /// weight) and one memory isolation domain.  On an authenticated
+    /// daemon (`--tenants`), `token` must carry the tenant's bearer
+    /// token or the bind is denied.  Returns the daemon's tenant id.
     pub fn set_session(
         &mut self,
         tenant: &str,
+        token: Option<&str>,
         weight: u32,
         max_inflight: usize,
     ) -> Result<u64, ProtoError> {
-        let r = self.call(obj(vec![
+        let mut fields = vec![
             ("method", s("session")),
             ("tenant", s(tenant)),
             ("weight", i(weight as i64)),
             ("max_inflight", i(max_inflight as i64)),
-        ]))?;
+        ];
+        if let Some(t) = token {
+            fields.push(("token", s(t)));
+        }
+        let r = self.call(obj(fields))?;
         r.get("tenant")
             .as_u64()
             .ok_or_else(|| ProtoError::Schema("session reply missing tenant".into()))
+    }
+
+    /// Mint (or re-mint) a tenant's bearer token — the control-plane
+    /// registration RPC, gated by the daemon's admin token.
+    pub fn register_tenant(
+        &mut self,
+        admin_token: &str,
+        name: &str,
+    ) -> Result<String, ProtoError> {
+        let r = self.call(obj(vec![
+            ("method", s("register-tenant")),
+            ("admin_token", s(admin_token)),
+            ("name", s(name)),
+        ]))?;
+        r.get("token")
+            .as_str()
+            .map(str::to_string)
+            .ok_or_else(|| ProtoError::Schema("register-tenant reply missing token".into()))
+    }
+
+    /// This tenant's filtered view of the daemon's decision log (the
+    /// `audit` RPC): at most `limit` most-recent entries, all of them
+    /// belonging to the calling connection's tenant.
+    pub fn audit(&mut self, limit: Option<usize>) -> Result<Vec<AuditEntry>, ProtoError> {
+        let mut fields = vec![("method", s("audit"))];
+        if let Some(n) = limit {
+            fields.push(("limit", i(n as i64)));
+        }
+        let r = self.call(obj(fields))?;
+        let items = r.get("decisions").as_array().cloned().unwrap_or_default();
+        Ok(items
+            .iter()
+            .map(|v| {
+                let num = |key: &str| v.get(key).as_u64().unwrap_or(0);
+                let txt = |key: &str| v.get(key).as_str().unwrap_or("").to_string();
+                AuditEntry {
+                    board: num("board"),
+                    tenant: num("tenant"),
+                    job: num("job"),
+                    accel: txt("accel"),
+                    variant: txt("variant"),
+                    anchor: num("anchor"),
+                    span: num("span"),
+                    tiles: num("tiles"),
+                    kind: txt("kind"),
+                    reconfigure: num("reconfigure") != 0,
+                    replicated: num("replicated") != 0,
+                }
+            })
+            .collect())
     }
 
     /// Non-blocking offload: enqueue the batch and return a ticket

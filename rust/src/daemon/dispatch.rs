@@ -52,16 +52,33 @@
 //! while reads come from the primary (board 0) arena, into which each
 //! completed job's outputs are synced back (the explicit cross-board
 //! result transfer).
+//!
+//! ## Isolation domains (the tenant security boundary)
+//!
+//! Every buffer belongs to exactly one tenant: allocations are tagged
+//! with the tenant's arena owner id in each board's
+//! [`crate::driver::DataManager`], clients name buffers by opaque
+//! generational [`BufferHandle`]s (never physical addresses), and the
+//! dispatcher resolves handles against the caller's tenant at the
+//! `submit` trust boundary — a foreign or stale handle is refused with
+//! a structured `denied`/`err` reply and the owning tenant's buffer is
+//! untouched.  Compute runs under the decision's tenant
+//! ([`Cynq::run_as`]), so DMA is bounds- and ownership-checked at the
+//! driver too.  When a tenant's last connection departs, its whole
+//! arena is reclaimed and all its handles are invalidated.  With
+//! `--tenants` the daemon mints per-tenant bearer tokens at startup
+//! and the `session` bind requires one (`register-tenant` mints more,
+//! gated by the admin token).
 
-use super::proto::{self, Job};
+use super::proto::{self, BufferHandle, Job};
 use super::session::{
-    busy_val, close_ticket, err_val, fail_job, finish, ok, release_tenant, user_slot, Batch,
-    BatchSink, MemOp, Msg, Ticket, MAX_OPEN_TICKETS,
+    busy_val, close_ticket, denied_val, err_val, fail_job, finish, ok, release_tenant, user_slot,
+    Batch, BatchSink, MemOp, Msg, Ticket, MAX_OPEN_TICKETS,
 };
 use super::shm::SharedMem;
 use super::transport::{Reactor, Waker, DEFAULT_MAX_CONNECTIONS};
 use crate::accel::Catalog;
-use crate::driver::{AccelSnapshot, Cynq, LoadedAccel, PhysAddr};
+use crate::driver::{AccelSnapshot, Cynq, LoadedAccel, PhysAddr, TenantId};
 use crate::json::{arr, i, obj, s, Value};
 use crate::sched::{
     AdmissionConfig, AdmissionPipeline, AdmitRequest, ClusterCore, Decision, DecisionKind,
@@ -74,7 +91,7 @@ use std::io;
 use std::os::unix::net::UnixListener;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::Instant;
 
 /// Daemon-side counters (Table 4/5 material). The scheduling counters
@@ -169,6 +186,281 @@ impl DaemonStats {
     }
 }
 
+/// Arena owner id of a daemon tenant.  Tenant ids start at 0 but owner
+/// 0 is the kernel domain ([`crate::driver::KERNEL_OWNER`]), so daemon
+/// tenants map to owners 1.. — the domains are disjoint by
+/// construction and a tenant can never alias kernel-owned buffers.
+fn owner_of(tenant: usize) -> TenantId {
+    tenant as TenantId + 1
+}
+
+/// Tenant identity bookkeeping: named tenants (the `session` RPC)
+/// share an id across connections; anonymous connections get a private
+/// one, created lazily by the first RPC that needs a tenant (a memory
+/// op or a submission).  Refcounts track connection claims so
+/// [`release_tenant`] can retire a tenant exactly once.
+struct TenantDirectory {
+    /// Tenant name -> id (named tenants only).
+    ids: HashMap<String, usize>,
+    /// Connection -> bound tenant id.
+    conn: HashMap<u64, usize>,
+    /// Tenant id -> live connection claims.
+    refs: HashMap<usize, usize>,
+    next: usize,
+}
+
+impl TenantDirectory {
+    fn new() -> TenantDirectory {
+        TenantDirectory {
+            ids: HashMap::new(),
+            conn: HashMap::new(),
+            refs: HashMap::new(),
+            next: 0,
+        }
+    }
+
+    /// The connection's tenant, lazily creating a private anonymous
+    /// tenant (with its refcount claim) on first use — the single
+    /// creation path shared by the memory plane and submission, so the
+    /// Goodbye release can never underflow.
+    fn of_conn(&mut self, user: u64) -> usize {
+        if let Some(&t) = self.conn.get(&user) {
+            return t;
+        }
+        let t = self.next;
+        self.next += 1;
+        self.conn.insert(user, t);
+        *self.refs.entry(t).or_insert(0) += 1;
+        t
+    }
+
+    /// The id of a named tenant, creating one on first bind.
+    fn id_of_name(&mut self, name: &str) -> usize {
+        if let Some(&id) = self.ids.get(name) {
+            return id;
+        }
+        let id = self.next;
+        self.next += 1;
+        self.ids.insert(name.to_string(), id);
+        id
+    }
+}
+
+/// Why a handle failed to resolve: a *stale or forged* handle (never
+/// valid, or freed/reclaimed — generation mismatch) versus a live
+/// buffer owned by *another* tenant.  Deliberately, the denial never
+/// names the owning tenant — that would leak cross-domain information.
+enum HandleError {
+    Invalid(BufferHandle),
+    Denied(BufferHandle),
+}
+
+impl HandleError {
+    fn into_value(self) -> Value {
+        match self {
+            HandleError::Invalid(h) => err_val(&format!("invalid buffer handle {h}")),
+            HandleError::Denied(h) => {
+                denied_val(&format!("access denied: {h} is not owned by this tenant"))
+            }
+        }
+    }
+}
+
+/// One live buffer: its generation (stale-handle detection), owning
+/// tenant, cluster-wide physical address and length.
+struct BufEntry {
+    generation: u32,
+    tenant: usize,
+    addr: u64,
+    bytes: usize,
+    live: bool,
+}
+
+/// The daemon-wide buffer table: a generational slab mapping opaque
+/// [`BufferHandle`]s to (tenant, address, length).  The cluster's
+/// arenas evolve in lockstep, so one table serves every board.  Slots
+/// are reused with a bumped generation: a freed (or arena-reclaimed)
+/// handle can never resolve again, even if its slot is recycled.
+struct BufTable {
+    entries: Vec<BufEntry>,
+    free: Vec<usize>,
+}
+
+impl BufTable {
+    fn new() -> BufTable {
+        BufTable { entries: Vec::new(), free: Vec::new() }
+    }
+
+    fn insert(&mut self, tenant: usize, addr: u64, bytes: usize) -> BufferHandle {
+        match self.free.pop() {
+            Some(slot) => {
+                let e = &mut self.entries[slot];
+                // Generation 0 is never minted, so handle 0 (and any
+                // zero-generation forgery) is invalid by construction.
+                e.generation = e.generation.wrapping_add(1).max(1);
+                e.tenant = tenant;
+                e.addr = addr;
+                e.bytes = bytes;
+                e.live = true;
+                BufferHandle::from_parts(slot as u32, e.generation)
+            }
+            None => {
+                let slot = self.entries.len();
+                self.entries.push(BufEntry {
+                    generation: 1,
+                    tenant,
+                    addr,
+                    bytes,
+                    live: true,
+                });
+                BufferHandle::from_parts(slot as u32, 1)
+            }
+        }
+    }
+
+    /// Resolve a handle *for* a tenant: the ownership gate every
+    /// memory RPC and job submission passes through.
+    fn resolve(&self, h: BufferHandle, tenant: usize) -> Result<(u64, usize), HandleError> {
+        let e = self
+            .entries
+            .get(h.slot() as usize)
+            .filter(|e| e.live && e.generation == h.generation())
+            .ok_or(HandleError::Invalid(h))?;
+        if e.tenant != tenant {
+            return Err(HandleError::Denied(h));
+        }
+        Ok((e.addr, e.bytes))
+    }
+
+    /// Resolve-then-invalidate (the `free` path).  The slot is
+    /// recycled; the generation bump happens at the next insert.
+    fn remove(&mut self, h: BufferHandle, tenant: usize) -> Result<(u64, usize), HandleError> {
+        let (addr, bytes) = self.resolve(h, tenant)?;
+        self.entries[h.slot() as usize].live = false;
+        self.free.push(h.slot() as usize);
+        Ok((addr, bytes))
+    }
+
+    /// Invalidate every live handle of a retired tenant (the buffer
+    /// table half of arena teardown); returns how many were dropped.
+    fn reclaim_tenant(&mut self, tenant: usize) -> usize {
+        let mut n = 0;
+        for (slot, e) in self.entries.iter_mut().enumerate() {
+            if e.live && e.tenant == tenant {
+                e.live = false;
+                self.free.push(slot);
+                n += 1;
+            }
+        }
+        n
+    }
+}
+
+/// A job past the submission trust boundary: operand handles already
+/// resolved (ownership-checked) to physical addresses, so the
+/// scheduling and execution pipeline never re-resolves — and a handle
+/// freed mid-flight cannot dangle into another tenant's later
+/// allocation at dispatch time.
+struct ExecJob {
+    accname: String,
+    params: Vec<(String, u64)>,
+    tiles: usize,
+}
+
+/// Authentication state (present only when the daemon was started
+/// with pre-registered tenants): the admin token gating
+/// `register-tenant`, and each tenant's minted bearer token checked at
+/// `session` bind.  Shared between the daemon handle (token
+/// accessors) and the dispatcher (verification).
+pub(crate) struct AuthState {
+    admin: String,
+    tokens: HashMap<String, String>,
+    rng: crate::testutil::Rng,
+}
+
+impl AuthState {
+    fn new() -> AuthState {
+        use std::collections::hash_map::RandomState;
+        use std::hash::{BuildHasher, Hasher};
+        // Seed from the OS-randomised hasher state — no fixed seed, so
+        // tokens are not guessable across daemon restarts.
+        let seed = RandomState::new().build_hasher().finish();
+        let mut rng = crate::testutil::Rng::new(seed);
+        let admin = Self::mint_with(&mut rng);
+        AuthState { admin, tokens: HashMap::new(), rng }
+    }
+
+    fn mint_with(rng: &mut crate::testutil::Rng) -> String {
+        format!("{:016x}{:016x}", rng.next_u64(), rng.next_u64())
+    }
+
+    fn mint(&mut self) -> String {
+        Self::mint_with(&mut self.rng)
+    }
+}
+
+/// Declarative daemon configuration — the builder behind every
+/// `start_*` constructor.  `tenants` is the authentication switch:
+/// naming tenants here mints a bearer token for each (plus an admin
+/// token) and makes the `session` bind require one.
+pub struct DaemonConfig {
+    pub boards: Vec<ShellBoard>,
+    pub catalog: Catalog,
+    pub default_policy: Policy,
+    pub placement: PlacementKind,
+    pub admission: AdmissionConfig,
+    pub max_connections: usize,
+    pub faults: Option<FaultPlan>,
+    /// Tenant names to register at startup with minted tokens;
+    /// non-empty switches the daemon into authenticated mode.
+    pub tenants: Vec<String>,
+}
+
+impl DaemonConfig {
+    pub fn new(boards: &[ShellBoard], catalog: Catalog) -> DaemonConfig {
+        DaemonConfig {
+            boards: boards.to_vec(),
+            catalog,
+            default_policy: Policy::Elastic,
+            placement: PlacementKind::Locality,
+            admission: AdmissionConfig::default(),
+            max_connections: DEFAULT_MAX_CONNECTIONS,
+            faults: None,
+            tenants: Vec::new(),
+        }
+    }
+
+    pub fn policy(mut self, p: Policy) -> DaemonConfig {
+        self.default_policy = p;
+        self
+    }
+
+    pub fn placement(mut self, p: PlacementKind) -> DaemonConfig {
+        self.placement = p;
+        self
+    }
+
+    pub fn admission(mut self, a: AdmissionConfig) -> DaemonConfig {
+        self.admission = a;
+        self
+    }
+
+    pub fn max_connections(mut self, n: usize) -> DaemonConfig {
+        self.max_connections = n;
+        self
+    }
+
+    pub fn faults(mut self, f: FaultPlan) -> DaemonConfig {
+        self.faults = Some(f);
+        self
+    }
+
+    pub fn tenants(mut self, names: &[&str]) -> DaemonConfig {
+        self.tenants = names.iter().map(|n| n.to_string()).collect();
+        self
+    }
+}
+
 /// A running daemon instance.
 pub struct Daemon {
     pub socket_path: PathBuf,
@@ -179,6 +471,8 @@ pub struct Daemon {
     waker: Waker,
     reactor_handle: Option<std::thread::JoinHandle<()>>,
     dispatch_handle: Option<std::thread::JoinHandle<()>>,
+    /// `Some` iff the daemon runs in authenticated mode.
+    auth: Option<Arc<Mutex<AuthState>>>,
 }
 
 impl Daemon {
@@ -269,24 +563,63 @@ impl Daemon {
         max_connections: usize,
         faults: Option<FaultPlan>,
     ) -> io::Result<Daemon> {
-        assert!(!boards.is_empty(), "a cluster needs at least one board");
+        Self::start_configured(
+            socket_path,
+            DaemonConfig {
+                boards: boards.to_vec(),
+                catalog,
+                default_policy,
+                placement,
+                admission,
+                max_connections,
+                faults,
+                tenants: Vec::new(),
+            },
+        )
+    }
+
+    /// Start a daemon from a [`DaemonConfig`] — the constructor every
+    /// other `start_*` wrapper delegates to.  Naming tenants in the
+    /// config mints their bearer tokens (read them back via
+    /// [`Daemon::tenant_token`] / [`Daemon::admin_token`]) and makes
+    /// the `session` bind require one.
+    pub fn start_configured(
+        socket_path: impl AsRef<Path>,
+        cfg: DaemonConfig,
+    ) -> io::Result<Daemon> {
+        assert!(!cfg.boards.is_empty(), "a cluster needs at least one board");
         let socket_path = socket_path.as_ref().to_path_buf();
         let _ = std::fs::remove_file(&socket_path);
         let listener = UnixListener::bind(&socket_path)?;
-        let cynqs = boards
+        let cynqs = cfg
+            .boards
             .iter()
-            .map(|&b| Cynq::open(b, catalog.clone()))
+            .map(|&b| Cynq::open(b, cfg.catalog.clone()))
             .collect::<Result<Vec<Cynq>, _>>()
             .map_err(|e| io::Error::new(io::ErrorKind::Other, e.to_string()))?;
 
-        let stats = Arc::new(DaemonStats::for_boards(boards));
+        let stats = Arc::new(DaemonStats::for_boards(&cfg.boards));
         let stop = Arc::new(AtomicBool::new(false));
         let (tx, rx) = mpsc::channel::<Msg>();
 
+        let auth = if cfg.tenants.is_empty() {
+            None
+        } else {
+            let mut a = AuthState::new();
+            for name in &cfg.tenants {
+                let tok = a.mint();
+                a.tokens.insert(name.clone(), tok);
+            }
+            Some(Arc::new(Mutex::new(a)))
+        };
+
         let dispatch_handle = {
             let stats = stats.clone();
+            let auth = auth.clone();
+            let (policy, placement, admission, faults) =
+                (cfg.default_policy, cfg.placement, cfg.admission, cfg.faults);
             std::thread::Builder::new().name("fos-dispatch".into()).spawn(move || {
-                dispatcher(cynqs, rx, stats, default_policy, placement, admission, faults)
+                dispatcher(cynqs, rx, stats, policy, placement, admission, faults, auth)
             })?
         };
 
@@ -296,20 +629,33 @@ impl Daemon {
         // decoded messages to the dispatcher.  Past `max_connections`
         // live entries a new client gets a structured busy reject.
         let (reactor, waker) =
-            Reactor::new(listener, tx.clone(), stats.clone(), stop.clone(), max_connections)?;
+            Reactor::new(listener, tx.clone(), stats.clone(), stop.clone(), cfg.max_connections)?;
         let reactor_handle =
             std::thread::Builder::new().name("fos-reactor".into()).spawn(move || reactor.run())?;
 
         Ok(Daemon {
             socket_path,
-            boards: boards.to_vec(),
+            boards: cfg.boards,
             stats,
             tx,
             stop,
             waker,
             reactor_handle: Some(reactor_handle),
             dispatch_handle: Some(dispatch_handle),
+            auth,
         })
+    }
+
+    /// The admin token (authenticated mode only) — gates the
+    /// `register-tenant` control RPC.
+    pub fn admin_token(&self) -> Option<String> {
+        self.auth.as_ref().map(|a| a.lock().unwrap().admin.clone())
+    }
+
+    /// The minted bearer token of a registered tenant, or `None` when
+    /// the daemon is open-mode or the tenant is unknown.
+    pub fn tenant_token(&self, name: &str) -> Option<String> {
+        self.auth.as_ref().and_then(|a| a.lock().unwrap().tokens.get(name).cloned())
     }
 
     pub fn stats(&self) -> &DaemonStats {
@@ -390,7 +736,7 @@ impl Drop for Daemon {
 /// completed slices already consumed, plus any failure to report once
 /// its remainder finally completes.
 struct PendingJob {
-    job: Job,
+    job: ExecJob,
     batch: usize,
     /// Real execution µs accumulated by earlier preempted slices.
     carry_us: f64,
@@ -401,7 +747,7 @@ struct PendingJob {
 }
 
 impl PendingJob {
-    fn new(job: Job, batch: usize) -> PendingJob {
+    fn new(job: ExecJob, batch: usize) -> PendingJob {
         PendingJob { job, batch, carry_us: 0.0, carry_modelled_us: 0.0, failed: None }
     }
 }
@@ -416,7 +762,7 @@ struct Inflight {
     /// Board the decision was dispatched on (its `Cynq`, resident map
     /// and snapshot store).
     board: usize,
-    job: Job,
+    job: ExecJob,
     batch: usize,
     /// Module handle for execution; `None` when the (re)load failed —
     /// `err` below then surfaces at completion.
@@ -481,6 +827,7 @@ struct BoardHw {
 /// triggers a round on each board in index order — exactly the
 /// cluster simulator's loop, which is what keeps per-shard decision
 /// parity.
+#[allow(clippy::too_many_arguments)]
 fn dispatcher(
     cynqs: Vec<Cynq>,
     rx: mpsc::Receiver<Msg>,
@@ -489,11 +836,15 @@ fn dispatcher(
     placement: PlacementKind,
     admission: AdmissionConfig,
     faults: Option<FaultPlan>,
+    auth: Option<Arc<Mutex<AuthState>>>,
 ) {
     let boards: Vec<ShellBoard> = cynqs.iter().map(|c| c.shell.board).collect();
     let n_boards = boards.len();
     let catalog = cynqs[0].catalog.clone();
     let mut cluster = ClusterCore::new(&boards, &catalog, policy, placement);
+    // Weighted memory-bandwidth partitioning is a QoS knob carried by
+    // the admission config; the cores consume it in their cost models.
+    cluster.set_bw_partition(admission.bw_partition);
     // Interned-name resolution at the RPC/hardware boundary: the same
     // deterministic table every scheduler core derives from the shared
     // catalog, so a `Sym` carried by any decision resolves here.
@@ -504,10 +855,10 @@ fn dispatcher(
     let mut admit = AdmissionPipeline::new(admission);
     // Tenant identity: named tenants (the `session` RPC) share an id
     // across connections; anonymous connections get a private one.
-    let mut tenant_ids: HashMap<String, usize> = HashMap::new();
-    let mut conn_tenant: HashMap<u64, usize> = HashMap::new();
-    let mut tenant_refs: HashMap<usize, usize> = HashMap::new();
-    let mut next_tenant_id = 0usize;
+    let mut tenants = TenantDirectory::new();
+    // The tenant-scoped buffer table: every client-visible buffer
+    // lives here, keyed by opaque generational handle.
+    let mut bufs = BufTable::new();
     // Async submission tickets (see `BatchSink::Ticket`), plus an O(1)
     // per-connection open-ticket count for the MAX_OPEN_TICKETS cap.
     let mut tickets: HashMap<u64, Ticket> = HashMap::new();
@@ -600,6 +951,10 @@ fn dispatcher(
                 &mut user_index,
                 &mut free_slots,
                 &mut next_fresh,
+                &mut tenants,
+                &mut bufs,
+                &auth,
+                &symbols,
             ) else {
                 continue;
             };
@@ -647,29 +1002,46 @@ fn dispatcher(
                     // connections left is retired from the pipeline
                     // once its remaining work drains, and its name
                     // mapping is dropped so the id table stays bounded
-                    // by *live* tenants, not names-ever.
-                    if let Some(t) = conn_tenant.remove(&user) {
-                        release_tenant(&mut tenant_ids, &mut tenant_refs, &mut admit, t);
+                    // by *live* tenants, not names-ever.  The last
+                    // claim also tears the tenant's isolation domain
+                    // down: its arena is reclaimed on every board and
+                    // all its buffer handles are invalidated.
+                    if let Some(t) = tenants.conn.remove(&user) {
+                        if release_tenant(&mut tenants.ids, &mut tenants.refs, &mut admit, t) {
+                            reclaim_arena(&mut hws, &mut bufs, t);
+                        }
                     }
                     // Unclaimed tickets of the departed connection.
                     tickets.retain(|_, t| t.user != user);
                     open_tickets.remove(&user);
                 }
-                Msg::Session { user, tenant, weight, max_inflight, reply } => {
-                    let id = match tenant_ids.get(&tenant) {
-                        Some(&id) => id,
-                        None => {
-                            let id = next_tenant_id;
-                            next_tenant_id += 1;
-                            tenant_ids.insert(tenant.clone(), id);
-                            id
+                Msg::Session { user, tenant, token, weight, max_inflight, reply } => {
+                    // Authenticated mode: a bind must present the
+                    // tenant's bearer token; a wrong or missing one is
+                    // refused with a structured `denied` reply and the
+                    // connection keeps its previous binding.
+                    if let Some(a) = auth.as_ref() {
+                        let a = a.lock().unwrap();
+                        let good = a
+                            .tokens
+                            .get(&tenant)
+                            .is_some_and(|t| token.as_deref() == Some(t.as_str()));
+                        if !good {
+                            reply.send(denied_val(&format!(
+                                "tenant bind denied: bad or missing token for {tenant:?}"
+                            )));
+                            continue;
                         }
-                    };
-                    let prev = conn_tenant.insert(user, id);
+                    }
+                    let id = tenants.id_of_name(&tenant);
+                    let prev = tenants.conn.insert(user, id);
                     if prev != Some(id) {
-                        *tenant_refs.entry(id).or_insert(0) += 1;
+                        *tenants.refs.entry(id).or_insert(0) += 1;
                         if let Some(old) = prev {
-                            release_tenant(&mut tenant_ids, &mut tenant_refs, &mut admit, old);
+                            if release_tenant(&mut tenants.ids, &mut tenants.refs, &mut admit, old)
+                            {
+                                reclaim_arena(&mut hws, &mut bufs, old);
+                            }
                         }
                     }
                     admit.set_qos(id, QosClass { weight: weight.max(1), max_inflight });
@@ -698,12 +1070,7 @@ fn dispatcher(
                 }
                 Msg::Submit { user, jobs, wait, reply } => {
                     let slot = user_slot(&mut user_index, &mut free_slots, &mut next_fresh, user);
-                    let tenant = *conn_tenant.entry(user).or_insert_with(|| {
-                        let id = next_tenant_id;
-                        next_tenant_id += 1;
-                        *tenant_refs.entry(id).or_insert(0) += 1;
-                        id
-                    });
+                    let tenant = tenants.of_conn(user);
                     // Fail fast on unknown names: the whole batch is
                     // refused before anything is queued.
                     if let Some(e) = jobs
@@ -713,6 +1080,36 @@ fn dispatcher(
                         reply.send(err_val(&e));
                         continue;
                     }
+                    // The submission trust boundary: resolve every
+                    // operand handle against the caller's tenant NOW.
+                    // A forged, stale or foreign handle refuses the
+                    // whole batch with a structured reply before
+                    // anything is queued; past this point jobs carry
+                    // raw physical addresses and are never re-checked.
+                    let mut resolved: Vec<ExecJob> = Vec::with_capacity(jobs.len());
+                    let mut bad: Option<Value> = None;
+                    'resolve: for job in &jobs {
+                        let mut params = Vec::with_capacity(job.params.len());
+                        for (name, h) in &job.params {
+                            match bufs.resolve(*h, tenant) {
+                                Ok((addr, _)) => params.push((name.clone(), addr)),
+                                Err(e) => {
+                                    bad = Some(e.into_value());
+                                    break 'resolve;
+                                }
+                            }
+                        }
+                        resolved.push(ExecJob {
+                            accname: job.accname.clone(),
+                            params,
+                            tiles: job.tiles,
+                        });
+                    }
+                    if let Some(v) = bad {
+                        reply.send(v);
+                        continue;
+                    }
+                    let jobs = resolved;
                     // Backpressure applies to ASYNC submissions, which
                     // a client can pile up without bound.  A blocking
                     // `run` batch is exempt — the connection blocks on
@@ -1180,6 +1577,10 @@ fn dispatcher(
                         &mut user_index,
                         &mut free_slots,
                         &mut next_fresh,
+                        &mut tenants,
+                        &mut bufs,
+                        &auth,
+                        &symbols,
                     ) {
                         None => {}
                         Some(Msg::Stop) => {
@@ -1296,8 +1697,9 @@ fn take_and_restore_snapshot(
 fn sync_outputs_to_primary(
     hws: &mut [BoardHw],
     board: usize,
-    job: &Job,
+    job: &ExecJob,
     accel: &str,
+    owner: TenantId,
 ) -> Result<(), String> {
     if board == 0 {
         return Ok(());
@@ -1318,9 +1720,9 @@ fn sync_outputs_to_primary(
         };
         let data = hws[board]
             .cynq
-            .read_f32(PhysAddr(addr), out.bytes() / 4)
+            .read_f32_for(owner, PhysAddr(addr), out.bytes() / 4)
             .map_err(|e| e.to_string())?;
-        hws[0].cynq.write_f32(PhysAddr(addr), &data).map_err(|e| e.to_string())?;
+        hws[0].cynq.write_f32_for(owner, PhysAddr(addr), &data).map_err(|e| e.to_string())?;
     }
     Ok(())
 }
@@ -1348,13 +1750,14 @@ fn finish_inflight(
     };
     if err.is_none() {
         let h = inf.handle.expect("loaded dispatch without handle");
+        let owner = owner_of(inf.d.tenant);
         let r = restored
             .and_then(|()| {
                 let hw = &mut hws[board];
-                run_tiles(&mut hw.cynq, h, &inf.job, inf.d.tiles)
+                run_tiles(&mut hw.cynq, h, &inf.job, inf.d.tiles, owner)
             })
             .and_then(|()| {
-                sync_outputs_to_primary(hws, board, &inf.job, symbols.resolve(inf.d.accel))
+                sync_outputs_to_primary(hws, board, &inf.job, symbols.resolve(inf.d.accel), owner)
             });
         if let Err(e) = r {
             err = Some(e);
@@ -1416,7 +1819,7 @@ fn checkpoint_slice(
     let h = inf.handle.expect("loaded dispatch without handle");
     let t0 = Instant::now();
     let r = restored
-        .and_then(|()| run_tiles(&mut hw.cynq, h, &inf.job, done))
+        .and_then(|()| run_tiles(&mut hw.cynq, h, &inf.job, done, owner_of(inf.d.tenant)))
         .and_then(|()| {
             if snapshot {
                 hw.cynq.checkpoint_accelerator(h).map(Some).map_err(|e| e.to_string())
@@ -1551,14 +1954,62 @@ fn handle_cheap(
     user_index: &mut HashMap<u64, usize>,
     free_slots: &mut std::collections::BTreeSet<usize>,
     next_fresh: &mut usize,
+    tenants: &mut TenantDirectory,
+    bufs: &mut BufTable,
+    auth: &Option<Arc<Mutex<AuthState>>>,
+    symbols: &SymbolTable,
 ) -> Option<Msg> {
     match msg {
-        Msg::Mem { op, reply } => {
-            reply.send(mem_op(hws, op));
+        Msg::Mem { user, op, reply } => {
+            let tenant = tenants.of_conn(user);
+            reply.send(mem_op(hws, bufs, tenant, op));
         }
-        Msg::Hello { user, reply } => {
+        Msg::Hello { user, proto, reply } => {
             let slot = user_slot(user_index, free_slots, next_fresh, user);
-            reply.send(ok(vec![("user", i(user as i64)), ("slot", i(slot as i64))]));
+            let mut fields = vec![("user", i(user as i64)), ("slot", i(slot as i64))];
+            // v2 handshake: echo the negotiated version (absent for
+            // the legacy `ping`, whose reply shape is frozen).
+            if let Some(p) = proto {
+                fields.push(("proto", i(i64::from(p))));
+            }
+            reply.send(ok(fields));
+        }
+        Msg::RegisterTenant { admin_token, name, reply } => {
+            let v = match auth {
+                // Open mode has no admin token, so nothing can gate
+                // minting — refuse rather than hand out tokens that
+                // the `session` bind would never check.
+                None => err_val("register-tenant requires an authenticated daemon (--tenants)"),
+                Some(a) => {
+                    let mut a = a.lock().unwrap();
+                    if admin_token != a.admin {
+                        denied_val("register-tenant denied: bad admin token")
+                    } else {
+                        let tok = a.mint();
+                        a.tokens.insert(name.clone(), tok.clone());
+                        ok(vec![("name", s(name)), ("token", s(tok))])
+                    }
+                }
+            };
+            reply.send(v);
+        }
+        Msg::Audit { user, limit, reply } => {
+            // Per-tenant filtered view of the merged decision log: a
+            // tenant sees its own placements (board, anchor, kind,
+            // timing inputs) and nothing of its neighbours'.
+            let tenant = tenants.of_conn(user);
+            let filtered: Vec<(usize, Decision)> = cluster
+                .merged_log()
+                .copied()
+                .filter(|(_, d)| d.tenant == tenant)
+                .collect();
+            let skip = filtered.len().saturating_sub(limit.unwrap_or(usize::MAX));
+            let items: Vec<Value> =
+                filtered[skip..].iter().map(|(b, d)| decision_value(symbols, *b, d)).collect();
+            reply.send(ok(vec![
+                ("tenant", i(tenant as i64)),
+                ("decisions", arr(items)),
+            ]));
         }
         Msg::Wait { user, ticket, reply } => {
             if tickets.get(&ticket).map(|t| t.user) != Some(user) {
@@ -1788,14 +2239,23 @@ fn ensure_module(
     }
 }
 
-/// Program the job's operand registers and run `tiles` work items.
-/// Failures keep the module resident — it stays reusable.
-fn run_tiles(cynq: &mut Cynq, h: LoadedAccel, job: &Job, tiles: usize) -> Result<(), String> {
+/// Program the job's operand registers and run `tiles` work items in
+/// the owning tenant's isolation domain: the DMA engine reads and
+/// writes through `*_for` accessors, so even a bad resolved address
+/// could never touch a foreign arena.  Failures keep the module
+/// resident — it stays reusable.
+fn run_tiles(
+    cynq: &mut Cynq,
+    h: LoadedAccel,
+    job: &ExecJob,
+    tiles: usize,
+    owner: TenantId,
+) -> Result<(), String> {
     for (reg, val) in &job.params {
         cynq.write_reg(h, reg, PhysAddr(*val)).map_err(|e| e.to_string())?;
     }
     for _ in 0..tiles {
-        cynq.run(h).map_err(|e| e.to_string())?;
+        cynq.run_as(h, owner).map_err(|e| e.to_string())?;
     }
     Ok(())
 }
@@ -1803,25 +2263,60 @@ fn run_tiles(cynq: &mut Cynq, h: LoadedAccel, job: &Job, tiles: usize) -> Result
 /// Broadcast a write into every board's DDR arena (operand mirroring:
 /// with the allocators in lockstep, a buffer has the same physical
 /// address on every board, so a job can be dispatched anywhere without
-/// a pre-stage copy).
-fn write_all(hws: &mut [BoardHw], addr: u64, data: &[f32]) -> Result<(), String> {
+/// a pre-stage copy).  The write runs in the owning tenant's domain on
+/// each board — the arena checks ownership and bounds.
+fn write_all(hws: &mut [BoardHw], owner: TenantId, addr: u64, data: &[f32]) -> Result<(), String> {
     for hw in hws.iter_mut() {
-        hw.cynq.write_f32(PhysAddr(addr), data).map_err(|e| e.to_string())?;
+        hw.cynq.write_f32_for(owner, PhysAddr(addr), data).map_err(|e| e.to_string())?;
     }
     Ok(())
 }
 
-/// Apply a memory RPC across the cluster.  Allocations, frees and
+/// Tear down a retired tenant's isolation domain: reclaim its arena on
+/// every board (the allocators stay in lockstep — reclaim is
+/// per-owner, and owners are cluster-global) and invalidate all of its
+/// buffer handles.
+fn reclaim_arena(hws: &mut [BoardHw], bufs: &mut BufTable, tenant: usize) {
+    let owner = owner_of(tenant);
+    for hw in hws.iter_mut() {
+        hw.cynq.mem.reclaim_tenant(owner);
+    }
+    bufs.reclaim_tenant(tenant);
+}
+
+/// Serialize one tagged decision for the `audit` RPC.
+fn decision_value(symbols: &SymbolTable, board: usize, d: &Decision) -> Value {
+    obj(vec![
+        ("board", i(board as i64)),
+        ("tenant", i(d.tenant as i64)),
+        ("user", i(d.user as i64)),
+        ("job", i(d.job as i64)),
+        ("accel", s(symbols.resolve(d.accel))),
+        ("variant", s(symbols.resolve(d.variant))),
+        ("anchor", i(d.anchor as i64)),
+        ("span", i(d.span as i64)),
+        ("tiles", i(d.tiles as i64)),
+        ("kind", s(format!("{:?}", d.kind))),
+        ("reconfigure", i(d.reconfigure as i64)),
+        ("replicated", i(d.replicated as i64)),
+    ])
+}
+
+/// Apply a memory RPC within the calling tenant's isolation domain.
+/// Handles resolve through the [`BufTable`] ownership gate first — a
+/// stale/forged handle or a foreign buffer is refused with a
+/// structured reply and nothing is touched.  Allocations, frees and
 /// writes are mirrored into *every* board's arena — the allocators
 /// evolve in lockstep, so addresses agree cluster-wide; reads come
 /// from the primary (board 0) arena, into which [`finish_inflight`]
 /// syncs every completed job's outputs.
-fn mem_op(hws: &mut [BoardHw], op: MemOp) -> Value {
+fn mem_op(hws: &mut [BoardHw], bufs: &mut BufTable, tenant: usize, op: MemOp) -> Value {
+    let owner = owner_of(tenant);
     match op {
         MemOp::Alloc { bytes } => {
             let mut addr: Option<u64> = None;
             for hw in hws.iter_mut() {
-                match hw.cynq.alloc(bytes) {
+                match hw.cynq.alloc_for(owner, bytes) {
                     Ok(a) => {
                         let expected = *addr.get_or_insert(a.0);
                         if expected != a.0 {
@@ -1831,48 +2326,66 @@ fn mem_op(hws: &mut [BoardHw], op: MemOp) -> Value {
                     Err(e) => return err_val(&e.to_string()),
                 }
             }
-            ok(vec![("addr", i(addr.expect("cluster has at least one board") as i64))])
+            let addr = addr.expect("cluster has at least one board");
+            let h = bufs.insert(tenant, addr, bytes);
+            ok(vec![("handle", i(h.raw() as i64))])
         }
-        MemOp::Free { addr } => {
+        MemOp::Free { handle } => {
+            let (addr, _) = match bufs.remove(handle, tenant) {
+                Ok(x) => x,
+                Err(e) => return e.into_value(),
+            };
             for hw in hws.iter_mut() {
-                if let Err(e) = hw.cynq.mem.free(PhysAddr(addr)) {
+                if let Err(e) = hw.cynq.free_for(owner, PhysAddr(addr)) {
                     return err_val(&e.to_string());
                 }
             }
             ok(vec![])
         }
-        MemOp::Write { addr, data } => match write_all(hws, addr, &data) {
-            Ok(()) => ok(vec![]),
-            Err(e) => err_val(&e),
-        },
-        MemOp::Read { addr, count } => match hws[0].cynq.read_f32(PhysAddr(addr), count) {
-            Ok(data) => ok(vec![("b64", s(proto::f32s_to_b64(&data)))]),
-            Err(e) => err_val(&e.to_string()),
-        },
-        MemOp::Import { shm, offset, count, addr } => {
-            match SharedMem::open(&shm)
-                .map_err(|e| e.to_string())
-                .and_then(|m| m.read_f32(offset, count).map_err(|e| e.to_string()))
-                .and_then(|data| write_all(hws, addr, &data))
-            {
+        MemOp::Write { handle, data } => match bufs.resolve(handle, tenant) {
+            Err(e) => e.into_value(),
+            Ok((addr, _)) => match write_all(hws, owner, addr, &data) {
                 Ok(()) => ok(vec![]),
                 Err(e) => err_val(&e),
+            },
+        },
+        MemOp::Read { handle, count } => match bufs.resolve(handle, tenant) {
+            Err(e) => e.into_value(),
+            Ok((addr, _)) => match hws[0].cynq.read_f32_for(owner, PhysAddr(addr), count) {
+                Ok(data) => ok(vec![("b64", s(proto::f32s_to_b64(&data)))]),
+                Err(e) => err_val(&e.to_string()),
+            },
+        },
+        MemOp::Import { shm, offset, count, handle } => match bufs.resolve(handle, tenant) {
+            Err(e) => e.into_value(),
+            Ok((addr, _)) => {
+                match SharedMem::open(&shm)
+                    .map_err(|e| e.to_string())
+                    .and_then(|m| m.read_f32(offset, count).map_err(|e| e.to_string()))
+                    .and_then(|data| write_all(hws, owner, addr, &data))
+                {
+                    Ok(()) => ok(vec![]),
+                    Err(e) => err_val(&e),
+                }
             }
-        }
-        MemOp::Export { addr, count, shm, offset } => {
-            match hws[0]
-                .cynq
-                .read_f32(PhysAddr(addr), count)
-                .map_err(|e| e.to_string())
-                .and_then(|data| {
-                    SharedMem::open(&shm)
-                        .map_err(|e| e.to_string())
-                        .and_then(|mut m| m.write_f32(offset, &data).map_err(|e| e.to_string()))
-                }) {
-                Ok(()) => ok(vec![]),
-                Err(e) => err_val(&e),
+        },
+        MemOp::Export { handle, count, shm, offset } => match bufs.resolve(handle, tenant) {
+            Err(e) => e.into_value(),
+            Ok((addr, _)) => {
+                match hws[0]
+                    .cynq
+                    .read_f32_for(owner, PhysAddr(addr), count)
+                    .map_err(|e| e.to_string())
+                    .and_then(|data| {
+                        SharedMem::open(&shm).map_err(|e| e.to_string()).and_then(|mut m| {
+                            m.write_f32(offset, &data).map_err(|e| e.to_string())
+                        })
+                    }) {
+                    Ok(()) => ok(vec![]),
+                    Err(e) => err_val(&e),
+                }
             }
-        }
+        },
     }
 }
 
@@ -1932,7 +2445,9 @@ mod tests {
             return;
         }
         let (d, path) = start("multi");
-        let mk = |rpc: &mut FpgaRpc, n: usize| -> (u64, u64, u64, Vec<Job>) {
+        let mk = |rpc: &mut FpgaRpc,
+                  n: usize|
+         -> (BufferHandle, BufferHandle, BufferHandle, Vec<Job>) {
             let a = rpc.alloc(4 * 4096).unwrap();
             let b = rpc.alloc(4 * 4096).unwrap();
             let c = rpc.alloc(4 * 4096).unwrap();
@@ -2134,7 +2649,7 @@ mod tests {
         let mut rpc = FpgaRpc::connect(&path).unwrap();
         let catalog = Catalog::load_default().unwrap();
         // A named session with a QoS class (weight 2, quota 8).
-        let tenant = rpc.set_session("acme", 2, 8).unwrap();
+        let tenant = rpc.set_session("acme", None, 2, 8).unwrap();
         let params = crate::testutil::alloc_operand_params(&mut rpc, &catalog, "sobel");
 
         // Pause dispatching so the pending state is observable.

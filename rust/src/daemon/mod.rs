@@ -57,11 +57,13 @@ mod shm;
 pub mod transport;
 
 pub use client::{
-    BoardStatsReport, ClusterStatsReport, FpgaRpc, RunReport, SchedStatsReport,
+    AuditEntry, BoardStatsReport, ClusterStatsReport, FpgaRpc, RunReport, SchedStatsReport,
     TenantStatsReport,
 };
-pub use dispatch::{BoardStats, Daemon, DaemonStats};
-pub use proto::{read_msg, write_msg, Job, ProtoError, MAX_MSG};
+pub use dispatch::{BoardStats, Daemon, DaemonConfig, DaemonStats};
+pub use proto::{
+    read_msg, write_msg, BufferHandle, Job, ProtoError, MAX_MSG, PROTO_MAX, PROTO_MIN,
+};
 pub use session::MAX_OPEN_TICKETS;
 pub use shm::SharedMem;
 pub use transport::DEFAULT_MAX_CONNECTIONS;

@@ -11,6 +11,55 @@ use std::io::{Read, Write};
 
 pub const MAX_MSG: u32 = 64 << 20;
 
+/// Oldest protocol version this build still speaks.
+pub const PROTO_MIN: u32 = 2;
+/// Newest protocol version this build speaks. v2 introduced `hello`
+/// negotiation, token-authenticated `session`, tenant-scoped
+/// [`BufferHandle`]s on every memory RPC, and the `audit` RPC; see
+/// `daemon/PROTOCOL.md` §7 for the history.
+pub const PROTO_MAX: u32 = 2;
+
+/// A tenant-scoped, opaque, generational buffer reference — the only
+/// memory naming a client ever sees. The daemon packs a slab slot in
+/// the low 32 bits and a generation (starting at 1, bumped on free) in
+/// the high 32, the same discipline as the reactor's connection slab:
+/// a stale handle can never alias a recycled allocation, and the raw
+/// physical address never crosses the wire. `BufferHandle(0)` is never
+/// valid.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct BufferHandle(pub u64);
+
+impl BufferHandle {
+    /// The never-valid handle (generation 0 is never minted).
+    pub const NULL: BufferHandle = BufferHandle(0);
+
+    pub fn from_parts(slot: u32, generation: u32) -> BufferHandle {
+        BufferHandle((u64::from(generation) << 32) | u64::from(slot))
+    }
+
+    pub fn from_raw(raw: u64) -> BufferHandle {
+        BufferHandle(raw)
+    }
+
+    pub fn raw(self) -> u64 {
+        self.0
+    }
+
+    pub fn slot(self) -> u32 {
+        self.0 as u32
+    }
+
+    pub fn generation(self) -> u32 {
+        (self.0 >> 32) as u32
+    }
+}
+
+impl fmt::Display for BufferHandle {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "buf:{}.{}", self.slot(), self.generation())
+    }
+}
+
 #[derive(Debug)]
 pub enum ProtoError {
     Io(std::io::Error),
@@ -48,21 +97,23 @@ impl From<std::io::Error> for ProtoError {
 }
 
 /// One acceleration job (Listing 4/5): logical accelerator name +
-/// register values (physical addresses from `alloc`) + the number of
-/// work items batched behind those registers (the §4.4.2 request
-/// granularity the scheduler amortises reconfigurations over).
+/// register operands (tenant-scoped [`BufferHandle`]s from `alloc`) +
+/// the number of work items batched behind those registers (the §4.4.2
+/// request granularity the scheduler amortises reconfigurations over).
+/// The daemon resolves handles to physical addresses at the trust
+/// boundary; raw addresses never appear on the wire.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Job {
     pub accname: String,
-    /// (register name, value) pairs.
-    pub params: Vec<(String, u64)>,
+    /// (register name, operand handle) pairs.
+    pub params: Vec<(String, BufferHandle)>,
     /// Work items (tiles) in this request; 1 for a single call.
     pub tiles: usize,
 }
 
 impl Job {
     /// A single-tile job — the common Listing-4 shape.
-    pub fn new(accname: impl Into<String>, params: Vec<(String, u64)>) -> Job {
+    pub fn new(accname: impl Into<String>, params: Vec<(String, BufferHandle)>) -> Job {
         Job { accname: accname.into(), params, tiles: 1 }
     }
 
@@ -81,7 +132,7 @@ impl Job {
                 Value::Object(
                     self.params
                         .iter()
-                        .map(|(k, v)| (k.clone(), i(*v as i64)))
+                        .map(|(k, v)| (k.clone(), i(v.raw() as i64)))
                         .collect(),
                 ),
             ),
@@ -102,8 +153,8 @@ impl Job {
             .iter()
             .map(|(k, val)| {
                 val.as_u64()
-                    .map(|x| (k.clone(), x))
-                    .ok_or_else(|| ProtoError::Schema(format!("param {k} not an address")))
+                    .map(|x| (k.clone(), BufferHandle::from_raw(x)))
+                    .ok_or_else(|| ProtoError::Schema(format!("param {k} not a buffer handle")))
             })
             .collect::<Result<_, _>>()?;
         Ok(Job { accname, params, tiles })
@@ -231,13 +282,23 @@ mod tests {
     }
 
     #[test]
+    fn buffer_handle_packing() {
+        let h = BufferHandle::from_parts(7, 3);
+        assert_eq!(h.slot(), 7);
+        assert_eq!(h.generation(), 3);
+        assert_eq!(BufferHandle::from_raw(h.raw()), h);
+        assert_eq!(BufferHandle::NULL.generation(), 0);
+        assert_eq!(format!("{h}"), "buf:7.3");
+    }
+
+    #[test]
     fn job_listing4_shape() {
         let job = Job::new(
             "Partial_accel_vadd",
             vec![
-                ("a_op".into(), 0x4000_0000),
-                ("b_op".into(), 0x4000_4000),
-                ("c_out".into(), 0x4000_8000),
+                ("a_op".into(), BufferHandle::from_parts(0, 1)),
+                ("b_op".into(), BufferHandle::from_parts(1, 1)),
+                ("c_out".into(), BufferHandle::from_parts(2, 1)),
             ],
         );
         let v = job.to_value();

@@ -21,7 +21,7 @@
 //! carry async `submit` results until `wait`/`poll`/`completions`
 //! claims them, capped per connection by [`MAX_OPEN_TICKETS`].
 
-use super::proto::{self, Job};
+use super::proto::{self, BufferHandle, Job, PROTO_MAX, PROTO_MIN};
 use super::transport::ReplySink;
 use crate::json::{arr, f, i, obj, s, Value};
 use crate::sched::{AdmissionPipeline, Decision};
@@ -36,10 +36,13 @@ use std::sync::mpsc;
 pub const MAX_OPEN_TICKETS: usize = 1024;
 
 pub(crate) enum Msg {
-    /// A connection opened (sent by its first `ping`): bind the daemon
-    /// user id to a recycled scheduler slot.
+    /// A connection opened (sent by its first `ping` or `hello`): bind
+    /// the daemon user id to a recycled scheduler slot.  `proto` is
+    /// the version negotiated by a v2 `hello` (echoed in the reply);
+    /// `None` for the legacy `ping` handshake.
     Hello {
         user: u64,
+        proto: Option<u32>,
         reply: ReplySink,
     },
     /// A connection closed: retire its scheduler slot for reuse.
@@ -48,11 +51,28 @@ pub(crate) enum Msg {
     },
     /// Bind the connection to a named tenant + QoS class (weight and
     /// in-flight quota); several connections may share one tenant.
+    /// When the daemon runs with authentication, `token` must match
+    /// the tenant's minted token or the bind is denied.
     Session {
         user: u64,
         tenant: String,
+        token: Option<String>,
         weight: u32,
         max_inflight: usize,
+        reply: ReplySink,
+    },
+    /// Mint (or re-mint) a tenant token — the control-plane
+    /// registration RPC, itself gated by the daemon's admin token.
+    RegisterTenant {
+        admin_token: String,
+        name: String,
+        reply: ReplySink,
+    },
+    /// Per-tenant filtered view of the decision log: only entries
+    /// belonging to the calling connection's tenant are returned.
+    Audit {
+        user: u64,
+        limit: Option<usize>,
         reply: ReplySink,
     },
     /// Job batch. `wait: true` is the blocking `run` RPC (reply
@@ -81,7 +101,11 @@ pub(crate) enum Msg {
         user: u64,
         reply: ReplySink,
     },
+    /// Tenant-scoped memory plane: `user` resolves to the issuing
+    /// connection's tenant arena; `op` names buffers by opaque
+    /// generational [`BufferHandle`], never by physical address.
     Mem {
+        user: u64,
         op: MemOp,
         reply: ReplySink,
     },
@@ -140,11 +164,11 @@ pub(crate) enum Msg {
 
 pub(crate) enum MemOp {
     Alloc { bytes: usize },
-    Free { addr: u64 },
-    Write { addr: u64, data: Vec<f32> },
-    Read { addr: u64, count: usize },
-    Import { shm: PathBuf, offset: usize, count: usize, addr: u64 },
-    Export { addr: u64, count: usize, shm: PathBuf, offset: usize },
+    Free { handle: BufferHandle },
+    Write { handle: BufferHandle, data: Vec<f32> },
+    Read { handle: BufferHandle, count: usize },
+    Import { shm: PathBuf, offset: usize, count: usize, handle: BufferHandle },
+    Export { handle: BufferHandle, count: usize, shm: PathBuf, offset: usize },
 }
 
 /// What one decoded wire frame means for the connection that sent it.
@@ -166,7 +190,32 @@ pub(crate) enum Decoded {
 pub(crate) fn decode_request(user: u64, msg: &Value, reply: ReplySink) -> Decoded {
     let method = msg.get("method").as_str().unwrap_or("");
     let m = match method {
-        "ping" => Msg::Hello { user, reply },
+        "ping" => Msg::Hello { user, proto: None, reply },
+        // v2 handshake: the client offers a [min, max] version range;
+        // the daemon picks the highest version both sides speak, or
+        // answers a structured err naming its own range (never a
+        // silent close — an old client gets a reply it can surface).
+        "hello" => {
+            let cmin = msg.get("min").as_u64().unwrap_or(1) as u32;
+            let cmax = msg.get("max").as_u64().unwrap_or(u64::from(cmin)) as u32;
+            if cmax < PROTO_MIN || cmin > PROTO_MAX {
+                return Decoded::Immediate(obj(vec![
+                    (
+                        "status",
+                        s("err"),
+                    ),
+                    (
+                        "error",
+                        s(format!(
+                            "protocol version unsupported: client speaks {cmin}..{cmax}, daemon speaks {PROTO_MIN}..{PROTO_MAX}"
+                        )),
+                    ),
+                    ("min_supported", i(i64::from(PROTO_MIN))),
+                    ("max_supported", i(i64::from(PROTO_MAX))),
+                ]));
+            }
+            Msg::Hello { user, proto: Some(cmax.min(PROTO_MAX)), reply }
+        }
         // `run` blocks until the batch completes; `submit` returns
         // a ticket immediately (drain via wait/poll/completions).
         "run" | "submit" => {
@@ -184,15 +233,31 @@ pub(crate) fn decode_request(user: u64, msg: &Value, reply: ReplySink) -> Decode
             Err(e) => return Decoded::Immediate(err_val(&e)),
             Ok(tenant) => {
                 let tenant = tenant.to_string();
+                let token = msg.get("token").as_str().map(str::to_string);
                 let weight = msg.get("weight").as_u64().unwrap_or(1).max(1) as u32;
                 // 0 (or absent) = unbounded in-flight quota.
                 let max_inflight = match msg.get("max_inflight").as_u64() {
                     Some(0) | None => usize::MAX,
                     Some(n) => n as usize,
                 };
-                Msg::Session { user, tenant, weight, max_inflight, reply }
+                Msg::Session { user, tenant, token, weight, max_inflight, reply }
             }
         },
+        "register-tenant" => {
+            let name = match msg.req_str("name") {
+                Err(e) => return Decoded::Immediate(err_val(&e)),
+                Ok(n) => n.to_string(),
+            };
+            let admin_token = match msg.req_str("admin_token") {
+                Err(e) => return Decoded::Immediate(err_val(&e)),
+                Ok(t) => t.to_string(),
+            };
+            Msg::RegisterTenant { admin_token, name, reply }
+        }
+        "audit" => {
+            let limit = msg.get("limit").as_u64().map(|n| n as usize);
+            Msg::Audit { user, limit, reply }
+        }
         "wait" => match msg.req_u64("ticket") {
             Err(e) => return Decoded::Immediate(err_val(&e)),
             Ok(ticket) => Msg::Wait { user, ticket, reply },
@@ -228,7 +293,7 @@ pub(crate) fn decode_request(user: u64, msg: &Value, reply: ReplySink) -> Decode
         "alloc" | "free" | "write" | "read" | "import" | "export" => {
             match parse_mem_op(method, msg) {
                 Err(e) => return Decoded::Immediate(err_val(&e)),
-                Ok(op) => Msg::Mem { op, reply },
+                Ok(op) => Msg::Mem { user, op, reply },
             }
         }
         other => return Decoded::Immediate(err_val(&format!("unknown method {other:?}"))),
@@ -237,25 +302,28 @@ pub(crate) fn decode_request(user: u64, msg: &Value, reply: ReplySink) -> Decode
 }
 
 fn parse_mem_op(method: &str, msg: &Value) -> Result<MemOp, String> {
+    // v2: buffers are named by opaque generational handles; the wire
+    // field is `handle` and raw addresses are gone from the protocol.
+    let handle = || msg.req_u64("handle").map(BufferHandle::from_raw);
     Ok(match method {
         "alloc" => MemOp::Alloc { bytes: msg.req_u64("bytes")? as usize },
-        "free" => MemOp::Free { addr: msg.req_u64("addr")? },
+        "free" => MemOp::Free { handle: handle()? },
         "write" => MemOp::Write {
-            addr: msg.req_u64("addr")?,
+            handle: handle()?,
             data: proto::b64_to_f32s(msg.req_str("b64")?).map_err(|e| e.to_string())?,
         },
         "read" => MemOp::Read {
-            addr: msg.req_u64("addr")?,
+            handle: handle()?,
             count: msg.req_u64("count")? as usize,
         },
         "import" => MemOp::Import {
             shm: msg.req_str("shm")?.into(),
             offset: msg.req_u64("offset")? as usize,
             count: msg.req_u64("count")? as usize,
-            addr: msg.req_u64("addr")?,
+            handle: handle()?,
         },
         "export" => MemOp::Export {
-            addr: msg.req_u64("addr")?,
+            handle: handle()?,
             count: msg.req_u64("count")? as usize,
             shm: msg.req_str("shm")?.into(),
             offset: msg.req_u64("offset")? as usize,
@@ -302,19 +370,25 @@ pub(crate) fn close_ticket(open: &mut HashMap<u64, usize>, user: u64) {
 /// Drop one connection's claim on tenant `id`: decrement the refcount
 /// and, at zero, evict the name mapping and retire the pipeline state
 /// (removed once drained) — shared by the Goodbye and Session-rebind
-/// paths so retirement semantics cannot drift between them.
+/// paths so retirement semantics cannot drift between them.  Returns
+/// `true` when this was the last claim and the tenant is now retired —
+/// the dispatcher's cue to tear down its memory arena and buffer
+/// handles.
 pub(crate) fn release_tenant(
     tenant_ids: &mut HashMap<String, usize>,
     tenant_refs: &mut HashMap<usize, usize>,
     admit: &mut AdmissionPipeline,
     id: usize,
-) {
+) -> bool {
     let refs = tenant_refs.entry(id).or_insert(1);
     *refs = refs.saturating_sub(1);
     if *refs == 0 {
         tenant_refs.remove(&id);
         tenant_ids.retain(|_, &mut t| t != id);
         admit.retire(id);
+        true
+    } else {
+        false
     }
 }
 
@@ -411,6 +485,15 @@ pub(crate) fn ok(mut fields: Vec<(&str, Value)>) -> Value {
 
 pub(crate) fn err_val(e: &str) -> Value {
     obj(vec![("status", s("err")), ("error", s(e))])
+}
+
+/// Structured denied reply: `denied: 1` marks an isolation-domain
+/// refusal (foreign buffer, bad or missing token, admin-gated RPC) —
+/// distinct from schema errors so clients and tests can tell "you may
+/// not" from "you asked wrong".  See the error taxonomy in
+/// `rust/src/daemon/PROTOCOL.md`.
+pub(crate) fn denied_val(e: &str) -> Value {
+    obj(vec![("status", s("err")), ("error", s(e)), ("denied", i(1))])
 }
 
 /// Structured busy reply: `busy: 1` plus a deterministic retry hint —

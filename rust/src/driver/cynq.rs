@@ -7,7 +7,7 @@
 //! stack — registry descriptors, BitMan relocation, the FPGA manager's
 //! decoupler protocol, and real PJRT compute.
 
-use super::memory::{DataManager, MemError, PhysAddr};
+use super::memory::{DataManager, MemError, PhysAddr, TenantId, KERNEL_OWNER};
 use super::regs::RegisterFile;
 use crate::accel::Catalog;
 use crate::bitstream::{relocate, synth_full, synth_partial};
@@ -138,6 +138,33 @@ impl Cynq {
 
     pub fn read_f32(&self, addr: PhysAddr, n: usize) -> Result<Vec<f32>, CynqError> {
         Ok(self.mem.read_f32(addr, n)?)
+    }
+
+    /// Owner-scoped allocation — the daemon's per-tenant arena path.
+    pub fn alloc_for(&mut self, owner: TenantId, bytes: usize) -> Result<PhysAddr, CynqError> {
+        Ok(self.mem.alloc_for(owner, bytes)?)
+    }
+
+    pub fn free_for(&mut self, owner: TenantId, addr: PhysAddr) -> Result<(), CynqError> {
+        Ok(self.mem.free_for(owner, addr)?)
+    }
+
+    pub fn write_f32_for(
+        &mut self,
+        owner: TenantId,
+        addr: PhysAddr,
+        data: &[f32],
+    ) -> Result<(), CynqError> {
+        Ok(self.mem.write_f32_for(owner, addr, data)?)
+    }
+
+    pub fn read_f32_for(
+        &self,
+        owner: TenantId,
+        addr: PhysAddr,
+        n: usize,
+    ) -> Result<Vec<f32>, CynqError> {
+        Ok(self.mem.read_f32_for(owner, addr, n)?)
     }
 
     /// Find `span` adjacent free regions; returns the anchor index.
@@ -287,7 +314,20 @@ impl Cynq {
     /// operands from the data manager at the programmed addresses,
     /// executes the variant's HLO on PJRT, and DMA-writes the outputs
     /// back. Returns the *modelled* FPGA latency for the work item.
+    ///
+    /// Runs in the kernel ownership domain — the in-process library
+    /// path. The daemon dispatches through [`Cynq::run_as`] so the DMA
+    /// engine itself re-verifies that every operand buffer belongs to
+    /// the job's tenant (defense in depth behind the handle table).
     pub fn run(&mut self, h: LoadedAccel) -> Result<Duration, CynqError> {
+        self.run_as(h, KERNEL_OWNER)
+    }
+
+    /// [`Cynq::run`] on behalf of one tenant: every operand DMA is
+    /// bounds- *and* ownership-checked against `owner`'s arena, so a
+    /// mis-programmed (or maliciously forged) operand register can
+    /// never move another tenant's data through the fabric.
+    pub fn run_as(&mut self, h: LoadedAccel, owner: TenantId) -> Result<Duration, CynqError> {
         let (accel_name, variant_name, operands) = {
             let slot = self
                 .slots
@@ -308,10 +348,10 @@ impl Cynq {
                 accel.outputs.len()
             )));
         }
-        // DMA in: gather inputs.
+        // DMA in: gather inputs (ownership-checked per operand).
         let mut inputs = Vec::new();
         for (spec, (_, addr)) in accel.inputs.iter().zip(&operands) {
-            inputs.push(self.mem.read_f32(PhysAddr(*addr), spec.elements())?);
+            inputs.push(self.mem.read_f32_for(owner, PhysAddr(*addr), spec.elements())?);
         }
         // Execute on PJRT.
         let out = self
@@ -326,7 +366,7 @@ impl Cynq {
             .zip(operands[accel.inputs.len()..].iter())
         {
             let _ = spec;
-            self.mem.write_f32(PhysAddr(*addr), buf)?;
+            self.mem.write_f32_for(owner, PhysAddr(*addr), buf)?;
         }
         if let Some(slot) = self.slots.get_mut(h.0).and_then(Option::as_mut) {
             slot.regs.complete();

@@ -1,10 +1,21 @@
-//! Contiguous physical memory allocation — the CMA/udmabuf analog.
+//! Contiguous physical memory allocation — the CMA/udmabuf analog —
+//! partitioned into per-tenant ownership domains.
 //!
 //! Accelerators see *physical* addresses: software allocates a buffer,
 //! gets its phys addr, and programs that into the operand registers
 //! (Listings 4–5 pass `a_op_phy_addr` etc.). The data manager owns a
 //! DDR-backed arena starting at the PL-visible base and hands out
 //! aligned, contiguous ranges with a first-fit free list.
+//!
+//! Every allocation carries an owning [`TenantId`]; all access paths
+//! (read/write/free) verify both bounds *and* ownership, so a dispatch
+//! acting for one tenant can never touch another tenant's buffers even
+//! if it guesses a valid physical address. [`TenantId`] 0 is the
+//! [`KERNEL_OWNER`] — the in-process/driver-local domain used when no
+//! multi-tenant boundary exists (unit tests, single-user embedding).
+//! It is *not* a superuser: kernel-owned buffers are simply one more
+//! disjoint domain. Retiring a tenant reclaims its whole arena in one
+//! call ([`DataManager::reclaim_tenant`]).
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -16,6 +27,14 @@ pub const DDR_BASE: u64 = 0x4000_0000;
 /// Allocation alignment: AXI bursts must not cross 4 KiB boundaries.
 pub const ALIGN: u64 = 4096;
 
+/// Owner of an allocation. The daemon maps its admission tenant id `t`
+/// to arena owner `t + 1` so tenant 0 never collides with the kernel
+/// domain.
+pub type TenantId = u32;
+
+/// The in-process ownership domain (driver-local use, unit tests).
+pub const KERNEL_OWNER: TenantId = 0;
+
 /// A physical address inside the accelerator-visible DDR window.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct PhysAddr(pub u64);
@@ -25,6 +44,11 @@ pub enum MemError {
     OutOfMemory { requested: usize, largest_free: usize },
     BadFree(PhysAddr),
     OutOfRange { addr: PhysAddr, len: usize },
+    /// Bounds were fine but the buffer belongs to a different tenant.
+    /// `owner` is the domain that attempted the access, never the
+    /// domain that holds the buffer (the denied party learns nothing
+    /// about who owns the range it probed).
+    Foreign { addr: PhysAddr, owner: TenantId },
 }
 
 impl fmt::Display for MemError {
@@ -37,17 +61,26 @@ impl fmt::Display for MemError {
             MemError::OutOfRange { addr, len } => {
                 write!(f, "access [{addr:?} +{len}] outside allocation")
             }
+            MemError::Foreign { addr, owner } => {
+                write!(f, "access denied: {addr:?} is not owned by tenant {owner}")
+            }
         }
     }
 }
 
 impl std::error::Error for MemError {}
 
+#[derive(Debug, Clone, Copy)]
+struct Allocation {
+    len: usize,
+    owner: TenantId,
+}
+
 /// The arena: backing store + allocation bookkeeping.
 pub struct DataManager {
     mem: Vec<u8>,
-    /// offset -> length of live allocations.
-    allocs: BTreeMap<u64, usize>,
+    /// offset -> live allocation record.
+    allocs: BTreeMap<u64, Allocation>,
 }
 
 impl DataManager {
@@ -61,22 +94,42 @@ impl DataManager {
     }
 
     pub fn allocated_bytes(&self) -> usize {
-        self.allocs.values().sum()
+        self.allocs.values().map(|a| a.len).sum()
     }
 
-    /// First-fit aligned allocation.
+    /// Live bytes held by one tenant — the leak-check counter.
+    pub fn tenant_bytes(&self, owner: TenantId) -> usize {
+        self.allocs.values().filter(|a| a.owner == owner).map(|a| a.len).sum()
+    }
+
+    /// Owner of the allocation containing `addr`, if any.
+    pub fn owner_of(&self, addr: PhysAddr) -> Option<TenantId> {
+        let off = addr.0.checked_sub(DDR_BASE)? as usize;
+        self.allocs
+            .range(..=off as u64)
+            .next_back()
+            .filter(|(&a, al)| off >= a as usize && off < a as usize + al.len)
+            .map(|(_, al)| al.owner)
+    }
+
+    /// First-fit aligned allocation in the kernel domain.
     pub fn alloc(&mut self, size: usize) -> Result<PhysAddr, MemError> {
+        self.alloc_for(KERNEL_OWNER, size)
+    }
+
+    /// First-fit aligned allocation owned by `owner`.
+    pub fn alloc_for(&mut self, owner: TenantId, size: usize) -> Result<PhysAddr, MemError> {
         let size_al = size.max(1);
         let mut cursor = 0u64;
         let mut largest_free = 0usize;
         let mut fit: Option<u64> = None;
-        for (&off, &len) in &self.allocs {
+        for (&off, al) in &self.allocs {
             let gap = (off.saturating_sub(cursor)) as usize;
             largest_free = largest_free.max(gap);
             if fit.is_none() && gap >= size_al {
                 fit = Some(cursor);
             }
-            cursor = align_up(off + len as u64);
+            cursor = align_up(off + al.len as u64);
         }
         let tail = self.mem.len().saturating_sub(cursor as usize);
         largest_free = largest_free.max(tail);
@@ -85,50 +138,99 @@ impl DataManager {
         }
         match fit {
             Some(off) => {
-                self.allocs.insert(off, size_al);
+                self.allocs.insert(off, Allocation { len: size_al, owner });
                 Ok(PhysAddr(DDR_BASE + off))
             }
             None => Err(MemError::OutOfMemory { requested: size_al, largest_free }),
         }
     }
 
+    /// Free a kernel-domain allocation.
     pub fn free(&mut self, addr: PhysAddr) -> Result<(), MemError> {
-        let off = addr.0.checked_sub(DDR_BASE).ok_or(MemError::BadFree(addr))?;
-        self.allocs.remove(&off).ok_or(MemError::BadFree(addr))?;
-        Ok(())
+        self.free_for(KERNEL_OWNER, addr)
     }
 
-    fn check(&self, addr: PhysAddr, len: usize) -> Result<usize, MemError> {
+    /// Free an allocation owned by `owner`. Freeing another tenant's
+    /// buffer is `Foreign`, not `BadFree` — the buffer stays live.
+    pub fn free_for(&mut self, owner: TenantId, addr: PhysAddr) -> Result<(), MemError> {
+        let off = addr.0.checked_sub(DDR_BASE).ok_or(MemError::BadFree(addr))?;
+        match self.allocs.get(&off) {
+            None => Err(MemError::BadFree(addr)),
+            Some(al) if al.owner != owner => Err(MemError::Foreign { addr, owner }),
+            Some(_) => {
+                self.allocs.remove(&off);
+                Ok(())
+            }
+        }
+    }
+
+    /// Tear down a retired tenant's whole arena; returns the bytes
+    /// reclaimed. Idempotent — a second call reclaims nothing.
+    pub fn reclaim_tenant(&mut self, owner: TenantId) -> usize {
+        let mut reclaimed = 0usize;
+        self.allocs.retain(|_, al| {
+            if al.owner == owner {
+                reclaimed += al.len;
+                false
+            } else {
+                true
+            }
+        });
+        reclaimed
+    }
+
+    fn check(&self, owner: TenantId, addr: PhysAddr, len: usize) -> Result<usize, MemError> {
         let off = addr
             .0
             .checked_sub(DDR_BASE)
             .ok_or(MemError::OutOfRange { addr, len })? as usize;
         // The access must lie inside one live allocation (the DMA cannot
-        // scribble outside its buffer — a real CMA property worth keeping).
-        let ok = self
+        // scribble outside its buffer — a real CMA property worth keeping)
+        // and that allocation must belong to the accessing tenant.
+        let hit = self
             .allocs
             .range(..=off as u64)
             .next_back()
-            .map(|(&a, &l)| off >= a as usize && off + len <= a as usize + l)
-            .unwrap_or(false);
-        if !ok {
-            return Err(MemError::OutOfRange { addr, len });
+            .filter(|(&a, al)| off >= a as usize && off + len <= a as usize + al.len);
+        match hit {
+            None => Err(MemError::OutOfRange { addr, len }),
+            Some((_, al)) if al.owner != owner => Err(MemError::Foreign { addr, owner }),
+            Some(_) => Ok(off),
         }
-        Ok(off)
     }
 
-    /// CPU/DMA write of f32 data.
+    /// CPU/DMA write of f32 data (kernel domain).
     pub fn write_f32(&mut self, addr: PhysAddr, data: &[f32]) -> Result<(), MemError> {
-        let off = self.check(addr, data.len() * 4)?;
+        self.write_f32_for(KERNEL_OWNER, addr, data)
+    }
+
+    /// CPU/DMA write of f32 data on behalf of `owner`.
+    pub fn write_f32_for(
+        &mut self,
+        owner: TenantId,
+        addr: PhysAddr,
+        data: &[f32],
+    ) -> Result<(), MemError> {
+        let off = self.check(owner, addr, data.len() * 4)?;
         for (k, v) in data.iter().enumerate() {
             self.mem[off + 4 * k..off + 4 * k + 4].copy_from_slice(&v.to_le_bytes());
         }
         Ok(())
     }
 
-    /// CPU/DMA read of f32 data.
+    /// CPU/DMA read of f32 data (kernel domain).
     pub fn read_f32(&self, addr: PhysAddr, count: usize) -> Result<Vec<f32>, MemError> {
-        let off = self.check(addr, count * 4)?;
+        self.read_f32_for(KERNEL_OWNER, addr, count)
+    }
+
+    /// CPU/DMA read of f32 data on behalf of `owner`.
+    pub fn read_f32_for(
+        &self,
+        owner: TenantId,
+        addr: PhysAddr,
+        count: usize,
+    ) -> Result<Vec<f32>, MemError> {
+        let off = self.check(owner, addr, count * 4)?;
         Ok((0..count)
             .map(|k| {
                 f32::from_le_bytes(self.mem[off + 4 * k..off + 4 * k + 4].try_into().unwrap())
@@ -137,13 +239,31 @@ impl DataManager {
     }
 
     pub fn write_bytes(&mut self, addr: PhysAddr, data: &[u8]) -> Result<(), MemError> {
-        let off = self.check(addr, data.len())?;
+        self.write_bytes_for(KERNEL_OWNER, addr, data)
+    }
+
+    pub fn write_bytes_for(
+        &mut self,
+        owner: TenantId,
+        addr: PhysAddr,
+        data: &[u8],
+    ) -> Result<(), MemError> {
+        let off = self.check(owner, addr, data.len())?;
         self.mem[off..off + data.len()].copy_from_slice(data);
         Ok(())
     }
 
     pub fn read_bytes(&self, addr: PhysAddr, len: usize) -> Result<Vec<u8>, MemError> {
-        let off = self.check(addr, len)?;
+        self.read_bytes_for(KERNEL_OWNER, addr, len)
+    }
+
+    pub fn read_bytes_for(
+        &self,
+        owner: TenantId,
+        addr: PhysAddr,
+        len: usize,
+    ) -> Result<Vec<u8>, MemError> {
+        let off = self.check(owner, addr, len)?;
         Ok(self.mem[off..off + len].to_vec())
     }
 }
@@ -208,5 +328,45 @@ mod tests {
         let mid = PhysAddr(a.0 + 16);
         dm.write_f32(mid, &[1.0, 2.0]).unwrap();
         assert_eq!(dm.read_f32(mid, 2).unwrap(), vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn cross_tenant_access_denied_victim_intact() {
+        let mut dm = DataManager::new(1 << 16);
+        let victim = dm.alloc_for(1, 64).unwrap();
+        dm.write_f32_for(1, victim, &[7.0; 16]).unwrap();
+        // Tenant 2 can neither read, write nor free tenant 1's buffer
+        // even with the exact physical address in hand.
+        assert!(matches!(
+            dm.read_f32_for(2, victim, 4),
+            Err(MemError::Foreign { owner: 2, .. })
+        ));
+        assert!(matches!(
+            dm.write_f32_for(2, victim, &[0.0; 4]),
+            Err(MemError::Foreign { owner: 2, .. })
+        ));
+        assert!(matches!(dm.free_for(2, victim), Err(MemError::Foreign { owner: 2, .. })));
+        // Kernel domain gets no special bypass either.
+        assert!(dm.read_f32(victim, 4).is_err());
+        // Victim data untouched, and the owner still works.
+        assert_eq!(dm.read_f32_for(1, victim, 16).unwrap(), vec![7.0; 16]);
+        assert_eq!(dm.tenant_bytes(1), 64);
+        assert_eq!(dm.owner_of(victim), Some(1));
+    }
+
+    #[test]
+    fn reclaim_tenant_frees_whole_arena() {
+        let mut dm = DataManager::new(16 * 4096);
+        let a1 = dm.alloc_for(1, 4096).unwrap();
+        let _a2 = dm.alloc_for(1, 4096).unwrap();
+        let b = dm.alloc_for(2, 4096).unwrap();
+        assert_eq!(dm.reclaim_tenant(1), 8192);
+        assert_eq!(dm.tenant_bytes(1), 0);
+        assert_eq!(dm.reclaim_tenant(1), 0, "reclaim is idempotent");
+        // Survivor untouched; the freed range is reusable by others.
+        assert_eq!(dm.tenant_bytes(2), 4096);
+        assert_eq!(dm.owner_of(b), Some(2));
+        let c = dm.alloc_for(2, 4096).unwrap();
+        assert_eq!(c, a1, "first-fit reuses the reclaimed hole");
     }
 }

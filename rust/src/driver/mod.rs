@@ -11,5 +11,5 @@ mod memory;
 mod cynq;
 
 pub use cynq::{AccelSnapshot, Cynq, CynqError, LoadedAccel};
-pub use memory::{DataManager, MemError, PhysAddr};
+pub use memory::{DataManager, MemError, PhysAddr, TenantId, KERNEL_OWNER};
 pub use regs::{ControlBits, RegisterFile};

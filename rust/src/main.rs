@@ -7,9 +7,9 @@
 //!            [--boards B1,B2,...] [--placement round-robin|least-loaded|locality]
 //!            [--policy elastic|fixed|quantum|elastic-pre|fair]
 //!            [--queue-cap N] [--quantum-tiles N] [--max-conns N]
-//!            [--fault-plan SPEC]
+//!            [--fault-plan SPEC] [--tenants T1,T2,...] [--bw-partition]
 //! fos run    [--socket PATH] --accel NAME [--requests N]
-//!            [--tenant NAME] [--weight W] [--max-inflight N] [--async]
+//!            [--tenant NAME] [--token TOK] [--weight W] [--max-inflight N] [--async]
 //! fos info   [--board BOARD]         # shell + catalog + Table 1 summary
 //! fos registry [--board BOARD] --out FILE
 //! ```
@@ -25,7 +25,11 @@
 //! the wait RPC explicitly.  `--fault-plan` arms deterministic fault
 //! injection (board outages, reconfiguration failures, transient run
 //! errors — see `fos::sched::FaultPlan::parse` for the spec format)
-//! for failover soak testing against the live daemon.
+//! for failover soak testing against the live daemon.  `--tenants`
+//! switches the daemon to authenticated mode (per-tenant bearer tokens
+//! plus an admin token, printed once at startup; `fos run --token`
+//! presents one), and `--bw-partition` arms weighted memory-bandwidth
+//! partitioning between tenant sessions.
 
 use fos::accel::Catalog;
 use fos::daemon::{Daemon, FpgaRpc, Job};
@@ -94,6 +98,9 @@ fn main() {
             if let Some(q) = get("--quantum-tiles").and_then(|v| v.parse().ok()) {
                 admission.quantum_tiles = q;
             }
+            if args.iter().any(|a| a == "--bw-partition") {
+                admission.bw_partition = true;
+            }
             let max_conns: usize = get("--max-conns")
                 .and_then(|v| v.parse().ok())
                 .unwrap_or(fos::daemon::DEFAULT_MAX_CONNECTIONS);
@@ -108,17 +115,38 @@ fn main() {
                 })
             });
             let fault_spec = faults.as_ref().map(|p| p.to_spec());
-            let _d = Daemon::start_cluster_with_faults(
-                &socket,
-                &boards,
-                catalog,
-                policy,
-                placement,
-                admission,
-                max_conns,
-                faults,
-            )
-            .expect("daemon start");
+            // `--tenants acme,bigco` switches the daemon to authenticated
+            // mode: only the listed tenants (plus any registered later via
+            // the admin token) can bind sessions, each with a minted
+            // bearer token printed once at startup.
+            let tenant_names: Vec<String> = get("--tenants")
+                .map(|list| list.split(',').map(|t| t.trim().to_string()).collect())
+                .unwrap_or_default();
+            let tenant_refs: Vec<&str> =
+                tenant_names.iter().map(String::as_str).collect();
+            let mut cfg = fos::daemon::DaemonConfig::new(&boards, catalog)
+                .policy(policy)
+                .placement(placement)
+                .admission(admission)
+                .max_connections(max_conns)
+                .tenants(&tenant_refs);
+            if let Some(plan) = faults {
+                cfg = cfg.faults(plan);
+            }
+            let d = Daemon::start_configured(&socket, cfg).expect("daemon start");
+            if !tenant_names.is_empty() {
+                println!(
+                    "auth: admin token {}",
+                    d.admin_token().expect("admin token")
+                );
+                for t in &tenant_names {
+                    println!(
+                        "auth: tenant {t:?} token {}",
+                        d.tenant_token(t).expect("tenant token")
+                    );
+                }
+            }
+            let _d = d;
             let names: Vec<&str> = boards.iter().map(|b| b.name()).collect();
             println!(
                 "fos daemon: boards={} placement={} policy={} socket={socket} accelerators={n} \
@@ -153,8 +181,11 @@ fn main() {
                 let weight: u32 = get("--weight").and_then(|v| v.parse().ok()).unwrap_or(1);
                 let max_inflight: usize =
                     get("--max-inflight").and_then(|v| v.parse().ok()).unwrap_or(0);
+                // `--token` carries the bearer token an authenticated
+                // daemon (`fos daemon --tenants ...`) printed at startup.
+                let token = get("--token");
                 let id = rpc
-                    .set_session(&tenant, weight, max_inflight)
+                    .set_session(&tenant, token.as_deref(), weight, max_inflight)
                     .expect("session bind");
                 println!("session: tenant {tenant:?} (id {id}, weight {weight})");
             }
@@ -251,8 +282,9 @@ fn main() {
             println!("               [--policy elastic|fixed|quantum|elastic-pre|fair]");
             println!("               [--queue-cap N] [--quantum-tiles N] [--max-conns N]");
             println!("               [--fault-plan seed=N,reconfig=R,run=R,down=B@Tms+Dms,...]");
+            println!("               [--tenants T1,T2,...] [--bw-partition]");
             println!("  fos run      [--socket PATH] --accel NAME [--requests N]");
-            println!("               [--tenant NAME] [--weight W] [--max-inflight N] [--async]");
+            println!("               [--tenant NAME] [--token TOK] [--weight W] [--max-inflight N] [--async]");
             println!("  fos info     [--board BOARD]");
             println!("  fos registry [--board BOARD] --out FILE");
         }

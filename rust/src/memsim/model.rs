@@ -156,6 +156,61 @@ impl DdrModel {
         let mbps = (t.per_port_dir_mbps[0].0 / pattern_pollution).max(1.0);
         bytes as f64 / (mbps * 1e6) * 1e9
     }
+
+    /// [`DdrModel::transfer_ns`] under **weighted bandwidth
+    /// partitioning** — the tenant-isolation QoS knob.
+    ///
+    /// Without partitioning the memory controller arbitrates per
+    /// *master*: a streaming tenant running `k` concurrent DMA engines
+    /// takes `k/(k+1)` of the aggregate and a latency tenant's single
+    /// transfer degrades without bound as `k` grows. Partitioned, the
+    /// aggregate bandwidth under the same contention is split per
+    /// *tenant* in proportion to QoS `weight`, then evenly across that
+    /// tenant's own active masters:
+    ///
+    /// ```text
+    /// rate(master of T) = aggregate(k) * weight_T / active_weight / masters_T
+    /// ```
+    ///
+    /// - `weight`: this tenant's QoS weight (≥ 1);
+    /// - `active_weight`: sum of weights over all tenants with a
+    ///   concurrently active master, including this one;
+    /// - `tenant_masters`: how many of the `concurrent + 1` masters
+    ///   belong to this tenant, including this transfer;
+    /// - `concurrent`: other active masters fabric-wide, as in
+    ///   [`DdrModel::transfer_ns`].
+    ///
+    /// The partition is **work-conserving**: when no other tenant has
+    /// an active master (`active_weight <= weight`) the transfer runs
+    /// at the unpartitioned contended rate — an idle tenant's
+    /// entitlement is redistributed, never reserved. A tenant's share
+    /// can cap its own rate below the equal split (that is the
+    /// streaming tenant paying for its fan-out) but never pushes any
+    /// transfer faster than the uncontended solo rate.
+    pub fn transfer_ns_partitioned(
+        &self,
+        bytes: usize,
+        weight: u32,
+        active_weight: u32,
+        tenant_masters: usize,
+        concurrent: usize,
+    ) -> f64 {
+        let equal_ns = self.transfer_ns(bytes, concurrent);
+        let w = f64::from(weight.max(1));
+        let total = f64::from(active_weight.max(weight.max(1)));
+        if concurrent == 0 || total <= w {
+            // Sole active tenant: work-conserving, full contended rate
+            // (contention can only be its own masters).
+            return equal_ns;
+        }
+        let masters = (concurrent + 1) as f64;
+        let own = tenant_masters.max(1).min(concurrent + 1) as f64;
+        // equal_ns corresponds to a 1/masters share of the aggregate;
+        // rescale to the weighted per-tenant share split across the
+        // tenant's own masters, floored at the uncontended solo time.
+        let weighted_ns = equal_ns * total * own / (w * masters);
+        weighted_ns.max(self.transfer_ns(bytes, 0))
+    }
 }
 
 #[cfg(test)]
@@ -226,6 +281,42 @@ mod tests {
         assert!(busy > solo, "{busy} vs {solo}");
         // 64 KiB at ~530 MB/s ≈ 124 us.
         assert!((solo / 1000.0 - 124.0).abs() < 20.0, "{solo}");
+    }
+
+    #[test]
+    fn partitioned_share_shields_latency_tenant() {
+        let m = u96();
+        let bytes = 65536;
+        // A streaming tenant (weight 1) drives 3 concurrent masters;
+        // the latency tenant (weight 1) runs one transfer. Equal-split
+        // arbitration gives the latency tenant 1/4 of the aggregate;
+        // per-tenant partitioning gives it 1/2 — strictly faster.
+        let unpartitioned = m.transfer_ns(bytes, 3);
+        let partitioned = m.transfer_ns_partitioned(bytes, 1, 2, 1, 3);
+        assert!(
+            partitioned < unpartitioned,
+            "partitioned {partitioned} must beat equal split {unpartitioned}"
+        );
+        // ...but never beats the uncontended solo rate.
+        assert!(partitioned >= m.transfer_ns(bytes, 0));
+        // The streaming tenant's own masters pay for the fan-out: each
+        // of its 3 masters runs slower than the equal split.
+        let stream = m.transfer_ns_partitioned(bytes, 1, 2, 3, 3);
+        assert!(stream > unpartitioned, "{stream} vs {unpartitioned}");
+    }
+
+    #[test]
+    fn partition_is_work_conserving_when_alone() {
+        let m = u96();
+        let bytes = 65536;
+        // Sole active tenant: identical to the unpartitioned cost, both
+        // uncontended and against its own masters.
+        assert_eq!(m.transfer_ns_partitioned(bytes, 2, 2, 1, 0), m.transfer_ns(bytes, 0));
+        assert_eq!(m.transfer_ns_partitioned(bytes, 2, 2, 3, 2), m.transfer_ns(bytes, 2));
+        // Heavier weight buys a bigger share under contention.
+        let heavy = m.transfer_ns_partitioned(bytes, 4, 5, 1, 3);
+        let light = m.transfer_ns_partitioned(bytes, 1, 5, 1, 3);
+        assert!(heavy < light, "{heavy} vs {light}");
     }
 
     #[test]

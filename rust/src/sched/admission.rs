@@ -105,6 +105,15 @@ pub struct AdmissionConfig {
     /// eligible (the batched default); `1` models a per-RPC trickle
     /// (the fig24 baseline).
     pub batch_cap: usize,
+    /// Weighted memory-bandwidth partitioning (the tenant-isolation
+    /// QoS knob): when `true` the scheduler core charges each
+    /// dispatch's DMA at its tenant's share of the contended bandwidth
+    /// — share ∝ the same [`QosClass::weight`] DRR uses, work-
+    /// conserving when other tenants are idle
+    /// ([`crate::memsim::DdrModel::transfer_ns_partitioned`]).  Off by
+    /// default: service times then match the historical equal-split
+    /// model exactly.
+    pub bw_partition: bool,
 }
 
 impl Default for AdmissionConfig {
@@ -113,6 +122,7 @@ impl Default for AdmissionConfig {
             queue_cap: DEFAULT_ADMIT_QUEUE_CAP,
             quantum_tiles: DEFAULT_QUANTUM_TILES,
             batch_cap: usize::MAX,
+            bw_partition: false,
         }
     }
 }
@@ -124,6 +134,12 @@ impl AdmissionConfig {
     /// client.
     pub fn per_rpc() -> AdmissionConfig {
         AdmissionConfig { batch_cap: 1, ..AdmissionConfig::default() }
+    }
+
+    /// Turn on weighted memory-bandwidth partitioning.
+    pub fn with_bw_partition(mut self) -> AdmissionConfig {
+        self.bw_partition = true;
+        self
     }
 }
 
@@ -552,6 +568,7 @@ mod tests {
             queue_cap: usize::MAX,
             quantum_tiles: 4,
             batch_cap: 8,
+            ..AdmissionConfig::default()
         };
         let mut p = AdmissionPipeline::new(cfg);
         p.set_qos(0, QosClass::new(3, usize::MAX));

@@ -448,6 +448,14 @@ impl ClusterCore {
         }
     }
 
+    /// Enable weighted memory-bandwidth partitioning on every shard
+    /// ([`SchedCore::set_bw_partition`]).
+    pub fn set_bw_partition(&mut self, on: bool) {
+        for s in &mut self.shards {
+            s.core.set_bw_partition(on);
+        }
+    }
+
     /// Override the work-stealing donor threshold (queued tiles).
     pub fn with_steal_threshold(mut self, tiles: usize) -> ClusterCore {
         self.steal_threshold = tiles;

@@ -392,6 +392,35 @@ impl CostModel {
         self.dma_ns(accel, concurrent) + variant.compute_ns()
     }
 
+    /// [`CostModel::per_tile_ns`] under weighted memory-bandwidth
+    /// partitioning (see [`DdrModel::transfer_ns_partitioned`]): the
+    /// DMA legs run at the dispatching tenant's QoS share of the
+    /// contended bandwidth instead of the per-master equal split.
+    #[allow(clippy::too_many_arguments)]
+    pub fn per_tile_ns_partitioned(
+        &self,
+        accel: &Accelerator,
+        variant: &crate::accel::Variant,
+        weight: u32,
+        active_weight: u32,
+        tenant_masters: usize,
+        concurrent: usize,
+    ) -> f64 {
+        self.ddr.transfer_ns_partitioned(
+            accel.bytes_in,
+            weight,
+            active_weight,
+            tenant_masters,
+            concurrent,
+        ) + self.ddr.transfer_ns_partitioned(
+            accel.bytes_out,
+            weight,
+            active_weight,
+            tenant_masters,
+            concurrent,
+        ) + variant.compute_ns()
+    }
+
     /// Context save of a running `span`-region module: PCAP readback of
     /// its register file + progress counters and in-flight state drain.
     /// Modelled as a quarter of the span's partial-bitstream load.
@@ -1320,6 +1349,11 @@ pub struct SchedCore {
     /// Per-tenant QoS weights ([`SchedCore::set_tenant_weight`]) —
     /// read by fair-share-aware policies through [`PlaceReq`].
     tenant_weights: BTreeMap<usize, u32>,
+    /// Weighted memory-bandwidth partitioning
+    /// ([`SchedCore::set_bw_partition`]): when on, [`SchedCore::
+    /// service_ns`] charges DMA at the tenant's QoS share of the
+    /// contended bandwidth instead of the per-master equal split.
+    bw_partition: bool,
     /// Per-tenant scheduling counters (admitted / completed /
     /// preempted / rejected).
     per_tenant: BTreeMap<usize, TenantSchedCounters>,
@@ -1403,6 +1437,7 @@ impl SchedCore {
             next_ckpt: 0,
             rejected: Vec::new(),
             tenant_weights: BTreeMap::new(),
+            bw_partition: false,
             per_tenant: BTreeMap::new(),
             scratch_snaps: Vec::new(),
             scratch_tenants: Vec::new(),
@@ -1464,6 +1499,17 @@ impl SchedCore {
 
     pub fn tenant_weight(&self, tenant: usize) -> u32 {
         self.tenant_weights.get(&tenant).copied().unwrap_or(1)
+    }
+
+    /// Enable/disable weighted memory-bandwidth partitioning (default
+    /// off — service times then match the historical equal-split model
+    /// exactly, which the golden decision fixture pins).
+    pub fn set_bw_partition(&mut self, on: bool) {
+        self.bw_partition = on;
+    }
+
+    pub fn bw_partition(&self) -> bool {
+        self.bw_partition
     }
 
     /// Per-tenant scheduling counters, tenant id ascending.
@@ -2337,7 +2383,37 @@ impl SchedCore {
             .position(|&s| s == d.variant)
             .expect("decision for unknown variant");
         let variant = &accel.variants[vi];
-        let mut ns = (self.costs.per_tile_ns(accel, variant, concurrent) * d.tiles as f64) as u64;
+        let per_tile = if self.bw_partition {
+            // Partition the DMA legs by QoS weight over the tenants
+            // with running dispatches (this one counts as active).
+            // Deterministic: the running set is anchor-ordered and
+            // both harnesses call at identical points, so parity holds
+            // with the knob on or off.
+            let weight = self.tenant_weight(d.tenant);
+            let mut active_weight = weight;
+            let mut tenant_masters = 1usize;
+            for (i, s) in self.running.values().enumerate() {
+                if s.tenant == d.tenant {
+                    tenant_masters += 1;
+                } else if !self.running.values().take(i).any(|p| p.tenant == s.tenant) {
+                    // First running dispatch of this foreign tenant
+                    // (the running set is small — bounded by regions —
+                    // so the quadratic scan is cheaper than a set).
+                    active_weight += self.tenant_weight(s.tenant);
+                }
+            }
+            self.costs.per_tile_ns_partitioned(
+                accel,
+                variant,
+                weight,
+                active_weight,
+                tenant_masters,
+                concurrent,
+            )
+        } else {
+            self.costs.per_tile_ns(accel, variant, concurrent)
+        };
+        let mut ns = (per_tile * d.tiles as f64) as u64;
         if d.reconfigure {
             ns += self.costs.reconfig_ns(d.span);
         }

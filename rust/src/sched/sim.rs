@@ -171,6 +171,7 @@ pub fn simulate(catalog: &Catalog, workload: &Workload, cfg: &SimConfig) -> SimR
     // point of the round lifecycle, so a QoS-configured simulation
     // reproduces the daemon's batched-ingest decision sequence.
     let mut admit = AdmissionPipeline::new(cfg.admission);
+    core.set_bw_partition(cfg.admission.bw_partition);
     for &(u, q) in &workload.qos {
         admit.set_qos(u, q);
         core.set_tenant_weight(u, q.weight);
@@ -573,6 +574,7 @@ pub fn simulate_cluster(
     // daemon replays the identical fault sequence (fault parity).
     let mut plan = cfg.faults.clone();
     let mut admit = AdmissionPipeline::new(cfg.admission);
+    cluster.set_bw_partition(cfg.admission.bw_partition);
     for &(u, q) in &workload.qos {
         admit.set_qos(u, q);
         cluster.set_tenant_weight(u, q.weight);

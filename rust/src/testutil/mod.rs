@@ -77,7 +77,7 @@ pub fn alloc_operand_params(
     rpc: &mut crate::daemon::FpgaRpc,
     catalog: &crate::accel::Catalog,
     accel: &str,
-) -> Vec<(String, u64)> {
+) -> Vec<(String, crate::daemon::BufferHandle)> {
     let a = catalog.get(accel).expect("unknown accelerator");
     a.registers
         .iter()

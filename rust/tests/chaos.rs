@@ -314,3 +314,98 @@ fn fault_parity_same_plan_same_seed_same_outcome() {
     );
     assert_eq!(r1.merged, r3.merged, "spec round-trip must replay identically");
 }
+
+#[test]
+fn chaos_live_daemon_isolates_two_authenticated_tenants_across_failover() {
+    // The live half of the security-domain chaos gate: a fixed-seed
+    // fault plan (board-1 outage landing mid-batch) against a real
+    // two-board daemon in authenticated mode, with two token-bound
+    // tenants computing concurrently.  Invariants:
+    //
+    // - a bind with a wrong token is denied (structured, connection
+    //   survives);
+    // - per-tenant conservation holds on the live counters — every
+    //   admitted request completes exactly once across the
+    //   checkpoint-based migration (outage-only plans never reject);
+    // - zero cross-arena leaks: each tenant's inputs re-read intact
+    //   and its outputs are its own arithmetic, while a stolen handle
+    //   from the neighbour is denied even after failover moved work.
+    use fos::daemon::{Daemon, DaemonConfig, FpgaRpc, Job};
+    if !fos::testutil::pjrt_available() {
+        eprintln!("skipping: PJRT backend unavailable (offline stub)");
+        return;
+    }
+    let path = std::env::temp_dir()
+        .join(format!("fos_chaos_live_{}.sock", std::process::id()));
+    let plan = FaultPlan::new(11).with_outage(1, 1_000, 2_000_000);
+    let cfg = DaemonConfig::new(&boards(2), catalog())
+        .placement(PlacementKind::RoundRobin)
+        .faults(plan)
+        .tenants(&["acme", "bigco"]);
+    let d = Daemon::start_configured(&path, cfg).unwrap();
+
+    // Wrong token: denied, structured, and the connection survives.
+    let mut probe = FpgaRpc::connect(&path).unwrap();
+    assert!(probe.set_session("acme", Some("stolen"), 1, 0).is_err());
+    probe.ping().unwrap();
+
+    let worker = |tenant: &'static str, token: String, base: f32, n_jobs: usize| {
+        let path = path.clone();
+        std::thread::spawn(move || {
+            let mut rpc = FpgaRpc::connect(&path).unwrap();
+            let id = rpc.set_session(tenant, Some(&token), 1, 0).unwrap();
+            let n = 4096;
+            let a = rpc.alloc(4 * n).unwrap();
+            let b = rpc.alloc(4 * n).unwrap();
+            let c = rpc.alloc(4 * n).unwrap();
+            rpc.write_f32(a, &vec![base; n]).unwrap();
+            rpc.write_f32(b, &vec![2.0 * base; n]).unwrap();
+            let jobs: Vec<Job> = (0..n_jobs)
+                .map(|_| {
+                    Job::new(
+                        "vadd",
+                        vec![("a_op".into(), a), ("b_op".into(), b), ("c_out".into(), c)],
+                    )
+                })
+                .collect();
+            let report = rpc.run(&jobs).unwrap();
+            assert_eq!(report.latencies_us.len(), n_jobs);
+            // The tenant's own arena after failover/migration: inputs
+            // bit-for-bit intact, output its own sum — not the
+            // neighbour's (who computes with a different base).
+            assert_eq!(rpc.read_f32(a, n).unwrap(), vec![base; n]);
+            let out = rpc.read_f32(c, n).unwrap();
+            assert!(out.iter().all(|&v| (v - 3.0 * base).abs() < 1e-4), "arena leaked");
+            (rpc, id, c)
+        })
+    };
+    let acme = worker("acme", d.tenant_token("acme").unwrap(), 1.0, 8);
+    let bigco = worker("bigco", d.tenant_token("bigco").unwrap(), 10.0, 8);
+    let (mut acme_rpc, acme_id, _) = acme.join().unwrap();
+    let (_bigco_rpc, bigco_id, bigco_out) = bigco.join().unwrap();
+    assert_ne!(acme_id, bigco_id);
+
+    // Cross-arena theft with a live handle, after migration: denied.
+    assert!(acme_rpc.read_f32(bigco_out, 16).is_err());
+
+    // Per-tenant conservation on the live counters: both batches
+    // returned, so every admitted request completed exactly once —
+    // the outage migrated work, it did not lose or duplicate it.
+    let stats = acme_rpc.sched_stats().unwrap();
+    for t in stats
+        .tenants
+        .iter()
+        .filter(|t| t.tenant == acme_id || t.tenant == bigco_id)
+    {
+        assert_eq!(t.enqueued, 8, "tenant {}: {t:?}", t.tenant);
+        assert_eq!(t.admitted, 8, "tenant {}: {t:?}", t.tenant);
+        assert_eq!(t.completed, 8, "tenant {}: {t:?}", t.tenant);
+        assert_eq!(t.sched_rejected, 0, "outage-only plans never reject: {t:?}");
+    }
+    assert_eq!(
+        stats.tenants.iter().filter(|t| t.tenant == acme_id || t.tenant == bigco_id).count(),
+        2,
+        "both tenants accounted: {:?}",
+        stats.tenants
+    );
+}

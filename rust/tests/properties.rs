@@ -350,6 +350,7 @@ fn prop_admission_drr_share_tracks_weights_without_starvation() {
             queue_cap: usize::MAX,
             quantum_tiles: quantum,
             batch_cap: batch,
+            ..AdmissionConfig::default()
         });
         let mut weights = vec![0u32; n];
         let mut job = 0u64;

@@ -348,8 +348,8 @@ fn sim_and_daemon_parity_with_tenant_qos_and_fair_share() {
     // in binding order, matching the simulator's user order).
     let mut t0_rpc = FpgaRpc::connect(&path).unwrap();
     let mut t1_rpc = FpgaRpc::connect(&path).unwrap();
-    assert_eq!(t0_rpc.set_session("mandel-tenant", 2, 2).unwrap(), 0);
-    assert_eq!(t1_rpc.set_session("sobel-tenant", 1, 2).unwrap(), 1);
+    assert_eq!(t0_rpc.set_session("mandel-tenant", None, 2, 2).unwrap(), 0);
+    assert_eq!(t1_rpc.set_session("sobel-tenant", None, 1, 2).unwrap(), 1);
 
     // The threads RETURN their connections so the tenants stay bound
     // (alive) while the per-tenant stats below are read — a dropped

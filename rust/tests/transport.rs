@@ -140,21 +140,28 @@ fn missing_method_is_an_error_reply_not_a_close() {
 fn slow_reader_backpressure_stalls_one_connection_not_the_reactor() {
     let (_d, path) = start("backpressure");
 
-    // Stage 1 MiB of device memory through the normal client.
+    // Stage 1 MiB of device memory through the normal client.  Both
+    // connections bind the same named tenant so the raw reader shares
+    // the setup connection's isolation domain (per-connection anonymous
+    // tenants would otherwise deny the cross-connection read).
     let mut setup = FpgaRpc::connect(&path).unwrap();
+    setup.set_session("bp-tenant", None, 1, 0).unwrap();
     let n_floats = (1usize << 20) / 4;
-    let addr = setup.alloc(1 << 20).unwrap();
+    let handle = setup.alloc(1 << 20).unwrap();
     let xs: Vec<f32> = (0..n_floats).map(|v| v as f32).collect();
-    setup.write_f32(addr, &xs).unwrap();
+    setup.write_f32(handle, &xs).unwrap();
 
     // Ask for all of it on a raw connection and then refuse to read:
     // the ~1.4 MB base64 reply overflows the socket buffer, so the
     // reactor must park the remainder in the connection's write buffer
     // and wait for writability instead of blocking the event loop.
     let mut slow = connect(&path);
+    let bind = obj(vec![("method", s("session")), ("tenant", s("bp-tenant"))]);
+    write_msg(&mut slow, &bind).unwrap();
+    assert_eq!(read_msg(&mut slow).unwrap().get("status").as_str(), Some("ok"));
     let req = obj(vec![
         ("method", s("read")),
-        ("addr", i(addr as i64)),
+        ("handle", i(handle.raw() as i64)),
         ("count", i(n_floats as i64)),
     ]);
     write_msg(&mut slow, &req).unwrap();

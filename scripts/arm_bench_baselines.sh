@@ -7,9 +7,9 @@
 # Run this once on a machine with a Rust toolchain, then commit the
 # rewritten BENCH_BASELINE_*.json files — the regression gate switches
 # from the rolling previous-run comparison to the pinned numbers.
-# Floor-gated benches (perf_round_latency, fig25_connection_scaling)
-# need no baseline; they are still run so the floor checks exercise a
-# real result.
+# Floor-gated benches (perf_round_latency, fig25_connection_scaling,
+# fig26_bw_interference) need no baseline; they are still run so the
+# floor checks exercise a real result.
 #
 # Also (re)arms the golden decision-trace fixture
 # (rust/tests/fixtures/golden_decisions.txt): it self-arms on the first
@@ -22,7 +22,7 @@ export FOS_BENCH_SMOKE=1
 export FOS_BENCH_JSON_DIR="$PWD"
 
 for b in fig22_multitenant fig23_cluster_scaling fig24_admission_throughput \
-         perf_round_latency fig25_connection_scaling; do
+         perf_round_latency fig25_connection_scaling fig26_bw_interference; do
     echo "== $b =="
     cargo bench --manifest-path rust/Cargo.toml --bench "$b"
 done

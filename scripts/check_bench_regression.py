@@ -58,6 +58,11 @@ FLOOR_BENCHES = [
     # ...at no less throughput than the thread-per-connection baseline
     # serving 1k (smoke allows 10% runner noise on the ratio).
     ("fig25_connection_scaling", "reactor_vs_thread_ratio", 1.0, 0.9),
+    # Bandwidth partitioning must keep the latency-QoS tenant's p99
+    # bounded next to a saturating streaming tenant (virtual-time ratio
+    # equal-split/partitioned — deterministic; the 0.9 floor tolerates
+    # scheduling-order shifts, not a broken partition model).
+    ("fig26_bw_interference", "latency_p99_improvement", 0.9, 0.9),
 ]
 
 
