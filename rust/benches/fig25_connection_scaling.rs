@@ -1,33 +1,43 @@
 //! Fig 25: connection scaling of the daemon's reactor network plane.
 //!
-//! Sweeps 1k → 10k concurrent sessions against a live daemon, each
-//! session issuing ping RPCs over its own Unix-domain connection, and
-//! measures requests/second, p99 round-trip latency and peak resident
-//! memory.  A faithful in-bench reproduction of the pre-reactor
-//! architecture — one blocking thread per connection bridging to a
-//! dispatcher channel — is measured at 1k sessions as the baseline.
+//! Sweeps 1k → 100k concurrent sessions (1k → 20k in smoke mode)
+//! against a live daemon — once with a single reactor shard and once
+//! with N shards behind the dedicated acceptor
+//! (`DaemonConfig::reactor_shards`) — each session issuing ping RPCs
+//! over its own Unix-domain connection, measuring requests/second,
+//! p99 round-trip latency and peak resident memory.  RLIMIT_NOFILE is
+//! raised to its hard cap in-bench; levels past the resulting fd
+//! budget are clamped with a logged note.  A faithful in-bench
+//! reproduction of the pre-reactor architecture — one blocking thread
+//! per connection bridging to a dispatcher channel — is measured at
+//! 1k sessions as the baseline, and *skipped with a logged note*
+//! (never a silent pass, never an abort of the sweep) when the fd or
+//! thread budget cannot cover even that.
 //!
 //! The client driver is itself a single multiplexed non-blocking event
 //! loop built on the public `fos::daemon::transport` poller/framing
-//! types, so a 10k-session sweep costs 10k sockets, not 10k threads,
-//! and both the reactor daemon and the thread-per-connection baseline
-//! are driven identically.
+//! types, so a 100k-session sweep costs 100k sockets, not 100k
+//! threads, and the reactor daemon (at any shard count) and the
+//! thread-per-connection baseline are driven identically.
 //!
-//! Emits `BENCH_fig25_connection_scaling.json` with two floor-gated
+//! Emits `BENCH_fig25_connection_scaling.json` with three floor-gated
 //! leaves (`scripts/check_bench_regression.py`):
 //!
 //! * `sessions_sustained` — every session of the largest sweep level
-//!   connected and completed its full ping schedule (floor: 10 000);
-//! * `reactor_vs_thread_ratio` — reactor requests/sec at the largest
-//!   level divided by the thread-per-connection baseline's at 1k
-//!   (floor: the reactor must not be slower than the architecture it
-//!   replaced, despite serving 10x the sessions).
+//!   connected and completed its full ping schedule
+//!   (floor: 100 000 full / 20 000 smoke);
+//! * `nshard_vs_1shard_ratio` — max sessions sustained by the N-shard
+//!   plane divided by the single shard's (floor: 1.0 — sharding must
+//!   never sustain fewer sessions than one reactor);
+//! * `reactor_vs_thread_ratio` — single-shard reactor requests/sec at
+//!   the largest level divided by the thread-per-connection baseline's
+//!   at 1k (floor: the reactor must not be slower than the
+//!   architecture it replaced, despite serving 100x the sessions).
 
 use fos::accel::Catalog;
 use fos::daemon::transport::{Events, FrameBuf, Poller};
-use fos::daemon::{read_msg, write_msg, Daemon};
+use fos::daemon::{read_msg, write_msg, Daemon, DaemonConfig};
 use fos::json::{arr, b, f, i, obj, s, Value};
-use fos::sched::{AdmissionConfig, PlacementKind, Policy};
 use fos::shell::ShellBoard;
 use std::io::{ErrorKind, Read, Write};
 use std::os::fd::AsRawFd;
@@ -358,6 +368,20 @@ impl Drop for ThreadPerConnServer {
     }
 }
 
+/// Conservative estimate of how many more threads this process can
+/// spawn — the thread-per-connection baseline needs one per session.
+/// `usize::MAX` when the kernel does not say.
+fn thread_budget() -> usize {
+    std::fs::read_to_string("/proc/sys/kernel/threads-max")
+        .ok()
+        .and_then(|t| t.trim().parse::<usize>().ok())
+        // threads-max is system-wide and shared with everything else
+        // running: claim at most half, minus slack for the daemon and
+        // driver threads.
+        .map(|max| (max / 2).saturating_sub(64))
+        .unwrap_or(usize::MAX)
+}
+
 fn main() {
     let smoke = fos::testutil::bench_smoke();
     let catalog = Catalog::load_default().expect("run `make artifacts`");
@@ -365,99 +389,173 @@ fn main() {
     // Two fds per session plus slack for the daemon/driver plumbing.
     let fd_budget_sessions = ((limit.saturating_sub(256)) / 2) as usize;
 
-    let levels: &[usize] = if smoke { &[1_000, 10_000] } else { &[1_000, 4_000, 10_000] };
+    let levels: &[usize] =
+        if smoke { &[1_000, 10_000, 20_000] } else { &[1_000, 10_000, 50_000, 100_000] };
     let pings = if smoke { 2 } else { 5 };
-    println!("fd limit {limit} (budget: {fd_budget_sessions} sessions), {pings} pings/session");
+    // The N-shard plane: as many shards as the machine has cores,
+    // bounded to keep the sweep's wall-clock sane (on a 1-core runner
+    // 2 shards still exercises every cross-shard path).
+    let nshard = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2).clamp(2, 4);
+    println!(
+        "fd limit {limit} (budget: {fd_budget_sessions} sessions), {pings} pings/session, \
+         shard sweep 1 vs {nshard}"
+    );
 
     let sock_dir = std::env::temp_dir();
-    let reactor_path = sock_dir.join(format!("fos_fig25_reactor_{}.sock", std::process::id()));
 
-    // --- reactor sweep --------------------------------------------
-    let mut entries: Vec<Value> = Vec::new();
-    let mut sustained = 0usize;
-    let mut reactor_top_rate = 0.0f64;
-    for &want in levels {
-        let sessions = want.min(fd_budget_sessions);
-        if sessions < want {
-            println!("  level {want}: CLAMPED to {sessions} sessions by the fd limit");
+    // --- reactor sweep: 1 shard, then N shards --------------------
+    let mut configs: Vec<Value> = Vec::new();
+    // Per shard-config: (shards, max sessions sustained, top-level rate).
+    let mut outcomes: Vec<(usize, usize, f64)> = Vec::new();
+    for &shards in &[1usize, nshard] {
+        let path =
+            sock_dir.join(format!("fos_fig25_reactor{shards}_{}.sock", std::process::id()));
+        let mut entries: Vec<Value> = Vec::new();
+        let mut sustained = 0usize;
+        let mut top_rate = 0.0f64;
+        for &want in levels {
+            let sessions = want.min(fd_budget_sessions);
+            if sessions < want {
+                println!("  level {want}: CLAMPED to {sessions} sessions by the fd limit");
+            }
+            let cfg = DaemonConfig::new(&[ShellBoard::Ultra96], catalog.clone())
+                .max_connections(sessions + 64)
+                .reactor_shards(shards);
+            let mut daemon = Daemon::start_configured(&path, cfg).expect("daemon start");
+            let r = drive(&path, sessions, pings).expect("reactor drive");
+            daemon.shutdown();
+            let rate = r.replies as f64 / r.elapsed_s;
+            if r.completed_sessions == sessions {
+                sustained = sustained.max(sessions);
+            }
+            top_rate = rate;
+            println!(
+                "  reactor x{shards} {sessions:>6} sessions: {} replies in {:.3} s -> \
+                 {:.0} req/s, p99 {:.1} us, {}/{} completed",
+                r.replies,
+                r.elapsed_s,
+                rate,
+                r.p99_ns as f64 / 1e3,
+                r.completed_sessions,
+                sessions,
+            );
+            entries.push(obj(vec![
+                ("sessions", i(sessions as i64)),
+                ("completed_sessions", i(r.completed_sessions as i64)),
+                ("replies", i(r.replies as i64)),
+                ("reqs_per_sec", f(rate)),
+                ("p99_rtt_ns", f(r.p99_ns as f64)),
+            ]));
         }
-        let mut daemon = Daemon::start_cluster_configured(
-            &reactor_path,
-            &[ShellBoard::Ultra96],
-            catalog.clone(),
-            Policy::Elastic,
-            PlacementKind::Locality,
-            AdmissionConfig::default(),
-            sessions + 64,
-        )
-        .expect("daemon start");
-        let r = drive(&reactor_path, sessions, pings).expect("reactor drive");
-        daemon.shutdown();
-        let rate = r.replies as f64 / r.elapsed_s;
-        if r.completed_sessions == sessions {
-            sustained = sustained.max(sessions);
-        }
-        reactor_top_rate = rate;
-        println!(
-            "  reactor {sessions:>6} sessions: {} replies in {:.3} s -> {:.0} req/s, \
-             p99 {:.1} us, {}/{} completed",
-            r.replies,
-            r.elapsed_s,
-            rate,
-            r.p99_ns as f64 / 1e3,
-            r.completed_sessions,
-            sessions,
-        );
-        entries.push(obj(vec![
-            ("sessions", i(sessions as i64)),
-            ("completed_sessions", i(r.completed_sessions as i64)),
-            ("replies", i(r.replies as i64)),
-            ("reqs_per_sec", f(rate)),
-            ("p99_rtt_ns", f(r.p99_ns as f64)),
+        outcomes.push((shards, sustained, top_rate));
+        configs.push(obj(vec![
+            ("shards", i(shards as i64)),
+            ("max_sessions_sustained", i(sustained as i64)),
+            ("reqs_per_sec_top", f(top_rate)),
+            ("levels", arr(entries)),
         ]));
     }
     let reactor_peak_rss = peak_rss_bytes();
     println!("  reactor peak RSS: {:.1} MiB", reactor_peak_rss as f64 / (1024.0 * 1024.0));
 
-    // --- thread-per-connection baseline at 1k ---------------------
-    let baseline_sessions = 1_000usize.min(fd_budget_sessions);
-    let baseline_path = sock_dir.join(format!("fos_fig25_threads_{}.sock", std::process::id()));
-    let baseline = {
-        let srv = ThreadPerConnServer::start(baseline_path.clone()).expect("baseline start");
-        drive(&srv.path, baseline_sessions, pings).expect("baseline drive")
+    let (_, sustained_1shard, reactor_top_rate) = outcomes[0];
+    let (_, sustained_nshard, _) = outcomes[1];
+    let sustained = sustained_1shard.max(sustained_nshard);
+    // Sessions-based ratio (not throughput): robust on starved CI
+    // runners, and exactly the acceptance claim — N shards must
+    // sustain at least what one shard sustains.
+    let shard_ratio = if sustained_1shard > 0 {
+        sustained_nshard as f64 / sustained_1shard as f64
+    } else {
+        0.0
     };
-    let baseline_rate = baseline.replies as f64 / baseline.elapsed_s;
-    println!(
-        "  threads {baseline_sessions:>6} sessions: {} replies in {:.3} s -> {:.0} req/s, \
-         p99 {:.1} us",
-        baseline.replies,
-        baseline.elapsed_s,
-        baseline_rate,
-        baseline.p99_ns as f64 / 1e3,
-    );
+
+    // --- thread-per-connection baseline at 1k ---------------------
+    // The baseline spends one thread and two fds per session, so it
+    // could never run the 100k sweep — it is measured at 1k, and
+    // skipped with a loud note (never a silent pass, and never an
+    // abort of the whole bench) when even 1k is beyond the fd or
+    // thread budget.
+    let baseline_sessions = 1_000usize;
+    let threads = thread_budget();
+    let mut skip_reason: Option<String> = None;
+    if baseline_sessions > fd_budget_sessions {
+        skip_reason =
+            Some(format!("fd budget covers {fd_budget_sessions} sessions < {baseline_sessions}"));
+    } else if baseline_sessions > threads {
+        skip_reason =
+            Some(format!("thread budget covers {threads} sessions < {baseline_sessions}"));
+    }
+    let baseline = match &skip_reason {
+        Some(_) => None,
+        None => {
+            let baseline_path =
+                sock_dir.join(format!("fos_fig25_threads_{}.sock", std::process::id()));
+            match ThreadPerConnServer::start(baseline_path.clone())
+                .and_then(|srv| drive(&srv.path, baseline_sessions, pings))
+            {
+                Ok(r) => Some(r),
+                Err(e) => {
+                    skip_reason = Some(format!("baseline failed to run: {e}"));
+                    None
+                }
+            }
+        }
+    };
+    let (baseline_rate, baseline_p99_ns) = match &baseline {
+        Some(r) => {
+            let rate = r.replies as f64 / r.elapsed_s;
+            println!(
+                "  threads {baseline_sessions:>6} sessions: {} replies in {:.3} s -> \
+                 {:.0} req/s, p99 {:.1} us",
+                r.replies,
+                r.elapsed_s,
+                rate,
+                r.p99_ns as f64 / 1e3,
+            );
+            (rate, r.p99_ns as f64)
+        }
+        None => {
+            println!(
+                "  threads: BASELINE SKIPPED ({}) — reactor_vs_thread_ratio will be 0 \
+                 and fail its floor; raise the budget to arm the comparison",
+                skip_reason.as_deref().unwrap_or("unknown"),
+            );
+            (0.0, 0.0)
+        }
+    };
     let ratio = if baseline_rate > 0.0 { reactor_top_rate / baseline_rate } else { 0.0 };
     println!(
-        "  sessions sustained: {sustained}; reactor@top vs threads@1k ratio: {ratio:.2}"
+        "  sessions sustained: {sustained} (1-shard {sustained_1shard}, \
+         {nshard}-shard {sustained_nshard}, ratio {shard_ratio:.2}); \
+         reactor@top vs threads@1k ratio: {ratio:.2}"
     );
 
+    let mut baseline_fields = vec![("sessions", i(baseline_sessions as i64))];
+    match &skip_reason {
+        Some(why) => {
+            baseline_fields.push(("skipped", b(true)));
+            baseline_fields.push(("skip_reason", s(why.clone())));
+        }
+        None => {
+            let r = baseline.as_ref().expect("measured unless skipped");
+            baseline_fields.push(("replies", i(r.replies as i64)));
+            baseline_fields.push(("reqs_per_sec", f(baseline_rate)));
+            baseline_fields.push(("p99_rtt_ns", f(baseline_p99_ns)));
+        }
+    }
     let doc = obj(vec![
         ("bench", s("fig25_connection_scaling")),
         ("smoke", b(smoke)),
         ("pings_per_session", i(pings as i64)),
         ("fd_limit", i(limit as i64)),
+        ("reactor_shards", i(nshard as i64)),
         ("sessions_sustained", f(sustained as f64)),
+        ("nshard_vs_1shard_ratio", f(shard_ratio)),
         ("reactor_vs_thread_ratio", f(ratio)),
         ("peak_rss_bytes", f(reactor_peak_rss as f64)),
-        ("reactor", arr(entries)),
-        (
-            "thread_per_conn_baseline",
-            obj(vec![
-                ("sessions", i(baseline_sessions as i64)),
-                ("replies", i(baseline.replies as i64)),
-                ("reqs_per_sec", f(baseline_rate)),
-                ("p99_rtt_ns", f(baseline.p99_ns as f64)),
-            ]),
-        ),
+        ("configs", arr(configs)),
+        ("thread_per_conn_baseline", obj(baseline_fields)),
     ]);
     match fos::testutil::write_bench_json("fig25_connection_scaling", &doc) {
         Ok(p) => println!("wrote {}", p.display()),

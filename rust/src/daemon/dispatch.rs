@@ -6,15 +6,18 @@
 //! multi-region spans, replication across free regions and
 //! backlog-amortised reconfiguration avoidance (§4.4.3).
 //!
-//! Requests reach this module through the event-driven reactor in
-//! [`super::transport`] (non-blocking accept, epoll readiness, slab
-//! connection table), which decodes frames via [`super::session`] and
-//! forwards [`Msg`](super::session) values over the dispatcher
-//! channel.  Replies travel back through a
-//! [`ReplySink`](super::transport::ReplySink), which either answers a
-//! local in-process query channel or enqueues the value on the
-//! originating connection's write buffer and wakes the reactor.  The
-//! wire protocol itself is specified in `rust/src/daemon/PROTOCOL.md`.
+//! Requests reach this module through the event-driven reactor
+//! shard(s) in [`super::transport`] (non-blocking accept, epoll
+//! readiness, per-shard slab connection tables), which decode frames
+//! via [`super::session`] and forward [`Msg`](super::session) values
+//! over the bounded dispatcher ingest channel.  Replies travel back
+//! through a [`ReplySink`](super::transport::ReplySink), which either
+//! answers a local in-process query channel or enqueues the value on
+//! the originating connection's write buffer and wakes the shard that
+//! owns it.  However many shards feed it, the dispatcher itself stays
+//! single-threaded — decision sequences are unchanged by
+//! construction.  The wire protocol itself is specified in
+//! `rust/src/daemon/PROTOCOL.md`.
 //!
 //! The dispatcher keeps a *virtual clock*: each decision's service time
 //! comes from the shared [`crate::sched::CostModel`] and completions
@@ -76,7 +79,7 @@ use super::session::{
     Batch, BatchSink, MemOp, Msg, Ticket, MAX_OPEN_TICKETS,
 };
 use super::shm::SharedMem;
-use super::transport::{Reactor, Waker, DEFAULT_MAX_CONNECTIONS};
+use super::transport::{Acceptor, Reactor, Waker, DEFAULT_MAX_CONNECTIONS, MAX_SHARDS};
 use crate::accel::Catalog;
 use crate::driver::{AccelSnapshot, Cynq, LoadedAccel, PhysAddr, TenantId};
 use crate::json::{arr, i, obj, s, Value};
@@ -90,7 +93,7 @@ use std::collections::{BinaryHeap, HashMap, VecDeque};
 use std::io;
 use std::os::unix::net::UnixListener;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::Instant;
 
@@ -399,6 +402,80 @@ impl AuthState {
     }
 }
 
+/// Failed-auth token bucket: generous enough that an honest client
+/// retyping a token never sees it, tight enough that brute-forcing a
+/// 128-bit bearer token is hopeless.
+const AUTH_FAIL_BURST: f64 = 8.0;
+const AUTH_FAIL_PER_SEC: f64 = 1.0;
+/// Audit-read bucket: the audit RPC walks (a tenant-filtered view of)
+/// the merged decision log, the most expensive read on the control
+/// plane — cap how fast one connection can spin on it.
+const AUDIT_BURST: f64 = 32.0;
+const AUDIT_PER_SEC: f64 = 8.0;
+
+/// One token bucket, refilled continuously by wall-clock time.
+struct CtlBucket {
+    tokens: f64,
+    last: Instant,
+}
+
+impl CtlBucket {
+    fn new(burst: f64) -> CtlBucket {
+        CtlBucket { tokens: burst, last: Instant::now() }
+    }
+
+    /// Take one token; `Err(retry_after_ms)` when the bucket is dry.
+    fn try_take(&mut self, burst: f64, per_sec: f64) -> Result<(), u64> {
+        let now = Instant::now();
+        let refill = now.duration_since(self.last).as_secs_f64() * per_sec;
+        self.tokens = (self.tokens + refill).min(burst);
+        self.last = now;
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            Ok(())
+        } else {
+            Err((((1.0 - self.tokens) / per_sec) * 1000.0).ceil().max(1.0) as u64)
+        }
+    }
+}
+
+/// Control-plane rate limiting, per connection.  Two RPC families an
+/// adversarial client can spin on are bucketed: failed authentication
+/// attempts (`session` binds with a bad token, `register-tenant` with
+/// a bad admin token — successful ones are never charged) and audit
+/// log reads (charged per read).  Exhaustion answers with a structured
+/// `busy{retry_after_ms}` reply instead of servicing the request;
+/// buckets are dropped with the connection's Goodbye.
+#[derive(Default)]
+struct CtlGovernor {
+    auth: HashMap<u64, CtlBucket>,
+    audit: HashMap<u64, CtlBucket>,
+}
+
+impl CtlGovernor {
+    /// Charge a failed authentication attempt by connection `user`.
+    fn charge_auth_fail(&mut self, user: u64) -> Result<(), u64> {
+        self.auth
+            .entry(user)
+            .or_insert_with(|| CtlBucket::new(AUTH_FAIL_BURST))
+            .try_take(AUTH_FAIL_BURST, AUTH_FAIL_PER_SEC)
+    }
+
+    /// Charge an audit-log read by connection `user`.
+    fn charge_audit(&mut self, user: u64) -> Result<(), u64> {
+        self.audit
+            .entry(user)
+            .or_insert_with(|| CtlBucket::new(AUDIT_BURST))
+            .try_take(AUDIT_BURST, AUDIT_PER_SEC)
+    }
+
+    /// The connection closed: drop its buckets.
+    fn forget(&mut self, user: u64) {
+        self.auth.remove(&user);
+        self.audit.remove(&user);
+    }
+}
+
 /// Declarative daemon configuration — the builder behind every
 /// `start_*` constructor.  `tenants` is the authentication switch:
 /// naming tenants here mints a bearer token for each (plus an admin
@@ -410,6 +487,12 @@ pub struct DaemonConfig {
     pub placement: PlacementKind,
     pub admission: AdmissionConfig,
     pub max_connections: usize,
+    /// Number of reactor shards in the network plane.  `1` (the
+    /// default) is the single-threaded reactor — byte-identical to the
+    /// pre-sharding daemon.  `N > 1` spawns a dedicated acceptor thread
+    /// that deals connections round-robin across `N` reactor threads
+    /// (clamped to [`MAX_SHARDS`]).
+    pub reactor_shards: usize,
     pub faults: Option<FaultPlan>,
     /// Tenant names to register at startup with minted tokens;
     /// non-empty switches the daemon into authenticated mode.
@@ -425,6 +508,7 @@ impl DaemonConfig {
             placement: PlacementKind::Locality,
             admission: AdmissionConfig::default(),
             max_connections: DEFAULT_MAX_CONNECTIONS,
+            reactor_shards: 1,
             faults: None,
             tenants: Vec::new(),
         }
@@ -450,6 +534,11 @@ impl DaemonConfig {
         self
     }
 
+    pub fn reactor_shards(mut self, n: usize) -> DaemonConfig {
+        self.reactor_shards = n;
+        self
+    }
+
     pub fn faults(mut self, f: FaultPlan) -> DaemonConfig {
         self.faults = Some(f);
         self
@@ -466,10 +555,12 @@ pub struct Daemon {
     pub socket_path: PathBuf,
     boards: Vec<ShellBoard>,
     stats: Arc<DaemonStats>,
-    tx: mpsc::Sender<Msg>,
+    tx: mpsc::SyncSender<Msg>,
     stop: Arc<AtomicBool>,
-    waker: Waker,
-    reactor_handle: Option<std::thread::JoinHandle<()>>,
+    /// One waker per network-plane thread: every reactor shard plus,
+    /// when sharded, the acceptor.  Shutdown pokes them all.
+    net_wakers: Vec<Waker>,
+    net_handles: Vec<std::thread::JoinHandle<()>>,
     dispatch_handle: Option<std::thread::JoinHandle<()>>,
     /// `Some` iff the daemon runs in authenticated mode.
     auth: Option<Arc<Mutex<AuthState>>>,
@@ -600,7 +691,15 @@ impl Daemon {
 
         let stats = Arc::new(DaemonStats::for_boards(&cfg.boards));
         let stop = Arc::new(AtomicBool::new(false));
-        let (tx, rx) = mpsc::channel::<Msg>();
+        // Bounded ingest: with N shards feeding the one dispatcher the
+        // queue must not become an unbounded buffer under overload.
+        // Capacity covers every admissible connection with one request
+        // in flight plus one parked Goodbye — the write-one-read-one
+        // protocol discipline means a connection never has more than
+        // one decoded message in the queue at a time, so the bound is
+        // never hit in steady state and exists purely as a backstop.
+        let ingest_bound = cfg.max_connections.saturating_mul(2).max(1024);
+        let (tx, rx) = mpsc::sync_channel::<Msg>(ingest_bound);
 
         let auth = if cfg.tenants.is_empty() {
             None
@@ -623,15 +722,66 @@ impl Daemon {
             })?
         };
 
-        // The network plane: one event-driven reactor thread holds
-        // every connection in a slab (no thread per client), polls for
-        // readiness, frames requests into reusable buffers and ships
+        // The network plane: event-driven reactor threads hold every
+        // connection in per-shard slabs (no thread per client), poll
+        // for readiness, frame requests into reusable buffers and ship
         // decoded messages to the dispatcher.  Past `max_connections`
-        // live entries a new client gets a structured busy reject.
-        let (reactor, waker) =
-            Reactor::new(listener, tx.clone(), stats.clone(), stop.clone(), cfg.max_connections)?;
-        let reactor_handle =
-            std::thread::Builder::new().name("fos-reactor".into()).spawn(move || reactor.run())?;
+        // live entries (a global cap shared by all shards) a new
+        // client gets a structured busy reject.
+        let nshards = cfg.reactor_shards.clamp(1, MAX_SHARDS);
+        let mut net_wakers = Vec::new();
+        let mut net_handles = Vec::new();
+        if nshards == 1 {
+            // Single shard: the reactor owns the listener directly —
+            // the pre-sharding topology, byte-identical.
+            let (reactor, waker) = Reactor::new(
+                listener,
+                tx.clone(),
+                stats.clone(),
+                stop.clone(),
+                cfg.max_connections,
+            )?;
+            net_wakers.push(waker);
+            net_handles.push(
+                std::thread::Builder::new()
+                    .name("fos-reactor".into())
+                    .spawn(move || reactor.run())?,
+            );
+        } else {
+            // N shards: a dedicated acceptor owns the listener and
+            // deals accepted streams round-robin into per-shard
+            // handoff rings; each shard admits from its ring.  The
+            // live-connection cap is shared across shards.
+            let live = Arc::new(AtomicUsize::new(0));
+            let mut acceptor_lanes = Vec::with_capacity(nshards);
+            for shard in 0..nshards {
+                let (htx, hrx) = mpsc::channel();
+                let (reactor, waker) = Reactor::shard(
+                    shard,
+                    nshards,
+                    hrx,
+                    tx.clone(),
+                    stats.clone(),
+                    stop.clone(),
+                    cfg.max_connections,
+                    live.clone(),
+                )?;
+                acceptor_lanes.push((htx, waker.clone()));
+                net_wakers.push(waker);
+                net_handles.push(
+                    std::thread::Builder::new()
+                        .name(format!("fos-reactor-{shard}"))
+                        .spawn(move || reactor.run())?,
+                );
+            }
+            let (acceptor, acceptor_waker) = Acceptor::new(listener, acceptor_lanes, stop.clone())?;
+            net_wakers.push(acceptor_waker);
+            net_handles.push(
+                std::thread::Builder::new()
+                    .name("fos-acceptor".into())
+                    .spawn(move || acceptor.run())?,
+            );
+        }
 
         Ok(Daemon {
             socket_path,
@@ -639,8 +789,8 @@ impl Daemon {
             stats,
             tx,
             stop,
-            waker,
-            reactor_handle: Some(reactor_handle),
+            net_wakers,
+            net_handles,
             dispatch_handle: Some(dispatch_handle),
             auth,
         })
@@ -709,12 +859,15 @@ impl Daemon {
 
     pub fn shutdown(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
-        // Wake the reactor's poll wait: it re-checks the stop flag at
-        // the top of every loop, closes every connection (emitting
-        // their Goodbyes) and exits — all before the dispatcher sees
+        // Wake every network-plane thread's poll wait (each shard plus
+        // the acceptor when sharded): they re-check the stop flag at
+        // the top of every loop, close their connections (emitting
+        // their Goodbyes) and exit — all before the dispatcher sees
         // Stop, so no slot retirement is lost.
-        self.waker.wake_force();
-        if let Some(h) = self.reactor_handle.take() {
+        for w in &self.net_wakers {
+            w.wake_force();
+        }
+        for h in self.net_handles.drain(..) {
             let _ = h.join();
         }
         let _ = self.tx.send(Msg::Stop);
@@ -856,6 +1009,9 @@ fn dispatcher(
     // Tenant identity: named tenants (the `session` RPC) share an id
     // across connections; anonymous connections get a private one.
     let mut tenants = TenantDirectory::new();
+    // Per-connection control-plane rate limits (failed auth attempts,
+    // audit reads) — see [`CtlGovernor`].
+    let mut ctl = CtlGovernor::default();
     // The tenant-scoped buffer table: every client-visible buffer
     // lives here, keyed by opaque generational handle.
     let mut bufs = BufTable::new();
@@ -954,6 +1110,7 @@ fn dispatcher(
                 &mut tenants,
                 &mut bufs,
                 &auth,
+                &mut ctl,
                 &symbols,
             ) else {
                 continue;
@@ -1014,6 +1171,7 @@ fn dispatcher(
                     // Unclaimed tickets of the departed connection.
                     tickets.retain(|_, t| t.user != user);
                     open_tickets.remove(&user);
+                    ctl.forget(user);
                 }
                 Msg::Session { user, tenant, token, weight, max_inflight, reply } => {
                     // Authenticated mode: a bind must present the
@@ -1027,9 +1185,16 @@ fn dispatcher(
                             .get(&tenant)
                             .is_some_and(|t| token.as_deref() == Some(t.as_str()));
                         if !good {
-                            reply.send(denied_val(&format!(
-                                "tenant bind denied: bad or missing token for {tenant:?}"
-                            )));
+                            // Failed binds are rate-limited per
+                            // connection: past the burst a brute-force
+                            // loop sees `busy{retry_after_ms}`, not
+                            // another oracle answer.
+                            reply.send(match ctl.charge_auth_fail(user) {
+                                Ok(()) => denied_val(&format!(
+                                    "tenant bind denied: bad or missing token for {tenant:?}"
+                                )),
+                                Err(ms) => busy_val("too many failed session binds", ms),
+                            });
                             continue;
                         }
                     }
@@ -1580,6 +1745,7 @@ fn dispatcher(
                         &mut tenants,
                         &mut bufs,
                         &auth,
+                        &mut ctl,
                         &symbols,
                     ) {
                         None => {}
@@ -1957,6 +2123,7 @@ fn handle_cheap(
     tenants: &mut TenantDirectory,
     bufs: &mut BufTable,
     auth: &Option<Arc<Mutex<AuthState>>>,
+    ctl: &mut CtlGovernor,
     symbols: &SymbolTable,
 ) -> Option<Msg> {
     match msg {
@@ -1974,7 +2141,7 @@ fn handle_cheap(
             }
             reply.send(ok(fields));
         }
-        Msg::RegisterTenant { admin_token, name, reply } => {
+        Msg::RegisterTenant { user, admin_token, name, reply } => {
             let v = match auth {
                 // Open mode has no admin token, so nothing can gate
                 // minting — refuse rather than hand out tokens that
@@ -1983,7 +2150,13 @@ fn handle_cheap(
                 Some(a) => {
                     let mut a = a.lock().unwrap();
                     if admin_token != a.admin {
-                        denied_val("register-tenant denied: bad admin token")
+                        // Shares the per-connection failed-auth bucket
+                        // with `session` binds: admin-token guessing is
+                        // still auth guessing.
+                        match ctl.charge_auth_fail(user) {
+                            Ok(()) => denied_val("register-tenant denied: bad admin token"),
+                            Err(ms) => busy_val("too many failed auth attempts", ms),
+                        }
                     } else {
                         let tok = a.mint();
                         a.tokens.insert(name.clone(), tok.clone());
@@ -1994,6 +2167,13 @@ fn handle_cheap(
             reply.send(v);
         }
         Msg::Audit { user, limit, reply } => {
+            // Every audit read is charged: the log walk below is the
+            // control plane's most expensive read and must not become
+            // a per-connection busy loop.
+            if let Err(ms) = ctl.charge_audit(user) {
+                reply.send(busy_val("audit rate limit exceeded", ms));
+                return None;
+            }
             // Per-tenant filtered view of the merged decision log: a
             // tenant sees its own placements (board, anchor, kind,
             // timing inputs) and nothing of its neighbours'.

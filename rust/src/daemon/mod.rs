@@ -21,6 +21,11 @@
 //!   portable poller), connection state in a generational slab instead
 //!   of a thread each, zero-copy frame reassembly into reusable
 //!   per-connection buffers, and backpressure-aware write flushing.
+//!   Runs as one reactor thread by default, or sharded across N
+//!   ([`DaemonConfig::reactor_shards`], `fos daemon --reactor-shards`):
+//!   a dedicated acceptor deals connections round-robin to per-shard
+//!   reactors whose slab keys carry the shard id, all feeding the one
+//!   dispatcher through a bounded ingest queue.
 //! - `session` — the per-connection RPC surface: request decoding,
 //!   tenant binding with QoS refcounting, the async ticket store and
 //!   the structured `ok`/`err`/`busy` reply vocabulary.

@@ -64,6 +64,7 @@ pub(crate) enum Msg {
     /// Mint (or re-mint) a tenant token — the control-plane
     /// registration RPC, itself gated by the daemon's admin token.
     RegisterTenant {
+        user: u64,
         admin_token: String,
         name: String,
         reply: ReplySink,
@@ -252,7 +253,7 @@ pub(crate) fn decode_request(user: u64, msg: &Value, reply: ReplySink) -> Decode
                 Err(e) => return Decoded::Immediate(err_val(&e)),
                 Ok(t) => t.to_string(),
             };
-            Msg::RegisterTenant { admin_token, name, reply }
+            Msg::RegisterTenant { user, admin_token, name, reply }
         }
         "audit" => {
             let limit = msg.get("limit").as_u64().map(|n| n as usize);

@@ -1,12 +1,36 @@
-//! Event-driven network plane: the daemon's reactor.
+//! Event-driven network plane: the daemon's reactor, shardable across
+//! cores.
 //!
-//! One thread owns every client connection.  A [`Poller`] (epoll(7) on
-//! Linux, poll(2) elsewhere) reports readiness; connection state lives
-//! in a generational [`Slab`] keyed by a `u64` token instead of a
-//! thread per client; requests assemble zero-copy inside a reusable
+//! One reactor thread (or N of them — `fos daemon --reactor-shards N`)
+//! owns the client connections.  Each shard has its own [`Poller`]
+//! (epoll(7) on Linux, poll(2) elsewhere), its own generational
+//! [`Slab`] of connection state keyed by a `u64` token instead of a
+//! thread per client, its own frame-reassembly buffers and its own
+//! waker; requests assemble zero-copy inside a reusable
 //! per-connection [`FrameBuf`]; replies batch into a per-connection
 //! write buffer flushed as far as the kernel will take it, with the
 //! remainder waiting on the next writable event.
+//!
+//! ## Sharding (N > 1)
+//!
+//! Unix sockets have no SO_REUSEPORT-style accept balancing, so a
+//! dedicated `Acceptor` thread owns the listener and deals accepted
+//! streams round-robin into per-shard handoff rings (an mpsc channel
+//! each), poking the target shard's waker.  Every shard feeds the
+//! *single* dispatcher thread through one bounded MPSC ingest queue
+//! ([`std::sync::mpsc::SyncSender`]); replies route back to the owning
+//! shard because each shard mints `ReplySink`s carrying its own
+//! reply channel and waker.  The dispatcher and the virtual-time
+//! completion heap stay single-threaded and byte-identical — sharding
+//! moves socket work onto more cores, never scheduling decisions.
+//!
+//! Tokens stay globally unique across shards: the shard id is folded
+//! into the top [`SHARD_BITS`] bits of every slab key, and connection
+//! `user` ids are strided (`shard + k * nshards`), so a stale reply
+//! can neither hit a recycled slot (generation check) nor another
+//! shard's slot (tag check).  With one shard (the default) the tag is
+//! zero and the layout — like every observable behaviour — is exactly
+//! the single-reactor daemon's.
 //!
 //! The wire protocol the reactor frames is specified in
 //! `rust/src/daemon/PROTOCOL.md`, and the RPC semantics are
@@ -34,7 +58,7 @@
 use std::io::{self, Read, Write};
 use std::os::unix::io::{AsRawFd, RawFd};
 use std::os::unix::net::{UnixListener, UnixStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
 
 use super::dispatch::DaemonStats;
@@ -44,8 +68,29 @@ use crate::json::Value;
 
 /// Connection-table cap of the default configuration: past this many
 /// live connections the reactor sheds new clients with a structured
-/// busy reject instead of growing the slab without bound.
+/// busy reject instead of growing the slab without bound.  With
+/// reactor shards the cap is global — enforced over the shards' summed
+/// live counts, not per shard.
 pub const DEFAULT_MAX_CONNECTIONS: usize = 256;
+
+/// Bits at the top of every slab key that carry the owning shard's id,
+/// keeping connection tokens globally unique across reactor shards.
+/// The generation below shrinks to [`EPOCH_BITS`] bits to make room;
+/// both a stale generation *and* a foreign shard tag make a key miss.
+pub const SHARD_BITS: u32 = 8;
+
+/// Hard cap on `--reactor-shards` implied by [`SHARD_BITS`] (the two
+/// reserved control tokens live at the very top of the key space, so
+/// the last tag value is unusable).
+pub const MAX_SHARDS: usize = (1 << SHARD_BITS) - 1;
+
+/// Bits of per-slot generation left under the shard tag.  16M
+/// generations per slot before wrap — the wrap is harmless unless a
+/// reply outlives 2^24 reconnects of one slot, which the one-in-flight
+/// discipline makes impossible.
+pub const EPOCH_BITS: u32 = 32 - SHARD_BITS;
+
+const EPOCH_MASK: u32 = (1 << EPOCH_BITS) - 1;
 
 /// Socket read granularity (and the minimum spare tail a [`FrameBuf`]
 /// guarantees).
@@ -392,19 +437,39 @@ struct Slot<T> {
 }
 
 /// Generational slab: dense storage addressed by a `u64` key carrying
-/// the slot index in the low 32 bits and the slot's generation in the
-/// high 32.  Removing an entry bumps the generation, so a stale key —
-/// say, a dispatcher reply for a connection that died while its request
-/// was in flight — misses instead of landing on a recycled slot.
+/// the slot index in the low 32 bits, the slot's generation in the
+/// next [`EPOCH_BITS`], and the owning shard's tag in the top
+/// [`SHARD_BITS`].  Removing an entry bumps the generation, so a stale
+/// key — say, a dispatcher reply for a connection that died while its
+/// request was in flight — misses instead of landing on a recycled
+/// slot; a key minted by another shard's slab misses on the tag even
+/// if index and generation happen to line up.  [`Slab::new`] tags with
+/// shard 0, which reproduces the pre-sharding key layout bit-for-bit
+/// until a slot's generation first exceeds 2^24.
 pub struct Slab<T> {
     slots: Vec<Slot<T>>,
     free: Vec<u32>,
     live: usize,
+    /// Shard tag pre-shifted into key position (bits 56..64).
+    tag: u64,
 }
 
 impl<T> Slab<T> {
     pub fn new() -> Slab<T> {
-        Slab { slots: Vec::new(), free: Vec::new(), live: 0 }
+        Slab::with_shard(0)
+    }
+
+    /// A slab whose keys carry `shard` in their top [`SHARD_BITS`]
+    /// bits.  Panics past [`MAX_SHARDS`] — the reserved control tokens
+    /// (`u64::MAX`, `u64::MAX - 1`) live in the last tag's key space.
+    pub fn with_shard(shard: usize) -> Slab<T> {
+        assert!(shard < MAX_SHARDS, "shard {shard} exceeds MAX_SHARDS ({MAX_SHARDS})");
+        Slab {
+            slots: Vec::new(),
+            free: Vec::new(),
+            live: 0,
+            tag: (shard as u64) << (32 + EPOCH_BITS),
+        }
     }
 
     /// Number of live entries.
@@ -416,11 +481,16 @@ impl<T> Slab<T> {
         self.live == 0
     }
 
-    fn split(key: u64) -> (u32, usize) {
-        ((key >> 32) as u32, (key & 0xffff_ffff) as usize)
+    /// Decompose a key into `(tag, epoch, idx)`.
+    fn split(key: u64) -> (u64, u32, usize) {
+        (
+            key >> (32 + EPOCH_BITS) << (32 + EPOCH_BITS),
+            ((key >> 32) as u32) & EPOCH_MASK,
+            (key & 0xffff_ffff) as usize,
+        )
     }
 
-    /// Insert, returning the entry's generational key.
+    /// Insert, returning the entry's generational, shard-tagged key.
     pub fn insert(&mut self, val: T) -> u64 {
         let idx = match self.free.pop() {
             Some(i) => i as usize,
@@ -431,21 +501,27 @@ impl<T> Slab<T> {
         };
         self.slots[idx].val = Some(val);
         self.live += 1;
-        ((self.slots[idx].epoch as u64) << 32) | idx as u64
+        self.tag | (((self.slots[idx].epoch & EPOCH_MASK) as u64) << 32) | idx as u64
     }
 
     pub fn get(&self, key: u64) -> Option<&T> {
-        let (epoch, idx) = Self::split(key);
+        let (tag, epoch, idx) = Self::split(key);
+        if tag != self.tag {
+            return None;
+        }
         match self.slots.get(idx) {
-            Some(slot) if slot.epoch == epoch => slot.val.as_ref(),
+            Some(slot) if slot.epoch & EPOCH_MASK == epoch => slot.val.as_ref(),
             _ => None,
         }
     }
 
     pub fn get_mut(&mut self, key: u64) -> Option<&mut T> {
-        let (epoch, idx) = Self::split(key);
+        let (tag, epoch, idx) = Self::split(key);
+        if tag != self.tag {
+            return None;
+        }
         match self.slots.get_mut(idx) {
-            Some(slot) if slot.epoch == epoch => slot.val.as_mut(),
+            Some(slot) if slot.epoch & EPOCH_MASK == epoch => slot.val.as_mut(),
             _ => None,
         }
     }
@@ -453,9 +529,12 @@ impl<T> Slab<T> {
     /// Remove an entry; its slot's generation bumps so the key (and any
     /// stale copy of it) misses forever after.
     pub fn remove(&mut self, key: u64) -> Option<T> {
-        let (epoch, idx) = Self::split(key);
+        let (tag, epoch, idx) = Self::split(key);
+        if tag != self.tag {
+            return None;
+        }
         let slot = self.slots.get_mut(idx)?;
-        if slot.epoch != epoch || slot.val.is_none() {
+        if slot.epoch & EPOCH_MASK != epoch || slot.val.is_none() {
             return None;
         }
         let v = slot.val.take();
@@ -720,56 +799,137 @@ enum Step {
     Close,
 }
 
-/// The daemon's event loop: accepts, frames, decodes and forwards
+/// Drain a waker's self-wake pipe and disarm it so the next wake
+/// writes a fresh byte.
+fn drain_wake_pipe(rx: &UnixStream, waker: &Waker) {
+    let mut buf = [0u8; 64];
+    loop {
+        match (&*rx).read(&mut buf) {
+            Ok(0) => break,
+            Ok(_) => continue,
+            Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => break,
+            Err(ref e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(_) => break,
+        }
+    }
+    waker.disarm();
+}
+
+/// One shard of the daemon's event loop: frames, decodes and forwards
 /// requests to the dispatcher thread, and flushes its replies — all on
-/// one thread, one epoll set, zero threads per connection.
+/// one thread, one epoll set, zero threads per connection.  The
+/// single-shard daemon (`--reactor-shards 1`, the default) runs one of
+/// these owning the listener directly; with N > 1 shards each owns
+/// only its connections and receives accepted streams over a handoff
+/// ring from the dedicated [`Acceptor`].
 pub(crate) struct Reactor {
     poller: Poller,
-    listener: UnixListener,
+    /// The listening socket — `Some` only on the single-shard path
+    /// (with N shards the `Acceptor` owns it).
+    listener: Option<UnixListener>,
+    /// Accept-handoff ring from the `Acceptor` — `Some` only when
+    /// sharded; the acceptor pokes this shard's waker after pushing.
+    handoff: Option<mpsc::Receiver<UnixStream>>,
     waker_rx: UnixStream,
     waker: Waker,
     conns: Slab<Conn>,
-    tx: mpsc::Sender<Msg>,
+    tx: mpsc::SyncSender<Msg>,
     reply_tx: mpsc::Sender<(u64, Value)>,
     reply_rx: mpsc::Receiver<(u64, Value)>,
     stats: Arc<DaemonStats>,
     stop: Arc<AtomicBool>,
     max_connections: usize,
+    /// Live connections summed over every shard — the connection cap
+    /// is global, not per shard.
+    live: Arc<AtomicUsize>,
     next_user: u64,
+    /// `nshards`: striding keeps `user` ids globally unique without
+    /// cross-shard coordination (shard s mints s, s+N, s+2N, …).
+    user_stride: u64,
 }
 
 impl Reactor {
-    /// Wire up the reactor around a bound listener.  Returns the
-    /// [`Waker`] handle `Daemon::shutdown` pokes.
+    /// Wire up a single-shard reactor around a bound listener — the
+    /// default daemon topology, byte-identical to the pre-sharding
+    /// reactor.  Returns the [`Waker`] handle `Daemon::shutdown` pokes.
     pub fn new(
         listener: UnixListener,
-        tx: mpsc::Sender<Msg>,
+        tx: mpsc::SyncSender<Msg>,
         stats: Arc<DaemonStats>,
         stop: Arc<AtomicBool>,
         max_connections: usize,
     ) -> io::Result<(Reactor, Waker)> {
         listener.set_nonblocking(true)?;
+        Self::build(
+            Some(listener),
+            None,
+            0,
+            1,
+            tx,
+            stats,
+            stop,
+            max_connections,
+            Arc::new(AtomicUsize::new(0)),
+        )
+    }
+
+    /// Wire up shard `shard` of an N-shard reactor plane: no listener
+    /// (accepted streams arrive over `handoff` from the [`Acceptor`]),
+    /// slab keys tagged with the shard id, user ids strided by
+    /// `nshards`, and the connection cap enforced against the shared
+    /// `live` count.
+    #[allow(clippy::too_many_arguments)]
+    pub fn shard(
+        shard: usize,
+        nshards: usize,
+        handoff: mpsc::Receiver<UnixStream>,
+        tx: mpsc::SyncSender<Msg>,
+        stats: Arc<DaemonStats>,
+        stop: Arc<AtomicBool>,
+        max_connections: usize,
+        live: Arc<AtomicUsize>,
+    ) -> io::Result<(Reactor, Waker)> {
+        Self::build(None, Some(handoff), shard, nshards, tx, stats, stop, max_connections, live)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn build(
+        listener: Option<UnixListener>,
+        handoff: Option<mpsc::Receiver<UnixStream>>,
+        shard: usize,
+        nshards: usize,
+        tx: mpsc::SyncSender<Msg>,
+        stats: Arc<DaemonStats>,
+        stop: Arc<AtomicBool>,
+        max_connections: usize,
+        live: Arc<AtomicUsize>,
+    ) -> io::Result<(Reactor, Waker)> {
         let (wtx, wrx) = UnixStream::pair()?;
         wtx.set_nonblocking(true)?;
         wrx.set_nonblocking(true)?;
         let waker = Waker::new(wtx);
         let mut poller = Poller::new()?;
-        poller.register(listener.as_raw_fd(), LISTENER_TOKEN, true, false)?;
+        if let Some(l) = &listener {
+            poller.register(l.as_raw_fd(), LISTENER_TOKEN, true, false)?;
+        }
         poller.register(wrx.as_raw_fd(), WAKER_TOKEN, true, false)?;
         let (reply_tx, reply_rx) = mpsc::channel();
         let reactor = Reactor {
             poller,
             listener,
+            handoff,
             waker_rx: wrx,
             waker: waker.clone(),
-            conns: Slab::new(),
+            conns: Slab::with_shard(shard),
             tx,
             reply_tx,
             reply_rx,
             stats,
             stop,
             max_connections,
-            next_user: 0,
+            live,
+            next_user: shard as u64,
+            user_stride: nshards as u64,
         };
         Ok((reactor, waker))
     }
@@ -787,7 +947,10 @@ impl Reactor {
                 let ev = events.get(k);
                 match ev.token {
                     LISTENER_TOKEN => self.accept_ready(),
-                    WAKER_TOKEN => self.drain_waker(),
+                    WAKER_TOKEN => {
+                        drain_wake_pipe(&self.waker_rx, &self.waker);
+                        self.drain_handoff();
+                    }
                     key => self.conn_event(key, ev.readable, ev.writable),
                 }
             }
@@ -795,28 +958,50 @@ impl Reactor {
         }
         // Shutdown: close every connection; the dispatcher hears one
         // Goodbye each, so per-user scheduler slots retire normally.
+        // Streams still parked in the handoff ring were never admitted
+        // (no user id, no slab slot) — dropping them is a clean EOF.
+        if let Some(rx) = self.handoff.take() {
+            while rx.try_recv().is_ok() {}
+        }
         for conn in self.conns.drain() {
+            self.live.fetch_sub(1, Ordering::AcqRel);
             let _ = self.tx.send(Msg::Goodbye { user: conn.user });
         }
     }
 
     fn accept_ready(&mut self) {
+        let Some(listener) = self.listener.take() else { return };
         loop {
-            match self.listener.accept() {
+            match listener.accept() {
                 Ok((stream, _)) => self.admit(stream),
                 Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => break,
                 Err(ref e) if e.kind() == io::ErrorKind::Interrupted => continue,
                 Err(_) => break,
             }
         }
+        self.listener = Some(listener);
+    }
+
+    /// Pull every accepted stream the [`Acceptor`] handed this shard
+    /// since the last wake.  No-op on the single-shard path.
+    fn drain_handoff(&mut self) {
+        let Some(rx) = self.handoff.take() else { return };
+        while let Ok(stream) = rx.try_recv() {
+            self.admit(stream);
+        }
+        self.handoff = Some(rx);
     }
 
     /// Admit or shed one accepted connection.  At the cap the client
     /// gets a best-effort `Busy { retry_after_ms: 50 }` frame and an
     /// immediate close — the same contract the thread-per-connection
-    /// server honoured.
+    /// server honoured.  The cap is checked against the cross-shard
+    /// `live` sum (reserve-then-verify, so concurrent shards can
+    /// transiently reserve past the cap but never *keep* an admission
+    /// beyond it).
     fn admit(&mut self, stream: UnixStream) {
-        if self.conns.len() >= self.max_connections {
+        if self.live.fetch_add(1, Ordering::AcqRel) >= self.max_connections {
+            self.live.fetch_sub(1, Ordering::AcqRel);
             self.stats.connections_shed.fetch_add(1, Ordering::Relaxed);
             let max = self.max_connections;
             let v = busy_val(&format!("daemon at connection capacity ({max})"), 50);
@@ -828,10 +1013,11 @@ impl Reactor {
             return; // dropping the stream closes the client
         }
         if stream.set_nonblocking(true).is_err() {
+            self.live.fetch_sub(1, Ordering::AcqRel);
             return;
         }
         let user = self.next_user;
-        self.next_user += 1;
+        self.next_user += self.user_stride;
         let key = self.conns.insert(Conn::new(stream, user));
         let fd = match self.conns.get(key) {
             Some(c) => c.stream.as_raw_fd(),
@@ -839,25 +1025,12 @@ impl Reactor {
         };
         if self.poller.register(fd, key, true, false).is_err() {
             self.conns.remove(key);
+            self.live.fetch_sub(1, Ordering::AcqRel);
             return;
         }
         if let Some(c) = self.conns.get_mut(key) {
             c.interest = Some((true, false));
         }
-    }
-
-    fn drain_waker(&mut self) {
-        let mut buf = [0u8; 64];
-        loop {
-            match (&self.waker_rx).read(&mut buf) {
-                Ok(0) => break,
-                Ok(_) => continue,
-                Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => break,
-                Err(ref e) if e.kind() == io::ErrorKind::Interrupted => continue,
-                Err(_) => break,
-            }
-        }
-        self.waker.disarm();
     }
 
     fn conn_event(&mut self, key: u64, readable: bool, writable: bool) {
@@ -1102,10 +1275,99 @@ impl Reactor {
     /// tenant-refcount cleanup).
     fn close(&mut self, key: u64) {
         if let Some(conn) = self.conns.remove(key) {
+            self.live.fetch_sub(1, Ordering::AcqRel);
             if conn.interest.is_some() {
                 let _ = self.poller.deregister(conn.stream.as_raw_fd());
             }
             let _ = self.tx.send(Msg::Goodbye { user: conn.user });
+        }
+    }
+}
+
+/// The dedicated accept thread of an N-shard reactor plane
+/// (`--reactor-shards N`, N > 1).  Unix sockets have no
+/// SO_REUSEPORT-style kernel accept balancing, so this owns the
+/// listener outright and deals each accepted stream round-robin into a
+/// shard's handoff ring, then pokes that shard's waker.  Admission —
+/// the global connection cap, the busy-shed frame, user-id minting —
+/// happens on the owning shard, exactly where it happens on the
+/// single-shard path.
+pub(crate) struct Acceptor {
+    poller: Poller,
+    listener: UnixListener,
+    waker_rx: UnixStream,
+    waker: Waker,
+    /// One handoff ring + waker per shard, dealt round-robin.
+    shards: Vec<(mpsc::Sender<UnixStream>, Waker)>,
+    next: usize,
+    stop: Arc<AtomicBool>,
+}
+
+impl Acceptor {
+    /// Wire the acceptor around the bound listener.  Returns the
+    /// [`Waker`] `Daemon::shutdown` pokes to break the poll wait.
+    pub fn new(
+        listener: UnixListener,
+        shards: Vec<(mpsc::Sender<UnixStream>, Waker)>,
+        stop: Arc<AtomicBool>,
+    ) -> io::Result<(Acceptor, Waker)> {
+        assert!(!shards.is_empty());
+        listener.set_nonblocking(true)?;
+        let (wtx, wrx) = UnixStream::pair()?;
+        wtx.set_nonblocking(true)?;
+        wrx.set_nonblocking(true)?;
+        let waker = Waker::new(wtx);
+        let mut poller = Poller::new()?;
+        poller.register(listener.as_raw_fd(), LISTENER_TOKEN, true, false)?;
+        poller.register(wrx.as_raw_fd(), WAKER_TOKEN, true, false)?;
+        let acceptor = Acceptor {
+            poller,
+            listener,
+            waker_rx: wrx,
+            waker: waker.clone(),
+            shards,
+            next: 0,
+            stop,
+        };
+        Ok((acceptor, waker))
+    }
+
+    /// Run until the stop flag is raised (and the waker poked).
+    pub fn run(mut self) {
+        let mut events = Events::with_capacity(64);
+        while !self.stop.load(Ordering::SeqCst) {
+            match self.poller.wait(&mut events, -1) {
+                Ok(_) => {}
+                Err(ref e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => break,
+            }
+            for k in 0..events.len() {
+                match events.get(k).token {
+                    LISTENER_TOKEN => self.accept_ready(),
+                    WAKER_TOKEN => drain_wake_pipe(&self.waker_rx, &self.waker),
+                    _ => {}
+                }
+            }
+        }
+    }
+
+    fn accept_ready(&mut self) {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    let (tx, waker) = &self.shards[self.next];
+                    self.next = (self.next + 1) % self.shards.len();
+                    // A shard that already exited dropped its ring
+                    // receiver; the stream drops with the failed send
+                    // and the client sees a clean EOF (shutdown only).
+                    if tx.send(stream).is_ok() {
+                        waker.wake();
+                    }
+                }
+                Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(ref e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => break,
+            }
         }
     }
 }
@@ -1210,6 +1472,41 @@ mod tests {
         assert!(slab.remove(a).is_none(), "stale remove is a no-op");
         assert_eq!(slab.get(b), Some(&"b"));
         assert_eq!(slab.len(), 1);
+    }
+
+    #[test]
+    fn slab_shard_tag_keeps_tokens_globally_unique() {
+        let mut s0: Slab<&str> = Slab::with_shard(0);
+        let mut s1: Slab<&str> = Slab::with_shard(1);
+        let k0 = s0.insert("zero");
+        let k1 = s1.insert("one");
+        assert_eq!(k0 & 0xffff_ffff, k1 & 0xffff_ffff, "same slot index on both shards");
+        assert_ne!(k0, k1, "shard tag separates the keys");
+        assert_eq!(k1 >> (32 + EPOCH_BITS), 1, "tag rides the top bits");
+        // Cross-shard lookups miss on the tag even though index and
+        // generation line up exactly.
+        assert!(s0.get(k1).is_none());
+        assert!(s1.get(k0).is_none());
+        assert!(s1.remove(k0).is_none(), "foreign-shard remove is a no-op");
+        assert_eq!(s1.len(), 1);
+        // Recycling a slot through several generations never mints
+        // another shard's key.
+        assert_eq!(s1.remove(k1), Some("one"));
+        for _ in 0..8 {
+            let k = s1.insert("again");
+            assert_ne!(k, k0);
+            assert_eq!(k >> (32 + EPOCH_BITS), 1, "tag survives slot recycling");
+            assert_eq!(s1.remove(k), Some("again"));
+        }
+        // Shard 0 keys reproduce the pre-sharding layout (tag = 0).
+        assert_eq!(k0 >> (32 + EPOCH_BITS), 0);
+        assert_eq!(s0.get(k0), Some(&"zero"));
+    }
+
+    #[test]
+    fn slab_with_shard_rejects_out_of_range_ids() {
+        assert!(std::panic::catch_unwind(|| Slab::<u8>::with_shard(MAX_SHARDS)).is_err());
+        let _ok: Slab<u8> = Slab::with_shard(MAX_SHARDS - 1);
     }
 
     #[test]

@@ -7,6 +7,7 @@
 //!            [--boards B1,B2,...] [--placement round-robin|least-loaded|locality]
 //!            [--policy elastic|fixed|quantum|elastic-pre|fair]
 //!            [--queue-cap N] [--quantum-tiles N] [--max-conns N]
+//!            [--reactor-shards N]
 //!            [--fault-plan SPEC] [--tenants T1,T2,...] [--bw-partition]
 //! fos run    [--socket PATH] --accel NAME [--requests N]
 //!            [--tenant NAME] [--token TOK] [--weight W] [--max-inflight N] [--async]
@@ -19,7 +20,10 @@
 //! requests across boards (default: locality).  `--queue-cap` /
 //! `--quantum-tiles` tune the tenant-aware admission pipeline (bounded
 //! per-tenant queues with structured busy backpressure; finite quantum
-//! arms weighted DRR ingest), `--max-conns` caps the connection table.
+//! arms weighted DRR ingest), `--max-conns` caps the connection table,
+//! and `--reactor-shards N` runs the network plane as N reactor
+//! threads fed by a dedicated acceptor (default 1: the single-threaded
+//! reactor; the dispatcher is single-threaded either way).
 //! `fos run --tenant acme --weight 3` binds the connection to a named
 //! QoS session; `--async` submits for a ticket and drains it through
 //! the wait RPC explicitly.  `--fault-plan` arms deterministic fault
@@ -104,6 +108,13 @@ fn main() {
             let max_conns: usize = get("--max-conns")
                 .and_then(|v| v.parse().ok())
                 .unwrap_or(fos::daemon::DEFAULT_MAX_CONNECTIONS);
+            // `--reactor-shards 4` spreads connection I/O over four
+            // reactor threads fed by one acceptor; scheduling stays on
+            // the single dispatcher thread regardless.
+            let reactor_shards: usize = get("--reactor-shards")
+                .and_then(|v| v.parse().ok())
+                .filter(|&n| n >= 1)
+                .unwrap_or(1);
             // `--fault-plan seed=7,reconfig=0.05,down=1@50+40` arms
             // deterministic fault injection for soak testing: board
             // outages + reconfig/run failures replay the exact
@@ -129,6 +140,7 @@ fn main() {
                 .placement(placement)
                 .admission(admission)
                 .max_connections(max_conns)
+                .reactor_shards(reactor_shards)
                 .tenants(&tenant_refs);
             if let Some(plan) = faults {
                 cfg = cfg.faults(plan);
@@ -150,7 +162,7 @@ fn main() {
             let names: Vec<&str> = boards.iter().map(|b| b.name()).collect();
             println!(
                 "fos daemon: boards={} placement={} policy={} socket={socket} accelerators={n} \
-                 queue-cap={} max-conns={max_conns}{}",
+                 queue-cap={} max-conns={max_conns} reactor-shards={reactor_shards}{}",
                 names.join(","),
                 placement.name(),
                 policy.name(),
@@ -280,7 +292,7 @@ fn main() {
             println!("  fos daemon   [--socket PATH] [--board ultra96|ultrazed|zcu102]");
             println!("               [--boards B1,B2,...] [--placement round-robin|least-loaded|locality]");
             println!("               [--policy elastic|fixed|quantum|elastic-pre|fair]");
-            println!("               [--queue-cap N] [--quantum-tiles N] [--max-conns N]");
+            println!("               [--queue-cap N] [--quantum-tiles N] [--max-conns N] [--reactor-shards N]");
             println!("               [--fault-plan seed=N,reconfig=R,run=R,down=B@Tms+Dms,...]");
             println!("               [--tenants T1,T2,...] [--bw-partition]");
             println!("  fos run      [--socket PATH] --accel NAME [--requests N]");

@@ -315,33 +315,37 @@ fn fault_parity_same_plan_same_seed_same_outcome() {
     assert_eq!(r1.merged, r3.merged, "spec round-trip must replay identically");
 }
 
-#[test]
-fn chaos_live_daemon_isolates_two_authenticated_tenants_across_failover() {
-    // The live half of the security-domain chaos gate: a fixed-seed
-    // fault plan (board-1 outage landing mid-batch) against a real
-    // two-board daemon in authenticated mode, with two token-bound
-    // tenants computing concurrently.  Invariants:
-    //
-    // - a bind with a wrong token is denied (structured, connection
-    //   survives);
-    // - per-tenant conservation holds on the live counters — every
-    //   admitted request completes exactly once across the
-    //   checkpoint-based migration (outage-only plans never reject);
-    // - zero cross-arena leaks: each tenant's inputs re-read intact
-    //   and its outputs are its own arithmetic, while a stolen handle
-    //   from the neighbour is denied even after failover moved work.
+/// The live half of the security-domain chaos gate: a fixed-seed
+/// fault plan (board-1 outage landing mid-batch) against a real
+/// two-board daemon in authenticated mode, with two token-bound
+/// tenants computing concurrently.  Invariants:
+///
+/// - a bind with a wrong token is denied (structured, connection
+///   survives);
+/// - per-tenant conservation holds on the live counters — every
+///   admitted request completes exactly once across the
+///   checkpoint-based migration (outage-only plans never reject);
+/// - zero cross-arena leaks: each tenant's inputs re-read intact
+///   and its outputs are its own arithmetic, while a stolen handle
+///   from the neighbour is denied even after failover moved work.
+///
+/// `reactor_shards` picks the network-plane topology: 1 is the
+/// single-threaded reactor, >1 the acceptor + per-shard reactors —
+/// the dispatcher (and thus every invariant above) must not care.
+fn chaos_live_two_tenants(reactor_shards: usize, sock_tag: &str) {
     use fos::daemon::{Daemon, DaemonConfig, FpgaRpc, Job};
     if !fos::testutil::pjrt_available() {
         eprintln!("skipping: PJRT backend unavailable (offline stub)");
         return;
     }
     let path = std::env::temp_dir()
-        .join(format!("fos_chaos_live_{}.sock", std::process::id()));
+        .join(format!("fos_chaos_live_{sock_tag}_{}.sock", std::process::id()));
     let plan = FaultPlan::new(11).with_outage(1, 1_000, 2_000_000);
     let cfg = DaemonConfig::new(&boards(2), catalog())
         .placement(PlacementKind::RoundRobin)
         .faults(plan)
-        .tenants(&["acme", "bigco"]);
+        .tenants(&["acme", "bigco"])
+        .reactor_shards(reactor_shards);
     let d = Daemon::start_configured(&path, cfg).unwrap();
 
     // Wrong token: denied, structured, and the connection survives.
@@ -408,4 +412,20 @@ fn chaos_live_daemon_isolates_two_authenticated_tenants_across_failover() {
         "both tenants accounted: {:?}",
         stats.tenants
     );
+}
+
+#[test]
+fn chaos_live_daemon_isolates_two_authenticated_tenants_across_failover() {
+    chaos_live_two_tenants(1, "1shard");
+}
+
+#[test]
+fn chaos_live_sharded_reactor_replays_fault_plan_identically() {
+    // Same fault plan, same tenants, same invariants — but the network
+    // plane runs 3 reactor shards behind the acceptor.  Sharding only
+    // moves connection I/O; fault replay, failover migration and
+    // per-tenant conservation are dispatcher state and must hold
+    // unchanged (CI's chaos gate runs this alongside the 1-shard
+    // variant).
+    chaos_live_two_tenants(3, "3shard");
 }

@@ -10,9 +10,10 @@
 //! reactor.
 
 use fos::accel::Catalog;
-use fos::daemon::{read_msg, write_msg, Daemon, FpgaRpc, MAX_MSG};
+use fos::daemon::{read_msg, write_msg, Daemon, DaemonConfig, FpgaRpc, MAX_MSG};
 use fos::json::{i, obj, s, Value};
 use fos::shell::ShellBoard;
+use std::collections::HashSet;
 use std::io::{Read, Write};
 use std::os::unix::net::UnixStream;
 use std::path::PathBuf;
@@ -25,6 +26,16 @@ fn sock(name: &str) -> PathBuf {
 fn start(name: &str) -> (Daemon, PathBuf) {
     let path = sock(name);
     let d = Daemon::start(&path, ShellBoard::Ultra96, Catalog::load_default().unwrap()).unwrap();
+    (d, path)
+}
+
+/// A daemon whose network plane runs `shards` reactor shards behind
+/// the dedicated acceptor (the `--reactor-shards N` topology).
+fn start_sharded(name: &str, shards: usize) -> (Daemon, PathBuf) {
+    let path = sock(name);
+    let cfg = DaemonConfig::new(&[ShellBoard::Ultra96], Catalog::load_default().unwrap())
+        .reactor_shards(shards);
+    let d = Daemon::start_configured(&path, cfg).unwrap();
     (d, path)
 }
 
@@ -184,4 +195,125 @@ fn slow_reader_backpressure_stalls_one_connection_not_the_reactor() {
     // trips again after the write buffer drained (and shrank).
     write_msg(&mut slow, &req).unwrap();
     expect_b64(read_msg(&mut slow).unwrap());
+}
+
+// ---- multi-shard reactor plane (--reactor-shards N) -------------------
+
+#[test]
+fn cross_shard_replies_route_to_the_owning_connection_under_pipelined_load() {
+    // 16 connections dealt round-robin across 4 shards, each
+    // pipelining bursts of pings.  Every ping reply carries the
+    // connection's daemon `user` id, so a reply mis-routed to a
+    // different shard's slab slot (or a different connection's slot)
+    // shows up as a user-id mismatch, not just a hang.
+    let (_d, path) = start_sharded("xshard_route", 4);
+    let mut conns: Vec<UnixStream> = (0..16).map(|_| connect(&path)).collect();
+    let mut users: Vec<Option<i64>> = vec![None; conns.len()];
+    for _round in 0..3 {
+        // Pipeline a burst on every connection before reading any
+        // reply, so all shards hold in-flight traffic at once.
+        for c in conns.iter_mut() {
+            for _ in 0..4 {
+                c.write_all(&ping_frame()).unwrap();
+            }
+        }
+        for (k, c) in conns.iter_mut().enumerate() {
+            for _ in 0..4 {
+                let reply = read_msg(c).unwrap();
+                assert_eq!(reply.get("status").as_str(), Some("ok"));
+                let user = reply.get("user").as_i64().expect("ping reply carries user");
+                match users[k] {
+                    None => users[k] = Some(user),
+                    Some(u) => {
+                        assert_eq!(u, user, "reply for user {user} routed to connection of {u}")
+                    }
+                }
+            }
+        }
+    }
+    // 16 connections across 4 shards must have minted 16 distinct ids.
+    let distinct: HashSet<i64> = users.iter().map(|u| u.unwrap()).collect();
+    assert_eq!(distinct.len(), conns.len());
+}
+
+#[test]
+fn shard_tokens_and_users_stay_unique_after_slot_recycling() {
+    // Connect a wave on every shard, drop it (recycling every slab
+    // slot), connect another wave.  The shard tag + epoch in the slab
+    // key and the strided user counter must keep daemon user ids
+    // globally unique across shards AND across recycled slots — a
+    // collision would alias two connections' scheduler state.
+    let (_d, path) = start_sharded("xshard_unique", 3);
+    let mut seen: HashSet<i64> = HashSet::new();
+    for _wave in 0..2 {
+        let mut conns: Vec<UnixStream> = (0..9).map(|_| connect(&path)).collect();
+        for c in conns.iter_mut() {
+            c.write_all(&ping_frame()).unwrap();
+            let reply = read_msg(c).unwrap();
+            assert_eq!(reply.get("status").as_str(), Some("ok"));
+            let user = reply.get("user").as_i64().expect("ping reply carries user");
+            assert!(seen.insert(user), "user id {user} reissued after slot recycling");
+        }
+        // Dropping the wave recycles all nine slots on their shards.
+    }
+    assert_eq!(seen.len(), 18);
+}
+
+#[test]
+fn slow_reader_on_one_shard_does_not_stall_another_shard() {
+    // Two shards, connections dealt round-robin: the setup client
+    // lands on shard 0, the deliberately-stalled reader on shard 1,
+    // the probe back on shard 0.  The stalled connection parks ~1.4 MB
+    // of reply in ITS shard's write buffer; the probe's shard must
+    // keep answering at full speed.
+    let (_d, path) = start_sharded("xshard_bp", 2);
+
+    let mut setup = FpgaRpc::connect(&path).unwrap();
+    setup.set_session("bp-tenant", None, 1, 0).unwrap();
+    let n_floats = (1usize << 20) / 4;
+    let handle = setup.alloc(1 << 20).unwrap();
+    let xs: Vec<f32> = (0..n_floats).map(|v| v as f32).collect();
+    setup.write_f32(handle, &xs).unwrap();
+
+    let mut slow = connect(&path);
+    let bind = obj(vec![("method", s("session")), ("tenant", s("bp-tenant"))]);
+    write_msg(&mut slow, &bind).unwrap();
+    assert_eq!(read_msg(&mut slow).unwrap().get("status").as_str(), Some("ok"));
+    let req = obj(vec![
+        ("method", s("read")),
+        ("handle", i(handle.raw() as i64)),
+        ("count", i(n_floats as i64)),
+    ]);
+    write_msg(&mut slow, &req).unwrap();
+    std::thread::sleep(Duration::from_millis(300));
+
+    // While shard 1's reader stalls, a connection on the other shard
+    // still round-trips promptly.
+    let mut probe = FpgaRpc::connect(&path).unwrap();
+    let rtt = probe.ping().unwrap();
+    assert!(rtt < Duration::from_secs(2), "other shard blocked behind a slow reader: {rtt:?}");
+
+    // The stalled reply is still complete and correct once drained.
+    let reply = read_msg(&mut slow).unwrap();
+    assert_eq!(reply.get("status").as_str(), Some("ok"));
+    let b64 = reply.get("b64").as_str().expect("read reply missing b64");
+    assert_eq!(b64.len(), (1usize << 20).div_ceil(3) * 4);
+}
+
+#[test]
+fn shutdown_drains_every_shard_cleanly() {
+    // Live connections on all four shards when the daemon stops: every
+    // client must observe a clean server-side close (EOF, not a reset
+    // or a hang), and shutdown itself must join all shard threads plus
+    // the acceptor (a leaked thread would hang the test binary).
+    let (mut d, path) = start_sharded("xshard_shutdown", 4);
+    let mut conns: Vec<UnixStream> = (0..8).map(|_| connect(&path)).collect();
+    for c in conns.iter_mut() {
+        c.write_all(&ping_frame()).unwrap();
+        assert_eq!(read_msg(c).unwrap().get("status").as_str(), Some("ok"));
+    }
+    d.shutdown();
+    for c in conns.iter_mut() {
+        expect_eof(c);
+    }
 }

@@ -9,7 +9,9 @@
 # from the rolling previous-run comparison to the pinned numbers.
 # Floor-gated benches (perf_round_latency, fig25_connection_scaling,
 # fig26_bw_interference) need no baseline; they are still run so the
-# floor checks exercise a real result.
+# floor checks exercise a real result (fig25 sweeps both the 1-shard
+# and N-shard reactor and emits sessions_sustained plus
+# nshard_vs_1shard_ratio, all floor-gated).
 #
 # Also (re)arms the golden decision-trace fixture
 # (rust/tests/fixtures/golden_decisions.txt): it self-arms on the first
