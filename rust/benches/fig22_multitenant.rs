@@ -68,14 +68,23 @@ fn main() {
     // tenant with many short ones — the mix where cooperative
     // run-to-completion starves the shorts. Mean turnaround under the
     // preemptive policies must beat the cooperative baseline.
-    let stream_tiles = fos::testutil::bench_scale(120, 60);
-    let mut w = Workload::new();
-    for _ in 0..3 {
-        w.push(JobSpec::stream(0, "mandelbrot", Some("mandelbrot_v1"), 0, stream_tiles));
-    }
-    for j in JobSpec::frame_pinned(1, "sobel", "sobel_v1", 0, 20, 10) {
-        w.push(j);
-    }
+    // `FOS_SCENARIO=<spec>` swaps the built-in mix for a scenario-engine
+    // trace — the same record/replay knob the tests and the daemon use.
+    let scenario_replay = fos::testutil::scenario_override();
+    let w = if let Some(sc) = &scenario_replay {
+        println!("FOS_SCENARIO replay: {}", sc.to_spec());
+        sc.to_workload()
+    } else {
+        let stream_tiles = fos::testutil::bench_scale(120, 60);
+        let mut w = Workload::new();
+        for _ in 0..3 {
+            w.push(JobSpec::stream(0, "mandelbrot", Some("mandelbrot_v1"), 0, stream_tiles));
+        }
+        for j in JobSpec::frame_pinned(1, "sobel", "sobel_v1", 0, 20, 10) {
+            w.push(j);
+        }
+        w
+    };
     let mut t2 = Table::new(
         "Preemptive time-multiplexing — 3 Mandel streams x 10 short Sobel jobs (Ultra96)",
         &["policy", "mean turnaround (ms)", "makespan (ms)", "preempt/resume"],
@@ -127,6 +136,7 @@ fn main() {
     let doc = obj(vec![
         ("bench", s("fig22_multitenant")),
         ("smoke", b(fos::testutil::bench_smoke())),
+        ("scenario_override", b(scenario_replay.is_some())),
         ("policies", policies),
     ]);
     match fos::testutil::write_bench_json("fig22_multitenant", &doc) {

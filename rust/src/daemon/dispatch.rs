@@ -85,7 +85,8 @@ use crate::driver::{AccelSnapshot, Cynq, LoadedAccel, PhysAddr, TenantId};
 use crate::json::{arr, i, obj, s, Value};
 use crate::sched::{
     AdmissionConfig, AdmissionPipeline, AdmitRequest, ClusterCore, Decision, DecisionKind,
-    FailDisposition, FaultPlan, MovedCkpt, PlacementKind, Policy, QosClass, SymbolTable,
+    FailDisposition, FaultPlan, MovedCkpt, OrderStrategy, PlacementKind, Policy, QosClass,
+    Scenario, SymbolTable, Workload,
 };
 use crate::shell::ShellBoard;
 use std::cmp::Reverse;
@@ -497,6 +498,18 @@ pub struct DaemonConfig {
     /// Tenant names to register at startup with minted tokens;
     /// non-empty switches the daemon into authenticated mode.
     pub tenants: Vec<String>,
+    /// Replay a recorded [`Scenario`] through the dispatcher's
+    /// virtual-time loop (`fos daemon --scenario <spec>`): every trace
+    /// record becomes a clientless submission at its virtual arrival
+    /// time, interleaving with live RPC traffic and any fault plan —
+    /// the same scenario driven through
+    /// [`crate::sched::simulate_cluster`] replays the identical
+    /// decision sequence.
+    pub scenario: Option<Scenario>,
+    /// Nondeterminism-resolution strategy for the dispatcher's DES
+    /// loop (`fos daemon --order seed=N`); identity = byte-identical
+    /// to the fixed orderings.
+    pub order: OrderStrategy,
 }
 
 impl DaemonConfig {
@@ -511,6 +524,8 @@ impl DaemonConfig {
             reactor_shards: 1,
             faults: None,
             tenants: Vec::new(),
+            scenario: None,
+            order: OrderStrategy::default(),
         }
     }
 
@@ -546,6 +561,16 @@ impl DaemonConfig {
 
     pub fn tenants(mut self, names: &[&str]) -> DaemonConfig {
         self.tenants = names.iter().map(|n| n.to_string()).collect();
+        self
+    }
+
+    pub fn scenario(mut self, sc: Scenario) -> DaemonConfig {
+        self.scenario = Some(sc);
+        self
+    }
+
+    pub fn order(mut self, order: OrderStrategy) -> DaemonConfig {
+        self.order = order;
         self
     }
 }
@@ -665,6 +690,8 @@ impl Daemon {
                 max_connections,
                 faults,
                 tenants: Vec::new(),
+                scenario: None,
+                order: OrderStrategy::default(),
             },
         )
     }
@@ -679,6 +706,27 @@ impl Daemon {
         cfg: DaemonConfig,
     ) -> io::Result<Daemon> {
         assert!(!cfg.boards.is_empty(), "a cluster needs at least one board");
+        // A scenario must be fully resolvable before the dispatcher
+        // starts: an unknown accelerator (or pinned variant) in a trace
+        // is a startup error, not a mid-replay panic.
+        if let Some(sc) = &cfg.scenario {
+            for e in sc.events() {
+                let a = cfg.catalog.get(&e.accel).ok_or_else(|| {
+                    io::Error::new(
+                        io::ErrorKind::InvalidInput,
+                        format!("scenario references unknown accelerator {:?}", e.accel),
+                    )
+                })?;
+                if let Some(v) = &e.variant {
+                    if !a.variants.iter().any(|av| &av.name == v) {
+                        return Err(io::Error::new(
+                            io::ErrorKind::InvalidInput,
+                            format!("scenario pins unknown variant {:?} of {:?}", v, e.accel),
+                        ));
+                    }
+                }
+            }
+        }
         let socket_path = socket_path.as_ref().to_path_buf();
         let _ = std::fs::remove_file(&socket_path);
         let listener = UnixListener::bind(&socket_path)?;
@@ -717,8 +765,11 @@ impl Daemon {
             let auth = auth.clone();
             let (policy, placement, admission, faults) =
                 (cfg.default_policy, cfg.placement, cfg.admission, cfg.faults);
+            let (scenario, order) = (cfg.scenario, cfg.order);
             std::thread::Builder::new().name("fos-dispatch".into()).spawn(move || {
-                dispatcher(cynqs, rx, stats, policy, placement, admission, faults, auth)
+                dispatcher(
+                    cynqs, rx, stats, policy, placement, admission, faults, scenario, order, auth,
+                )
             })?
         };
 
@@ -945,6 +996,11 @@ const REVIVE_ANCHOR: usize = usize::MAX - 2;
 /// the loop so `release_retries` runs at the right virtual time.
 const RETRY_ANCHOR: usize = usize::MAX - 3;
 
+/// Sentinel anchor: a scenario-trace arrival (the heap entry's board
+/// field indexes `replay_events`) — the simulator's `Event::Arrival`
+/// (and, after `Busy` backpressure, its `Event::Retry`).
+const ARRIVAL_ANCHOR: usize = usize::MAX - 4;
+
 /// One board's hardware-side state: its `Cynq` stack, the resident
 /// module map, the dispatch-in-flight index, the register-file
 /// snapshot store (keyed by the *shard's* checkpoint ids — ids are
@@ -989,6 +1045,8 @@ fn dispatcher(
     placement: PlacementKind,
     admission: AdmissionConfig,
     faults: Option<FaultPlan>,
+    scenario: Option<Scenario>,
+    order: OrderStrategy,
     auth: Option<Arc<Mutex<AuthState>>>,
 ) {
     let boards: Vec<ShellBoard> = cynqs.iter().map(|c| c.shell.board).collect();
@@ -1082,6 +1140,56 @@ fn dispatcher(
     // simulator's one-round-per-event-batch cadence, which keeps the
     // decision (and skip-counter) sequences identical on both paths.
     let mut round_due = false;
+
+    // Scenario replay: lower the trace into the same Workload the
+    // simulator consumes and arm one ARRIVAL_ANCHOR sentinel per job at
+    // its virtual arrival time — the heap entry's board field indexes
+    // `replay_events` (job, remaining-requests).  Seq assignment
+    // mirrors `simulate_cluster` exactly: arrivals 0..n-1 first, then
+    // the fault plan's outage pairs, so equal-timestamp batches sort
+    // (and permute) identically on both harnesses.
+    let replay: Option<Workload> =
+        scenario.map(|sc| sc.to_workload()).filter(|w| !w.jobs.is_empty());
+    let mut replay_events: Vec<(usize, usize)> = Vec::new();
+    let mut scenario_batch = usize::MAX;
+    if let Some(w) = &replay {
+        for &(u, q) in &w.qos {
+            admit.set_qos(u, q);
+            cluster.set_tenant_weight(u, q.weight);
+        }
+        // Trace tenants own scheduler slots 0..users-1 (tenant = user,
+        // the simulator's rule); live connections get fresh slots
+        // above them so the two populations never collide.
+        next_fresh = next_fresh.max(w.users());
+        tenants.next = tenants.next.max(w.users());
+        // All trace jobs share one clientless batch: nothing to reply
+        // to, but `remaining` still gates the stall guard's view of
+        // outstanding work.
+        scenario_batch = next_batch;
+        next_batch += 1;
+        batches.insert(
+            scenario_batch,
+            Batch {
+                sink: BatchSink::Discard,
+                remaining: w.total_requests(),
+                latencies_us: Vec::new(),
+                modelled_us: Vec::new(),
+                error: None,
+            },
+        );
+        for (j, spec) in w.jobs.iter().enumerate() {
+            completions.push(Reverse((spec.arrival, seq, replay_events.len(), ARRIVAL_ANCHOR)));
+            seq += 1;
+            replay_events.push((j, spec.requests));
+        }
+        // The scenario's arrivals anchor the virtual clock from t=0, so
+        // the fault sentinels arm right now (first-Submit arming would
+        // misorder their seqs relative to the simulator's).
+        for (t, b, anchor) in fault_events.drain(..) {
+            completions.push(Reverse((t, seq, b, anchor)));
+            seq += 1;
+        }
+    }
 
     'outer: loop {
         // Block when idle or paused (no busy-spin); drain without
@@ -1439,12 +1547,69 @@ fn dispatcher(
             if let Some(&Reverse((t, _, _, _))) = completions.peek() {
                 vnow = t;
                 let mut fault_round = false;
+                // Collect the whole equal-timestamp batch before
+                // processing (the simulator's batching rule made
+                // explicit), then apply the ordering-fuzz hook.  Safe:
+                // no handler below pushes back into `completions` at
+                // the current timestamp (scenario retries land ≥ 1ms
+                // out), so the batch is complete when permuted — and
+                // identity permutation keeps pop order byte-identical.
+                let mut batch: Vec<(u64, usize, usize)> = Vec::new();
                 while let Some(&Reverse((t2, _, _, _))) = completions.peek() {
                     if t2 != t {
                         break;
                     }
                     let Reverse((_, sq, ev_board, anchor)) = completions.pop().unwrap();
+                    batch.push((sq, ev_board, anchor));
+                }
+                order.permute_events(t, &mut batch);
+                for (sq, ev_board, anchor) in batch {
                     match anchor {
+                        // A scenario-trace arrival: enqueue the job's
+                        // requests into admission exactly as the
+                        // simulator's `pipeline_enqueue` does, honouring
+                        // `Busy` backpressure with a re-arrival sentinel
+                        // at the hint's deadline.
+                        ARRIVAL_ANCHOR => {
+                            let w = replay.as_ref().expect("arrival sentinel without scenario");
+                            let (j, count) = replay_events[ev_board];
+                            let spec = &w.jobs[j];
+                            for k in 0..count {
+                                let r = AdmitRequest {
+                                    user: spec.user,
+                                    tenant: spec.user,
+                                    job: next_token,
+                                    accel: spec.accel.clone(),
+                                    tiles: spec.tiles_per_request,
+                                    pin: spec.pin_variant.clone(),
+                                };
+                                if let Err(e) = admit.enqueue(r) {
+                                    replay_events.push((j, count - k));
+                                    completions.push(Reverse((
+                                        vnow + e.retry_after_ns(),
+                                        seq,
+                                        replay_events.len() - 1,
+                                        ARRIVAL_ANCHOR,
+                                    )));
+                                    seq += 1;
+                                    break;
+                                }
+                                pending.insert(
+                                    next_token,
+                                    PendingJob::new(
+                                        ExecJob {
+                                            accname: spec.accel.clone(),
+                                            params: Vec::new(),
+                                            tiles: spec.tiles_per_request,
+                                        },
+                                        scenario_batch,
+                                    ),
+                                );
+                                next_token += 1;
+                            }
+                            fault_round = true;
+                            continue;
+                        }
                         // Injected board failure: drain + migrate — the
                         // simulator's BoardDown event, verbatim.
                         DOWN_ANCHOR => {
@@ -1545,7 +1710,7 @@ fn dispatcher(
         // waits: queued work stays in the admission pipeline until a
         // revival re-opens routing.
         if cluster.healthy_count() > 0 {
-            for r in admit.ingest() {
+            for r in admit.ingest_ordered(&order, vnow) {
                 match cluster
                     .submit_for(r.user, r.tenant, r.job, &r.accel, r.tiles, r.pin.as_deref())
                 {
@@ -1767,7 +1932,9 @@ fn dispatcher(
             // break decision parity).
             let due = cluster.preempt_tick_due(b, &mut hws[b].next_tick, vnow);
             if let Some(t) = due {
-                completions.push(Reverse((t, seq, b, TICK_ANCHOR)));
+                // Jitter moves only the heap entry; `next_tick` keeps
+                // the unjittered due time (simulator rule, verbatim).
+                completions.push(Reverse((order.jitter_tick(b, t), seq, b, TICK_ANCHOR)));
                 seq += 1;
             }
         }

@@ -334,11 +334,13 @@ fn parse_mem_op(method: &str, msg: &Value) -> Result<MemOp, String> {
 }
 
 /// Where a finished batch's reply goes: straight back to a blocking
-/// `run` caller, or into the ticket store for the async
-/// `wait`/`poll`/`completions` RPCs to claim.
+/// `run` caller, into the ticket store for the async
+/// `wait`/`poll`/`completions` RPCs to claim, or nowhere — scenario
+/// replay injects jobs with no client connection behind them.
 pub(crate) enum BatchSink {
     Reply(ReplySink),
     Ticket(u64),
+    Discard,
 }
 
 pub(crate) struct Batch {
@@ -419,6 +421,8 @@ pub(crate) fn finish(
         BatchSink::Reply(tx) => {
             tx.send(resp);
         }
+        // Scenario-replay batches have no claimant by construction.
+        BatchSink::Discard => {}
         // A missing ticket means its connection departed: the reply
         // has no claimant and is dropped.
         BatchSink::Ticket(id) => match tickets.remove(&id) {

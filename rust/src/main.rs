@@ -126,6 +126,29 @@ fn main() {
                 })
             });
             let fault_spec = faults.as_ref().map(|p| p.to_spec());
+            // `--scenario gen=diurnal,seed=7,tenants=4,jobs=48` (or an
+            // explicit `at=...` trace) replays a recorded workload
+            // through the dispatcher's virtual-time loop — the same
+            // spec through simulate_cluster replays the identical
+            // decision sequence.
+            let scenario = get("--scenario").map(|spec| {
+                fos::sched::Scenario::parse(&spec).unwrap_or_else(|e| {
+                    eprintln!("bad --scenario: {e}");
+                    std::process::exit(2);
+                })
+            });
+            let scenario_spec = scenario.as_ref().map(|sc| sc.to_spec());
+            // `--order seed=N` fuzzes the dispatcher's event orderings
+            // (equal-time batches, ingest boundaries, tick jitter);
+            // default `identity` is byte-identical to the fixed order.
+            let order = get("--order")
+                .map(|spec| {
+                    fos::sched::OrderStrategy::parse(&spec).unwrap_or_else(|e| {
+                        eprintln!("bad --order: {e}");
+                        std::process::exit(2);
+                    })
+                })
+                .unwrap_or_default();
             // `--tenants acme,bigco` switches the daemon to authenticated
             // mode: only the listed tenants (plus any registered later via
             // the admin token) can bind sessions, each with a minted
@@ -145,6 +168,10 @@ fn main() {
             if let Some(plan) = faults {
                 cfg = cfg.faults(plan);
             }
+            if let Some(sc) = scenario {
+                cfg = cfg.scenario(sc);
+            }
+            cfg = cfg.order(order);
             let d = Daemon::start_configured(&socket, cfg).expect("daemon start");
             if !tenant_names.is_empty() {
                 println!(
@@ -171,6 +198,9 @@ fn main() {
                     .map(|sp| format!(" fault-plan={sp}"))
                     .unwrap_or_default(),
             );
+            if let Some(sp) = scenario_spec {
+                println!("scenario: order={} {sp}", order.to_spec());
+            }
             println!("press ctrl-c to stop");
             loop {
                 std::thread::sleep(std::time::Duration::from_secs(3600));
@@ -294,6 +324,8 @@ fn main() {
             println!("               [--policy elastic|fixed|quantum|elastic-pre|fair]");
             println!("               [--queue-cap N] [--quantum-tiles N] [--max-conns N] [--reactor-shards N]");
             println!("               [--fault-plan seed=N,reconfig=R,run=R,down=B@Tms+Dms,...]");
+            println!("               [--scenario gen=diurnal|bursts|flash|pareto,seed=N,... | v=1,at=T@tUwW:ACCELxTILES*STREAM,...]");
+            println!("               [--order identity|seed=N]");
             println!("               [--tenants T1,T2,...] [--bw-partition]");
             println!("  fos run      [--socket PATH] --accel NAME [--requests N]");
             println!("               [--tenant NAME] [--token TOK] [--weight W] [--max-inflight N] [--async]");

@@ -400,6 +400,23 @@ impl AdmissionPipeline {
         out
     }
 
+    /// [`AdmissionPipeline::ingest`] with the ordering-fuzz hook
+    /// applied: the batch boundary stays put (the same requests are
+    /// admitted this round) but their submission order within the
+    /// round becomes a seeded permutation keyed by `now`.  Identity
+    /// strategies return the DRR order untouched, and any seeded order
+    /// is one both harnesses compute identically at the same virtual
+    /// time — see [`super::OrderStrategy`].
+    pub fn ingest_ordered(
+        &mut self,
+        order: &super::scenario::OrderStrategy,
+        now: u64,
+    ) -> Vec<AdmitRequest> {
+        let mut batch = self.ingest();
+        order.permute_ingest(now, &mut batch);
+        batch
+    }
+
     /// An admitted request finished (completed, failed, rejected
     /// downstream, or was dropped with its user): return the tenant's
     /// in-flight token.  Only this tenant can have become sweepable,

@@ -58,6 +58,7 @@ pub mod admission;
 pub mod cluster;
 pub mod core;
 pub mod faults;
+pub mod scenario;
 mod sim;
 mod workload;
 
@@ -77,6 +78,7 @@ pub use cluster::{
     RETRY_BACKOFF_BASE_NS,
 };
 pub use faults::{FaultPlan, Outage};
+pub use scenario::{OrderStrategy, Scenario, ScenarioEvent, TICK_JITTER_MAX_NS};
 pub use sim::{
     cluster_mean_turnaround_ns, gen_inputs, mean_turnaround_ns, simulate, simulate_cluster,
     BoardSim, ClusterSimConfig, ClusterSimResult, RegionTrace, SimConfig, SimResult, TraceEvent,

@@ -1,0 +1,736 @@
+//! # The scenario engine (trace-driven workloads + ordering fuzz)
+//!
+//! FOS's pitch is arbitrating the fabric for *dynamic* workloads; the
+//! synthetic mixes in [`super::workload`] cannot express the bursty,
+//! adversarial tenant behaviour a cloud deployment sees.  This module
+//! is the workload half of the scenario layer:
+//!
+//! - a [`Scenario`] is a compact, versioned **trace** — one record per
+//!   arrival (`t_ns, tenant, qos, accel, variant, tiles, stream`) —
+//!   with a [`Scenario::parse`] / [`Scenario::to_spec`] ns-exact
+//!   round-trip exactly like [`super::FaultPlan`], so a scenario
+//!   validated offline replays bit-identically through
+//!   [`super::simulate`], [`super::simulate_cluster`] *and* the live
+//!   daemon (`fos daemon --scenario <spec>`, bench knob
+//!   `FOS_SCENARIO`);
+//! - pure seeded **generators** (SplitMix64 draws, no wall clock) for
+//!   the canonical cloud shapes: [`Scenario::diurnal`] two-peak load,
+//!   [`Scenario::bursts`] correlated multi-tenant bursts,
+//!   [`Scenario::flash_crowd`] a quiet baseline plus a synchronized
+//!   spike on one hot accelerator, and [`Scenario::heavy_tailed`]
+//!   bounded-Pareto job sizes;
+//! - an [`OrderStrategy`] — the concurrency-fuzzing hook both
+//!   discrete-event harnesses consult at their nondeterminism points
+//!   (equal-timestamp event batches, admission ingest boundaries,
+//!   preemption-tick cadence).  [`OrderStrategy::Identity`] (the
+//!   default) is a no-op at every hook, byte-identical to the fixed
+//!   FIFO orderings; [`OrderStrategy::Seeded`] replaces each with a
+//!   seeded permutation / bounded jitter, producing a *legal
+//!   alternative schedule* that `tests/fuzz_orderings.rs` sweeps for
+//!   conservation and parity bugs the fixed orderings hide.
+//!
+//! ## Determinism contract
+//!
+//! Like [`super::FaultPlan`], every draw is a pure function of
+//! `(seed, domain, key)` — generators never consult a wall clock, and
+//! an [`OrderStrategy`] permutation is keyed only by the virtual
+//! timestamp (and board) of the hook that requests it.  Because the
+//! simulator and the daemon reach each hook with identical batch
+//! contents at identical virtual times, a *shared* strategy yields
+//! identical permutations on both paths — so sim/daemon decision
+//! parity holds under **any** seeded ordering, which is exactly the
+//! invariant the fuzz suite leans on.
+
+use super::admission::QosClass;
+use super::core::PREEMPT_TICK_NS;
+use super::workload::{JobSpec, Workload};
+use crate::testutil::Rng;
+use std::collections::BTreeMap;
+
+/// Domain separators for the generator / permutation draw streams
+/// (arbitrary constants; only inequality matters).
+const DOMAIN_DIURNAL: u64 = 0x4469_7572_6E61_6C31;
+const DOMAIN_BURSTS: u64 = 0x4275_7273_7453_6571;
+const DOMAIN_FLASH: u64 = 0x466C_6173_6843_7277;
+const DOMAIN_PARETO: u64 = 0x5061_7265_746F_3133;
+const DOMAIN_EVENTS: u64 = 0x4576_656E_744F_7264;
+const DOMAIN_INGEST: u64 = 0x496E_6765_7374_5278;
+const DOMAIN_TICK: u64 = 0x5469_636B_4A69_7474;
+
+/// Upper bound of the seeded preemption-tick jitter: a fuzzed tick may
+/// land up to a quarter-cadence late.  Strictly additive — a jittered
+/// tick never fires *before* the core-owned due time, so the rule
+/// "re-check after at least `PREEMPT_TICK_NS`" survives fuzzing.
+pub const TICK_JITTER_MAX_NS: u64 = PREEMPT_TICK_NS / 4;
+
+/// The accelerator pool the generators draw from (all present in the
+/// default catalog, all with a pinnable 1-region `_v1` variant).
+const GEN_ACCELS: [&str; 4] = ["sobel", "dct", "fir", "vadd"];
+
+/// One arrival record of a scenario trace: at virtual `t_ns`, tenant
+/// `tenant` (DRR weight `qos`) submits a job of `stream` independent
+/// requests, `tiles` work items each, on `accel` (optionally pinned to
+/// `variant`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ScenarioEvent {
+    pub t_ns: u64,
+    pub tenant: usize,
+    /// The tenant's DRR weight at lowering time (the last record of a
+    /// tenant wins — a trace can re-weight a tenant mid-stream).
+    pub qos: u32,
+    pub accel: String,
+    /// Pin a specific implementation variant (`None` = elastic pick).
+    pub variant: Option<String>,
+    pub tiles: usize,
+    /// Independent requests in this arrival (the job's parallelism).
+    pub stream: usize,
+}
+
+/// A deterministic, seedable workload trace — see the module docs.
+/// Cheap to clone (tests clone one scenario into both harnesses).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Scenario {
+    seed: u64,
+    /// Uniform per-tenant in-flight quota carried by the trace
+    /// (`usize::MAX` = unlimited, the permissive default).
+    inflight: usize,
+    events: Vec<ScenarioEvent>,
+}
+
+impl Default for Scenario {
+    fn default() -> Scenario {
+        Scenario { seed: 0, inflight: usize::MAX, events: Vec::new() }
+    }
+}
+
+impl Scenario {
+    /// An empty trace with the generator/draw seed `seed`.
+    pub fn new(seed: u64) -> Scenario {
+        Scenario { seed, ..Scenario::default() }
+    }
+
+    /// Append one arrival record.  Records are kept in insertion
+    /// order; at equal `t_ns` that order is the tie-break both
+    /// harnesses replay (the spec round-trip preserves it exactly).
+    pub fn with_event(mut self, e: ScenarioEvent) -> Scenario {
+        self.events.push(e);
+        self
+    }
+
+    /// Give every tenant the same in-flight quota when lowering.
+    pub fn with_inflight(mut self, max_inflight: usize) -> Scenario {
+        self.inflight = max_inflight.max(1);
+        self
+    }
+
+    fn from_events(seed: u64, mut events: Vec<ScenarioEvent>) -> Scenario {
+        // Stable by arrival time: generation order is the tie-break at
+        // equal timestamps, exactly what the spec round-trip preserves.
+        events.sort_by_key(|e| e.t_ns);
+        Scenario { seed, inflight: usize::MAX, events }
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    pub fn events(&self) -> &[ScenarioEvent] {
+        &self.events
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Total acceleration requests the trace carries.
+    pub fn total_requests(&self) -> usize {
+        self.events.iter().map(|e| e.stream).sum()
+    }
+
+    /// Diurnal load: `jobs` arrivals over `horizon_ns` drawn by
+    /// thinning against a two-peak rate curve (the morning/evening
+    /// shape), tenants weighted `1 + tenant % 3`.
+    pub fn diurnal(seed: u64, tenants: usize, jobs: usize, horizon_ns: u64) -> Scenario {
+        let mut rng = Rng::new(seed ^ DOMAIN_DIURNAL);
+        let tenants = tenants.max(1);
+        let h = horizon_ns.max(1);
+        let mut events = Vec::with_capacity(jobs);
+        for _ in 0..jobs {
+            // Rejection sampling against rate(t) in [0.25, 1]: two full
+            // cosine troughs over the horizon = two acceptance peaks.
+            let t = loop {
+                let cand = rng.below(h);
+                let phase = cand as f64 / h as f64;
+                let rate =
+                    0.25 + 0.375 * (1.0 - (4.0 * std::f64::consts::PI * phase).cos());
+                if rng.f64() < rate {
+                    break cand;
+                }
+            };
+            let tenant = rng.below(tenants as u64) as usize;
+            let accel = *rng.pick(&GEN_ACCELS);
+            let variant = if rng.bool(0.25) { Some(format!("{accel}_v1")) } else { None };
+            events.push(ScenarioEvent {
+                t_ns: t,
+                tenant,
+                qos: 1 + (tenant % 3) as u32,
+                accel: accel.to_string(),
+                variant,
+                tiles: 1 + rng.below(6) as usize,
+                stream: 1 + rng.below(3) as usize,
+            });
+        }
+        Scenario::from_events(seed, events)
+    }
+
+    /// Correlated bursts: `n_bursts` tight clusters of `per_burst`
+    /// arrivals each, every burst fanning over several tenants at once
+    /// on one shared accelerator — the "everyone spikes together"
+    /// shape placement policies hate.
+    pub fn bursts(
+        seed: u64,
+        tenants: usize,
+        n_bursts: usize,
+        per_burst: usize,
+        horizon_ns: u64,
+    ) -> Scenario {
+        let mut rng = Rng::new(seed ^ DOMAIN_BURSTS);
+        let tenants = tenants.max(1);
+        let h = horizon_ns.max(1);
+        let width = (h / 64).max(1);
+        let mut events = Vec::with_capacity(n_bursts * per_burst);
+        for _ in 0..n_bursts {
+            let center = rng.below(h);
+            let accel = *rng.pick(&GEN_ACCELS);
+            let first = rng.below(tenants as u64) as usize;
+            let fan = 1 + rng.below(tenants as u64) as usize;
+            for k in 0..per_burst {
+                let tenant = (first + k % fan) % tenants;
+                events.push(ScenarioEvent {
+                    t_ns: center.saturating_add(rng.below(width)),
+                    tenant,
+                    qos: 1 + (tenant % 2) as u32,
+                    accel: accel.to_string(),
+                    variant: None,
+                    tiles: 1 + rng.below(4) as usize,
+                    stream: 1 + rng.below(2) as usize,
+                });
+            }
+        }
+        Scenario::from_events(seed, events)
+    }
+
+    /// Flash crowd: `baseline` arrivals spread uniformly over the
+    /// horizon, then `crowd` arrivals from every tenant packed into a
+    /// sub-1% window on one hot accelerator — the admission-pressure
+    /// scenario the DRR/`Busy` conservation property runs at a tight
+    /// `queue_cap`.
+    pub fn flash_crowd(
+        seed: u64,
+        tenants: usize,
+        baseline: usize,
+        crowd: usize,
+        horizon_ns: u64,
+    ) -> Scenario {
+        let mut rng = Rng::new(seed ^ DOMAIN_FLASH);
+        let tenants = tenants.max(1);
+        let h = horizon_ns.max(4);
+        let mut events = Vec::with_capacity(baseline + crowd);
+        for _ in 0..baseline {
+            let tenant = rng.below(tenants as u64) as usize;
+            let accel = *rng.pick(&GEN_ACCELS);
+            events.push(ScenarioEvent {
+                t_ns: rng.below(h),
+                tenant,
+                qos: 1,
+                accel: accel.to_string(),
+                variant: None,
+                tiles: 1 + rng.below(4) as usize,
+                stream: 1,
+            });
+        }
+        let hot = *rng.pick(&GEN_ACCELS);
+        let spike = h / 4 + rng.below((h / 2).max(1));
+        let window = (h / 128).max(1);
+        for k in 0..crowd {
+            events.push(ScenarioEvent {
+                t_ns: spike.saturating_add(rng.below(window)),
+                tenant: k % tenants,
+                qos: 1,
+                accel: hot.to_string(),
+                variant: Some(format!("{hot}_v1")),
+                tiles: 1 + rng.below(2) as usize,
+                stream: 1,
+            });
+        }
+        Scenario::from_events(seed, events)
+    }
+
+    /// Heavy-tailed job sizes: uniform arrivals whose tile counts and
+    /// stream widths follow bounded Pareto distributions — most jobs
+    /// tiny, a deterministic few elephants.
+    pub fn heavy_tailed(seed: u64, tenants: usize, jobs: usize, horizon_ns: u64) -> Scenario {
+        let mut rng = Rng::new(seed ^ DOMAIN_PARETO);
+        let tenants = tenants.max(1);
+        let h = horizon_ns.max(1);
+        let mut events = Vec::with_capacity(jobs);
+        for _ in 0..jobs {
+            let tenant = rng.below(tenants as u64) as usize;
+            let accel = *rng.pick(&GEN_ACCELS);
+            events.push(ScenarioEvent {
+                t_ns: rng.below(h),
+                tenant,
+                qos: 1 + (tenant % 3) as u32,
+                accel: accel.to_string(),
+                variant: None,
+                tiles: bounded_pareto(&mut rng, 1.3, 1, 32) as usize,
+                stream: bounded_pareto(&mut rng, 1.5, 1, 12) as usize,
+            });
+        }
+        Scenario::from_events(seed, events)
+    }
+
+    /// Parse a scenario spec (`fos daemon --scenario <spec>`,
+    /// `FOS_SCENARIO=<spec>`): comma- or semicolon-separated
+    /// `key=value` entries —
+    ///
+    /// - `v=1` — trace format version (optional, must be 1)
+    /// - `seed=N` — generator/draw seed (default 0)
+    /// - `inflight=N` — uniform per-tenant in-flight quota
+    /// - `at=T@tU wW:ACCEL[/VARIANT]xTILES*STREAM` (no space; one per
+    ///   arrival) — at time `T`, tenant `U` with DRR weight `W`
+    ///   submits `STREAM` requests of `TILES` tiles on `ACCEL`.  `T`
+    ///   is milliseconds, or exact nanoseconds with an `ns` suffix —
+    ///   [`Scenario::to_spec`] emits the latter so a repro artifact
+    ///   replays bit-identically.
+    /// - `gen=diurnal|bursts|flash|pareto` — expand a named generator
+    ///   instead of listing records, shaped by `tenants=`, `jobs=`,
+    ///   `horizon=` (ms or `ns`), `bursts=`, `per=`, `base=`,
+    ///   `crowd=`.  Mutually exclusive with `at=` entries.
+    ///
+    /// e.g. `gen=diurnal,seed=7,tenants=4,jobs=48,horizon=40` or
+    /// `v=1,seed=0,at=1500000ns@t0w2:sobel/sobel_v1x4*3`.
+    pub fn parse(spec: &str) -> Result<Scenario, String> {
+        let mut seed = 0u64;
+        let mut inflight = usize::MAX;
+        let mut events: Vec<ScenarioEvent> = Vec::new();
+        let mut gen: Option<String> = None;
+        let (mut tenants, mut jobs, mut horizon) = (4usize, 48usize, 40_000_000u64);
+        let (mut n_bursts, mut per_burst) = (4usize, 12usize);
+        let (mut baseline, mut crowd) = (16usize, 32usize);
+        for part in spec.split([',', ';']).filter(|p| !p.trim().is_empty()) {
+            let (key, value) = part
+                .split_once('=')
+                .ok_or_else(|| format!("scenario entry {part:?} is not key=value"))?;
+            let (key, value) = (key.trim(), value.trim());
+            let as_usize = |v: &str| -> Result<usize, String> {
+                v.parse().map_err(|_| format!("bad scenario {key} {v:?}"))
+            };
+            match key {
+                "v" => {
+                    if value != "1" {
+                        return Err(format!("unsupported scenario version {value:?}"));
+                    }
+                }
+                "seed" => {
+                    seed = value.parse().map_err(|_| format!("bad seed {value:?}"))?;
+                }
+                "inflight" => inflight = as_usize(value)?.max(1),
+                "gen" => gen = Some(value.to_string()),
+                "tenants" => tenants = as_usize(value)?,
+                "jobs" => jobs = as_usize(value)?,
+                "horizon" => horizon = parse_time(value)?,
+                "bursts" => n_bursts = as_usize(value)?,
+                "per" => per_burst = as_usize(value)?,
+                "base" => baseline = as_usize(value)?,
+                "crowd" => crowd = as_usize(value)?,
+                "at" => events.push(parse_event(value)?),
+                other => return Err(format!("unknown scenario key {other:?}")),
+            }
+        }
+        let mut sc = match gen.as_deref() {
+            None => Scenario { seed, inflight: usize::MAX, events },
+            Some(name) => {
+                if !events.is_empty() {
+                    return Err("gen= and at= entries are mutually exclusive".into());
+                }
+                match name {
+                    "diurnal" => Scenario::diurnal(seed, tenants, jobs, horizon),
+                    "bursts" => Scenario::bursts(seed, tenants, n_bursts, per_burst, horizon),
+                    "flash" => Scenario::flash_crowd(seed, tenants, baseline, crowd, horizon),
+                    "pareto" => Scenario::heavy_tailed(seed, tenants, jobs, horizon),
+                    other => return Err(format!("unknown scenario generator {other:?}")),
+                }
+            }
+        };
+        if inflight != usize::MAX {
+            sc = sc.with_inflight(inflight);
+        }
+        Ok(sc)
+    }
+
+    /// Render the trace back to the [`Scenario::parse`] spec format —
+    /// always the *expanded* record list (a `gen=` spec renders to its
+    /// events), always ns-exact, so a repro artifact replays
+    /// bit-identically.
+    pub fn to_spec(&self) -> String {
+        let mut out = vec!["v=1".to_string(), format!("seed={}", self.seed)];
+        if self.inflight != usize::MAX {
+            out.push(format!("inflight={}", self.inflight));
+        }
+        for e in &self.events {
+            let variant =
+                e.variant.as_deref().map(|v| format!("/{v}")).unwrap_or_default();
+            out.push(format!(
+                "at={}ns@t{}w{}:{}{}x{}*{}",
+                e.t_ns, e.tenant, e.qos, e.accel, variant, e.tiles, e.stream
+            ));
+        }
+        out.join(",")
+    }
+
+    /// Lower the trace into the harnesses' native [`Workload`]: one
+    /// [`JobSpec`] per record (in record order — the arrival tie-break
+    /// both DES heaps replay) plus the per-tenant QoS table (last
+    /// record of a tenant wins, tenant id ascending).
+    pub fn to_workload(&self) -> Workload {
+        let mut w: Workload = self
+            .events
+            .iter()
+            .map(|e| JobSpec {
+                user: e.tenant,
+                accel: e.accel.clone(),
+                arrival: e.t_ns,
+                requests: e.stream,
+                tiles_per_request: e.tiles,
+                pin_variant: e.variant.clone(),
+            })
+            .collect();
+        let mut qos: BTreeMap<usize, u32> = BTreeMap::new();
+        for e in &self.events {
+            qos.insert(e.tenant, e.qos);
+        }
+        for (t, weight) in qos {
+            w.set_qos(t, QosClass::new(weight, self.inflight));
+        }
+        w
+    }
+}
+
+/// `T` in milliseconds, or exact nanoseconds with an `ns` suffix (an
+/// overflowing ms value is a structured error, never a wrapped time).
+fn parse_time(t: &str) -> Result<u64, String> {
+    match t.strip_suffix("ns") {
+        Some(ns) => ns.parse().map_err(|_| format!("bad scenario time {t:?}")),
+        None => t
+            .parse::<u64>()
+            .ok()
+            .and_then(|ms| ms.checked_mul(1_000_000))
+            .ok_or_else(|| format!("bad scenario time {t:?}")),
+    }
+}
+
+/// One `at=` record: `T@tU wW:ACCEL[/VARIANT]xTILES*STREAM` (no space).
+fn parse_event(value: &str) -> Result<ScenarioEvent, String> {
+    let bad = || format!("bad scenario record {value:?} (want T@tUwW:ACCEL[/V]xTILES*STREAM)");
+    let (time, rest) = value.split_once('@').ok_or_else(bad)?;
+    let (head, tail) = rest.split_once(':').ok_or_else(bad)?;
+    let (tenant, weight) = head.strip_prefix('t').and_then(|h| h.split_once('w')).ok_or_else(bad)?;
+    let (name, stream) = tail.rsplit_once('*').ok_or_else(bad)?;
+    let (name, tiles) = name.rsplit_once('x').ok_or_else(bad)?;
+    let (accel, variant) = match name.split_once('/') {
+        Some((a, v)) => (a.to_string(), Some(v.to_string())),
+        None => (name.to_string(), None),
+    };
+    let e = ScenarioEvent {
+        t_ns: parse_time(time)?,
+        tenant: tenant.parse().map_err(|_| bad())?,
+        qos: weight.parse().map_err(|_| bad())?,
+        accel,
+        variant,
+        tiles: tiles.parse().map_err(|_| bad())?,
+        stream: stream.parse().map_err(|_| bad())?,
+    };
+    if e.tiles == 0 || e.stream == 0 || e.accel.is_empty() {
+        return Err(bad());
+    }
+    Ok(e)
+}
+
+/// Bounded Pareto inverse-CDF draw in `[lo, hi]` with tail index
+/// `alpha` — pure in `rng`, so identical streams replay identically.
+fn bounded_pareto(rng: &mut Rng, alpha: f64, lo: u64, hi: u64) -> u64 {
+    let u = rng.f64();
+    let (l, h) = (lo as f64, hi as f64);
+    let (la, ha) = (l.powf(alpha), h.powf(alpha));
+    let x = (-(u * ha - u * la - ha) / (ha * la)).powf(-1.0 / alpha);
+    (x as u64).clamp(lo, hi)
+}
+
+/// How a discrete-event harness resolves its nondeterminism points —
+/// the ordering-fuzz hook consulted (identically) by [`super::simulate`],
+/// [`super::simulate_cluster`] and the daemon dispatcher at three
+/// sites: the processing order of an equal-timestamp event batch, the
+/// boundary order of an admission ingest batch, and the exact firing
+/// time of a preemption-check tick (bounded additive jitter).
+///
+/// [`OrderStrategy::Identity`] is a no-op at every site — today's FIFO
+/// orderings, byte-identical (the golden fixtures pin this).
+/// [`OrderStrategy::Seeded`] replaces each with a pure seeded
+/// permutation keyed by the virtual time of the hook — a *legal
+/// alternative schedule* under which all conservation invariants (and,
+/// when both harnesses share the strategy, decision parity) must still
+/// hold.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum OrderStrategy {
+    /// Deterministic FIFO — today's behaviour, byte-identical.
+    #[default]
+    Identity,
+    /// Seeded permutations at every hook.
+    Seeded(u64),
+}
+
+impl OrderStrategy {
+    /// Parse a CLI/env spec: `identity` (or empty) | `seed=N`.
+    pub fn parse(spec: &str) -> Result<OrderStrategy, String> {
+        match spec.trim() {
+            "" | "identity" => Ok(OrderStrategy::Identity),
+            s => s
+                .strip_prefix("seed=")
+                .and_then(|n| n.parse().ok())
+                .map(OrderStrategy::Seeded)
+                .ok_or_else(|| format!("bad order strategy {s:?} (want identity or seed=N)")),
+        }
+    }
+
+    pub fn to_spec(&self) -> String {
+        match self {
+            OrderStrategy::Identity => "identity".to_string(),
+            OrderStrategy::Seeded(n) => format!("seed={n}"),
+        }
+    }
+
+    pub fn is_identity(&self) -> bool {
+        *self == OrderStrategy::Identity
+    }
+
+    /// The pure permutation stream for one hook firing: `None` under
+    /// identity (callers skip all work).
+    fn rng(&self, domain: u64, key: u64) -> Option<Rng> {
+        match *self {
+            OrderStrategy::Identity => None,
+            OrderStrategy::Seeded(seed) => {
+                let mix = domain
+                    .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                    .wrapping_add(key.wrapping_mul(0xBF58_476D_1CE4_E5B9));
+                Some(Rng::new(seed ^ mix))
+            }
+        }
+    }
+
+    /// Permute one equal-timestamp event batch before processing —
+    /// keyed by the batch's virtual time, so both harnesses (which
+    /// drain identical batches at identical times) shuffle
+    /// identically.
+    pub fn permute_events<T>(&self, now: u64, batch: &mut [T]) {
+        if batch.len() > 1 {
+            if let Some(mut rng) = self.rng(DOMAIN_EVENTS, now) {
+                shuffle(&mut rng, batch);
+            }
+        }
+    }
+
+    /// Permute one admission ingest batch before it reaches the
+    /// scheduler — the ingest-boundary fuzz (requests admitted in the
+    /// same round land in a seeded submission order).
+    pub fn permute_ingest<T>(&self, now: u64, batch: &mut [T]) {
+        if batch.len() > 1 {
+            if let Some(mut rng) = self.rng(DOMAIN_INGEST, now) {
+                shuffle(&mut rng, batch);
+            }
+        }
+    }
+
+    /// Jitter a preemption-check tick's firing time: identity returns
+    /// `t` unchanged; seeded adds up to [`TICK_JITTER_MAX_NS`], keyed
+    /// by `(board, t)` so every harness jitters the same tick the same
+    /// way.  Only the heap entry moves — the core's own `next_tick`
+    /// bookkeeping stays at the unjittered due time on both paths.
+    pub fn jitter_tick(&self, board: usize, t: u64) -> u64 {
+        let key = t ^ (board as u64).wrapping_mul(0x94D0_49BB_1331_11EB);
+        match self.rng(DOMAIN_TICK, key) {
+            None => t,
+            Some(mut rng) => t.saturating_add(rng.below(TICK_JITTER_MAX_NS + 1)),
+        }
+    }
+}
+
+/// Seeded Fisher–Yates.
+fn shuffle<T>(rng: &mut Rng, xs: &mut [T]) {
+    for i in (1..xs.len()).rev() {
+        let j = rng.below(i as u64 + 1) as usize;
+        xs.swap(i, j);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generators_are_deterministic_and_seed_sensitive() {
+        for (a, b, c) in [
+            (
+                Scenario::diurnal(7, 4, 64, 1_000_000),
+                Scenario::diurnal(7, 4, 64, 1_000_000),
+                Scenario::diurnal(8, 4, 64, 1_000_000),
+            ),
+            (
+                Scenario::bursts(7, 4, 4, 8, 1_000_000),
+                Scenario::bursts(7, 4, 4, 8, 1_000_000),
+                Scenario::bursts(8, 4, 4, 8, 1_000_000),
+            ),
+            (
+                Scenario::flash_crowd(7, 4, 16, 32, 1_000_000),
+                Scenario::flash_crowd(7, 4, 16, 32, 1_000_000),
+                Scenario::flash_crowd(8, 4, 16, 32, 1_000_000),
+            ),
+            (
+                Scenario::heavy_tailed(7, 4, 64, 1_000_000),
+                Scenario::heavy_tailed(7, 4, 64, 1_000_000),
+                Scenario::heavy_tailed(8, 4, 64, 1_000_000),
+            ),
+        ] {
+            assert_eq!(a, b, "same seed must generate identically");
+            assert_ne!(a, c, "different seeds must differ");
+            assert!(!a.is_empty());
+            // Events sorted by arrival, all tenants in range, all
+            // records well-formed.
+            assert!(a.events().windows(2).all(|w| w[0].t_ns <= w[1].t_ns));
+            assert!(a.events().iter().all(|e| e.tenant < 4 && e.tiles > 0 && e.stream > 0));
+        }
+    }
+
+    #[test]
+    fn spec_roundtrip_is_ns_exact() {
+        for sc in [
+            Scenario::diurnal(3, 3, 32, 7_654_321),
+            Scenario::heavy_tailed(5, 2, 24, 1_234_567),
+            Scenario::new(9).with_inflight(4).with_event(ScenarioEvent {
+                t_ns: 1_500_001, // off any ms boundary
+                tenant: 2,
+                qos: 3,
+                accel: "sobel".into(),
+                variant: Some("sobel_v1".into()),
+                tiles: 4,
+                stream: 3,
+            }),
+        ] {
+            let spec = sc.to_spec();
+            let back = Scenario::parse(&spec).unwrap();
+            assert_eq!(back, sc, "spec {spec:?} must round-trip exactly");
+            assert_eq!(back.to_spec(), spec);
+        }
+    }
+
+    #[test]
+    fn parse_accepts_generators_and_rejects_garbage() {
+        let g = Scenario::parse("gen=diurnal,seed=7,tenants=3,jobs=16,horizon=5").unwrap();
+        assert_eq!(g, Scenario::diurnal(7, 3, 16, 5_000_000));
+        // A gen= spec's rendered trace re-parses to the same scenario.
+        assert_eq!(Scenario::parse(&g.to_spec()).unwrap(), g);
+        let f = Scenario::parse("gen=flash,seed=1,tenants=2,base=4,crowd=8,horizon=2000000ns");
+        assert_eq!(f.unwrap(), Scenario::flash_crowd(1, 2, 4, 8, 2_000_000));
+        assert!(Scenario::parse("").unwrap().is_empty());
+        assert!(Scenario::parse("v=2").is_err());
+        assert!(Scenario::parse("warp=1").is_err());
+        assert!(Scenario::parse("gen=nope").is_err());
+        assert!(Scenario::parse("at=nope").is_err());
+        assert!(Scenario::parse("at=1@t0w1:sobelx0*1").is_err(), "zero tiles");
+        assert!(Scenario::parse("at=99999999999999999@t0w1:sobelx1*1").is_err(), "ms overflow");
+        assert!(Scenario::parse("gen=diurnal,at=1@t0w1:sobelx1*1").is_err(), "gen+at");
+    }
+
+    #[test]
+    fn lowering_conserves_records_and_qos() {
+        let sc = Scenario::diurnal(11, 5, 40, 10_000_000);
+        let w = sc.to_workload();
+        assert_eq!(w.jobs.len(), sc.events().len());
+        assert_eq!(w.total_requests(), sc.total_requests());
+        for (j, e) in w.jobs.iter().zip(sc.events()) {
+            assert_eq!(j.user, e.tenant);
+            assert_eq!(j.arrival, e.t_ns);
+            assert_eq!(j.requests, e.stream);
+            assert_eq!(j.tiles_per_request, e.tiles);
+            assert_eq!(j.accel, e.accel);
+        }
+        // One QoS entry per distinct tenant, weights from the records.
+        let tenants: std::collections::BTreeSet<usize> =
+            sc.events().iter().map(|e| e.tenant).collect();
+        assert_eq!(w.qos.len(), tenants.len());
+        // A uniform inflight quota reaches every class.
+        let capped = sc.clone().with_inflight(2).to_workload();
+        assert!(capped.qos.iter().all(|(_, q)| q.max_inflight == 2));
+    }
+
+    #[test]
+    fn heavy_tail_actually_has_a_tail() {
+        let sc = Scenario::heavy_tailed(13, 4, 256, 1_000_000);
+        let tiles: Vec<usize> = sc.events().iter().map(|e| e.tiles).collect();
+        let small = tiles.iter().filter(|&&t| t <= 4).count();
+        let big = tiles.iter().filter(|&&t| t >= 16).count();
+        assert!(small > tiles.len() / 2, "most jobs are small: {small}/{}", tiles.len());
+        assert!(big >= 1, "at least one elephant");
+    }
+
+    #[test]
+    fn identity_strategy_is_a_no_op() {
+        let id = OrderStrategy::default();
+        assert!(id.is_identity());
+        let mut xs = vec![1, 2, 3, 4, 5];
+        id.permute_events(123, &mut xs);
+        id.permute_ingest(123, &mut xs);
+        assert_eq!(xs, vec![1, 2, 3, 4, 5]);
+        assert_eq!(id.jitter_tick(0, 5_000_000), 5_000_000);
+    }
+
+    #[test]
+    fn seeded_strategy_is_deterministic_and_bounded() {
+        let s = OrderStrategy::Seeded(42);
+        let (mut a, mut b): (Vec<u32>, Vec<u32>) = ((0..16).collect(), (0..16).collect());
+        s.permute_events(777, &mut a);
+        s.permute_events(777, &mut b);
+        assert_eq!(a, b, "same (seed, time) must permute identically");
+        let mut c: Vec<u32> = (0..16).collect();
+        s.permute_events(778, &mut c);
+        assert_ne!(a, c, "different times must permute differently");
+        assert_ne!(a, (0..16).collect::<Vec<u32>>(), "16 elements virtually never fixed");
+        // Ingest and event hooks use independent streams.
+        let mut d: Vec<u32> = (0..16).collect();
+        s.permute_ingest(777, &mut d);
+        assert_ne!(a, d);
+        // Jitter is additive and bounded.
+        for b in 0..3usize {
+            for t in [1u64, 5_000_000, 123_456_789] {
+                let j = s.jitter_tick(b, t);
+                assert!(j >= t && j <= t + TICK_JITTER_MAX_NS, "{j} vs {t}");
+                assert_eq!(j, s.jitter_tick(b, t), "pure in (board, t)");
+            }
+        }
+        assert_ne!(
+            s.jitter_tick(0, 5_000_000),
+            s.jitter_tick(1, 5_000_000),
+            "boards jitter independently (w.h.p.)"
+        );
+    }
+
+    #[test]
+    fn order_strategy_spec_roundtrip() {
+        for s in [OrderStrategy::Identity, OrderStrategy::Seeded(7)] {
+            assert_eq!(OrderStrategy::parse(&s.to_spec()).unwrap(), s);
+        }
+        assert_eq!(OrderStrategy::parse("").unwrap(), OrderStrategy::Identity);
+        assert!(OrderStrategy::parse("seed=x").is_err());
+        assert!(OrderStrategy::parse("chaos").is_err());
+    }
+}

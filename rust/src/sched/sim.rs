@@ -10,6 +10,7 @@ use super::cluster::{
 };
 use super::core::{Decision, DecisionKind, Policy, SchedCore, SchedCounters, TenantSchedCounters};
 use super::faults::FaultPlan;
+use super::scenario::OrderStrategy;
 use super::workload::{JobSpec, Workload};
 use super::SimTime;
 use crate::accel::Catalog;
@@ -36,6 +37,11 @@ pub struct SimConfig {
     /// QoS behaviour — the DES then replays the daemon's batched
     /// ingest decision sequence verbatim (same pipeline code).
     pub admission: AdmissionConfig,
+    /// How the DES resolves its nondeterminism points (equal-timestamp
+    /// batches, ingest boundaries, tick cadence).  The default
+    /// [`OrderStrategy::Identity`] is byte-identical to the fixed FIFO
+    /// orderings; seeded strategies are the concurrency fuzzer.
+    pub order: OrderStrategy,
 }
 
 impl SimConfig {
@@ -46,6 +52,7 @@ impl SimConfig {
             executor: None,
             region_limit: None,
             admission: AdmissionConfig::default(),
+            order: OrderStrategy::default(),
         }
     }
 
@@ -56,6 +63,11 @@ impl SimConfig {
 
     pub fn with_admission(mut self, cfg: AdmissionConfig) -> SimConfig {
         self.admission = cfg;
+        self
+    }
+
+    pub fn with_order(mut self, order: OrderStrategy) -> SimConfig {
+        self.order = order;
         self
     }
 }
@@ -219,6 +231,10 @@ pub fn simulate(catalog: &Catalog, workload: &Workload, cfg: &SimConfig) -> SimR
             let Reverse((_, s, e)) = heap.pop().unwrap();
             batch.push((s, e));
         }
+        // Ordering-fuzz hook: a seeded strategy processes this
+        // equal-timestamp batch in a permuted (but deterministic,
+        // time-keyed) order; identity keeps heap order untouched.
+        cfg.order.permute_events(now, &mut batch);
         for (s, ev) in batch {
             match ev {
                 Event::Arrival(j) => {
@@ -274,8 +290,8 @@ pub fn simulate(catalog: &Catalog, workload: &Workload, cfg: &SimConfig) -> SimR
         // Batched ingest: one admission round feeds every eligible
         // queued request (weighted DRR under in-flight quotas) into
         // the scheduler before the dispatch round — the daemon
-        // dispatcher's exact rule.
-        for r in admit.ingest() {
+        // dispatcher's exact rule (plus the ingest-boundary fuzz hook).
+        for r in admit.ingest_ordered(&cfg.order, now) {
             core.submit_for(r.user, r.tenant, r.job, &r.accel, r.tiles, r.pin.as_deref())
                 .unwrap_or_else(|e| panic!("{e}"));
         }
@@ -381,7 +397,10 @@ pub fn simulate(catalog: &Catalog, workload: &Workload, cfg: &SimConfig) -> SimR
         // while a preemption-capable policy has a starved user and work
         // is running, so expired quanta are observed mid-span.
         if let Some(t) = core.preempt_tick_due(&mut next_tick, now) {
-            heap.push(Reverse((t, seq, Event::Tick)));
+            // The core's `next_tick` bookkeeping keeps the unjittered
+            // due time; only the heap event moves (bounded, additive),
+            // so a fuzzed tick fires late but never early.
+            heap.push(Reverse((cfg.order.jitter_tick(0, t), seq, Event::Tick)));
             seq += 1;
         }
     }
@@ -436,6 +455,8 @@ pub struct ClusterSimConfig {
     /// `false` switches failover to the drop-and-resubmit baseline
     /// (no checkpointed progress across migration).
     pub checkpoint_migration: bool,
+    /// Nondeterminism-resolution strategy (see [`SimConfig::order`]).
+    pub order: OrderStrategy,
 }
 
 impl ClusterSimConfig {
@@ -452,6 +473,7 @@ impl ClusterSimConfig {
             admission: AdmissionConfig::default(),
             faults: None,
             checkpoint_migration: true,
+            order: OrderStrategy::default(),
         }
     }
 
@@ -462,6 +484,11 @@ impl ClusterSimConfig {
 
     pub fn with_faults(mut self, plan: FaultPlan) -> ClusterSimConfig {
         self.faults = Some(plan);
+        self
+    }
+
+    pub fn with_order(mut self, order: OrderStrategy) -> ClusterSimConfig {
+        self.order = order;
         self
     }
 
@@ -638,6 +665,8 @@ pub fn simulate_cluster(
             let Reverse((_, s, e)) = heap.pop().unwrap();
             batch.push((s, e));
         }
+        // Ordering-fuzz hook (see the single-board loop above).
+        cfg.order.permute_events(now, &mut batch);
         for (s, ev) in batch {
             match ev {
                 ClusterEvent::Arrival(j) => {
@@ -737,7 +766,7 @@ pub fn simulate_cluster(
         // With every board down, ingest waits — queued work stays in
         // the admission pipeline until a revival event re-opens it.
         if cluster.healthy_count() > 0 {
-            for r in admit.ingest() {
+            for r in admit.ingest_ordered(&cfg.order, now) {
                 cluster
                     .submit_for(r.user, r.tenant, r.job, &r.accel, r.tiles, r.pin.as_deref())
                     .unwrap_or_else(|e| panic!("{e}"));
@@ -803,9 +832,10 @@ pub fn simulate_cluster(
                 }
             }
 
-            // Per-board preemption-check cadence (the core-owned rule).
+            // Per-board preemption-check cadence (the core-owned rule;
+            // jitter moves only the heap event, never `next_tick`).
             if let Some(t) = cluster.preempt_tick_due(b, &mut next_tick[b], now) {
-                heap.push(Reverse((t, seq, ClusterEvent::Tick)));
+                heap.push(Reverse((cfg.order.jitter_tick(b, t), seq, ClusterEvent::Tick)));
                 seq += 1;
             }
         }

@@ -231,6 +231,20 @@ impl Workload {
     }
 }
 
+/// Collect job streams straight into a workload — what the scenario
+/// generators lower through instead of a manual re-push loop.
+impl FromIterator<JobSpec> for Workload {
+    fn from_iter<I: IntoIterator<Item = JobSpec>>(iter: I) -> Workload {
+        Workload { jobs: iter.into_iter().collect(), qos: Vec::new() }
+    }
+}
+
+impl Extend<JobSpec> for Workload {
+    fn extend<I: IntoIterator<Item = JobSpec>>(&mut self, iter: I) {
+        self.jobs.extend(iter);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -302,5 +316,15 @@ mod tests {
         }
         assert_eq!(w.users(), 2);
         assert_eq!(w.total_requests(), 7);
+    }
+
+    #[test]
+    fn collect_and_extend() {
+        let mut w: Workload = JobSpec::frame(0, "sobel", 0, 12, 3).into_iter().collect();
+        assert_eq!(w.total_requests(), 3);
+        w.extend(JobSpec::frame(1, "dct", 50, 8, 2));
+        assert_eq!(w.users(), 2);
+        assert_eq!(w.total_requests(), 5);
+        assert!(w.qos.is_empty(), "collect carries jobs only");
     }
 }

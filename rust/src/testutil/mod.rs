@@ -55,6 +55,24 @@ pub fn prop_cases(default: u64) -> u64 {
         .unwrap_or(default)
 }
 
+/// Scenario-engine override for the measurement programs:
+/// `FOS_SCENARIO=<spec>` replaces a bench's built-in workload with the
+/// parsed trace (see `fos::sched::Scenario::parse`), so any recorded or
+/// generated scenario replays through the benches exactly as it does
+/// through `simulate`/`simulate_cluster` and the `--scenario` daemon.
+/// A malformed spec is reported and ignored rather than silently
+/// changing what the bench measured.
+pub fn scenario_override() -> Option<crate::sched::Scenario> {
+    let spec = std::env::var("FOS_SCENARIO").ok().filter(|s| !s.is_empty())?;
+    match crate::sched::Scenario::parse(&spec) {
+        Ok(sc) => Some(sc),
+        Err(e) => {
+            eprintln!("ignoring malformed FOS_SCENARIO ({e})");
+            None
+        }
+    }
+}
+
 /// Write a bench's machine-readable result as `BENCH_<bench>.json` —
 /// into `FOS_BENCH_JSON_DIR` when set (CI points it at the workspace
 /// root so the regression gate and artifact upload find the files), or

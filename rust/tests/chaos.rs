@@ -75,6 +75,7 @@ fn seeded_case(name: &str, seed: u64, plan: &FaultPlan, case: impl FnOnce()) {
     if let Err(e) = result {
         write_repro(name, seed, plan, "assertion failed (see test log)");
         eprintln!("chaos {name} failed at seed {seed}; fault plan: {}", plan.to_spec());
+        eprintln!("repro: FOS_CHAOS_SEEDS={} cargo test --test chaos {name}", seed + 1);
         std::panic::resume_unwind(e);
     }
 }

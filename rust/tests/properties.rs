@@ -11,8 +11,8 @@ use fos::fabric::{Device, DeviceKind, Floorplan};
 use fos::json::{parse, to_string, to_string_pretty, Value};
 use fos::sched::{
     simulate, simulate_cluster, AdmissionConfig, AdmissionPipeline, AdmitRequest, ClusterSimConfig,
-    DecisionKind, JobSpec, PlacementKind, Policy, QosClass, SchedCore, SimConfig, Workload,
-    PREEMPT_TICK_NS,
+    DecisionKind, JobSpec, OrderStrategy, PlacementKind, Policy, QosClass, Scenario, SchedCore,
+    SimConfig, Workload, PREEMPT_TICK_NS,
 };
 use fos::shell::{Shell, ShellBoard};
 use fos::testutil::{cases, prop_cases, Rng};
@@ -473,6 +473,49 @@ fn prop_fair_share_never_starves_a_tenant() {
         let completed: u64 = r.per_tenant.iter().map(|(_, c)| c.completed).sum();
         assert_eq!(admitted, w.total_requests() as u64);
         assert_eq!(completed, admitted);
+    });
+}
+
+#[test]
+fn prop_flash_crowd_busy_retries_conserve_per_tenant_counts() {
+    // Scenario-engine flash crowds slammed into a tiny admission
+    // queue_cap with a 1-deep in-flight quota: the spike forces
+    // `Busy{retry_after}` deferrals while the weighted-DRR cursor wraps
+    // across more tenants than one ingest batch serves — and every
+    // deferral must drain back in without losing or duplicating a
+    // single request, under seeded tie-break orderings on top.
+    // Nightly runs this long via `FOS_PROPTEST_CASES`.
+    let catalog = Catalog::load_default().unwrap();
+    cases(prop_cases(8), |rng| {
+        let seed = rng.next_u64();
+        let tenants = 3 + rng.below(3) as usize; // 3..=5: cursor wraps past batch_cap
+        let crowd = 24 + rng.below(17) as usize; // 24..=40 spike requests
+        let sc = Scenario::flash_crowd(seed, tenants, 8, crowd, 10_000_000).with_inflight(1);
+        let w = sc.to_workload();
+        let cfg = ClusterSimConfig::new(
+            vec![ShellBoard::Ultra96, ShellBoard::Zcu102],
+            Policy::FairShare,
+            PlacementKind::RoundRobin,
+        )
+        .with_admission(AdmissionConfig {
+            queue_cap: 3,
+            quantum_tiles: 2,
+            batch_cap: 4,
+            ..AdmissionConfig::default()
+        })
+        .with_order(OrderStrategy::Seeded(seed));
+        let r = simulate_cluster(&catalog, &w, &cfg);
+        // The premise: the crowd actually hit backpressure (a 1-deep
+        // quota cannot drain a spike faster than it arrives).
+        assert!(r.busy_retries > 0, "crowd of {crowd} never hit queue_cap 3");
+        // Conservation per tenant through the retry storm + DRR wraps.
+        let admitted: u64 = r.per_tenant.iter().map(|(_, tc)| tc.admitted).sum();
+        assert_eq!(admitted, w.total_requests() as u64, "admission must be exact");
+        for (t, tc) in &r.per_tenant {
+            assert_eq!(tc.completed + tc.rejected, tc.admitted, "tenant {t} leaked");
+            assert_eq!(tc.rejected, 0, "tenant {t}: Busy defers, it never loses");
+        }
+        assert!(r.job_completion.iter().all(|&t| t > 0), "a job never terminated");
     });
 }
 

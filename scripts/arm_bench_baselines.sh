@@ -37,3 +37,11 @@ echo "== golden decision fixture =="
 FOS_UPDATE_GOLDEN=1 cargo test --manifest-path rust/Cargo.toml \
     --test golden_decisions -q
 echo "fixture armed — commit rust/tests/fixtures/golden_decisions.txt"
+
+# The canonical diurnal scenario replay (the scenario engine's golden
+# gate) self-arms the same way; FOS_UPDATE_GOLDEN=1 regenerates it
+# after an intentional scheduling or generator change.
+echo "== golden scenario fixture =="
+FOS_UPDATE_GOLDEN=1 cargo test --manifest-path rust/Cargo.toml \
+    --test fuzz_orderings golden_scenario_fixture_matches -q
+echo "fixture armed — commit rust/tests/fixtures/golden_scenario.txt"
